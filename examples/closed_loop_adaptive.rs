@@ -1,0 +1,66 @@
+//! Closed-loop adaptation (§5.3): two independently deployed eBPF
+//! programs — a profiler and a tuner — cooperate through a shared typed
+//! map to adapt the channel count to observed latency.
+//!
+//!     cargo run --release --example closed_loop_adaptive
+
+use ncclbpf::cc::{CollType, Communicator, DataMode, Topology};
+use ncclbpf::host::{fold_comm_id, policydir, BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let host = Arc::new(NcclBpfHost::new());
+    // deploy the two halves separately, as independent objects
+    host.install_object(&policydir::build_named("record_latency").unwrap())
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    host.install_object(&policydir::build_named("adaptive_channels").unwrap())
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!(
+        "deployed: profiler='{:?}' tuner='{:?}' sharing maps {:?}",
+        host.active_name(ncclbpf::bpf::ProgType::Profiler),
+        host.active_name(ncclbpf::bpf::ProgType::Tuner),
+        host.maps.names()
+    );
+
+    let mut comm = Communicator::new(Topology::nvlink_b300(8));
+    comm.data_mode = DataMode::Sampled(16 << 10);
+    comm.prewarm_all();
+    comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+    comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+    let mut bufs: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 2048]).collect();
+    let size = 16 << 20;
+
+    println!("\nphase 1 — baseline: ramping up under healthy latency");
+    for i in 0..40 {
+        let r = comm.run(CollType::AllReduce, &mut bufs, size);
+        if i % 8 == 0 || i == 39 {
+            println!("  call {:>3}: {} channels, {:.0} us", i, r.cfg.nchannels, r.modeled_ns / 1e3);
+        }
+    }
+
+    println!("\nphase 2 — contention: inject a 10x latency spike into the telemetry");
+    let lm = host.map("latency_map").unwrap();
+    let key = fold_comm_id(comm.comm_id());
+    let mut v = lm.read_value(&key.to_le_bytes()).unwrap();
+    let healthy = u64::from_le_bytes(v[..8].try_into().unwrap());
+    v[..8].copy_from_slice(&(healthy * 10).to_le_bytes());
+    lm.update(&key.to_le_bytes(), &v).unwrap();
+    let r = comm.run(CollType::AllReduce, &mut bufs, size);
+    println!("  next decision: {} channels (backed off)", r.cfg.nchannels);
+
+    println!("\nphase 3 — recovery: profiler telemetry washes the spike out");
+    for i in 0..40 {
+        let r = comm.run(CollType::AllReduce, &mut bufs, size);
+        if i % 8 == 0 || i == 39 {
+            println!("  call {:>3}: {} channels", i, r.cfg.nchannels);
+        }
+    }
+
+    println!(
+        "\nfinal telemetry for comm {:#x}: avg latency {} ns",
+        key,
+        lm.read_u64(key).unwrap_or(0)
+    );
+    println!("closed loop OK: profiler -> shared map -> tuner, no engine changes.");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! END-TO-END driver (DESIGN.md §5): data-parallel training of the JAX
+//! transformer where
+//!   - per-rank forward/backward is the AOT `train_step` artifact
+//!     (Layer 2 + the Layer-1 Pallas grad_scale kernel) run via PJRT,
+//!   - gradient AllReduce flows through the collective engine with the
+//!     verified eBPF size-aware policy making every tuner decision,
+//!   - the fused-Adam Pallas artifact applies the update.
+//!
+//! Prereq: `make artifacts`. Run:
+//!     cargo run --release --example train_ddp -- [steps] [ranks]
+//!
+//! The loss curve is printed for EXPERIMENTS.md.
+
+use ncclbpf::cc::{Communicator, Topology};
+use ncclbpf::host::{policydir, BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
+use ncclbpf::runtime::{default_artifacts_dir, Runtime};
+use ncclbpf::train::{DdpTrainer, TrainConfig};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let ranks: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let rt = Arc::new(Runtime::load(&default_artifacts_dir())?);
+    println!(
+        "model: {} params ({:.2} M), vocab {}, d_model {}, {} layers, seq {}, batch {}/rank",
+        rt.manifest.n_params,
+        rt.manifest.n_params as f64 / 1e6,
+        rt.manifest.vocab,
+        rt.manifest.d_model,
+        rt.manifest.n_layers,
+        rt.manifest.seq_len,
+        rt.manifest.batch
+    );
+
+    // NCCLbpf host with the paper's case-study policy + profiler telemetry
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("nvlink_ring_mid_v2").unwrap())
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    host.install_object(&policydir::build_named("record_latency").unwrap())
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
+    comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+    comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+
+    let grad_bytes = rt.manifest.n_params_padded * 4;
+    println!(
+        "DDP: {} ranks, {} steps; per-step AllReduce of {:.2} MiB gradients \
+         through the eBPF-tuned engine",
+        ranks,
+        steps,
+        grad_bytes as f64 / (1 << 20) as f64
+    );
+
+    let cfg = TrainConfig { ranks, steps, log_every: 10, ..Default::default() };
+    let mut trainer = DdpTrainer::new(rt.clone(), comm, cfg)?;
+    let t0 = std::time::Instant::now();
+    let report = trainer.train()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!();
+    println!("== loss curve (step, loss, allreduce cfg) ==");
+    for s in report.stats.iter().step_by((steps / 25).max(1)) {
+        println!(
+            "  {:4}  {:.4}  {}/{}/{}ch {:.0}us",
+            s.step, s.loss, s.algo, s.proto, s.nchannels, s.allreduce_modeled_us
+        );
+    }
+    let last = report.stats.last().unwrap();
+    println!("  {:4}  {:.4}  (final)", last.step, last.loss);
+    println!();
+    println!(
+        "loss {:.4} -> {:.4} over {} steps | {:.1} s wall ({:.0} ms/step)",
+        report.first_loss(),
+        report.last_loss(),
+        steps,
+        wall,
+        wall * 1e3 / steps as f64
+    );
+    println!(
+        "tuner decisions: {} | profiler events: {} | latency_map telemetry: {:?} ns",
+        host.decisions.load(std::sync::atomic::Ordering::Relaxed),
+        host.prof_events.load(std::sync::atomic::Ordering::Relaxed),
+        host.map("latency_map")
+            .and_then(|m| m.read_u64(ncclbpf::host::fold_comm_id(trainer.comm.comm_id()))),
+    );
+    anyhow::ensure!(
+        report.last_loss() < report.first_loss(),
+        "training must reduce the loss"
+    );
+    println!("E2E OK: L1 (Pallas kernels) + L2 (JAX model) + L3 (verified policies) compose.");
+    Ok(())
+}

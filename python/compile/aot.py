@@ -1,0 +1,155 @@
+"""AOT export: lower every Layer-1/2 computation to HLO *text* and write
+the manifest the Rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (all shapes fixed at export time, recorded in manifest.json):
+  train_step.hlo.txt   (flat_params, x, y) -> (loss, flat_grads)
+  adam_step.hlo.txt    (p, g, m, v, [step, gscale]) -> (p', m', v')
+  reduce_chunk.hlo.txt (a, b) -> a + b          (Pallas, BLOCK-tiled)
+  ll_pack.hlo.txt      (data, flag) -> wire      (Pallas)
+  ll_unpack.hlo.txt    (wire, flag) -> (data, bad_lines)
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import fused_adam, ll_pack, reduce as kreduce
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, example_args, path: str) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = model.Config(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        seq_len=args.seq_len,
+        batch=args.batch,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    np_total = model.n_params(cfg)
+    np_padded = model.padded_n_params(cfg)
+    print(f"config: {cfg}")
+    print(f"params: {np_total} ({np_total / 1e6:.2f} M), padded to {np_padded}")
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    flat = jax.ShapeDtypeStruct((np_padded,), f32)
+    xb = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), i32)
+
+    # Layer-2 + Layer-1: training step (with embedded Pallas grad_scale)
+    export(
+        lambda p, x, y: model.train_step(cfg, p, x, y),
+        (flat, xb, xb),
+        os.path.join(args.out_dir, "train_step.hlo.txt"),
+    )
+    print("exported train_step.hlo.txt")
+
+    # Layer-1: fused Adam
+    sc = jax.ShapeDtypeStruct((2,), f32)
+    export(
+        fused_adam.adam_step,
+        (flat, flat, flat, flat, sc),
+        os.path.join(args.out_dir, "adam_step.hlo.txt"),
+    )
+    print("exported adam_step.hlo.txt")
+
+    # Layer-1: ring chunk reduction at a fixed block-multiple size
+    chunk = jax.ShapeDtypeStruct((kreduce.BLOCK,), f32)
+    export(
+        kreduce.reduce_chunk,
+        (chunk, chunk),
+        os.path.join(args.out_dir, "reduce_chunk.hlo.txt"),
+    )
+    print("exported reduce_chunk.hlo.txt")
+
+    # Layer-1: LL protocol pack / unpack
+    lldata = jax.ShapeDtypeStruct((ll_pack.LL_BLOCK,), f32)
+    llflag = jax.ShapeDtypeStruct((), u32)
+    export(
+        ll_pack.ll_pack,
+        (lldata, llflag),
+        os.path.join(args.out_dir, "ll_pack.hlo.txt"),
+    )
+    llwire = jax.ShapeDtypeStruct((2 * ll_pack.LL_BLOCK,), u32)
+    export(
+        ll_pack.ll_unpack,
+        (llwire, llflag),
+        os.path.join(args.out_dir, "ll_unpack.hlo.txt"),
+    )
+    print("exported ll_pack.hlo.txt, ll_unpack.hlo.txt")
+
+    # manifest for the Rust runtime
+    spec = []
+    off = 0
+    for name, shape in model.param_spec(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        spec.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+        },
+        "n_params": np_total,
+        "n_params_padded": np_padded,
+        "reduce_block": kreduce.BLOCK,
+        "ll_block": ll_pack.LL_BLOCK,
+        "params": spec,
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "adam_step": "adam_step.hlo.txt",
+            "reduce_chunk": "reduce_chunk.hlo.txt",
+            "ll_pack": "ll_pack.hlo.txt",
+            "ll_unpack": "ll_unpack.hlo.txt",
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({np_total} params)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: fused Adam optimizer update.
+
+One VMEM pass produces (p', m', v') from (p, g, m, v) — the GPU
+equivalent is apex-style fused Adam (one CUDA kernel instead of ~10
+elementwise launches); on TPU the fusion win is one HBM round trip per
+tensor instead of four. Bias correction uses a scalar `step` input so
+the artifact is step-agnostic; `gscale` folds the DDP 1/world_size
+averaging into the same pass.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384
+
+LR = 1e-3
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, sc_ref, po_ref, mo_ref, vo_ref):
+    # sc_ref = [step, grad_scale] (f32[2])
+    step = sc_ref[0]
+    gscale = sc_ref[1]
+    g = g_ref[...] * gscale
+    m = BETA1 * m_ref[...] + (1.0 - BETA1) * g
+    v = BETA2 * v_ref[...] + (1.0 - BETA2) * g * g
+    c1 = 1.0 - jnp.exp(step * jnp.log(BETA1))
+    c2 = 1.0 - jnp.exp(step * jnp.log(BETA2))
+    mhat = m / c1
+    vhat = v / c2
+    po_ref[...] = p_ref[...] - LR * mhat / (jnp.sqrt(vhat) + EPS)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def adam_step(p, g, m, v, step_and_scale):
+    """Fused Adam on flat (BLOCK-padded) vectors.
+
+    step_and_scale: f32[2] = [step (1-based), grad_scale].
+    Returns (p', m', v').
+    """
+    n = p.shape[0]
+    assert n % BLOCK == 0, f"adam_step requires a multiple of {BLOCK}, got {n}"
+    grid = (n // BLOCK,)
+    blk = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    scalar = pl.BlockSpec((2,), lambda i: (0,))
+    return pl.pallas_call(
+        _adam_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+        ),
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, scalar],
+        out_specs=(blk, blk, blk),
+        interpret=True,
+    )(p, g, m, v, step_and_scale)

@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernels: chunk reduction and gradient scaling.
+
+Hardware adaptation (DESIGN.md §6): the CUDA version of a ring-allreduce
+combine is a warp-per-segment grid-stride loop; on TPU the same insight
+— stream HBM through fast memory in interconnect-friendly tiles — is
+expressed with a BlockSpec over VMEM-sized blocks feeding the VPU's
+8x128 lanes. `interpret=True` lowers to plain HLO so the artifact runs
+on any PJRT backend (the real-TPU path would emit a Mosaic custom call).
+
+VMEM budgeting: BLOCK = 16384 f32 = 64 KiB per operand; with in/out
+double buffering this is ~256 KiB of the ~16 MiB VMEM per core,
+leaving headroom for the compiler (see EXPERIMENTS.md §Perf L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# one VMEM tile: 16K f32 = 64 KiB (128 sublanes x 128 lanes)
+BLOCK = 16384
+
+
+def _reduce_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def reduce_chunk(a, b):
+    """Elementwise sum via a VMEM-tiled Pallas kernel.
+
+    Requires len(a) % BLOCK == 0 (the AOT artifact is exported at a
+    fixed padded size; callers pad the tail — see rust PallasReducer).
+    """
+    n = a.shape[0]
+    assert n % BLOCK == 0, f"reduce_chunk requires a multiple of {BLOCK}, got {n}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _reduce_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(a, b)
+
+
+def _scale_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0]
+
+
+def grad_scale(flat, scale):
+    """Scale a flat (padded) gradient vector by a scalar.
+
+    `scale` is a shape-(1,) f32 array so the scalar stays a runtime
+    input of the AOT artifact (world size is chosen at run time).
+    """
+    n = flat.shape[0]
+    assert n % BLOCK == 0, f"grad_scale requires a multiple of {BLOCK}, got {n}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _scale_kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            # broadcast the scalar to every block
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(flat, scale)
+
+
+def pad_to_block(n: int) -> int:
+    """Smallest BLOCK multiple >= n (the artifact export size)."""
+    return (n + BLOCK - 1) // BLOCK * BLOCK

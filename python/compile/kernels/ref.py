@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness signal).
+
+Each function here is the mathematical specification; the Pallas
+implementations in this package must match to float tolerance, checked
+by pytest + hypothesis in python/tests/test_kernels.py.
+"""
+
+import jax.numpy as jnp
+
+
+def reduce_chunk(a, b):
+    """Elementwise sum of two chunks (the ring reduce-scatter combine)."""
+    return a + b
+
+
+def grad_scale(flat, scale):
+    """Scale a flat gradient vector (pre-AllReduce DDP averaging)."""
+    return flat * scale
+
+
+def ll_pack(data_f32, flag_u32):
+    """NCCL LL-protocol pack: interleave each 4-byte data word with a
+    4-byte flag word -> u32[2N] wire buffer (see rust/src/cc/proto.rs).
+    """
+    words = jnp.asarray(data_f32).view(jnp.uint32)
+    n = words.shape[0]
+    out = jnp.empty((2 * n,), dtype=jnp.uint32)
+    out = out.at[0::2].set(words)
+    out = out.at[1::2].set(jnp.full((n,), flag_u32, dtype=jnp.uint32))
+    return out
+
+
+def ll_unpack(wire_u32, flag_u32):
+    """LL unpack: extract data words and validate flags.
+
+    Returns (data_f32, ok) where ok == 1 iff every flag matched.
+    """
+    data = wire_u32[0::2].view(jnp.float32)
+    flags = wire_u32[1::2]
+    ok = jnp.all(flags == flag_u32).astype(jnp.uint32)
+    return data, ok
+
+
+def adam_step(p, g, m, v, step, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+              grad_scale_=1.0):
+    """Fused Adam update on flat vectors. `step` is 1-based (float)."""
+    g = g * grad_scale_
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m_new / (1.0 - beta1 ** step)
+    vhat = v_new / (1.0 - beta2 ** step)
+    p_new = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p_new, m_new, v_new
+
+
+def rmsnorm(x, w, eps=1e-6):
+    """RMSNorm over the last axis (used by the model reference tests)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * w / jnp.sqrt(ms + eps)

@@ -1,0 +1,179 @@
+"""Layer-2: a decoder-only transformer LM in JAX, exposed through a
+flat-parameter interface so the Rust coordinator treats parameters,
+gradients and optimizer state as single f32 buffers — the exact view a
+DDP engine wants for AllReduce.
+
+`train_step(flat_params, x, y) -> (loss, flat_grads)` is what
+aot.py lowers to HLO text; the flat gradients pass through the Pallas
+`grad_scale` kernel (Layer-1) so the kernel lowers into the same
+artifact. The Rust side AllReduces `flat_grads` across ranks via the
+collective engine (steered by the eBPF tuner policy) and applies the
+fused-Adam artifact.
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import reduce as kreduce
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 64
+    batch: int = 4  # per-rank microbatch
+
+    @property
+    def d_head(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# parameter spec: names, shapes, and offsets into the flat vector
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list. The flat layout is the concatenation
+    in this order (offsets in manifest.json)."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, 4 * cfg.d_model)),
+            (p + "w2", (4 * cfg.d_model, cfg.d_model)),
+        ]
+    spec.append(("ln_f", (cfg.d_model,)))
+    return spec
+
+
+def n_params(cfg: Config) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def padded_n_params(cfg: Config) -> int:
+    """Flat size padded to the Pallas BLOCK so every artifact shares one
+    buffer length."""
+    return kreduce.pad_to_block(n_params(cfg))
+
+
+def unflatten(cfg: Config, flat):
+    """Slice the flat vector into the parameter pytree (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+        off += size
+    return params
+
+
+def init_flat(cfg: Config, seed: int = 0):
+    """Initialize parameters directly in flat form (scaled normal)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        size = 1
+        for d in shape:
+            size *= d
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            chunks.append(jnp.ones((size,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = (2.0 / (fan_in + shape[-1])) ** 0.5
+            chunks.append(jax.random.normal(sub, (size,), jnp.float32) * std)
+    flat = jnp.concatenate(chunks)
+    pad = padded_n_params(cfg) - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * w / jnp.sqrt(ms + eps)
+
+
+def attention(cfg: Config, p, prefix, x):
+    B, T, D = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+
+    def proj(w):
+        return (x @ w).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+
+    q = proj(p[prefix + "wq"])
+    k = proj(p[prefix + "wk"])
+    v = proj(p[prefix + "wv"])
+    scores = q @ k.transpose(0, 1, 3, 2) / (Dh ** 0.5)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ p[prefix + "wo"]
+
+
+def mlp(p, prefix, x):
+    h = jax.nn.gelu(x @ p[prefix + "w1"])
+    return h @ p[prefix + "w2"]
+
+
+def forward(cfg: Config, p, tokens):
+    """tokens: i32[B, T] -> logits f32[B, T, V] (embedding-tied head)."""
+    x = p["embed"][tokens]
+    # sinusoidal positions (no learned table: keeps the spec lean)
+    T, D = cfg.seq_len, cfg.d_model
+    pos = jnp.arange(T)[:, None]
+    dim = jnp.arange(D // 2)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * dim / D)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    x = x + pe[None, :, :]
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        x = x + attention(cfg, p, pref, rmsnorm(x, p[pref + "ln1"]))
+        x = x + mlp(p, pref, rmsnorm(x, p[pref + "ln2"]))
+    x = rmsnorm(x, p["ln_f"])
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg: Config, flat, x, y):
+    p = unflatten(cfg, flat)
+    logits = forward(cfg, p, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def train_step(cfg: Config, flat, x, y):
+    """One fwd/bwd step. Returns (loss, flat_grads) where the gradients
+    pass through the Layer-1 Pallas grad_scale kernel (identity scale:
+    DDP averaging happens in the fused-Adam artifact via grad_scale)."""
+    loss, g = jax.value_and_grad(lambda f: loss_fn(cfg, f, x, y))(flat)
+    g = kreduce.grad_scale(g, jnp.ones((1,), jnp.float32))
+    return loss, g
+
+
+def sample_batch(cfg: Config, seed: int):
+    """Synthetic-corpus batch for shape exercises and tests."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.randint(key, (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    y = jnp.roll(x, -1, axis=1)
+    return x, y

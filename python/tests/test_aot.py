@@ -1,0 +1,72 @@
+"""AOT export smoke tests: HLO text well-formedness and manifest
+consistency (the contract the Rust runtime depends on)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(os.path.dirname(HERE), "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Use existing artifacts if present; export a tiny set otherwise."""
+    manifest = os.path.join(ART, "manifest.json")
+    if not os.path.exists(manifest):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+            cwd=HERE,
+            check=True,
+        )
+    with open(manifest) as f:
+        return json.load(f)
+
+
+def test_manifest_schema(artifacts):
+    for key in ["config", "n_params", "n_params_padded", "params", "artifacts"]:
+        assert key in artifacts, key
+    assert artifacts["n_params_padded"] % artifacts["reduce_block"] == 0
+    assert artifacts["n_params_padded"] >= artifacts["n_params"]
+
+
+def test_param_offsets_contiguous(artifacts):
+    off = 0
+    for p in artifacts["params"]:
+        assert p["offset"] == off, p["name"]
+        size = 1
+        for d in p["shape"]:
+            size *= d
+        assert p["size"] == size
+        off += size
+    assert off == artifacts["n_params"]
+
+
+def test_hlo_files_exist_and_are_hlo_text(artifacts):
+    for name, fname in artifacts["artifacts"].items():
+        path = os.path.join(ART, fname)
+        assert os.path.exists(path), f"{name}: {fname} missing"
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{fname} does not look like HLO text"
+        assert "ENTRY" in open(path).read(), f"{fname} lacks an entry computation"
+
+
+def test_train_step_signature_matches_manifest(artifacts):
+    """The train_step entry must take (params, x, y) with the padded
+    flat size and batch shapes from the manifest."""
+    text = open(os.path.join(ART, "train_step.hlo.txt")).read()
+    n = artifacts["n_params_padded"]
+    cfg = artifacts["config"]
+    assert f"f32[{n}]" in text
+    assert f"s32[{cfg['batch']},{cfg['seq_len']}]" in text
+
+
+def test_adam_step_shapes(artifacts):
+    text = open(os.path.join(ART, "adam_step.hlo.txt")).read()
+    n = artifacts["n_params_padded"]
+    assert text.count(f"f32[{n}]") >= 7  # 4 inputs + 3 outputs
+    assert "f32[2]" in text  # [step, grad_scale]

@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/values; every kernel must match ref.py to
+float tolerance under interpret=True.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_adam, ll_pack, reduce as kreduce, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# reduce_chunk / grad_scale
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_reduce_chunk_matches_ref(blocks, seed):
+    n = blocks * kreduce.BLOCK
+    a, b = rand(n, seed), rand(n, seed + 1)
+    got = kreduce.reduce_chunk(a, b)
+    want = ref.reduce_chunk(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 3),
+    scale=st.floats(-8.0, 8.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_scale_matches_ref(blocks, scale, seed):
+    n = blocks * kreduce.BLOCK
+    x = rand(n, seed)
+    got = kreduce.grad_scale(x, jnp.asarray([scale], jnp.float32))
+    want = ref.grad_scale(x, jnp.float32(scale))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_reduce_chunk_rejects_ragged():
+    with pytest.raises(AssertionError):
+        kreduce.reduce_chunk(jnp.zeros(100), jnp.zeros(100))
+
+
+def test_pad_to_block():
+    B = kreduce.BLOCK
+    assert kreduce.pad_to_block(1) == B
+    assert kreduce.pad_to_block(B) == B
+    assert kreduce.pad_to_block(B + 1) == 2 * B
+
+
+# ---------------------------------------------------------------------------
+# LL pack / unpack
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), flag=st.integers(1, 2**32 - 1))
+def test_ll_pack_matches_ref(seed, flag):
+    n = ll_pack.LL_BLOCK
+    data = rand(n, seed)
+    flag = jnp.uint32(flag)
+    got = ll_pack.ll_pack(data, flag)
+    want = ref.ll_pack(data, flag)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), flag=st.integers(1, 2**32 - 1))
+def test_ll_roundtrip(seed, flag):
+    n = ll_pack.LL_BLOCK
+    data = rand(n, seed)
+    flag = jnp.uint32(flag)
+    wire = ll_pack.ll_pack(data, flag)
+    out, bad = ll_pack.ll_unpack(wire, flag)
+    assert int(bad[0]) == 0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+def test_ll_unpack_detects_corruption():
+    n = ll_pack.LL_BLOCK
+    data = rand(n, 7)
+    flag = jnp.uint32(0xABCD)
+    wire = np.asarray(ll_pack.ll_pack(data, flag)).copy()
+    wire[1] ^= 0xFF  # corrupt first flag word
+    wire[2 * 100 + 1] ^= 0x1  # and another
+    out, bad = ll_pack.ll_unpack(jnp.asarray(wire), flag)
+    assert int(bad[0]) == 2
+
+
+def test_ll_wire_layout_is_interleaved():
+    # wire[2i] = data word, wire[2i+1] = flag — must match the Rust
+    # engine's proto.rs layout (cross-checked in rust integration tests)
+    data = jnp.asarray([1.5, -2.25], jnp.float32)
+    padded = jnp.concatenate([data, jnp.zeros(ll_pack.LL_BLOCK - 2, jnp.float32)])
+    wire = np.asarray(ll_pack.ll_pack(padded, jnp.uint32(9)))
+    assert wire[0] == np.float32(1.5).view(np.uint32)
+    assert wire[1] == 9
+    assert wire[2] == np.float32(-2.25).view(np.uint32)
+    assert wire[3] == 9
+
+
+# ---------------------------------------------------------------------------
+# fused Adam
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    step=st.integers(1, 1000),
+    gscale=st.floats(0.1, 1.0),
+)
+def test_adam_matches_ref(seed, step, gscale):
+    n = fused_adam.BLOCK
+    p, g = rand(n, seed), rand(n, seed + 1)
+    m, v = rand(n, seed + 2, -0.5, 0.5), rand(n, seed + 3, 0.0, 0.5)
+    sc = jnp.asarray([float(step), gscale], jnp.float32)
+    po, mo, vo = fused_adam.adam_step(p, g, m, v, sc)
+    pr, mr, vr = ref.adam_step(
+        p, g, m, v, float(step),
+        lr=fused_adam.LR, beta1=fused_adam.BETA1, beta2=fused_adam.BETA2,
+        eps=fused_adam.EPS, grad_scale_=gscale,
+    )
+    np.testing.assert_allclose(po, pr, rtol=2e-4, atol=2e-6)
+    np.testing.assert_allclose(mo, mr, rtol=2e-5, atol=1e-7)
+    np.testing.assert_allclose(vo, vr, rtol=2e-5, atol=1e-7)
+
+
+def test_adam_moves_params_toward_gradient_descent():
+    n = fused_adam.BLOCK
+    p = jnp.zeros(n)
+    g = jnp.ones(n)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    sc = jnp.asarray([1.0, 1.0], jnp.float32)
+    po, _, _ = fused_adam.adam_step(p, g, m, v, sc)
+    assert np.all(np.asarray(po) < 0), "positive gradient must decrease params"

@@ -1,0 +1,94 @@
+//! Figure 2 — 8-GPU AllReduce under policies: NCCL default vs the
+//! nvlink_ring_mid_v2 eBPF policy vs bad_channels, across sizes; plus
+//! the §5.1 small-message noop-overhead series.
+//!
+//! Paper: policy gains +5.5–26.5% in 4–192 MiB, matches default
+//! elsewhere; bad_channels degrades 87–95%; noop adds ~1.3 µs fixed at
+//! 8 B–256 KiB (~4% of the ~32 µs baseline) and <0.1% at ≥4 MiB.
+
+use ncclbpf::cc::{CollType, Communicator, DataMode, Topology};
+use ncclbpf::host::{policydir, BpfTunerPlugin, NcclBpfHost};
+use ncclbpf::util::fmt_size;
+use std::sync::Arc;
+
+fn engine() -> Communicator {
+    let mut c = Communicator::new(Topology::nvlink_b300(8));
+    c.jitter = false;
+    c.data_mode = DataMode::Sampled(32 << 10);
+    c.prewarm_all();
+    c
+}
+
+fn with_policy(name: &str) -> (Communicator, Arc<NcclBpfHost>) {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named(name).unwrap()).unwrap();
+    let mut c = engine();
+    c.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+    (c, host)
+}
+
+fn main() {
+    let mut default = engine();
+    let (mut policy, _h1) = with_policy("nvlink_ring_mid_v2");
+    let (mut noop, _h2) = with_policy("noop");
+    let (mut bad, _h3) = with_policy("bad_channels");
+    let mut bufs: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 8 << 10]).collect();
+
+    // warm the decision paths (first-call cache effects would otherwise
+    // pollute the smallest size's row)
+    for c in [&mut default, &mut policy, &mut noop, &mut bad] {
+        for _ in 0..20 {
+            c.run(CollType::AllReduce, &mut bufs, 1 << 20);
+        }
+    }
+
+    println!("Figure 2 — 8-GPU AllReduce busbw (GB/s) under policies");
+    println!(
+        "{:>8}  {:>9} {:>16} {:>9} {:>13}  {:>7} {:>9}",
+        "Size", "default", "eBPF ring_mid_v2", "noop", "bad_channels", "Δpolicy", "cfg"
+    );
+    for mib in [1usize, 2, 4, 8, 16, 32, 48, 64, 96, 128, 160, 192, 256, 512, 1024] {
+        let size = mib << 20;
+        let d = default.run(CollType::AllReduce, &mut bufs, size).busbw_gbps;
+        let p = policy.run(CollType::AllReduce, &mut bufs, size);
+        let n = noop.run(CollType::AllReduce, &mut bufs, size).busbw_gbps;
+        let b = bad.run(CollType::AllReduce, &mut bufs, size).busbw_gbps;
+        println!(
+            "{:>8}  {:>9.1} {:>16.1} {:>9.1} {:>13.1}  {:>+6.1}% {:>4}/{}/{}ch",
+            fmt_size(size),
+            d,
+            p.busbw_gbps,
+            n,
+            b,
+            (p.busbw_gbps / d - 1.0) * 100.0,
+            p.cfg.algo.name(),
+            p.cfg.proto.name(),
+            p.cfg.nchannels,
+        );
+    }
+
+    println!();
+    println!("§5.1 small-message series — noop plugin fixed overhead");
+    println!(
+        "{:>8}  {:>14} {:>14} {:>11} {:>9}",
+        "Size", "baseline(us)", "noop(us)", "added(us)", "added(%)"
+    );
+    for size in [8usize, 256, 4 << 10, 64 << 10, 256 << 10, 4 << 20, 64 << 20] {
+        let d = default.run(CollType::AllReduce, &mut bufs, size).modeled_ns / 1e3;
+        let n = noop.run(CollType::AllReduce, &mut bufs, size).modeled_ns / 1e3;
+        println!(
+            "{:>8}  {:>14.2} {:>14.2} {:>11.3} {:>8.2}%",
+            fmt_size(size),
+            d,
+            n,
+            n - d,
+            (n / d - 1.0) * 100.0
+        );
+    }
+    println!();
+    println!(
+        "series shape: policy ≈ Ring values in 4–192 MiB, ≈ default outside;\n\
+         bad_channels collapses throughput; noop overhead is host-measured\n\
+         plugin time (µs-scale at small sizes, negligible ≥4 MiB)."
+    );
+}

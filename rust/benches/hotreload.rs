@@ -1,0 +1,104 @@
+//! §5.2 hot-reload: swap latency, full reload cost, and zero lost
+//! calls across 400,000 continuous invocations with concurrent reloads.
+//!
+//! Paper: swap 1.07 µs; full reload ~9.4 ms (verify + JIT dominated);
+//! 0 lost calls / 400 k invocations; failed verification leaves the old
+//! policy running.
+
+use ncclbpf::bpf::ProgType;
+use ncclbpf::cc::plugin::{CollInfoArgs, CostTable};
+use ncclbpf::cc::{Algo, CollType, MAX_CHANNELS};
+use ncclbpf::host::{policydir, NcclBpfHost};
+use ncclbpf::util::Stats;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+const INVOCATIONS: u64 = 400_000;
+
+fn main() {
+    let host = Arc::new(NcclBpfHost::new());
+    let a = policydir::build_named("static_ring").unwrap();
+    let b = policydir::build_named("nvlink_ring_mid_v2").unwrap();
+    host.install_object(&a).unwrap();
+
+    // 1) reload cost decomposition over 50 reloads
+    let mut verify_us = vec![];
+    let mut compile_us = vec![];
+    let mut swap_ns = vec![];
+    let mut total_us = vec![];
+    for i in 0..50 {
+        let obj = if i % 2 == 0 { &b } else { &a };
+        let t0 = std::time::Instant::now();
+        let rep = host.install_object(obj).unwrap();
+        total_us.push(t0.elapsed().as_nanos() as f64 / 1e3);
+        verify_us.push(rep.verify_ns as f64 / 1e3);
+        compile_us.push(rep.compile_ns as f64 / 1e3);
+        swap_ns.push(rep.swap_ns[0] as f64);
+    }
+    let s = Stats::of(&swap_ns);
+    println!("hot-reload decomposition (50 reloads):");
+    println!("  verify : {:>9.1} us mean", Stats::of(&verify_us).mean);
+    println!("  compile: {:>9.1} us mean", Stats::of(&compile_us).mean);
+    println!("  swap   : {:>9.0} ns mean ({:.0} ns max) — the only hot-path cost", s.mean, s.max);
+    println!("  total  : {:>9.1} us mean", Stats::of(&total_us).mean);
+
+    // 2) zero lost calls under continuous invocation + reload storm
+    let stop = Arc::new(AtomicBool::new(false));
+    let lost = Arc::new(AtomicU64::new(0));
+    let done = Arc::new(AtomicU64::new(0));
+    let caller = {
+        let (host, stop, lost, done) = (host.clone(), stop.clone(), lost.clone(), done.clone());
+        std::thread::spawn(move || {
+            let args = CollInfoArgs {
+                coll: CollType::AllReduce,
+                nbytes: 8 << 20,
+                nranks: 8,
+                comm_id: 1,
+                max_channels: MAX_CHANNELS,
+            };
+            for _ in 0..INVOCATIONS {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut cost = CostTable::all_sentinel();
+                let mut ch = 0;
+                if !host.tuner_decide(&args, &mut cost, &mut ch)
+                    || cost.argmin().map(|(al, _)| al != Algo::Ring).unwrap_or(true)
+                {
+                    // both policies always produce a Ring preference at
+                    // 8 MiB: anything else is a lost/torn call
+                    lost.fetch_add(1, Ordering::Relaxed);
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+    let mut reloads = 0u64;
+    let mut rejected = 0u64;
+    let bad = policydir::build_unsafe("null_deref").unwrap();
+    while done.load(Ordering::Relaxed) < INVOCATIONS {
+        let obj = if reloads % 2 == 0 { &b } else { &a };
+        host.install_object(obj).unwrap();
+        reloads += 1;
+        if reloads % 10 == 0 {
+            // a failing reload must not disturb the caller
+            assert!(host.install_object(&bad).is_err());
+            rejected += 1;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    caller.join().unwrap();
+
+    let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
+    println!();
+    println!(
+        "continuous invocation: {} calls, {} reloads ({} rejected attempts), lost calls: {}",
+        done.load(Ordering::Relaxed),
+        reloads,
+        rejected,
+        lost.load(Ordering::Relaxed)
+    );
+    println!("total successful swaps: {}, last swap: {} ns", swaps, last_ns);
+    assert_eq!(lost.load(Ordering::Relaxed), 0, "zero lost calls is the paper's claim");
+    println!("RESULT: zero lost calls across {} invocations (paper: 0/400,000)", INVOCATIONS);
+}

@@ -1,0 +1,514 @@
+//! Text assembler for eBPF programs.
+//!
+//! Used by tests, the CLI (`ncclbpf asm`), and as a debugging aid; the
+//! restricted-C compiler ([`crate::bpfc`]) emits instructions directly.
+//!
+//! Syntax (one statement per line, `;` or `#` comments):
+//!
+//! ```text
+//! map latency_map array key=4 value=16 entries=64
+//!
+//! prog tuner size_aware
+//!   mov64 r2, 4
+//!   ldmap r1, latency_map        ; pseudo map load (emits lddw + reloc)
+//!   ldxw  r3, [r1+8]
+//!   stxdw [r10-8], r3
+//!   jne   r0, 0, not_null
+//!   mov64 r0, 0
+//!   exit
+//! not_null:
+//!   mov64 r0, 1
+//!   exit
+//! ```
+
+use super::insn::{self, alu, class, jmp, size, src, Insn};
+use super::maps::{MapDef, MapKind};
+use super::object::{ObjProgram, Object, Reloc};
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+type AResult<T> = Result<T, AsmError>;
+
+fn aerr<T>(line: usize, msg: impl Into<String>) -> AResult<T> {
+    Err(AsmError { line, message: msg.into() })
+}
+
+/// A partially assembled instruction: branch targets may be labels.
+enum Pending {
+    Done(Insn),
+    /// conditional/unconditional branch to a label
+    Branch { opcode: u8, dst: u8, src_reg: u8, imm: i32, label: String },
+    /// lddw map reference (expands to 2 slots + reloc)
+    MapRef { dst: u8, map: String },
+    /// lddw 64-bit immediate (expands to 2 slots)
+    Imm64 { dst: u8, v: u64 },
+}
+
+fn parse_reg(tok: &str, line: usize) -> AResult<u8> {
+    let t = tok.trim_end_matches(',');
+    if let Some(n) = t.strip_prefix('r').or_else(|| t.strip_prefix('w')) {
+        if let Ok(v) = n.parse::<u8>() {
+            if v <= 10 {
+                return Ok(v);
+            }
+        }
+    }
+    aerr(line, format!("expected register, got '{}'", tok))
+}
+
+fn parse_imm(tok: &str, line: usize) -> AResult<i64> {
+    let t = tok.trim_end_matches(',');
+    let (neg, t) = if let Some(s) = t.strip_prefix('-') { (true, s) } else { (false, t) };
+    let v = if let Some(hex) = t.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)
+    } else {
+        t.parse::<i64>()
+    };
+    match v {
+        Ok(v) => Ok(if neg { -v } else { v }),
+        Err(_) => aerr(line, format!("expected immediate, got '{}'", tok)),
+    }
+}
+
+/// parse `[rN+off]` / `[rN-off]` / `[rN]`
+fn parse_mem(tok: &str, line: usize) -> AResult<(u8, i16)> {
+    let t = tok.trim_end_matches(',');
+    let inner = t
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| AsmError { line, message: format!("expected [reg+off], got '{}'", tok) })?;
+    let (regpart, off) = if let Some(i) = inner.find(['+', '-']) {
+        let sign = if inner.as_bytes()[i] == b'-' { -1i32 } else { 1 };
+        let off: i32 = inner[i + 1..]
+            .trim()
+            .parse()
+            .map_err(|_| AsmError { line, message: format!("bad offset in '{}'", tok) })?;
+        (&inner[..i], sign * off)
+    } else {
+        (inner, 0)
+    };
+    let reg = parse_reg(regpart.trim(), line)?;
+    if off > i16::MAX as i32 || off < i16::MIN as i32 {
+        return aerr(line, "offset out of i16 range");
+    }
+    Ok((reg, off as i16))
+}
+
+fn alu_op(name: &str) -> Option<u8> {
+    Some(match name {
+        "add" => alu::ADD,
+        "sub" => alu::SUB,
+        "mul" => alu::MUL,
+        "div" => alu::DIV,
+        "or" => alu::OR,
+        "and" => alu::AND,
+        "lsh" => alu::LSH,
+        "rsh" => alu::RSH,
+        "mod" => alu::MOD,
+        "xor" => alu::XOR,
+        "mov" => alu::MOV,
+        "arsh" => alu::ARSH,
+        _ => return None,
+    })
+}
+
+fn jmp_op(name: &str) -> Option<u8> {
+    Some(match name {
+        "jeq" => jmp::JEQ,
+        "jgt" => jmp::JGT,
+        "jge" => jmp::JGE,
+        "jset" => jmp::JSET,
+        "jne" => jmp::JNE,
+        "jsgt" => jmp::JSGT,
+        "jsge" => jmp::JSGE,
+        "jlt" => jmp::JLT,
+        "jle" => jmp::JLE,
+        "jslt" => jmp::JSLT,
+        "jsle" => jmp::JSLE,
+        _ => return None,
+    })
+}
+
+fn size_suffix(name: &str) -> Option<u8> {
+    Some(match name {
+        "b" => size::B,
+        "h" => size::H,
+        "w" => size::W,
+        "dw" => size::DW,
+        _ => return None,
+    })
+}
+
+/// Assemble a full source file into an [`Object`].
+pub fn assemble(source: &str) -> AResult<Object> {
+    let mut maps: Vec<MapDef> = Vec::new();
+    let mut progs: Vec<ObjProgram> = Vec::new();
+
+    // current program state
+    let mut cur: Option<(String, String, Vec<Pending>, HashMap<String, usize>)> = None;
+
+    // finalize: resolve labels, expand pseudo ops
+    fn finish(
+        line: usize,
+        sec: String,
+        name: String,
+        pendings: Vec<Pending>,
+        labels: HashMap<String, usize>,
+    ) -> AResult<ObjProgram> {
+        // compute slot index of each pending (lddw variants take 2 slots)
+        let mut slot_of = Vec::with_capacity(pendings.len() + 1);
+        let mut slots = 0u32;
+        for p in &pendings {
+            slot_of.push(slots);
+            slots += match p {
+                Pending::MapRef { .. } | Pending::Imm64 { .. } => 2,
+                _ => 1,
+            };
+        }
+        slot_of.push(slots);
+
+        let mut insns = Vec::with_capacity(slots as usize);
+        let mut relocs = Vec::new();
+        for (i, p) in pendings.into_iter().enumerate() {
+            match p {
+                Pending::Done(ins) => insns.push(ins),
+                Pending::Imm64 { dst, v } => insns.extend(insn::lddw(dst, 0, v)),
+                Pending::MapRef { dst, map } => {
+                    relocs.push(Reloc { insn_idx: slot_of[i], map_name: map });
+                    insns.extend(insn::ld_map_fd(dst, 0));
+                }
+                Pending::Branch { opcode, dst, src_reg, imm, label } => {
+                    let tgt = *labels.get(&label).ok_or_else(|| AsmError {
+                        line,
+                        message: format!("undefined label '{}'", label),
+                    })?;
+                    let off = slot_of[tgt] as i64 - (slot_of[i] as i64 + 1);
+                    if off > i16::MAX as i64 || off < i16::MIN as i64 {
+                        return aerr(line, format!("branch to '{}' out of range", label));
+                    }
+                    insns.push(Insn::new(opcode, dst, src_reg, off as i16, imm));
+                }
+            }
+        }
+        Ok(ObjProgram { section: sec, name, insns, relocs })
+    }
+
+    for (lineno, raw) in source.lines().enumerate() {
+        let line = lineno + 1;
+        let text = raw.split(';').next().unwrap().split('#').next().unwrap().trim();
+        if text.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = text.split_whitespace().collect();
+
+        // label?
+        if toks.len() == 1 && toks[0].ends_with(':') {
+            let lbl = toks[0].trim_end_matches(':').to_string();
+            if let Some((_, _, pend, labels)) = cur.as_mut() {
+                if labels.insert(lbl.clone(), pend.len()).is_some() {
+                    return aerr(line, format!("duplicate label '{}'", lbl));
+                }
+            } else {
+                return aerr(line, "label outside program");
+            }
+            continue;
+        }
+
+        match toks[0] {
+            "map" => {
+                // map NAME KIND [key=N] value=N entries=N
+                if toks.len() < 5 || toks.len() > 6 {
+                    return aerr(line, "usage: map NAME array|hash|percpu [key=N] value=N entries=N");
+                }
+                let kind = match toks[2] {
+                    "array" => MapKind::Array,
+                    "hash" => MapKind::Hash,
+                    "percpu" => MapKind::PerCpuArray,
+                    k => return aerr(line, format!("unknown map kind '{}'", k)),
+                };
+                let mut key_size = 0;
+                let mut value_size = 0;
+                let mut max_entries = 0;
+                for t in &toks[3..] {
+                    if let Some(v) = t.strip_prefix("key=") {
+                        key_size = v.parse().map_err(|_| AsmError {
+                            line,
+                            message: "bad key=".into(),
+                        })?;
+                    } else if let Some(v) = t.strip_prefix("value=") {
+                        value_size = v.parse().map_err(|_| AsmError {
+                            line,
+                            message: "bad value=".into(),
+                        })?;
+                    } else if let Some(v) = t.strip_prefix("entries=") {
+                        max_entries = v.parse().map_err(|_| AsmError {
+                            line,
+                            message: "bad entries=".into(),
+                        })?;
+                    }
+                }
+                // allow key= omitted for array maps
+                if key_size == 0 && kind != MapKind::Hash {
+                    key_size = 4;
+                }
+                let def = MapDef { name: toks[1].into(), kind, key_size, value_size, max_entries };
+                def.validate().map_err(|m| AsmError { line, message: m })?;
+                maps.push(def);
+            }
+            "prog" => {
+                if toks.len() != 3 {
+                    return aerr(line, "usage: prog SECTION NAME");
+                }
+                if let Some((sec, name, pend, labels)) = cur.take() {
+                    progs.push(finish(line, sec, name, pend, labels)?);
+                }
+                cur = Some((toks[1].into(), toks[2].into(), Vec::new(), HashMap::new()));
+            }
+            mnemonic => {
+                let Some((_, _, pend, _)) = cur.as_mut() else {
+                    return aerr(line, "instruction outside of a prog section");
+                };
+                let p = parse_insn(mnemonic, &toks, line)?;
+                pend.push(p);
+            }
+        }
+    }
+    if let Some((sec, name, pend, labels)) = cur.take() {
+        progs.push(finish(source.lines().count(), sec, name, pend, labels)?);
+    }
+    Ok(Object { maps, progs })
+}
+
+fn parse_insn(mnemonic: &str, toks: &[&str], line: usize) -> AResult<Pending> {
+    // alu: <op>64 / <op>32  dst, (src|imm)
+    for (suffix, cls) in [("64", class::ALU64), ("32", class::ALU)] {
+        if let Some(base) = mnemonic.strip_suffix(suffix) {
+            if base == "neg" {
+                let dst = parse_reg(toks[1], line)?;
+                return Ok(Pending::Done(Insn::new(cls | alu::NEG, dst, 0, 0, 0)));
+            }
+            if let Some(op) = alu_op(base) {
+                if toks.len() != 3 {
+                    return aerr(line, format!("usage: {} rD, rS|imm", mnemonic));
+                }
+                let dst = parse_reg(toks[1], line)?;
+                return Ok(Pending::Done(if toks[2].starts_with('r') || toks[2].starts_with('w') {
+                    let s = parse_reg(toks[2], line)?;
+                    Insn::new(cls | src::X | op, dst, s, 0, 0)
+                } else {
+                    let imm = parse_imm(toks[2], line)?;
+                    Insn::new(cls | src::K | op, dst, 0, 0, imm as i32)
+                }));
+            }
+        }
+    }
+    // loads: ldx{b,h,w,dw} rD, [rS+off]
+    if let Some(sfx) = mnemonic.strip_prefix("ldx").and_then(size_suffix) {
+        if toks.len() != 3 {
+            return aerr(line, "usage: ldxW rD, [rS+off]");
+        }
+        let dst = parse_reg(toks[1], line)?;
+        let (s, off) = parse_mem(toks[2], line)?;
+        return Ok(Pending::Done(insn::ldx(sfx, dst, s, off)));
+    }
+    // stores: stx{b,h,w,dw} [rD+off], rS   |   st{b,h,w,dw} [rD+off], imm
+    if let Some(sfx) = mnemonic.strip_prefix("stx").and_then(size_suffix) {
+        if toks.len() != 3 {
+            return aerr(line, "usage: stxW [rD+off], rS");
+        }
+        let (d, off) = parse_mem(toks[1], line)?;
+        let s = parse_reg(toks[2], line)?;
+        return Ok(Pending::Done(insn::stx(sfx, d, s, off)));
+    }
+    if mnemonic != "st" {
+        if let Some(sfx) = mnemonic.strip_prefix("st").and_then(size_suffix) {
+            if toks.len() != 3 {
+                return aerr(line, "usage: stW [rD+off], imm");
+            }
+            let (d, off) = parse_mem(toks[1], line)?;
+            let imm = parse_imm(toks[2], line)?;
+            return Ok(Pending::Done(insn::st_imm(sfx, d, off, imm as i32)));
+        }
+    }
+    match mnemonic {
+        "lddw" => {
+            let dst = parse_reg(toks[1], line)?;
+            let v = parse_imm(toks[2], line)? as u64;
+            Ok(Pending::Imm64 { dst, v })
+        }
+        "ldmap" => {
+            if toks.len() != 3 {
+                return aerr(line, "usage: ldmap rD, MAPNAME");
+            }
+            let dst = parse_reg(toks[1], line)?;
+            Ok(Pending::MapRef { dst, map: toks[2].trim_end_matches(',').into() })
+        }
+        "ja" | "jmp" => {
+            if toks.len() != 2 {
+                return aerr(line, "usage: ja LABEL");
+            }
+            Ok(Pending::Branch {
+                opcode: class::JMP | jmp::JA,
+                dst: 0,
+                src_reg: 0,
+                imm: 0,
+                label: toks[1].into(),
+            })
+        }
+        "call" => {
+            if toks.len() != 2 {
+                return aerr(line, "usage: call HELPER_ID|helper_name");
+            }
+            let id = if let Ok(v) = parse_imm(toks[1], line) {
+                v as i32
+            } else if let Some(spec) = super::helpers::spec_by_name(toks[1]) {
+                spec.id
+            } else {
+                return aerr(line, format!("unknown helper '{}'", toks[1]));
+            };
+            Ok(Pending::Done(insn::call(id)))
+        }
+        "exit" => Ok(Pending::Done(insn::exit())),
+        m => {
+            if let Some(op) = jmp_op(m) {
+                if toks.len() != 4 {
+                    return aerr(line, format!("usage: {} rD, rS|imm, LABEL", m));
+                }
+                let dst = parse_reg(toks[1], line)?;
+                let label = toks[3].to_string();
+                if toks[2].starts_with('r') {
+                    let s = parse_reg(toks[2], line)?;
+                    Ok(Pending::Branch {
+                        opcode: class::JMP | src::X | op,
+                        dst,
+                        src_reg: s,
+                        imm: 0,
+                        label,
+                    })
+                } else {
+                    let imm = parse_imm(toks[2], line)?;
+                    Ok(Pending::Branch {
+                        opcode: class::JMP | src::K | op,
+                        dst,
+                        src_reg: 0,
+                        imm: imm as i32,
+                        label,
+                    })
+                }
+            } else {
+                aerr(line, format!("unknown mnemonic '{}'", m))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpf::insn::disasm;
+
+    #[test]
+    fn assemble_minimal() {
+        let o = assemble("prog tuner t\n  mov64 r0, 0\n  exit\n").unwrap();
+        assert_eq!(o.progs.len(), 1);
+        assert_eq!(o.progs[0].insns.len(), 2);
+    }
+
+    #[test]
+    fn assemble_with_map_and_labels() {
+        let src = r#"
+map latency_map array key=4 value=16 entries=64
+
+prog tuner size_aware
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, latency_map
+  call  bpf_map_lookup_elem
+  jne   r0, 0, not_null
+  mov64 r0, 0
+  exit
+not_null:
+  ldxdw r3, [r0+0]
+  mov64 r0, 1
+  exit
+"#;
+        let o = assemble(src).unwrap();
+        assert_eq!(o.maps.len(), 1);
+        let p = &o.progs[0];
+        assert_eq!(p.relocs.len(), 1);
+        // reloc points at the lddw slot
+        assert!(p.insns[p.relocs[0].insn_idx as usize].is_lddw());
+        let text = disasm(&p.insns);
+        assert!(text.contains("call 1"), "{}", text);
+        // jne target skips 2 insns (mov, exit)
+        assert!(text.contains("jne r0, 0, +2"), "{}", text);
+    }
+
+    #[test]
+    fn label_after_lddw_accounts_for_two_slots() {
+        let src = r#"
+prog tuner t
+  lddw r1, 0x123456789
+  jeq r1, 0, done
+  mov64 r0, 1
+  exit
+done:
+  mov64 r0, 0
+  exit
+"#;
+        let o = assemble(src).unwrap();
+        let insns = &o.progs[0].insns;
+        // slots: 0-1 lddw, 2 jeq, 3 mov, 4 exit, 5 mov, 6 exit
+        assert_eq!(insns.len(), 7);
+        assert_eq!(insns[2].off, 2); // 2+1+2 = 5
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = assemble("prog tuner t\n  bogus r0\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.message.contains("bogus"));
+    }
+
+    #[test]
+    fn undefined_label() {
+        let e = assemble("prog tuner t\n  ja nowhere\n  exit\n").unwrap_err();
+        assert!(e.message.contains("undefined label"));
+    }
+
+    #[test]
+    fn duplicate_label() {
+        let e = assemble("prog tuner t\nl:\nl:\n  exit\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn negative_offsets_and_hex() {
+        let o = assemble("prog tuner t\n  ldxw r2, [r10-8]\n  mov64 r0, 0x2a\n  exit\n").unwrap();
+        assert_eq!(o.progs[0].insns[0].off, -8);
+        assert_eq!(o.progs[0].insns[1].imm, 42);
+    }
+
+    #[test]
+    fn multiple_progs_in_one_object() {
+        let src = "prog profiler p\n  mov64 r0, 0\n  exit\nprog tuner t\n  mov64 r0, 1\n  exit\n";
+        let o = assemble(src).unwrap();
+        assert_eq!(o.progs.len(), 2);
+        assert!(o.prog_by_section("profiler").is_some());
+        assert!(o.prog_by_section("tuner").is_some());
+    }
+}

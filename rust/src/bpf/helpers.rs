@@ -1,0 +1,355 @@
+//! Helper functions callable from BPF programs, and the per-program-type
+//! whitelists the verifier enforces (§3.2: "helper whitelisting").
+//!
+//! Helper IDs follow the kernel numbering where an equivalent exists so
+//! policy sources read like ordinary eBPF C.
+
+use super::maps::{Map, MapRegistry};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Helper ids (kernel-compatible numbering where possible).
+pub mod id {
+    pub const MAP_LOOKUP_ELEM: i32 = 1;
+    pub const MAP_UPDATE_ELEM: i32 = 2;
+    pub const MAP_DELETE_ELEM: i32 = 3;
+    pub const KTIME_GET_NS: i32 = 5;
+    pub const TRACE_PRINTK: i32 = 6;
+    pub const GET_PRANDOM_U32: i32 = 7;
+    pub const GET_SMP_PROCESSOR_ID: i32 = 8;
+}
+
+/// Program types — one per NCCLbpf plugin hook.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProgType {
+    /// tuner getCollInfo policy: reads policy_context inputs, writes
+    /// algorithm/protocol/channel outputs.
+    Tuner,
+    /// profiler event callback: reads profiler_context, updates maps.
+    Profiler,
+    /// net-plugin data-path hook: reads net_context (op, bytes, peer).
+    Net,
+}
+
+impl ProgType {
+    pub fn from_section(sec: &str) -> Option<ProgType> {
+        match sec {
+            "tuner" => Some(ProgType::Tuner),
+            "profiler" => Some(ProgType::Profiler),
+            "net" => Some(ProgType::Net),
+            _ => None,
+        }
+    }
+    pub fn section(&self) -> &'static str {
+        match self {
+            ProgType::Tuner => "tuner",
+            ProgType::Profiler => "profiler",
+            ProgType::Net => "net",
+        }
+    }
+}
+
+/// Argument classes for verifier type-checking of helper calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgType {
+    /// must be a map reference loaded via `lddw rX, map[id]`
+    ConstMapPtr,
+    /// pointer to initialized stack bytes of the map's key size
+    MapKey,
+    /// pointer to initialized stack bytes of the map's value size
+    MapValue,
+    /// any scalar
+    Scalar,
+    /// pointer to readable memory of length given by the *next* arg
+    MemLen,
+}
+
+/// Helper return classes for verifier tracking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetType {
+    /// pointer into the map value, or NULL — must be null-checked
+    MapValueOrNull,
+    Scalar,
+}
+
+/// Static helper signature used by the verifier.
+#[derive(Clone, Debug)]
+pub struct HelperSpec {
+    pub id: i32,
+    pub name: &'static str,
+    pub args: &'static [ArgType],
+    pub ret: RetType,
+}
+
+pub const HELPER_SPECS: &[HelperSpec] = &[
+    HelperSpec {
+        id: id::MAP_LOOKUP_ELEM,
+        name: "bpf_map_lookup_elem",
+        args: &[ArgType::ConstMapPtr, ArgType::MapKey],
+        ret: RetType::MapValueOrNull,
+    },
+    HelperSpec {
+        id: id::MAP_UPDATE_ELEM,
+        name: "bpf_map_update_elem",
+        args: &[ArgType::ConstMapPtr, ArgType::MapKey, ArgType::MapValue, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::MAP_DELETE_ELEM,
+        name: "bpf_map_delete_elem",
+        args: &[ArgType::ConstMapPtr, ArgType::MapKey],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::KTIME_GET_NS,
+        name: "bpf_ktime_get_ns",
+        args: &[],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::TRACE_PRINTK,
+        name: "bpf_trace_printk",
+        args: &[ArgType::MemLen, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::GET_PRANDOM_U32,
+        name: "bpf_get_prandom_u32",
+        args: &[],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::GET_SMP_PROCESSOR_ID,
+        name: "bpf_get_smp_processor_id",
+        args: &[],
+        ret: RetType::Scalar,
+    },
+];
+
+pub fn spec_by_id(idv: i32) -> Option<&'static HelperSpec> {
+    HELPER_SPECS.iter().find(|s| s.id == idv)
+}
+
+pub fn spec_by_name(name: &str) -> Option<&'static HelperSpec> {
+    HELPER_SPECS.iter().find(|s| s.name == name)
+}
+
+/// Per-program-type helper whitelist. Calling a helper outside the
+/// whitelist is a load-time verification error ("illegal helper" in the
+/// paper's unsafe-program taxonomy).
+pub fn whitelist(pt: ProgType) -> &'static [i32] {
+    match pt {
+        ProgType::Tuner => &[
+            id::MAP_LOOKUP_ELEM,
+            id::MAP_UPDATE_ELEM,
+            id::KTIME_GET_NS,
+            id::GET_PRANDOM_U32,
+            id::GET_SMP_PROCESSOR_ID,
+        ],
+        ProgType::Profiler => &[
+            id::MAP_LOOKUP_ELEM,
+            id::MAP_UPDATE_ELEM,
+            id::MAP_DELETE_ELEM,
+            id::KTIME_GET_NS,
+            id::TRACE_PRINTK,
+            id::GET_SMP_PROCESSOR_ID,
+        ],
+        ProgType::Net => &[
+            id::MAP_LOOKUP_ELEM,
+            id::MAP_UPDATE_ELEM,
+            id::KTIME_GET_NS,
+            id::GET_SMP_PROCESSOR_ID,
+        ],
+    }
+}
+
+pub fn is_allowed(pt: ProgType, helper: i32) -> bool {
+    whitelist(pt).contains(&helper)
+}
+
+// ---------------------------------------------------------------------------
+// Runtime side: the execution environment helpers run against.
+// ---------------------------------------------------------------------------
+
+static PROCESS_EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Monotonic nanoseconds since process start (bpf_ktime_get_ns).
+#[inline]
+pub fn ktime_get_ns() -> u64 {
+    let epoch = PROCESS_EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_nanos() as u64
+}
+
+static PRNG_STATE: AtomicU64 = AtomicU64::new(0x9e3779b97f4a7c15);
+
+/// xorshift-based prandom (no `rand` crate available offline).
+pub fn prandom_u32() -> u32 {
+    let mut x = PRNG_STATE.load(Ordering::Relaxed);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    PRNG_STATE.store(x, Ordering::Relaxed);
+    (x >> 32) as u32
+}
+
+/// Count of trace_printk invocations (observable by tests).
+pub static TRACE_COUNT: AtomicU32 = AtomicU32::new(0);
+
+/// Runtime environment for one program execution: the maps the program
+/// may touch, resolved from ids at load time.
+pub struct HelperEnv {
+    /// map id -> map instance; ids come from lddw MAP_FD operands.
+    pub maps: Vec<(u32, Arc<Map>)>,
+}
+
+impl HelperEnv {
+    pub fn new(registry: &MapRegistry, map_ids: &[u32]) -> Result<HelperEnv, String> {
+        let mut maps = Vec::with_capacity(map_ids.len());
+        for &idv in map_ids {
+            let m = registry
+                .by_id(idv)
+                .ok_or_else(|| format!("unresolved map id {}", idv))?;
+            maps.push((idv, m));
+        }
+        Ok(HelperEnv { maps })
+    }
+
+    #[inline]
+    pub fn map_by_id(&self, idv: u32) -> Option<&Arc<Map>> {
+        // linear scan: policies reference 1-3 maps; faster than hashing.
+        self.maps.iter().find(|(i, _)| *i == idv).map(|(_, m)| m)
+    }
+
+    /// Dispatch a helper call. `args` are the raw r1..r5 values; pointer
+    /// validity is guaranteed by prior verification.
+    ///
+    /// # Safety
+    /// Must only be invoked from a program that passed the verifier with
+    /// matching helper signatures; pointer arguments are dereferenced.
+    #[inline]
+    pub unsafe fn call(&self, helper: i32, args: [u64; 5]) -> u64 {
+        match helper {
+            id::MAP_LOOKUP_ELEM => {
+                let map_id = args[0] as u32;
+                let Some(m) = self.map_by_id(map_id) else { return 0 };
+                let key =
+                    std::slice::from_raw_parts(args[1] as *const u8, m.def.key_size as usize);
+                m.lookup(key) as u64
+            }
+            id::MAP_UPDATE_ELEM => {
+                let map_id = args[0] as u32;
+                let Some(m) = self.map_by_id(map_id) else { return u64::MAX };
+                let key =
+                    std::slice::from_raw_parts(args[1] as *const u8, m.def.key_size as usize);
+                let val =
+                    std::slice::from_raw_parts(args[2] as *const u8, m.def.value_size as usize);
+                match m.update(key, val) {
+                    Ok(()) => 0,
+                    Err(_) => (-1i64) as u64,
+                }
+            }
+            id::MAP_DELETE_ELEM => {
+                let map_id = args[0] as u32;
+                let Some(m) = self.map_by_id(map_id) else { return u64::MAX };
+                let key =
+                    std::slice::from_raw_parts(args[1] as *const u8, m.def.key_size as usize);
+                match m.delete(key) {
+                    Ok(true) => 0,
+                    _ => (-1i64) as u64,
+                }
+            }
+            id::KTIME_GET_NS => ktime_get_ns(),
+            id::TRACE_PRINTK => {
+                TRACE_COUNT.fetch_add(1, Ordering::Relaxed);
+                let len = (args[1] as usize).min(256);
+                let bytes = std::slice::from_raw_parts(args[0] as *const u8, len);
+                if let Ok(s) = std::str::from_utf8(bytes) {
+                    eprintln!("[bpf] {}", s.trim_end_matches('\0'));
+                }
+                0
+            }
+            id::GET_PRANDOM_U32 => prandom_u32() as u64,
+            id::GET_SMP_PROCESSOR_ID => Map::current_cpu() as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpf::maps::{MapDef, MapKind};
+
+    fn registry_with_array() -> (MapRegistry, u32) {
+        let r = MapRegistry::new();
+        let m = r
+            .create_or_get(&MapDef {
+                name: "t".into(),
+                kind: MapKind::Array,
+                key_size: 4,
+                value_size: 8,
+                max_entries: 4,
+            })
+            .unwrap();
+        let id = m.id;
+        (r, id)
+    }
+
+    #[test]
+    fn whitelists_differ_by_type() {
+        assert!(is_allowed(ProgType::Profiler, id::TRACE_PRINTK));
+        assert!(!is_allowed(ProgType::Tuner, id::TRACE_PRINTK));
+        assert!(!is_allowed(ProgType::Tuner, id::MAP_DELETE_ELEM));
+        assert!(is_allowed(ProgType::Tuner, id::MAP_LOOKUP_ELEM));
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert_eq!(spec_by_id(1).unwrap().name, "bpf_map_lookup_elem");
+        assert_eq!(spec_by_name("bpf_ktime_get_ns").unwrap().id, id::KTIME_GET_NS);
+        assert!(spec_by_id(999).is_none());
+    }
+
+    #[test]
+    fn ktime_monotonic() {
+        let a = ktime_get_ns();
+        let b = ktime_get_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn helper_env_lookup_update() {
+        let (r, idv) = registry_with_array();
+        let env = HelperEnv::new(&r, &[idv]).unwrap();
+        let key = 2u32.to_le_bytes();
+        let val = 99u64.to_le_bytes();
+        unsafe {
+            let rc = env.call(
+                id::MAP_UPDATE_ELEM,
+                [idv as u64, key.as_ptr() as u64, val.as_ptr() as u64, 0, 0],
+            );
+            assert_eq!(rc, 0);
+            let p = env.call(id::MAP_LOOKUP_ELEM, [idv as u64, key.as_ptr() as u64, 0, 0, 0]);
+            assert_ne!(p, 0);
+            assert_eq!((p as *const u64).read_unaligned(), 99);
+            // out of range -> null
+            let bad = 9u32.to_le_bytes();
+            let p2 = env.call(id::MAP_LOOKUP_ELEM, [idv as u64, bad.as_ptr() as u64, 0, 0, 0]);
+            assert_eq!(p2, 0);
+        }
+    }
+
+    #[test]
+    fn helper_env_unresolved_map() {
+        let (r, _) = registry_with_array();
+        assert!(HelperEnv::new(&r, &[42]).is_err());
+    }
+
+    #[test]
+    fn prandom_changes() {
+        let a = prandom_u32();
+        let b = prandom_u32();
+        assert_ne!(a, b);
+    }
+}

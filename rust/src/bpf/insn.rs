@@ -1,0 +1,484 @@
+//! eBPF instruction set: encoding, opcode tables, decode and disassembly.
+//!
+//! We implement the standard 64-bit eBPF instruction encoding (8-byte
+//! instructions; `lddw` occupies two slots):
+//!
+//! ```text
+//!   msb                                                         lsb
+//!   +------------------------+----------------+----+----+--------+
+//!   | immediate (32)         | offset (16)    |src |dst | opcode |
+//!   +------------------------+----------------+----+----+--------+
+//! ```
+//!
+//! Opcode layout follows the kernel: the low 3 bits are the instruction
+//! class; ALU/JMP use `op(4) | source(1) | class(3)`, loads/stores use
+//! `mode(3) | size(2) | class(3)`.
+
+use std::fmt;
+
+/// Instruction classes (low 3 bits of the opcode).
+pub mod class {
+    pub const LD: u8 = 0x00;
+    pub const LDX: u8 = 0x01;
+    pub const ST: u8 = 0x02;
+    pub const STX: u8 = 0x03;
+    pub const ALU: u8 = 0x04;
+    pub const JMP: u8 = 0x05;
+    pub const JMP32: u8 = 0x06;
+    pub const ALU64: u8 = 0x07;
+}
+
+/// ALU / JMP source bit.
+pub mod src {
+    /// use 32-bit immediate as source operand
+    pub const K: u8 = 0x00;
+    /// use source register as source operand
+    pub const X: u8 = 0x08;
+}
+
+/// ALU operation codes (bits 4..8).
+pub mod alu {
+    pub const ADD: u8 = 0x00;
+    pub const SUB: u8 = 0x10;
+    pub const MUL: u8 = 0x20;
+    pub const DIV: u8 = 0x30;
+    pub const OR: u8 = 0x40;
+    pub const AND: u8 = 0x50;
+    pub const LSH: u8 = 0x60;
+    pub const RSH: u8 = 0x70;
+    pub const NEG: u8 = 0x80;
+    pub const MOD: u8 = 0x90;
+    pub const XOR: u8 = 0xa0;
+    pub const MOV: u8 = 0xb0;
+    pub const ARSH: u8 = 0xc0;
+    /// byte-swap (END) — we accept but treat as to-le no-op on x86.
+    pub const END: u8 = 0xd0;
+}
+
+/// JMP operation codes (bits 4..8).
+pub mod jmp {
+    pub const JA: u8 = 0x00;
+    pub const JEQ: u8 = 0x10;
+    pub const JGT: u8 = 0x20;
+    pub const JGE: u8 = 0x30;
+    pub const JSET: u8 = 0x40;
+    pub const JNE: u8 = 0x50;
+    pub const JSGT: u8 = 0x60;
+    pub const JSGE: u8 = 0x70;
+    pub const CALL: u8 = 0x80;
+    pub const EXIT: u8 = 0x90;
+    pub const JLT: u8 = 0xa0;
+    pub const JLE: u8 = 0xb0;
+    pub const JSLT: u8 = 0xc0;
+    pub const JSLE: u8 = 0xd0;
+}
+
+/// Load/store size field (bits 3..5).
+pub mod size {
+    pub const W: u8 = 0x00; // u32
+    pub const H: u8 = 0x08; // u16
+    pub const B: u8 = 0x10; // u8
+    pub const DW: u8 = 0x18; // u64
+}
+
+/// Load/store mode field (bits 5..8).
+pub mod mode {
+    pub const IMM: u8 = 0x00; // lddw (64-bit immediate, 2 slots)
+    pub const ABS: u8 = 0x20;
+    pub const IND: u8 = 0x40;
+    pub const MEM: u8 = 0x60;
+    pub const ATOMIC: u8 = 0xc0;
+}
+
+/// `src_reg` pseudo values for `lddw` (BPF_LD | BPF_IMM | BPF_DW).
+pub mod pseudo {
+    /// imm is a map fd / map id; verifier turns R into PtrToMap.
+    pub const MAP_FD: u8 = 1;
+    /// imm is a map id and the next imm an offset into the map value.
+    pub const MAP_VALUE: u8 = 2;
+}
+
+/// Number of general-purpose registers. R10 is the read-only frame pointer.
+pub const NREGS: usize = 11;
+/// Stack size available to a program (bytes below R10).
+pub const STACK_SIZE: i64 = 512;
+
+/// One 8-byte eBPF instruction (a `lddw` is two of these).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Insn {
+    pub opcode: u8,
+    pub dst: u8,
+    pub src: u8,
+    pub off: i16,
+    pub imm: i32,
+}
+
+impl Insn {
+    pub const fn new(opcode: u8, dst: u8, src: u8, off: i16, imm: i32) -> Self {
+        Insn { opcode, dst, src, off, imm }
+    }
+
+    /// Instruction class (low 3 bits).
+    #[inline]
+    pub fn class(&self) -> u8 {
+        self.opcode & 0x07
+    }
+
+    /// ALU/JMP op field.
+    #[inline]
+    pub fn op(&self) -> u8 {
+        self.opcode & 0xf0
+    }
+
+    /// ALU/JMP source flag (K or X).
+    #[inline]
+    pub fn src_flag(&self) -> u8 {
+        self.opcode & 0x08
+    }
+
+    /// Load/store size field.
+    #[inline]
+    pub fn sz(&self) -> u8 {
+        self.opcode & 0x18
+    }
+
+    /// Load/store mode field.
+    #[inline]
+    pub fn mode(&self) -> u8 {
+        self.opcode & 0xe0
+    }
+
+    /// Byte width of a memory access, from the size field.
+    pub fn access_width(&self) -> u64 {
+        match self.sz() {
+            size::B => 1,
+            size::H => 2,
+            size::W => 4,
+            size::DW => 8,
+            _ => unreachable!(),
+        }
+    }
+
+    /// True if this is the first slot of a 16-byte `lddw`.
+    #[inline]
+    pub fn is_lddw(&self) -> bool {
+        self.opcode == (class::LD | size::DW | mode::IMM)
+    }
+
+    /// Encode to the 8-byte wire format (little-endian).
+    pub fn encode(&self) -> [u8; 8] {
+        let mut b = [0u8; 8];
+        b[0] = self.opcode;
+        b[1] = (self.dst & 0x0f) | ((self.src & 0x0f) << 4);
+        b[2..4].copy_from_slice(&self.off.to_le_bytes());
+        b[4..8].copy_from_slice(&self.imm.to_le_bytes());
+        b
+    }
+
+    /// Decode from the 8-byte wire format.
+    pub fn decode(b: &[u8; 8]) -> Self {
+        Insn {
+            opcode: b[0],
+            dst: b[1] & 0x0f,
+            src: (b[1] >> 4) & 0x0f,
+            off: i16::from_le_bytes([b[2], b[3]]),
+            imm: i32::from_le_bytes([b[4], b[5], b[6], b[7]]),
+        }
+    }
+}
+
+/// Encode a whole program to bytes.
+pub fn encode_program(insns: &[Insn]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(insns.len() * 8);
+    for i in insns {
+        out.extend_from_slice(&i.encode());
+    }
+    out
+}
+
+/// Decode a byte stream into instructions. Errors on trailing bytes.
+pub fn decode_program(bytes: &[u8]) -> Result<Vec<Insn>, String> {
+    if bytes.len() % 8 != 0 {
+        return Err(format!("program length {} is not a multiple of 8", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| Insn::decode(c.try_into().unwrap()))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Builder helpers: make handwritten programs and codegen readable.
+// ---------------------------------------------------------------------------
+
+/// `dst = imm` (64-bit mov of sign-extended 32-bit imm)
+pub fn mov64_imm(dst: u8, imm: i32) -> Insn {
+    Insn::new(class::ALU64 | src::K | alu::MOV, dst, 0, 0, imm)
+}
+/// `dst = src`
+pub fn mov64_reg(dst: u8, srcr: u8) -> Insn {
+    Insn::new(class::ALU64 | src::X | alu::MOV, dst, srcr, 0, 0)
+}
+/// `w(dst) = imm` (32-bit, zero-extends)
+pub fn mov32_imm(dst: u8, imm: i32) -> Insn {
+    Insn::new(class::ALU | src::K | alu::MOV, dst, 0, 0, imm)
+}
+/// generic 64-bit alu with immediate
+pub fn alu64_imm(op: u8, dst: u8, imm: i32) -> Insn {
+    Insn::new(class::ALU64 | src::K | op, dst, 0, 0, imm)
+}
+/// generic 64-bit alu with register
+pub fn alu64_reg(op: u8, dst: u8, srcr: u8) -> Insn {
+    Insn::new(class::ALU64 | src::X | op, dst, srcr, 0, 0)
+}
+/// generic 32-bit alu with immediate
+pub fn alu32_imm(op: u8, dst: u8, imm: i32) -> Insn {
+    Insn::new(class::ALU | src::K | op, dst, 0, 0, imm)
+}
+/// generic 32-bit alu with register
+pub fn alu32_reg(op: u8, dst: u8, srcr: u8) -> Insn {
+    Insn::new(class::ALU | src::X | op, dst, srcr, 0, 0)
+}
+/// `dst = *(size*)(src + off)`
+pub fn ldx(sz: u8, dst: u8, srcr: u8, off: i16) -> Insn {
+    Insn::new(class::LDX | sz | mode::MEM, dst, srcr, off, 0)
+}
+/// `*(size*)(dst + off) = src`
+pub fn stx(sz: u8, dst: u8, srcr: u8, off: i16) -> Insn {
+    Insn::new(class::STX | sz | mode::MEM, dst, srcr, off, 0)
+}
+/// `*(size*)(dst + off) = imm`
+pub fn st_imm(sz: u8, dst: u8, off: i16, imm: i32) -> Insn {
+    Insn::new(class::ST | sz | mode::MEM, dst, 0, off, imm)
+}
+/// two-slot 64-bit immediate load; `src_reg` selects pseudo meaning
+pub fn lddw(dst: u8, srcr: u8, v: u64) -> [Insn; 2] {
+    [
+        Insn::new(class::LD | size::DW | mode::IMM, dst, srcr, 0, v as u32 as i32),
+        Insn::new(0, 0, 0, 0, (v >> 32) as u32 as i32),
+    ]
+}
+/// load a map reference: `dst = map[id]` (pseudo MAP_FD)
+pub fn ld_map_fd(dst: u8, map_id: u32) -> [Insn; 2] {
+    lddw(dst, pseudo::MAP_FD, map_id as u64)
+}
+/// conditional jump, register source
+pub fn jmp_reg(op: u8, dst: u8, srcr: u8, off: i16) -> Insn {
+    Insn::new(class::JMP | src::X | op, dst, srcr, off, 0)
+}
+/// conditional jump, immediate source
+pub fn jmp_imm(op: u8, dst: u8, imm: i32, off: i16) -> Insn {
+    Insn::new(class::JMP | src::K | op, dst, 0, off, imm)
+}
+/// unconditional jump
+pub fn ja(off: i16) -> Insn {
+    Insn::new(class::JMP | jmp::JA, 0, 0, off, 0)
+}
+/// call helper by id
+pub fn call(helper: i32) -> Insn {
+    Insn::new(class::JMP | jmp::CALL, 0, 0, 0, helper)
+}
+/// program exit; R0 is the return value
+pub fn exit() -> Insn {
+    Insn::new(class::JMP | jmp::EXIT, 0, 0, 0, 0)
+}
+
+// ---------------------------------------------------------------------------
+// Disassembly
+// ---------------------------------------------------------------------------
+
+fn alu_name(op: u8) -> &'static str {
+    match op {
+        alu::ADD => "add",
+        alu::SUB => "sub",
+        alu::MUL => "mul",
+        alu::DIV => "div",
+        alu::OR => "or",
+        alu::AND => "and",
+        alu::LSH => "lsh",
+        alu::RSH => "rsh",
+        alu::NEG => "neg",
+        alu::MOD => "mod",
+        alu::XOR => "xor",
+        alu::MOV => "mov",
+        alu::ARSH => "arsh",
+        alu::END => "end",
+        _ => "alu?",
+    }
+}
+
+fn jmp_name(op: u8) -> &'static str {
+    match op {
+        jmp::JA => "ja",
+        jmp::JEQ => "jeq",
+        jmp::JGT => "jgt",
+        jmp::JGE => "jge",
+        jmp::JSET => "jset",
+        jmp::JNE => "jne",
+        jmp::JSGT => "jsgt",
+        jmp::JSGE => "jsge",
+        jmp::JLT => "jlt",
+        jmp::JLE => "jle",
+        jmp::JSLT => "jslt",
+        jmp::JSLE => "jsle",
+        _ => "jmp?",
+    }
+}
+
+fn size_name(sz: u8) -> &'static str {
+    match sz {
+        size::B => "u8",
+        size::H => "u16",
+        size::W => "u32",
+        size::DW => "u64",
+        _ => "u?",
+    }
+}
+
+impl fmt::Debug for Insn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", disasm_one(self, None))
+    }
+}
+
+/// Disassemble one instruction. `next` supplies the second slot of `lddw`.
+pub fn disasm_one(i: &Insn, next: Option<&Insn>) -> String {
+    match i.class() {
+        class::ALU | class::ALU64 => {
+            let w = if i.class() == class::ALU64 { "r" } else { "w" };
+            let name = alu_name(i.op());
+            let suffix = if i.class() == class::ALU64 { "64" } else { "32" };
+            if i.op() == alu::NEG {
+                format!("neg{} {}{}", suffix, w, i.dst)
+            } else if i.src_flag() == src::X {
+                format!("{}{} {}{}, {}{}", name, suffix, w, i.dst, w, i.src)
+            } else {
+                format!("{}{} {}{}, {}", name, suffix, w, i.dst, i.imm)
+            }
+        }
+        class::JMP | class::JMP32 => {
+            let op = i.op();
+            if op == jmp::CALL {
+                format!("call {}", i.imm)
+            } else if op == jmp::EXIT {
+                "exit".to_string()
+            } else if op == jmp::JA {
+                format!("ja {:+}", i.off)
+            } else if i.src_flag() == src::X {
+                format!("{} r{}, r{}, {:+}", jmp_name(op), i.dst, i.src, i.off)
+            } else {
+                format!("{} r{}, {}, {:+}", jmp_name(op), i.dst, i.imm, i.off)
+            }
+        }
+        class::LDX => format!(
+            "ldx{} r{}, [r{}{:+}]",
+            size_name(i.sz()),
+            i.dst,
+            i.src,
+            i.off
+        ),
+        class::STX => format!(
+            "stx{} [r{}{:+}], r{}",
+            size_name(i.sz()),
+            i.dst,
+            i.off,
+            i.src
+        ),
+        class::ST => format!(
+            "st{} [r{}{:+}], {}",
+            size_name(i.sz()),
+            i.dst,
+            i.off,
+            i.imm
+        ),
+        class::LD => {
+            if i.is_lddw() {
+                let hi = next.map(|n| n.imm as u32 as u64).unwrap_or(0);
+                let v = (i.imm as u32 as u64) | (hi << 32);
+                match i.src {
+                    pseudo::MAP_FD => format!("lddw r{}, map[{}]", i.dst, i.imm as u32),
+                    _ => format!("lddw r{}, {:#x}", i.dst, v),
+                }
+            } else {
+                format!("ld? opcode={:#x}", i.opcode)
+            }
+        }
+        _ => format!("?? opcode={:#x}", i.opcode),
+    }
+}
+
+/// Disassemble a full program with instruction indices.
+pub fn disasm(insns: &[Insn]) -> String {
+    let mut out = String::new();
+    let mut idx = 0;
+    while idx < insns.len() {
+        let i = &insns[idx];
+        let next = insns.get(idx + 1);
+        out.push_str(&format!("{:4}: {}\n", idx, disasm_one(i, next)));
+        idx += if i.is_lddw() { 2 } else { 1 };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        let prog = vec![
+            mov64_imm(0, 42),
+            alu64_imm(alu::ADD, 0, -7),
+            ldx(size::W, 1, 1, 16),
+            stx(size::DW, 10, 0, -8),
+            jmp_imm(jmp::JEQ, 0, 35, 2),
+            call(1),
+            exit(),
+        ];
+        let bytes = encode_program(&prog);
+        assert_eq!(bytes.len(), prog.len() * 8);
+        let back = decode_program(&bytes).unwrap();
+        assert_eq!(prog, back);
+    }
+
+    #[test]
+    fn lddw_two_slots() {
+        let pair = lddw(3, 0, 0xdead_beef_cafe_f00d);
+        assert!(pair[0].is_lddw());
+        assert_eq!(pair[0].imm as u32, 0xcafe_f00d);
+        assert_eq!(pair[1].imm as u32, 0xdead_beef);
+    }
+
+    #[test]
+    fn decode_rejects_ragged() {
+        assert!(decode_program(&[0u8; 9]).is_err());
+    }
+
+    #[test]
+    fn field_extraction() {
+        let i = Insn::new(class::ALU64 | src::X | alu::ADD, 3, 4, 0, 0);
+        assert_eq!(i.class(), class::ALU64);
+        assert_eq!(i.op(), alu::ADD);
+        assert_eq!(i.src_flag(), src::X);
+        let l = ldx(size::H, 2, 1, -4);
+        assert_eq!(l.class(), class::LDX);
+        assert_eq!(l.sz(), size::H);
+        assert_eq!(l.access_width(), 2);
+        assert_eq!(l.off, -4);
+    }
+
+    #[test]
+    fn disasm_smoke() {
+        let prog = [mov64_imm(0, 1), exit()];
+        let text = disasm(&prog);
+        assert!(text.contains("mov64 r0, 1"));
+        assert!(text.contains("exit"));
+    }
+
+    #[test]
+    fn map_fd_disasm() {
+        let p = ld_map_fd(1, 7);
+        let text = disasm(&p);
+        assert!(text.contains("map[7]"), "{}", text);
+    }
+}

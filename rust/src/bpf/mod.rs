@@ -1,0 +1,24 @@
+//! Userspace eBPF runtime: the verified-extension substrate NCCLbpf
+//! embeds into the collective library's plugin hooks.
+//!
+//! Pipeline: author (restricted C via [`crate::bpfc`], or [`asm`]) →
+//! [`object`] container → [`program::load_object`] (relocate → verify
+//! via [`verifier`] → pre-decode via [`interp`] / native-compile via
+//! [`jit`]) → execute against typed [`maps`] and whitelisted
+//! [`helpers`].
+
+pub mod asm;
+pub mod helpers;
+pub mod insn;
+pub mod interp;
+pub mod jit;
+pub mod maps;
+pub mod object;
+pub mod program;
+pub mod verifier;
+
+pub use helpers::ProgType;
+pub use maps::{Map, MapDef, MapKind, MapRegistry};
+pub use object::Object;
+pub use program::{CtxLayouts, LoadError, LoadedProgram};
+pub use verifier::{CtxLayout, VerifyError, VerifyInfo};

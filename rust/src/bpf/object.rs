@@ -1,0 +1,286 @@
+//! BPF object container — the on-disk unit a policy compiles to and the
+//! hot-reload mechanism swaps in (the role ELF `.o` files play for
+//! bpftime/libbpf).
+//!
+//! An object bundles map *declarations*, one or more programs keyed by
+//! section name (`tuner` / `profiler` / `net`, as in `SEC("tuner")`),
+//! and relocations binding `lddw rX, map[...]` instructions to maps *by
+//! name*. Map name resolution happens at load time against a shared
+//! [`MapRegistry`](super::maps::MapRegistry), which is what lets two
+//! independently deployed objects (a profiler and a tuner) share a map.
+//!
+//! Binary layout (all little-endian):
+//! ```text
+//!   "BEF1" | u32 nmaps  | MapDef*        (strings are u16 len + bytes)
+//!          | u32 nprogs | Program*
+//!   Program: section str | name str | u32 ninsn | insn bytes
+//!            | u32 nreloc | { u32 insn_idx, map name str }*
+//! ```
+
+use super::helpers::ProgType;
+use super::insn::{self, Insn};
+use super::maps::{MapDef, MapKind};
+
+const MAGIC: &[u8; 4] = b"BEF1";
+
+/// A map reference relocation: instruction `insn_idx` is the first slot
+/// of an `lddw` whose imm must be patched with the live id of `map_name`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reloc {
+    pub insn_idx: u32,
+    pub map_name: String,
+}
+
+/// One program section within an object.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObjProgram {
+    pub section: String,
+    pub name: String,
+    pub insns: Vec<Insn>,
+    pub relocs: Vec<Reloc>,
+}
+
+impl ObjProgram {
+    pub fn prog_type(&self) -> Option<ProgType> {
+        ProgType::from_section(&self.section)
+    }
+}
+
+/// A complete BPF object: maps + programs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Object {
+    pub maps: Vec<MapDef>,
+    pub progs: Vec<ObjProgram>,
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    out.extend_from_slice(&(b.len() as u16).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated object: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| "invalid utf8 string in object".to_string())
+    }
+}
+
+impl Object {
+    pub fn map(&self, name: &str) -> Option<&MapDef> {
+        self.maps.iter().find(|m| m.name == name)
+    }
+
+    pub fn prog(&self, name: &str) -> Option<&ObjProgram> {
+        self.progs.iter().find(|p| p.name == name)
+    }
+
+    pub fn prog_by_section(&self, section: &str) -> Option<&ObjProgram> {
+        self.progs.iter().find(|p| p.section == section)
+    }
+
+    /// Serialize to the binary container format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.maps.len() as u32).to_le_bytes());
+        for m in &self.maps {
+            put_str(&mut out, &m.name);
+            out.extend_from_slice(&m.kind.to_u32().to_le_bytes());
+            out.extend_from_slice(&m.key_size.to_le_bytes());
+            out.extend_from_slice(&m.value_size.to_le_bytes());
+            out.extend_from_slice(&m.max_entries.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.progs.len() as u32).to_le_bytes());
+        for p in &self.progs {
+            put_str(&mut out, &p.section);
+            put_str(&mut out, &p.name);
+            out.extend_from_slice(&(p.insns.len() as u32).to_le_bytes());
+            out.extend_from_slice(&insn::encode_program(&p.insns));
+            out.extend_from_slice(&(p.relocs.len() as u32).to_le_bytes());
+            for r in &p.relocs {
+                out.extend_from_slice(&r.insn_idx.to_le_bytes());
+                put_str(&mut out, &r.map_name);
+            }
+        }
+        out
+    }
+
+    /// Parse the binary container format.
+    pub fn from_bytes(buf: &[u8]) -> Result<Object, String> {
+        let mut r = Reader { buf, pos: 0 };
+        if r.take(4)? != MAGIC {
+            return Err("bad magic: not a BEF1 bpf object".to_string());
+        }
+        let nmaps = r.u32()? as usize;
+        if nmaps > 1024 {
+            return Err(format!("implausible map count {}", nmaps));
+        }
+        let mut maps = Vec::with_capacity(nmaps);
+        for _ in 0..nmaps {
+            let name = r.str()?;
+            let kind = MapKind::from_u32(r.u32()?).ok_or("unknown map kind")?;
+            let key_size = r.u32()?;
+            let value_size = r.u32()?;
+            let max_entries = r.u32()?;
+            let def = MapDef { name, kind, key_size, value_size, max_entries };
+            def.validate()?;
+            maps.push(def);
+        }
+        let nprogs = r.u32()? as usize;
+        if nprogs > 256 {
+            return Err(format!("implausible program count {}", nprogs));
+        }
+        let mut progs = Vec::with_capacity(nprogs);
+        for _ in 0..nprogs {
+            let section = r.str()?;
+            let name = r.str()?;
+            let ninsn = r.u32()? as usize;
+            if ninsn > 1 << 20 {
+                return Err(format!("implausible insn count {}", ninsn));
+            }
+            let bytes = r.take(ninsn * 8)?;
+            let insns = insn::decode_program(bytes)?;
+            let nreloc = r.u32()? as usize;
+            let mut relocs = Vec::with_capacity(nreloc);
+            for _ in 0..nreloc {
+                let insn_idx = r.u32()?;
+                let map_name = r.str()?;
+                if insn_idx as usize >= insns.len() {
+                    return Err(format!("reloc target {} out of range", insn_idx));
+                }
+                relocs.push(Reloc { insn_idx, map_name });
+            }
+            progs.push(ObjProgram { section, name, insns, relocs });
+        }
+        if r.pos != buf.len() {
+            return Err(format!("trailing garbage: {} bytes", buf.len() - r.pos));
+        }
+        Ok(Object { maps, progs })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_bytes())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Object, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+        Object::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpf::insn::*;
+
+    fn sample() -> Object {
+        let mut insns = vec![];
+        insns.extend(ld_map_fd(1, 0)); // imm patched at load; reloc below
+        insns.push(mov64_imm(0, 0));
+        insns.push(exit());
+        Object {
+            maps: vec![MapDef {
+                name: "latency_map".into(),
+                kind: MapKind::Array,
+                key_size: 4,
+                value_size: 16,
+                max_entries: 64,
+            }],
+            progs: vec![ObjProgram {
+                section: "tuner".into(),
+                name: "size_aware".into(),
+                insns,
+                relocs: vec![Reloc { insn_idx: 0, map_name: "latency_map".into() }],
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let o = sample();
+        let bytes = o.to_bytes();
+        let back = Object::from_bytes(&bytes).unwrap();
+        assert_eq!(o, back);
+    }
+
+    #[test]
+    fn bad_magic() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Object::from_bytes(&bytes).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample().to_bytes();
+        for cut in [3, 10, bytes.len() - 1] {
+            assert!(Object::from_bytes(&bytes[..cut]).is_err(), "cut at {}", cut);
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(Object::from_bytes(&bytes).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn reloc_out_of_range() {
+        let mut o = sample();
+        o.progs[0].relocs[0].insn_idx = 99;
+        let bytes = o.to_bytes();
+        assert!(Object::from_bytes(&bytes).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn accessors() {
+        let o = sample();
+        assert!(o.map("latency_map").is_some());
+        assert!(o.map("nope").is_none());
+        assert_eq!(o.prog("size_aware").unwrap().section, "tuner");
+        assert!(o.prog_by_section("tuner").is_some());
+        assert_eq!(
+            o.prog("size_aware").unwrap().prog_type(),
+            Some(crate::bpf::helpers::ProgType::Tuner)
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let o = sample();
+        let dir = std::env::temp_dir().join("ncclbpf_obj_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bpfo");
+        o.save(&p).unwrap();
+        let back = Object::load(&p).unwrap();
+        assert_eq!(o, back);
+    }
+}

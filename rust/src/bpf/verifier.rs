@@ -1,0 +1,1622 @@
+//! Load-time static verifier — the safety core of NCCLbpf (§3, T1).
+//!
+//! A PREVAIL-inspired abstract interpreter over the eBPF bytecode,
+//! implemented kernel-style: depth-first path enumeration with branch
+//! pruning and a complexity budget. Register state tracks pointer
+//! provenance (ctx / stack / map value / map handle) and unsigned value
+//! intervals for scalars; the stack is tracked byte-wise with spilled
+//! register recovery.
+//!
+//! The verifier rejects exactly the bug classes the paper's §5.2 suite
+//! exercises:
+//!
+//! 1. **null-pointer dereference** — `bpf_map_lookup_elem` returns
+//!    `map_value_or_null`; dereference before a `!= NULL` branch is an
+//!    error (same message shape as the paper's example).
+//! 2. **out-of-bounds access** — map-value / ctx / stack accesses are
+//!    interval-checked against the region size.
+//! 3. **illegal helper** — per-program-type whitelist ([`helpers`]).
+//! 4. **stack overflow** — accesses below `r10 - 512`.
+//! 5. **unbounded loop** — complexity budget + per-instruction visit
+//!    cap; bounded loops verify by unrolling with branch pruning.
+//! 6. **input-field write** — ctx write ranges ([`CtxLayout`]) make
+//!    policy inputs read-only and outputs write-only.
+//! 7. **division by zero** — divisor intervals containing 0 are
+//!    rejected unless dominated by a `!= 0` check.
+
+use super::helpers::{self, ArgType, ProgType, RetType};
+use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
+use super::maps::MapDef;
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+
+/// Context memory layout: which byte ranges a program may read / write.
+/// This is how the host enforces "policies only read input fields and
+/// write output fields" (§3.3).
+#[derive(Clone, Debug, Default)]
+pub struct CtxLayout {
+    pub size: u32,
+    /// readable (start, len) ranges
+    pub read: Vec<(u32, u32)>,
+    /// writable (start, len) ranges
+    pub write: Vec<(u32, u32)>,
+}
+
+impl CtxLayout {
+    fn covered(ranges: &[(u32, u32)], start: i64, width: u64) -> bool {
+        if start < 0 {
+            return false;
+        }
+        let (s, e) = (start as u64, start as u64 + width);
+        ranges
+            .iter()
+            .any(|&(rs, rl)| s >= rs as u64 && e <= rs as u64 + rl as u64)
+    }
+    pub fn can_read(&self, off: i64, width: u64) -> bool {
+        Self::covered(&self.read, off, width)
+    }
+    pub fn can_write(&self, off: i64, width: u64) -> bool {
+        Self::covered(&self.write, off, width)
+    }
+}
+
+/// Verification failure with the offending instruction index and an
+/// actionable message (§5.2: "rejected at load time with actionable
+/// error messages").
+#[derive(Clone, Debug)]
+pub struct VerifyError {
+    pub insn: usize,
+    pub message: String,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "VERIFIER REJECT: {} (insn {})", self.message, self.insn)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Successful verification summary.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyInfo {
+    /// map ids referenced via lddw MAP_FD
+    pub used_maps: Vec<u32>,
+    /// deepest stack byte used (positive number of bytes below r10)
+    pub stack_depth: u32,
+    /// abstract instructions processed (complexity)
+    pub insns_processed: u64,
+    /// distinct helper ids called
+    pub helpers_used: Vec<i32>,
+}
+
+/// total abstract instructions before declaring the program too complex
+const COMPLEXITY_BUDGET: u64 = 200_000;
+/// per-instruction visit cap: exceeding it indicates an unbounded loop
+const VISIT_CAP: u32 = 20_000;
+const STACK: usize = STACK_SIZE as usize;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Reg {
+    Uninit,
+    /// unsigned interval [umin, umax]
+    Scalar { umin: u64, umax: u64 },
+    CtxPtr { off: i64 },
+    /// offset relative to r10 (0 = frame top); valid bytes are [-512, 0)
+    StackPtr { off: i64 },
+    /// verified non-null pointer into map value storage
+    MapValue { map_id: u32, off: i64, vsize: u32 },
+    /// result of bpf_map_lookup_elem before the null check
+    MapValueOrNull { map_id: u32, vsize: u32, nid: u32 },
+    /// map handle loaded via lddw map[id]
+    MapPtr { map_id: u32 },
+}
+
+impl Reg {
+    fn scalar_const(v: u64) -> Reg {
+        Reg::Scalar { umin: v, umax: v }
+    }
+    fn scalar_unknown() -> Reg {
+        Reg::Scalar { umin: 0, umax: u64::MAX }
+    }
+    fn is_pointer(&self) -> bool {
+        matches!(
+            self,
+            Reg::CtxPtr { .. }
+                | Reg::StackPtr { .. }
+                | Reg::MapValue { .. }
+                | Reg::MapValueOrNull { .. }
+                | Reg::MapPtr { .. }
+        )
+    }
+    fn type_name(&self) -> &'static str {
+        match self {
+            Reg::Uninit => "uninitialized",
+            Reg::Scalar { .. } => "scalar",
+            Reg::CtxPtr { .. } => "ptr_to_ctx",
+            Reg::StackPtr { .. } => "ptr_to_stack",
+            Reg::MapValue { .. } => "ptr_to_map_value",
+            Reg::MapValueOrNull { .. } => "map_value_or_null",
+            Reg::MapPtr { .. } => "const_map_ptr",
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum StackByte {
+    Uninit,
+    Data,
+    /// part of an 8-byte register spill (slot key in `spills`)
+    Spill,
+}
+
+#[derive(Clone)]
+struct State {
+    regs: [Reg; NREGS],
+    stack: [StackByte; STACK],
+    /// 8-byte-aligned spill slots: offset (negative, multiple of 8) -> reg
+    spills: BTreeMap<i64, Reg>,
+}
+
+impl State {
+    fn initial(has_ctx: bool) -> State {
+        let mut regs = [Reg::Uninit; NREGS];
+        if has_ctx {
+            regs[1] = Reg::CtxPtr { off: 0 };
+        }
+        regs[10] = Reg::StackPtr { off: 0 };
+        State { regs, stack: [StackByte::Uninit; STACK], spills: BTreeMap::new() }
+    }
+
+    /// stack byte index for r10-relative offset `off` in [-512, 0)
+    fn sidx(off: i64) -> usize {
+        (off + STACK_SIZE) as usize
+    }
+}
+
+pub struct Verifier<'a> {
+    insns: &'a [Insn],
+    prog_type: ProgType,
+    ctx: &'a CtxLayout,
+    maps: &'a HashMap<u32, MapDef>,
+    visit_count: Vec<u32>,
+    processed: u64,
+    next_nid: u32,
+    info: VerifyInfo,
+}
+
+type VResult<T> = Result<T, VerifyError>;
+
+impl<'a> Verifier<'a> {
+    pub fn new(
+        insns: &'a [Insn],
+        prog_type: ProgType,
+        ctx: &'a CtxLayout,
+        maps: &'a HashMap<u32, MapDef>,
+    ) -> Verifier<'a> {
+        Verifier {
+            insns,
+            prog_type,
+            ctx,
+            maps,
+            visit_count: vec![0; insns.len()],
+            processed: 0,
+            next_nid: 1,
+            info: VerifyInfo::default(),
+        }
+    }
+
+    fn err(&self, insn: usize, message: String) -> VerifyError {
+        VerifyError { insn, message }
+    }
+
+    /// Structural pre-checks, then abstract interpretation of all paths.
+    pub fn verify(mut self) -> VResult<VerifyInfo> {
+        if self.insns.is_empty() {
+            return Err(self.err(0, "empty program".into()));
+        }
+        if self.insns.len() > 65536 {
+            return Err(self.err(0, format!("program too large: {} insns", self.insns.len())));
+        }
+        self.check_structure()?;
+
+        // DFS over paths with pruned branch states.
+        let mut worklist: Vec<(usize, State)> = vec![(0, State::initial(true))];
+        while let Some((mut pc, mut st)) = worklist.pop() {
+            loop {
+                if pc >= self.insns.len() {
+                    return Err(self.err(
+                        pc.saturating_sub(1),
+                        "control flow falls off the end of the program".into(),
+                    ));
+                }
+                self.processed += 1;
+                if self.processed > COMPLEXITY_BUDGET {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "program too complex: exceeded {} processed instructions \
+                             (possibly unbounded loop)",
+                            COMPLEXITY_BUDGET
+                        ),
+                    ));
+                }
+                self.visit_count[pc] += 1;
+                if self.visit_count[pc] > VISIT_CAP {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "possibly unbounded loop: instruction revisited more than {} \
+                             times without making verification progress",
+                            VISIT_CAP
+                        ),
+                    ));
+                }
+
+                match self.step(pc, &mut st, &mut worklist)? {
+                    Next::Fallthrough(n) => pc = n,
+                    Next::Exit => break,
+                }
+            }
+        }
+        self.info.insns_processed = self.processed;
+        self.info.used_maps.sort_unstable();
+        self.info.used_maps.dedup();
+        self.info.helpers_used.sort_unstable();
+        self.info.helpers_used.dedup();
+        Ok(self.info)
+    }
+
+    /// Jump-target and lddw structural validation.
+    fn check_structure(&self) -> VResult<()> {
+        let n = self.insns.len();
+        let mut is_lddw_hi = vec![false; n];
+        let mut i = 0;
+        while i < n {
+            let ins = &self.insns[i];
+            if ins.is_lddw() {
+                if i + 1 >= n {
+                    return Err(self.err(i, "lddw missing second slot".into()));
+                }
+                let hi = &self.insns[i + 1];
+                if hi.opcode != 0 || hi.dst != 0 || hi.src != 0 || hi.off != 0 {
+                    return Err(self.err(i + 1, "malformed lddw second slot".into()));
+                }
+                is_lddw_hi[i + 1] = true;
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        for (i, ins) in self.insns.iter().enumerate() {
+            if is_lddw_hi[i] {
+                continue;
+            }
+            let cls = ins.class();
+            if cls == class::JMP || cls == class::JMP32 {
+                let op = ins.op();
+                if op == jmp::CALL || op == jmp::EXIT {
+                    continue;
+                }
+                let tgt = i as i64 + 1 + ins.off as i64;
+                if tgt < 0 || tgt as usize >= n {
+                    return Err(self.err(i, format!("jump out of range: target {}", tgt)));
+                }
+                if is_lddw_hi[tgt as usize] {
+                    return Err(self
+                        .err(i, format!("jump into the middle of lddw at insn {}", tgt)));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn reg(&self, st: &State, r: u8, at: usize) -> VResult<Reg> {
+        if r as usize >= NREGS {
+            return Err(self.err(at, format!("invalid register R{}", r)));
+        }
+        let v = st.regs[r as usize];
+        if v == Reg::Uninit {
+            return Err(self.err(at, format!("R{} is uninitialized; read of uninit register", r)));
+        }
+        Ok(v)
+    }
+
+    fn set_reg(&self, st: &mut State, r: u8, v: Reg, at: usize) -> VResult<()> {
+        if r == 10 {
+            return Err(self.err(at, "R10 (frame pointer) is read-only".into()));
+        }
+        if r as usize >= NREGS {
+            return Err(self.err(at, format!("invalid register R{}", r)));
+        }
+        st.regs[r as usize] = v;
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        pc: usize,
+        st: &mut State,
+        worklist: &mut Vec<(usize, State)>,
+    ) -> VResult<Next> {
+        let ins = self.insns[pc];
+        match ins.class() {
+            class::ALU | class::ALU64 => {
+                self.alu(pc, &ins, st)?;
+                Ok(Next::Fallthrough(pc + 1))
+            }
+            class::LD => self.lddw(pc, &ins, st),
+            class::LDX => {
+                self.load(pc, &ins, st)?;
+                Ok(Next::Fallthrough(pc + 1))
+            }
+            class::ST | class::STX => {
+                self.store(pc, &ins, st)?;
+                Ok(Next::Fallthrough(pc + 1))
+            }
+            class::JMP | class::JMP32 => self.jump(pc, &ins, st, worklist),
+            c => Err(self.err(pc, format!("unknown instruction class {:#x}", c))),
+        }
+    }
+
+    // -- ALU ---------------------------------------------------------------
+
+    fn alu(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
+        let op = ins.op();
+        let is64 = ins.class() == class::ALU64;
+
+        // MOV is special: it can copy pointers.
+        if op == alu::MOV {
+            let v = if ins.src_flag() == src::X {
+                let s = self.reg(st, ins.src, pc)?;
+                if !is64 {
+                    // 32-bit mov truncates: pointers lose provenance
+                    match s {
+                        Reg::Scalar { umin, umax } => {
+                            if umin == umax {
+                                Reg::scalar_const(umin as u32 as u64)
+                            } else {
+                                Reg::Scalar { umin: 0, umax: u32::MAX as u64 }
+                            }
+                        }
+                        _ => {
+                            return Err(self.err(
+                                pc,
+                                format!("32-bit mov of pointer R{} leaks/truncates it", ins.src),
+                            ))
+                        }
+                    }
+                } else {
+                    s
+                }
+            } else if is64 {
+                Reg::scalar_const(ins.imm as i64 as u64)
+            } else {
+                Reg::scalar_const(ins.imm as u32 as u64)
+            };
+            return self.set_reg(st, ins.dst, v, pc);
+        }
+
+        if op == alu::NEG {
+            let d = self.reg(st, ins.dst, pc)?;
+            if d.is_pointer() {
+                return Err(self.err(pc, format!("arithmetic NEG on pointer R{}", ins.dst)));
+            }
+            return self.set_reg(st, ins.dst, Reg::scalar_unknown(), pc);
+        }
+
+        if op == alu::END {
+            let d = self.reg(st, ins.dst, pc)?;
+            if d.is_pointer() {
+                return Err(self.err(pc, format!("byte-swap on pointer R{}", ins.dst)));
+            }
+            return self.set_reg(st, ins.dst, Reg::scalar_unknown(), pc);
+        }
+
+        let dstv = self.reg(st, ins.dst, pc)?;
+        let srcv: Reg = if ins.src_flag() == src::X {
+            self.reg(st, ins.src, pc)?
+        } else if is64 {
+            Reg::scalar_const(ins.imm as i64 as u64)
+        } else {
+            Reg::scalar_const(ins.imm as u32 as u64)
+        };
+
+        // Pointer arithmetic: only ADD/SUB of a scalar onto a pointer,
+        // and only in 64-bit mode.
+        if dstv.is_pointer() || srcv.is_pointer() {
+            if !is64 {
+                return Err(self.err(pc, "32-bit arithmetic on pointer".into()));
+            }
+            if srcv.is_pointer() && dstv.is_pointer() {
+                return Err(self.err(pc, "arithmetic between two pointers".into()));
+            }
+            if matches!(dstv, Reg::MapValueOrNull { .. })
+                || matches!(srcv, Reg::MapValueOrNull { .. })
+            {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} is a pointer to map_value_or_null; must check != NULL before \
+                         arithmetic",
+                        if dstv.is_pointer() { ins.dst } else { ins.src }
+                    ),
+                ));
+            }
+            if matches!(dstv, Reg::MapPtr { .. }) || matches!(srcv, Reg::MapPtr { .. }) {
+                return Err(self.err(pc, "arithmetic on map handle".into()));
+            }
+            if op != alu::ADD && op != alu::SUB {
+                return Err(self.err(
+                    pc,
+                    format!("pointer arithmetic only supports add/sub (op {:#x})", op),
+                ));
+            }
+            let (ptr, scalar, ptr_is_dst) = if dstv.is_pointer() {
+                (dstv, srcv, true)
+            } else {
+                (srcv, dstv, false)
+            };
+            if op == alu::SUB && !ptr_is_dst {
+                return Err(self.err(pc, "cannot subtract pointer from scalar".into()));
+            }
+            let Reg::Scalar { umin, umax } = scalar else { unreachable!() };
+            if umin != umax {
+                // variable offset: allowed only if the later access check
+                // covers the whole range — we fold the range into the
+                // pointer offset interval by rejecting ranges > 4 KiB to
+                // keep analysis exact.
+                if umax - umin > 4096 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "pointer arithmetic with unbounded scalar (range {}..{}); \
+                             bound it with a comparison first",
+                            umin, umax
+                        ),
+                    ));
+                }
+            }
+            // We conservatively use the *worst-case* offsets for later
+            // bounds checks by storing min/max in two passes: for exact
+            // tracking we keep only constant adjustments precise.
+            let delta_min = if op == alu::ADD { umin as i64 } else { -(umax as i64) };
+            let delta_max = if op == alu::ADD { umax as i64 } else { -(umin as i64) };
+            let moved = match ptr {
+                Reg::CtxPtr { off } => {
+                    if delta_min != delta_max {
+                        return Err(self.err(
+                            pc,
+                            "variable offset into ctx is not allowed".into(),
+                        ));
+                    }
+                    Reg::CtxPtr { off: off + delta_min }
+                }
+                Reg::StackPtr { off } => {
+                    if delta_min != delta_max {
+                        return Err(self.err(
+                            pc,
+                            "variable offset into stack is not allowed".into(),
+                        ));
+                    }
+                    Reg::StackPtr { off: off + delta_min }
+                }
+                Reg::MapValue { map_id, off, vsize } => {
+                    // keep the worst case offset; access check uses width
+                    let _ = delta_max;
+                    Reg::MapValue { map_id, off: off + delta_min, vsize }
+                }
+                _ => unreachable!(),
+            };
+            // For map values with a range, re-check both extremes by
+            // encoding the max into a second shadow check at access time:
+            // we choose the conservative (larger) offset for positive
+            // ranges since widths are checked against vsize.
+            let final_reg = if delta_min != delta_max {
+                match moved {
+                    Reg::MapValue { map_id, off, vsize } => Reg::MapValue {
+                        map_id,
+                        off: off.max(off + (delta_max - delta_min)),
+                        vsize,
+                    },
+                    other => other,
+                }
+            } else {
+                moved
+            };
+            return self.set_reg(st, ins.dst, final_reg, pc);
+        }
+
+        // scalar-scalar ALU
+        let (Reg::Scalar { umin: a0, umax: a1 }, Reg::Scalar { umin: b0, umax: b1 }) =
+            (dstv, srcv)
+        else {
+            unreachable!()
+        };
+
+        if op == alu::DIV || op == alu::MOD {
+            if b0 == 0 {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "division by zero possible: divisor {} may be 0 \
+                         (guard it with a != 0 check)",
+                        if ins.src_flag() == src::X {
+                            format!("R{}", ins.src)
+                        } else {
+                            "immediate".into()
+                        }
+                    ),
+                ));
+            }
+        }
+
+        let result = if a0 == a1 && b0 == b1 {
+            // constant folding
+            let (a, b) = (a0, b0);
+            let v64 = match op {
+                alu::ADD => a.wrapping_add(b),
+                alu::SUB => a.wrapping_sub(b),
+                alu::MUL => a.wrapping_mul(b),
+                alu::DIV => a / b,
+                alu::MOD => a % b,
+                alu::OR => a | b,
+                alu::AND => a & b,
+                alu::XOR => a ^ b,
+                alu::LSH => a.wrapping_shl(b as u32 & 63),
+                alu::RSH => a.wrapping_shr(b as u32 & 63),
+                alu::ARSH => ((a as i64) >> (b & 63)) as u64,
+                _ => return Err(self.err(pc, format!("unknown ALU op {:#x}", op))),
+            };
+            let v = if is64 { v64 } else { v64 as u32 as u64 };
+            Reg::scalar_const(v)
+        } else {
+            // interval arithmetic (conservative)
+            let iv = match op {
+                alu::ADD => {
+                    let (lo, o1) = a0.overflowing_add(b0);
+                    let (hi, o2) = a1.overflowing_add(b1);
+                    if o1 || o2 {
+                        Reg::scalar_unknown()
+                    } else {
+                        Reg::Scalar { umin: lo, umax: hi }
+                    }
+                }
+                alu::SUB => {
+                    if a0 >= b1 {
+                        Reg::Scalar { umin: a0 - b1, umax: a1 - b0 }
+                    } else {
+                        Reg::scalar_unknown()
+                    }
+                }
+                alu::AND => {
+                    // x & y <= min(xmax, ymax)
+                    Reg::Scalar { umin: 0, umax: a1.min(b1) }
+                }
+                alu::MOD => {
+                    // x % y < ymax (b0 > 0 checked above)
+                    Reg::Scalar { umin: 0, umax: b1.saturating_sub(1) }
+                }
+                alu::DIV => Reg::Scalar { umin: a0 / b1.max(1), umax: a1 / b0.max(1) },
+                alu::RSH => {
+                    if b0 == b1 && b0 < 64 {
+                        Reg::Scalar { umin: a0 >> b0, umax: a1 >> b0 }
+                    } else {
+                        Reg::Scalar { umin: 0, umax: a1 }
+                    }
+                }
+                alu::LSH | alu::MUL => {
+                    let hi = a1.checked_mul(if op == alu::MUL { b1 } else { 1u64 << (b1.min(63)) });
+                    match hi {
+                        Some(h) if op == alu::MUL => Reg::Scalar { umin: a0.saturating_mul(b0), umax: h },
+                        Some(h) => Reg::Scalar { umin: a0 << b0.min(63), umax: h },
+                        None => Reg::scalar_unknown(),
+                    }
+                }
+                alu::OR | alu::XOR | alu::ARSH => Reg::scalar_unknown(),
+                _ => return Err(self.err(pc, format!("unknown ALU op {:#x}", op))),
+            };
+            if is64 {
+                iv
+            } else {
+                match iv {
+                    Reg::Scalar { umax, .. } if umax <= u32::MAX as u64 => iv,
+                    _ => Reg::Scalar { umin: 0, umax: u32::MAX as u64 },
+                }
+            }
+        };
+        self.set_reg(st, ins.dst, result, pc)
+    }
+
+    // -- lddw (incl. map references) ----------------------------------------
+
+    fn lddw(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<Next> {
+        if !ins.is_lddw() {
+            return Err(self.err(pc, format!("unsupported LD opcode {:#x}", ins.opcode)));
+        }
+        let hi = self.insns[pc + 1].imm as u32 as u64;
+        let lo = ins.imm as u32 as u64;
+        let v = lo | (hi << 32);
+        let reg = match ins.src {
+            0 => Reg::scalar_const(v),
+            pseudo::MAP_FD => {
+                let map_id = ins.imm as u32;
+                if !self.maps.contains_key(&map_id) {
+                    return Err(self.err(
+                        pc,
+                        format!("unknown map id {} (map not declared in object)", map_id),
+                    ));
+                }
+                self.info.used_maps.push(map_id);
+                Reg::MapPtr { map_id }
+            }
+            other => {
+                return Err(self.err(pc, format!("unsupported lddw pseudo src {}", other)));
+            }
+        };
+        self.set_reg(st, ins.dst, reg, pc)?;
+        Ok(Next::Fallthrough(pc + 2))
+    }
+
+    // -- memory -------------------------------------------------------------
+
+    fn check_stack_range(&self, pc: usize, off: i64, width: u64) -> VResult<()> {
+        if off < -STACK_SIZE || off + width as i64 > 0 {
+            return Err(self.err(
+                pc,
+                format!(
+                    "stack access out of bounds: r10{:+} width {} (valid range is \
+                     [r10-512, r10)) — stack overflow",
+                    off, width
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
+        let base = self.reg(st, ins.src, pc)?;
+        let width = ins.access_width();
+        let off = ins.off as i64;
+        let loaded = match base {
+            Reg::CtxPtr { off: po } => {
+                let a = po + off;
+                if !self.ctx.can_read(a, width) {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "invalid ctx read at offset {} width {} (ctx size {}, field \
+                             not readable)",
+                            a, width, self.ctx.size
+                        ),
+                    ));
+                }
+                Reg::scalar_unknown()
+            }
+            Reg::StackPtr { off: po } => {
+                let a = po + off;
+                self.check_stack_range(pc, a, width)?;
+                // spill restore: 8-byte aligned full-width load of a spill
+                if width == 8 && a % 8 == 0 {
+                    if let Some(&sp) = st.spills.get(&a) {
+                        self.set_reg(st, ins.dst, sp, pc)?;
+                        return Ok(());
+                    }
+                }
+                for b in 0..width as i64 {
+                    if st.stack[State::sidx(a + b)] == StackByte::Uninit {
+                        return Err(self.err(
+                            pc,
+                            format!("invalid read of uninitialized stack at r10{:+}", a + b),
+                        ));
+                    }
+                }
+                Reg::scalar_unknown()
+            }
+            Reg::MapValue { off: po, vsize, .. } => {
+                let a = po + off;
+                if a < 0 || (a as u64 + width) > vsize as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "map value access out of bounds: offset {} width {} exceeds \
+                             value_size {}",
+                            a, width, vsize
+                        ),
+                    ));
+                }
+                Reg::scalar_unknown()
+            }
+            Reg::MapValueOrNull { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} is a pointer to map_value_or_null; must check != NULL before \
+                         dereference",
+                        ins.src
+                    ),
+                ));
+            }
+            Reg::Scalar { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!("R{} is a scalar; cannot dereference (possible NULL deref)", ins.src),
+                ));
+            }
+            other => {
+                return Err(self
+                    .err(pc, format!("cannot load through R{} ({})", ins.src, other.type_name())));
+            }
+        };
+        self.set_reg(st, ins.dst, loaded, pc)
+    }
+
+    fn store(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
+        if ins.mode() == mode::ATOMIC {
+            return Err(self.err(pc, "atomic memory ops not supported".into()));
+        }
+        let base = self.reg(st, ins.dst, pc)?;
+        let width = ins.access_width();
+        let off = ins.off as i64;
+        // value operand
+        let val: Reg = if ins.class() == class::STX {
+            self.reg(st, ins.src, pc)?
+        } else {
+            Reg::scalar_const(ins.imm as i64 as u64)
+        };
+
+        match base {
+            Reg::CtxPtr { off: po } => {
+                let a = po + off;
+                if val.is_pointer() {
+                    return Err(self.err(pc, "storing a pointer into ctx is not allowed".into()));
+                }
+                if !self.ctx.can_write(a, width) {
+                    let readable = self.ctx.can_read(a, width);
+                    return Err(self.err(
+                        pc,
+                        if readable {
+                            format!(
+                                "write to read-only context field at offset {} (input \
+                                 fields are read-only)",
+                                a
+                            )
+                        } else {
+                            format!("invalid ctx write at offset {} width {}", a, width)
+                        },
+                    ));
+                }
+            }
+            Reg::StackPtr { off: po } => {
+                let a = po + off;
+                self.check_stack_range(pc, a, width)?;
+                if width == 8 && a % 8 == 0 {
+                    // full-slot store: track the precise register state
+                    // (pointer provenance AND scalar intervals — interval
+                    // tracking through spills is what lets bounded loops
+                    // over stack-resident counters verify by unrolling)
+                    st.spills.insert(a, val);
+                    for b in 0..8 {
+                        st.stack[State::sidx(a + b)] = StackByte::Spill;
+                    }
+                } else {
+                    if val.is_pointer() {
+                        return Err(self.err(
+                            pc,
+                            "partial/unaligned pointer spill to stack is not allowed".into(),
+                        ));
+                    }
+                    // a data write invalidates any overlapping spill
+                    let slot = a - a.rem_euclid(8);
+                    st.spills.remove(&slot);
+                    if (a + width as i64 - 1) - (a + width as i64 - 1).rem_euclid(8) != slot {
+                        st.spills.remove(&(slot + 8));
+                    }
+                    for b in 0..width as i64 {
+                        st.stack[State::sidx(a + b)] = StackByte::Data;
+                    }
+                }
+                let depth = (-(a)) as u32;
+                if depth > self.info.stack_depth {
+                    self.info.stack_depth = depth;
+                }
+            }
+            Reg::MapValue { off: po, vsize, .. } => {
+                let a = po + off;
+                if val.is_pointer() {
+                    return Err(self
+                        .err(pc, "storing a pointer into a map value is not allowed".into()));
+                }
+                if a < 0 || (a as u64 + width) > vsize as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "map value access out of bounds: offset {} width {} exceeds \
+                             value_size {}",
+                            a, width, vsize
+                        ),
+                    ));
+                }
+            }
+            Reg::MapValueOrNull { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} is a pointer to map_value_or_null; must check != NULL before \
+                         dereference",
+                        ins.dst
+                    ),
+                ));
+            }
+            other => {
+                return Err(self.err(
+                    pc,
+                    format!("cannot store through R{} ({})", ins.dst, other.type_name()),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // -- jumps / calls / exit -------------------------------------------------
+
+    fn jump(
+        &mut self,
+        pc: usize,
+        ins: &Insn,
+        st: &mut State,
+        worklist: &mut Vec<(usize, State)>,
+    ) -> VResult<Next> {
+        let op = ins.op();
+        if op == jmp::EXIT {
+            match st.regs[0] {
+                Reg::Scalar { .. } => Ok(Next::Exit),
+                Reg::Uninit => Err(self.err(pc, "R0 not set before exit".into())),
+                _ => Err(self.err(pc, "R0 must be a scalar at exit (pointer leak)".into())),
+            }
+        } else if op == jmp::CALL {
+            self.call_helper(pc, ins, st)?;
+            Ok(Next::Fallthrough(pc + 1))
+        } else if op == jmp::JA {
+            Ok(Next::Fallthrough((pc as i64 + 1 + ins.off as i64) as usize))
+        } else {
+            let tgt = (pc as i64 + 1 + ins.off as i64) as usize;
+            let dstv = self.reg(st, ins.dst, pc)?;
+            let srcv: Option<Reg> = if ins.src_flag() == src::X {
+                Some(self.reg(st, ins.src, pc)?)
+            } else {
+                None
+            };
+
+            // Pointer comparisons: only {==, !=} against 0 for the
+            // null-check pattern, or pointer-pointer equality.
+            if dstv.is_pointer() {
+                let against_zero = srcv.is_none() && ins.imm == 0;
+                if against_zero && (op == jmp::JEQ || op == jmp::JNE) {
+                    if let Reg::MapValueOrNull { map_id, vsize, nid } = dstv {
+                        // split: one side non-null, other side null
+                        let mut taken = st.clone();
+                        let mut fall = st.clone();
+                        let (null_side, ok_side) = if op == jmp::JEQ {
+                            (&mut taken, &mut fall)
+                        } else {
+                            (&mut fall, &mut taken)
+                        };
+                        promote_nid(ok_side, nid, Reg::MapValue { map_id, off: 0, vsize });
+                        promote_nid(null_side, nid, Reg::scalar_const(0));
+                        worklist.push((tgt, taken));
+                        *st = fall;
+                        return Ok(Next::Fallthrough(pc + 1));
+                    }
+                    // other pointers are never null: branch statically
+                    let always = op == jmp::JNE;
+                    return Ok(Next::Fallthrough(if always { tgt } else { pc + 1 }));
+                }
+                if srcv.map(|s| s.is_pointer()).unwrap_or(false)
+                    && (op == jmp::JEQ || op == jmp::JNE)
+                {
+                    // pointer-pointer eq: explore both
+                    worklist.push((tgt, st.clone()));
+                    return Ok(Next::Fallthrough(pc + 1));
+                }
+                return Err(self.err(
+                    pc,
+                    format!("invalid comparison on pointer R{} ({})", ins.dst, dstv.type_name()),
+                ));
+            }
+            if let Some(s) = srcv {
+                if s.is_pointer() {
+                    return Err(self.err(
+                        pc,
+                        format!("invalid comparison on pointer R{} ({})", ins.src, s.type_name()),
+                    ));
+                }
+            }
+
+            // scalar conditional: evaluate / prune
+            let Reg::Scalar { umin: a0, umax: a1 } = dstv else { unreachable!() };
+            let (b0, b1) = match srcv {
+                Some(Reg::Scalar { umin, umax }) => (umin, umax),
+                None => {
+                    let k = if ins.class() == class::JMP {
+                        ins.imm as i64 as u64
+                    } else {
+                        ins.imm as u32 as u64
+                    };
+                    (k, k)
+                }
+                _ => unreachable!(),
+            };
+
+            let is32 = ins.class() == class::JMP32;
+            let (a0, a1, b0, b1) = if is32 {
+                // truncate intervals conservatively for 32-bit compares
+                if a1 <= u32::MAX as u64 && b1 <= u32::MAX as u64 {
+                    (a0, a1, b0, b1)
+                } else {
+                    (0, u32::MAX as u64, b0.min(u32::MAX as u64), b1.min(u32::MAX as u64))
+                }
+            } else {
+                (a0, a1, b0, b1)
+            };
+
+            match branch_decision(op, a0, a1, b0, b1) {
+                Some(true) => Ok(Next::Fallthrough(tgt)),
+                Some(false) => Ok(Next::Fallthrough(pc + 1)),
+                None => {
+                    // both possible: prune const-compare intervals
+                    let mut taken = st.clone();
+                    if ins.src_flag() == src::K && !is32 {
+                        let k = b0;
+                        prune(&mut taken, ins.dst, op, k, true);
+                        prune(st, ins.dst, op, k, false);
+                    }
+                    worklist.push((tgt, taken));
+                    Ok(Next::Fallthrough(pc + 1))
+                }
+            }
+        }
+    }
+
+    fn call_helper(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
+        let hid = ins.imm;
+        let spec = helpers::spec_by_id(hid)
+            .ok_or_else(|| self.err(pc, format!("unknown helper function id {}", hid)))?;
+        if !helpers::is_allowed(self.prog_type, hid) {
+            return Err(self.err(
+                pc,
+                format!(
+                    "illegal helper: {} (id {}) is not in the {:?} program whitelist",
+                    spec.name, hid, self.prog_type
+                ),
+            ));
+        }
+        self.info.helpers_used.push(hid);
+
+        // the map referenced by a ConstMapPtr arg, for key/value sizing
+        let mut call_map: Option<&MapDef> = None;
+        let mut call_map_id: Option<u32> = None;
+        for (i, at) in spec.args.iter().enumerate() {
+            let r = (i + 1) as u8;
+            let v = self.reg(st, r, pc).map_err(|e| {
+                self.err(pc, format!("{} arg{}: {}", spec.name, i + 1, e.message))
+            })?;
+            match at {
+                ArgType::ConstMapPtr => {
+                    let Reg::MapPtr { map_id } = v else {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{} must be a map handle (lddw rN, map[..]), got {}",
+                                spec.name,
+                                i + 1,
+                                v.type_name()
+                            ),
+                        ));
+                    };
+                    call_map = self.maps.get(&map_id);
+                    call_map_id = Some(map_id);
+                }
+                ArgType::MapKey | ArgType::MapValue => {
+                    let need = {
+                        let md = call_map.ok_or_else(|| {
+                            self.err(pc, format!("{}: map arg must precede key/value", spec.name))
+                        })?;
+                        if *at == ArgType::MapKey {
+                            md.key_size as u64
+                        } else {
+                            md.value_size as u64
+                        }
+                    };
+                    self.check_mem_arg(pc, spec.name, i + 1, v, need, st)?;
+                }
+                ArgType::Scalar => {
+                    if v.is_pointer() {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{} must be a scalar, got {}",
+                                spec.name,
+                                i + 1,
+                                v.type_name()
+                            ),
+                        ));
+                    }
+                }
+                ArgType::MemLen => {
+                    // pointer + length in the following scalar arg
+                    let lenv = self.reg(st, (i + 2) as u8, pc)?;
+                    let Reg::Scalar { umax, .. } = lenv else {
+                        return Err(self.err(
+                            pc,
+                            format!("{} length arg must be a scalar", spec.name),
+                        ));
+                    };
+                    self.check_mem_arg(pc, spec.name, i + 1, v, umax.min(512), st)?;
+                }
+            }
+        }
+
+        // clobber caller-saved registers, set R0 per return type
+        for r in 1..=5 {
+            st.regs[r] = Reg::Uninit;
+        }
+        st.regs[0] = match spec.ret {
+            RetType::Scalar => Reg::scalar_unknown(),
+            RetType::MapValueOrNull => {
+                let md = call_map.ok_or_else(|| {
+                    self.err(pc, format!("{}: missing map arg for map-value return", spec.name))
+                })?;
+                let nid = self.next_nid;
+                self.next_nid += 1;
+                Reg::MapValueOrNull {
+                    map_id: call_map_id.unwrap_or(0),
+                    vsize: md.value_size,
+                    nid,
+                }
+            }
+        };
+        Ok(())
+    }
+
+    fn check_mem_arg(
+        &self,
+        pc: usize,
+        helper: &str,
+        argno: usize,
+        v: Reg,
+        need: u64,
+        st: &State,
+    ) -> VResult<()> {
+        match v {
+            Reg::StackPtr { off } => {
+                if off < -STACK_SIZE || off + need as i64 > 0 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "{} arg{}: stack buffer r10{:+} of {} bytes out of bounds",
+                            helper, argno, off, need
+                        ),
+                    ));
+                }
+                for b in 0..need as i64 {
+                    if st.stack[State::sidx(off + b)] == StackByte::Uninit {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{}: stack bytes at r10{:+} not initialized \
+                                 ({} bytes required)",
+                                helper,
+                                argno,
+                                off + b,
+                                need
+                            ),
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            Reg::MapValue { off, vsize, .. } => {
+                if off < 0 || off as u64 + need > vsize as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "{} arg{}: map-value buffer out of bounds (off {} need {} \
+                             vsize {})",
+                            helper, argno, off, need, vsize
+                        ),
+                    ));
+                }
+                Ok(())
+            }
+            Reg::MapValueOrNull { .. } => Err(self.err(
+                pc,
+                format!(
+                    "{} arg{}: pointer may be NULL; must check != NULL first",
+                    helper, argno
+                ),
+            )),
+            other => Err(self.err(
+                pc,
+                format!("{} arg{}: expected memory pointer, got {}", helper, argno, other.type_name()),
+            )),
+        }
+    }
+}
+
+enum Next {
+    Fallthrough(usize),
+    Exit,
+}
+
+/// Rewrite every register / spill slot carrying null-id `nid`.
+fn promote_nid(st: &mut State, nid: u32, to: Reg) {
+    for r in st.regs.iter_mut() {
+        if let Reg::MapValueOrNull { nid: n, .. } = r {
+            if *n == nid {
+                *r = to;
+            }
+        }
+    }
+    for (_, r) in st.spills.iter_mut() {
+        if let Reg::MapValueOrNull { nid: n, .. } = r {
+            if *n == nid {
+                *r = to;
+            }
+        }
+    }
+}
+
+/// Decide a conditional branch if the intervals force it.
+/// Returns Some(true)=always taken, Some(false)=never, None=both possible.
+fn branch_decision(op: u8, a0: u64, a1: u64, b0: u64, b1: u64) -> Option<bool> {
+    match op {
+        jmp::JEQ => {
+            if a0 == a1 && b0 == b1 && a0 == b0 {
+                Some(true)
+            } else if a1 < b0 || a0 > b1 {
+                Some(false)
+            } else {
+                None
+            }
+        }
+        jmp::JNE => branch_decision(jmp::JEQ, a0, a1, b0, b1).map(|t| !t),
+        jmp::JGT => {
+            if a0 > b1 {
+                Some(true)
+            } else if a1 <= b0 {
+                Some(false)
+            } else {
+                None
+            }
+        }
+        jmp::JGE => {
+            if a0 >= b1 {
+                Some(true)
+            } else if a1 < b0 {
+                Some(false)
+            } else {
+                None
+            }
+        }
+        jmp::JLT => {
+            if a1 < b0 {
+                Some(true)
+            } else if a0 >= b1 {
+                Some(false)
+            } else {
+                None
+            }
+        }
+        jmp::JLE => {
+            if a1 <= b0 {
+                Some(true)
+            } else if a0 > b1 {
+                Some(false)
+            } else {
+                None
+            }
+        }
+        // signed & set comparisons: conservatively explore both arms
+        jmp::JSET | jmp::JSGT | jmp::JSGE | jmp::JSLT | jmp::JSLE => None,
+        _ => None,
+    }
+}
+
+/// Narrow `reg`'s interval given that branch `op` against constant `k`
+/// was (taken=true) or was not (taken=false) taken.
+fn prune(st: &mut State, reg: u8, op: u8, k: u64, taken: bool) {
+    let Reg::Scalar { mut umin, mut umax } = st.regs[reg as usize] else {
+        return;
+    };
+    // effective comparison after accounting for branch direction
+    let eff = if taken {
+        op
+    } else {
+        match op {
+            jmp::JEQ => jmp::JNE,
+            jmp::JNE => jmp::JEQ,
+            jmp::JGT => jmp::JLE,
+            jmp::JGE => jmp::JLT,
+            jmp::JLT => jmp::JGE,
+            jmp::JLE => jmp::JGT,
+            other => other,
+        }
+    };
+    match eff {
+        jmp::JEQ => {
+            umin = k;
+            umax = k;
+        }
+        jmp::JNE => {
+            // only narrows when k is an endpoint
+            if umin == k && umin < umax {
+                umin += 1;
+            } else if umax == k && umax > umin {
+                umax -= 1;
+            }
+        }
+        jmp::JGT => umin = umin.max(k.saturating_add(1)),
+        jmp::JGE => umin = umin.max(k),
+        jmp::JLT => umax = umax.min(k.saturating_sub(1)),
+        jmp::JLE => umax = umax.min(k),
+        _ => return,
+    }
+    if umin > umax {
+        // contradictory path: keep a degenerate interval; subsequent
+        // decisions will be vacuous but safe.
+        umax = umin;
+    }
+    st.regs[reg as usize] = Reg::Scalar { umin, umax };
+}
+
+/// Convenience entry point.
+pub fn verify(
+    insns: &[Insn],
+    prog_type: ProgType,
+    ctx: &CtxLayout,
+    maps: &HashMap<u32, MapDef>,
+) -> Result<VerifyInfo, VerifyError> {
+    Verifier::new(insns, prog_type, ctx, maps).verify()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpf::insn::*;
+    use crate::bpf::maps::MapKind;
+
+    fn ctx_rw() -> CtxLayout {
+        // 64-byte ctx: bytes [0,32) readable inputs, [32,64) writable outputs
+        CtxLayout { size: 64, read: vec![(0, 64)], write: vec![(32, 32)] }
+    }
+
+    fn one_map() -> HashMap<u32, MapDef> {
+        let mut m = HashMap::new();
+        m.insert(
+            7,
+            MapDef {
+                name: "m".into(),
+                kind: MapKind::Array,
+                key_size: 4,
+                value_size: 16,
+                max_entries: 8,
+            },
+        );
+        m
+    }
+
+    fn ok(prog: &[Insn]) -> VerifyInfo {
+        verify(prog, ProgType::Tuner, &ctx_rw(), &one_map()).expect("should verify")
+    }
+
+    fn fails(prog: &[Insn]) -> VerifyError {
+        verify(prog, ProgType::Tuner, &ctx_rw(), &one_map()).expect_err("should be rejected")
+    }
+
+    #[test]
+    fn minimal_ok() {
+        ok(&[mov64_imm(0, 0), exit()]);
+    }
+
+    #[test]
+    fn exit_without_r0() {
+        let e = fails(&[exit()]);
+        assert!(e.message.contains("R0"), "{}", e.message);
+    }
+
+    #[test]
+    fn read_uninit_register() {
+        let e = fails(&[mov64_reg(0, 3), exit()]);
+        assert!(e.message.contains("uninit"), "{}", e.message);
+    }
+
+    #[test]
+    fn write_r10_rejected() {
+        let e = fails(&[mov64_imm(10, 0), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("read-only"), "{}", e.message);
+    }
+
+    #[test]
+    fn ctx_read_ok_write_input_rejected() {
+        // read ctx[0] then write ctx[8] (input range) -> reject
+        let e = fails(&[
+            ldx(size::W, 2, 1, 0),
+            st_imm(size::W, 1, 8, 5),
+            mov64_imm(0, 0),
+            exit(),
+        ]);
+        assert!(e.message.contains("read-only context field"), "{}", e.message);
+        // write to output range is fine
+        ok(&[st_imm(size::W, 1, 36, 5), mov64_imm(0, 0), exit()]);
+    }
+
+    #[test]
+    fn ctx_oob_read() {
+        let e = fails(&[ldx(size::DW, 2, 1, 60), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("invalid ctx read"), "{}", e.message);
+    }
+
+    #[test]
+    fn null_deref_rejected_with_paper_message() {
+        // r1 = map, r2 = key ptr, call lookup, deref without null check
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0)); // key = 0 on stack
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1)); // lookup
+        p.push(ldx(size::DW, 3, 0, 0)); // deref r0 — BUG
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(
+            e.message.contains("map_value_or_null") && e.message.contains("!= NULL"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn null_checked_deref_ok() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2)); // if r0 != 0 goto deref
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 3, 0, 0)); // safe deref
+        p.push(mov64_imm(0, 1));
+        p.push(exit());
+        let info = ok(&p);
+        assert_eq!(info.used_maps, vec![7]);
+        assert!(info.helpers_used.contains(&1));
+    }
+
+    #[test]
+    fn map_value_oob_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 3, 0, 12)); // value_size 16, off 12 + 8 > 16 — BUG
+        p.push(mov64_imm(0, 1));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("out of bounds"), "{}", e.message);
+    }
+
+    #[test]
+    fn stack_overflow_rejected() {
+        let e = fails(&[st_imm(size::DW, 10, -520, 1), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("stack overflow") || e.message.contains("out of bounds"),
+            "{}", e.message);
+    }
+
+    #[test]
+    fn uninit_stack_read_rejected() {
+        let e = fails(&[ldx(size::DW, 2, 10, -8), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("uninitialized stack"), "{}", e.message);
+    }
+
+    #[test]
+    fn illegal_helper_rejected() {
+        // trace_printk (6) is not in the Tuner whitelist
+        let p = [
+            st_imm(size::DW, 10, -8, 0),
+            mov64_reg(1, 10),
+            alu64_imm(alu::ADD, 1, -8),
+            mov64_imm(2, 8),
+            call(6),
+            mov64_imm(0, 0),
+            exit(),
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("illegal helper"), "{}", e.message);
+    }
+
+    #[test]
+    fn unknown_helper_rejected() {
+        let e = fails(&[call(999), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("unknown helper"), "{}", e.message);
+    }
+
+    #[test]
+    fn div_by_zero_imm_rejected() {
+        let e = fails(&[mov64_imm(0, 10), alu64_imm(alu::DIV, 0, 0), exit()]);
+        assert!(e.message.contains("division by zero"), "{}", e.message);
+    }
+
+    #[test]
+    fn div_by_possibly_zero_reg_rejected() {
+        // r2 = ctx value (unknown), r0 = 10 / r2 — may divide by zero
+        let e = fails(&[
+            ldx(size::W, 2, 1, 0),
+            mov64_imm(0, 10),
+            alu64_reg(alu::DIV, 0, 2),
+            exit(),
+        ]);
+        assert!(e.message.contains("division by zero"), "{}", e.message);
+    }
+
+    #[test]
+    fn div_guarded_by_check_ok() {
+        // if r2 == 0 exit; else r0 = 10 / r2
+        ok(&[
+            ldx(size::W, 2, 1, 0),
+            mov64_imm(0, 0),
+            jmp_imm(jmp::JEQ, 2, 0, 2),
+            mov64_imm(0, 10),
+            alu64_reg(alu::DIV, 0, 2),
+            exit(),
+        ]);
+    }
+
+    #[test]
+    fn bounded_loop_ok() {
+        // for (r2 = 0; r2 < 8; r2++) r3 += r2
+        ok(&[
+            mov64_imm(2, 0),
+            mov64_imm(3, 0),
+            jmp_imm(jmp::JGE, 2, 8, 3), // while r2 < 8
+            alu64_reg(alu::ADD, 3, 2),
+            alu64_imm(alu::ADD, 2, 1),
+            ja(-4),
+            mov64_imm(0, 0),
+            exit(),
+        ]);
+    }
+
+    #[test]
+    fn unbounded_loop_rejected() {
+        // r2 = 0; loop: r2 += 1; goto loop (no exit condition)
+        let e = fails(&[mov64_imm(2, 0), alu64_imm(alu::ADD, 2, 1), ja(-2), exit()]);
+        assert!(
+            e.message.contains("unbounded loop") || e.message.contains("too complex"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn infinite_tight_loop_rejected() {
+        let e = fails(&[ja(-1), exit()]);
+        assert!(
+            e.message.contains("unbounded loop") || e.message.contains("too complex"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn jump_out_of_range_rejected() {
+        let e = fails(&[jmp_imm(jmp::JEQ, 1, 0, 100), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("jump out of range"), "{}", e.message);
+    }
+
+    #[test]
+    fn fallthrough_off_end_rejected() {
+        let e = fails(&[mov64_imm(0, 0)]);
+        assert!(e.message.contains("falls off the end"), "{}", e.message);
+    }
+
+    #[test]
+    fn pointer_leak_on_exit_rejected() {
+        let e = fails(&[mov64_reg(0, 1), exit()]);
+        assert!(e.message.contains("pointer leak") || e.message.contains("scalar"), "{}", e.message);
+    }
+
+    #[test]
+    fn pointer_arithmetic_two_pointers_rejected() {
+        let e = fails(&[alu64_reg(alu::ADD, 1, 10), mov64_imm(0, 0), exit()]);
+        assert!(e.message.contains("two pointers"), "{}", e.message);
+    }
+
+    #[test]
+    fn spill_restore_preserves_pointer_type() {
+        // spill ctx ptr, restore, read through it
+        ok(&[
+            stx(size::DW, 10, 1, -8),
+            ldx(size::DW, 2, 10, -8),
+            ldx(size::W, 3, 2, 0),
+            mov64_imm(0, 0),
+            exit(),
+        ]);
+    }
+
+    #[test]
+    fn partial_spill_overwrite_demotes() {
+        // spill ctx ptr, clobber one byte, restore, deref -> reject
+        let e = fails(&[
+            stx(size::DW, 10, 1, -8),
+            st_imm(size::B, 10, -8, 0),
+            ldx(size::DW, 2, 10, -8),
+            ldx(size::W, 3, 2, 0), // r2 is data now, not a pointer
+            mov64_imm(0, 0),
+            exit(),
+        ]);
+        assert!(e.message.contains("scalar") || e.message.contains("dereference"), "{}", e.message);
+    }
+
+    #[test]
+    fn lookup_with_uninit_key_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4)); // key bytes never written
+        p.push(call(1));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("not initialized"), "{}", e.message);
+    }
+
+    #[test]
+    fn unknown_map_id_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 99));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("unknown map"), "{}", e.message);
+    }
+
+    #[test]
+    fn branch_pruning_enables_bounded_index() {
+        // r2 = ctx[0] (unknown); if r2 > 7 exit; use r2 as map-value offset base
+        // via multiply within bounds: off = r2 (0..=7), access value[r2] byte.
+        let mut p = vec![];
+        p.push(mov64_reg(6, 1)); // save ctx: helper call clobbers r1-r5
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::W, 4, 6, 4)); // r4 = ctx[4] unknown
+        p.push(jmp_imm(jmp::JLE, 4, 8, 2)); // if r4 <= 8 continue
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(alu64_reg(alu::ADD, 0, 4)); // r0 = value_ptr + r4 (0..=8)
+        p.push(ldx(size::DW, 5, 0, 0)); // access [r4, r4+8) <= 16 OK
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        ok(&p);
+    }
+
+    #[test]
+    fn verify_info_tracks_stack_depth() {
+        let info = ok(&[st_imm(size::DW, 10, -32, 1), mov64_imm(0, 0), exit()]);
+        assert_eq!(info.stack_depth, 32);
+    }
+}

@@ -1,0 +1,214 @@
+//! AST for the restricted-C policy language.
+
+use crate::bpf::maps::MapKind;
+
+/// Scalar C types we support.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalarTy {
+    U32,
+    U64,
+    S32,
+    S64,
+}
+
+impl ScalarTy {
+    pub fn size(self) -> u32 {
+        match self {
+            ScalarTy::U32 | ScalarTy::S32 => 4,
+            ScalarTy::U64 | ScalarTy::S64 => 8,
+        }
+    }
+    pub fn is_signed(self) -> bool {
+        matches!(self, ScalarTy::S32 | ScalarTy::S64)
+    }
+}
+
+/// A type: scalar, named struct, or pointer-to.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Ty {
+    Scalar(ScalarTy),
+    Struct(String),
+    Ptr(Box<Ty>),
+}
+
+impl Ty {
+    pub fn ptr_to(t: Ty) -> Ty {
+        Ty::Ptr(Box::new(t))
+    }
+}
+
+/// One struct field with its resolved byte offset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub ty: ScalarTy,
+    pub offset: u32,
+}
+
+/// A struct definition (map values, plus the builtin contexts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StructDef {
+    pub name: String,
+    pub fields: Vec<Field>,
+    pub size: u32,
+}
+
+impl StructDef {
+    pub fn field(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    /// Lay out fields with natural alignment (C ABI for our scalars).
+    pub fn layout(name: &str, fields: Vec<(String, ScalarTy)>) -> StructDef {
+        let mut out = Vec::with_capacity(fields.len());
+        let mut off = 0u32;
+        let mut max_align = 1u32;
+        for (fname, ty) in fields {
+            let align = ty.size();
+            max_align = max_align.max(align);
+            off = off.div_ceil(align) * align;
+            out.push(Field { name: fname, ty, offset: off });
+            off += ty.size();
+        }
+        let size = off.div_ceil(max_align) * max_align;
+        StructDef { name: name.to_string(), fields: out, size }
+    }
+}
+
+/// A map declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MapDecl {
+    pub name: String,
+    pub kind: MapKind,
+    pub key_ty: Ty,
+    pub value_ty: Ty,
+    pub max_entries: u32,
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    /// local variable or map name
+    Ident(String),
+    /// e->field (e must be pointer-to-struct)
+    Arrow(Box<Expr>, String),
+    /// e.field (e must be a struct local)
+    Dot(Box<Expr>, String),
+    /// &e (address of local / map / struct field)
+    AddrOf(Box<Expr>),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// cond ? a : b
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    /// helper or builtin call
+    Call(String, Vec<Expr>),
+    /// (type) cast — tracked for signedness only
+    Cast(Ty, Box<Expr>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,    // !
+    BitNot, // ~
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    LAnd,
+    LOr,
+}
+
+impl BinOp {
+    pub fn is_comparison(self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+    }
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `ty name = init;` / `struct S v = {};`
+    Decl { name: String, ty: Ty, init: Option<Expr> },
+    /// lvalue = expr (lvalue: Ident / Arrow / Dot)
+    Assign { lhs: Expr, rhs: Expr },
+    /// lvalue op= expr
+    CompoundAssign { lhs: Expr, op: BinOp, rhs: Expr },
+    If { cond: Expr, then_blk: Vec<Stmt>, else_blk: Vec<Stmt> },
+    For { init: Box<Stmt>, cond: Expr, step: Box<Stmt>, body: Vec<Stmt> },
+    Return(Expr),
+    /// bare call for side effects
+    ExprStmt(Expr),
+}
+
+/// A policy program: SEC("section") int name(struct ctx_ty *ctx) {...}
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuncDef {
+    pub section: String,
+    pub name: String,
+    pub ctx_param: String,
+    pub ctx_struct: String,
+    pub body: Vec<Stmt>,
+}
+
+/// A whole translation unit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Unit {
+    pub structs: Vec<StructDef>,
+    pub maps: Vec<MapDecl>,
+    pub funcs: Vec<FuncDef>,
+}
+
+impl Unit {
+    pub fn struct_def(&self, name: &str) -> Option<&StructDef> {
+        self.structs.iter().find(|s| s.name == name)
+    }
+    pub fn map_decl(&self, name: &str) -> Option<&MapDecl> {
+        self.maps.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn struct_layout_natural_alignment() {
+        let s = StructDef::layout(
+            "x",
+            vec![
+                ("a".into(), ScalarTy::U32),
+                ("b".into(), ScalarTy::U64), // aligned to 8
+                ("c".into(), ScalarTy::U32),
+            ],
+        );
+        assert_eq!(s.field("a").unwrap().offset, 0);
+        assert_eq!(s.field("b").unwrap().offset, 8);
+        assert_eq!(s.field("c").unwrap().offset, 16);
+        assert_eq!(s.size, 24); // padded to 8
+    }
+
+    #[test]
+    fn packed_u32s() {
+        let s = StructDef::layout("y", vec![("a".into(), ScalarTy::U32), ("b".into(), ScalarTy::U32)]);
+        assert_eq!(s.size, 8);
+        assert_eq!(s.field("b").unwrap().offset, 4);
+    }
+}

@@ -1,0 +1,397 @@
+//! Lexer for the restricted-C policy language.
+//!
+//! Handles `//` and `/* */` comments, `#define NAME value` constants
+//! (object-like numeric macros only), and ignores `#include` lines —
+//! policy sources look like the paper's Listing 1.
+
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Str(String),
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+    Arrow,   // ->
+    Dot,
+    Amp,     // &
+    AmpAmp,  // &&
+    Pipe,
+    PipePipe,
+    Caret,
+    Tilde,
+    Bang,
+    BangEq,
+    Plus,
+    PlusPlus,
+    PlusEq,
+    Minus,
+    MinusMinus,
+    MinusEq,
+    Star,
+    Slash,
+    Percent,
+    Lt,
+    LtEq,
+    Shl,
+    Gt,
+    GtEq,
+    Shr,
+    Eq,      // =
+    EqEq,
+    Question,
+    Colon,
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "{}", s),
+            Tok::Int(v) => write!(f, "{}", v),
+            Tok::Str(s) => write!(f, "\"{}\"", s),
+            other => write!(f, "{:?}", other),
+        }
+    }
+}
+
+/// A token with its source line (for error messages).
+#[derive(Clone, Debug)]
+pub struct SpannedTok {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+#[derive(Debug)]
+pub struct LexError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.message)
+    }
+}
+
+pub fn lex(source: &str) -> Result<Vec<SpannedTok>, LexError> {
+    // pass 1: strip comments, collect #define, drop other directives
+    let mut defines: HashMap<String, i64> = HashMap::new();
+    let mut clean = String::with_capacity(source.len());
+    let mut in_block_comment = false;
+    for (lineno, raw) in source.lines().enumerate() {
+        let mut line = String::new();
+        let mut chars = raw.chars().peekable();
+        while let Some(c) = chars.next() {
+            if in_block_comment {
+                if c == '*' && chars.peek() == Some(&'/') {
+                    chars.next();
+                    in_block_comment = false;
+                }
+                continue;
+            }
+            if c == '/' && chars.peek() == Some(&'/') {
+                break;
+            }
+            if c == '/' && chars.peek() == Some(&'*') {
+                chars.next();
+                in_block_comment = true;
+                continue;
+            }
+            line.push(c);
+        }
+        let trimmed = line.trim_start();
+        if let Some(rest) = trimmed.strip_prefix("#define") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().unwrap_or("").to_string();
+            let val_str: String = parts.collect::<Vec<_>>().join(" ");
+            if !name.is_empty() && !val_str.is_empty() {
+                let v = parse_const_expr(&val_str, &defines).ok_or(LexError {
+                    line: lineno + 1,
+                    message: format!("unsupported #define value '{}'", val_str),
+                })?;
+                defines.insert(name, v);
+            }
+            clean.push('\n');
+            continue;
+        }
+        if trimmed.starts_with('#') {
+            clean.push('\n'); // #include etc: ignored
+            continue;
+        }
+        clean.push_str(&line);
+        clean.push('\n');
+    }
+
+    // pass 2: tokenize
+    let mut toks = Vec::new();
+    let bytes: Vec<char> = clean.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    macro_rules! push {
+        ($t:expr) => {
+            toks.push(SpannedTok { tok: $t, line })
+        };
+    }
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '0'..='9' => {
+                let start = i;
+                if c == '0' && i + 1 < bytes.len() && (bytes[i + 1] == 'x' || bytes[i + 1] == 'X')
+                {
+                    i += 2;
+                    while i < bytes.len() && bytes[i].is_ascii_hexdigit() {
+                        i += 1;
+                    }
+                    let s: String = bytes[start + 2..i].iter().collect();
+                    let v = i64::from_str_radix(&s, 16).map_err(|_| LexError {
+                        line,
+                        message: format!("bad hex literal 0x{}", s),
+                    })?;
+                    // swallow integer suffixes (U, L, UL, ULL...)
+                    while i < bytes.len() && matches!(bytes[i], 'u' | 'U' | 'l' | 'L') {
+                        i += 1;
+                    }
+                    push!(Tok::Int(v));
+                } else {
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                    let s: String = bytes[start..i].iter().collect();
+                    let v: i64 = s.parse().map_err(|_| LexError {
+                        line,
+                        message: format!("bad integer literal {}", s),
+                    })?;
+                    while i < bytes.len() && matches!(bytes[i], 'u' | 'U' | 'l' | 'L') {
+                        i += 1;
+                    }
+                    push!(Tok::Int(v));
+                }
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                }
+                let s: String = bytes[start..i].iter().collect();
+                if let Some(&v) = defines.get(&s) {
+                    push!(Tok::Int(v));
+                } else {
+                    push!(Tok::Ident(s));
+                }
+            }
+            '"' => {
+                i += 1;
+                let start = i;
+                while i < bytes.len() && bytes[i] != '"' {
+                    i += 1;
+                }
+                if i >= bytes.len() {
+                    return Err(LexError { line, message: "unterminated string".into() });
+                }
+                let s: String = bytes[start..i].iter().collect();
+                i += 1;
+                push!(Tok::Str(s));
+            }
+            _ => {
+                let two: String = bytes[i..bytes.len().min(i + 2)].iter().collect();
+                let (tok, adv) = match two.as_str() {
+                    "->" => (Tok::Arrow, 2),
+                    "&&" => (Tok::AmpAmp, 2),
+                    "||" => (Tok::PipePipe, 2),
+                    "==" => (Tok::EqEq, 2),
+                    "!=" => (Tok::BangEq, 2),
+                    "<=" => (Tok::LtEq, 2),
+                    ">=" => (Tok::GtEq, 2),
+                    "<<" => (Tok::Shl, 2),
+                    ">>" => (Tok::Shr, 2),
+                    "+=" => (Tok::PlusEq, 2),
+                    "-=" => (Tok::MinusEq, 2),
+                    "++" => (Tok::PlusPlus, 2),
+                    "--" => (Tok::MinusMinus, 2),
+                    _ => {
+                        let t = match c {
+                            '(' => Tok::LParen,
+                            ')' => Tok::RParen,
+                            '{' => Tok::LBrace,
+                            '}' => Tok::RBrace,
+                            '[' => Tok::LBracket,
+                            ']' => Tok::RBracket,
+                            ';' => Tok::Semi,
+                            ',' => Tok::Comma,
+                            '.' => Tok::Dot,
+                            '&' => Tok::Amp,
+                            '|' => Tok::Pipe,
+                            '^' => Tok::Caret,
+                            '~' => Tok::Tilde,
+                            '!' => Tok::Bang,
+                            '+' => Tok::Plus,
+                            '-' => Tok::Minus,
+                            '*' => Tok::Star,
+                            '/' => Tok::Slash,
+                            '%' => Tok::Percent,
+                            '<' => Tok::Lt,
+                            '>' => Tok::Gt,
+                            '=' => Tok::Eq,
+                            '?' => Tok::Question,
+                            ':' => Tok::Colon,
+                            other => {
+                                return Err(LexError {
+                                    line,
+                                    message: format!("unexpected character '{}'", other),
+                                })
+                            }
+                        };
+                        (t, 1)
+                    }
+                };
+                push!(tok);
+                i += adv;
+            }
+        }
+    }
+    toks.push(SpannedTok { tok: Tok::Eof, line });
+    Ok(toks)
+}
+
+/// Evaluate a simple constant expression for #define: INT, INT op INT
+/// chains with * and <<, plus parens-free left-to-right evaluation —
+/// enough for `#define MIB (1024 * 1024)` style constants.
+fn parse_const_expr(s: &str, defines: &HashMap<String, i64>) -> Option<i64> {
+    let cleaned: String = s.chars().filter(|&c| c != '(' && c != ')').collect();
+    let toks: Vec<&str> = cleaned.split_whitespace().collect();
+    if toks.is_empty() {
+        return None;
+    }
+    let atom = |t: &str| -> Option<i64> {
+        if let Some(hex) = t.strip_prefix("0x") {
+            i64::from_str_radix(hex, 16).ok()
+        } else if let Ok(v) = t.parse() {
+            Some(v)
+        } else {
+            defines.get(t).copied()
+        }
+    };
+    let mut acc = atom(toks[0])?;
+    let mut i = 1;
+    while i + 1 < toks.len() + 1 && i < toks.len() {
+        let op = toks[i];
+        let rhs = atom(toks.get(i + 1)?)?;
+        acc = match op {
+            "*" => acc * rhs,
+            "+" => acc + rhs,
+            "-" => acc - rhs,
+            "<<" => acc << rhs,
+            _ => return None,
+        };
+        i += 2;
+    }
+    Some(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn basic_tokens() {
+        let t = kinds("int x = 42;");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("int".into()),
+                Tok::Ident("x".into()),
+                Tok::Eq,
+                Tok::Int(42),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let t = kinds("a // line comment\n/* block\ncomment */ b");
+        assert_eq!(t, vec![Tok::Ident("a".into()), Tok::Ident("b".into()), Tok::Eof]);
+    }
+
+    #[test]
+    fn defines_substituted() {
+        let t = kinds("#define KB 1024\n#define FOUR_KB (4 * KB)\nx = FOUR_KB;");
+        assert!(t.contains(&Tok::Int(4096)));
+    }
+
+    #[test]
+    fn include_ignored() {
+        let t = kinds("#include <bpf/bpf_helpers.h>\nx");
+        assert_eq!(t[0], Tok::Ident("x".into()));
+    }
+
+    #[test]
+    fn hex_and_suffixes() {
+        let t = kinds("0xff 100UL 32u");
+        assert_eq!(t[0], Tok::Int(255));
+        assert_eq!(t[1], Tok::Int(100));
+        assert_eq!(t[2], Tok::Int(32));
+    }
+
+    #[test]
+    fn two_char_operators() {
+        let t = kinds("a->b && c || d == e != f <= g >= h << i >> j += k");
+        assert!(t.contains(&Tok::Arrow));
+        assert!(t.contains(&Tok::AmpAmp));
+        assert!(t.contains(&Tok::PipePipe));
+        assert!(t.contains(&Tok::EqEq));
+        assert!(t.contains(&Tok::BangEq));
+        assert!(t.contains(&Tok::Shl));
+        assert!(t.contains(&Tok::Shr));
+        assert!(t.contains(&Tok::PlusEq));
+    }
+
+    #[test]
+    fn strings_for_sec() {
+        let t = kinds(r#"SEC("tuner")"#);
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("SEC".into()),
+                Tok::LParen,
+                Tok::Str("tuner".into()),
+                Tok::RParen,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let toks = lex("a\nb\nc").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn lex_error_on_garbage() {
+        assert!(lex("a $ b").is_err());
+    }
+}

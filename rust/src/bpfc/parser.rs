@@ -1,0 +1,689 @@
+//! Recursive-descent parser for the restricted-C policy language.
+
+use super::ast::*;
+use super::lexer::{lex, SpannedTok, Tok};
+use crate::bpf::maps::MapKind;
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+type PResult<T> = Result<T, ParseError>;
+
+pub struct Parser {
+    toks: Vec<SpannedTok>,
+    pos: usize,
+}
+
+pub fn parse(source: &str) -> PResult<Unit> {
+    let toks = lex(source).map_err(|e| ParseError { line: e.line, message: e.message })?;
+    Parser { toks, pos: 0 }.unit()
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+    fn err<T>(&self, msg: impl Into<String>) -> PResult<T> {
+        Err(ParseError { line: self.line(), message: msg.into() })
+    }
+    fn expect(&mut self, t: Tok) -> PResult<()> {
+        if *self.peek() == t {
+            self.next();
+            Ok(())
+        } else {
+            self.err(format!("expected {:?}, found {}", t, self.peek()))
+        }
+    }
+    fn ident(&mut self) -> PResult<String> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            other => self.err(format!("expected identifier, found {}", other)),
+        }
+    }
+    fn is_ident(&self, s: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(i) if i == s)
+    }
+    fn eat_ident(&mut self, s: &str) -> bool {
+        if self.is_ident(s) {
+            self.next();
+            true
+        } else {
+            false
+        }
+    }
+
+    // -- types ---------------------------------------------------------------
+
+    fn scalar_kw(name: &str) -> Option<ScalarTy> {
+        match name {
+            "__u32" | "u32" | "unsigned" | "uint32_t" => Some(ScalarTy::U32),
+            "__u64" | "u64" | "uint64_t" | "size_t" => Some(ScalarTy::U64),
+            "__s32" | "s32" | "int" | "int32_t" => Some(ScalarTy::S32),
+            "__s64" | "s64" | "int64_t" | "long" => Some(ScalarTy::S64),
+            _ => None,
+        }
+    }
+
+    fn starts_type(&self) -> bool {
+        match self.peek() {
+            Tok::Ident(s) => Self::scalar_kw(s).is_some() || s == "struct" || s == "void",
+            _ => false,
+        }
+    }
+
+    fn parse_type(&mut self) -> PResult<Ty> {
+        let base = if self.eat_ident("struct") {
+            Ty::Struct(self.ident()?)
+        } else if self.eat_ident("void") {
+            // void only appears under a pointer
+            Ty::Scalar(ScalarTy::U64)
+        } else {
+            let name = self.ident()?;
+            match Self::scalar_kw(&name) {
+                Some(s) => Ty::Scalar(s),
+                None => return self.err(format!("unknown type '{}'", name)),
+            }
+        };
+        let mut ty = base;
+        while *self.peek() == Tok::Star {
+            self.next();
+            ty = Ty::ptr_to(ty);
+        }
+        Ok(ty)
+    }
+
+    // -- top level -----------------------------------------------------------
+
+    fn unit(&mut self) -> PResult<Unit> {
+        let mut unit = Unit::default();
+        loop {
+            match self.peek().clone() {
+                Tok::Eof => break,
+                Tok::Ident(id) if id == "struct" && self.looks_like_struct_def() => {
+                    unit.structs.push(self.struct_def()?);
+                }
+                Tok::Ident(id) if id == "BPF_MAP" => {
+                    unit.maps.push(self.map_decl()?);
+                }
+                Tok::Ident(id) if id == "SEC" => {
+                    unit.funcs.push(self.func_def()?);
+                }
+                Tok::Ident(id) if id == "static" || id == "inline" => {
+                    self.next(); // tolerate qualifiers before SEC-less funcs
+                }
+                _ => return self.err(format!("unexpected top-level token {}", self.peek())),
+            }
+        }
+        Ok(unit)
+    }
+
+    /// Disambiguate `struct X {` (definition) from `struct X *f(...)`.
+    fn looks_like_struct_def(&self) -> bool {
+        // struct IDENT {
+        matches!(self.peek2(), Tok::Ident(_))
+            && matches!(
+                self.toks.get(self.pos + 2).map(|t| &t.tok),
+                Some(Tok::LBrace)
+            )
+    }
+
+    fn struct_def(&mut self) -> PResult<StructDef> {
+        self.expect(Tok::Ident("struct".into()))?;
+        let name = self.ident()?;
+        self.expect(Tok::LBrace)?;
+        let mut fields = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            let tyname = self.ident()?;
+            let ty = Self::scalar_kw(&tyname)
+                .ok_or_else(|| ParseError {
+                    line: self.line(),
+                    message: format!("struct fields must be scalar types, got '{}'", tyname),
+                })?;
+            let fname = self.ident()?;
+            self.expect(Tok::Semi)?;
+            fields.push((fname, ty));
+        }
+        self.expect(Tok::RBrace)?;
+        self.expect(Tok::Semi)?;
+        Ok(StructDef::layout(&name, fields))
+    }
+
+    /// BPF_MAP(name, BPF_MAP_TYPE_HASH, __u32, struct latency_state, 64);
+    fn map_decl(&mut self) -> PResult<MapDecl> {
+        self.expect(Tok::Ident("BPF_MAP".into()))?;
+        self.expect(Tok::LParen)?;
+        let name = self.ident()?;
+        self.expect(Tok::Comma)?;
+        let kind_name = self.ident()?;
+        let kind = match kind_name.as_str() {
+            "BPF_MAP_TYPE_HASH" => MapKind::Hash,
+            "BPF_MAP_TYPE_ARRAY" => MapKind::Array,
+            "BPF_MAP_TYPE_PERCPU_ARRAY" => MapKind::PerCpuArray,
+            other => return self.err(format!("unknown map type '{}'", other)),
+        };
+        self.expect(Tok::Comma)?;
+        let key_ty = self.parse_type()?;
+        self.expect(Tok::Comma)?;
+        let value_ty = self.parse_type()?;
+        self.expect(Tok::Comma)?;
+        let max_entries = match self.next() {
+            Tok::Int(v) if v > 0 => v as u32,
+            other => return self.err(format!("expected positive entry count, got {}", other)),
+        };
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Semi)?;
+        Ok(MapDecl { name, kind, key_ty, value_ty, max_entries })
+    }
+
+    /// SEC("tuner") int name(struct policy_context *ctx) { ... }
+    fn func_def(&mut self) -> PResult<FuncDef> {
+        self.expect(Tok::Ident("SEC".into()))?;
+        self.expect(Tok::LParen)?;
+        let section = match self.next() {
+            Tok::Str(s) => s,
+            other => return self.err(format!("SEC expects a string, got {}", other)),
+        };
+        self.expect(Tok::RParen)?;
+        if !self.eat_ident("int") && !self.eat_ident("__u64") && !self.eat_ident("long") {
+            return self.err("policy functions must return int");
+        }
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        self.expect(Tok::Ident("struct".into()))?;
+        let ctx_struct = self.ident()?;
+        self.expect(Tok::Star)?;
+        let ctx_param = self.ident()?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(FuncDef { section, name, ctx_param, ctx_struct, body })
+    }
+
+    // -- statements ------------------------------------------------------------
+
+    fn block(&mut self) -> PResult<Vec<Stmt>> {
+        self.expect(Tok::LBrace)?;
+        let mut out = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            out.push(self.stmt()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(out)
+    }
+
+    fn block_or_stmt(&mut self) -> PResult<Vec<Stmt>> {
+        if *self.peek() == Tok::LBrace {
+            self.block()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn stmt(&mut self) -> PResult<Stmt> {
+        match self.peek().clone() {
+            Tok::Ident(id) if id == "if" => {
+                self.next();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let then_blk = self.block_or_stmt()?;
+                let else_blk = if self.eat_ident("else") {
+                    if self.is_ident("if") {
+                        vec![self.stmt()?]
+                    } else {
+                        self.block_or_stmt()?
+                    }
+                } else {
+                    vec![]
+                };
+                Ok(Stmt::If { cond, then_blk, else_blk })
+            }
+            Tok::Ident(id) if id == "for" => {
+                self.next();
+                self.expect(Tok::LParen)?;
+                let init = self.simple_stmt()?;
+                self.expect(Tok::Semi)?;
+                let cond = self.expr()?;
+                self.expect(Tok::Semi)?;
+                let step = self.simple_stmt()?;
+                self.expect(Tok::RParen)?;
+                let body = self.block_or_stmt()?;
+                Ok(Stmt::For { init: Box::new(init), cond, step: Box::new(step), body })
+            }
+            Tok::Ident(id) if id == "return" => {
+                self.next();
+                let e = self.expr()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Return(e))
+            }
+            _ => {
+                let s = self.simple_stmt()?;
+                self.expect(Tok::Semi)?;
+                Ok(s)
+            }
+        }
+    }
+
+    /// declaration / assignment / expression (no trailing `;`).
+    fn simple_stmt(&mut self) -> PResult<Stmt> {
+        if self.starts_type() {
+            let ty = self.parse_type()?;
+            let name = self.ident()?;
+            let init = if *self.peek() == Tok::Eq {
+                self.next();
+                if *self.peek() == Tok::LBrace {
+                    // `= {}` / `= {0}` zero-init
+                    self.next();
+                    if let Tok::Int(_) = self.peek() {
+                        self.next();
+                    }
+                    self.expect(Tok::RBrace)?;
+                    None // Decl with no init is zero-initialized
+                } else {
+                    Some(self.expr()?)
+                }
+            } else {
+                None
+            };
+            return Ok(Stmt::Decl { name, ty, init });
+        }
+        let lhs = self.expr()?;
+        match self.peek().clone() {
+            Tok::Eq => {
+                self.next();
+                let rhs = self.expr()?;
+                Ok(Stmt::Assign { lhs, rhs })
+            }
+            Tok::PlusEq => {
+                self.next();
+                let rhs = self.expr()?;
+                Ok(Stmt::CompoundAssign { lhs, op: BinOp::Add, rhs })
+            }
+            Tok::MinusEq => {
+                self.next();
+                let rhs = self.expr()?;
+                Ok(Stmt::CompoundAssign { lhs, op: BinOp::Sub, rhs })
+            }
+            Tok::PlusPlus => {
+                self.next();
+                Ok(Stmt::CompoundAssign { lhs, op: BinOp::Add, rhs: Expr::Int(1) })
+            }
+            Tok::MinusMinus => {
+                self.next();
+                Ok(Stmt::CompoundAssign { lhs, op: BinOp::Sub, rhs: Expr::Int(1) })
+            }
+            _ => Ok(Stmt::ExprStmt(lhs)),
+        }
+    }
+
+    // -- expressions (precedence climbing) ----------------------------------------
+
+    fn expr(&mut self) -> PResult<Expr> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> PResult<Expr> {
+        let cond = self.lor()?;
+        if *self.peek() == Tok::Question {
+            self.next();
+            let a = self.expr()?;
+            self.expect(Tok::Colon)?;
+            let b = self.ternary()?;
+            Ok(Expr::Ternary(Box::new(cond), Box::new(a), Box::new(b)))
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn lor(&mut self) -> PResult<Expr> {
+        let mut e = self.land()?;
+        while *self.peek() == Tok::PipePipe {
+            self.next();
+            let r = self.land()?;
+            e = Expr::Binary(BinOp::LOr, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn land(&mut self) -> PResult<Expr> {
+        let mut e = self.bitor()?;
+        while *self.peek() == Tok::AmpAmp {
+            self.next();
+            let r = self.bitor()?;
+            e = Expr::Binary(BinOp::LAnd, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn bitor(&mut self) -> PResult<Expr> {
+        let mut e = self.bitxor()?;
+        while *self.peek() == Tok::Pipe {
+            self.next();
+            let r = self.bitxor()?;
+            e = Expr::Binary(BinOp::Or, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn bitxor(&mut self) -> PResult<Expr> {
+        let mut e = self.bitand()?;
+        while *self.peek() == Tok::Caret {
+            self.next();
+            let r = self.bitand()?;
+            e = Expr::Binary(BinOp::Xor, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn bitand(&mut self) -> PResult<Expr> {
+        let mut e = self.equality()?;
+        while *self.peek() == Tok::Amp {
+            self.next();
+            let r = self.equality()?;
+            e = Expr::Binary(BinOp::And, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn equality(&mut self) -> PResult<Expr> {
+        let mut e = self.relational()?;
+        loop {
+            let op = match self.peek() {
+                Tok::EqEq => BinOp::Eq,
+                Tok::BangEq => BinOp::Ne,
+                _ => break,
+            };
+            self.next();
+            let r = self.relational()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn relational(&mut self) -> PResult<Expr> {
+        let mut e = self.shift()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Lt => BinOp::Lt,
+                Tok::LtEq => BinOp::Le,
+                Tok::Gt => BinOp::Gt,
+                Tok::GtEq => BinOp::Ge,
+                _ => break,
+            };
+            self.next();
+            let r = self.shift()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn shift(&mut self) -> PResult<Expr> {
+        let mut e = self.additive()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Shl => BinOp::Shl,
+                Tok::Shr => BinOp::Shr,
+                _ => break,
+            };
+            self.next();
+            let r = self.additive()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn additive(&mut self) -> PResult<Expr> {
+        let mut e = self.multiplicative()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.next();
+            let r = self.multiplicative()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn multiplicative(&mut self) -> PResult<Expr> {
+        let mut e = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.next();
+            let r = self.unary()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn unary(&mut self) -> PResult<Expr> {
+        match self.peek().clone() {
+            Tok::Bang => {
+                self.next();
+                Ok(Expr::Unary(UnOp::Not, Box::new(self.unary()?)))
+            }
+            Tok::Tilde => {
+                self.next();
+                Ok(Expr::Unary(UnOp::BitNot, Box::new(self.unary()?)))
+            }
+            Tok::Minus => {
+                self.next();
+                Ok(Expr::Unary(UnOp::Neg, Box::new(self.unary()?)))
+            }
+            Tok::Amp => {
+                self.next();
+                Ok(Expr::AddrOf(Box::new(self.unary()?)))
+            }
+            Tok::LParen => {
+                // cast or parenthesized expression
+                let save = self.pos;
+                self.next();
+                if self.starts_type() {
+                    let ty = self.parse_type()?;
+                    if *self.peek() == Tok::RParen {
+                        self.next();
+                        let inner = self.unary()?;
+                        return Ok(Expr::Cast(ty, Box::new(inner)));
+                    }
+                }
+                self.pos = save;
+                self.next(); // consume '('
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(self.postfix(e)?)
+            }
+            _ => {
+                let p = self.primary()?;
+                self.postfix(p)
+            }
+        }
+    }
+
+    fn postfix(&mut self, mut e: Expr) -> PResult<Expr> {
+        loop {
+            match self.peek() {
+                Tok::Arrow => {
+                    self.next();
+                    let f = self.ident()?;
+                    e = Expr::Arrow(Box::new(e), f);
+                }
+                Tok::Dot => {
+                    self.next();
+                    let f = self.ident()?;
+                    e = Expr::Dot(Box::new(e), f);
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> PResult<Expr> {
+        match self.next() {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Ident(name) => {
+                if *self.peek() == Tok::LParen {
+                    self.next();
+                    let mut args = Vec::new();
+                    if *self.peek() != Tok::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if *self.peek() == Tok::Comma {
+                                self.next();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Ident(name))
+                }
+            }
+            other => self.err(format!("unexpected token {} in expression", other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_listing1_tuner() {
+        // the paper's Listing 1 tuner, nearly verbatim
+        let src = r#"
+struct latency_state {
+    __u64 avg_latency_ns;
+    __u64 channels;
+};
+
+BPF_MAP(latency_map, BPF_MAP_TYPE_HASH, __u32, struct latency_state, 64);
+
+SEC("tuner")
+int size_aware_adaptive(struct policy_context *ctx) {
+    __u32 key = ctx->comm_id;
+    struct latency_state *st =
+        bpf_map_lookup_elem(&latency_map, &key);
+    if (!st) { ctx->n_channels = 4; return 0; }
+    if (ctx->msg_size <= 32 * 1024)
+        ctx->algorithm = NCCL_ALGO_TREE;
+    else
+        ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    if (st->avg_latency_ns > 1000000)
+        ctx->n_channels = min(st->channels + 1, 16);
+    else
+        ctx->n_channels = st->channels;
+    return 0;
+}
+"#;
+        let u = parse(src).unwrap();
+        assert_eq!(u.structs.len(), 1);
+        assert_eq!(u.maps.len(), 1);
+        assert_eq!(u.funcs.len(), 1);
+        let f = &u.funcs[0];
+        assert_eq!(f.section, "tuner");
+        assert_eq!(f.name, "size_aware_adaptive");
+        assert_eq!(f.ctx_struct, "policy_context");
+        assert!(f.body.len() >= 5);
+        // map decl sanity
+        let m = &u.maps[0];
+        assert_eq!(m.kind, MapKind::Hash);
+        assert_eq!(m.max_entries, 64);
+    }
+
+    #[test]
+    fn parse_for_loop() {
+        let src = r#"
+SEC("tuner")
+int loopy(struct policy_context *ctx) {
+    __u64 sum = 0;
+    __u64 i;
+    for (i = 0; i < 8; i++) {
+        sum += i;
+    }
+    ctx->n_channels = (__u32) sum;
+    return 0;
+}
+"#;
+        let u = parse(src).unwrap();
+        let f = &u.funcs[0];
+        assert!(matches!(f.body[2], Stmt::For { .. }));
+    }
+
+    #[test]
+    fn parse_operators_and_ternary() {
+        let src = r#"
+SEC("tuner")
+int ops(struct policy_context *ctx) {
+    __u64 x = (ctx->msg_size >> 20) & 0xff;
+    __u64 y = x == 4 || x == 8 ? 1 : 0;
+    if (x >= 2 && x <= 128) { ctx->n_channels = (__u32)(y + 1); }
+    return 0;
+}
+"#;
+        let u = parse(src).unwrap();
+        assert_eq!(u.funcs[0].body.len(), 4); // 2 decls, if, return
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let e = parse("SEC(\"tuner\")\nint f(struct c *x) {\n  retur 0;\n}").unwrap_err();
+        assert_eq!(e.line, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_map_type() {
+        let e = parse("BPF_MAP(m, BPF_MAP_TYPE_RINGBUF, __u32, __u64, 4);").unwrap_err();
+        assert!(e.message.contains("unknown map type"));
+    }
+
+    #[test]
+    fn struct_def_vs_usage_disambiguation() {
+        let src = r#"
+struct s { __u32 a; };
+BPF_MAP(m, BPF_MAP_TYPE_ARRAY, __u32, struct s, 4);
+SEC("profiler")
+int p(struct profiler_context *ctx) {
+    struct s *v = bpf_map_lookup_elem(&m, &ctx->comm_id);
+    if (!v) return 0;
+    return 0;
+}
+"#;
+        let u = parse(src).unwrap();
+        assert_eq!(u.structs.len(), 1);
+        assert_eq!(u.funcs.len(), 1);
+    }
+}

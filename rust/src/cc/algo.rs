@@ -1,0 +1,520 @@
+//! Collective algorithms with *real* data movement.
+//!
+//! Ranks are modeled as slots in a `&mut [Vec<f32>]` buffer table; each
+//! algorithm performs the exact chunked transfer/reduce schedule the GPU
+//! implementation would, with protocol framing applied per hop (LL /
+//! LL128 pack+unpack with flag validation — see [`super::proto`]).
+//! Timing is *not* measured here (host memcpy speed is meaningless for
+//! NVLink); the [`super::perfmodel`] supplies modeled time.
+//!
+//! The reduction operator is pluggable ([`Reducer`]): the default is a
+//! native f32 sum; the runtime can substitute the AOT-compiled Pallas
+//! `reduce_chunk` executable so the ring's reduction runs through the
+//! same artifact a TPU deployment would (integration-tested in
+//! `rust/tests/integration_runtime.rs`).
+
+use super::proto::{transfer, Proto};
+use super::types::{Algo, CollType};
+
+/// Pluggable elementwise reduction (sum) used by reduce paths.
+///
+/// Not `Send`/`Sync`: the engine executes collectives on one thread
+/// (rank loops are sequential in-process), and the PJRT-backed reducer
+/// wraps an `Rc`-based client.
+pub trait Reducer {
+    /// acc[i] += src[i]
+    fn reduce_into(&self, acc: &mut [f32], src: &[f32]);
+}
+
+/// Plain Rust f32 sum (auto-vectorized by LLVM).
+pub struct NativeSum;
+
+impl Reducer for NativeSum {
+    fn reduce_into(&self, acc: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        for (a, s) in acc.iter_mut().zip(src) {
+            *a += s;
+        }
+    }
+}
+
+/// Execution statistics (asserted on by tests and reported by benches).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MoveStats {
+    /// payload bytes that crossed between rank buffers
+    pub bytes_moved: u64,
+    /// number of elementwise reduce_into invocations
+    pub reduce_ops: u64,
+    /// serialized communication steps
+    pub steps: u64,
+}
+
+fn f32s_as_bytes(s: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4) }
+}
+
+fn bytes_to_f32s(b: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(b.len() / 4);
+    for c in b.chunks_exact(4) {
+        out.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+}
+
+/// Send `src` through the protocol wire into a scratch payload buffer,
+/// returning the received floats. Panics on flag corruption (cannot
+/// happen without memory bugs — that is the point of the validation).
+fn hop(proto: Proto, src: &[f32], seq: u64, scratch: &mut Vec<u8>, out: &mut Vec<f32>) -> usize {
+    transfer(proto, f32s_as_bytes(src), seq, scratch).expect("protocol transfer");
+    bytes_to_f32s(scratch, out);
+    src.len() * 4
+}
+
+/// Chunk boundaries: split `len` elements into `nchunks` nearly equal
+/// contiguous ranges (empty ranges allowed when len < nchunks).
+pub fn chunk_ranges(len: usize, nchunks: usize) -> Vec<std::ops::Range<usize>> {
+    let nchunks = nchunks.max(1);
+    let base = len / nchunks;
+    let rem = len % nchunks;
+    let mut out = Vec::with_capacity(nchunks);
+    let mut start = 0;
+    for i in 0..nchunks {
+        let sz = base + usize::from(i < rem);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+/// Ring AllReduce: reduce-scatter then allgather, `nchannels` ways.
+///
+/// Data is split into `nranks × nchannels` chunks; channel c of rank r
+/// owns chunk index (r, c). In the reduce-scatter phase, step s moves
+/// chunk (r - s - 1 mod n) from rank r to rank r+1, accumulating; after
+/// n-1 steps rank r holds the full sum of chunk (r+1 mod n). The
+/// allgather phase circulates the reduced chunks back around.
+pub fn ring_all_reduce(
+    bufs: &mut [Vec<f32>],
+    proto: Proto,
+    nchannels: usize,
+    red: &dyn Reducer,
+) -> MoveStats {
+    let n = bufs.len();
+    assert!(n >= 2, "need >= 2 ranks");
+    let len = bufs[0].len();
+    let mut stats = MoveStats::default();
+    // per-rank slicing: n major chunks, each split into nchannels
+    let major = chunk_ranges(len, n);
+    let mut scratch = Vec::new();
+    let mut recv = Vec::new();
+
+    // reduce-scatter: n-1 steps
+    for step in 0..n - 1 {
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            // chunk that rank r forwards this step
+            let ci = (r + n - step) % n;
+            let range = major[ci].clone();
+            for ch in chunk_ranges(range.len(), nchannels) {
+                let (s, e) = (range.start + ch.start, range.start + ch.end);
+                if s == e {
+                    continue;
+                }
+                let src_slice = &bufs[r][s..e];
+                stats.bytes_moved += hop(proto, src_slice, (step * n + r) as u64, &mut scratch, &mut recv) as u64;
+                red.reduce_into(&mut bufs[dst][s..e], &recv);
+                stats.reduce_ops += 1;
+            }
+        }
+        stats.steps += 1;
+    }
+    // allgather: n-1 steps; rank r starts owning fully-reduced chunk (r+1)%n... after
+    // n-1 reduce steps, rank r holds the complete sum for chunk (r+1)%n.
+    for step in 0..n - 1 {
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let ci = (r + 1 + n - step) % n;
+            let range = major[ci].clone();
+            for ch in chunk_ranges(range.len(), nchannels) {
+                let (s, e) = (range.start + ch.start, range.start + ch.end);
+                if s == e {
+                    continue;
+                }
+                let src_slice = &bufs[r][s..e];
+                stats.bytes_moved +=
+                    hop(proto, src_slice, (0x1000 + step * n + r) as u64, &mut scratch, &mut recv)
+                        as u64;
+                bufs[dst][s..e].copy_from_slice(&recv);
+            }
+        }
+        stats.steps += 1;
+    }
+    stats
+}
+
+/// Binary-tree AllReduce: reduce up to rank 0, broadcast back down.
+pub fn tree_all_reduce(
+    bufs: &mut [Vec<f32>],
+    proto: Proto,
+    red: &dyn Reducer,
+) -> MoveStats {
+    let n = bufs.len();
+    let mut stats = MoveStats::default();
+    let mut scratch = Vec::new();
+    let mut recv = Vec::new();
+    // reduce phase: children send to parents level by level
+    let mut stride = 1;
+    while stride < n {
+        for r in (0..n).step_by(stride * 2) {
+            let child = r + stride;
+            if child < n {
+                let (a, b) = bufs.split_at_mut(child);
+                stats.bytes_moved +=
+                    hop(proto, &b[0], (stride + r) as u64, &mut scratch, &mut recv) as u64;
+                red.reduce_into(&mut a[r], &recv);
+                stats.reduce_ops += 1;
+            }
+        }
+        stride *= 2;
+        stats.steps += 1;
+    }
+    // broadcast phase
+    stride /= 2;
+    while stride >= 1 {
+        for r in (0..n).step_by(stride * 2) {
+            let child = r + stride;
+            if child < n {
+                let (a, b) = bufs.split_at_mut(child);
+                stats.bytes_moved +=
+                    hop(proto, &a[r], (0x2000 + stride + r) as u64, &mut scratch, &mut recv)
+                        as u64;
+                b[0].copy_from_slice(&recv);
+            }
+        }
+        if stride == 1 {
+            break;
+        }
+        stride /= 2;
+        stats.steps += 1;
+    }
+    stats.steps += 1;
+    stats
+}
+
+/// NVLS AllReduce: in-switch reduction emulation. Every rank injects its
+/// buffer into the (virtual) switch, which reduces and multicasts the
+/// result — 2 logical steps, matching the perfmodel's step count.
+pub fn nvls_all_reduce(
+    bufs: &mut [Vec<f32>],
+    proto: Proto,
+    red: &dyn Reducer,
+) -> MoveStats {
+    let len = bufs[0].len();
+    let mut stats = MoveStats::default();
+    let mut scratch = Vec::new();
+    let mut recv = Vec::new();
+    // switch accumulator
+    let mut acc = vec![0.0f32; len];
+    for (r, b) in bufs.iter().enumerate() {
+        stats.bytes_moved += hop(proto, b, r as u64, &mut scratch, &mut recv) as u64;
+        red.reduce_into(&mut acc, &recv);
+        stats.reduce_ops += 1;
+    }
+    stats.steps += 1;
+    for (r, b) in bufs.iter_mut().enumerate() {
+        stats.bytes_moved +=
+            hop(proto, &acc, (0x3000 + r) as u64, &mut scratch, &mut recv) as u64;
+        b.copy_from_slice(&recv);
+    }
+    stats.steps += 1;
+    stats
+}
+
+/// Ring AllGather: each rank contributes its shard; output is the
+/// concatenation. `bufs[r]` must be the full-size output buffer with
+/// rank r's shard already in place at chunk r.
+pub fn ring_all_gather(bufs: &mut [Vec<f32>], proto: Proto) -> MoveStats {
+    let n = bufs.len();
+    let len = bufs[0].len();
+    let major = chunk_ranges(len, n);
+    let mut stats = MoveStats::default();
+    let mut scratch = Vec::new();
+    let mut recv = Vec::new();
+    for step in 0..n - 1 {
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let ci = (r + n - step) % n;
+            let range = major[ci].clone();
+            if range.is_empty() {
+                continue;
+            }
+            let src_slice = &bufs[r][range.clone()];
+            stats.bytes_moved +=
+                hop(proto, src_slice, (step * n + r) as u64, &mut scratch, &mut recv) as u64;
+            bufs[dst][range].copy_from_slice(&recv);
+        }
+        stats.steps += 1;
+    }
+    stats
+}
+
+/// Ring ReduceScatter: after the call, rank r's chunk r holds the sum of
+/// all ranks' chunk r (other regions are scratch).
+pub fn ring_reduce_scatter(
+    bufs: &mut [Vec<f32>],
+    proto: Proto,
+    red: &dyn Reducer,
+) -> MoveStats {
+    let n = bufs.len();
+    let len = bufs[0].len();
+    let major = chunk_ranges(len, n);
+    let mut stats = MoveStats::default();
+    let mut scratch = Vec::new();
+    let mut recv = Vec::new();
+    for step in 0..n - 1 {
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let ci = (r + 2 * n - step - 1) % n;
+            let range = major[ci].clone();
+            if range.is_empty() {
+                continue;
+            }
+            let src_slice = &bufs[r][range.clone()];
+            stats.bytes_moved +=
+                hop(proto, src_slice, (step * n + r) as u64, &mut scratch, &mut recv) as u64;
+            red.reduce_into(&mut bufs[dst][range], &recv);
+            stats.reduce_ops += 1;
+        }
+        stats.steps += 1;
+    }
+    stats
+}
+
+/// Broadcast from `root` along the ring.
+pub fn ring_broadcast(bufs: &mut [Vec<f32>], proto: Proto, root: usize) -> MoveStats {
+    let n = bufs.len();
+    let mut stats = MoveStats::default();
+    let mut scratch = Vec::new();
+    let mut recv = Vec::new();
+    for step in 0..n - 1 {
+        let src = (root + step) % n;
+        let dst = (root + step + 1) % n;
+        let (lo, hi) = if src < dst {
+            let (a, b) = bufs.split_at_mut(dst);
+            (&a[src], &mut b[0])
+        } else {
+            let (a, b) = bufs.split_at_mut(src);
+            (&b[0], &mut a[dst])
+        };
+        stats.bytes_moved += hop(proto, lo, step as u64, &mut scratch, &mut recv) as u64;
+        hi.copy_from_slice(&recv);
+        stats.steps += 1;
+    }
+    stats
+}
+
+/// Dispatch a collective by (type, algo). Returns stats.
+pub fn run_collective(
+    coll: CollType,
+    algo: Algo,
+    bufs: &mut [Vec<f32>],
+    proto: Proto,
+    nchannels: usize,
+    red: &dyn Reducer,
+) -> MoveStats {
+    match (coll, algo) {
+        (CollType::AllReduce, Algo::Ring) => ring_all_reduce(bufs, proto, nchannels, red),
+        (CollType::AllReduce, Algo::Tree) => tree_all_reduce(bufs, proto, red),
+        (CollType::AllReduce, Algo::Nvls) => nvls_all_reduce(bufs, proto, red),
+        (CollType::AllGather, _) => ring_all_gather(bufs, proto),
+        (CollType::ReduceScatter, _) => ring_reduce_scatter(bufs, proto, red),
+        (CollType::Broadcast, _) => ring_broadcast(bufs, proto, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::proto::ALL_PROTOS;
+    use crate::util::Rng;
+
+    fn make_bufs(n: usize, len: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.f32_range(-1.0, 1.0)).collect())
+            .collect();
+        let mut expect = vec![0.0f32; len];
+        for b in &bufs {
+            for (e, v) in expect.iter_mut().zip(b) {
+                *e += v;
+            }
+        }
+        (bufs, expect)
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "{}: idx {} got {} want {}",
+                what,
+                i,
+                g,
+                w
+            );
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_correct_all_protocols() {
+        for proto in ALL_PROTOS {
+            for n in [2usize, 3, 4, 8] {
+                for len in [1usize, 7, 64, 1000] {
+                    let (mut bufs, expect) = make_bufs(n, len, 42);
+                    let stats = ring_all_reduce(&mut bufs, proto, 4, &NativeSum);
+                    for r in 0..n {
+                        assert_close(
+                            &bufs[r],
+                            &expect,
+                            2e-5,
+                            &format!("ring n={} len={} {:?} rank {}", n, len, proto, r),
+                        );
+                    }
+                    assert_eq!(stats.steps as usize, 2 * (n - 1));
+                    if len >= n {
+                        assert!(stats.bytes_moved > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_all_reduce_correct() {
+        for n in [2usize, 3, 4, 5, 8] {
+            let (mut bufs, expect) = make_bufs(n, 257, 7);
+            tree_all_reduce(&mut bufs, Proto::Simple, &NativeSum);
+            for r in 0..n {
+                assert_close(&bufs[r], &expect, 2e-5, &format!("tree n={} rank {}", n, r));
+            }
+        }
+    }
+
+    #[test]
+    fn nvls_all_reduce_correct() {
+        for n in [2usize, 4, 8] {
+            let (mut bufs, expect) = make_bufs(n, 500, 9);
+            let stats = nvls_all_reduce(&mut bufs, Proto::Simple, &NativeSum);
+            for r in 0..n {
+                assert_close(&bufs[r], &expect, 2e-5, &format!("nvls n={} rank {}", n, r));
+            }
+            assert_eq!(stats.steps, 2);
+            assert_eq!(stats.reduce_ops as usize, n);
+        }
+    }
+
+    #[test]
+    fn algorithms_agree_with_each_other() {
+        let (bufs0, _) = make_bufs(8, 333, 11);
+        let mut a = bufs0.clone();
+        let mut b = bufs0.clone();
+        let mut c = bufs0.clone();
+        ring_all_reduce(&mut a, Proto::Ll128, 8, &NativeSum);
+        tree_all_reduce(&mut b, Proto::Ll, &NativeSum);
+        nvls_all_reduce(&mut c, Proto::Simple, &NativeSum);
+        for r in 0..8 {
+            assert_close(&a[r], &b[r], 5e-5, "ring vs tree");
+            assert_close(&a[r], &c[r], 5e-5, "ring vs nvls");
+        }
+    }
+
+    #[test]
+    fn all_gather_correct() {
+        let n = 4;
+        let len = 403;
+        let ranges = chunk_ranges(len, n);
+        // rank r has its shard at chunk r; rest zero
+        let mut rng = Rng::new(5);
+        let full: Vec<f32> = (0..len).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut bufs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut b = vec![0.0f32; len];
+                b[ranges[r].clone()].copy_from_slice(&full[ranges[r].clone()]);
+                b
+            })
+            .collect();
+        ring_all_gather(&mut bufs, Proto::Ll);
+        for r in 0..n {
+            assert_close(&bufs[r], &full, 0.0, &format!("allgather rank {}", r));
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_correct() {
+        let n = 4;
+        let len = 128;
+        let (mut bufs, expect) = make_bufs(n, len, 13);
+        ring_reduce_scatter(&mut bufs, Proto::Simple, &NativeSum);
+        let ranges = chunk_ranges(len, n);
+        for r in 0..n {
+            assert_close(
+                &bufs[r][ranges[r].clone()],
+                &expect[ranges[r].clone()],
+                2e-5,
+                &format!("reduce_scatter rank {}", r),
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_correct() {
+        let n = 5;
+        let len = 77;
+        let (mut bufs, _) = make_bufs(n, len, 17);
+        let root_data = bufs[2].clone();
+        ring_broadcast(&mut bufs, Proto::Ll128, 2);
+        for r in 0..n {
+            assert_close(&bufs[r], &root_data, 0.0, &format!("broadcast rank {}", r));
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for len in [0usize, 1, 5, 16, 100, 1023] {
+            for nc in [1usize, 2, 3, 8, 32] {
+                let rs = chunk_ranges(len, nc);
+                assert_eq!(rs.len(), nc);
+                assert_eq!(rs[0].start, 0);
+                assert_eq!(rs.last().unwrap().end, len);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn channel_count_does_not_change_result() {
+        for nch in [1usize, 2, 7, 32] {
+            let (mut bufs, expect) = make_bufs(4, 211, 23);
+            ring_all_reduce(&mut bufs, Proto::Simple, nch, &NativeSum);
+            assert_close(&bufs[0], &expect, 2e-5, &format!("nch={}", nch));
+        }
+    }
+
+    #[test]
+    fn run_collective_dispatch() {
+        let (mut bufs, expect) = make_bufs(4, 100, 29);
+        let stats = run_collective(
+            CollType::AllReduce,
+            Algo::Ring,
+            &mut bufs,
+            Proto::Simple,
+            2,
+            &NativeSum,
+        );
+        assert!(stats.reduce_ops > 0);
+        assert_close(&bufs[3], &expect, 2e-5, "dispatch");
+    }
+}

@@ -1,0 +1,27 @@
+//! Collective-communication substrate ("NCCL-sim"): the library whose
+//! plugin hooks NCCLbpf extends. See DESIGN.md §2 for the substitution
+//! rationale (no GPUs / real NCCL in this environment).
+//!
+//! - [`topo`] — node topology (8x B300 NVLink model, PCIe fallback)
+//! - [`proto`] — LL / LL128 / Simple wire protocols (real pack/unpack)
+//! - [`algo`] — Ring / Tree / NVLS with real data movement
+//! - [`perfmodel`] — calibrated alpha-beta-gamma timing model (Table 2)
+//! - [`comm`] — communicator: tuner/profiler hooks + simulated clock
+//! - [`plugin`] — the plugin ABI (cost-table tuner, profiler events)
+//! - [`net`] — Socket transport + the eBPF wrapper hook
+
+pub mod algo;
+pub mod comm;
+pub mod net;
+pub mod perfmodel;
+pub mod plugin;
+pub mod proto;
+pub mod topo;
+pub mod types;
+
+pub use comm::{CollResult, Communicator, DataMode};
+pub use perfmodel::PerfModel;
+pub use plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin, COST_SENTINEL};
+pub use proto::Proto;
+pub use topo::Topology;
+pub use types::{Algo, CollConfig, CollType, MAX_CHANNELS};

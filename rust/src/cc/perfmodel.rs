@@ -1,0 +1,383 @@
+//! α-β-γ performance model of collective execution time.
+//!
+//! Since no GPUs are available in this reproduction, collective *timing*
+//! comes from an analytic model calibrated against the paper's own
+//! measurements (Table 2: 8×B300 NVLink, NCCL 2.29.7) — see DESIGN.md §2
+//! for why this preserves the behaviour under study: tuner decisions
+//! must have real performance consequences with the paper's crossover
+//! structure (Ring wins 4–128 MiB, NVLS wins ≥256 MiB, 1-channel
+//! configs collapse, LL wins tiny messages).
+//!
+//! Structure, per (algorithm, protocol, channels, size):
+//!
+//! ```text
+//!   time = launch + steps·hop_lat·proto_lat + wire_bytes / wire_bw
+//!   wire_bw = min(link_bw, nchannels · per_channel_bw)
+//!   busbw  = factor(coll, n) · S / time · correction_algo(S)
+//! ```
+//!
+//! The correction spline (log₂-size interpolated) anchors the
+//! *default-configuration* Ring and NVLS curves to Table 2 exactly;
+//! channel-count and protocol effects stay analytic so off-default
+//! configurations (the sweep, bad_channels, LL-vs-Simple) respond the
+//! way the hardware would.
+
+use super::topo::Topology;
+use super::types::{Algo, CollConfig, CollType};
+use crate::cc::proto::Proto;
+
+/// Fixed kernel-launch + rendezvous overhead per collective (the ~32 µs
+/// small-message NVLink baseline in §5.1).
+const LAUNCH_NS: f64 = 30_000.0;
+
+/// Per-channel wire bandwidth (GB/s): 32 channels saturate the 900 GB/s
+/// per-direction NVLink injection rate.
+const PER_CHANNEL_GBPS: f64 = 30.0;
+
+/// NVLS effective injection bandwidth cap (GB/s): in-switch reduction
+/// achieves higher large-message busbw (Table 2: 836 GB/s at 8 GiB →
+/// 836 / 1.75 ≈ 478 GB/s algorithmic).
+const NVLS_BW_GBPS: f64 = 478.0;
+
+/// Table 2 anchors: (size_bytes, default/NVLS busbw, Ring-32ch busbw).
+const TABLE2_ANCHORS: [(usize, f64, f64); 8] = [
+    (4 << 20, 133.5, 148.1),
+    (8 << 20, 196.3, 249.7),
+    (16 << 20, 278.8, 337.4),
+    (32 << 20, 349.3, 402.4),
+    (64 << 20, 425.2, 471.8),
+    (128 << 20, 596.9, 628.9),
+    (256 << 20, 656.5, 632.5),
+    (8 << 30, 836.3, 697.6),
+];
+
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub topo: Topology,
+    /// log2(size) -> correction multiplier, per algorithm
+    ring_corr: Vec<(f64, f64)>,
+    nvls_corr: Vec<(f64, f64)>,
+}
+
+impl PerfModel {
+    pub fn new(topo: Topology) -> PerfModel {
+        let mut m = PerfModel { topo, ring_corr: vec![], nvls_corr: vec![] };
+        // calibrate: correction = paper / analytic at each anchor, using
+        // each algorithm's *default* config (Ring: 32ch best-proto;
+        // NVLS: NCCL default channel count).
+        for &(size, nvls_bw, ring_bw) in &TABLE2_ANCHORS {
+            let ring_analytic = (0..3)
+                .map(|p| {
+                    m.busbw_uncorrected(
+                        CollType::AllReduce,
+                        CollConfig::new(Algo::Ring, Proto::from_index(p).unwrap(), 32),
+                        size,
+                    )
+                })
+                .fold(0.0f64, f64::max);
+            let nvls_analytic = m.busbw_uncorrected(
+                CollType::AllReduce,
+                CollConfig::new(Algo::Nvls, Proto::Simple, 16),
+                size,
+            );
+            let l = (size as f64).log2();
+            m.ring_corr.push((l, ring_bw / ring_analytic));
+            m.nvls_corr.push((l, nvls_bw / nvls_analytic));
+        }
+        m
+    }
+
+    fn correction(&self, algo: Algo, nbytes: usize) -> f64 {
+        let tbl = match algo {
+            Algo::Ring => &self.ring_corr,
+            Algo::Nvls => &self.nvls_corr,
+            Algo::Tree => return 1.0,
+        };
+        if tbl.is_empty() {
+            return 1.0;
+        }
+        let l = (nbytes.max(1) as f64).log2();
+        if l <= tbl[0].0 {
+            // below the anchored range, hold the first anchor's
+            // correction constant: a size-varying fade would make
+            // modeled time non-monotonic in the latency-dominated
+            // regime (caught by the property tests).
+            return tbl[0].1;
+        }
+        if l >= tbl[tbl.len() - 1].0 {
+            return tbl[tbl.len() - 1].1;
+        }
+        for w in tbl.windows(2) {
+            let (l0, c0) = w[0];
+            let (l1, c1) = w[1];
+            if l >= l0 && l <= l1 {
+                let t = (l - l0) / (l1 - l0);
+                return c0 + (c1 - c0) * t;
+            }
+        }
+        1.0
+    }
+
+    /// Number of serialized communication steps for the algorithm.
+    pub fn steps(&self, algo: Algo, coll: CollType) -> f64 {
+        let n = self.topo.n_ranks as f64;
+        match (algo, coll) {
+            (Algo::Ring, CollType::AllReduce) => 2.0 * (n - 1.0),
+            (Algo::Ring, _) => n - 1.0,
+            (Algo::Tree, CollType::AllReduce) => 2.0 * n.log2().ceil(),
+            (Algo::Tree, _) => n.log2().ceil(),
+            (Algo::Nvls, CollType::AllReduce) => 2.0,
+            (Algo::Nvls, _) => 2.0,
+        }
+    }
+
+    /// Payload bytes each rank injects (per the algorithm's traffic
+    /// pattern), before protocol framing.
+    fn injected_bytes(&self, algo: Algo, coll: CollType, nbytes: usize) -> f64 {
+        let n = self.topo.n_ranks as f64;
+        let s = nbytes as f64;
+        match (algo, coll) {
+            (Algo::Ring, CollType::AllReduce) => 2.0 * (n - 1.0) / n * s,
+            (Algo::Ring, _) => (n - 1.0) / n * s,
+            (Algo::Tree, CollType::AllReduce) => 2.0 * s,
+            (Algo::Tree, _) => s,
+            (Algo::Nvls, CollType::AllReduce) => s,
+            // multicast fan-out: gather/scatter patterns inject roughly
+            // half the AllReduce traffic (calibrated to §5.3 stability:
+            // AllGather 128 MiB ≈ 565.6 GB/s ≈ 0.947× the AllReduce bw)
+            (Algo::Nvls, _) => 0.4676 * s,
+        }
+    }
+
+    /// Achievable payload-bandwidth fraction per protocol. This subsumes
+    /// wire framing *and* SM-side pack/sync costs: LL128's practical
+    /// ceiling is ~85 % of Simple (not the raw 120/128), which is what
+    /// puts the LL128→Simple crossover between 32 and 64 MiB — exactly
+    /// where the paper's nvlink_ring_mid_v2 policy switches.
+    fn bw_derate(proto: Proto) -> f64 {
+        match proto {
+            Proto::Ll => 0.5,
+            Proto::Ll128 => 0.85,
+            Proto::Simple => 1.0,
+        }
+    }
+
+    /// Effective wire bandwidth in bytes/ns (== GB/s × 1e-0 scale:
+    /// 1 GB/s = 1 byte/ns exactly in our units).
+    fn wire_bw(&self, algo: Algo, cfg: &CollConfig) -> f64 {
+        let ch_bw = cfg.nchannels as f64 * PER_CHANNEL_GBPS;
+        let cap = match algo {
+            Algo::Nvls => NVLS_BW_GBPS,
+            Algo::Tree => self.topo.link.bw_gbps * 0.85, // two-tree overlap loss
+            Algo::Ring => self.topo.link.bw_gbps,
+        };
+        ch_bw.min(cap)
+    }
+
+    fn time_ns_uncorrected(&self, coll: CollType, cfg: CollConfig, nbytes: usize) -> f64 {
+        let steps = self.steps(cfg.algo, coll);
+        let hop = self.topo.link.lat_ns * 4.0; // per-step sync cost
+        let lat = LAUNCH_NS + steps * hop * cfg.proto.latency_factor();
+        let wire = self.injected_bytes(cfg.algo, coll, nbytes) / Self::bw_derate(cfg.proto);
+        // GB/s == bytes/ns
+        lat + wire / self.wire_bw(cfg.algo, &cfg)
+    }
+
+    fn busbw_uncorrected(&self, coll: CollType, cfg: CollConfig, nbytes: usize) -> f64 {
+        let t = self.time_ns_uncorrected(coll, cfg, nbytes);
+        coll.busbw_factor(self.topo.n_ranks) * nbytes as f64 / t
+    }
+
+    /// Modeled execution time in nanoseconds.
+    pub fn time_ns(&self, coll: CollType, cfg: CollConfig, nbytes: usize) -> f64 {
+        let c = self.correction(cfg.algo, nbytes);
+        self.time_ns_uncorrected(coll, cfg, nbytes) / c
+    }
+
+    /// Modeled bus bandwidth in GB/s (nccl-tests definition).
+    pub fn busbw_gbps(&self, coll: CollType, cfg: CollConfig, nbytes: usize) -> f64 {
+        let t = self.time_ns(coll, cfg, nbytes);
+        coll.busbw_factor(self.topo.n_ranks) * nbytes as f64 / t
+    }
+
+    /// NCCL's default configuration on this topology (what 2.29.7 picks
+    /// with no tuner: NVLS everywhere on NVLink+SHARP nodes, §5.3).
+    pub fn default_config(&self, _coll: CollType, nbytes: usize) -> CollConfig {
+        if self.topo.nvls_capable {
+            CollConfig::new(Algo::Nvls, Proto::Simple, 16)
+        } else if nbytes <= 256 << 10 {
+            CollConfig::new(Algo::Tree, Proto::Ll, 8)
+        } else {
+            CollConfig::new(Algo::Ring, Proto::Simple, 16)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PerfModel {
+        PerfModel::new(Topology::nvlink_b300(8))
+    }
+
+    fn ring(ch: u32, p: Proto) -> CollConfig {
+        CollConfig::new(Algo::Ring, p, ch)
+    }
+
+    fn best_ring_32(m: &PerfModel, size: usize) -> f64 {
+        [Proto::Ll, Proto::Ll128, Proto::Simple]
+            .iter()
+            .map(|&p| m.busbw_gbps(CollType::AllReduce, ring(32, p), size))
+            .fold(0.0f64, f64::max)
+    }
+
+    #[test]
+    fn table2_anchors_reproduced() {
+        let m = model();
+        for &(size, nvls_bw, ring_bw) in &TABLE2_ANCHORS {
+            let nvls = m.busbw_gbps(
+                CollType::AllReduce,
+                CollConfig::new(Algo::Nvls, Proto::Simple, 16),
+                size,
+            );
+            let ring = best_ring_32(&m, size);
+            assert!(
+                (nvls - nvls_bw).abs() / nvls_bw < 0.01,
+                "NVLS at {}: model {:.1} vs paper {:.1}",
+                size,
+                nvls,
+                nvls_bw
+            );
+            assert!(
+                (ring - ring_bw).abs() / ring_bw < 0.01,
+                "Ring at {}: model {:.1} vs paper {:.1}",
+                size,
+                ring,
+                ring_bw
+            );
+        }
+    }
+
+    #[test]
+    fn ring_beats_nvls_in_mid_range_only() {
+        let m = model();
+        for mib in [4usize, 8, 16, 32, 64, 128] {
+            let s = mib << 20;
+            let ring = best_ring_32(&m, s);
+            let nvls =
+                m.busbw_gbps(CollType::AllReduce, m.default_config(CollType::AllReduce, s), s);
+            assert!(ring > nvls, "ring should win at {} MiB", mib);
+            let delta = (ring - nvls) / nvls;
+            assert!(delta > 0.04 && delta < 0.30, "delta at {} MiB = {:.3}", mib, delta);
+        }
+        for s in [256usize << 20, 8 << 30] {
+            let ring = best_ring_32(&m, s);
+            let nvls =
+                m.busbw_gbps(CollType::AllReduce, m.default_config(CollType::AllReduce, s), s);
+            assert!(nvls > ring, "NVLS should win at {} bytes", s);
+        }
+    }
+
+    #[test]
+    fn one_channel_collapses_throughput() {
+        // bad_channels (§5.3): 1 channel causes 87–95 % degradation
+        let m = model();
+        for mib in [16usize, 64, 128] {
+            let s = mib << 20;
+            let good =
+                m.busbw_gbps(CollType::AllReduce, m.default_config(CollType::AllReduce, s), s);
+            let bad = m.busbw_gbps(CollType::AllReduce, ring(1, Proto::Simple), s);
+            let degradation = 1.0 - bad / good;
+            assert!(
+                degradation > 0.75,
+                "1-channel degradation at {} MiB only {:.2}",
+                mib,
+                degradation
+            );
+        }
+    }
+
+    #[test]
+    fn ll_wins_tiny_simple_wins_large() {
+        let m = model();
+        let tiny = 8 << 10;
+        let t_ll = m.time_ns(CollType::AllReduce, ring(8, Proto::Ll), tiny);
+        let t_simple = m.time_ns(CollType::AllReduce, ring(8, Proto::Simple), tiny);
+        assert!(t_ll < t_simple);
+        let big = 256 << 20;
+        let b_ll = m.busbw_gbps(CollType::AllReduce, ring(32, Proto::Ll), big);
+        let b_simple = m.busbw_gbps(CollType::AllReduce, ring(32, Proto::Simple), big);
+        assert!(b_simple > b_ll);
+    }
+
+    #[test]
+    fn ll128_wins_ring_mid_range() {
+        // the paper's policy picks Ring/LL128 for 4–32 MiB and
+        // Ring/Simple for 64–192 MiB — the model must agree.
+        let m = model();
+        for mib in [4usize, 8, 16, 32] {
+            let s = mib << 20;
+            let ll128 = m.busbw_gbps(CollType::AllReduce, ring(32, Proto::Ll128), s);
+            let simple = m.busbw_gbps(CollType::AllReduce, ring(32, Proto::Simple), s);
+            assert!(ll128 > simple, "LL128 should win at {} MiB", mib);
+        }
+        for mib in [64usize, 128] {
+            let s = mib << 20;
+            let ll128 = m.busbw_gbps(CollType::AllReduce, ring(32, Proto::Ll128), s);
+            let simple = m.busbw_gbps(CollType::AllReduce, ring(32, Proto::Simple), s);
+            assert!(simple > ll128, "Simple should win at {} MiB", mib);
+        }
+    }
+
+    #[test]
+    fn small_message_latency_near_32us() {
+        let m = model();
+        let t = m.time_ns(CollType::AllReduce, m.default_config(CollType::AllReduce, 8), 8);
+        assert!(t > 25_000.0 && t < 45_000.0, "8B latency {} ns", t);
+    }
+
+    #[test]
+    fn time_monotonic_in_size() {
+        let m = model();
+        let cfg = ring(32, Proto::Simple);
+        let mut prev = 0.0;
+        for mib in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+            let t = m.time_ns(CollType::AllReduce, cfg, mib << 20);
+            assert!(t > prev, "time must grow with size at {} MiB", mib);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn more_channels_never_slower() {
+        let m = model();
+        let s = 64 << 20;
+        let mut prev = f64::INFINITY;
+        for ch in [1u32, 2, 4, 8, 16, 32] {
+            let t = m.time_ns(CollType::AllReduce, ring(ch, Proto::Simple), s);
+            assert!(t <= prev + 1.0, "{} channels slower than fewer", ch);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn allgather_128m_near_paper_stability_value() {
+        // §5.3 stability: default AllGather at 128 MiB ≈ 565.6 GB/s.
+        let m = model();
+        let s = 128 << 20;
+        let bw = m.busbw_gbps(CollType::AllGather, m.default_config(CollType::AllGather, s), s);
+        assert!(
+            (bw - 565.6).abs() / 565.6 < 0.12,
+            "AllGather busbw {:.1} too far from 565.6",
+            bw
+        );
+    }
+
+    #[test]
+    fn pcie_topology_has_no_nvls_default() {
+        let m = PerfModel::new(Topology::pcie_gen5(4));
+        let cfg = m.default_config(CollType::AllReduce, 64 << 20);
+        assert_ne!(cfg.algo, Algo::Nvls);
+    }
+}

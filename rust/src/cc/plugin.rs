@@ -1,0 +1,204 @@
+//! The plugin ABI of the collective engine — the extension points
+//! NCCLbpf attaches to (mirrors ncclTunerPlugin_v3/v5,
+//! ncclProfilerPlugin_v1 and the net plugin interface).
+//!
+//! The tuner contract follows NCCL's cost-table design (§4 "NCCL
+//! integration challenges"): the engine fills a 2-D [algorithm ×
+//! protocol] cost table with its own estimates; the tuner *modifies*
+//! the table (setting preferred entries to 0 and/or others to the 1e9
+//! sentinel) rather than returning an algorithm id, so the engine can
+//! fall back gracefully when the requested combination is unavailable.
+//! The engine also passes the maximum channel count the tuner must
+//! respect; the host clamps whatever the policy requests.
+
+use super::types::{Algo, CollConfig, CollType, Proto, ALL_ALGOS, MAX_CHANNELS};
+use super::proto::ALL_PROTOS;
+
+/// Sentinel cost marking a combination as unusable (NCCL uses 1e9).
+pub const COST_SENTINEL: f32 = 1e9;
+
+/// Arguments to a tuner decision (subset of ncclTuner getCollInfo).
+#[derive(Clone, Copy, Debug)]
+pub struct CollInfoArgs {
+    pub coll: CollType,
+    pub nbytes: usize,
+    pub nranks: usize,
+    /// stable communicator id (hashed from the comm pointer, §4)
+    pub comm_id: u64,
+    /// upper bound the tuner's channel request is clamped to
+    pub max_channels: u32,
+}
+
+/// The 2-D cost table (lower is better; COST_SENTINEL = unavailable).
+#[derive(Clone, Copy, Debug)]
+pub struct CostTable {
+    /// cost[algo.index()][proto.index()] in ns (engine estimate) or
+    /// 0 (tuner-preferred) or COST_SENTINEL (excluded)
+    pub cost: [[f32; 3]; 3],
+}
+
+impl CostTable {
+    pub fn all_sentinel() -> CostTable {
+        CostTable { cost: [[COST_SENTINEL; 3]; 3] }
+    }
+
+    pub fn get(&self, a: Algo, p: Proto) -> f32 {
+        self.cost[a.index()][p.index()]
+    }
+
+    pub fn set(&mut self, a: Algo, p: Proto, v: f32) {
+        self.cost[a.index()][p.index()] = v;
+    }
+
+    /// Mark (a, p) as the preferred combination (cost 0).
+    pub fn prefer(&mut self, a: Algo, p: Proto) {
+        self.set(a, p, 0.0);
+    }
+
+    /// Exclude a combination.
+    pub fn exclude(&mut self, a: Algo, p: Proto) {
+        self.set(a, p, COST_SENTINEL);
+    }
+
+    /// Lowest-cost available combination, if any entry is below the
+    /// sentinel. Ties break toward lower algo/proto index (stable).
+    pub fn argmin(&self) -> Option<(Algo, Proto)> {
+        let mut best: Option<(f32, Algo, Proto)> = None;
+        for &a in &ALL_ALGOS {
+            for &p in &ALL_PROTOS {
+                let c = self.get(a, p);
+                if c >= COST_SENTINEL {
+                    continue;
+                }
+                if best.map(|(bc, _, _)| c < bc).unwrap_or(true) {
+                    best = Some((c, a, p));
+                }
+            }
+        }
+        best.map(|(_, a, p)| (a, p))
+    }
+}
+
+/// Tuner plugin (ncclTunerPlugin_v3-style, in-place cost table).
+pub trait TunerPlugin: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Inspect `args`, mutate `cost`, and optionally request a channel
+    /// count by writing `*nchannels` (0 leaves the engine default).
+    fn get_coll_info(&self, args: &CollInfoArgs, cost: &mut CostTable, nchannels: &mut u32);
+}
+
+/// Profiler events (ncclProfilerPlugin_v1-style callbacks). Timestamps
+/// are simulation-clock ns.
+#[derive(Clone, Copy, Debug)]
+pub enum ProfilerEvent {
+    CollStart {
+        comm_id: u64,
+        seq: u64,
+        coll: CollType,
+        nbytes: usize,
+        cfg: CollConfig,
+        ts_ns: u64,
+    },
+    CollEnd {
+        comm_id: u64,
+        seq: u64,
+        coll: CollType,
+        nbytes: usize,
+        cfg: CollConfig,
+        ts_ns: u64,
+        /// modeled collective latency
+        latency_ns: u64,
+    },
+    /// net-plugin data-path events (per isend/irecv)
+    NetSend { comm_id: u64, peer: usize, bytes: usize },
+    NetRecv { comm_id: u64, peer: usize, bytes: usize },
+}
+
+/// Profiler plugin.
+pub trait ProfilerPlugin: Send + Sync {
+    fn name(&self) -> &str;
+    fn on_event(&self, ev: &ProfilerEvent);
+}
+
+/// A recording profiler used by tests and benches.
+#[derive(Default)]
+pub struct RecordingProfiler {
+    pub events: std::sync::Mutex<Vec<ProfilerEvent>>,
+}
+
+impl ProfilerPlugin for RecordingProfiler {
+    fn name(&self) -> &str {
+        "recording"
+    }
+    fn on_event(&self, ev: &ProfilerEvent) {
+        self.events.lock().unwrap().push(*ev);
+    }
+}
+
+/// A tuner that always prefers a fixed configuration (used for sweeps
+/// and as the native-baseline comparison point in Table 1).
+pub struct FixedTuner {
+    pub algo: Algo,
+    pub proto: Proto,
+    pub nchannels: u32,
+}
+
+impl TunerPlugin for FixedTuner {
+    fn name(&self) -> &str {
+        "fixed"
+    }
+    fn get_coll_info(&self, _args: &CollInfoArgs, cost: &mut CostTable, nchannels: &mut u32) {
+        cost.prefer(self.algo, self.proto);
+        *nchannels = self.nchannels.min(MAX_CHANNELS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_table_argmin_prefers_zero() {
+        let mut t = CostTable::all_sentinel();
+        assert_eq!(t.argmin(), None);
+        t.set(Algo::Nvls, Proto::Simple, 500.0);
+        t.prefer(Algo::Ring, Proto::Ll128);
+        assert_eq!(t.argmin(), Some((Algo::Ring, Proto::Ll128)));
+    }
+
+    #[test]
+    fn cost_table_fallback_when_preferred_excluded() {
+        let mut t = CostTable::all_sentinel();
+        t.set(Algo::Tree, Proto::Ll, 100.0);
+        // tuner prefers NVLS but the engine later excludes it
+        t.prefer(Algo::Nvls, Proto::Simple);
+        t.exclude(Algo::Nvls, Proto::Simple);
+        assert_eq!(t.argmin(), Some((Algo::Tree, Proto::Ll)));
+    }
+
+    #[test]
+    fn fixed_tuner_writes_preference() {
+        let tuner = FixedTuner { algo: Algo::Ring, proto: Proto::Simple, nchannels: 99 };
+        let mut cost = CostTable::all_sentinel();
+        cost.set(Algo::Nvls, Proto::Simple, 10.0);
+        let mut ch = 0;
+        let args = CollInfoArgs {
+            coll: CollType::AllReduce,
+            nbytes: 1024,
+            nranks: 8,
+            comm_id: 1,
+            max_channels: MAX_CHANNELS,
+        };
+        tuner.get_coll_info(&args, &mut cost, &mut ch);
+        assert_eq!(cost.argmin(), Some((Algo::Ring, Proto::Simple)));
+        assert_eq!(ch, MAX_CHANNELS); // clamped
+    }
+
+    #[test]
+    fn recording_profiler_records() {
+        let p = RecordingProfiler::default();
+        p.on_event(&ProfilerEvent::NetSend { comm_id: 1, peer: 2, bytes: 100 });
+        assert_eq!(p.events.lock().unwrap().len(), 1);
+    }
+}

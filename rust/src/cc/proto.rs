@@ -1,0 +1,293 @@
+//! NCCL wire protocols: Simple, LL, LL128 (Hu et al. 2025, §2).
+//!
+//! These are *real* pack/unpack implementations operating on byte
+//! buffers, not just efficiency constants:
+//!
+//! - **Simple** — raw data; receiver synchronization via chunk-level
+//!   flags (modeled in the latency term). 100 % wire efficiency,
+//!   highest sync latency.
+//! - **LL (low latency)** — every 8-byte line carries 4 B data + 4 B
+//!   flag; the receiver spins on the flag word, so no separate sync
+//!   round-trip is needed. 50 % wire efficiency, lowest latency.
+//! - **LL128** — every 128-byte line carries 120 B data + 8 B flag:
+//!   93.75 % efficiency with near-LL latency (requires NVLink-class
+//!   ordered interconnects, as on the paper's testbed).
+//!
+//! The Layer-1 Pallas kernel `ll_pack` implements the same LL line
+//! format; `python/tests` cross-validates the two implementations via
+//! the AOT artifact (see DESIGN.md §Hardware-Adaptation).
+
+/// Protocol selector (mirrors ncclProto).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Proto {
+    Ll,
+    Ll128,
+    Simple,
+}
+
+pub const ALL_PROTOS: [Proto; 3] = [Proto::Ll, Proto::Ll128, Proto::Simple];
+
+impl Proto {
+    pub fn index(self) -> usize {
+        match self {
+            Proto::Ll => 0,
+            Proto::Ll128 => 1,
+            Proto::Simple => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<Proto> {
+        match i {
+            0 => Some(Proto::Ll),
+            1 => Some(Proto::Ll128),
+            2 => Some(Proto::Simple),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Proto::Ll => "LL",
+            Proto::Ll128 => "LL128",
+            Proto::Simple => "Simple",
+        }
+    }
+
+    /// Fraction of wire bytes that carry payload.
+    pub fn wire_efficiency(self) -> f64 {
+        match self {
+            Proto::Ll => 0.5,
+            Proto::Ll128 => 120.0 / 128.0,
+            Proto::Simple => 1.0,
+        }
+    }
+
+    /// Per-hop synchronization latency factor relative to Simple
+    /// (LL avoids the chunk-completion round trip entirely).
+    pub fn latency_factor(self) -> f64 {
+        match self {
+            Proto::Ll => 0.28,
+            Proto::Ll128 => 0.48,
+            Proto::Simple => 1.0,
+        }
+    }
+
+    /// Wire bytes needed to carry `payload` bytes.
+    pub fn wire_bytes(self, payload: usize) -> usize {
+        match self {
+            Proto::Ll => {
+                // 4B data per 8B line
+                payload.div_ceil(4) * 8
+            }
+            Proto::Ll128 => {
+                // 120B data per 128B line
+                payload.div_ceil(120) * 128
+            }
+            Proto::Simple => payload,
+        }
+    }
+}
+
+/// LL line layout: [data: u32][flag: u32] per 8 bytes.
+pub const LL_DATA_PER_LINE: usize = 4;
+pub const LL_LINE: usize = 8;
+/// LL128 line layout: [data: 120B][flag: u64] per 128 bytes.
+pub const LL128_DATA_PER_LINE: usize = 120;
+pub const LL128_LINE: usize = 128;
+
+/// Pack `payload` into LL wire format with `flag` (sequence number).
+/// The final partial line is zero-padded.
+pub fn ll_pack(payload: &[u8], flag: u32, out: &mut Vec<u8>) {
+    out.clear();
+    let nlines = payload.len().div_ceil(LL_DATA_PER_LINE);
+    out.reserve(nlines * LL_LINE);
+    for i in 0..nlines {
+        let start = i * LL_DATA_PER_LINE;
+        let end = (start + LL_DATA_PER_LINE).min(payload.len());
+        let mut data = [0u8; 4];
+        data[..end - start].copy_from_slice(&payload[start..end]);
+        out.extend_from_slice(&data);
+        out.extend_from_slice(&flag.to_le_bytes());
+    }
+}
+
+/// Unpack LL wire data, validating every line's flag. Returns the
+/// payload length written into `out` or an error naming the bad line.
+pub fn ll_unpack(wire: &[u8], flag: u32, payload_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    if wire.len() % LL_LINE != 0 {
+        return Err(format!("LL wire length {} not a multiple of {}", wire.len(), LL_LINE));
+    }
+    out.clear();
+    out.reserve(payload_len);
+    for (i, line) in wire.chunks_exact(LL_LINE).enumerate() {
+        let got = u32::from_le_bytes(line[4..8].try_into().unwrap());
+        if got != flag {
+            return Err(format!("LL flag mismatch at line {}: got {:#x} want {:#x}", i, got, flag));
+        }
+        let take = LL_DATA_PER_LINE.min(payload_len - out.len());
+        out.extend_from_slice(&line[..take]);
+        if out.len() == payload_len {
+            break;
+        }
+    }
+    if out.len() != payload_len {
+        return Err(format!("LL wire too short: got {} of {} payload bytes", out.len(), payload_len));
+    }
+    Ok(())
+}
+
+/// Pack `payload` into LL128 wire format.
+pub fn ll128_pack(payload: &[u8], flag: u64, out: &mut Vec<u8>) {
+    out.clear();
+    let nlines = payload.len().div_ceil(LL128_DATA_PER_LINE);
+    out.reserve(nlines * LL128_LINE);
+    for i in 0..nlines {
+        let start = i * LL128_DATA_PER_LINE;
+        let end = (start + LL128_DATA_PER_LINE).min(payload.len());
+        let mut data = [0u8; LL128_DATA_PER_LINE];
+        data[..end - start].copy_from_slice(&payload[start..end]);
+        out.extend_from_slice(&data);
+        out.extend_from_slice(&flag.to_le_bytes());
+    }
+}
+
+/// Unpack LL128 wire data, validating flags.
+pub fn ll128_unpack(
+    wire: &[u8],
+    flag: u64,
+    payload_len: usize,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    if wire.len() % LL128_LINE != 0 {
+        return Err(format!("LL128 wire length {} not a multiple of {}", wire.len(), LL128_LINE));
+    }
+    out.clear();
+    out.reserve(payload_len);
+    for (i, line) in wire.chunks_exact(LL128_LINE).enumerate() {
+        let got = u64::from_le_bytes(line[LL128_DATA_PER_LINE..].try_into().unwrap());
+        if got != flag {
+            return Err(format!("LL128 flag mismatch at line {}: got {:#x} want {:#x}", i, got, flag));
+        }
+        let take = LL128_DATA_PER_LINE.min(payload_len - out.len());
+        out.extend_from_slice(&line[..take]);
+        if out.len() == payload_len {
+            break;
+        }
+    }
+    if out.len() != payload_len {
+        return Err(format!(
+            "LL128 wire too short: got {} of {} payload bytes",
+            out.len(),
+            payload_len
+        ));
+    }
+    Ok(())
+}
+
+/// Transport a payload through a protocol: pack on the sender, unpack
+/// (with flag validation) on the receiver. Simple is a plain copy.
+pub fn transfer(proto: Proto, payload: &[u8], seq: u64, out: &mut Vec<u8>) -> Result<(), String> {
+    match proto {
+        Proto::Simple => {
+            out.clear();
+            out.extend_from_slice(payload);
+            Ok(())
+        }
+        Proto::Ll => {
+            let mut wire = Vec::new();
+            ll_pack(payload, seq as u32 | 1, &mut wire); // flags are nonzero
+            ll_unpack(&wire, seq as u32 | 1, payload.len(), out)
+        }
+        Proto::Ll128 => {
+            let mut wire = Vec::new();
+            ll128_pack(payload, seq | 1, &mut wire);
+            ll128_unpack(&wire, seq | 1, payload.len(), out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_efficiency_ordering() {
+        assert!(Proto::Ll.wire_efficiency() < Proto::Ll128.wire_efficiency());
+        assert!(Proto::Ll128.wire_efficiency() < Proto::Simple.wire_efficiency());
+        assert!(Proto::Ll.latency_factor() < Proto::Simple.latency_factor());
+    }
+
+    #[test]
+    fn wire_bytes_math() {
+        assert_eq!(Proto::Ll.wire_bytes(4), 8);
+        assert_eq!(Proto::Ll.wire_bytes(5), 16);
+        assert_eq!(Proto::Ll128.wire_bytes(120), 128);
+        assert_eq!(Proto::Ll128.wire_bytes(121), 256);
+        assert_eq!(Proto::Simple.wire_bytes(1000), 1000);
+    }
+
+    #[test]
+    fn ll_roundtrip_various_lengths() {
+        for len in [0usize, 1, 3, 4, 5, 8, 100, 1021] {
+            let payload: Vec<u8> = (0..len).map(|i| (i * 7) as u8).collect();
+            let mut wire = Vec::new();
+            ll_pack(&payload, 0xabcd, &mut wire);
+            assert_eq!(wire.len(), Proto::Ll.wire_bytes(len));
+            let mut out = Vec::new();
+            ll_unpack(&wire, 0xabcd, len, &mut out).unwrap();
+            assert_eq!(out, payload);
+        }
+    }
+
+    #[test]
+    fn ll_detects_flag_corruption() {
+        let payload = vec![1u8; 64];
+        let mut wire = Vec::new();
+        ll_pack(&payload, 7, &mut wire);
+        wire[4] ^= 0xff; // corrupt first flag
+        let mut out = Vec::new();
+        let e = ll_unpack(&wire, 7, 64, &mut out).unwrap_err();
+        assert!(e.contains("flag mismatch at line 0"), "{}", e);
+    }
+
+    #[test]
+    fn ll128_roundtrip_various_lengths() {
+        for len in [0usize, 1, 119, 120, 121, 240, 4096, 5000] {
+            let payload: Vec<u8> = (0..len).map(|i| (i * 13) as u8).collect();
+            let mut wire = Vec::new();
+            ll128_pack(&payload, 0xdead_beef, &mut wire);
+            assert_eq!(wire.len(), Proto::Ll128.wire_bytes(len));
+            let mut out = Vec::new();
+            ll128_unpack(&wire, 0xdead_beef, len, &mut out).unwrap();
+            assert_eq!(out, payload);
+        }
+    }
+
+    #[test]
+    fn ll128_detects_truncation() {
+        let payload = vec![9u8; 500];
+        let mut wire = Vec::new();
+        ll128_pack(&payload, 3, &mut wire);
+        wire.truncate(wire.len() - LL128_LINE);
+        let mut out = Vec::new();
+        assert!(ll128_unpack(&wire, 3, 500, &mut out).is_err());
+    }
+
+    #[test]
+    fn transfer_all_protocols() {
+        let payload: Vec<u8> = (0..777).map(|i| (i % 251) as u8).collect();
+        for p in ALL_PROTOS {
+            let mut out = Vec::new();
+            transfer(p, &payload, 42, &mut out).unwrap();
+            assert_eq!(out, payload, "proto {:?}", p);
+        }
+    }
+
+    #[test]
+    fn proto_index_roundtrip() {
+        for p in ALL_PROTOS {
+            assert_eq!(Proto::from_index(p.index()), Some(p));
+        }
+        assert_eq!(Proto::from_index(9), None);
+    }
+}

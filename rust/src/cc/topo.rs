@@ -1,0 +1,119 @@
+//! Node topology model: GPUs, interconnect links, and their bandwidth /
+//! latency characteristics.
+//!
+//! The paper's testbed is a single node with 8× NVIDIA B300 (Blackwell)
+//! GPUs connected by NVLink 5 through an NVSwitch (NV18: 18 links/GPU,
+//! 1.8 TB/s aggregate per GPU) with NVLS (NVLink SHARP in-switch
+//! reduction) support. We model that topology plus a PCIe fallback so
+//! the perf model and algorithms can be exercised on both.
+
+/// One interconnect link (or the aggregate switch port of a GPU).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// unidirectional bandwidth in GB/s
+    pub bw_gbps: f64,
+    /// base latency in nanoseconds
+    pub lat_ns: f64,
+}
+
+/// Interconnect class, which gates algorithm availability (NVLS needs
+/// an NVSwitch with SHARP support).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interconnect {
+    /// NVLink through NVSwitch (full bisection, multicast capable)
+    NvLinkSwitch,
+    /// direct PCIe peer-to-peer
+    Pcie,
+}
+
+/// A single-node GPU topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_ranks: usize,
+    pub interconnect: Interconnect,
+    /// per-GPU aggregate link to the switch / fabric
+    pub link: LinkSpec,
+    /// true if the switch supports in-network reduction (NVLS)
+    pub nvls_capable: bool,
+    /// human-readable name for reports
+    pub name: String,
+}
+
+impl Topology {
+    /// The paper's testbed: 8× B300 SXM6, NVLink 5 NV18, 1.8 TB/s per
+    /// GPU aggregate (900 GB/s per direction), NVSwitch with SHARP.
+    pub fn nvlink_b300(n_ranks: usize) -> Topology {
+        Topology {
+            n_ranks,
+            interconnect: Interconnect::NvLinkSwitch,
+            // 1.8 TB/s is the bidirectional marketing number; the
+            // per-direction injection bandwidth is ~900 GB/s.
+            link: LinkSpec { bw_gbps: 900.0, lat_ns: 700.0 },
+            nvls_capable: true,
+            name: format!("{}x B300 NVLink5 (NV18)", n_ranks),
+        }
+    }
+
+    /// PCIe Gen5 x16 fallback topology (no NVLS).
+    pub fn pcie_gen5(n_ranks: usize) -> Topology {
+        Topology {
+            n_ranks,
+            interconnect: Interconnect::Pcie,
+            link: LinkSpec { bw_gbps: 63.0, lat_ns: 1800.0 },
+            nvls_capable: false,
+            name: format!("{}x PCIe Gen5", n_ranks),
+        }
+    }
+
+    /// Validity checks used by property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_ranks < 2 {
+            return Err(format!("topology needs >= 2 ranks, got {}", self.n_ranks));
+        }
+        if self.n_ranks > 1024 {
+            return Err(format!("implausible rank count {}", self.n_ranks));
+        }
+        if self.link.bw_gbps <= 0.0 || self.link.lat_ns < 0.0 {
+            return Err("non-positive link bandwidth / negative latency".into());
+        }
+        if self.nvls_capable && self.interconnect != Interconnect::NvLinkSwitch {
+            return Err("NVLS requires an NVLink switch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b300_topology_matches_paper() {
+        let t = Topology::nvlink_b300(8);
+        assert_eq!(t.n_ranks, 8);
+        assert!(t.nvls_capable);
+        assert_eq!(t.interconnect, Interconnect::NvLinkSwitch);
+        assert!((t.link.bw_gbps - 900.0).abs() < 1.0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn pcie_no_nvls() {
+        let t = Topology::pcie_gen5(4);
+        assert!(!t.nvls_capable);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_topologies() {
+        let mut t = Topology::nvlink_b300(8);
+        t.n_ranks = 1;
+        assert!(t.validate().is_err());
+        let mut t = Topology::nvlink_b300(8);
+        t.link.bw_gbps = 0.0;
+        assert!(t.validate().is_err());
+        let mut t = Topology::pcie_gen5(4);
+        t.nvls_capable = true;
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Core collective-communication types shared across the engine and the
+//! plugin ABI (mirroring NCCL's public enums).
+
+pub use super::proto::Proto;
+
+/// Collective operation (ncclFunc).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollType {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Broadcast,
+}
+
+pub const ALL_COLLS: [CollType; 4] =
+    [CollType::AllReduce, CollType::AllGather, CollType::ReduceScatter, CollType::Broadcast];
+
+impl CollType {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollType::AllReduce => "AllReduce",
+            CollType::AllGather => "AllGather",
+            CollType::ReduceScatter => "ReduceScatter",
+            CollType::Broadcast => "Broadcast",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            CollType::AllReduce => 0,
+            CollType::AllGather => 1,
+            CollType::ReduceScatter => 2,
+            CollType::Broadcast => 3,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<CollType> {
+        ALL_COLLS.get(i).copied()
+    }
+
+    /// nccl-tests busBw correction factor: busbw = algbw * factor(n).
+    pub fn busbw_factor(self, n: usize) -> f64 {
+        let n = n as f64;
+        match self {
+            CollType::AllReduce => 2.0 * (n - 1.0) / n,
+            CollType::AllGather | CollType::ReduceScatter => (n - 1.0) / n,
+            CollType::Broadcast => 1.0,
+        }
+    }
+}
+
+/// Collective algorithm (ncclAlgo). NVLS is NVLink SHARP in-switch
+/// reduction — the default NCCL 2.29 picks on the paper's testbed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Ring,
+    Tree,
+    Nvls,
+}
+
+pub const ALL_ALGOS: [Algo; 3] = [Algo::Ring, Algo::Tree, Algo::Nvls];
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Ring => "Ring",
+            Algo::Tree => "Tree",
+            Algo::Nvls => "NVLS",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Algo::Ring => 0,
+            Algo::Tree => 1,
+            Algo::Nvls => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<Algo> {
+        ALL_ALGOS.get(i).copied()
+    }
+}
+
+/// Maximum channels a communicator supports (NCCL's MAXCHANNELS-ish
+/// clamp the tuner must respect, §4).
+pub const MAX_CHANNELS: u32 = 32;
+
+/// A fully resolved collective configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollConfig {
+    pub algo: Algo,
+    pub proto: Proto,
+    pub nchannels: u32,
+}
+
+impl CollConfig {
+    pub fn new(algo: Algo, proto: Proto, nchannels: u32) -> CollConfig {
+        CollConfig { algo, proto, nchannels: nchannels.clamp(1, MAX_CHANNELS) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busbw_factors() {
+        assert!((CollType::AllReduce.busbw_factor(8) - 1.75).abs() < 1e-9);
+        assert!((CollType::AllGather.busbw_factor(8) - 0.875).abs() < 1e-9);
+        assert_eq!(CollType::Broadcast.busbw_factor(8), 1.0);
+    }
+
+    #[test]
+    fn index_roundtrips() {
+        for c in ALL_COLLS {
+            assert_eq!(CollType::from_index(c.index()), Some(c));
+        }
+        for a in ALL_ALGOS {
+            assert_eq!(Algo::from_index(a.index()), Some(a));
+        }
+        assert!(Algo::from_index(5).is_none());
+    }
+
+    #[test]
+    fn config_clamps_channels() {
+        assert_eq!(CollConfig::new(Algo::Ring, Proto::Simple, 0).nchannels, 1);
+        assert_eq!(CollConfig::new(Algo::Ring, Proto::Simple, 99).nchannels, MAX_CHANNELS);
+    }
+}

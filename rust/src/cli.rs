@@ -1,0 +1,86 @@
+//! Minimal CLI argument parsing (clap is not in the offline crate set).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, --key value flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from std::env::args() (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse_from(argv: Vec<String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (k, v) = if let Some((k, v)) = name.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    (name.to_string(), it.next().unwrap())
+                } else {
+                    (name.to_string(), "true".to_string())
+                };
+                out.flags.insert(k, v);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = args("train file.c other");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["file.c", "other"]);
+    }
+
+    #[test]
+    fn flags_with_values_and_equals() {
+        let a = args("sweep --ranks 8 --size=4M --verbose");
+        assert_eq!(a.flag("ranks"), Some("8"));
+        assert_eq!(a.flag("size"), Some("4M"));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.flag_usize("ranks", 2), 8);
+        assert_eq!(a.flag_usize("missing", 5), 5);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        let a = args("run --fast prog.c");
+        // --fast consumes prog.c as its value (documented behavior:
+        // place boolean flags last or use --fast=true)
+        assert_eq!(a.flag("fast"), Some("prog.c"));
+    }
+}

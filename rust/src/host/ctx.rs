@@ -1,0 +1,198 @@
+//! Policy ABI: the context structs handed to eBPF programs (R1) and the
+//! ctx layouts the verifier enforces over them.
+//!
+//! Field offsets are part of the ABI — the restricted-C headers in
+//! `policies/` and the bpfc compiler's builtin `struct policy_context`
+//! definitions must match these exactly (checked by `abi_offsets` tests
+//! below and by bpfc's codegen tests).
+//!
+//! The input/output split implements §3.3: "The verifier ensures
+//! policies only read input fields and write output fields."
+
+use crate::bpf::{CtxLayout, CtxLayouts};
+use crate::cc::{Algo, CollType, Proto};
+
+/// Output value meaning "policy defers to the engine default".
+pub const DEFER: u32 = u32::MAX;
+
+/// Algorithm ids exposed to policies (NCCL_ALGO_*).
+pub const ALGO_RING: u32 = 0;
+pub const ALGO_TREE: u32 = 1;
+pub const ALGO_NVLS: u32 = 2;
+/// Protocol ids exposed to policies (NCCL_PROTO_*).
+pub const PROTO_LL: u32 = 0;
+pub const PROTO_LL128: u32 = 1;
+pub const PROTO_SIMPLE: u32 = 2;
+
+/// Tuner policy context. Bytes [0, 32) are read-only inputs; bytes
+/// [32, 48) are write-only outputs.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyContext {
+    // -- inputs --------------------------------------------------- off
+    pub coll_type: u32,   //  0
+    pub _pad0: u32,       //  4
+    pub msg_size: u64,    //  8
+    pub nranks: u32,      // 16
+    pub comm_id: u32,     // 20
+    pub max_channels: u32, // 24
+    pub _pad1: u32,       // 28
+    // -- outputs --------------------------------------------------
+    pub algorithm: u32,   // 32
+    pub protocol: u32,    // 36
+    pub n_channels: u32,  // 40
+    pub _pad2: u32,       // 44
+}
+
+pub const POLICY_CTX_SIZE: u32 = 48;
+pub const POLICY_CTX_OUT_START: u32 = 32;
+
+impl PolicyContext {
+    pub fn new(coll: CollType, msg_size: u64, nranks: u32, comm_id: u32, max_channels: u32) -> Self {
+        PolicyContext {
+            coll_type: coll.index() as u32,
+            _pad0: 0,
+            msg_size,
+            nranks,
+            comm_id,
+            max_channels,
+            _pad1: 0,
+            algorithm: DEFER,
+            protocol: DEFER,
+            n_channels: 0, // 0 = engine default
+            _pad2: 0,
+        }
+    }
+
+    /// Decode the algorithm output, if set to a valid id.
+    pub fn algo_out(&self) -> Option<Algo> {
+        match self.algorithm {
+            ALGO_RING => Some(Algo::Ring),
+            ALGO_TREE => Some(Algo::Tree),
+            ALGO_NVLS => Some(Algo::Nvls),
+            _ => None,
+        }
+    }
+
+    /// Decode the protocol output, if set to a valid id.
+    pub fn proto_out(&self) -> Option<Proto> {
+        match self.protocol {
+            PROTO_LL => Some(Proto::Ll),
+            PROTO_LL128 => Some(Proto::Ll128),
+            PROTO_SIMPLE => Some(Proto::Simple),
+            _ => None,
+        }
+    }
+}
+
+/// Profiler event context (all read-only).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct ProfilerContext {
+    pub comm_id: u32,    //  0
+    pub coll_type: u32,  //  4
+    pub msg_size: u64,   //  8
+    pub latency_ns: u64, // 16
+    pub n_channels: u32, // 24
+    pub seq: u32,        // 28
+}
+
+pub const PROFILER_CTX_SIZE: u32 = 32;
+
+/// Net-plugin hook context (all read-only).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct NetContext {
+    pub comm_id: u32, //  0
+    pub is_send: u32, //  4
+    pub bytes: u64,   //  8
+    pub peer: u32,    // 16
+    pub _pad: u32,    // 20
+}
+
+pub const NET_CTX_SIZE: u32 = 24;
+
+/// The ctx layouts the verifier enforces, per program type.
+pub fn layouts() -> CtxLayouts {
+    CtxLayouts {
+        tuner: CtxLayout {
+            size: POLICY_CTX_SIZE,
+            read: vec![(0, POLICY_CTX_OUT_START)],
+            write: vec![(POLICY_CTX_OUT_START, POLICY_CTX_SIZE - POLICY_CTX_OUT_START)],
+        },
+        profiler: CtxLayout {
+            size: PROFILER_CTX_SIZE,
+            read: vec![(0, PROFILER_CTX_SIZE)],
+            write: vec![],
+        },
+        net: CtxLayout { size: NET_CTX_SIZE, read: vec![(0, NET_CTX_SIZE)], write: vec![] },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::mem::{offset_of, size_of};
+
+    #[test]
+    fn abi_offsets_policy_context() {
+        assert_eq!(size_of::<PolicyContext>(), POLICY_CTX_SIZE as usize);
+        assert_eq!(offset_of!(PolicyContext, coll_type), 0);
+        assert_eq!(offset_of!(PolicyContext, msg_size), 8);
+        assert_eq!(offset_of!(PolicyContext, nranks), 16);
+        assert_eq!(offset_of!(PolicyContext, comm_id), 20);
+        assert_eq!(offset_of!(PolicyContext, max_channels), 24);
+        assert_eq!(offset_of!(PolicyContext, algorithm), 32);
+        assert_eq!(offset_of!(PolicyContext, protocol), 36);
+        assert_eq!(offset_of!(PolicyContext, n_channels), 40);
+    }
+
+    #[test]
+    fn abi_offsets_profiler_context() {
+        assert_eq!(size_of::<ProfilerContext>(), PROFILER_CTX_SIZE as usize);
+        assert_eq!(offset_of!(ProfilerContext, comm_id), 0);
+        assert_eq!(offset_of!(ProfilerContext, msg_size), 8);
+        assert_eq!(offset_of!(ProfilerContext, latency_ns), 16);
+        assert_eq!(offset_of!(ProfilerContext, n_channels), 24);
+        assert_eq!(offset_of!(ProfilerContext, seq), 28);
+    }
+
+    #[test]
+    fn abi_offsets_net_context() {
+        assert_eq!(size_of::<NetContext>(), NET_CTX_SIZE as usize);
+        assert_eq!(offset_of!(NetContext, bytes), 8);
+        assert_eq!(offset_of!(NetContext, peer), 16);
+    }
+
+    #[test]
+    fn defaults_are_deferred() {
+        let c = PolicyContext::new(CollType::AllReduce, 1024, 8, 1, 32);
+        assert_eq!(c.algorithm, DEFER);
+        assert_eq!(c.algo_out(), None);
+        assert_eq!(c.proto_out(), None);
+        assert_eq!(c.n_channels, 0);
+    }
+
+    #[test]
+    fn output_decoding() {
+        let mut c = PolicyContext::new(CollType::AllReduce, 1024, 8, 1, 32);
+        c.algorithm = ALGO_RING;
+        c.protocol = PROTO_LL128;
+        assert_eq!(c.algo_out(), Some(Algo::Ring));
+        assert_eq!(c.proto_out(), Some(Proto::Ll128));
+        c.algorithm = 99; // semantically invalid: treated as defer
+        assert_eq!(c.algo_out(), None);
+    }
+
+    #[test]
+    fn layouts_enforce_io_split() {
+        let l = layouts();
+        assert!(l.tuner.can_read(8, 8)); // msg_size
+        assert!(!l.tuner.can_write(8, 8)); // inputs are read-only
+        assert!(l.tuner.can_write(32, 4)); // algorithm
+        assert!(!l.tuner.can_read(32, 4)); // outputs are write-only
+        assert!(l.profiler.can_read(16, 8));
+        assert!(!l.profiler.can_write(0, 4));
+        assert!(l.net.can_read(8, 8));
+    }
+}

@@ -1,0 +1,538 @@
+//! NCCLbpf — the paper's artifact: a plugin host that registers as
+//! tuner + profiler (+ net hook) with the collective engine and runs
+//! *verified* eBPF policies at each hook, with typed shared maps and
+//! atomic hot-reload. No engine sources are modified: everything goes
+//! through the public plugin ABI in [`crate::cc::plugin`].
+
+pub mod ctx;
+pub mod native;
+pub mod policydir;
+pub mod reload;
+
+use crate::bpf::program::{load_object, LoadedProgram};
+use crate::bpf::{LoadError, Map, MapRegistry, Object, ProgType};
+use crate::cc::net::NetHook;
+use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
+use ctx::{NetContext, PolicyContext, ProfilerContext};
+use reload::ReloadSlot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Report of one load/reload (§4: total reload is ms-scale; only the
+/// pointer swap is on the hot path).
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// (program name, type) installed
+    pub programs: Vec<(String, ProgType)>,
+    pub verify_ns: u64,
+    pub compile_ns: u64,
+    /// per-slot CAS latencies
+    pub swap_ns: Vec<u64>,
+}
+
+impl LoadReport {
+    pub fn total_ns(&self) -> u64 {
+        self.verify_ns + self.compile_ns + self.swap_ns.iter().sum::<u64>()
+    }
+}
+
+/// The NCCLbpf plugin host.
+pub struct NcclBpfHost {
+    /// shared map namespace: the cross-plugin composability substrate
+    pub maps: MapRegistry,
+    tuner: ReloadSlot,
+    profiler: ReloadSlot,
+    net: ReloadSlot,
+    /// tuner decisions executed
+    pub decisions: AtomicU64,
+    /// profiler events executed
+    pub prof_events: AtomicU64,
+    /// net hook invocations
+    pub net_events: AtomicU64,
+    /// policies that wrote semantically invalid outputs (deferred)
+    pub invalid_outputs: AtomicU64,
+}
+
+impl Default for NcclBpfHost {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NcclBpfHost {
+    pub fn new() -> NcclBpfHost {
+        NcclBpfHost {
+            maps: MapRegistry::new(),
+            tuner: ReloadSlot::new(),
+            profiler: ReloadSlot::new(),
+            net: ReloadSlot::new(),
+            decisions: AtomicU64::new(0),
+            prof_events: AtomicU64::new(0),
+            net_events: AtomicU64::new(0),
+            invalid_outputs: AtomicU64::new(0),
+        }
+    }
+
+    fn slot(&self, pt: ProgType) -> &ReloadSlot {
+        match pt {
+            ProgType::Tuner => &self.tuner,
+            ProgType::Profiler => &self.profiler,
+            ProgType::Net => &self.net,
+        }
+    }
+
+    /// Load (or hot-reload) every program in `obj`: verify + compile
+    /// first, swap atomically only on success. On any verification
+    /// failure *nothing* is swapped — the old policies keep running
+    /// ("the system never enters an unverified state", §4).
+    pub fn install_object(&self, obj: &Object) -> Result<LoadReport, LoadError> {
+        let progs = load_object(obj, &self.maps, &ctx::layouts())?;
+        let mut report = LoadReport::default();
+        for p in &progs {
+            report.verify_ns += p.stats.verify_ns;
+            report.compile_ns += p.stats.compile_ns;
+        }
+        for p in progs {
+            let pt = p.prog_type;
+            let name = p.name.clone();
+            let ns = self.slot(pt).swap(Arc::new(p));
+            report.swap_ns.push(ns);
+            report.programs.push((name, pt));
+        }
+        Ok(report)
+    }
+
+    /// Assemble + install (tests, CLI).
+    pub fn install_asm(&self, source: &str) -> Result<LoadReport, LoadError> {
+        let obj = crate::bpf::asm::assemble(source)
+            .map_err(|e| LoadError::Structural(e.to_string()))?;
+        self.install_object(&obj)
+    }
+
+    /// Compile restricted C + install (the paper's authoring path).
+    pub fn install_c(&self, source: &str) -> Result<LoadReport, LoadError> {
+        let obj = crate::bpfc::compile(source)
+            .map_err(|e| LoadError::Structural(e.to_string()))?;
+        self.install_object(&obj)
+    }
+
+    /// Remove the policy for one hook.
+    pub fn clear(&self, pt: ProgType) {
+        self.slot(pt).clear();
+    }
+
+    pub fn active_name(&self, pt: ProgType) -> Option<String> {
+        self.slot(pt).get().map(|p| p.name.clone())
+    }
+
+    /// (swap count, last swap latency ns) for a hook.
+    pub fn swap_stats(&self, pt: ProgType) -> (u64, u64) {
+        let s = self.slot(pt);
+        (s.swaps.load(Ordering::Relaxed), s.last_swap_ns.load(Ordering::Relaxed))
+    }
+
+    /// A shared map by name (host-side observability; the §5.3 case
+    /// study reads `latency_map` this way).
+    pub fn map(&self, name: &str) -> Option<Arc<Map>> {
+        self.maps.by_name(name)
+    }
+
+    // -- tuner hook ----------------------------------------------------------
+
+    /// Execute the tuner policy for one decision. This is THE hot path
+    /// Table 1 measures. Returns true if a policy ran.
+    #[inline]
+    pub fn tuner_decide(
+        &self,
+        args: &CollInfoArgs,
+        cost: &mut CostTable,
+        nchannels: &mut u32,
+    ) -> bool {
+        let Some(prog) = self.tuner.get() else { return false };
+        let mut pctx = PolicyContext::new(
+            args.coll,
+            args.nbytes as u64,
+            args.nranks as u32,
+            fold_comm_id(args.comm_id),
+            args.max_channels,
+        );
+        prog.run(&mut pctx as *mut PolicyContext as *mut u8);
+        self.decisions.fetch_add(1, Ordering::Relaxed);
+        self.apply_outputs(&pctx, args, cost, nchannels);
+        true
+    }
+
+    /// Translate policy outputs into cost-table entries (§4 "NCCL
+    /// integration challenges"): the preferred combo gets cost 0;
+    /// everything else keeps the engine's estimates so unavailable
+    /// combinations fall back gracefully. Channel requests are clamped.
+    #[inline]
+    fn apply_outputs(
+        &self,
+        pctx: &PolicyContext,
+        args: &CollInfoArgs,
+        cost: &mut CostTable,
+        nchannels: &mut u32,
+    ) {
+        match (pctx.algo_out(), pctx.proto_out()) {
+            (Some(a), Some(p)) => cost.prefer(a, p),
+            (Some(a), None) => {
+                if pctx.protocol != ctx::DEFER {
+                    self.invalid_outputs.fetch_add(1, Ordering::Relaxed);
+                }
+                // algorithm-only preference: pick that algorithm's
+                // cheapest protocol per the engine estimates
+                let best = crate::cc::proto::ALL_PROTOS
+                    .iter()
+                    .min_by(|&&x, &&y| cost.get(a, x).partial_cmp(&cost.get(a, y)).unwrap())
+                    .copied()
+                    .unwrap();
+                cost.prefer(a, best);
+            }
+            (None, _) => {
+                if pctx.algorithm != ctx::DEFER {
+                    // semantically invalid id: count and defer (the
+                    // verifier guarantees memory safety, not semantics)
+                    self.invalid_outputs.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if pctx.n_channels > 0 {
+            *nchannels = pctx.n_channels.min(args.max_channels);
+        }
+    }
+
+    // -- profiler hook ---------------------------------------------------------
+
+    /// Execute the profiler policy for one event.
+    #[inline]
+    pub fn profiler_handle(&self, ev: &ProfilerEvent) {
+        let Some(prog) = self.profiler.get() else { return };
+        if let ProfilerEvent::CollEnd { comm_id, seq, coll, nbytes, cfg, latency_ns, .. } = ev {
+            let mut pctx = ProfilerContext {
+                comm_id: fold_comm_id(*comm_id),
+                coll_type: coll.index() as u32,
+                msg_size: *nbytes as u64,
+                latency_ns: *latency_ns,
+                n_channels: cfg.nchannels,
+                seq: *seq as u32,
+            };
+            prog.run(&mut pctx as *mut ProfilerContext as *mut u8);
+            self.prof_events.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // -- net hook ----------------------------------------------------------------
+
+    /// Execute the net policy for one transport operation.
+    #[inline]
+    pub fn net_handle(&self, comm_id: u64, is_send: bool, bytes: usize, peer: usize) {
+        let Some(prog) = self.net.get() else { return };
+        let mut nctx = NetContext {
+            comm_id: fold_comm_id(comm_id),
+            is_send: is_send as u32,
+            bytes: bytes as u64,
+            peer: peer as u32,
+            _pad: 0,
+        };
+        prog.run(&mut nctx as *mut NetContext as *mut u8);
+        self.net_events.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Measure one tuner decision's host-side latency (bench helper).
+    #[inline]
+    pub fn timed_decision(&self, args: &CollInfoArgs) -> u64 {
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0u32;
+        let t0 = Instant::now();
+        self.tuner_decide(args, &mut cost, &mut ch);
+        t0.elapsed().as_nanos() as u64
+    }
+
+    /// Direct access to the loaded tuner program (ablation benches).
+    pub fn tuner_program(&self) -> Option<&LoadedProgram> {
+        self.tuner.get()
+    }
+}
+
+/// Fold a 64-bit comm id into the 32-bit ABI field.
+#[inline]
+pub fn fold_comm_id(id: u64) -> u32 {
+    (id ^ (id >> 32)) as u32
+}
+
+// -- plugin adapters -----------------------------------------------------------
+
+/// The host, registered as the engine's tuner plugin.
+pub struct BpfTunerPlugin(pub Arc<NcclBpfHost>);
+
+impl TunerPlugin for BpfTunerPlugin {
+    fn name(&self) -> &str {
+        "ncclbpf_tuner"
+    }
+    #[inline]
+    fn get_coll_info(&self, args: &CollInfoArgs, cost: &mut CostTable, nchannels: &mut u32) {
+        self.0.tuner_decide(args, cost, nchannels);
+    }
+}
+
+/// The host, registered as the engine's profiler plugin.
+pub struct BpfProfilerPlugin(pub Arc<NcclBpfHost>);
+
+impl ProfilerPlugin for BpfProfilerPlugin {
+    fn name(&self) -> &str {
+        "ncclbpf_profiler"
+    }
+    #[inline]
+    fn on_event(&self, ev: &ProfilerEvent) {
+        self.0.profiler_handle(ev);
+    }
+}
+
+/// A net-transport hook backed by the host's net program.
+pub fn bpf_net_hook(host: Arc<NcclBpfHost>, comm_id: u64, peer: usize) -> NetHook {
+    Arc::new(move |is_send, bytes| host.net_handle(comm_id, is_send, bytes, peer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{Algo, CollConfig, CollType, Proto, MAX_CHANNELS};
+
+    fn args(nbytes: usize) -> CollInfoArgs {
+        CollInfoArgs {
+            coll: CollType::AllReduce,
+            nbytes,
+            nranks: 8,
+            comm_id: 0xdead_beef_1234,
+            max_channels: MAX_CHANNELS,
+        }
+    }
+
+    const SIZE_AWARE_ASM: &str = r#"
+prog tuner size_aware
+  ldxdw r2, [r1+8]        ; msg_size
+  jgt   r2, 32768, big
+  stw   [r1+32], 1        ; algorithm = TREE
+  stw   [r1+36], 0        ; protocol = LL
+  ja    done
+big:
+  stw   [r1+32], 0        ; algorithm = RING
+  stw   [r1+36], 2        ; protocol = SIMPLE
+done:
+  stw   [r1+40], 16       ; n_channels
+  mov64 r0, 0
+  exit
+"#;
+
+    #[test]
+    fn tuner_decision_translates_to_cost_table() {
+        let host = NcclBpfHost::new();
+        host.install_asm(SIZE_AWARE_ASM).unwrap();
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        assert!(host.tuner_decide(&args(1 << 20), &mut cost, &mut ch));
+        assert_eq!(cost.argmin(), Some((Algo::Ring, Proto::Simple)));
+        assert_eq!(ch, 16);
+        let mut cost = CostTable::all_sentinel();
+        host.tuner_decide(&args(8 << 10), &mut cost, &mut ch);
+        assert_eq!(cost.argmin(), Some((Algo::Tree, Proto::Ll)));
+        assert_eq!(host.decisions.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn no_policy_means_no_decision() {
+        let host = NcclBpfHost::new();
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        assert!(!host.tuner_decide(&args(1024), &mut cost, &mut ch));
+        assert_eq!(cost.argmin(), None);
+    }
+
+    #[test]
+    fn invalid_output_counts_and_defers() {
+        let host = NcclBpfHost::new();
+        host.install_asm(
+            "prog tuner bad_out\n  stw [r1+32], 9\n  stw [r1+36], 9\n  mov64 r0, 0\n  exit\n",
+        )
+        .unwrap();
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        host.tuner_decide(&args(1024), &mut cost, &mut ch);
+        assert_eq!(cost.argmin(), None, "invalid ids must defer");
+        assert_eq!(host.invalid_outputs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn channel_clamp_applied() {
+        let host = NcclBpfHost::new();
+        host.install_asm(
+            "prog tuner chans\n  stw [r1+32], 0\n  stw [r1+36], 2\n  stw [r1+40], 1000\n  mov64 r0, 0\n  exit\n",
+        )
+        .unwrap();
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        host.tuner_decide(&args(1024), &mut cost, &mut ch);
+        assert_eq!(ch, MAX_CHANNELS);
+    }
+
+    #[test]
+    fn unsafe_policy_rejected_old_policy_survives() {
+        let host = NcclBpfHost::new();
+        host.install_asm(SIZE_AWARE_ASM).unwrap();
+        assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "size_aware");
+        // attempt to hot-reload a program that writes an input field
+        let bad = "prog tuner evil\n  stw [r1+8], 0\n  mov64 r0, 0\n  exit\n";
+        let err = host.install_asm(bad).unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{}", err);
+        // old policy still active and functional
+        assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "size_aware");
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        assert!(host.tuner_decide(&args(1 << 20), &mut cost, &mut ch));
+    }
+
+    const RECORD_LATENCY_ASM: &str = r#"
+map latency_map hash key=4 value=16 entries=64
+
+prog profiler record_latency
+  mov64 r6, r1
+  ldxdw r7, [r6+16]       ; latency_ns
+  ldxw  r8, [r6+24]       ; n_channels
+  stw   [r10-4], 0        ; key = 0
+  stxdw [r10-24], r7      ; value[0..8]  = latency
+  stxdw [r10-16], r8      ; value[8..16] = channels
+  mov64 r2, r10
+  add64 r2, -4
+  mov64 r3, r10
+  add64 r3, -24
+  mov64 r4, 0
+  ldmap r1, latency_map
+  call  bpf_map_update_elem
+  mov64 r0, 0
+  exit
+"#;
+
+    const ADAPTIVE_TUNER_ASM: &str = r#"
+map latency_map hash key=4 value=16 entries=64
+
+prog tuner adaptive
+  mov64 r6, r1            ; save ctx (call clobbers r1-r5)
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, latency_map
+  call  bpf_map_lookup_elem
+  jne   r0, 0, have
+  stw   [r6+40], 4        ; no samples yet: conservative 4 channels
+  mov64 r0, 0
+  exit
+have:
+  ldxdw r3, [r0+0]        ; avg latency
+  jgt   r3, 1000000, slow
+  stw   [r6+40], 12
+  mov64 r0, 0
+  exit
+slow:
+  stw   [r6+40], 2
+  mov64 r0, 0
+  exit
+"#;
+
+    /// The paper's Listing 1 closed loop: the profiler writes latency
+    /// into a shared map; the tuner reads it for adaptive channels.
+    #[test]
+    fn profiler_to_tuner_map_sharing() {
+        let host = NcclBpfHost::new();
+        host.install_asm(RECORD_LATENCY_ASM).unwrap();
+        host.install_asm(ADAPTIVE_TUNER_ASM).unwrap();
+
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        // no samples yet -> conservative
+        host.tuner_decide(&args(1 << 20), &mut cost, &mut ch);
+        assert_eq!(ch, 4);
+
+        // profiler observes a fast collective
+        let ev = ProfilerEvent::CollEnd {
+            comm_id: 1,
+            seq: 0,
+            coll: CollType::AllReduce,
+            nbytes: 1 << 20,
+            cfg: CollConfig::new(Algo::Ring, Proto::Simple, 8),
+            ts_ns: 0,
+            latency_ns: 400_000,
+        };
+        host.profiler_handle(&ev);
+        host.tuner_decide(&args(1 << 20), &mut cost, &mut ch);
+        assert_eq!(ch, 12, "fast latency should ramp channels");
+
+        // profiler observes contention (10x latency spike)
+        let ev = ProfilerEvent::CollEnd {
+            comm_id: 1,
+            seq: 1,
+            coll: CollType::AllReduce,
+            nbytes: 1 << 20,
+            cfg: CollConfig::new(Algo::Ring, Proto::Simple, 12),
+            ts_ns: 0,
+            latency_ns: 4_000_000,
+        };
+        host.profiler_handle(&ev);
+        host.tuner_decide(&args(1 << 20), &mut cost, &mut ch);
+        assert_eq!(ch, 2, "contention should back off");
+        assert_eq!(host.prof_events.load(Ordering::Relaxed), 2);
+        // host-side observability of the shared map
+        let m = host.map("latency_map").unwrap();
+        assert_eq!(m.read_u64(0), Some(4_000_000));
+    }
+
+    #[test]
+    fn net_hook_counts_via_map() {
+        let host = Arc::new(NcclBpfHost::new());
+        host.install_asm(
+            r#"
+map net_stats array key=4 value=16 entries=4
+
+prog net count_bytes
+  mov64 r6, r1
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, net_stats
+  call  bpf_map_lookup_elem
+  jne   r0, 0, have
+  mov64 r0, 0
+  exit
+have:
+  ldxdw r2, [r6+8]        ; bytes
+  ldxdw r3, [r0+0]
+  add64 r3, r2
+  stxdw [r0+0], r3        ; total_bytes += bytes
+  ldxdw r3, [r0+8]
+  add64 r3, 1
+  stxdw [r0+8], r3        ; ops += 1
+  mov64 r0, 0
+  exit
+"#,
+        )
+        .unwrap();
+        let hook = bpf_net_hook(host.clone(), 42, 1);
+        hook(true, 1000);
+        hook(false, 500);
+        hook(true, 24);
+        let m = host.map("net_stats").unwrap();
+        assert_eq!(m.read_u64(0), Some(1524));
+        let ops = m.read_value(&0u32.to_le_bytes()).unwrap();
+        assert_eq!(u64::from_le_bytes(ops[8..16].try_into().unwrap()), 3);
+        assert_eq!(host.net_events.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn fold_comm_id_stable() {
+        assert_eq!(fold_comm_id(7), fold_comm_id(7));
+        assert_ne!(fold_comm_id(1), fold_comm_id(2u64 << 32));
+        // high bits influence the folded id
+        assert_ne!(fold_comm_id(0xaaaa_0000_0000), fold_comm_id(0xbbbb_0000_0000));
+    }
+}

@@ -1,0 +1,166 @@
+//! Native-Rust baseline policies (§4 "Native baseline for comparison"):
+//! identical policy logic to the eBPF programs, compiled as ordinary
+//! optimized native code. The Table 1 bench measures the delta between
+//! these and the eBPF versions to isolate the dispatch + JIT layer cost
+//! from the policy logic cost.
+
+use crate::cc::plugin::{CollInfoArgs, CostTable, TunerPlugin};
+use crate::cc::{Algo, Proto};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Native twin of `policies/noop.c`: returns immediately.
+pub struct NativeNoop;
+
+impl TunerPlugin for NativeNoop {
+    fn name(&self) -> &str {
+        "native_noop"
+    }
+    #[inline]
+    fn get_coll_info(&self, _a: &CollInfoArgs, _c: &mut CostTable, _n: &mut u32) {}
+}
+
+/// Native twin of `policies/static_ring.c`.
+pub struct NativeStaticRing;
+
+impl TunerPlugin for NativeStaticRing {
+    fn name(&self) -> &str {
+        "native_static_ring"
+    }
+    #[inline]
+    fn get_coll_info(&self, _a: &CollInfoArgs, cost: &mut CostTable, n: &mut u32) {
+        cost.prefer(Algo::Ring, Proto::Simple);
+        *n = 32;
+    }
+}
+
+/// Native twin of `policies/size_aware.c` (the paper's Listing 1 shape:
+/// tree for <=32 KiB, ring above, Simple protocol).
+pub struct NativeSizeAware;
+
+impl TunerPlugin for NativeSizeAware {
+    fn name(&self) -> &str {
+        "native_size_aware"
+    }
+    #[inline]
+    fn get_coll_info(&self, a: &CollInfoArgs, cost: &mut CostTable, n: &mut u32) {
+        if a.nbytes <= 32 * 1024 {
+            cost.prefer(Algo::Tree, Proto::Ll);
+        } else {
+            cost.prefer(Algo::Ring, Proto::Simple);
+        }
+        *n = 16;
+    }
+}
+
+/// Native twin of `policies/nvlink_ring_mid_v2.c` — the §5.3 case-study
+/// policy: Ring/LL128 for 4–32 MiB, Ring/Simple for 64–192 MiB, defer
+/// to the engine default otherwise.
+pub struct NativeRingMidV2;
+
+impl TunerPlugin for NativeRingMidV2 {
+    fn name(&self) -> &str {
+        "native_nvlink_ring_mid_v2"
+    }
+    #[inline]
+    fn get_coll_info(&self, a: &CollInfoArgs, cost: &mut CostTable, n: &mut u32) {
+        const MIB: usize = 1 << 20;
+        if (4 * MIB..=32 * MIB).contains(&a.nbytes) {
+            cost.prefer(Algo::Ring, Proto::Ll128);
+            *n = 32;
+        } else if (64 * MIB..=192 * MIB).contains(&a.nbytes) {
+            cost.prefer(Algo::Ring, Proto::Simple);
+            *n = 32;
+        }
+        // otherwise defer to NCCL's default (NVLS)
+    }
+}
+
+/// Native twin of `policies/adaptive_channels.c`: stateful (one shared
+/// cell standing in for the eBPF map) — reads last observed latency and
+/// nudges the channel count, writing back its decision.
+pub struct NativeAdaptive {
+    pub latency_ns: AtomicU64,
+    pub channels: AtomicU64,
+}
+
+impl Default for NativeAdaptive {
+    fn default() -> Self {
+        NativeAdaptive { latency_ns: AtomicU64::new(0), channels: AtomicU64::new(2) }
+    }
+}
+
+impl TunerPlugin for NativeAdaptive {
+    fn name(&self) -> &str {
+        "native_adaptive"
+    }
+    #[inline]
+    fn get_coll_info(&self, _a: &CollInfoArgs, cost: &mut CostTable, n: &mut u32) {
+        let lat = self.latency_ns.load(Ordering::Relaxed); // "map lookup"
+        let ch = self.channels.load(Ordering::Relaxed);
+        let next = if lat > 1_000_000 { (ch + 1).min(16) } else { ch };
+        self.channels.store(next, Ordering::Relaxed); // "map update"
+        cost.prefer(Algo::Ring, Proto::Simple);
+        *n = next as u32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{CollType, MAX_CHANNELS};
+
+    fn args(nbytes: usize) -> CollInfoArgs {
+        CollInfoArgs {
+            coll: CollType::AllReduce,
+            nbytes,
+            nranks: 8,
+            comm_id: 1,
+            max_channels: MAX_CHANNELS,
+        }
+    }
+
+    #[test]
+    fn size_aware_switches_at_32k() {
+        let p = NativeSizeAware;
+        let mut c = CostTable::all_sentinel();
+        let mut n = 0;
+        p.get_coll_info(&args(16 << 10), &mut c, &mut n);
+        assert_eq!(c.argmin(), Some((Algo::Tree, Proto::Ll)));
+        let mut c = CostTable::all_sentinel();
+        p.get_coll_info(&args(1 << 20), &mut c, &mut n);
+        assert_eq!(c.argmin(), Some((Algo::Ring, Proto::Simple)));
+    }
+
+    #[test]
+    fn ring_mid_v2_ranges() {
+        let p = NativeRingMidV2;
+        let mib = 1usize << 20;
+        for (size, expect) in [
+            (2 * mib, None),
+            (4 * mib, Some((Algo::Ring, Proto::Ll128))),
+            (32 * mib, Some((Algo::Ring, Proto::Ll128))),
+            (64 * mib, Some((Algo::Ring, Proto::Simple))),
+            (192 * mib, Some((Algo::Ring, Proto::Simple))),
+            (256 * mib, None),
+        ] {
+            let mut c = CostTable::all_sentinel();
+            let mut n = 0;
+            p.get_coll_info(&args(size), &mut c, &mut n);
+            assert_eq!(c.argmin(), expect, "size {}", size);
+        }
+    }
+
+    #[test]
+    fn adaptive_ramps_on_high_latency() {
+        let p = NativeAdaptive::default();
+        let mut n = 0;
+        let mut c = CostTable::all_sentinel();
+        p.get_coll_info(&args(1 << 20), &mut c, &mut n);
+        assert_eq!(n, 2);
+        p.latency_ns.store(5_000_000, Ordering::Relaxed);
+        for _ in 0..20 {
+            p.get_coll_info(&args(1 << 20), &mut c, &mut n);
+        }
+        assert_eq!(n, 16); // capped
+    }
+}

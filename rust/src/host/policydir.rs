@@ -1,0 +1,112 @@
+//! Loading policies from the `policies/` directory (restricted C via
+//! bpfc, or `.s` via the assembler) — the operator-facing authoring
+//! path used by the CLI, benches and the §5.2 safety suite.
+
+use crate::bpf::Object;
+use std::path::{Path, PathBuf};
+
+/// Repo-relative policies directory.
+pub fn policies_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("policies")
+}
+
+/// Compile/assemble one policy source file into an object.
+pub fn build_policy(path: &Path) -> Result<Object, String> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {}", path.display(), e))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("c") => crate::bpfc::compile(&src),
+        Some("s") | Some("asm") => {
+            crate::bpf::asm::assemble(&src).map_err(|e| e.to_string())
+        }
+        other => Err(format!("unknown policy extension {:?} for {}", other, path.display())),
+    }
+}
+
+/// Build a named policy from `policies/NAME.c` (or `.s`).
+pub fn build_named(name: &str) -> Result<Object, String> {
+    let dir = policies_dir();
+    for ext in ["c", "s"] {
+        let p = dir.join(format!("{}.{}", name, ext));
+        if p.exists() {
+            return build_policy(&p);
+        }
+    }
+    Err(format!("no policy named '{}' in {}", name, dir.display()))
+}
+
+/// The 7 safe policies of the §5.2 suite (all in Table 1 / §5.3).
+pub const SAFE_POLICIES: [&str; 7] = [
+    "noop",
+    "static_ring",
+    "size_aware",
+    "adaptive_channels",
+    "latency_aware",
+    "slo_enforcer",
+    "nvlink_ring_mid_v2",
+];
+
+/// The 7 unsafe programs, one per bug class (§5.2).
+pub const UNSAFE_POLICIES: [(&str, &str); 7] = [
+    ("null_deref", "map_value_or_null"),
+    ("oob_access", "out of bounds"),
+    ("illegal_helper", "illegal helper"),
+    ("stack_overflow", "stack"),
+    ("unbounded_loop", "unbounded loop"),
+    ("input_write", "read-only"),
+    ("div_zero", "division by zero"),
+];
+
+/// Build an unsafe-suite program from `policies/unsafe/`.
+pub fn build_unsafe(name: &str) -> Result<Object, String> {
+    let dir = policies_dir().join("unsafe");
+    for ext in ["c", "s"] {
+        let p = dir.join(format!("{}.{}", name, ext));
+        if p.exists() {
+            return build_policy(&p);
+        }
+    }
+    Err(format!("no unsafe policy named '{}'", name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::NcclBpfHost;
+
+    #[test]
+    fn all_safe_policies_build_and_install() {
+        let host = NcclBpfHost::new();
+        for name in SAFE_POLICIES {
+            let obj = build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            host.install_object(&obj)
+                .unwrap_or_else(|e| panic!("{} must verify: {}", name, e));
+        }
+        // profiler + net companions
+        for name in ["record_latency", "net_count", "bad_channels"] {
+            let obj = build_named(name).unwrap();
+            host.install_object(&obj).unwrap();
+        }
+    }
+
+    #[test]
+    fn all_unsafe_policies_rejected_with_expected_class() {
+        let host = NcclBpfHost::new();
+        for (name, needle) in UNSAFE_POLICIES {
+            let obj = build_unsafe(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            let err = host
+                .install_object(&obj)
+                .expect_err(&format!("{} must be rejected", name));
+            let msg = err.to_string();
+            assert!(
+                msg.to_lowercase().contains(needle),
+                "{}: expected '{}' in error, got: {}",
+                name,
+                needle,
+                msg
+            );
+        }
+        // nothing was installed
+        assert!(host.active_name(crate::bpf::ProgType::Tuner).is_none());
+    }
+}

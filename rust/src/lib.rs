@@ -1,0 +1,33 @@
+//! # NCCLbpf — Verified, Composable Policy Execution for GPU Collective Communication
+//!
+//! Reproduction of the NCCLbpf paper (CS.DC 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: a userspace
+//!   eBPF runtime ([`bpf`]) embedded into the plugin interfaces of an
+//!   NCCL-like collective communication engine ([`cc`]) via the plugin
+//!   host ([`host`]), with load-time verification, typed cross-plugin
+//!   maps, and atomic policy hot-reload.
+//! - **Layer 2 (python/compile/model.py)** — a JAX transformer training
+//!   step, AOT-lowered to HLO text and executed from Rust via PJRT
+//!   ([`runtime`]); the distributed-training driver lives in [`train`].
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels (chunk
+//!   reduction, LL-protocol pack/unpack, fused Adam) lowered into the
+//!   same HLO artifacts.
+//!
+//! The original paper evaluates on 8x NVIDIA B300 GPUs with real NCCL
+//! and bpftime. Neither GPUs nor NCCL are available here, so every
+//! substrate is built from scratch: the eBPF ISA/verifier/JIT/maps, a
+//! restricted-C policy compiler ([`bpfc`]), and a collective engine
+//! with Ring/Tree/NVLS algorithms, LL/LL128/Simple protocols and an
+//! NVLink performance model. See DESIGN.md for the substitution map.
+
+pub mod bpf;
+pub mod bpfc;
+pub mod cc;
+pub mod cli;
+pub mod host;
+pub mod metrics;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,234 @@
+//! ncclbpf — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   verify <policy.c|.s>        compile + verify a policy, print report
+//!   disasm <policy.c|.s>        compile + disassemble
+//!   allreduce [--size 64M ...]  run one AllReduce under a policy
+//!   sweep                       Table 2 algorithm sweep
+//!   train [--ranks 4 ...]       DDP training with the policy attached
+//!   safety                      run the §5.2 accept/reject suite
+//!   hotreload                   demonstrate atomic policy swap
+
+use ncclbpf::bpf::ProgType;
+use ncclbpf::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology};
+use ncclbpf::cli::Args;
+use ncclbpf::host::policydir;
+use ncclbpf::host::{BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
+use ncclbpf::runtime::{default_artifacts_dir, Runtime};
+use ncclbpf::train::{DdpTrainer, TrainConfig};
+use ncclbpf::util::{fmt_size, parse_size};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse();
+    let rc = match args.subcommand.as_deref() {
+        Some("verify") => cmd_verify(&args),
+        Some("disasm") => cmd_disasm(&args),
+        Some("allreduce") => cmd_allreduce(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("train") => cmd_train(&args),
+        Some("safety") => cmd_safety(),
+        Some("hotreload") => cmd_hotreload(),
+        _ => {
+            eprintln!(
+                "usage: ncclbpf <verify|disasm|allreduce|sweep|train|safety|hotreload> [flags]\n\
+                 see README.md for examples"
+            );
+            2
+        }
+    };
+    std::process::exit(rc);
+}
+
+fn load_policy_arg(args: &Args) -> Result<Option<ncclbpf::bpf::Object>, String> {
+    let Some(path) = args.positional.first() else {
+        return Ok(None);
+    };
+    policydir::build_policy(Path::new(path)).map(Some)
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let Some(obj) = load_policy_arg(args).unwrap_or_else(|e| {
+        eprintln!("{}", e);
+        std::process::exit(1)
+    }) else {
+        eprintln!("usage: ncclbpf verify <policy.c|policy.s>");
+        return 2;
+    };
+    let host = NcclBpfHost::new();
+    match host.install_object(&obj) {
+        Ok(report) => {
+            for (name, pt) in &report.programs {
+                println!("VERIFIER ACCEPT: {} ({:?})", name, pt);
+            }
+            println!(
+                "verify {} us, compile {} us, swap {:?} ns",
+                report.verify_ns / 1000,
+                report.compile_ns / 1000,
+                report.swap_ns
+            );
+            0
+        }
+        Err(e) => {
+            println!("{}", e);
+            1
+        }
+    }
+}
+
+fn cmd_disasm(args: &Args) -> i32 {
+    let Some(obj) = load_policy_arg(args).unwrap_or_else(|e| {
+        eprintln!("{}", e);
+        std::process::exit(1)
+    }) else {
+        eprintln!("usage: ncclbpf disasm <policy.c|policy.s>");
+        return 2;
+    };
+    for p in &obj.progs {
+        println!("; program {} (section {})", p.name, p.section);
+        print!("{}", ncclbpf::bpf::insn::disasm(&p.insns));
+    }
+    0
+}
+
+fn cmd_allreduce(args: &Args) -> i32 {
+    let size = parse_size(args.flag("size").unwrap_or("64M")).expect("bad --size");
+    let ranks = args.flag_usize("ranks", 8);
+    let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
+    comm.data_mode = DataMode::Sampled(1 << 20);
+    comm.prewarm_all();
+
+    let host = Arc::new(NcclBpfHost::new());
+    if let Some(policy) = args.flag("policy") {
+        let obj = policydir::build_named(policy).expect("policy");
+        host.install_object(&obj).expect("verify");
+        comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+        println!("policy: {}", policy);
+    }
+
+    let elems = (size / 4).min(4 << 20);
+    let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|r| vec![r as f32 + 1.0; elems]).collect();
+    let res = comm.run(CollType::AllReduce, &mut bufs, size);
+    println!(
+        "AllReduce {} on {}: {}/{}/{}ch -> {:.1} GB/s busbw (modeled {:.1} us, plugin {} ns)",
+        fmt_size(size),
+        comm.topo.name,
+        res.cfg.algo.name(),
+        res.cfg.proto.name(),
+        res.cfg.nchannels,
+        res.busbw_gbps,
+        res.modeled_ns / 1e3,
+        res.plugin_overhead_ns,
+    );
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let ranks = args.flag_usize("ranks", 8);
+    let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
+    comm.jitter = false;
+    comm.data_mode = DataMode::Sampled(64 << 10);
+    comm.prewarm_all();
+    println!("{:>8}  {:>14}  {:>10}  {:>8}", "Size", "Default(NVLS)", "Ring", "delta");
+    let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|_| vec![1.0f32; 16 << 10]).collect();
+    for mib in [4usize, 8, 16, 32, 64, 128, 256, 8192] {
+        let size = mib << 20;
+        let default = comm.model.default_config(CollType::AllReduce, size);
+        let d = comm.run_fixed(CollType::AllReduce, &mut bufs, size, default).busbw_gbps;
+        let ring = (0..3)
+            .map(|p| {
+                comm.run_fixed(
+                    CollType::AllReduce,
+                    &mut bufs,
+                    size,
+                    CollConfig::new(Algo::Ring, Proto::from_index(p).unwrap(), 32),
+                )
+                .busbw_gbps
+            })
+            .fold(0.0f64, f64::max);
+        println!(
+            "{:>8}  {:>14.1}  {:>10.1}  {:>+7.1}%",
+            fmt_size(size),
+            d,
+            ring,
+            (ring / d - 1.0) * 100.0
+        );
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let ranks = args.flag_usize("ranks", 4);
+    let steps = args.flag_usize("steps", 50);
+    let rt = Arc::new(
+        Runtime::load(&default_artifacts_dir()).expect("load artifacts (run `make artifacts`)"),
+    );
+    let mut comm = Communicator::new(Topology::nvlink_b300(ranks.max(2)));
+    let host = Arc::new(NcclBpfHost::new());
+    let policy = args.flag("policy").unwrap_or("nvlink_ring_mid_v2");
+    let obj = policydir::build_named(policy).expect("policy");
+    host.install_object(&obj).expect("verify");
+    comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+    comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+    println!(
+        "training: {} params, {} ranks, {} steps, policy={}",
+        rt.manifest.n_params, ranks, steps, policy
+    );
+    let cfg = TrainConfig { ranks: ranks.max(2), steps, ..Default::default() };
+    let mut trainer = DdpTrainer::new(rt, comm, cfg).expect("trainer");
+    let report = trainer.train().expect("train");
+    println!(
+        "loss: {:.4} -> {:.4} over {} steps ({} tuner decisions)",
+        report.first_loss(),
+        report.last_loss(),
+        report.stats.len(),
+        host.decisions.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    0
+}
+
+fn cmd_safety() -> i32 {
+    let host = NcclBpfHost::new();
+    println!("== safe policies (must be ACCEPTED) ==");
+    for name in policydir::SAFE_POLICIES {
+        let obj = policydir::build_named(name).expect(name);
+        match host.install_object(&obj) {
+            Ok(_) => println!("  ACCEPT {}", name),
+            Err(e) => {
+                println!("  UNEXPECTED REJECT {}: {}", name, e);
+                return 1;
+            }
+        }
+    }
+    println!("== unsafe programs (must be REJECTED) ==");
+    for (name, _class) in policydir::UNSAFE_POLICIES {
+        let obj = policydir::build_unsafe(name).expect(name);
+        match host.install_object(&obj) {
+            Ok(_) => {
+                println!("  UNEXPECTED ACCEPT {}", name);
+                return 1;
+            }
+            Err(e) => println!("  REJECT {} -> {}", name, e),
+        }
+    }
+    println!("safety suite: all 7 safe accepted, all 7 unsafe rejected");
+    0
+}
+
+fn cmd_hotreload() -> i32 {
+    let host = NcclBpfHost::new();
+    let a = policydir::build_named("static_ring").unwrap();
+    let b = policydir::build_named("nvlink_ring_mid_v2").unwrap();
+    let r1 = host.install_object(&a).unwrap();
+    println!("installed static_ring: total {} us", r1.total_ns() / 1000);
+    let r2 = host.install_object(&b).unwrap();
+    println!(
+        "hot-reloaded to nvlink_ring_mid_v2: verify+compile {} us, swap {} ns",
+        (r2.verify_ns + r2.compile_ns) / 1000,
+        r2.swap_ns[0]
+    );
+    let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
+    println!("swaps={} last_swap={} ns", swaps, last_ns);
+    0
+}

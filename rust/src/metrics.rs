@@ -1,0 +1,147 @@
+//! Process-wide metrics registry: counters and latency histograms used
+//! by the coordinator, the plugin host, and the benches.
+
+use crate::util::Histogram;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Thread-safe latency histogram (ns).
+#[derive(Default)]
+pub struct LatencyHist {
+    inner: Mutex<Histogram>,
+}
+
+impl LatencyHist {
+    pub fn record_ns(&self, ns: u64) {
+        self.inner.lock().unwrap().record(ns);
+    }
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.inner.lock().unwrap().quantile(q)
+    }
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().count()
+    }
+}
+
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<HashMap<String, Arc<Counter>>>,
+    hists: Mutex<HashMap<String, Arc<LatencyHist>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn hist(&self, name: &str) -> Arc<LatencyHist> {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render all metrics as "name value" lines (Prometheus-ish).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut names: Vec<(String, u64)> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        names.sort();
+        for (k, v) in names {
+            out.push_str(&format!("{} {}\n", k, v));
+        }
+        let mut hists: Vec<(String, Arc<LatencyHist>)> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        for (k, h) in hists {
+            out.push_str(&format!(
+                "{}_p50_ns {}\n{}_p99_ns {}\n{}_count {}\n",
+                k,
+                h.quantile(0.5),
+                k,
+                h.quantile(0.99),
+                k,
+                h.count()
+            ));
+        }
+        out
+    }
+}
+
+/// Global registry (convenience for examples/benches).
+pub fn global() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::default();
+        let c = r.counter("calls");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name returns the same counter
+        assert_eq!(r.counter("calls").get(), 5);
+    }
+
+    #[test]
+    fn hist_quantiles() {
+        let r = Registry::default();
+        let h = r.hist("lat");
+        for i in 1..=100 {
+            h.record_ns(i);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.quantile(0.5) >= 32);
+    }
+
+    #[test]
+    fn render_contains_entries() {
+        let r = Registry::default();
+        r.counter("x").inc();
+        r.hist("y").record_ns(10);
+        let out = r.render();
+        assert!(out.contains("x 1"));
+        assert!(out.contains("y_p50_ns"));
+        assert!(out.contains("y_count 1"));
+    }
+}

@@ -1,0 +1,345 @@
+//! Artifact manifest parsing (artifacts/manifest.json) — includes a
+//! minimal JSON parser (serde is not in the offline crate set).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Minimal JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => Some(*n as u64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse_json(src: &str) -> Result<Json, String> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&chars, &mut pos)?;
+    skip_ws(&chars, &mut pos);
+    if pos != chars.len() {
+        return Err(format!("trailing JSON at char {}", pos));
+    }
+    Ok(v)
+}
+
+fn skip_ws(c: &[char], p: &mut usize) {
+    while *p < c.len() && c[*p].is_whitespace() {
+        *p += 1;
+    }
+}
+
+fn parse_value(c: &[char], p: &mut usize) -> Result<Json, String> {
+    skip_ws(c, p);
+    match c.get(*p) {
+        None => Err("unexpected end of JSON".into()),
+        Some('{') => {
+            *p += 1;
+            let mut m = HashMap::new();
+            skip_ws(c, p);
+            if c.get(*p) == Some(&'}') {
+                *p += 1;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                skip_ws(c, p);
+                let Json::Str(key) = parse_value(c, p)? else {
+                    return Err("object key must be a string".into());
+                };
+                skip_ws(c, p);
+                if c.get(*p) != Some(&':') {
+                    return Err(format!("expected ':' at char {}", p));
+                }
+                *p += 1;
+                let v = parse_value(c, p)?;
+                m.insert(key, v);
+                skip_ws(c, p);
+                match c.get(*p) {
+                    Some(',') => {
+                        *p += 1;
+                    }
+                    Some('}') => {
+                        *p += 1;
+                        return Ok(Json::Obj(m));
+                    }
+                    other => return Err(format!("expected ',' or '}}', got {:?}", other)),
+                }
+            }
+        }
+        Some('[') => {
+            *p += 1;
+            let mut a = Vec::new();
+            skip_ws(c, p);
+            if c.get(*p) == Some(&']') {
+                *p += 1;
+                return Ok(Json::Arr(a));
+            }
+            loop {
+                a.push(parse_value(c, p)?);
+                skip_ws(c, p);
+                match c.get(*p) {
+                    Some(',') => {
+                        *p += 1;
+                    }
+                    Some(']') => {
+                        *p += 1;
+                        return Ok(Json::Arr(a));
+                    }
+                    other => return Err(format!("expected ',' or ']', got {:?}", other)),
+                }
+            }
+        }
+        Some('"') => {
+            *p += 1;
+            let mut s = String::new();
+            while let Some(&ch) = c.get(*p) {
+                *p += 1;
+                match ch {
+                    '"' => return Ok(Json::Str(s)),
+                    '\\' => {
+                        let esc = c.get(*p).copied().ok_or("bad escape")?;
+                        *p += 1;
+                        s.push(match esc {
+                            'n' => '\n',
+                            't' => '\t',
+                            'r' => '\r',
+                            other => other,
+                        });
+                    }
+                    other => s.push(other),
+                }
+            }
+            Err("unterminated string".into())
+        }
+        Some('t') => {
+            if c[*p..].starts_with(&['t', 'r', 'u', 'e']) {
+                *p += 4;
+                Ok(Json::Bool(true))
+            } else {
+                Err("bad literal".into())
+            }
+        }
+        Some('f') => {
+            if c[*p..].starts_with(&['f', 'a', 'l', 's', 'e']) {
+                *p += 5;
+                Ok(Json::Bool(false))
+            } else {
+                Err("bad literal".into())
+            }
+        }
+        Some('n') => {
+            if c[*p..].starts_with(&['n', 'u', 'l', 'l']) {
+                *p += 4;
+                Ok(Json::Null)
+            } else {
+                Err("bad literal".into())
+            }
+        }
+        Some(_) => {
+            let start = *p;
+            while *p < c.len()
+                && (c[*p].is_ascii_digit() || matches!(c[*p], '-' | '+' | '.' | 'e' | 'E'))
+            {
+                *p += 1;
+            }
+            let s: String = c[start..*p].iter().collect();
+            s.parse::<f64>().map(Json::Num).map_err(|_| format!("bad number '{}'", s))
+        }
+    }
+}
+
+/// One parameter tensor's place in the flat vector.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model/runtime configuration exported by aot.py.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub n_params_padded: usize,
+    pub reduce_block: usize,
+    pub ll_block: usize,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = parse_json(text)?;
+        let cfg = j.get("config").ok_or("manifest missing 'config'")?;
+        let u = |v: Option<&Json>, what: &str| -> Result<usize, String> {
+            v.and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .ok_or(format!("manifest missing {}", what))
+        };
+        let mut params = Vec::new();
+        for p in j.get("params").and_then(Json::as_arr).ok_or("missing params")? {
+            params.push(ParamEntry {
+                name: p.get("name").and_then(Json::as_str).ok_or("param name")?.to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or("param shape")?
+                    .iter()
+                    .map(|d| d.as_u64().unwrap_or(0) as usize)
+                    .collect(),
+                offset: u(p.get("offset"), "param offset")?,
+                size: u(p.get("size"), "param size")?,
+            });
+        }
+        let mut artifacts = HashMap::new();
+        if let Some(Json::Obj(m)) = j.get("artifacts") {
+            for (k, v) in m {
+                if let Json::Str(s) = v {
+                    artifacts.insert(k.clone(), s.clone());
+                }
+            }
+        }
+        Ok(Manifest {
+            vocab: u(cfg.get("vocab"), "vocab")?,
+            d_model: u(cfg.get("d_model"), "d_model")?,
+            n_layers: u(cfg.get("n_layers"), "n_layers")?,
+            n_heads: u(cfg.get("n_heads"), "n_heads")?,
+            seq_len: u(cfg.get("seq_len"), "seq_len")?,
+            batch: u(cfg.get("batch"), "batch")?,
+            n_params: u(j.get("n_params"), "n_params")?,
+            n_params_padded: u(j.get("n_params_padded"), "n_params_padded")?,
+            reduce_block: u(j.get("reduce_block"), "reduce_block")?,
+            ll_block: u(j.get("ll_block"), "ll_block")?,
+            params,
+            artifacts,
+        })
+    }
+
+    /// Consistency checks mirroring python/tests/test_aot.py.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_params_padded % self.reduce_block != 0 {
+            return Err("padded size not a block multiple".into());
+        }
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                return Err(format!("param '{}' offset {} != expected {}", p.name, p.offset, off));
+            }
+            let sz: usize = p.shape.iter().product();
+            if sz != p.size {
+                return Err(format!("param '{}' size mismatch", p.name));
+            }
+            off += p.size;
+        }
+        if off != self.n_params {
+            return Err(format!("param sizes sum {} != n_params {}", off, self.n_params));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parser_basics() {
+        let j = parse_json(r#"{"a": 1, "b": [1, 2.5, "x"], "c": {"d": true}, "e": null}"#)
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("b").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("c").unwrap().get("d"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("e"), Some(&Json::Null));
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{} extra").is_err());
+    }
+
+    #[test]
+    fn json_negative_and_exponent() {
+        let j = parse_json("[-3, 1e3, 2.5e-2]").unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0], Json::Num(-3.0));
+        assert_eq!(a[1], Json::Num(1000.0));
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let text = r#"{
+            "config": {"vocab": 256, "d_model": 128, "n_layers": 4,
+                       "n_heads": 4, "seq_len": 64, "batch": 4},
+            "n_params": 20,
+            "n_params_padded": 16384,
+            "reduce_block": 16384,
+            "ll_block": 8192,
+            "params": [
+                {"name": "a", "shape": [4, 4], "offset": 0, "size": 16},
+                {"name": "b", "shape": [4], "offset": 16, "size": 4}
+            ],
+            "artifacts": {"train_step": "train_step.hlo.txt"}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].offset, 16);
+        assert_eq!(m.artifacts["train_step"], "train_step.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_validation_catches_gaps() {
+        let text = r#"{
+            "config": {"vocab": 1, "d_model": 1, "n_layers": 1,
+                       "n_heads": 1, "seq_len": 1, "batch": 1},
+            "n_params": 20, "n_params_padded": 16384,
+            "reduce_block": 16384, "ll_block": 8192,
+            "params": [{"name": "a", "shape": [16], "offset": 4, "size": 16}],
+            "artifacts": {}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert!(m.validate().is_err());
+    }
+}

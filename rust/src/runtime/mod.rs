@@ -1,0 +1,193 @@
+//! PJRT runtime: load the AOT artifacts (HLO text) produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//! Python never runs at request time — the binary is self-contained
+//! once `make artifacts` has produced `artifacts/`.
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use manifest::Manifest;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub use manifest::{Json, ParamEntry};
+
+/// Default artifacts directory (repo-relative).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A loaded PJRT runtime with every executable compiled once.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    train_step: xla::PjRtLoadedExecutable,
+    adam_step: xla::PjRtLoadedExecutable,
+    reduce_chunk: xla::PjRtLoadedExecutable,
+    ll_pack: xla::PjRtLoadedExecutable,
+    ll_unpack: xla::PjRtLoadedExecutable,
+    /// executions per artifact (observability)
+    pub exec_counts: Mutex<std::collections::HashMap<&'static str, u64>>,
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    fname: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(fname);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parse HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compile {}", fname))
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in the manifest.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .map_err(|e| anyhow!("manifest: {}", e))?;
+        manifest.validate().map_err(|e| anyhow!("manifest invalid: {}", e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let get = |k: &str| -> Result<String> {
+            manifest
+                .artifacts
+                .get(k)
+                .cloned()
+                .ok_or_else(|| anyhow!("manifest missing artifact '{}'", k))
+        };
+        Ok(Runtime {
+            train_step: compile_artifact(&client, dir, &get("train_step")?)?,
+            adam_step: compile_artifact(&client, dir, &get("adam_step")?)?,
+            reduce_chunk: compile_artifact(&client, dir, &get("reduce_chunk")?)?,
+            ll_pack: compile_artifact(&client, dir, &get("ll_pack")?)?,
+            ll_unpack: compile_artifact(&client, dir, &get("ll_unpack")?)?,
+            client,
+            manifest,
+            exec_counts: Mutex::new(Default::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn count(&self, what: &'static str) {
+        *self.exec_counts.lock().unwrap().entry(what).or_insert(0) += 1;
+    }
+
+    /// One fwd/bwd step: returns (loss, flat gradients).
+    pub fn train_step(&self, flat_params: &[f32], x: &[i32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let m = &self.manifest;
+        anyhow::ensure!(flat_params.len() == m.n_params_padded, "bad param length");
+        anyhow::ensure!(x.len() == m.batch * m.seq_len, "bad x length");
+        anyhow::ensure!(y.len() == m.batch * m.seq_len, "bad y length");
+        let p = xla::Literal::vec1(flat_params);
+        let xs = xla::Literal::vec1(x).reshape(&[m.batch as i64, m.seq_len as i64])?;
+        let ys = xla::Literal::vec1(y).reshape(&[m.batch as i64, m.seq_len as i64])?;
+        self.count("train_step");
+        let result =
+            self.train_step.execute::<xla::Literal>(&[p, xs, ys])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "train_step must return (loss, grads)");
+        let loss = parts[0].to_vec::<f32>()?[0];
+        let grads = parts[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// Fused Adam: returns (params', m', v').
+    pub fn adam_step(
+        &self,
+        p: &[f32],
+        g: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        grad_scale: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let sc = xla::Literal::vec1(&[step, grad_scale]);
+        self.count("adam_step");
+        let result = self
+            .adam_step
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(p),
+                xla::Literal::vec1(g),
+                xla::Literal::vec1(m),
+                xla::Literal::vec1(v),
+                sc,
+            ])?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "adam_step must return (p, m, v)");
+        Ok((
+            parts[0].to_vec::<f32>()?,
+            parts[1].to_vec::<f32>()?,
+            parts[2].to_vec::<f32>()?,
+        ))
+    }
+
+    /// Pallas chunk reduction at the fixed block size.
+    pub fn reduce_block(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == self.manifest.reduce_block, "bad block length");
+        self.count("reduce_chunk");
+        let result = self
+            .reduce_chunk
+            .execute::<xla::Literal>(&[xla::Literal::vec1(a), xla::Literal::vec1(b)])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// LL-protocol pack via the Pallas artifact.
+    pub fn ll_pack(&self, data: &[f32], flag: u32) -> Result<Vec<u32>> {
+        anyhow::ensure!(data.len() == self.manifest.ll_block, "bad LL block");
+        self.count("ll_pack");
+        let result = self
+            .ll_pack
+            .execute::<xla::Literal>(&[xla::Literal::vec1(data), xla::Literal::scalar(flag)])?
+            [0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<u32>()?)
+    }
+
+    /// LL-protocol unpack via the Pallas artifact: (data, bad_lines).
+    pub fn ll_unpack(&self, wire: &[u32], flag: u32) -> Result<(Vec<f32>, u32)> {
+        anyhow::ensure!(wire.len() == 2 * self.manifest.ll_block, "bad LL wire");
+        self.count("ll_unpack");
+        let result = self
+            .ll_unpack
+            .execute::<xla::Literal>(&[xla::Literal::vec1(wire), xla::Literal::scalar(flag)])?
+            [0][0]
+            .to_literal_sync()?;
+        let (data, bad) = result.to_tuple2()?;
+        Ok((data.to_vec::<f32>()?, bad.to_vec::<u32>()?[0]))
+    }
+}
+
+/// A [`crate::cc::algo::Reducer`] backed by the Pallas `reduce_chunk`
+/// artifact: the ring reduce-scatter's combine runs through the same
+/// compiled kernel a TPU deployment would use. Arbitrary slice lengths
+/// are handled by zero-padding into the fixed block.
+pub struct PallasReducer<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl crate::cc::algo::Reducer for PallasReducer<'_> {
+    fn reduce_into(&self, acc: &mut [f32], src: &[f32]) {
+        let block = self.rt.manifest.reduce_block;
+        let mut abuf = vec![0.0f32; block];
+        let mut bbuf = vec![0.0f32; block];
+        let mut i = 0;
+        while i < acc.len() {
+            let n = (acc.len() - i).min(block);
+            abuf[..n].copy_from_slice(&acc[i..i + n]);
+            abuf[n..].fill(0.0);
+            bbuf[..n].copy_from_slice(&src[i..i + n]);
+            bbuf[n..].fill(0.0);
+            let out = self.rt.reduce_block(&abuf, &bbuf).expect("pallas reduce");
+            acc[i..i + n].copy_from_slice(&out[..n]);
+            i += n;
+        }
+    }
+}

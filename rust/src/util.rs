@@ -1,0 +1,384 @@
+//! Small self-contained utilities (no external crates are available
+//! offline beyond the xla closure): PRNG, statistics, histograms, FNV
+//! hashing, and human-readable size formatting.
+
+/// xorshift128+ PRNG — deterministic, seedable (no `rand` crate offline).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s0: u64,
+    s1: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        // splitmix64 to spread the seed
+        let mut z = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut next = || {
+            z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut x = z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            x ^ (x >> 31)
+        };
+        let s0 = next();
+        let s1 = next().max(1);
+        Rng { s0, s1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// uniform in [0, n)
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.next_u64() % n
+    }
+
+    /// uniform f64 in [0, 1)
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// uniform f32 in [lo, hi)
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f64() as f32
+    }
+
+    /// standard normal via Box–Muller
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// FNV-1a 64-bit hash (used for communicator-id derivation, §4:
+/// "deriving a stable ID from the context pointer via hashing").
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+pub fn fnv1a_u64(v: u64) -> u64 {
+    fnv1a(&v.to_le_bytes())
+}
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn of(xs: &[f64]) -> Stats {
+        if xs.is_empty() {
+            return Stats::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// coefficient of variation, in percent (paper §5.3 reports CV%).
+    pub fn cv_percent(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            100.0 * self.std / self.mean
+        }
+    }
+}
+
+/// Percentile from a sample (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Latency percentiles helper for ns samples (Table 1 reports P50/P99).
+pub fn p50_p99(ns: &[f64]) -> (f64, f64) {
+    (percentile(ns, 50.0), percentile(ns, 99.0))
+}
+
+/// Fixed-bucket log2 histogram for ns-scale latencies.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { buckets: vec![0; 64], count: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = 64 - v.max(1).leading_zeros() as usize - 1;
+        self.buckets[b.min(63)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// approximate quantile from the log2 buckets (bucket midpoint).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << i) + (1u64 << i) / 2;
+            }
+        }
+        1u64 << 63
+    }
+}
+
+/// Parse sizes like "4M", "128K", "8G", "256" (bytes).
+pub fn parse_size(s: &str) -> Result<usize, String> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K') | Some('k') => (&s[..s.len() - 1], 1usize << 10),
+        Some('M') | Some('m') => (&s[..s.len() - 1], 1usize << 20),
+        Some('G') | Some('g') => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1),
+    };
+    num.trim()
+        .parse::<usize>()
+        .map(|v| v * mult)
+        .map_err(|_| format!("bad size '{}'", s))
+}
+
+/// Format a byte count as a human string ("4 MiB").
+pub fn fmt_size(bytes: usize) -> String {
+    if bytes >= 1 << 30 && bytes % (1 << 30) == 0 {
+        format!("{} GiB", bytes >> 30)
+    } else if bytes >= 1 << 20 && bytes % (1 << 20) == 0 {
+        format!("{} MiB", bytes >> 20)
+    } else if bytes >= 1 << 10 && bytes % (1 << 10) == 0 {
+        format!("{} KiB", bytes >> 10)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+/// Minimal JSON writer for results files (no serde offline).
+pub struct JsonWriter {
+    buf: String,
+    stack: Vec<bool>, // true = need comma before next item
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter { buf: String::new(), stack: vec![] }
+    }
+    fn sep(&mut self) {
+        if let Some(need) = self.stack.last_mut() {
+            if *need {
+                self.buf.push(',');
+            }
+            *need = true;
+        }
+    }
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.sep();
+        self.buf.push('{');
+        self.stack.push(false);
+        self
+    }
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.buf.push('}');
+        self.stack.pop();
+        self
+    }
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.sep();
+        self.buf.push('[');
+        self.stack.push(false);
+        self
+    }
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.buf.push(']');
+        self.stack.pop();
+        self
+    }
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.sep();
+        self.buf.push('"');
+        self.buf.push_str(k);
+        self.buf.push_str("\":");
+        if let Some(need) = self.stack.last_mut() {
+            *need = false;
+        }
+        self
+    }
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.sep();
+        self.buf.push('"');
+        for c in v.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+        self
+    }
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.sep();
+        if v.fract() == 0.0 && v.abs() < 1e15 {
+            self.buf.push_str(&format!("{}", v as i64));
+        } else {
+            self.buf.push_str(&format!("{}", v));
+        }
+        self
+    }
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic_and_spread() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let xs: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        let mut c = Rng::new(8);
+        assert_ne!(xs[0], c.next_u64());
+        // below() respects the bound
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn rng_f64_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean - 5.0).abs() < 1e-9);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+        assert!(s.std > 0.0);
+        assert!(s.cv_percent() > 0.0);
+        assert_eq!(Stats::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+        assert!((percentile(&xs, 99.0) - 99.0).abs() <= 1.0);
+        let (p50, p99) = p50_p99(&xs);
+        assert!(p50 < p99);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i);
+        }
+        assert_eq!(h.count(), 1000);
+        let q50 = h.quantile(0.5);
+        assert!(q50 >= 256 && q50 <= 1024, "q50={}", q50);
+    }
+
+    #[test]
+    fn parse_and_format_sizes() {
+        assert_eq!(parse_size("4M").unwrap(), 4 << 20);
+        assert_eq!(parse_size("128K").unwrap(), 128 << 10);
+        assert_eq!(parse_size("8G").unwrap(), 8usize << 30);
+        assert_eq!(parse_size("77").unwrap(), 77);
+        assert!(parse_size("x").is_err());
+        assert_eq!(fmt_size(4 << 20), "4 MiB");
+        assert_eq!(fmt_size(8 << 30), "8 GiB");
+        assert_eq!(fmt_size(3), "3 B");
+    }
+
+    #[test]
+    fn fnv_stable() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a_u64(1), fnv1a_u64(2));
+    }
+
+    #[test]
+    fn json_writer_shapes() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str("t1");
+        w.key("vals").begin_arr().num(1.0).num(2.5).end_arr();
+        w.end_obj();
+        assert_eq!(w.finish(), r#"{"name":"t1","vals":[1,2.5]}"#);
+    }
+}

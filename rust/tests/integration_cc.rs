@@ -1,0 +1,233 @@
+//! Integration tests for the collective engine: correctness matrix
+//! across (coll, algo, proto, channels, ranks) and perf-model shape
+//! checks at the communicator level.
+
+use ncclbpf::cc::algo::NativeSum;
+use ncclbpf::cc::plugin::FixedTuner;
+use ncclbpf::cc::{
+    Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology,
+};
+use ncclbpf::util::Rng;
+use std::sync::Arc;
+
+fn bufs(n: usize, len: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let b: Vec<Vec<f32>> =
+        (0..n).map(|_| (0..len).map(|_| rng.f32_range(-2.0, 2.0)).collect()).collect();
+    let mut want = vec![0.0f32; len];
+    for r in &b {
+        for (w, v) in want.iter_mut().zip(r) {
+            *w += v;
+        }
+    }
+    (b, want)
+}
+
+#[test]
+fn allreduce_matrix_all_configs_identical_result() {
+    let mut comm = Communicator::new(Topology::nvlink_b300(8));
+    comm.jitter = false;
+    for algo in [Algo::Ring, Algo::Tree, Algo::Nvls] {
+        for proto in [Proto::Ll, Proto::Ll128, Proto::Simple] {
+            for ch in [1u32, 4, 32] {
+                let (mut b, want) = bufs(8, 1000, 42);
+                comm.run_fixed(
+                    CollType::AllReduce,
+                    &mut b,
+                    4000,
+                    CollConfig::new(algo, proto, ch),
+                );
+                for r in 0..8 {
+                    for (g, w) in b[r].iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() < 1e-3,
+                            "{:?}/{:?}/{}ch rank {}",
+                            algo,
+                            proto,
+                            ch,
+                            r
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn odd_rank_counts() {
+    for n in [2usize, 3, 5, 7] {
+        let mut comm = Communicator::new(Topology::nvlink_b300(n.max(2)));
+        let (mut b, want) = bufs(comm.topo.n_ranks, 321, 9);
+        comm.run_fixed(
+            CollType::AllReduce,
+            &mut b,
+            321 * 4,
+            CollConfig::new(Algo::Tree, Proto::Ll128, 4),
+        );
+        for r in 0..comm.topo.n_ranks {
+            for (g, w) in b[r].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "n={} rank {}", n, r);
+            }
+        }
+    }
+}
+
+#[test]
+fn tuner_plugin_decision_has_performance_consequences() {
+    // the same collective under a good policy vs bad_channels must show
+    // a large modeled-throughput gap (the Fig. 2 mechanism)
+    let mut comm = Communicator::new(Topology::nvlink_b300(8));
+    comm.jitter = false;
+    comm.data_mode = DataMode::Sampled(64 << 10);
+    comm.prewarm_all();
+    let size = 64 << 20;
+    let mut b: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 1024]).collect();
+
+    comm.set_tuner(Some(Arc::new(FixedTuner {
+        algo: Algo::Ring,
+        proto: Proto::Simple,
+        nchannels: 32,
+    })));
+    let good = comm.run(CollType::AllReduce, &mut b, size).busbw_gbps;
+
+    comm.set_tuner(Some(Arc::new(FixedTuner {
+        algo: Algo::Ring,
+        proto: Proto::Simple,
+        nchannels: 1,
+    })));
+    let bad = comm.run(CollType::AllReduce, &mut b, size).busbw_gbps;
+    assert!(
+        bad < good * 0.25,
+        "1-channel policy must collapse throughput: good {:.1} bad {:.1}",
+        good,
+        bad
+    );
+}
+
+#[test]
+fn plugin_overhead_measured_and_small() {
+    let mut comm = Communicator::new(Topology::nvlink_b300(8));
+    comm.data_mode = DataMode::Sampled(4 << 10);
+    comm.set_tuner(Some(Arc::new(FixedTuner {
+        algo: Algo::Ring,
+        proto: Proto::Simple,
+        nchannels: 8,
+    })));
+    let mut b: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 256]).collect();
+    let res = comm.run(CollType::AllReduce, &mut b, 1 << 20);
+    assert!(res.plugin_overhead_ns > 0, "tuner call must be timed");
+    assert!(
+        res.plugin_overhead_ns < 1_000_000,
+        "plugin decision took {} ns",
+        res.plugin_overhead_ns
+    );
+}
+
+#[test]
+fn all_collective_types_execute() {
+    let mut comm = Communicator::new(Topology::nvlink_b300(4));
+    for coll in [
+        CollType::AllReduce,
+        CollType::AllGather,
+        CollType::ReduceScatter,
+        CollType::Broadcast,
+    ] {
+        let (mut b, _) = bufs(4, 256, 11);
+        let res = comm.run(coll, &mut b, 1024);
+        assert!(res.modeled_ns > 0.0, "{:?}", coll);
+        assert!(res.busbw_gbps > 0.0, "{:?}", coll);
+    }
+}
+
+#[test]
+fn sampled_mode_still_reduces_prefix() {
+    let mut comm = Communicator::new(Topology::nvlink_b300(4));
+    comm.data_mode = DataMode::Sampled(1 << 10); // 256 elems
+    let (mut b, want) = bufs(4, 10_000, 5);
+    comm.run_fixed(
+        CollType::AllReduce,
+        &mut b,
+        40_000,
+        CollConfig::new(Algo::Ring, Proto::Simple, 4),
+    );
+    // the sampled prefix is correctly reduced
+    for r in 0..4 {
+        for i in 0..256 {
+            assert!((b[r][i] - want[i]).abs() < 1e-3, "rank {} idx {}", r, i);
+        }
+    }
+}
+
+#[test]
+fn stability_jitter_statistics() {
+    // §5.3 shape: NVLS default has slightly higher variance than the
+    // ring policy configuration
+    let mut comm = Communicator::new(Topology::nvlink_b300(8));
+    comm.data_mode = DataMode::Sampled(4 << 10);
+    comm.prewarm_all();
+    let size = 128 << 20;
+    let mut b: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 256]).collect();
+    let mut nvls = vec![];
+    let mut ring = vec![];
+    for _ in 0..40 {
+        nvls.push(
+            comm.run_fixed(
+                CollType::AllGather,
+                &mut b,
+                size,
+                CollConfig::new(Algo::Nvls, Proto::Simple, 16),
+            )
+            .busbw_gbps,
+        );
+        ring.push(
+            comm.run_fixed(
+                CollType::AllGather,
+                &mut b,
+                size,
+                CollConfig::new(Algo::Ring, Proto::Simple, 32),
+            )
+            .busbw_gbps,
+        );
+    }
+    let s_nvls = ncclbpf::util::Stats::of(&nvls);
+    let s_ring = ncclbpf::util::Stats::of(&ring);
+    assert!(s_nvls.cv_percent() < 1.0, "CV should be sub-percent");
+    assert!(s_ring.cv_percent() < 1.0);
+    assert!(
+        s_ring.cv_percent() < s_nvls.cv_percent(),
+        "ring policy should be steadier: {} vs {}",
+        s_ring.cv_percent(),
+        s_nvls.cv_percent()
+    );
+}
+
+#[test]
+fn pallas_like_reducer_substitution_is_transparent() {
+    // any Reducer implementation must yield identical collectives;
+    // mirror the PallasReducer's pad-and-block behaviour with a mock.
+    struct BlockySum;
+    impl ncclbpf::cc::algo::Reducer for BlockySum {
+        fn reduce_into(&self, acc: &mut [f32], src: &[f32]) {
+            const B: usize = 7; // deliberately awkward block
+            let mut i = 0;
+            while i < acc.len() {
+                let n = (acc.len() - i).min(B);
+                for k in 0..n {
+                    acc[i + k] += src[i + k];
+                }
+                i += n;
+            }
+        }
+    }
+    let (mut a, want) = bufs(4, 500, 21);
+    let mut b = a.clone();
+    ncclbpf::cc::algo::ring_all_reduce(&mut a, Proto::Simple, 4, &NativeSum);
+    ncclbpf::cc::algo::ring_all_reduce(&mut b, Proto::Simple, 4, &BlockySum);
+    for r in 0..4 {
+        for ((x, y), w) in a[r].iter().zip(&b[r]).zip(&want) {
+            assert!((x - y).abs() < 1e-6);
+            assert!((x - w).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Integration tests for the NCCLbpf host attached to a live
+//! communicator: policy steering, hot-reload under load, the closed
+//! loop, and the net-plugin wrapper over real sockets.
+
+use ncclbpf::bpf::ProgType;
+use ncclbpf::cc::net::{NetTransport, SocketTransport, WrappedTransport};
+use ncclbpf::cc::{Algo, CollType, Communicator, DataMode, Proto, Topology};
+use ncclbpf::host::{bpf_net_hook, policydir, BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn engine(host: &Arc<NcclBpfHost>) -> Communicator {
+    let mut comm = Communicator::new(Topology::nvlink_b300(8));
+    comm.jitter = false;
+    comm.data_mode = DataMode::Sampled(16 << 10);
+    comm.prewarm_all();
+    comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+    comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+    comm
+}
+
+fn small_bufs(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|r| vec![r as f32; 1024]).collect()
+}
+
+/// The Figure 2 mechanism end to end: the C policy steers the engine to
+/// Ring/LL128 at 8 MiB, Ring/Simple at 128 MiB, default elsewhere.
+#[test]
+fn ring_mid_v2_policy_steers_engine() {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("nvlink_ring_mid_v2").unwrap()).unwrap();
+    let mut comm = engine(&host);
+    let mut b = small_bufs(8);
+
+    let r = comm.run(CollType::AllReduce, &mut b, 8 << 20);
+    assert_eq!((r.cfg.algo, r.cfg.proto), (Algo::Ring, Proto::Ll128));
+    assert_eq!(r.cfg.nchannels, 32);
+
+    let r = comm.run(CollType::AllReduce, &mut b, 128 << 20);
+    assert_eq!((r.cfg.algo, r.cfg.proto), (Algo::Ring, Proto::Simple));
+
+    // outside the policy's ranges it defers to the engine default (NVLS)
+    let r = comm.run(CollType::AllReduce, &mut b, 512 << 20);
+    assert_eq!(r.cfg.algo, Algo::Nvls);
+    let r = comm.run(CollType::AllReduce, &mut b, 64 << 10);
+    assert_eq!(r.cfg.algo, Algo::Nvls);
+}
+
+/// Policy improves throughput in-range and matches default out of range
+/// — the quantitative Figure 2 claim at three probe sizes.
+#[test]
+fn policy_improves_midrange_throughput() {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("nvlink_ring_mid_v2").unwrap()).unwrap();
+    let mut with_policy = engine(&host);
+    let mut baseline = Communicator::new(Topology::nvlink_b300(8));
+    baseline.jitter = false;
+    baseline.data_mode = DataMode::Sampled(16 << 10);
+    baseline.prewarm_all();
+
+    let mut b = small_bufs(8);
+    for (mib, expect_gain) in [(8usize, true), (64, true), (512, false)] {
+        let size = mib << 20;
+        let p = with_policy.run(CollType::AllReduce, &mut b, size).busbw_gbps;
+        let d = baseline.run(CollType::AllReduce, &mut b, size).busbw_gbps;
+        if expect_gain {
+            assert!(p > d * 1.04, "{} MiB: policy {:.1} vs default {:.1}", mib, p, d);
+        } else {
+            assert!(
+                (p - d).abs() / d < 0.02,
+                "{} MiB: out-of-range must match default ({:.1} vs {:.1})",
+                mib,
+                p,
+                d
+            );
+        }
+    }
+}
+
+/// §5.3 composability: the three-phase closed loop driven through real
+/// collectives (baseline ramp → contention backoff → recovery).
+#[test]
+fn closed_loop_three_phases() {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("record_latency").unwrap()).unwrap();
+    host.install_object(&policydir::build_named("adaptive_channels").unwrap()).unwrap();
+    let mut comm = engine(&host);
+    let mut b = small_bufs(8);
+    let size = 16 << 20;
+
+    // phase 1: healthy traffic ramps 2 -> 12
+    let first = comm.run(CollType::AllReduce, &mut b, size);
+    assert_eq!(first.cfg.nchannels, 2, "first decision is conservative");
+    let mut ramped = 0;
+    for _ in 0..30 {
+        ramped = comm.run(CollType::AllReduce, &mut b, size).cfg.nchannels;
+    }
+    assert_eq!(ramped, 12, "healthy latency should ramp to 12");
+
+    // phase 2: inject contention by faking a huge observed latency
+    let lm = host.map("latency_map").unwrap();
+    let key = ncclbpf::host::fold_comm_id(comm.comm_id());
+    let mut val = lm.read_value(&key.to_le_bytes()).unwrap();
+    val[..8].copy_from_slice(&10_000_000u64.to_le_bytes()); // 10x spike
+    lm.update(&key.to_le_bytes(), &val).unwrap();
+    let r = comm.run(CollType::AllReduce, &mut b, size);
+    assert_eq!(r.cfg.nchannels, 2, "contention must back off to 2");
+
+    // phase 3: recovery (profiler overwrites with healthy samples)
+    let mut rec = 0;
+    for _ in 0..30 {
+        rec = comm.run(CollType::AllReduce, &mut b, size).cfg.nchannels;
+    }
+    assert_eq!(rec, 12, "should recover to 12");
+}
+
+/// §5.2 hot-reload: continuous decisions on one thread, reloads on
+/// another; zero lost calls, every decision valid.
+#[test]
+fn hotreload_under_continuous_load() {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("static_ring").unwrap()).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let decider = {
+        let host = host.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let args = ncclbpf::cc::CollInfoArgs {
+                coll: CollType::AllReduce,
+                nbytes: 8 << 20,
+                nranks: 8,
+                comm_id: 1,
+                max_channels: 32,
+            };
+            let mut calls = 0u64;
+            let mut misses = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let mut cost = ncclbpf::cc::CostTable::all_sentinel();
+                let mut ch = 0;
+                if host.tuner_decide(&args, &mut cost, &mut ch) {
+                    // every decision must come from a complete policy:
+                    // both installed policies always prefer Ring
+                    assert_eq!(cost.argmin().unwrap().0, Algo::Ring);
+                } else {
+                    misses += 1;
+                }
+                calls += 1;
+            }
+            (calls, misses)
+        })
+    };
+
+    // hot-reload between two valid policies plus rejected attempts
+    for i in 0..30 {
+        let name = if i % 2 == 0 { "nvlink_ring_mid_v2" } else { "static_ring" };
+        host.install_object(&policydir::build_named(name).unwrap()).unwrap();
+        if i % 5 == 0 {
+            // a bad reload must not disturb the active policy
+            let bad = policydir::build_unsafe("null_deref").unwrap();
+            assert!(host.install_object(&bad).is_err());
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    stop.store(true, Ordering::Relaxed);
+    let (calls, misses) = decider.join().unwrap();
+    assert!(calls > 100, "decider must have run ({} calls)", calls);
+    assert_eq!(misses, 0, "no decision may observe a missing policy");
+    let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
+    assert_eq!(swaps, 31);
+    assert!(last_ns < 100_000, "swap took {} ns", last_ns);
+}
+
+/// §5.3 net plugin: the eBPF-wrapped socket transport counts bytes/ops
+/// through a shared map while moving real TCP traffic.
+#[test]
+fn net_wrapper_counts_real_socket_traffic() {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("net_count").unwrap()).unwrap();
+    let (a, b) = SocketTransport::pair().unwrap();
+    let mut wrapped = WrappedTransport::new(a, bpf_net_hook(host.clone(), 7, 1));
+
+    let receiver = std::thread::spawn(move || {
+        let mut b = b;
+        let mut buf = vec![0u8; 100_000];
+        b.irecv(&mut buf).unwrap();
+        buf
+    });
+    let payload: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+    wrapped.isend(&payload).unwrap();
+    let got = receiver.join().unwrap();
+    assert_eq!(got, payload);
+
+    let m = host.map("net_stats_map").unwrap();
+    let v = m.read_value(&0u32.to_le_bytes()).unwrap();
+    let tx_bytes = u64::from_le_bytes(v[0..8].try_into().unwrap());
+    let tx_ops = u64::from_le_bytes(v[16..24].try_into().unwrap());
+    assert_eq!(tx_bytes, 100_000);
+    assert_eq!(tx_ops, 1);
+}
+
+/// bad_channels is verifier-safe but semantically destructive (§5.3).
+#[test]
+fn bad_channels_passes_verifier_but_collapses_throughput() {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("bad_channels").unwrap()).unwrap();
+    let mut comm = engine(&host);
+    let mut baseline = Communicator::new(Topology::nvlink_b300(8));
+    baseline.jitter = false;
+    baseline.data_mode = DataMode::Sampled(16 << 10);
+    baseline.prewarm_all();
+    let mut b = small_bufs(8);
+    let size = 64 << 20;
+    let bad = comm.run(CollType::AllReduce, &mut b, size).busbw_gbps;
+    let good = baseline.run(CollType::AllReduce, &mut b, size).busbw_gbps;
+    let degradation = 1.0 - bad / good;
+    assert!(
+        degradation > 0.75,
+        "bad_channels must destroy throughput (got {:.0}%)",
+        degradation * 100.0
+    );
+}

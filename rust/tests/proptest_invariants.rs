@@ -1,0 +1,307 @@
+//! Property-based tests over coordinator invariants. The `proptest`
+//! crate is not in the offline set, so these are hand-rolled
+//! property/fuzz loops over the deterministic `util::Rng` — same idea:
+//! thousands of random cases per invariant, with the failing seed
+//! printed on assertion failure.
+
+use ncclbpf::bpf::insn::{decode_program, encode_program, Insn};
+use ncclbpf::bpf::maps::{Map, MapDef, MapKind};
+use ncclbpf::bpf::program::load_object;
+use ncclbpf::bpf::verifier::{verify, CtxLayout};
+use ncclbpf::bpf::{MapRegistry, ProgType};
+use ncclbpf::cc::algo::{chunk_ranges, ring_all_reduce, NativeSum};
+use ncclbpf::cc::plugin::{CostTable, COST_SENTINEL};
+use ncclbpf::cc::{Algo, CollConfig, CollType, PerfModel, Proto, Topology};
+use ncclbpf::util::Rng;
+use std::collections::HashMap;
+
+const CASES: usize = 2000;
+
+/// INVARIANT: the verifier never panics and never loops forever, no
+/// matter what bytes it is fed (fuzzing the decoder + verifier).
+#[test]
+fn verifier_total_on_random_programs() {
+    let ctx = CtxLayout { size: 48, read: vec![(0, 32)], write: vec![(32, 16)] };
+    let maps: HashMap<u32, MapDef> = HashMap::from([(
+        1,
+        MapDef { name: "m".into(), kind: MapKind::Array, key_size: 4, value_size: 8, max_entries: 4 },
+    )]);
+    let mut rng = Rng::new(0xfade);
+    let mut accepted = 0u32;
+    for case in 0..CASES {
+        let n = 1 + rng.below(24) as usize;
+        let mut insns = Vec::with_capacity(n);
+        for _ in 0..n {
+            insns.push(Insn::new(
+                rng.next_u32() as u8,
+                (rng.below(12)) as u8,
+                (rng.below(12)) as u8,
+                rng.next_u32() as i16,
+                rng.next_u32() as i32,
+            ));
+        }
+        // must return, never panic (timeouts guarded by complexity budget)
+        if verify(&insns, ProgType::Tuner, &ctx, &maps).is_ok() {
+            accepted += 1;
+        }
+        let _ = case;
+    }
+    // random bytes essentially never form a valid program
+    assert!(accepted < CASES as u32 / 100, "accepted {} random programs", accepted);
+}
+
+/// INVARIANT: encode/decode round-trips any instruction stream whose
+/// fields are in range.
+#[test]
+fn insn_encoding_roundtrip_random() {
+    let mut rng = Rng::new(7);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(64) as usize;
+        let insns: Vec<Insn> = (0..n)
+            .map(|_| {
+                Insn::new(
+                    rng.next_u32() as u8,
+                    (rng.below(16)) as u8,
+                    (rng.below(16)) as u8,
+                    rng.next_u32() as i16,
+                    rng.next_u32() as i32,
+                )
+            })
+            .collect();
+        let bytes = encode_program(&insns);
+        assert_eq!(decode_program(&bytes).unwrap(), insns);
+    }
+}
+
+/// INVARIANT: a verified program accepted by the loader executes
+/// without crashing for arbitrary ctx input bytes (memory safety is
+/// load-time, not input-dependent).
+#[test]
+fn accepted_policies_safe_on_random_inputs() {
+    let reg = MapRegistry::new();
+    let obj = ncclbpf::bpfc::compile(
+        r#"
+BPF_MAP(state, BPF_MAP_TYPE_HASH, __u32, __u64, 16);
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    __u32 key = ctx->comm_id;
+    __u64 *v = bpf_map_lookup_elem(&state, &key);
+    if (ctx->msg_size > 1048576) {
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_SIMPLE;
+    }
+    if (!v) { ctx->n_channels = 2; return 0; }
+    ctx->n_channels = (__u32) min(*v + 1, 32);
+    return 0;
+}
+"#,
+    );
+    // if the dereference-read `*v` form is outside the C subset, fall
+    // back to an equivalent asm program — the property targets the
+    // executor, not the frontend.
+    let progs = match obj {
+        Ok(o) => load_object(&o, &reg, &ncclbpf::host::ctx::layouts()).unwrap(),
+        Err(_) => ncclbpf::bpf::program::load_asm(
+            r#"
+map state hash key=4 value=8 entries=16
+prog tuner f
+  mov64 r6, r1
+  ldxw  r7, [r6+20]
+  stxw  [r10-4], r7
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, state
+  call  bpf_map_lookup_elem
+  jne   r0, 0, have
+  stw   [r6+40], 2
+  mov64 r0, 0
+  exit
+have:
+  ldxdw r3, [r0+0]
+  add64 r3, 1
+  jle   r3, 32, small
+  mov64 r3, 32
+small:
+  stxw  [r6+40], r3
+  mov64 r0, 0
+  exit
+"#,
+            &reg,
+            &ncclbpf::host::ctx::layouts(),
+        )
+        .unwrap(),
+    };
+    let prog = &progs[0];
+    let mut rng = Rng::new(99);
+    for _ in 0..CASES {
+        let mut ctx = [0u8; 48];
+        for b in ctx.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        prog.run(ctx.as_mut_ptr()); // must not crash
+    }
+}
+
+/// INVARIANT: chunk_ranges is a partition: contiguous, complete,
+/// non-overlapping, exactly nchunks pieces.
+#[test]
+fn chunk_ranges_partition_property() {
+    let mut rng = Rng::new(3);
+    for _ in 0..CASES {
+        let len = rng.below(100_000) as usize;
+        let nc = 1 + rng.below(64) as usize;
+        let rs = chunk_ranges(len, nc);
+        assert_eq!(rs.len(), nc);
+        let mut pos = 0;
+        for r in &rs {
+            assert_eq!(r.start, pos);
+            assert!(r.end >= r.start);
+            pos = r.end;
+        }
+        assert_eq!(pos, len);
+        // near-equal sizes: max - min <= 1
+        let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+}
+
+/// INVARIANT: AllReduce equals elementwise sum for random rank counts,
+/// lengths, protocols, channels.
+#[test]
+fn allreduce_equals_sum_random_configs() {
+    let mut rng = Rng::new(12);
+    for _ in 0..60 {
+        let n = 2 + rng.below(7) as usize;
+        let len = 1 + rng.below(2000) as usize;
+        let proto = Proto::from_index(rng.below(3) as usize).unwrap();
+        let nch = 1 + rng.below(32) as usize;
+        let mut bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.f32_range(-1.0, 1.0)).collect())
+            .collect();
+        let mut want = vec![0.0f32; len];
+        for b in &bufs {
+            for (w, v) in want.iter_mut().zip(b) {
+                *w += v;
+            }
+        }
+        ring_all_reduce(&mut bufs, proto, nch, &NativeSum);
+        for (r, b) in bufs.iter().enumerate() {
+            for (g, w) in b.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < 1e-3,
+                    "n={} len={} {:?} ch={} rank={}",
+                    n,
+                    len,
+                    proto,
+                    nch,
+                    r
+                );
+            }
+        }
+    }
+}
+
+/// INVARIANT: hash map behaves like std::HashMap under random
+/// insert/overwrite/delete/lookup sequences (model-based test).
+#[test]
+fn hash_map_model_equivalence() {
+    let mut rng = Rng::new(0xbeef);
+    for _case in 0..60 {
+        let cap = 1 + rng.below(64) as u32;
+        let map = Map::new(
+            MapDef {
+                name: "h".into(),
+                kind: MapKind::Hash,
+                key_size: 4,
+                value_size: 8,
+                max_entries: cap,
+            },
+            1,
+        )
+        .unwrap();
+        let mut model: HashMap<u32, u64> = HashMap::new();
+        for _ in 0..300 {
+            let key = rng.below(cap as u64 * 2) as u32;
+            match rng.below(3) {
+                0 => {
+                    let val = rng.next_u64();
+                    let r = map.write_u64(key, val);
+                    if model.len() < cap as usize || model.contains_key(&key) {
+                        assert!(r.is_ok(), "insert should fit");
+                        model.insert(key, val);
+                    } else if r.is_ok() {
+                        model.insert(key, val);
+                    }
+                }
+                1 => {
+                    let removed = map.delete(&key.to_le_bytes()).unwrap();
+                    assert_eq!(removed, model.remove(&key).is_some());
+                }
+                _ => {
+                    assert_eq!(map.read_u64(key), model.get(&key).copied(), "key {}", key);
+                }
+            }
+            assert_eq!(map.len(), model.len());
+        }
+    }
+}
+
+/// INVARIANT: cost-table argmin returns the minimum non-sentinel entry
+/// and None iff all entries are sentinels.
+#[test]
+fn cost_table_argmin_property() {
+    let mut rng = Rng::new(5);
+    for _ in 0..CASES {
+        let mut t = CostTable::all_sentinel();
+        let mut best: Option<(f32, Algo, Proto)> = None;
+        for a in [Algo::Ring, Algo::Tree, Algo::Nvls] {
+            for p in [Proto::Ll, Proto::Ll128, Proto::Simple] {
+                if rng.below(3) == 0 {
+                    continue; // leave sentinel
+                }
+                let c = rng.f64() as f32 * 1000.0;
+                t.set(a, p, c);
+                if best.map(|(bc, _, _)| c < bc).unwrap_or(true) {
+                    best = Some((c, a, p));
+                }
+            }
+        }
+        match (t.argmin(), best) {
+            (None, None) => {}
+            (Some((a, p)), Some((bc, _, _))) => {
+                assert!(t.get(a, p) <= bc + f32::EPSILON);
+                assert!(t.get(a, p) < COST_SENTINEL);
+            }
+            (got, want) => panic!("argmin {:?} vs model {:?}", got, want.map(|w| (w.1, w.2))),
+        }
+    }
+}
+
+/// INVARIANT: modeled time is positive, finite, and monotone in size
+/// for every configuration.
+#[test]
+fn perfmodel_time_positive_and_monotone() {
+    let m = PerfModel::new(Topology::nvlink_b300(8));
+    let mut rng = Rng::new(17);
+    for _ in 0..500 {
+        let algo = Algo::from_index(rng.below(3) as usize).unwrap();
+        let proto = Proto::from_index(rng.below(3) as usize).unwrap();
+        let ch = 1 + rng.below(32) as u32;
+        let cfg = CollConfig::new(algo, proto, ch);
+        let mut prev = 0.0f64;
+        for shift in 10..33 {
+            let t = m.time_ns(CollType::AllReduce, cfg, 1usize << shift);
+            assert!(t.is_finite() && t > 0.0, "{:?} size 2^{}", cfg, shift);
+            assert!(
+                t >= prev * 0.999,
+                "time decreased: {:?} 2^{}: {} -> {}",
+                cfg,
+                shift,
+                prev,
+                t
+            );
+            prev = t;
+        }
+    }
+}

@@ -9,16 +9,39 @@ import sys
 import pytest
 
 HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ART = os.path.join(os.path.dirname(HERE), "artifacts")
+REPO_ART = os.path.join(os.path.dirname(HERE), "artifacts")
+
+# Module-level so every test reads the same directory the fixture chose.
+ART = REPO_ART
 
 
 @pytest.fixture(scope="module")
-def artifacts():
-    """Use existing artifacts if present; export a tiny set otherwise."""
-    manifest = os.path.join(ART, "manifest.json")
+def artifacts(tmp_path_factory):
+    """Use existing repo artifacts if present; otherwise export a tiny
+    set into a pytest temp dir (keeps the repo checkout pristine — the
+    Rust runtime tests gate on `artifacts/` existing, so a pytest run
+    must not create it as a side effect)."""
+    global ART
+    manifest = os.path.join(REPO_ART, "manifest.json")
     if not os.path.exists(manifest):
+        ART = str(tmp_path_factory.mktemp("ncclbpf_artifacts"))
+        manifest = os.path.join(ART, "manifest.json")
         subprocess.run(
-            [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                ART,
+                "--d-model",
+                "32",
+                "--n-layers",
+                "2",
+                "--n-heads",
+                "2",
+                "--seq-len",
+                "16",
+            ],
             cwd=HERE,
             check=True,
         )

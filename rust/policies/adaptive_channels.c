@@ -1,0 +1,38 @@
+/* adaptive_channels — the tuner half of the §5.3 closed loop (1 map
+ * lookup + 1 map-value update per decision, Table 1's adaptive row).
+ *
+ * Reads the latency telemetry that the independently deployed
+ * record_latency profiler writes into the shared latency_map:
+ *   - no sample yet        -> conservative 2 channels
+ *   - latency over budget  -> back off to 2 channels (contention)
+ *   - healthy latency      -> ramp to 12 channels
+ * Algorithm/protocol stay deferred, so the engine default (NVLS on the
+ * B300 topology) is preserved; only the channel count adapts.
+ */
+
+struct latency_state {
+    __u64 avg_latency_ns;
+    __u64 channels;
+};
+
+BPF_MAP(latency_map, BPF_MAP_TYPE_HASH, __u32, struct latency_state, 64);
+
+#define CONTENTION_NS 1000000
+
+SEC("tuner")
+int adaptive_channels(struct policy_context *ctx) {
+    __u32 key = ctx->comm_id;
+    struct latency_state *st = bpf_map_lookup_elem(&latency_map, &key);
+    if (!st) {
+        ctx->n_channels = 2;
+        return 0;
+    }
+    if (st->avg_latency_ns > CONTENTION_NS) {
+        ctx->n_channels = 2;
+        st->channels = 2;
+        return 0;
+    }
+    ctx->n_channels = 12;
+    st->channels = 12;
+    return 0;
+}

@@ -1,0 +1,13 @@
+/* bad_channels — memory-safe but semantically destructive (§5.3): it
+ * passes the verifier (no unsafe behavior) yet forces a single channel,
+ * collapsing throughput by ~90%. The verifier guarantees safety, not
+ * good decisions; semantic validation stays with the operator.
+ */
+
+SEC("tuner")
+int bad_channels(struct policy_context *ctx) {
+    ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    ctx->n_channels = 1;
+    return 0;
+}

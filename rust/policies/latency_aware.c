@@ -1,0 +1,40 @@
+/* latency_aware — decide the channel budget from the observed latency
+ * and an operator-configured budget (2 map lookups, 0 updates —
+ * Table 1's latency_aware row).
+ */
+
+struct latency_state {
+    __u64 avg_latency_ns;
+    __u64 channels;
+};
+
+struct cfg_entry {
+    __u64 threshold;
+};
+
+BPF_MAP(latency_map, BPF_MAP_TYPE_HASH, __u32, struct latency_state, 64);
+BPF_MAP(config_map, BPF_MAP_TYPE_ARRAY, __u32, struct cfg_entry, 4);
+
+SEC("tuner")
+int latency_aware(struct policy_context *ctx) {
+    __u32 key = ctx->comm_id;
+    __u32 zero = 0;
+    __u64 budget = 1000000;
+    struct latency_state *st = bpf_map_lookup_elem(&latency_map, &key);
+    struct cfg_entry *cfg = bpf_map_lookup_elem(&config_map, &zero);
+    if (cfg) {
+        if (cfg->threshold > 0)
+            budget = cfg->threshold;
+    }
+    ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    if (!st) {
+        ctx->n_channels = 8;
+        return 0;
+    }
+    if (st->avg_latency_ns > budget)
+        ctx->n_channels = 4;
+    else
+        ctx->n_channels = 24;
+    return 0;
+}

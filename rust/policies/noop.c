@@ -1,0 +1,11 @@
+/* noop — the empty tuner policy (§5.1).
+ *
+ * Leaves every output field deferred, so the engine keeps its default
+ * decision. Table 1 measures this policy to isolate the pure
+ * dispatch + JIT-entry cost of the eBPF layer (0 lookups, 0 updates).
+ */
+
+SEC("tuner")
+int noop(struct policy_context *ctx) {
+    return 0;
+}

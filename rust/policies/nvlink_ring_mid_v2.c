@@ -1,0 +1,33 @@
+/* nvlink_ring_mid_v2 — the paper's §5.3 case-study policy (Figure 2).
+ *
+ * On the 8x B300 NVLink testbed, NCCL's default (NVLS) loses to Ring
+ * in the 4–192 MiB AllReduce range; the best Ring protocol crosses
+ * over from LL128 to Simple between 32 and 64 MiB. Encode exactly
+ * that, and defer everywhere else so the NVLS default keeps winning
+ * for small and very large messages. Mirrors host::native's
+ * NativeRingMidV2 twin (the Table 1 baseline).
+ */
+
+#define MIB (1024 * 1024)
+#define LO_LL128 (4 * MIB)
+#define HI_LL128 (32 * MIB)
+#define LO_SIMPLE (64 * MIB)
+#define HI_SIMPLE (192 * MIB)
+
+SEC("tuner")
+int nvlink_ring_mid_v2(struct policy_context *ctx) {
+    __u64 sz = ctx->msg_size;
+    if (sz >= LO_LL128 && sz <= HI_LL128) {
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_LL128;
+        ctx->n_channels = 32;
+        return 0;
+    }
+    if (sz >= LO_SIMPLE && sz <= HI_SIMPLE) {
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_SIMPLE;
+        ctx->n_channels = 32;
+        return 0;
+    }
+    return 0;
+}

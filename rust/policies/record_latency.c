@@ -1,0 +1,23 @@
+/* record_latency — the profiler half of the §5.3 closed loop
+ * (Listing 1): on every collective-end event, write the observed
+ * latency and channel count into the shared latency_map keyed by the
+ * communicator id. Deployed independently from the tuner; the shared
+ * map name is the composition mechanism.
+ */
+
+struct latency_state {
+    __u64 avg_latency_ns;
+    __u64 channels;
+};
+
+BPF_MAP(latency_map, BPF_MAP_TYPE_HASH, __u32, struct latency_state, 64);
+
+SEC("profiler")
+int record_latency(struct profiler_context *ctx) {
+    __u32 key = ctx->comm_id;
+    struct latency_state st = {};
+    st.avg_latency_ns = ctx->latency_ns;
+    st.channels = ctx->n_channels;
+    bpf_map_update_elem(&latency_map, &key, &st, 0);
+    return 0;
+}

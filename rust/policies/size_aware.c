@@ -1,0 +1,34 @@
+/* size_aware — Tree/LL below a small-message threshold, Ring/Simple
+ * above (the Listing 1 shape; 1 map lookup per decision, Table 1's
+ * size_aware row).
+ *
+ * The threshold lives in config_map[0] so operators can retune it at
+ * runtime without reloading the policy; when unset (0) the builtin
+ * 32 KiB default applies.
+ */
+
+struct cfg_entry {
+    __u64 threshold;
+};
+
+BPF_MAP(config_map, BPF_MAP_TYPE_ARRAY, __u32, struct cfg_entry, 4);
+
+SEC("tuner")
+int size_aware(struct policy_context *ctx) {
+    __u32 zero = 0;
+    __u64 threshold = 32768;
+    struct cfg_entry *cfg = bpf_map_lookup_elem(&config_map, &zero);
+    if (cfg) {
+        if (cfg->threshold > 0)
+            threshold = cfg->threshold;
+    }
+    if (ctx->msg_size <= threshold) {
+        ctx->algorithm = NCCL_ALGO_TREE;
+        ctx->protocol = NCCL_PROTO_LL;
+    } else {
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_SIMPLE;
+    }
+    ctx->n_channels = 16;
+    return 0;
+}

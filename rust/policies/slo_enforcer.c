@@ -1,0 +1,37 @@
+/* slo_enforcer — compare the observed latency against an SLO target
+ * and force the maximum-bandwidth configuration while the target is
+ * missed, recording every violation (2 map lookups + 1 map-value
+ * update per decision — Table 1's slo_enforcer row).
+ */
+
+struct latency_state {
+    __u64 avg_latency_ns;
+    __u64 channels;
+};
+
+struct slo_entry {
+    __u64 target_ns;
+    __u64 violations;
+};
+
+BPF_MAP(latency_map, BPF_MAP_TYPE_HASH, __u32, struct latency_state, 64);
+BPF_MAP(slo_map, BPF_MAP_TYPE_ARRAY, __u32, struct slo_entry, 4);
+
+SEC("tuner")
+int slo_enforcer(struct policy_context *ctx) {
+    __u32 key = ctx->comm_id;
+    __u32 zero = 0;
+    struct slo_entry *slo = bpf_map_lookup_elem(&slo_map, &zero);
+    struct latency_state *st = bpf_map_lookup_elem(&latency_map, &key);
+    if (!slo)
+        return 0;
+    if (!st)
+        return 0;
+    if (slo->target_ns > 0 && st->avg_latency_ns > slo->target_ns) {
+        slo->violations += 1;
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_SIMPLE;
+        ctx->n_channels = 32;
+    }
+    return 0;
+}

@@ -1,0 +1,13 @@
+/* static_ring — unconditionally prefer Ring/Simple with the full
+ * channel budget (0 lookups, 0 updates). The simplest useful policy:
+ * equivalent to setting NCCL_ALGO=Ring via environment, but verified
+ * and hot-reloadable.
+ */
+
+SEC("tuner")
+int static_ring(struct policy_context *ctx) {
+    ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    ctx->n_channels = 32;
+    return 0;
+}

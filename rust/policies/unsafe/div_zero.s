@@ -1,0 +1,8 @@
+; div_zero — bug class 7 (§5.2): division whose divisor can be zero.
+; The verifier requires divisors to be proven non-zero (guard with a
+; != 0 branch); a constant zero divisor is rejected outright.
+
+prog tuner div_zero
+  mov64 r0, 10
+  div64 r0, 0             ; BUG: divisor is zero
+  exit

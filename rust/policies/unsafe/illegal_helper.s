@@ -1,0 +1,10 @@
+; illegal_helper — bug class 3 (§5.2): call a helper outside the
+; program type's whitelist. bpf_trace_printk is profiler-only; tuner
+; programs run on the decision hot path and may not emit trace output.
+
+prog tuner illegal_helper
+  mov64 r1, 0
+  mov64 r2, 0
+  call  bpf_trace_printk  ; BUG: not in the tuner whitelist
+  mov64 r0, 0
+  exit

@@ -1,0 +1,8 @@
+; input_write — bug class 6 (§5.2): write to a read-only input field
+; of the policy context (msg_size, offset 8). Inputs are read-only;
+; only the output window [32, 48) is writable for tuner programs.
+
+prog tuner input_write
+  stw   [r1+8], 0         ; BUG: msg_size is a read-only input field
+  mov64 r0, 0
+  exit

@@ -1,0 +1,16 @@
+; null_deref — bug class 1 (§5.2): dereference the result of
+; bpf_map_lookup_elem before checking it against NULL. A native plugin
+; with this bug SIGSEGVs inside the collective library; the verifier
+; rejects it at load time.
+
+map m array key=4 value=8 entries=4
+
+prog tuner null_deref
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, m
+  call  bpf_map_lookup_elem
+  ldxdw r3, [r0+0]        ; BUG: r0 may be NULL, no check before deref
+  mov64 r0, 0
+  exit

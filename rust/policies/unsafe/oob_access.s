@@ -1,0 +1,18 @@
+; oob_access — bug class 2 (§5.2): read past the end of a map value.
+; The value is 8 bytes; the load covers bytes [8, 16).
+
+map m array key=4 value=8 entries=4
+
+prog tuner oob_access
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, m
+  call  bpf_map_lookup_elem
+  jne   r0, 0, ok
+  mov64 r0, 0
+  exit
+ok:
+  ldxdw r3, [r0+8]        ; BUG: offset 8 + width 8 > value_size 8
+  mov64 r0, 0
+  exit

@@ -1,0 +1,7 @@
+; stack_overflow — bug class 4 (§5.2): write below the 512-byte
+; program stack (r10 - 512).
+
+prog tuner stack_overflow
+  stdw  [r10-520], 1      ; BUG: 8 bytes below the r10-512 stack floor
+  mov64 r0, 0
+  exit

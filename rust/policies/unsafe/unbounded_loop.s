@@ -1,0 +1,10 @@
+; unbounded_loop — bug class 5 (§5.2): a loop with no exit condition.
+; A native plugin with this bug wedges the enqueue thread forever; the
+; verifier's visit cap rejects it at load time.
+
+prog tuner unbounded_loop
+  mov64 r2, 0
+loop:
+  add64 r2, 1
+  ja    loop              ; BUG: back-edge with no termination condition
+  exit

@@ -1,0 +1,325 @@
+//! The `ncclbpf bench` measurement suite — the paper-shaped numbers,
+//! run from the CLI and serialized through [`crate::metrics::report`]
+//! so every PR appends to the repo's perf trajectory:
+//!
+//! - **table1_overhead** — per-decision tuner latency: native baselines
+//!   vs every safe eBPF policy (JIT), plus the interpreter ablation.
+//! - **fig2_allreduce** — 8-GPU AllReduce busbw sweep 4–128 MiB,
+//!   engine default (NVLS) vs the `nvlink_ring_mid_v2` policy.
+//! - **hotreload** — atomic policy-swap latency and the full
+//!   verify+compile+swap reload decomposition.
+//!
+//! All randomness comes from [`crate::util::Rng`] with seeds fixed in
+//! [`BenchOpts`], and the communicators' jitter RNG is re-seeded via
+//! [`Communicator::reseed`], so two runs on the same machine measure
+//! the same workload.
+
+use crate::cc::plugin::{CollInfoArgs, CostTable, TunerPlugin};
+use crate::cc::{CollType, Communicator, DataMode, Topology, MAX_CHANNELS};
+use crate::host::ctx::PolicyContext;
+use crate::host::native::{NativeAdaptive, NativeNoop, NativeSizeAware, NativeStaticRing};
+use crate::host::{fold_comm_id, policydir, BpfTunerPlugin, NcclBpfHost};
+use crate::metrics::report::{BenchReport, Series};
+use crate::util::{percentile, Rng};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Knobs for one bench invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// tuner decisions per Table 1 row
+    pub calls: usize,
+    /// samples per Fig 2 point / hot-reload cycles
+    pub iters: usize,
+    /// master seed for buffers and jitter
+    pub seed: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { calls: 200_000, iters: 30, seed: 0xbe9c_5eed }
+    }
+}
+
+impl BenchOpts {
+    /// Reduced workload for CI smoke runs (`--quick`).
+    pub fn quick() -> Self {
+        BenchOpts { calls: 20_000, iters: 9, ..Default::default() }
+    }
+}
+
+const BATCH: usize = 100;
+
+/// Batched timing of one closure: returns (p50, p99, mean) in ns per
+/// call. Batching keeps clock-read overhead out of ns-scale numbers,
+/// like the paper's 1M-call loops.
+fn measure(calls: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    let samples = (calls / BATCH).max(1);
+    for _ in 0..(calls / 20).clamp(100, 10_000) {
+        f();
+    }
+    let mut per_call = Vec::with_capacity(samples);
+    let t_total = Instant::now();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..BATCH {
+            f();
+        }
+        per_call.push(t0.elapsed().as_nanos() as f64 / BATCH as f64);
+    }
+    let mean = t_total.elapsed().as_nanos() as f64 / (samples * BATCH) as f64;
+    (percentile(&per_call, 50.0), percentile(&per_call, 99.0), mean)
+}
+
+fn stats3(xs: &[f64]) -> (f64, f64, f64) {
+    let mean = xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    (percentile(xs, 50.0), percentile(xs, 99.0), mean)
+}
+
+fn decision_args(nbytes: usize) -> CollInfoArgs {
+    CollInfoArgs {
+        coll: CollType::AllReduce,
+        nbytes,
+        nranks: 8,
+        comm_id: 0x1234_5678_9abc,
+        max_channels: MAX_CHANNELS,
+    }
+}
+
+/// Pre-populate the maps the stateful policies read, so the measured
+/// lookup path is the hot (hit) path.
+fn seed_policy_maps(host: &NcclBpfHost, comm_id: u64) {
+    if let Some(m) = host.map("latency_map") {
+        let _ = m.write_u64(fold_comm_id(comm_id), 500_000);
+    }
+    if let Some(m) = host.map("config_map") {
+        let _ = m.write_u64(0, 32 * 1024);
+    }
+    if let Some(m) = host.map("slo_map") {
+        let _ = m.write_u64(0, 1_000_000);
+    }
+}
+
+/// Table 1 — per-decision tuner latency, native vs eBPF vs interp.
+pub fn table1_overhead(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("table1_overhead");
+    let args = decision_args(8 << 20);
+
+    // native baselines: identical policy logic as ordinary Rust
+    let natives: Vec<(&str, Box<dyn TunerPlugin>)> = vec![
+        ("size_aware", Box::new(NativeSizeAware) as Box<dyn TunerPlugin>),
+        ("noop", Box::new(NativeNoop) as Box<dyn TunerPlugin>),
+        ("static_ring", Box::new(NativeStaticRing) as Box<dyn TunerPlugin>),
+        ("adaptive", Box::new(NativeAdaptive::default()) as Box<dyn TunerPlugin>),
+    ];
+    let mut native_base = 0.0f64;
+    for (label, plugin) in &natives {
+        let (p50, p99, mean) = measure(opts.calls, || {
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            plugin.get_coll_info(&args, &mut cost, &mut ch);
+            std::hint::black_box((&cost, ch));
+        });
+        if *label == "size_aware" {
+            native_base = mean;
+        }
+        rep.push(
+            Series::new(format!("native_{}", label), "ns", p50, p99, mean)
+                .with("delta_vs_native_ns", mean - native_base),
+        );
+    }
+
+    // every safe policy through the full host decision path (JIT)
+    let host = NcclBpfHost::new();
+    for name in policydir::SAFE_POLICIES {
+        let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        seed_policy_maps(&host, args.comm_id);
+        let (p50, p99, mean) = measure(opts.calls, || {
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            host.tuner_decide(&args, &mut cost, &mut ch);
+            std::hint::black_box((&cost, ch));
+        });
+        let jitted = host.tuner_program().map(|p| p.is_jitted()).unwrap_or(false);
+        rep.push(
+            Series::new(format!("ebpf_{}", name), "ns", p50, p99, mean)
+                .with("delta_vs_native_ns", mean - native_base)
+                .with("jitted", if jitted { 1.0 } else { 0.0 }),
+        );
+    }
+
+    // interpreter ablation: raw program execution, no cost-table work
+    for name in ["noop", "slo_enforcer"] {
+        let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        seed_policy_maps(&host, args.comm_id);
+        let prog = host.tuner_program().expect("tuner installed");
+        let (p50, p99, mean) = measure(opts.calls, || {
+            let mut pctx = PolicyContext::new(
+                args.coll,
+                args.nbytes as u64,
+                args.nranks as u32,
+                fold_comm_id(args.comm_id),
+                args.max_channels,
+            );
+            prog.run_interp(&mut pctx as *mut PolicyContext as *mut u8);
+            std::hint::black_box(pctx);
+        });
+        rep.push(
+            Series::new(format!("interp_{}", name), "ns", p50, p99, mean)
+                .with("delta_vs_native_ns", mean - native_base),
+        );
+    }
+    rep
+}
+
+fn sweep_engine(seed: u64) -> Communicator {
+    let mut c = Communicator::new(Topology::nvlink_b300(8));
+    c.reseed(seed);
+    c.data_mode = DataMode::Sampled(32 << 10);
+    c.prewarm_all();
+    c
+}
+
+fn sweep_samples(
+    comm: &mut Communicator,
+    bufs: &mut [Vec<f32>],
+    size: usize,
+    iters: usize,
+) -> Vec<f64> {
+    (0..iters.max(1))
+        .map(|_| comm.run(CollType::AllReduce, bufs, size).busbw_gbps)
+        .collect()
+}
+
+/// Fig 2 — AllReduce sweep 4–128 MiB: default (NVLS) vs the paper's
+/// case-study policy.
+pub fn fig2_allreduce(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("fig2_allreduce");
+    let mut default = sweep_engine(opts.seed);
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_object(&policydir::build_named("nvlink_ring_mid_v2").unwrap())
+        .expect("case-study policy must verify");
+    let mut policy = sweep_engine(opts.seed.wrapping_add(1));
+    policy.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+
+    let mut rng = Rng::new(opts.seed);
+    let mut bufs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..8 << 10).map(|_| rng.f32_range(-1.0, 1.0)).collect())
+        .collect();
+
+    for mib in [4usize, 8, 16, 32, 48, 64, 96, 128] {
+        let size = mib << 20;
+        let d = sweep_samples(&mut default, &mut bufs, size, opts.iters);
+        let p = sweep_samples(&mut policy, &mut bufs, size, opts.iters);
+        let (d50, d99, dmean) = stats3(&d);
+        let (p50, p99, pmean) = stats3(&p);
+        rep.push(
+            Series::new(format!("default_{}mib", mib), "gbps", d50, d99, dmean)
+                .with("size_bytes", size as f64),
+        );
+        rep.push(
+            Series::new(format!("policy_{}mib", mib), "gbps", p50, p99, pmean)
+                .with("size_bytes", size as f64)
+                .with("delta_vs_default_pct", (p50 / d50 - 1.0) * 100.0),
+        );
+    }
+    rep
+}
+
+/// Hot-reload — swap latency and the full reload decomposition over
+/// alternating policy objects.
+pub fn hotreload_swap(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("hotreload");
+    let host = NcclBpfHost::new();
+    let a = policydir::build_named("static_ring").expect("static_ring");
+    let b = policydir::build_named("nvlink_ring_mid_v2").expect("nvlink_ring_mid_v2");
+    host.install_object(&a).expect("initial install");
+
+    let cycles = opts.iters.max(10);
+    let mut swap = Vec::with_capacity(cycles);
+    let mut verify = Vec::with_capacity(cycles);
+    let mut compile = Vec::with_capacity(cycles);
+    let mut total = Vec::with_capacity(cycles);
+    for i in 0..cycles {
+        let obj = if i % 2 == 0 { &b } else { &a };
+        let t0 = Instant::now();
+        let r = host.install_object(obj).expect("reload");
+        total.push(t0.elapsed().as_nanos() as f64);
+        verify.push(r.verify_ns as f64);
+        compile.push(r.compile_ns as f64);
+        swap.push(r.swap_ns.iter().sum::<u64>() as f64);
+    }
+    for (label, xs) in [
+        ("swap", &swap),
+        ("verify", &verify),
+        ("compile", &compile),
+        ("reload_total", &total),
+    ] {
+        let (p50, p99, mean) = stats3(xs);
+        rep.push(Series::new(label, "ns", p50, p99, mean).with("cycles", cycles as f64));
+    }
+    rep
+}
+
+/// Run the full suite and write `BENCH_<name>.json` files into
+/// `out_dir`. Returns the written paths.
+pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>> {
+    let mut paths = Vec::new();
+    for rep in [table1_overhead(opts), fig2_allreduce(opts), hotreload_swap(opts)] {
+        let path = rep.write_to(out_dir)?;
+        println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchOpts {
+        BenchOpts { calls: 2_000, iters: 3, seed: 7 }
+    }
+
+    #[test]
+    fn table1_rows_have_positive_latencies() {
+        let rep = table1_overhead(&tiny());
+        // 4 native + 7 policies + 2 interp ablations
+        assert_eq!(rep.series.len(), 13);
+        for s in &rep.series {
+            assert!(s.median > 0.0 && s.p99 > 0.0 && s.mean > 0.0, "{}", s.label);
+            assert_eq!(s.unit, "ns");
+        }
+    }
+
+    #[test]
+    fn fig2_policy_beats_default_midrange() {
+        let rep = fig2_allreduce(&tiny());
+        assert_eq!(rep.series.len(), 16);
+        let find = |label: &str| {
+            rep.series
+                .iter()
+                .find(|s| s.label == label)
+                .unwrap_or_else(|| panic!("missing {}", label))
+        };
+        // the Fig 2 mechanism: Ring policy wins the mid-range
+        assert!(find("policy_8mib").median > find("default_8mib").median * 1.04);
+        assert!(find("policy_64mib").median > find("default_64mib").median * 1.04);
+        for s in &rep.series {
+            assert!(s.median > 0.0, "{}", s.label);
+        }
+    }
+
+    #[test]
+    fn hotreload_reports_all_phases() {
+        let rep = hotreload_swap(&tiny());
+        let labels: Vec<&str> = rep.series.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, ["swap", "verify", "compile", "reload_total"]);
+        for s in &rep.series {
+            assert!(s.mean > 0.0, "{}", s.label);
+        }
+    }
+}

@@ -29,6 +29,36 @@ use super::helpers::{id as hid, HelperEnv};
 use super::insn::{alu, jmp, size};
 use super::interp::Op;
 
+/// Raw libc bindings for executable-memory management. The `libc`
+/// crate is not available offline, and these three symbols are part of
+/// every POSIX libc the binary already links against.
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const PROT_EXEC: i32 = 4;
+    pub const MAP_PRIVATE: i32 = 0x02;
+    #[cfg(target_os = "linux")]
+    pub const MAP_ANONYMOUS: i32 = 0x20;
+    #[cfg(not(target_os = "linux"))]
+    pub const MAP_ANONYMOUS: i32 = 0x1000; // BSD/macOS value
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn mprotect(addr: *mut c_void, len: usize, prot: i32) -> i32;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
 // x86-64 register numbers
 const RAX: u8 = 0;
 const RCX: u8 = 1;
@@ -216,7 +246,7 @@ unsafe impl Sync for JitProgram {}
 impl Drop for JitProgram {
     fn drop(&mut self) {
         unsafe {
-            libc::munmap(self.code as *mut libc::c_void, self.len);
+            sys::munmap(self.code as *mut std::ffi::c_void, self.len);
         }
     }
 }
@@ -225,6 +255,19 @@ impl JitProgram {
     /// Attempt to compile; `None` falls back to the interpreter.
     pub fn compile(ops: &[Op]) -> Option<JitProgram> {
         if std::env::var_os("NCCLBPF_NO_JIT").is_some() {
+            return None;
+        }
+        Self::compile_unchecked(ops)
+    }
+
+    /// Compile regardless of the `NCCLBPF_NO_JIT` gate. Used by tests
+    /// so they do not have to mutate process-global environment state
+    /// (which would race with concurrently running tests).
+    pub fn compile_unchecked(ops: &[Op]) -> Option<JitProgram> {
+        if !cfg!(all(unix, target_arch = "x86_64")) {
+            // the emitter below produces x86-64 SysV code and the
+            // executable mapping uses POSIX mmap; everything else
+            // falls back to the pre-decoded interpreter
             return None;
         }
         let mut e = Emit::new();
@@ -424,20 +467,20 @@ impl JitProgram {
         // map executable memory
         let len = e.code.len().max(1);
         unsafe {
-            let mem = libc::mmap(
+            let mem = sys::mmap(
                 std::ptr::null_mut(),
                 len,
-                libc::PROT_READ | libc::PROT_WRITE,
-                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_PRIVATE | sys::MAP_ANONYMOUS,
                 -1,
                 0,
             );
-            if mem == libc::MAP_FAILED {
+            if mem == sys::MAP_FAILED {
                 return None;
             }
             std::ptr::copy_nonoverlapping(e.code.as_ptr(), mem as *mut u8, e.code.len());
-            if libc::mprotect(mem, len, libc::PROT_READ | libc::PROT_EXEC) != 0 {
-                libc::munmap(mem, len);
+            if sys::mprotect(mem, len, sys::PROT_READ | sys::PROT_EXEC) != 0 {
+                sys::munmap(mem, len);
                 return None;
             }
             Some(JitProgram { code: mem as *mut u8, len })
@@ -831,12 +874,17 @@ mod tests {
     }
 
     #[test]
-    fn env_var_disables_jit() {
-        // NCCLBPF_NO_JIT is read at compile time of the program
-        std::env::set_var("NCCLBPF_NO_JIT", "1");
+    fn compile_unchecked_bypasses_env_gate() {
+        // The NCCLBPF_NO_JIT env path itself is covered end-to-end in
+        // rust/tests/integration_cli.rs (child process, private env) —
+        // mutating the global environment here would race with other
+        // tests that call JitProgram::compile concurrently.
         let ops = interp::predecode(&[mov64_imm(0, 1), exit()]).unwrap();
-        assert!(JitProgram::compile(&ops).is_none());
-        std::env::remove_var("NCCLBPF_NO_JIT");
-        assert!(JitProgram::compile(&ops).is_some());
+        let compiled = JitProgram::compile_unchecked(&ops);
+        if cfg!(all(unix, target_arch = "x86_64")) {
+            assert!(compiled.is_some());
+        } else {
+            assert!(compiled.is_none(), "JIT must decline on unsupported targets");
+        }
     }
 }

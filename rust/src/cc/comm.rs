@@ -106,6 +106,14 @@ impl Communicator {
         self.clock_ns
     }
 
+    /// Reseed the jitter RNG. Benches use this to make multi-sample
+    /// runs deterministic regardless of how many communicators were
+    /// created before (the default seed mixes in a process-global
+    /// instance counter).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
     pub fn set_tuner(&mut self, t: Option<Arc<dyn TunerPlugin>>) {
         self.tuner = t;
     }

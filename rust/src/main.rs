@@ -8,6 +8,8 @@
 //!   train [--ranks 4 ...]       DDP training with the policy attached
 //!   safety                      run the §5.2 accept/reject suite
 //!   hotreload                   demonstrate atomic policy swap
+//!   bench [--out DIR] [--quick] run the paper-shaped measurement suite
+//!                               and write BENCH_<name>.json files
 
 use ncclbpf::bpf::ProgType;
 use ncclbpf::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology};
@@ -30,9 +32,11 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("safety") => cmd_safety(),
         Some("hotreload") => cmd_hotreload(),
+        Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: ncclbpf <verify|disasm|allreduce|sweep|train|safety|hotreload> [flags]\n\
+                "usage: ncclbpf <verify|disasm|allreduce|sweep|train|safety|hotreload|bench> \
+                 [flags]\n\
                  see README.md for examples"
             );
             2
@@ -214,6 +218,31 @@ fn cmd_safety() -> i32 {
     }
     println!("safety suite: all 7 safe accepted, all 7 unsafe rejected");
     0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let out = args.flag("out").unwrap_or(".");
+    let mut opts = if args.flag_bool("quick") {
+        ncclbpf::bench::BenchOpts::quick()
+    } else {
+        ncclbpf::bench::BenchOpts::default()
+    };
+    opts.calls = args.flag_usize("calls", opts.calls);
+    opts.iters = args.flag_usize("iters", opts.iters);
+    println!(
+        "bench: {} tuner calls/row, {} samples/point, seed {:#x} -> {}",
+        opts.calls, opts.iters, opts.seed, out
+    );
+    match ncclbpf::bench::run_all(Path::new(out), &opts) {
+        Ok(paths) => {
+            println!("wrote {} reports", paths.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("bench failed: {}", e);
+            1
+        }
+    }
 }
 
 fn cmd_hotreload() -> i32 {

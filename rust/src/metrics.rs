@@ -1,5 +1,10 @@
 //! Process-wide metrics registry: counters and latency histograms used
 //! by the coordinator, the plugin host, and the benches.
+//!
+//! The [`report`] submodule serializes finished benchmark results to
+//! `BENCH_<name>.json` files — the repo's cross-PR perf trajectory.
+
+pub mod report;
 
 use crate::util::Histogram;
 use std::collections::HashMap;

@@ -1,0 +1,199 @@
+//! Bench-report serialization.
+//!
+//! Every `ncclbpf bench` run produces one [`BenchReport`] per
+//! measurement (Table 1 overhead, Fig 2 sweep, hot-reload latency) and
+//! writes it to `BENCH_<name>.json` in the chosen output directory
+//! (repo root by convention), so each PR appends a point to the
+//! performance trajectory. The JSON is flat and stable:
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "name": "table1_overhead",
+//!   "created_unix": 1753600000,
+//!   "git_sha": "abc123...",
+//!   "machine": {"os": "linux", "arch": "x86_64", "ncpus": 8},
+//!   "series": [
+//!     {"label": "native_size_aware", "unit": "ns",
+//!      "median": 21.0, "p99": 35.0, "mean": 22.4, "...": 0}
+//!   ]
+//! }
+//! ```
+//!
+//! Serialized with [`crate::util::JsonWriter`] (no serde offline) and
+//! parseable back with [`crate::runtime::manifest::parse_json`], which
+//! is what `rust/tests/integration_cli.rs` does to validate the files.
+
+use crate::util::JsonWriter;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One measured series: a table row or a sweep point.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub label: String,
+    /// unit of `median` / `p99` / `mean` ("ns", "gbps", "us", ...)
+    pub unit: String,
+    pub median: f64,
+    pub p99: f64,
+    pub mean: f64,
+    /// additional numeric facts (size_bytes, delta_vs_default_pct, ...)
+    pub extra: Vec<(String, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, unit: &str, median: f64, p99: f64, mean: f64) -> Series {
+        Series {
+            label: label.into(),
+            unit: unit.to_string(),
+            median,
+            p99,
+            mean,
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn with(mut self, key: &str, value: f64) -> Series {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+}
+
+/// A complete benchmark report, ready to serialize.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    pub git_sha: String,
+    pub created_unix: u64,
+    /// (key, value) machine facts
+    pub machine: Vec<(String, String)>,
+    pub series: Vec<Series>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            git_sha: git_sha(),
+            created_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            machine: machine_facts(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("schema").num(1.0);
+        w.key("name").str(&self.name);
+        w.key("created_unix").num(self.created_unix as f64);
+        w.key("git_sha").str(&self.git_sha);
+        w.key("machine").begin_obj();
+        for (k, v) in &self.machine {
+            w.key(k).str(v);
+        }
+        w.end_obj();
+        w.key("series").begin_arr();
+        for s in &self.series {
+            w.begin_obj();
+            w.key("label").str(&s.label);
+            w.key("unit").str(&s.unit);
+            w.key("median").num(s.median);
+            w.key("p99").num(s.p99);
+            w.key("mean").num(s.mean);
+            for (k, v) in &s.extra {
+                w.key(k).num(*v);
+            }
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the file path.
+    pub fn write_to(&self, dir: &Path) -> io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+fn machine_facts() -> Vec<(String, String)> {
+    let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    vec![
+        ("os".to_string(), std::env::consts::OS.to_string()),
+        ("arch".to_string(), std::env::consts::ARCH.to_string()),
+        ("ncpus".to_string(), ncpus.to_string()),
+    ]
+}
+
+/// Best-effort git sha: `git rev-parse HEAD` in the manifest dir, then
+/// the GITHUB_SHA env (CI), then "unknown".
+fn git_sha() -> String {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output();
+    if let Ok(o) = out {
+        if o.status.success() {
+            if let Ok(s) = String::from_utf8(o.stdout) {
+                let s = s.trim().to_string();
+                if !s.is_empty() {
+                    return s;
+                }
+            }
+        }
+    }
+    std::env::var("GITHUB_SHA").unwrap_or_else(|_| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{parse_json, Json};
+
+    fn sample() -> BenchReport {
+        let mut r = BenchReport::new("unit_test");
+        r.push(Series::new("row_a", "ns", 10.0, 20.5, 12.0).with("size_bytes", 4096.0));
+        r.push(Series::new("row \"b\"", "gbps", 400.0, 410.0, 401.0));
+        r
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let j = parse_json(&sample().to_json()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_u64), Some(1));
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("unit_test"));
+        assert!(j.get("git_sha").and_then(Json::as_str).is_some());
+        let machine = j.get("machine").unwrap();
+        assert!(machine.get("os").and_then(Json::as_str).is_some());
+        let series = j.get("series").and_then(Json::as_arr).unwrap();
+        assert_eq!(series.len(), 2);
+        let row = &series[0];
+        assert_eq!(row.get("label").and_then(Json::as_str), Some("row_a"));
+        assert_eq!(row.get("unit").and_then(Json::as_str), Some("ns"));
+        assert_eq!(row.get("median").and_then(Json::as_u64), Some(10));
+        assert!(row.get("p99").is_some());
+        assert_eq!(row.get("size_bytes").and_then(Json::as_u64), Some(4096));
+        // escaped label survives
+        assert_eq!(series[1].get("label").and_then(Json::as_str), Some("row \"b\""));
+    }
+
+    #[test]
+    fn write_to_creates_bench_file() {
+        let dir = std::env::temp_dir().join("ncclbpf_report_test");
+        let path = sample().write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(parse_json(&text).is_ok());
+    }
+}

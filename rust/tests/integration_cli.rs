@@ -1,0 +1,178 @@
+//! End-to-end CLI coverage: drive the compiled `ncclbpf` binary's
+//! verify / disasm / sweep / safety / hotreload / bench subcommands and
+//! check exit codes and outputs. The bench JSON must parse (via the
+//! same minimal JSON parser the runtime uses) and carry non-empty
+//! median/p99 fields — the acceptance gate for the perf trajectory.
+
+use ncclbpf::runtime::manifest::{parse_json, Json};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_ncclbpf")
+}
+
+fn policy(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("policies").join(name)
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(bin()).args(args).output().expect("spawn ncclbpf")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stderr).into_owned()
+}
+
+#[test]
+fn no_subcommand_prints_usage_and_exits_2() {
+    let o = run(&[]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("usage"), "{}", stderr(&o));
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    let o = run(&["frobnicate"]);
+    assert_eq!(o.status.code(), Some(2));
+}
+
+#[test]
+fn verify_accepts_safe_policy() {
+    let p = policy("size_aware.c");
+    let o = run(&["verify", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("VERIFIER ACCEPT"), "{}", out);
+}
+
+#[test]
+fn verify_rejects_unsafe_policy_with_actionable_message() {
+    let p = policy("unsafe/input_write.s");
+    let o = run(&["verify", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(1));
+    assert!(stdout(&o).contains("read-only"), "{}", stdout(&o));
+}
+
+#[test]
+fn verify_without_argument_exits_2() {
+    let o = run(&["verify"]);
+    assert_eq!(o.status.code(), Some(2));
+}
+
+#[test]
+fn verify_works_with_jit_disabled() {
+    // the NCCLBPF_NO_JIT gate, exercised in a child process so no other
+    // test observes the env mutation
+    let p = policy("nvlink_ring_mid_v2.c");
+    let o = Command::new(bin())
+        .args(["verify", p.to_str().unwrap()])
+        .env("NCCLBPF_NO_JIT", "1")
+        .output()
+        .expect("spawn");
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    assert!(stdout(&o).contains("VERIFIER ACCEPT"));
+}
+
+#[test]
+fn disasm_prints_instructions() {
+    let p = policy("size_aware.c");
+    let o = run(&["disasm", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("exit"), "{}", out);
+    assert!(out.contains("call"), "{}", out);
+    assert!(!out.contains("??"), "undecodable instructions:\n{}", out);
+}
+
+#[test]
+fn sweep_runs_and_prints_table() {
+    let o = run(&["sweep", "--ranks", "4"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("Size"), "{}", out);
+    assert!(out.contains("Ring"), "{}", out);
+}
+
+#[test]
+fn safety_suite_green_end_to_end() {
+    let o = run(&["safety"]);
+    assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
+    let out = stdout(&o);
+    assert!(out.contains("all 7 safe accepted, all 7 unsafe rejected"), "{}", out);
+}
+
+#[test]
+fn hotreload_demo_runs() {
+    let o = run(&["hotreload"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    assert!(stdout(&o).contains("hot-reloaded"), "{}", stdout(&o));
+}
+
+#[test]
+fn bench_writes_parseable_json_with_median_p99() {
+    let dir = std::env::temp_dir().join("ncclbpf_cli_bench");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let o = run(&[
+        "bench",
+        "--out",
+        dir.to_str().unwrap(),
+        "--quick",
+        "--calls",
+        "5000",
+        "--iters",
+        "3",
+    ]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+
+    for (file, min_series) in [
+        ("BENCH_table1_overhead.json", 10),
+        ("BENCH_fig2_allreduce.json", 16),
+        ("BENCH_hotreload.json", 4),
+    ] {
+        let path = dir.join(file);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{} missing: {}", path.display(), e));
+        let j = parse_json(&text).unwrap_or_else(|e| panic!("{}: bad JSON: {}", file, e));
+        assert_eq!(j.get("schema").and_then(Json::as_u64), Some(1), "{}", file);
+        assert!(j.get("git_sha").and_then(Json::as_str).is_some(), "{}", file);
+        let series = j
+            .get("series")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("{}: no series array", file));
+        assert!(
+            series.len() >= min_series,
+            "{}: only {} series",
+            file,
+            series.len()
+        );
+        for s in series {
+            let label = s.get("label").and_then(Json::as_str).unwrap_or("?");
+            let median = s.get("median").and_then(|v| match v {
+                Json::Num(n) => Some(*n),
+                _ => None,
+            });
+            let p99 = s.get("p99").and_then(|v| match v {
+                Json::Num(n) => Some(*n),
+                _ => None,
+            });
+            assert!(
+                median.map(|m| m > 0.0).unwrap_or(false),
+                "{}: series '{}' has empty median",
+                file,
+                label
+            );
+            assert!(
+                p99.map(|p| p > 0.0).unwrap_or(false),
+                "{}: series '{}' has empty p99",
+                file,
+                label
+            );
+        }
+    }
+}

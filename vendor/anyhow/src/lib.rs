@@ -1,0 +1,167 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no network access, so the real `anyhow` cannot
+//! be fetched from crates.io. This vendored mini-crate implements the
+//! message-carrying subset the repository actually uses — `Error`,
+//! `Result<T>`, `anyhow!`, `bail!`, `ensure!`, and the `Context`
+//! extension trait — with the same call-site syntax, so swapping in the
+//! real crate later is a one-line Cargo change.
+//!
+//! Differences from real anyhow: no backtraces, no error-chain
+//! downcasting; the error is a single formatted message with contexts
+//! prepended `"{context}: {cause}"` exactly like anyhow's Display
+//! output for a one-level chain.
+
+use std::fmt;
+
+/// A formatted error message (anyhow's `Error`, minus backtraces).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from anything printable (anyhow's `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context layer (used by the `Context` impls).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{}: {}", context, self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` —
+// exactly like real anyhow — so the blanket conversion below cannot
+// collide with the reflexive `From<T> for T` impl.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", context, e)))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_debug_carry_message() {
+        let e = anyhow!("bad {} of {}", 2, 5);
+        assert_eq!(format!("{}", e), "bad 2 of 5");
+        assert_eq!(format!("{:?}", e), "bad 2 of 5");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+            let v = r?;
+            Ok(v)
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{}", e), "reading manifest: gone");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{}", e), "missing key");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {}", x);
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(7).unwrap_err()).contains("unlucky"));
+        assert!(format!("{}", f(11).unwrap_err()).contains("too big"));
+    }
+}

@@ -14,7 +14,7 @@ fn main() {
     {
         let host = Arc::new(NcclBpfHost::new());
         host.install_object(&policydir::build_named("adaptive_channels").unwrap()).unwrap();
-        let mut comm = engine(&host, false);
+        let comm = engine(&host, false);
         let mut bufs = mk_bufs();
         let mut last = 0;
         for _ in 0..50 {
@@ -28,7 +28,7 @@ fn main() {
     let host = Arc::new(NcclBpfHost::new());
     host.install_object(&policydir::build_named("record_latency").unwrap()).unwrap();
     host.install_object(&policydir::build_named("adaptive_channels").unwrap()).unwrap();
-    let mut comm = engine(&host, true);
+    let comm = engine(&host, true);
     let mut bufs = mk_bufs();
     let size = 16 << 20;
 
@@ -37,7 +37,7 @@ fn main() {
     fn phase(
         label: &str,
         calls: usize,
-        comm: &mut Communicator,
+        comm: &Communicator,
         bufs: &mut [Vec<f32>],
         size: usize,
     ) -> u32 {
@@ -53,7 +53,7 @@ fn main() {
         last
     }
 
-    let p1 = phase("baseline ramp", 60, &mut comm, &mut bufs, size);
+    let p1 = phase("baseline ramp", 60, &comm, &mut bufs, size);
     assert_eq!(p1, 12, "should ramp to 12");
 
     // inject contention: 10x latency spike written into the shared map
@@ -67,7 +67,7 @@ fn main() {
     println!("  contention injected    backoff to {}", first_after);
     assert_eq!(first_after, 2, "contention must back off");
 
-    let p3 = phase("recovery ramp", 60, &mut comm, &mut bufs, size);
+    let p3 = phase("recovery ramp", 60, &comm, &mut bufs, size);
     assert_eq!(p3, 12, "should recover to 12");
 
     println!();

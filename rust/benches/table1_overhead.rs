@@ -72,13 +72,13 @@ fn bench_policy(host: &NcclBpfHost, name: &str, base: Option<f64>, interp_only: 
     host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
     // seed maps the policies read so the lookup path is "hot"
     if let Some(m) = host.map("latency_map") {
-        let _ = m.write_u64(ncclbpf::host::fold_comm_id(args(0).comm_id), 500_000);
+        let _ = m.write_u64_all(ncclbpf::host::fold_comm_id(args(0).comm_id), 500_000);
     }
     if let Some(m) = host.map("config_map") {
-        let _ = m.write_u64(0, 32 * 1024);
+        let _ = m.write_u64_all(0, 32 * 1024);
     }
     if let Some(m) = host.map("slo_map") {
-        let _ = m.write_u64(0, 1_000_000);
+        let _ = m.write_u64_all(0, 1_000_000);
     }
     let a = args(8 << 20);
     let (p50, p99, mean) = if interp_only {

@@ -183,14 +183,31 @@ pub fn ktime_get_ns() -> u64 {
 
 static PRNG_STATE: AtomicU64 = AtomicU64::new(0x9e3779b97f4a7c15);
 
-/// xorshift-based prandom (no `rand` crate available offline).
-pub fn prandom_u32() -> u32 {
-    let mut x = PRNG_STATE.load(Ordering::Relaxed);
+#[inline]
+fn xorshift64(mut x: u64) -> u64 {
     x ^= x << 13;
     x ^= x >> 7;
     x ^= x << 17;
-    PRNG_STATE.store(x, Ordering::Relaxed);
-    (x >> 32) as u32
+    x
+}
+
+/// Advance the shared xorshift state by one step and return the new
+/// state. A single `fetch_update` CAS makes the step atomic: the
+/// seed's separate load/store lost updates under concurrent callers
+/// and handed the same state (hence duplicate draws) to several
+/// threads at once. Each successful CAS consumes exactly one point on
+/// the xorshift orbit, so concurrent callers always receive distinct
+/// states (the orbit has period 2^64 − 1 and never hits zero).
+pub fn prandom_u64() -> u64 {
+    let old = PRNG_STATE
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |x| Some(xorshift64(x)))
+        .expect("fetch_update closure always returns Some");
+    xorshift64(old)
+}
+
+/// xorshift-based prandom (no `rand` crate available offline).
+pub fn prandom_u32() -> u32 {
+    (prandom_u64() >> 32) as u32
 }
 
 /// Count of trace_printk invocations (observable by tests).
@@ -351,5 +368,30 @@ mod tests {
         let a = prandom_u32();
         let b = prandom_u32();
         assert_ne!(a, b);
+    }
+
+    /// Regression for the load/store race: concurrent callers must
+    /// never observe the same generator state. Checked on the full
+    /// 64-bit states (every state on the xorshift orbit is unique);
+    /// other tests drawing concurrently only advance the orbit further
+    /// and cannot introduce duplicates among the draws collected here.
+    #[test]
+    fn prandom_concurrent_uniqueness() {
+        const THREADS: usize = 4;
+        const DRAWS: usize = 25_000;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    (0..DRAWS).map(|_| prandom_u64()).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut seen = std::collections::HashSet::with_capacity(THREADS * DRAWS);
+        for h in handles {
+            for v in h.join().unwrap() {
+                assert!(seen.insert(v), "duplicate prandom state {:#x}", v);
+            }
+        }
+        assert_eq!(seen.len(), THREADS * DRAWS);
     }
 }

@@ -359,20 +359,25 @@ pub unsafe fn execute(ops: &[Op], ctx: *mut u8, env: &HelperEnv) -> u64 {
 }
 
 /// 512-byte, 16-aligned program stack.
+///
+/// Deliberately *not* zeroed per call: the verifier enforces
+/// init-before-read on every stack byte, so a verified program can
+/// never observe the uninitialized contents, and zeroing 512 B on
+/// every invocation would dominate the ns-scale dispatch cost Table 1
+/// measures (the `interp_stack_zeroed` bench series documents the
+/// delta). `MaybeUninit` makes that honest — the seed's
+/// `Stack512([0u8; 512])` claimed "not zeroed" in a comment while
+/// memsetting the whole array on every interpreter call.
 #[repr(align(16))]
-pub struct Stack512([u8; 512]);
+pub struct Stack512(std::mem::MaybeUninit<[u8; 512]>);
 impl Stack512 {
     #[inline(always)]
     pub fn new() -> Self {
-        // Not zeroed on purpose: verified programs never read uninit
-        // stack, and zeroing 512B per call would dominate the ns-scale
-        // dispatch cost Table 1 measures. (MaybeUninit would be the
-        // "honest" type; a fixed array keeps the hot path simple.)
-        Stack512([0u8; 512])
+        Stack512(std::mem::MaybeUninit::uninit())
     }
     #[inline(always)]
     pub fn top(&mut self) -> u64 {
-        unsafe { self.0.as_mut_ptr().add(512) as u64 }
+        unsafe { (self.0.as_mut_ptr() as *mut u8).add(512) as u64 }
     }
 }
 
@@ -510,6 +515,37 @@ mod tests {
         let ops = predecode(&p).unwrap();
         let r = unsafe { execute(&ops, std::ptr::null_mut(), &env) };
         assert_eq!(r, 555);
+    }
+
+    /// Regression for the stack-zeroing fix: the stack type must keep
+    /// its ABI shape (512 bytes, 16-aligned, `top()` one-past-the-end)
+    /// and stay readable/writable through the frame pointer — without
+    /// the per-call memset the seed's `[0u8; 512]` initializer hid.
+    #[test]
+    fn stack512_layout_and_frame_pointer_access() {
+        assert_eq!(std::mem::size_of::<Stack512>(), 512);
+        assert_eq!(std::mem::align_of::<Stack512>(), 16);
+        let mut s = Stack512::new();
+        let top = s.top();
+        assert_eq!(top % 16, 0, "stack top must stay 16-aligned");
+        unsafe {
+            ((top - 8) as *mut u64).write_unaligned(0xdead_beef);
+            assert_eq!(((top - 8) as *const u64).read_unaligned(), 0xdead_beef);
+            ((top - 512) as *mut u8).write(0x7f); // lowest addressable byte
+            assert_eq!(((top - 512) as *const u8).read(), 0x7f);
+        }
+        // a program writing then reading its whole stack stays correct
+        let mut p = vec![mov64_imm(0, 0)];
+        for off in (8..=512i16).step_by(8) {
+            p.push(st_imm(size::DW, 10, -off, off as i32));
+        }
+        for off in (8..=512i16).step_by(8) {
+            p.push(ldx(size::DW, 1, 10, -off));
+            p.push(alu64_reg(alu::ADD, 0, 1));
+        }
+        p.push(exit());
+        let want: u64 = (8..=512u64).step_by(8).sum();
+        unsafe { assert_eq!(run(&p), want) };
     }
 
     #[test]

@@ -392,6 +392,81 @@ impl Map {
         self.update(&key.to_le_bytes(), &buf)
     }
 
+    // -- host-side per-cpu semantics ------------------------------------------
+    //
+    // BPF-side helpers (`bpf_map_update_elem` from a program) touch only
+    // the calling thread's cpu slot, matching kernel semantics. The
+    // host/control plane is the *userspace* side of that contract: a
+    // kernel userspace update writes every cpu's slot, and a userspace
+    // read returns all of them. The seed routed control-plane writes
+    // through `update`, so any policy keeping state in a per-cpu map
+    // (the traffic engine's counter programs; an slo_enforcer-style
+    // target written per-thread) read a host-seeded value only on the
+    // one thread that happened to share the writer's slot — 0 elsewhere.
+
+    /// Control-plane update: write `value` into **all** cpu slots of a
+    /// per-cpu map (kernel userspace semantics). Falls through to the
+    /// plain update for non-per-cpu maps.
+    pub fn update_all_cpus(&self, key: &[u8], value: &[u8]) -> Result<(), String> {
+        if self.def.kind != MapKind::PerCpuArray {
+            return self.update(key, value);
+        }
+        if key.len() != self.def.key_size as usize {
+            return Err(format!("map '{}': bad key size {}", self.def.name, key.len()));
+        }
+        if value.len() != self.def.value_size as usize {
+            return Err(format!("map '{}': bad value size {}", self.def.name, value.len()));
+        }
+        let idx = u32::from_le_bytes(key.try_into().unwrap()) as usize;
+        if idx >= self.def.max_entries as usize {
+            return Err(format!("map '{}': index out of range", self.def.name));
+        }
+        for cpu in 0..NCPU {
+            let p = self.value_ptr_at(cpu * self.def.max_entries as usize + idx);
+            unsafe { std::ptr::copy_nonoverlapping(value.as_ptr(), p, value.len()) };
+        }
+        Ok(())
+    }
+
+    /// Control-plane `write_u64` across all cpu slots.
+    pub fn write_u64_all(&self, key: u32, value: u64) -> Result<(), String> {
+        let mut buf = vec![0u8; self.def.value_size as usize];
+        if buf.len() < 8 {
+            return Err("value_size < 8".into());
+        }
+        buf[..8].copy_from_slice(&value.to_le_bytes());
+        self.update_all_cpus(&key.to_le_bytes(), &buf)
+    }
+
+    /// Read one cpu slot of a per-cpu map (`read_u64` on non-per-cpu).
+    pub fn read_u64_cpu(&self, key: u32, cpu: usize) -> Option<u64> {
+        if self.def.kind != MapKind::PerCpuArray {
+            return self.read_u64(key);
+        }
+        let idx = key as usize;
+        if idx >= self.def.max_entries as usize || cpu >= NCPU || self.def.value_size < 8 {
+            return None;
+        }
+        let p = self.value_ptr_at(cpu * self.def.max_entries as usize + idx);
+        let mut b = [0u8; 8];
+        unsafe { std::ptr::copy_nonoverlapping(p, b.as_mut_ptr(), 8) };
+        Some(u64::from_le_bytes(b))
+    }
+
+    /// Aggregate a u64 counter across all cpu slots (sum) — the host
+    /// observability path for per-cpu counters. `read_u64` on
+    /// non-per-cpu maps.
+    pub fn read_u64_all(&self, key: u32) -> Option<u64> {
+        if self.def.kind != MapKind::PerCpuArray {
+            return self.read_u64(key);
+        }
+        let mut total = 0u64;
+        for cpu in 0..NCPU {
+            total = total.wrapping_add(self.read_u64_cpu(key, cpu)?);
+        }
+        Some(total)
+    }
+
     /// True iff `ptr` points into this map's value storage (used by the
     /// runtime to sanity-check helper arguments in debug builds).
     pub fn contains_ptr(&self, ptr: *const u8) -> bool {
@@ -401,14 +476,33 @@ impl Map {
     }
 }
 
-// Per-thread logical cpu slot assignment.
+// Per-thread logical cpu slot assignment. Slots are normally handed
+// out round-robin on first map access; worker pools that need stable,
+// collision-free slots (the traffic engine) pin them explicitly.
 use std::sync::atomic::AtomicUsize;
 static NEXT_CPU: AtomicUsize = AtomicUsize::new(0);
 thread_local! {
-    static CPU_SLOT: usize = NEXT_CPU.fetch_add(1, Ordering::Relaxed) % NCPU;
+    static CPU_SLOT: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
 }
 fn thread_cpu_slot() -> usize {
-    CPU_SLOT.with(|s| *s)
+    CPU_SLOT.with(|s| match s.get() {
+        Some(v) => v,
+        None => {
+            let v = NEXT_CPU.fetch_add(1, Ordering::Relaxed) % NCPU;
+            s.set(Some(v));
+            v
+        }
+    })
+}
+
+/// Pin the calling thread's logical cpu slot (mod [`NCPU`]). Returns
+/// the slot actually assigned. The traffic engine pins worker `i` to
+/// slot `i` so per-cpu counters are single-writer and their all-slot
+/// sum is exact.
+pub fn pin_thread_cpu_slot(slot: usize) -> usize {
+    let v = slot % NCPU;
+    CPU_SLOT.with(|s| s.set(Some(v)));
+    v
 }
 
 /// Shared namespace of maps: the mechanism behind cross-plugin
@@ -599,6 +693,67 @@ mod tests {
         // this thread's value unchanged if slots differ
         if other == 0 {
             assert_eq!(m.read_u64(0), Some(111));
+        }
+    }
+
+    fn pcdef(name: &str, entries: u32) -> MapDef {
+        MapDef {
+            name: name.into(),
+            kind: MapKind::PerCpuArray,
+            key_size: 4,
+            value_size: 8,
+            max_entries: entries,
+        }
+    }
+
+    /// Regression for the control-plane per-cpu bug: a host `write_u64`
+    /// only touched the calling thread's slot, so policies running on
+    /// worker threads read 0. `write_u64_all` must be visible from
+    /// every thread's slot.
+    #[test]
+    fn percpu_host_write_all_visible_cross_thread() {
+        let m = Arc::new(Map::new(pcdef("pc_all", 2), 1).unwrap());
+        // seed-style single-slot write: workers would read 0 (the bug)
+        m.write_u64(0, 111).unwrap();
+        // fixed control-plane path: every slot gets the value
+        m.write_u64_all(1, 777).unwrap();
+        let mut handles = vec![];
+        for i in 0..4usize {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                pin_thread_cpu_slot(8 + i); // distinct slots, not the writer's
+                m.read_u64(1).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 777, "worker thread must see the host write");
+        }
+        // error paths: out-of-range index, short value
+        assert!(m.write_u64_all(9, 1).is_err());
+    }
+
+    /// Per-thread increments on pinned slots aggregate exactly through
+    /// `read_u64_all` (single-writer slots, no lost updates).
+    #[test]
+    fn percpu_pinned_slots_aggregate_exactly() {
+        let m = Arc::new(Map::new(pcdef("pc_sum", 1), 1).unwrap());
+        let mut handles = vec![];
+        for t in 0..4usize {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let slot = pin_thread_cpu_slot(t);
+                for _ in 0..1000 {
+                    let cur = m.read_u64(0).unwrap();
+                    m.write_u64(0, cur + 1).unwrap();
+                }
+                slot
+            }));
+        }
+        let slots: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(slots, vec![0, 1, 2, 3]);
+        assert_eq!(m.read_u64_all(0), Some(4000));
+        for t in 0..4usize {
+            assert_eq!(m.read_u64_cpu(0, t), Some(1000));
         }
     }
 

@@ -18,9 +18,11 @@ use super::types::{Algo, CollType};
 
 /// Pluggable elementwise reduction (sum) used by reduce paths.
 ///
-/// Not `Send`/`Sync`: the engine executes collectives on one thread
-/// (rank loops are sequential in-process), and the PJRT-backed reducer
-/// wraps an `Rc`-based client.
+/// The trait itself carries no `Send`/`Sync` bound so single-threaded
+/// callers (the bare algo functions, the PJRT-backed reducer that
+/// wraps an `Rc`-based client) stay flexible; [`super::Communicator`]
+/// however stores `Arc<dyn Reducer + Send + Sync>`, because its
+/// dispatch path is `&self` and shareable across threads.
 pub trait Reducer {
     /// acc[i] += src[i]
     fn reduce_into(&self, acc: &mut [f32], src: &[f32]);

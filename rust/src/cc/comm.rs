@@ -6,6 +6,19 @@
 //! NCCL's enqueue path consults `getCollInfo`, then executes the
 //! selected (algorithm, protocol, channels) with real data movement and
 //! advances a modeled clock ([`super::perfmodel`]).
+//!
+//! # Threading model
+//! The dispatch path (`resolve_config`, `run`, `run_fixed` and the
+//! profiler `emit`) is `&self`-safe: all per-communicator mutable state
+//! (sequence numbers, the modeled clock, warmup counters, the jitter
+//! RNG) lives in [`ClockState`] behind atomics/a mutex, while the
+//! plugin handles are `Send + Sync` trait objects. A `Communicator` is
+//! therefore `Send + Sync` — the traffic engine
+//! ([`crate::host::traffic`]) runs one per OS thread against a shared
+//! [`crate::host::NcclBpfHost`], and a single communicator may even be
+//! shared across threads (callers still need exclusive access to their
+//! rank buffers). Setup methods (`set_tuner`, `prewarm`, `reseed`, …)
+//! keep `&mut self` receivers: configuration is an exclusive phase.
 
 use super::algo::{self, MoveStats, NativeSum, Reducer};
 use super::perfmodel::PerfModel;
@@ -16,8 +29,8 @@ use super::topo::Topology;
 use super::types::{Algo, CollConfig, CollType, Proto, ALL_ALGOS, MAX_CHANNELS};
 use crate::cc::proto::ALL_PROTOS;
 use crate::util::{fnv1a_u64, Rng};
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// How much real data movement to perform per collective.
@@ -50,25 +63,56 @@ pub struct CollResult {
 const WARMUP_CALLS: u32 = 2;
 const WARMUP_PENALTY: f64 = 1.20;
 
+/// Per-communicator mutable state, split from the shared plugin state
+/// so the collective dispatch path is `&self` (the tentpole refactor
+/// for multi-threaded traffic): sequence numbers and the modeled clock
+/// are atomics, warmup counters are a fixed (algo × proto) atomic
+/// grid, and the jitter RNG sits behind a mutex that is uncontended in
+/// the one-thread-per-communicator deployment shape.
+struct ClockState {
+    seq: AtomicU64,
+    /// modeled clock, stored as f64 bits (advanced via CAS)
+    clock_ns_bits: AtomicU64,
+    /// warmup call counts, indexed [algo.index()][proto.index()]
+    warmups: [[AtomicU32; ALL_PROTOS.len()]; ALL_ALGOS.len()],
+    rng: Mutex<Rng>,
+}
+
+impl ClockState {
+    fn new(rng: Rng) -> ClockState {
+        ClockState {
+            seq: AtomicU64::new(0),
+            clock_ns_bits: AtomicU64::new(0.0f64.to_bits()),
+            warmups: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU32::new(0))),
+            rng: Mutex::new(rng),
+        }
+    }
+}
+
 pub struct Communicator {
     pub topo: Topology,
     pub model: PerfModel,
     tuner: Option<Arc<dyn TunerPlugin>>,
     profiler: Option<Arc<dyn ProfilerPlugin>>,
-    reducer: Arc<dyn Reducer>,
+    reducer: Arc<dyn Reducer + Send + Sync>,
     pub data_mode: DataMode,
     /// jitter σ as a fraction of modeled time, per algorithm (NVLS
     /// multicast shows slightly higher variance: §5.3 stability).
     pub jitter: bool,
-    rng: Rng,
-    seq: u64,
-    clock_ns: f64,
+    clock: ClockState,
     comm_id: u64,
-    warmups: HashMap<(Algo, Proto), u32>,
     /// identity allocation whose address seeds comm_id (paper §4:
     /// "deriving a stable ID from the context pointer via hashing")
     _identity: Box<u64>,
 }
+
+// Compile-time proof of the threading contract: the whole communicator
+// is shareable across threads (plugins are Send + Sync trait objects,
+// per-communicator state is atomic).
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Communicator>();
+};
 
 impl Communicator {
     pub fn new(topo: Topology) -> Communicator {
@@ -89,11 +133,8 @@ impl Communicator {
             reducer: Arc::new(NativeSum),
             data_mode: DataMode::Full,
             jitter: true,
-            rng: Rng::new(comm_id ^ fnv1a_u64(instance)),
-            seq: 0,
-            clock_ns: 0.0,
+            clock: ClockState::new(Rng::new(comm_id ^ fnv1a_u64(instance))),
             comm_id,
-            warmups: HashMap::new(),
             _identity: identity,
         }
     }
@@ -103,7 +144,24 @@ impl Communicator {
     }
 
     pub fn clock_ns(&self) -> f64 {
-        self.clock_ns
+        f64::from_bits(self.clock.clock_ns_bits.load(Ordering::Relaxed))
+    }
+
+    /// Advance the modeled clock by `dt` ns and return the new value.
+    fn advance_clock(&self, dt: f64) -> f64 {
+        let mut cur = self.clock.clock_ns_bits.load(Ordering::Relaxed);
+        loop {
+            let next = f64::from_bits(cur) + dt;
+            match self.clock.clock_ns_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return next,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// Reseed the jitter RNG. Benches use this to make multi-sample
@@ -111,7 +169,7 @@ impl Communicator {
     /// created before (the default seed mixes in a process-global
     /// instance counter).
     pub fn reseed(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
+        *self.clock.rng.get_mut().unwrap() = Rng::new(seed);
     }
 
     pub fn set_tuner(&mut self, t: Option<Arc<dyn TunerPlugin>>) {
@@ -122,14 +180,14 @@ impl Communicator {
         self.profiler = p;
     }
 
-    pub fn set_reducer(&mut self, r: Arc<dyn Reducer>) {
+    pub fn set_reducer(&mut self, r: Arc<dyn Reducer + Send + Sync>) {
         self.reducer = r;
     }
 
     /// Pre-warm an (algo, proto) pair as if prior communicators had
     /// already stabilized its buffers.
     pub fn prewarm(&mut self, algo: Algo, proto: Proto) {
-        self.warmups.insert((algo, proto), WARMUP_CALLS);
+        self.clock.warmups[algo.index()][proto.index()].store(WARMUP_CALLS, Ordering::Relaxed);
     }
 
     pub fn prewarm_all(&mut self) {
@@ -142,9 +200,10 @@ impl Communicator {
 
     /// Resolve the configuration for a collective: build the engine's
     /// cost table, invoke the tuner plugin (if any), apply sentinel /
-    /// fallback semantics and the channel clamp.
+    /// fallback semantics and the channel clamp. `&self`-safe: this is
+    /// the tuner dispatch path the traffic engine drives concurrently.
     /// Returns (config, measured host-side plugin overhead in ns).
-    pub fn resolve_config(&mut self, coll: CollType, nbytes: usize) -> (CollConfig, u64) {
+    pub fn resolve_config(&self, coll: CollType, nbytes: usize) -> (CollConfig, u64) {
         let default = self.model.default_config(coll, nbytes);
         let Some(tuner) = self.tuner.clone() else {
             return (default, 0);
@@ -204,10 +263,14 @@ impl Communicator {
 
     /// Warmup multiplier for a config: the first couple of calls on a
     /// fresh (algo, proto) pair pay a buffer-setup penalty.
-    fn warmup_factor(&mut self, cfg: CollConfig) -> f64 {
-        let e = self.warmups.entry((cfg.algo, cfg.proto)).or_insert(0);
-        if *e < WARMUP_CALLS {
-            *e += 1;
+    fn warmup_factor(&self, cfg: CollConfig) -> f64 {
+        let cell = &self.clock.warmups[cfg.algo.index()][cfg.proto.index()];
+        let warming = cell
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                (v < WARMUP_CALLS).then_some(v + 1)
+            })
+            .is_ok();
+        if warming {
             WARMUP_PENALTY
         } else {
             1.0
@@ -218,7 +281,7 @@ impl Communicator {
     /// lets large-size benches model sizes bigger than the real buffers
     /// (pass `bufs[0].len() * 4` for full fidelity).
     pub fn run(
-        &mut self,
+        &self,
         coll: CollType,
         bufs: &mut [Vec<f32>],
         logical_nbytes: usize,
@@ -231,7 +294,7 @@ impl Communicator {
     /// Execute with an explicit config (bypasses the tuner — used by
     /// sweeps and the no-plugin baseline).
     pub fn run_fixed(
-        &mut self,
+        &self,
         coll: CollType,
         bufs: &mut [Vec<f32>],
         logical_nbytes: usize,
@@ -241,22 +304,21 @@ impl Communicator {
     }
 
     fn run_with_config(
-        &mut self,
+        &self,
         coll: CollType,
         bufs: &mut [Vec<f32>],
         logical_nbytes: usize,
         cfg: CollConfig,
         plugin_overhead_ns: u64,
     ) -> CollResult {
-        let seq = self.seq;
-        self.seq += 1;
+        let seq = self.clock.seq.fetch_add(1, Ordering::Relaxed);
         self.emit(ProfilerEvent::CollStart {
             comm_id: self.comm_id,
             seq,
             coll,
             nbytes: logical_nbytes,
             cfg,
-            ts_ns: self.clock_ns as u64,
+            ts_ns: self.clock_ns() as u64,
         });
 
         // real data movement (possibly on a sampled prefix)
@@ -308,10 +370,11 @@ impl Communicator {
                 Algo::Ring => 0.0010,
                 Algo::Tree => 0.0012,
             };
-            modeled *= 1.0 + sigma * self.rng.gaussian();
+            let g = self.clock.rng.lock().unwrap().gaussian();
+            modeled *= 1.0 + sigma * g;
         }
         modeled += plugin_overhead_ns as f64;
-        self.clock_ns += modeled;
+        let now_ns = self.advance_clock(modeled);
 
         let busbw =
             coll.busbw_factor(self.topo.n_ranks) * logical_nbytes as f64 / modeled;
@@ -321,7 +384,7 @@ impl Communicator {
             coll,
             nbytes: logical_nbytes,
             cfg,
-            ts_ns: self.clock_ns as u64,
+            ts_ns: now_ns as u64,
             latency_ns: modeled as u64,
         });
 
@@ -329,13 +392,13 @@ impl Communicator {
     }
 
     /// AllReduce convenience (logical size = real size).
-    pub fn all_reduce(&mut self, bufs: &mut [Vec<f32>]) -> CollResult {
+    pub fn all_reduce(&self, bufs: &mut [Vec<f32>]) -> CollResult {
         let nbytes = bufs[0].len() * 4;
         self.run(CollType::AllReduce, bufs, nbytes)
     }
 
     /// AllGather convenience.
-    pub fn all_gather(&mut self, bufs: &mut [Vec<f32>]) -> CollResult {
+    pub fn all_gather(&self, bufs: &mut [Vec<f32>]) -> CollResult {
         let nbytes = bufs[0].len() * 4;
         self.run(CollType::AllGather, bufs, nbytes)
     }
@@ -365,7 +428,7 @@ mod tests {
 
     #[test]
     fn default_is_nvls_on_b300() {
-        let mut c = comm();
+        let c = comm();
         let (mut b, want) = bufs(8, 64);
         let r = c.all_reduce(&mut b);
         assert_eq!(r.cfg.algo, Algo::Nvls);
@@ -475,7 +538,7 @@ mod tests {
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut c = comm();
+        let c = comm();
         let (mut b, _) = bufs(8, 64);
         let mut prev = 0.0;
         for _ in 0..5 {
@@ -483,5 +546,34 @@ mod tests {
             assert!(c.clock_ns() > prev);
             prev = c.clock_ns();
         }
+    }
+
+    /// The tentpole contract: one communicator shared across threads —
+    /// `&self` dispatch, distinct sequence numbers, a monotonic clock,
+    /// and correct reductions on each thread's private buffers.
+    #[test]
+    fn concurrent_runs_share_one_communicator() {
+        let c = Arc::new(comm());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let (mut b, want) = bufs(8, 64);
+                let first = c.all_reduce(&mut b);
+                for (g, w) in b[0].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "thread {} reduction corrupt", t);
+                }
+                let mut seqs = vec![first.seq];
+                for _ in 0..49 {
+                    seqs.push(c.all_reduce(&mut b).seq);
+                }
+                seqs
+            }));
+        }
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 200, "sequence numbers must never be lost or duplicated");
+        assert!(c.clock_ns() > 0.0);
     }
 }

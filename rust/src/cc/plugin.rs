@@ -80,6 +80,15 @@ impl CostTable {
 }
 
 /// Tuner plugin (ncclTunerPlugin_v3-style, in-place cost table).
+///
+/// Concurrency contract: `get_coll_info` takes `&self` and the trait
+/// requires `Send + Sync` — one plugin instance may be shared by many
+/// communicators on many threads (the traffic engine drives exactly
+/// this shape). The cost table and channel slot are caller-owned
+/// per-decision scratch, so implementations need no locking to mutate
+/// them; any cross-decision state the plugin keeps must be internally
+/// synchronized (the BPF host uses lock-free program slots and typed
+/// maps for this).
 pub trait TunerPlugin: Send + Sync {
     fn name(&self) -> &str;
 

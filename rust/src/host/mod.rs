@@ -8,13 +8,14 @@ pub mod ctx;
 pub mod native;
 pub mod policydir;
 pub mod reload;
+pub mod traffic;
 
-use crate::bpf::program::{load_object, LoadedProgram};
+use crate::bpf::program::load_object;
 use crate::bpf::{LoadError, Map, MapRegistry, Object, ProgType};
 use crate::cc::net::NetHook;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
 use ctx::{NetContext, PolicyContext, ProfilerContext};
-use reload::ReloadSlot;
+use reload::{ProgGuard, ReloadSlot};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -182,10 +183,23 @@ impl NcclBpfHost {
                     self.invalid_outputs.fetch_add(1, Ordering::Relaxed);
                 }
                 // algorithm-only preference: pick that algorithm's
-                // cheapest protocol per the engine estimates
+                // cheapest protocol per the engine estimates. The seed's
+                // `partial_cmp().unwrap()` panicked on NaN; total_cmp is
+                // panic-free but orders negative NaN *below* every real
+                // cost, so NaN is first mapped to +inf — a NaN-cost
+                // entry (0.0/0.0, inf−inf in a cost model) must never
+                // beat a real one in either sign.
+                let key = |p: crate::cc::Proto| {
+                    let c = cost.get(a, p);
+                    if c.is_nan() {
+                        f32::INFINITY
+                    } else {
+                        c
+                    }
+                };
                 let best = crate::cc::proto::ALL_PROTOS
                     .iter()
-                    .min_by(|&&x, &&y| cost.get(a, x).partial_cmp(&cost.get(a, y)).unwrap())
+                    .min_by(|&&x, &&y| key(x).total_cmp(&key(y)))
                     .copied()
                     .unwrap();
                 cost.prefer(a, best);
@@ -251,8 +265,23 @@ impl NcclBpfHost {
     }
 
     /// Direct access to the loaded tuner program (ablation benches).
-    pub fn tuner_program(&self) -> Option<&LoadedProgram> {
+    /// The guard pins retired program versions while held — drop it
+    /// promptly on reload-heavy paths.
+    pub fn tuner_program(&self) -> Option<ProgGuard<'_>> {
         self.tuner.get()
+    }
+
+    /// Reclaim retired program versions on every hook slot (the
+    /// traffic engine calls this after a reload storm; swaps also
+    /// reclaim opportunistically).
+    pub fn reclaim_retired(&self) -> usize {
+        self.tuner.try_reclaim() + self.profiler.try_reclaim() + self.net.try_reclaim()
+    }
+
+    /// Retired-but-unreclaimed program versions across all hook slots
+    /// (observability for the reload-leak regression test).
+    pub fn retired_counts(&self) -> (usize, usize, usize) {
+        (self.tuner.retired_count(), self.profiler.retired_count(), self.net.retired_count())
     }
 }
 
@@ -362,6 +391,35 @@ done:
         host.tuner_decide(&args(1024), &mut cost, &mut ch);
         assert_eq!(cost.argmin(), None, "invalid ids must defer");
         assert_eq!(host.invalid_outputs.load(Ordering::Relaxed), 1);
+    }
+
+    /// Regression: a NaN cost-table entry (a cost model or future
+    /// plugin can produce one) must not panic the algorithm-only
+    /// output path — the seed's `partial_cmp().unwrap()` did.
+    #[test]
+    fn nan_cost_entry_does_not_panic_algorithm_only_policy() {
+        let host = NcclBpfHost::new();
+        // algorithm-only preference: protocol stays DEFER
+        host.install_asm("prog tuner algo_only\n  stw [r1+32], 1\n  mov64 r0, 0\n  exit\n")
+            .unwrap();
+        // positive NaN (0x7FC00000)
+        let mut cost = CostTable::all_sentinel();
+        cost.set(Algo::Tree, Proto::Ll, 100.0);
+        cost.set(Algo::Tree, Proto::Ll128, f32::NAN);
+        cost.set(Algo::Tree, Proto::Simple, 50.0);
+        let mut ch = 0;
+        assert!(host.tuner_decide(&args(1024), &mut cost, &mut ch));
+        // NaN never wins: the cheapest real protocol is preferred
+        assert_eq!(cost.argmin(), Some((Algo::Tree, Proto::Simple)));
+        // negative NaN (0xFFC00000 — what x86 SSE invalid ops produce):
+        // total_cmp alone would rank it below -inf, i.e. "cheapest"
+        let mut cost = CostTable::all_sentinel();
+        cost.set(Algo::Tree, Proto::Ll, 100.0);
+        cost.set(Algo::Tree, Proto::Ll128, -f32::NAN);
+        cost.set(Algo::Tree, Proto::Simple, 50.0);
+        assert!(host.tuner_decide(&args(1024), &mut cost, &mut ch));
+        assert_eq!(cost.argmin(), Some((Algo::Tree, Proto::Simple)));
+        assert_eq!(host.invalid_outputs.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -7,26 +7,88 @@
 //! verification fails, the swap is aborted and the old policy continues
 //! — the system never enters an unverified state.
 //!
-//! Reclamation: swapped-out programs are *retired*, not dropped, for
-//! the lifetime of the slot (the paper retains the old pointer "until
-//! in-flight calls drain"; retaining for the slot lifetime is the
-//! degenerate-but-safe version — a policy object is a few KiB and
-//! reloads are operator-initiated, so the retired list is small by
-//! construction).
+//! Reclamation: unpublished programs (swapped-out *or* cleared) are
+//! *retired* into a bounded list and reclaimed once a quiescent point
+//! is observed. Readers take a [`ProgGuard`] that bumps a per-thread
+//! reader stripe; each retired program is tagged with the unpublish
+//! epoch (a counter bumped by every swap and clear, *after* the
+//! pointer store), and a reclaim pass that loads the epoch and then
+//! sees every reader stripe at zero frees all entries with
+//! `entry epoch <= loaded epoch`. That is safe because all of these
+//! operations are SeqCst: if the reclaimer missed a reader's stripe
+//! increment, that increment — and therefore the reader's subsequent
+//! pointer load — comes after the reclaimer's stripe read, which comes
+//! after its epoch load, which (for any entry it may free) comes after
+//! the store that unpublished the entry; such a reader can only load
+//! the currently-published pointer, never the retiree. Under
+//! `--reload-every`-style continuous reload this keeps the retired
+//! list O(1) instead of growing one program per swap forever.
 
 use crate::bpf::LoadedProgram;
+use std::ops::Deref;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Number of reader-counter stripes. Readers pick a stripe by thread,
+/// so concurrent dispatchers on different threads do not ping-pong one
+/// cache line on the ns-scale hot path; the reclaimer checks them all.
+const READER_STRIPES: usize = 8;
+
+/// One stripe, padded to its own cache line.
+#[repr(align(64))]
+struct ReaderStripe(AtomicU64);
 
 /// One hot-swappable program slot (tuner / profiler / net each get one).
 pub struct ReloadSlot {
     active: AtomicPtr<LoadedProgram>,
-    /// keeps swapped-out programs alive (grace period = slot lifetime)
-    retired: Mutex<Vec<Arc<LoadedProgram>>>,
+    /// strong reference backing the published pointer
+    current: Mutex<Option<Arc<LoadedProgram>>>,
+    /// unpublished programs awaiting a quiescent point, tagged with the
+    /// unpublish epoch (the value of `epoch` after the swap/clear that
+    /// retired them)
+    retired: Mutex<Vec<(u64, Arc<LoadedProgram>)>>,
+    /// striped counters of readers currently holding a [`ProgGuard`]
+    readers: [ReaderStripe; READER_STRIPES],
+    /// unpublish events (swaps *and* clears) — the reclamation epoch.
+    /// Every retire tags its entry with the post-increment value, so a
+    /// reclaimer that can free the entry must have loaded `epoch` after
+    /// the unpublishing store in the SeqCst total order.
+    epoch: AtomicU64,
     /// number of successful swaps
     pub swaps: AtomicU64,
     /// last swap's CAS latency in ns (phase 3 only — the hot-path cost)
     pub last_swap_ns: AtomicU64,
+}
+
+/// A read guard for the active program. Holding it pins every retired
+/// program version (reclamation observes the reader stripes); dropping
+/// it re-arms reclamation. Dereferences to [`LoadedProgram`].
+pub struct ProgGuard<'a> {
+    stripe: &'a ReaderStripe,
+    prog: &'a LoadedProgram,
+}
+
+impl Deref for ProgGuard<'_> {
+    type Target = LoadedProgram;
+    #[inline]
+    fn deref(&self) -> &LoadedProgram {
+        self.prog
+    }
+}
+
+impl Drop for ProgGuard<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        self.stripe.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+thread_local! {
+    /// This thread's reader stripe index (assigned round-robin once).
+    static STRIPE: usize = {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        NEXT.fetch_add(1, Ordering::Relaxed) as usize % READER_STRIPES
+    };
 }
 
 impl Default for ReloadSlot {
@@ -39,24 +101,34 @@ impl ReloadSlot {
     pub fn new() -> ReloadSlot {
         ReloadSlot {
             active: AtomicPtr::new(std::ptr::null_mut()),
+            current: Mutex::new(None),
             retired: Mutex::new(Vec::new()),
+            readers: std::array::from_fn(|_| ReaderStripe(AtomicU64::new(0))),
+            epoch: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
             last_swap_ns: AtomicU64::new(0),
         }
     }
 
-    /// The currently active program, if any. Lock-free; this is on the
-    /// per-decision hot path.
+    /// The currently active program, if any. Lock-free (two atomic RMWs
+    /// on a per-thread stripe); this is on the per-decision hot path.
     #[inline]
-    pub fn get(&self) -> Option<&LoadedProgram> {
-        let p = self.active.load(Ordering::Acquire);
+    pub fn get(&self) -> Option<ProgGuard<'_>> {
+        let stripe = &self.readers[STRIPE.with(|s| *s)];
+        // SeqCst: the increment must be ordered before the pointer load
+        // in the global order the reclaimer participates in (see module
+        // docs); Acquire alone would allow the reclaimer to miss us.
+        stripe.0.fetch_add(1, Ordering::SeqCst);
+        let p = self.active.load(Ordering::SeqCst);
         if p.is_null() {
+            stripe.0.fetch_sub(1, Ordering::Release);
             None
         } else {
-            // SAFETY: pointers stored in `active` come from Arcs held in
-            // `retired` (or the live slot) and are never dropped while
-            // the slot exists.
-            Some(unsafe { &*p })
+            // SAFETY: a non-null published pointer is backed by the Arc
+            // in `current` or, once unpublished, by an entry in
+            // `retired` that cannot be reclaimed while our stripe
+            // increment is visible.
+            Some(ProgGuard { stripe, prog: unsafe { &*p } })
         }
     }
 
@@ -65,36 +137,73 @@ impl ReloadSlot {
     /// the CAS latency in ns.
     pub fn swap(&self, new: Arc<LoadedProgram>) -> u64 {
         let new_ptr = Arc::as_ptr(&new) as *mut LoadedProgram;
-        // keep the Arc alive before publishing the raw pointer
-        self.retired.lock().unwrap().push(new);
+        // serialize swappers; readers never take this lock
+        let mut cur = self.current.lock().unwrap();
         let t0 = std::time::Instant::now();
         // CAS loop (paper: "atomically swaps the function pointer via
         // compare-and-swap"); under concurrent reloaders last-wins.
-        let mut cur = self.active.load(Ordering::Relaxed);
+        let mut seen = self.active.load(Ordering::Relaxed);
         loop {
             match self.active.compare_exchange_weak(
-                cur,
+                seen,
                 new_ptr,
-                Ordering::AcqRel,
+                Ordering::SeqCst,
                 Ordering::Relaxed,
             ) {
                 Ok(_) => break,
-                Err(seen) => cur = seen,
+                Err(p) => seen = p,
             }
         }
         let ns = t0.elapsed().as_nanos() as u64;
+        // the epoch bump must come after the unpublishing CAS (program
+        // order, both SeqCst): a reclaimer whose epoch load covers this
+        // retire therefore also observed the CAS
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
         self.swaps.fetch_add(1, Ordering::Relaxed);
+        let prev = cur.replace(new);
+        drop(cur);
+        if let Some(old) = prev {
+            self.retired.lock().unwrap().push((epoch, old));
+        }
         self.last_swap_ns.store(ns, Ordering::Relaxed);
+        self.try_reclaim();
         ns
     }
 
-    /// Deactivate (no policy). The old program is retained like any
-    /// other retired program.
+    /// Deactivate (no policy). The old program is retired like any
+    /// swapped-out version. Clears bump the same unpublish epoch as
+    /// swaps — tagging the retiree with a *stale* epoch would let a
+    /// reclaimer that pre-loaded the epoch free it while a concurrent
+    /// reader still holds it.
     pub fn clear(&self) {
-        self.active.store(std::ptr::null_mut(), Ordering::Release);
+        let mut cur = self.current.lock().unwrap();
+        self.active.store(std::ptr::null_mut(), Ordering::SeqCst);
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        let prev = cur.take();
+        drop(cur);
+        if let Some(old) = prev {
+            self.retired.lock().unwrap().push((epoch, old));
+        }
+        self.try_reclaim();
     }
 
-    /// Number of retired (still-alive) program versions.
+    /// Free retired programs that no reader can still hold: if no
+    /// guard is outstanding *now*, every program retired at or before
+    /// the current unpublish epoch is unreachable (any later reader
+    /// loads the currently published pointer). Returns how many were
+    /// freed.
+    pub fn try_reclaim(&self) -> usize {
+        let quiescent_epoch = self.epoch.load(Ordering::SeqCst);
+        if self.readers.iter().any(|s| s.0.load(Ordering::SeqCst) != 0) {
+            return 0;
+        }
+        let mut retired = self.retired.lock().unwrap();
+        let before = retired.len();
+        retired.retain(|(e, _)| *e > quiescent_epoch);
+        before - retired.len()
+    }
+
+    /// Number of retired (still-alive, not-yet-reclaimed) versions.
     pub fn retired_count(&self) -> usize {
         self.retired.lock().unwrap().len()
     }
@@ -121,16 +230,71 @@ mod tests {
     }
 
     #[test]
-    fn swap_installs_and_retires() {
+    fn swap_installs_and_reclaims_when_quiescent() {
         let s = ReloadSlot::new();
         s.swap(prog(1));
         assert_eq!(s.get().unwrap().run(std::ptr::null_mut()), 1);
         s.swap(prog(2));
         assert_eq!(s.get().unwrap().run(std::ptr::null_mut()), 2);
         assert_eq!(s.swaps.load(Ordering::Relaxed), 2);
-        assert_eq!(s.retired_count(), 2);
+        // no reader was live across the second swap: the retired p1 was
+        // reclaimed by the post-swap quiescence check
+        assert_eq!(s.retired_count(), 0);
         s.clear();
         assert!(s.get().is_none());
+    }
+
+    /// The leak this PR fixes: continuous reload must not grow the
+    /// retired list one program per swap.
+    #[test]
+    fn retired_list_stays_bounded_under_continuous_reload() {
+        let s = ReloadSlot::new();
+        for i in 0..200 {
+            s.swap(prog(100 + (i % 50)));
+            assert!(
+                s.retired_count() <= 1,
+                "retired list grew to {} after swap {}",
+                s.retired_count(),
+                i
+            );
+        }
+        assert_eq!(s.retired_count(), 0);
+    }
+
+    /// A held guard must pin the program it reads even across swaps,
+    /// and release reclamation when dropped.
+    #[test]
+    fn guard_blocks_reclaim_until_dropped() {
+        let s = ReloadSlot::new();
+        s.swap(prog(7));
+        let g = s.get().unwrap();
+        s.swap(prog(8));
+        // the old program is retired but must survive: `g` still reads it
+        assert_eq!(s.retired_count(), 1);
+        assert_eq!(g.run(std::ptr::null_mut()), 7);
+        drop(g);
+        assert_eq!(s.try_reclaim(), 1);
+        assert_eq!(s.retired_count(), 0);
+        assert_eq!(s.get().unwrap().run(std::ptr::null_mut()), 8);
+    }
+
+    /// Regression for the clear-path epoch bug: `clear()` must tag the
+    /// retiree with a *fresh* unpublish epoch, so a reclaimer that
+    /// sampled the epoch before the clear can never free a program a
+    /// live guard still dereferences.
+    #[test]
+    fn guard_survives_clear_and_reclaim() {
+        let s = ReloadSlot::new();
+        s.swap(prog(9));
+        let g = s.get().unwrap();
+        s.clear(); // unpublishes while `g` is held
+        assert!(s.get().is_none());
+        assert_eq!(s.retired_count(), 1);
+        assert_eq!(g.run(std::ptr::null_mut()), 9, "guard must keep the program alive");
+        assert_eq!(s.try_reclaim(), 0, "live reader must block reclamation");
+        drop(g);
+        assert_eq!(s.try_reclaim(), 1);
+        assert_eq!(s.retired_count(), 0);
     }
 
     #[test]
@@ -144,7 +308,9 @@ mod tests {
 
     /// The paper's §5.2 property in miniature: continuous invocations
     /// during concurrent reloads observe zero lost calls — every call
-    /// sees either the old or the new policy, never a torn state.
+    /// sees either the old or the new policy, never a torn state — and
+    /// reclamation running underneath never frees a program a reader
+    /// still holds.
     #[test]
     fn no_lost_calls_under_concurrent_reload() {
         let s = Arc::new(ReloadSlot::new());
@@ -176,5 +342,8 @@ mod tests {
         assert!(calls > 0);
         assert!(distinct >= 1);
         assert_eq!(s.swaps.load(Ordering::Relaxed), 50);
+        // quiescent now: everything retired must be reclaimable
+        s.try_reclaim();
+        assert_eq!(s.retired_count(), 0);
     }
 }

@@ -1,0 +1,458 @@
+//! Concurrent multi-communicator traffic engine.
+//!
+//! The paper's headline numbers (Table 1, §5.2) are single-communicator,
+//! single-thread measurements; production deployments run many
+//! communicators per process. This module makes that shape a
+//! first-class, *checked* scenario: N [`Communicator`]s spread over N OS
+//! threads share one [`NcclBpfHost`] (one [`crate::bpf::MapRegistry`],
+//! one set of reload slots), a workload generator drives mixed
+//! collectives with per-communicator seeds, and an optional reloader
+//! thread hot-swaps the tuner policy mid-traffic.
+//!
+//! What is shared vs per-communicator:
+//! - **shared**: the host (program slots, maps, counters) — every hook
+//!   dispatch is `&self` and lock-free.
+//! - **per-communicator**: the modeled clock, sequence numbers, warmup
+//!   state, jitter RNG (all inside [`Communicator`]) and the rank
+//!   buffers (owned by the worker thread).
+//!
+//! Invariants checked on every run (violations are returned, not
+//! asserted, so the CLI can exit non-zero):
+//! 1. **no lost decisions** — the host's `decisions` counter equals the
+//!    number of collectives issued (every op consults the tuner).
+//! 2. **no torn policy reads** — the two tuner variants write
+//!    recognizably distinct (algorithm, protocol, channels) tuples;
+//!    every decision must observe exactly one variant's tuple, never a
+//!    mix of both.
+//! 3. **map totals consistent with per-thread counts** — the tuner and
+//!    profiler policies each bump a per-cpu counter map on the worker's
+//!    pinned slot; the host-side all-slot aggregation
+//!    ([`crate::bpf::Map::read_u64_all`]) must equal the op total.
+//! 4. **no unbounded retirement** — after the reload storm quiesces,
+//!    the retired-program lists reclaim down to zero.
+
+use crate::bpf::maps::pin_thread_cpu_slot;
+use crate::bpf::maps::NCPU;
+use crate::cc::{Algo, CollType, Communicator, DataMode, Proto, Topology};
+use crate::host::{BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
+use crate::util::{percentile, Rng};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The two tuner variants the reloader alternates between. Each bumps
+/// `traffic_hits[0]` on its per-cpu slot and writes a marker output
+/// tuple; the tuples share no field values, so a decision that mixes
+/// them is a torn read.
+const TUNER_VARIANT_A: &str = r#"
+map traffic_hits percpu key=4 value=8 entries=1
+
+prog tuner traffic_a
+  mov64 r6, r1
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, traffic_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  ldxdw r3, [r0+0]
+  add64 r3, 1
+  stxdw [r0+0], r3
+out:
+  stw   [r6+32], 0        ; algorithm = RING
+  stw   [r6+36], 2        ; protocol  = SIMPLE
+  stw   [r6+40], 7        ; n_channels
+  mov64 r0, 0
+  exit
+"#;
+
+const TUNER_VARIANT_B: &str = r#"
+map traffic_hits percpu key=4 value=8 entries=1
+
+prog tuner traffic_b
+  mov64 r6, r1
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, traffic_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  ldxdw r3, [r0+0]
+  add64 r3, 1
+  stxdw [r0+0], r3
+out:
+  stw   [r6+32], 1        ; algorithm = TREE
+  stw   [r6+36], 0        ; protocol  = LL
+  stw   [r6+40], 13       ; n_channels
+  mov64 r0, 0
+  exit
+"#;
+
+/// Profiler policy: one per-cpu counter bump per CollEnd event.
+const PROFILER_COUNTER: &str = r#"
+map prof_hits percpu key=4 value=8 entries=1
+
+prog profiler traffic_prof
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, prof_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  ldxdw r3, [r0+0]
+  add64 r3, 1
+  stxdw [r0+0], r3
+out:
+  mov64 r0, 0
+  exit
+"#;
+
+/// Knobs for one traffic run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficOpts {
+    /// total communicators (spread round-robin over the threads)
+    pub comms: usize,
+    /// OS threads (clamped to `comms`; per-cpu-exact checks need ≤ 16)
+    pub threads: usize,
+    /// collective ops issued per communicator
+    pub ops_per_comm: usize,
+    /// hot-reload the tuner every this many ms (None: no reloads)
+    pub reload_every_ms: Option<u64>,
+    /// master seed; per-communicator generators derive from it
+    pub seed: u64,
+    /// ranks per communicator
+    pub ranks: usize,
+}
+
+impl Default for TrafficOpts {
+    fn default() -> Self {
+        TrafficOpts {
+            comms: 4,
+            threads: 4,
+            ops_per_comm: 10_000,
+            reload_every_ms: Some(50),
+            seed: 0x7a_ff1c,
+            ranks: 4,
+        }
+    }
+}
+
+/// Per-worker-thread statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ThreadStats {
+    pub thread: usize,
+    pub comms: usize,
+    pub ops: u64,
+    /// decisions observing variant A's tuple / variant B's tuple
+    pub variant_a: u64,
+    pub variant_b: u64,
+    pub torn: u64,
+    pub bytes_moved: u64,
+    /// per-decision host overhead samples (ns)
+    pub decision_ns: Vec<f64>,
+}
+
+/// Outcome of one traffic run.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficReport {
+    pub threads: usize,
+    pub comms: usize,
+    pub total_ops: u64,
+    pub total_decisions: u64,
+    pub reloads: u64,
+    pub wall_ns: u64,
+    pub decisions_per_sec: f64,
+    pub p50_decision_ns: f64,
+    pub p99_decision_ns: f64,
+    pub mean_decision_ns: f64,
+    /// all-slot sums of the policy counter maps
+    pub tuner_map_hits: u64,
+    pub prof_map_hits: u64,
+    /// invariant violations (empty == clean run)
+    pub violations: Vec<String>,
+    pub per_thread: Vec<ThreadStats>,
+}
+
+/// Drive `opts.comms` communicators over `opts.threads` threads against
+/// one shared host, with the reloader swapping tuner variants
+/// mid-traffic, and check the engine invariants.
+pub fn run_traffic(opts: &TrafficOpts) -> TrafficReport {
+    let host = Arc::new(NcclBpfHost::new());
+    host.install_asm(TUNER_VARIANT_A).expect("traffic tuner variant A must verify");
+    host.install_asm(PROFILER_COUNTER).expect("traffic profiler must verify");
+    run_traffic_on(host, opts)
+}
+
+/// Same as [`run_traffic`] but against a caller-provided host that
+/// already has the traffic tuner + profiler installed — for callers
+/// that want to pre-condition the host (e.g. the reload-storm
+/// regression test) or inspect it after the run. Counters are read as
+/// deltas, so a host that has already served traffic is fine.
+pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficReport {
+    let threads = opts.threads.clamp(1, opts.comms.max(1));
+    let comms = opts.comms.max(1);
+    let ops_per_comm = opts.ops_per_comm.max(1);
+
+    let decisions_before = host.decisions.load(Ordering::Relaxed);
+    let prof_before = host.prof_events.load(Ordering::Relaxed);
+    let invalid_before = host.invalid_outputs.load(Ordering::Relaxed);
+    let tuner_hits_before =
+        host.map("traffic_hits").and_then(|m| m.read_u64_all(0)).unwrap_or(0);
+    let prof_hits_before = host.map("prof_hits").and_then(|m| m.read_u64_all(0)).unwrap_or(0);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let reloads = Arc::new(AtomicU64::new(0));
+
+    // reloader: alternate tuner variants until the workers finish
+    let reloader = opts.reload_every_ms.map(|every_ms| {
+        let host = host.clone();
+        let stop = stop.clone();
+        let reloads = reloads.clone();
+        std::thread::spawn(move || {
+            let mut flip = false;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(every_ms.max(1)));
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let src = if flip { TUNER_VARIANT_A } else { TUNER_VARIANT_B };
+                flip = !flip;
+                host.install_asm(src).expect("traffic reload must verify");
+                reloads.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    });
+
+    let t0 = Instant::now();
+    let mut workers = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let host = host.clone();
+        let opts = *opts;
+        // communicators t, t+threads, t+2*threads, ... belong to worker t
+        let my_comms = (t..comms).step_by(threads).count();
+        workers.push(std::thread::spawn(move || {
+            worker_loop(t, my_comms, ops_per_comm, &host, &opts)
+        }));
+    }
+    let per_thread: Vec<ThreadStats> =
+        workers.into_iter().map(|h| h.join().expect("traffic worker panicked")).collect();
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = reloader {
+        h.join().expect("reloader panicked");
+    }
+    host.reclaim_retired();
+
+    // -- aggregate + invariant checks ----------------------------------------
+    let total_ops: u64 = per_thread.iter().map(|s| s.ops).sum();
+    let total_decisions = host.decisions.load(Ordering::Relaxed) - decisions_before;
+    let prof_events = host.prof_events.load(Ordering::Relaxed) - prof_before;
+    let tuner_map_hits = host
+        .map("traffic_hits")
+        .and_then(|m| m.read_u64_all(0))
+        .unwrap_or(0)
+        .wrapping_sub(tuner_hits_before);
+    let prof_map_hits = host
+        .map("prof_hits")
+        .and_then(|m| m.read_u64_all(0))
+        .unwrap_or(0)
+        .wrapping_sub(prof_hits_before);
+
+    let mut violations = Vec::new();
+    if total_decisions != total_ops {
+        violations.push(format!(
+            "lost decisions: {} ops issued but host counted {}",
+            total_ops, total_decisions
+        ));
+    }
+    if prof_events != total_ops {
+        violations.push(format!(
+            "lost profiler events: {} ops issued but host counted {}",
+            total_ops, prof_events
+        ));
+    }
+    let torn: u64 = per_thread.iter().map(|s| s.torn).sum();
+    if torn != 0 {
+        violations.push(format!("torn policy reads: {}", torn));
+    }
+    // per-cpu slot sums are exact only while every worker has its own slot
+    if threads <= NCPU {
+        if tuner_map_hits != total_ops {
+            violations.push(format!(
+                "tuner map total {} != per-thread op total {}",
+                tuner_map_hits, total_ops
+            ));
+        }
+        if prof_map_hits != total_ops {
+            violations.push(format!(
+                "profiler map total {} != per-thread op total {}",
+                prof_map_hits, total_ops
+            ));
+        }
+    }
+    let (rt, rp, rn) = host.retired_counts();
+    if rt + rp + rn > 2 {
+        violations.push(format!(
+            "retired programs not reclaimed after quiescence: tuner={} profiler={} net={}",
+            rt, rp, rn
+        ));
+    }
+    let invalid = host.invalid_outputs.load(Ordering::Relaxed) - invalid_before;
+    if invalid != 0 {
+        violations.push(format!("policies produced {} invalid outputs", invalid));
+    }
+
+    let mut all_ns: Vec<f64> = Vec::with_capacity(total_ops as usize);
+    for s in &per_thread {
+        all_ns.extend_from_slice(&s.decision_ns);
+    }
+    let wall_s = (wall_ns as f64 / 1e9).max(1e-9);
+    TrafficReport {
+        threads,
+        comms,
+        total_ops,
+        total_decisions,
+        reloads: reloads.load(Ordering::Relaxed),
+        wall_ns,
+        decisions_per_sec: total_ops as f64 / wall_s,
+        p50_decision_ns: percentile(&all_ns, 50.0),
+        p99_decision_ns: percentile(&all_ns, 99.0),
+        mean_decision_ns: all_ns.iter().sum::<f64>() / all_ns.len().max(1) as f64,
+        tuner_map_hits,
+        prof_map_hits,
+        violations,
+        per_thread,
+    }
+}
+
+/// One worker: own communicators, own buffers, shared host.
+fn worker_loop(
+    thread_idx: usize,
+    n_comms: usize,
+    ops_per_comm: usize,
+    host: &Arc<NcclBpfHost>,
+    opts: &TrafficOpts,
+) -> ThreadStats {
+    // distinct per-cpu slot => this worker's counter bumps are
+    // single-writer and the all-slot sum is exact (threads <= NCPU)
+    pin_thread_cpu_slot(thread_idx);
+
+    let ranks = opts.ranks.max(2);
+    let mut comms = Vec::with_capacity(n_comms);
+    for c in 0..n_comms {
+        let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
+        comm.reseed(opts.seed ^ ((thread_idx as u64) << 32) ^ c as u64);
+        comm.data_mode = DataMode::Sampled(4 << 10);
+        comm.prewarm_all();
+        comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+        comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+        comms.push(comm);
+    }
+    let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|r| vec![r as f32 + 1.0; 1 << 10]).collect();
+
+    let mut rng = Rng::new(opts.seed.wrapping_mul(0x9e37).wrapping_add(thread_idx as u64));
+    let mut stats = ThreadStats {
+        thread: thread_idx,
+        comms: n_comms,
+        decision_ns: Vec::with_capacity(n_comms * ops_per_comm),
+        ..Default::default()
+    };
+    for _ in 0..ops_per_comm {
+        for comm in &comms {
+            // mixed collectives, log-uniform logical sizes 4 KiB..4 MiB
+            let coll = match rng.below(100) {
+                0..=59 => CollType::AllReduce,
+                60..=84 => CollType::AllGather,
+                _ => CollType::ReduceScatter,
+            };
+            let logical = (4usize << 10) << rng.below(11);
+            let res = comm.run(coll, &mut bufs, logical);
+            stats.ops += 1;
+            stats.bytes_moved += res.stats.bytes_moved;
+            stats.decision_ns.push(res.plugin_overhead_ns as f64);
+            // torn-read check: the observed config must be exactly one
+            // variant's marker tuple
+            let tuple = (res.cfg.algo, res.cfg.proto, res.cfg.nchannels);
+            match tuple {
+                (Algo::Ring, Proto::Simple, 7) => stats.variant_a += 1,
+                (Algo::Tree, Proto::Ll, 13) => stats.variant_b += 1,
+                _ => stats.torn += 1,
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(threads: usize, comms: usize, reload: Option<u64>) -> TrafficOpts {
+        TrafficOpts {
+            comms,
+            threads,
+            ops_per_comm: 400,
+            reload_every_ms: reload,
+            seed: 0x5eed,
+            ranks: 2,
+        }
+    }
+
+    #[test]
+    fn traffic_single_thread_clean() {
+        let rep = run_traffic(&small(1, 1, None));
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.total_ops, 400);
+        assert_eq!(rep.total_decisions, 400);
+        assert_eq!(rep.tuner_map_hits, 400);
+        assert_eq!(rep.prof_map_hits, 400);
+        assert!(rep.decisions_per_sec > 0.0);
+        assert!(rep.p99_decision_ns >= rep.p50_decision_ns);
+        // no reloads requested: every decision saw variant A
+        assert_eq!(rep.per_thread[0].variant_a, 400);
+        assert_eq!(rep.per_thread[0].variant_b, 0);
+    }
+
+    #[test]
+    fn traffic_multi_thread_with_reloads_clean() {
+        let rep = run_traffic(&small(4, 4, Some(2)));
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.total_ops, 1600);
+        assert_eq!(rep.total_decisions, 1600);
+        assert_eq!(rep.tuner_map_hits, 1600);
+        assert_eq!(rep.per_thread.len(), 4);
+        for s in &rep.per_thread {
+            assert_eq!(s.ops, 400);
+            assert_eq!(s.torn, 0);
+            assert_eq!(s.variant_a + s.variant_b, s.ops);
+        }
+    }
+
+    #[test]
+    fn traffic_more_comms_than_threads() {
+        let rep = run_traffic(&small(2, 6, None));
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.total_ops, 6 * 400);
+        let per_thread_comms: Vec<usize> = rep.per_thread.iter().map(|s| s.comms).collect();
+        assert_eq!(per_thread_comms, vec![3, 3]);
+    }
+
+    /// The reload storm must not leak retired programs (ties the
+    /// bounded-retirement fix to the engine: 50+ reloads, then zero
+    /// retained versions once quiescent).
+    #[test]
+    fn traffic_reload_storm_reclaims_programs() {
+        let host = Arc::new(NcclBpfHost::new());
+        host.install_asm(TUNER_VARIANT_A).unwrap();
+        host.install_asm(PROFILER_COUNTER).unwrap();
+        for i in 0..60 {
+            let src = if i % 2 == 0 { TUNER_VARIANT_B } else { TUNER_VARIANT_A };
+            host.install_asm(src).unwrap();
+        }
+        let rep = run_traffic_on(host.clone(), &small(2, 2, Some(1)));
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        host.reclaim_retired();
+        let (rt, rp, rn) = host.retired_counts();
+        assert_eq!((rt, rp, rn), (0, 0, 0), "retired programs must be reclaimed");
+    }
+}

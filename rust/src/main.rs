@@ -8,6 +8,9 @@
 //!   train [--ranks 4 ...]       DDP training with the policy attached
 //!   safety                      run the §5.2 accept/reject suite
 //!   hotreload                   demonstrate atomic policy swap
+//!   traffic [--comms N --threads N --ops K --reload-every MS]
+//!                               concurrent multi-communicator traffic
+//!                               engine with invariant checks
 //!   bench [--out DIR] [--quick] run the paper-shaped measurement suite
 //!                               and write BENCH_<name>.json files
 
@@ -32,10 +35,12 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("safety") => cmd_safety(),
         Some("hotreload") => cmd_hotreload(),
+        Some("traffic") => cmd_traffic(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: ncclbpf <verify|disasm|allreduce|sweep|train|safety|hotreload|bench> \
+                "usage: ncclbpf \
+                 <verify|disasm|allreduce|sweep|train|safety|hotreload|traffic|bench> \
                  [flags]\n\
                  see README.md for examples"
             );
@@ -218,6 +223,57 @@ fn cmd_safety() -> i32 {
     }
     println!("safety suite: all 7 safe accepted, all 7 unsafe rejected");
     0
+}
+
+fn cmd_traffic(args: &Args) -> i32 {
+    let opts = ncclbpf::host::traffic::TrafficOpts {
+        comms: args.flag_usize("comms", 4),
+        threads: args.flag_usize("threads", 4),
+        ops_per_comm: args.flag_usize("ops", 10_000),
+        reload_every_ms: args.flag("reload-every").and_then(|v| v.parse().ok()),
+        seed: args
+            .flag("seed")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(ncclbpf::host::traffic::TrafficOpts::default().seed),
+        ranks: args.flag_usize("ranks", 4),
+    };
+    println!(
+        "traffic: {} comms on {} threads, {} ops/comm, reload every {:?} ms",
+        opts.comms, opts.threads, opts.ops_per_comm, opts.reload_every_ms
+    );
+    let rep = ncclbpf::host::traffic::run_traffic(&opts);
+    for s in &rep.per_thread {
+        println!(
+            "  thread {}: {} comms, {} ops, variant A/B {}/{}, {} moved",
+            s.thread,
+            s.comms,
+            s.ops,
+            s.variant_a,
+            s.variant_b,
+            fmt_size(s.bytes_moved as usize),
+        );
+    }
+    println!(
+        "total: {} ops, {} decisions, {} reloads, {:.0} decisions/s \
+         (decision p50 {:.0} ns, p99 {:.0} ns) in {:.1} ms",
+        rep.total_ops,
+        rep.total_decisions,
+        rep.reloads,
+        rep.decisions_per_sec,
+        rep.p50_decision_ns,
+        rep.p99_decision_ns,
+        rep.wall_ns as f64 / 1e6,
+    );
+    if rep.violations.is_empty() {
+        println!("invariant violations: 0");
+        0
+    } else {
+        for v in &rep.violations {
+            eprintln!("INVARIANT VIOLATION: {}", v);
+        }
+        eprintln!("invariant violations: {}", rep.violations.len());
+        1
+    }
 }
 
 fn cmd_bench(args: &Args) -> i32 {

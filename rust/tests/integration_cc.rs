@@ -57,7 +57,7 @@ fn allreduce_matrix_all_configs_identical_result() {
 #[test]
 fn odd_rank_counts() {
     for n in [2usize, 3, 5, 7] {
-        let mut comm = Communicator::new(Topology::nvlink_b300(n.max(2)));
+        let comm = Communicator::new(Topology::nvlink_b300(n.max(2)));
         let (mut b, want) = bufs(comm.topo.n_ranks, 321, 9);
         comm.run_fixed(
             CollType::AllReduce,
@@ -126,7 +126,7 @@ fn plugin_overhead_measured_and_small() {
 
 #[test]
 fn all_collective_types_execute() {
-    let mut comm = Communicator::new(Topology::nvlink_b300(4));
+    let comm = Communicator::new(Topology::nvlink_b300(4));
     for coll in [
         CollType::AllReduce,
         CollType::AllGather,

@@ -113,6 +113,36 @@ fn hotreload_demo_runs() {
     assert!(stdout(&o).contains("hot-reloaded"), "{}", stdout(&o));
 }
 
+/// The acceptance gate for the concurrent traffic engine: a 4-comm /
+/// 4-thread run with hot-reloads firing mid-traffic must finish with
+/// zero invariant violations (no lost decisions, no torn policy reads,
+/// map totals consistent with per-thread counts).
+#[test]
+fn traffic_engine_concurrent_reload_zero_violations() {
+    let o = run(&[
+        "traffic",
+        "--comms",
+        "4",
+        "--threads",
+        "4",
+        "--ops",
+        "2500",
+        "--reload-every",
+        "5",
+    ]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("invariant violations: 0"), "{}", out);
+    assert!(out.contains("total: 10000 ops, 10000 decisions"), "{}", out);
+}
+
+#[test]
+fn traffic_engine_without_reloads() {
+    let o = run(&["traffic", "--comms", "2", "--threads", "2", "--ops", "500"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    assert!(stdout(&o).contains("invariant violations: 0"), "{}", stdout(&o));
+}
+
 #[test]
 fn bench_writes_parseable_json_with_median_p99() {
     let dir = std::env::temp_dir().join("ncclbpf_cli_bench");
@@ -134,6 +164,7 @@ fn bench_writes_parseable_json_with_median_p99() {
         ("BENCH_table1_overhead.json", 10),
         ("BENCH_fig2_allreduce.json", 16),
         ("BENCH_hotreload.json", 4),
+        ("BENCH_traffic.json", 8),
     ] {
         let path = dir.join(file);
         let text = std::fs::read_to_string(&path)

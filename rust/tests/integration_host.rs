@@ -29,7 +29,7 @@ fn small_bufs(n: usize) -> Vec<Vec<f32>> {
 fn ring_mid_v2_policy_steers_engine() {
     let host = Arc::new(NcclBpfHost::new());
     host.install_object(&policydir::build_named("nvlink_ring_mid_v2").unwrap()).unwrap();
-    let mut comm = engine(&host);
+    let comm = engine(&host);
     let mut b = small_bufs(8);
 
     let r = comm.run(CollType::AllReduce, &mut b, 8 << 20);
@@ -52,7 +52,7 @@ fn ring_mid_v2_policy_steers_engine() {
 fn policy_improves_midrange_throughput() {
     let host = Arc::new(NcclBpfHost::new());
     host.install_object(&policydir::build_named("nvlink_ring_mid_v2").unwrap()).unwrap();
-    let mut with_policy = engine(&host);
+    let with_policy = engine(&host);
     let mut baseline = Communicator::new(Topology::nvlink_b300(8));
     baseline.jitter = false;
     baseline.data_mode = DataMode::Sampled(16 << 10);
@@ -84,7 +84,7 @@ fn closed_loop_three_phases() {
     let host = Arc::new(NcclBpfHost::new());
     host.install_object(&policydir::build_named("record_latency").unwrap()).unwrap();
     host.install_object(&policydir::build_named("adaptive_channels").unwrap()).unwrap();
-    let mut comm = engine(&host);
+    let comm = engine(&host);
     let mut b = small_bufs(8);
     let size = 16 << 20;
 
@@ -204,7 +204,7 @@ fn net_wrapper_counts_real_socket_traffic() {
 fn bad_channels_passes_verifier_but_collapses_throughput() {
     let host = Arc::new(NcclBpfHost::new());
     host.install_object(&policydir::build_named("bad_channels").unwrap()).unwrap();
-    let mut comm = engine(&host);
+    let comm = engine(&host);
     let mut baseline = Communicator::new(Topology::nvlink_b300(8));
     baseline.jitter = false;
     baseline.data_mode = DataMode::Sampled(16 << 10);

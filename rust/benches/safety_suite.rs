@@ -1,7 +1,8 @@
-//! §5.2 safety: 14 programs against the verifier — 7 safe policies
-//! accepted, 7 unsafe programs (one per bug class) rejected at load
-//! time with actionable messages. Also reproduces the paper's
-//! native-vs-eBPF null-deref contrast.
+//! §5.2 safety: the full corpus against the verifier — every safe
+//! policy accepted, every unsafe program (one per bug class, including
+//! the ringbuf reference-tracking classes) rejected at load time with
+//! actionable messages. Also reproduces the paper's native-vs-eBPF
+//! null-deref contrast.
 
 use ncclbpf::host::{policydir, NcclBpfHost};
 use std::time::Instant;
@@ -10,7 +11,11 @@ fn main() {
     let host = NcclBpfHost::new();
     let mut verify_times = vec![];
 
-    println!("§5.2 — verifier suite (7 safe + 7 unsafe programs)");
+    println!(
+        "§5.2 — verifier suite ({} safe + {} unsafe programs)",
+        policydir::SAFE_POLICIES.len(),
+        policydir::UNSAFE_POLICIES.len()
+    );
     println!();
     println!("safe policies:");
     for name in policydir::SAFE_POLICIES {

@@ -1,0 +1,33 @@
+/* latency_events — structured event streaming (the observability layer
+ * the scalar latency_map cannot provide): on every collective-end
+ * event, emit a 32-byte latency record into the `events` ring buffer.
+ * A host consumer (`ncclbpf trace`, or the closed-loop driver feeding
+ * latency_map for the adaptive_channels tuner) drains it live with
+ * drop accounting — drained + dropped always equals events emitted.
+ *
+ * Field order is ABI, mirrored by host::ringbuf::RbEvent.
+ */
+
+struct rb_event {
+    __u32 comm_id;
+    __u32 coll_type;
+    __u64 msg_size;
+    __u64 latency_ns;
+    __u32 n_channels;
+    __u32 seq;
+};
+
+BPF_RINGBUF(events, 65536);
+
+SEC("profiler")
+int latency_events(struct profiler_context *ctx) {
+    struct rb_event ev = {};
+    ev.comm_id = ctx->comm_id;
+    ev.coll_type = ctx->coll_type;
+    ev.msg_size = ctx->msg_size;
+    ev.latency_ns = ctx->latency_ns;
+    ev.n_channels = ctx->n_channels;
+    ev.seq = ctx->seq;
+    bpf_ringbuf_output(&events, &ev, 32, 0);
+    return 0;
+}

@@ -1,0 +1,19 @@
+; ringbuf_leak — bug class 8 (reference tracking): reserve a ring
+; record and exit without submitting or discarding it. In a native
+; plugin the BUSY record would wedge the consumer forever (head-of-line
+; blocking on a record nobody will complete); the verifier rejects the
+; leaking path at load time.
+
+map events ringbuf entries=4096
+
+prog profiler ringbuf_leak
+  ldmap r1, events
+  mov64 r2, 16
+  mov64 r3, 0
+  call  bpf_ringbuf_reserve
+  jeq   r0, 0, out
+  stdw  [r0+0], 1         ; write into the record...
+  ; BUG: no bpf_ringbuf_submit / bpf_ringbuf_discard on this path
+out:
+  mov64 r0, 0
+  exit

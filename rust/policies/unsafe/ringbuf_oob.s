@@ -1,0 +1,20 @@
+; ringbuf_oob — bug class 10 (reference tracking): write past the
+; statically reserved record size. The reservation was 16 bytes; the
+; 8-byte store at offset 12 reaches bytes [12,20) — in a native plugin
+; that corrupts the next record's header. Rejected at load time.
+
+map events ringbuf entries=4096
+
+prog profiler ringbuf_oob
+  ldmap r1, events
+  mov64 r2, 16
+  mov64 r3, 0
+  call  bpf_ringbuf_reserve
+  jeq   r0, 0, out
+  stdw  [r0+12], 1        ; BUG: exceeds the 16 reserved bytes
+  mov64 r1, r0
+  mov64 r2, 0
+  call  bpf_ringbuf_submit
+out:
+  mov64 r0, 0
+  exit

@@ -1,0 +1,22 @@
+; ringbuf_use_after_submit — bug class 9 (reference tracking): read a
+; ring record after bpf_ringbuf_submit released it. Once submitted the
+; consumer may read (and the ring may recycle) those bytes at any time;
+; the verifier poisons every copy of the pointer at the release point.
+
+map events ringbuf entries=4096
+
+prog profiler ringbuf_use_after_submit
+  ldmap r1, events
+  mov64 r2, 16
+  mov64 r3, 0
+  call  bpf_ringbuf_reserve
+  jeq   r0, 0, out
+  mov64 r6, r0
+  stdw  [r6+0], 7
+  mov64 r1, r6
+  mov64 r2, 0
+  call  bpf_ringbuf_submit
+  ldxdw r3, [r6+0]        ; BUG: record already handed to the consumer
+out:
+  mov64 r0, 0
+  exit

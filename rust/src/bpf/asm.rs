@@ -230,13 +230,18 @@ pub fn assemble(source: &str) -> AResult<Object> {
         match toks[0] {
             "map" => {
                 // map NAME KIND [key=N] value=N entries=N
-                if toks.len() < 5 || toks.len() > 6 {
-                    return aerr(line, "usage: map NAME array|hash|percpu [key=N] value=N entries=N");
+                // (ringbuf: map NAME ringbuf entries=BYTES — no key/value)
+                if toks.len() < 4 || toks.len() > 6 {
+                    return aerr(
+                        line,
+                        "usage: map NAME array|hash|percpu|ringbuf [key=N] [value=N] entries=N",
+                    );
                 }
                 let kind = match toks[2] {
                     "array" => MapKind::Array,
                     "hash" => MapKind::Hash,
                     "percpu" => MapKind::PerCpuArray,
+                    "ringbuf" => MapKind::RingBuf,
                     k => return aerr(line, format!("unknown map kind '{}'", k)),
                 };
                 let mut key_size = 0;
@@ -260,8 +265,8 @@ pub fn assemble(source: &str) -> AResult<Object> {
                         })?;
                     }
                 }
-                // allow key= omitted for array maps
-                if key_size == 0 && kind != MapKind::Hash {
+                // allow key= omitted for array maps; ringbufs have none
+                if key_size == 0 && !matches!(kind, MapKind::Hash | MapKind::RingBuf) {
                     key_size = 4;
                 }
                 let def = MapDef { name: toks[1].into(), kind, key_size, value_size, max_entries };
@@ -475,6 +480,21 @@ done:
         // slots: 0-1 lddw, 2 jeq, 3 mov, 4 exit, 5 mov, 6 exit
         assert_eq!(insns.len(), 7);
         assert_eq!(insns[2].off, 2); // 2+1+2 = 5
+    }
+
+    #[test]
+    fn assemble_ringbuf_map() {
+        let o = assemble(
+            "map events ringbuf entries=4096\nprog profiler p\n  mov64 r0, 0\n  exit\n",
+        )
+        .unwrap();
+        assert_eq!(o.maps[0].kind, MapKind::RingBuf);
+        assert_eq!(o.maps[0].key_size, 0);
+        assert_eq!(o.maps[0].value_size, 0);
+        assert_eq!(o.maps[0].max_entries, 4096);
+        // non-power-of-two ring size is rejected by MapDef::validate
+        let e = assemble("map ev ringbuf entries=100\n").unwrap_err();
+        assert!(e.message.contains("power of two"), "{}", e.message);
     }
 
     #[test]

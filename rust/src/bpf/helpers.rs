@@ -5,8 +5,9 @@
 //! policy sources read like ordinary eBPF C.
 
 use super::maps::{Map, MapRegistry};
+use std::io::Write;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Helper ids (kernel-compatible numbering where possible).
@@ -18,6 +19,11 @@ pub mod id {
     pub const TRACE_PRINTK: i32 = 6;
     pub const GET_PRANDOM_U32: i32 = 7;
     pub const GET_SMP_PROCESSOR_ID: i32 = 8;
+    pub const RINGBUF_OUTPUT: i32 = 130;
+    pub const RINGBUF_RESERVE: i32 = 131;
+    pub const RINGBUF_SUBMIT: i32 = 132;
+    pub const RINGBUF_DISCARD: i32 = 133;
+    pub const RINGBUF_QUERY: i32 = 134;
 }
 
 /// Program types — one per NCCLbpf plugin hook.
@@ -63,6 +69,11 @@ pub enum ArgType {
     Scalar,
     /// pointer to readable memory of length given by the *next* arg
     MemLen,
+    /// compile-time-constant allocation size (bpf_ringbuf_reserve)
+    ConstAllocSize,
+    /// pointer previously returned by bpf_ringbuf_reserve (null-checked);
+    /// passing it releases the verifier's reference
+    RingBufMem,
 }
 
 /// Helper return classes for verifier tracking.
@@ -70,6 +81,10 @@ pub enum ArgType {
 pub enum RetType {
     /// pointer into the map value, or NULL — must be null-checked
     MapValueOrNull,
+    /// pointer to a reserved ringbuf record, or NULL — must be
+    /// null-checked AND submitted/discarded on every path (a verifier
+    /// *reference*)
+    RingBufMemOrNull,
     Scalar,
 }
 
@@ -125,6 +140,36 @@ pub const HELPER_SPECS: &[HelperSpec] = &[
         args: &[],
         ret: RetType::Scalar,
     },
+    HelperSpec {
+        id: id::RINGBUF_OUTPUT,
+        name: "bpf_ringbuf_output",
+        args: &[ArgType::ConstMapPtr, ArgType::MemLen, ArgType::Scalar, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::RINGBUF_RESERVE,
+        name: "bpf_ringbuf_reserve",
+        args: &[ArgType::ConstMapPtr, ArgType::ConstAllocSize, ArgType::Scalar],
+        ret: RetType::RingBufMemOrNull,
+    },
+    HelperSpec {
+        id: id::RINGBUF_SUBMIT,
+        name: "bpf_ringbuf_submit",
+        args: &[ArgType::RingBufMem, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::RINGBUF_DISCARD,
+        name: "bpf_ringbuf_discard",
+        args: &[ArgType::RingBufMem, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
+        id: id::RINGBUF_QUERY,
+        name: "bpf_ringbuf_query",
+        args: &[ArgType::ConstMapPtr, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
 ];
 
 pub fn spec_by_id(idv: i32) -> Option<&'static HelperSpec> {
@@ -154,12 +199,19 @@ pub fn whitelist(pt: ProgType) -> &'static [i32] {
             id::KTIME_GET_NS,
             id::TRACE_PRINTK,
             id::GET_SMP_PROCESSOR_ID,
+            id::RINGBUF_OUTPUT,
+            id::RINGBUF_RESERVE,
+            id::RINGBUF_SUBMIT,
+            id::RINGBUF_DISCARD,
+            id::RINGBUF_QUERY,
         ],
         ProgType::Net => &[
             id::MAP_LOOKUP_ELEM,
             id::MAP_UPDATE_ELEM,
             id::KTIME_GET_NS,
             id::GET_SMP_PROCESSOR_ID,
+            id::RINGBUF_OUTPUT,
+            id::RINGBUF_QUERY,
         ],
     }
 }
@@ -213,11 +265,81 @@ pub fn prandom_u32() -> u32 {
 /// Count of trace_printk invocations (observable by tests).
 pub static TRACE_COUNT: AtomicU32 = AtomicU32::new(0);
 
+/// Where `bpf_trace_printk` lines go. The sink is rebindable at any
+/// time (the host owns one and every program it installs writes
+/// through it), so `ncclbpf trace` can interleave printk output with
+/// ring events and tests can capture lines without process-global
+/// stdio-capture hacks.
+pub struct PrintkSink {
+    inner: Mutex<PrintkTarget>,
+}
+
+enum PrintkTarget {
+    Stderr,
+    Writer(Box<dyn Write + Send>),
+    Capture(Vec<String>),
+}
+
+impl Default for PrintkSink {
+    fn default() -> Self {
+        PrintkSink { inner: Mutex::new(PrintkTarget::Stderr) }
+    }
+}
+
+impl PrintkSink {
+    pub fn stderr() -> Arc<PrintkSink> {
+        Arc::new(PrintkSink::default())
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, PrintkTarget> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Route subsequent printk lines into `w` (e.g. stdout for
+    /// `ncclbpf trace`).
+    pub fn set_writer(&self, w: Box<dyn Write + Send>) {
+        *self.guard() = PrintkTarget::Writer(w);
+    }
+
+    /// Route subsequent printk lines into an in-memory buffer.
+    pub fn set_capture(&self) {
+        *self.guard() = PrintkTarget::Capture(Vec::new());
+    }
+
+    /// Restore the default stderr routing.
+    pub fn set_stderr(&self) {
+        *self.guard() = PrintkTarget::Stderr;
+    }
+
+    /// Take the lines captured since `set_capture` (empty unless
+    /// capturing).
+    pub fn drain_captured(&self) -> Vec<String> {
+        match &mut *self.guard() {
+            PrintkTarget::Capture(v) => std::mem::take(v),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Emit one printk line to the current target.
+    pub fn emit(&self, line: &str) {
+        match &mut *self.guard() {
+            PrintkTarget::Stderr => eprintln!("[bpf] {}", line),
+            PrintkTarget::Writer(w) => {
+                let _ = writeln!(w, "[bpf] {}", line);
+                let _ = w.flush();
+            }
+            PrintkTarget::Capture(v) => v.push(line.to_string()),
+        }
+    }
+}
+
 /// Runtime environment for one program execution: the maps the program
 /// may touch, resolved from ids at load time.
 pub struct HelperEnv {
     /// map id -> map instance; ids come from lddw MAP_FD operands.
     pub maps: Vec<(u32, Arc<Map>)>,
+    /// trace_printk destination; `None` falls back to stderr.
+    pub printk: Option<Arc<PrintkSink>>,
 }
 
 impl HelperEnv {
@@ -229,7 +351,13 @@ impl HelperEnv {
                 .ok_or_else(|| format!("unresolved map id {}", idv))?;
             maps.push((idv, m));
         }
-        Ok(HelperEnv { maps })
+        Ok(HelperEnv { maps, printk: None })
+    }
+
+    /// Attach a trace_printk sink (builder style).
+    pub fn with_printk(mut self, sink: Arc<PrintkSink>) -> HelperEnv {
+        self.printk = Some(sink);
+        self
     }
 
     #[inline]
@@ -282,12 +410,40 @@ impl HelperEnv {
                 let len = (args[1] as usize).min(256);
                 let bytes = std::slice::from_raw_parts(args[0] as *const u8, len);
                 if let Ok(s) = std::str::from_utf8(bytes) {
-                    eprintln!("[bpf] {}", s.trim_end_matches('\0'));
+                    let line = s.trim_end_matches('\0');
+                    match &self.printk {
+                        Some(sink) => sink.emit(line),
+                        None => eprintln!("[bpf] {}", line),
+                    }
                 }
                 0
             }
             id::GET_PRANDOM_U32 => prandom_u32() as u64,
             id::GET_SMP_PROCESSOR_ID => Map::current_cpu() as u64,
+            id::RINGBUF_OUTPUT => {
+                let map_id = args[0] as u32;
+                let Some(m) = self.map_by_id(map_id) else { return (-1i64) as u64 };
+                let bytes = std::slice::from_raw_parts(args[1] as *const u8, args[2] as usize);
+                m.ringbuf_output(bytes) as u64
+            }
+            id::RINGBUF_RESERVE => {
+                let map_id = args[0] as u32;
+                let Some(m) = self.map_by_id(map_id) else { return 0 };
+                m.ringbuf_reserve(args[1]) as u64
+            }
+            id::RINGBUF_SUBMIT => {
+                Map::ringbuf_submit(args[0] as *mut u8);
+                0
+            }
+            id::RINGBUF_DISCARD => {
+                Map::ringbuf_discard(args[0] as *mut u8);
+                0
+            }
+            id::RINGBUF_QUERY => {
+                let map_id = args[0] as u32;
+                let Some(m) = self.map_by_id(map_id) else { return 0 };
+                m.ringbuf_query(args[1])
+            }
             _ => 0,
         }
     }
@@ -319,6 +475,63 @@ mod tests {
         assert!(!is_allowed(ProgType::Tuner, id::TRACE_PRINTK));
         assert!(!is_allowed(ProgType::Tuner, id::MAP_DELETE_ELEM));
         assert!(is_allowed(ProgType::Tuner, id::MAP_LOOKUP_ELEM));
+        // ringbuf helpers: profiler gets the full set, net only the
+        // copy-out forms, the tuner none
+        assert!(is_allowed(ProgType::Profiler, id::RINGBUF_RESERVE));
+        assert!(is_allowed(ProgType::Profiler, id::RINGBUF_SUBMIT));
+        assert!(is_allowed(ProgType::Net, id::RINGBUF_OUTPUT));
+        assert!(!is_allowed(ProgType::Net, id::RINGBUF_RESERVE));
+        assert!(!is_allowed(ProgType::Tuner, id::RINGBUF_OUTPUT));
+    }
+
+    #[test]
+    fn helper_env_ringbuf_roundtrip() {
+        let r = MapRegistry::new();
+        let m = r
+            .create_or_get(&MapDef {
+                name: "rb".into(),
+                kind: MapKind::RingBuf,
+                key_size: 0,
+                value_size: 0,
+                max_entries: 4096,
+            })
+            .unwrap();
+        let idv = m.id;
+        let env = HelperEnv::new(&r, &[idv]).unwrap();
+        unsafe {
+            let p = env.call(id::RINGBUF_RESERVE, [idv as u64, 16, 0, 0, 0]);
+            assert_ne!(p, 0);
+            (p as *mut u64).write_unaligned(0xabcd);
+            env.call(id::RINGBUF_SUBMIT, [p, 0, 0, 0, 0]);
+            let payload = 0x1234_5678u64.to_le_bytes();
+            let rc =
+                env.call(id::RINGBUF_OUTPUT, [idv as u64, payload.as_ptr() as u64, 8, 0, 0]);
+            assert_eq!(rc, 0);
+            assert_eq!(env.call(id::RINGBUF_QUERY, [idv as u64, 0, 0, 0, 0]), 24 + 16);
+        }
+        let mut got = Vec::new();
+        m.ringbuf_drain(&mut |b| got.push(u64::from_le_bytes(b[..8].try_into().unwrap())));
+        assert_eq!(got, vec![0xabcd, 0x1234_5678]);
+    }
+
+    #[test]
+    fn printk_sink_captures_without_global_hacks() {
+        let sink = PrintkSink::stderr();
+        sink.set_capture();
+        let r = MapRegistry::new();
+        let env = HelperEnv::new(&r, &[]).unwrap().with_printk(sink.clone());
+        let msg = b"hello from bpf\0";
+        unsafe {
+            env.call(id::TRACE_PRINTK, [msg.as_ptr() as u64, msg.len() as u64, 0, 0, 0]);
+        }
+        assert_eq!(sink.drain_captured(), vec!["hello from bpf".to_string()]);
+        assert!(sink.drain_captured().is_empty(), "drain must consume the buffer");
+        // writer target
+        sink.set_writer(Box::new(std::io::sink()));
+        unsafe {
+            env.call(id::TRACE_PRINTK, [msg.as_ptr() as u64, msg.len() as u64, 0, 0, 0]);
+        }
+        assert!(sink.drain_captured().is_empty());
     }
 
     #[test]

@@ -394,7 +394,7 @@ mod tests {
     use crate::bpf::maps::{MapDef, MapKind, MapRegistry};
 
     fn env() -> HelperEnv {
-        HelperEnv { maps: vec![] }
+        HelperEnv { maps: vec![], printk: None }
     }
 
     unsafe fn run(prog: &[Insn]) -> u64 {

@@ -107,6 +107,11 @@ tramp!(tramp_ktime, hid::KTIME_GET_NS);
 tramp!(tramp_printk, hid::TRACE_PRINTK);
 tramp!(tramp_prandom, hid::GET_PRANDOM_U32);
 tramp!(tramp_cpuid, hid::GET_SMP_PROCESSOR_ID);
+tramp!(tramp_rb_output, hid::RINGBUF_OUTPUT);
+tramp!(tramp_rb_reserve, hid::RINGBUF_RESERVE);
+tramp!(tramp_rb_submit, hid::RINGBUF_SUBMIT);
+tramp!(tramp_rb_discard, hid::RINGBUF_DISCARD);
+tramp!(tramp_rb_query, hid::RINGBUF_QUERY);
 
 fn trampoline(helper: i32) -> Option<u64> {
     let f: unsafe extern "C" fn(*const HelperEnv, u64, u64, u64, u64, u64) -> u64 =
@@ -118,6 +123,11 @@ fn trampoline(helper: i32) -> Option<u64> {
             hid::TRACE_PRINTK => tramp_printk,
             hid::GET_PRANDOM_U32 => tramp_prandom,
             hid::GET_SMP_PROCESSOR_ID => tramp_cpuid,
+            hid::RINGBUF_OUTPUT => tramp_rb_output,
+            hid::RINGBUF_RESERVE => tramp_rb_reserve,
+            hid::RINGBUF_SUBMIT => tramp_rb_submit,
+            hid::RINGBUF_DISCARD => tramp_rb_discard,
+            hid::RINGBUF_QUERY => tramp_rb_query,
             _ => return None,
         };
     Some(f as usize as u64)
@@ -668,7 +678,7 @@ mod tests {
     use crate::util::Rng;
 
     fn env() -> HelperEnv {
-        HelperEnv { maps: vec![] }
+        HelperEnv { maps: vec![], printk: None }
     }
 
     fn jit_run(prog: &[Insn], ctx: *mut u8, env: &HelperEnv) -> u64 {
@@ -797,6 +807,45 @@ mod tests {
         p.push(ldx(size::DW, 0, 0, 0));
         p.push(exit());
         assert_eq!(jit_run(&p, std::ptr::null_mut(), &henv), 777);
+    }
+
+    #[test]
+    fn ringbuf_reserve_submit_via_jit() {
+        let reg = MapRegistry::new();
+        let m = reg
+            .create_or_get(&MapDef {
+                name: "rb".into(),
+                kind: MapKind::RingBuf,
+                key_size: 0,
+                value_size: 0,
+                max_entries: 4096,
+            })
+            .unwrap();
+        let henv = HelperEnv::new(&reg, &[m.id]).unwrap();
+        // reserve 16, null-check, write two u64s, submit, return 1
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, m.id));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(insn::call(131));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_reg(6, 0));
+        p.push(st_imm(size::DW, 6, 0, 111));
+        p.push(st_imm(size::DW, 6, 8, 222));
+        p.push(mov64_reg(1, 6));
+        p.push(mov64_imm(2, 0));
+        p.push(insn::call(132));
+        p.push(mov64_imm(0, 1));
+        p.push(exit());
+        assert_eq!(jit_run(&p, std::ptr::null_mut(), &henv), 1);
+        let mut got = vec![];
+        m.ringbuf_drain(&mut |b| {
+            got.push(u64::from_le_bytes(b[..8].try_into().unwrap()));
+            got.push(u64::from_le_bytes(b[8..16].try_into().unwrap()));
+        });
+        assert_eq!(got, vec![111, 222]);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Typed eBPF maps: the structured cross-plugin state-sharing substrate.
 //!
-//! Three map kinds are provided, mirroring the kernel/bpftime types the
+//! Four map kinds are provided, mirroring the kernel/bpftime types the
 //! paper relies on:
 //!
 //! - [`MapKind::Array`] — fixed `max_entries`, 4-byte index key, O(1)
@@ -10,6 +10,10 @@
 //!   fixed-size keys.
 //! - [`MapKind::PerCpuArray`] — one array instance per logical cpu
 //!   (here: per registered thread slot), no cross-thread contention.
+//! - [`MapKind::RingBuf`] — a power-of-two MPSC byte ring with
+//!   kernel-compatible record framing, the structured event-streaming
+//!   channel behind `bpf_ringbuf_*` (verified policies produce; one
+//!   host consumer drains).
 //!
 //! Semantics follow eBPF: `lookup` returns a *stable raw pointer* into
 //! map storage (valid for the map's lifetime — storage is allocated once
@@ -22,7 +26,7 @@
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap as StdHashMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Map type discriminator.
@@ -31,6 +35,7 @@ pub enum MapKind {
     Array,
     Hash,
     PerCpuArray,
+    RingBuf,
 }
 
 impl MapKind {
@@ -39,6 +44,7 @@ impl MapKind {
             1 => Some(MapKind::Hash),
             2 => Some(MapKind::Array),
             6 => Some(MapKind::PerCpuArray),
+            27 => Some(MapKind::RingBuf),
             _ => None,
         }
     }
@@ -47,6 +53,7 @@ impl MapKind {
             MapKind::Hash => 1,
             MapKind::Array => 2,
             MapKind::PerCpuArray => 6,
+            MapKind::RingBuf => 27,
         }
     }
 }
@@ -66,6 +73,23 @@ impl MapDef {
         if self.max_entries == 0 {
             return Err(format!("map '{}': max_entries must be > 0", self.name));
         }
+        if self.kind == MapKind::RingBuf {
+            // kernel semantics: max_entries is the data size in bytes,
+            // power of two; key/value sizes must be 0.
+            if self.key_size != 0 || self.value_size != 0 {
+                return Err(format!(
+                    "map '{}': ringbuf maps take no key/value sizes (got key={} value={})",
+                    self.name, self.key_size, self.value_size
+                ));
+            }
+            if !self.max_entries.is_power_of_two() || self.max_entries < 64 {
+                return Err(format!(
+                    "map '{}': ringbuf size must be a power of two >= 64 (got {})",
+                    self.name, self.max_entries
+                ));
+            }
+            return Ok(());
+        }
         if self.value_size == 0 || self.value_size > 64 * 1024 {
             return Err(format!("map '{}': invalid value_size {}", self.name, self.value_size));
         }
@@ -83,6 +107,7 @@ impl MapDef {
                     return Err(format!("map '{}': invalid key_size {}", self.name, self.key_size));
                 }
             }
+            MapKind::RingBuf => unreachable!(),
         }
         Ok(())
     }
@@ -94,6 +119,87 @@ pub const NCPU: usize = 16;
 const SLOT_EMPTY: u8 = 0;
 const SLOT_FULL: u8 = 1;
 const SLOT_TOMBSTONE: u8 = 2;
+
+// -- ringbuf record framing (kernel-compatible) -------------------------------
+//
+// Every record is prefixed by an 8-byte header: a u32 length word whose
+// top two bits are flags, then a u32 the kernel uses for the page
+// offset (always 0 here). Positions are logical (monotonic u64) and
+// advance in 8-byte steps, so headers are always 8-aligned.
+
+/// Header bit: record reserved but not yet submitted/discarded.
+pub const RINGBUF_BUSY_BIT: u32 = 1 << 31;
+/// Header bit: record was discarded; the consumer skips its payload.
+pub const RINGBUF_DISCARD_BIT: u32 = 1 << 30;
+/// Mask of the payload-length bits in the header word.
+pub const RINGBUF_LEN_MASK: u32 = RINGBUF_DISCARD_BIT - 1;
+/// Bytes of framing prepended to every record.
+pub const RINGBUF_HDR_SIZE: u64 = 8;
+
+/// `bpf_ringbuf_query` flag values (kernel numbering).
+pub mod ringbuf_query {
+    pub const AVAIL_DATA: u64 = 0;
+    pub const RING_SIZE: u64 = 1;
+    pub const CONS_POS: u64 = 2;
+    pub const PROD_POS: u64 = 3;
+}
+
+#[inline]
+fn round_up8(v: u64) -> u64 {
+    (v + 7) & !7
+}
+
+/// Ring-buffer state: the byte storage plus monotonic producer /
+/// consumer positions and the counters behind the event-conservation
+/// invariant `drained + dropped + discarded == emitted`.
+struct RingState {
+    /// data size in bytes (power of two); physical offset = pos & mask
+    mask: u64,
+    /// ring bytes as 8-byte words — guarantees the 8-aligned record
+    /// headers really are aligned for the AtomicU32 overlay (a plain
+    /// byte allocation only promises 1-byte alignment), and doubles as
+    /// the data area + the equally sized slack region a
+    /// boundary-crossing record spills into (see [`Map::new`])
+    data: Box<[AtomicU64]>,
+    producer: AtomicU64,
+    consumer: AtomicU64,
+    /// producer-side failed reservations
+    drops: AtomicU64,
+    /// consumer-side records skipped because the producer discarded them
+    discards: AtomicU64,
+}
+
+impl RingState {
+    fn new(size_bytes: u32) -> RingState {
+        let words = size_bytes as usize * 2 / 8;
+        let mut data = Vec::with_capacity(words);
+        data.resize_with(words, || AtomicU64::new(0));
+        RingState {
+            mask: size_bytes as u64 - 1,
+            data: data.into_boxed_slice(),
+            producer: AtomicU64::new(0),
+            consumer: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            discards: AtomicU64::new(0),
+        }
+    }
+
+    /// Byte pointer at logical position `pos` (records may extend into
+    /// the slack region [size, 2*size)).
+    #[inline]
+    fn byte_ptr(&self, pos: u64) -> *mut u8 {
+        // AtomicU64 wraps an UnsafeCell, so mutating through a pointer
+        // derived from &self is sound.
+        unsafe { (self.data.as_ptr() as *mut u8).add((pos & self.mask) as usize) }
+    }
+
+    /// The record header at `pos`. Positions advance in 8-byte steps
+    /// from 0 over 8-aligned storage, so the overlay is well-formed.
+    #[inline]
+    fn hdr(&self, pos: u64) -> &AtomicU32 {
+        unsafe { &*(self.byte_ptr(pos) as *const AtomicU32) }
+    }
+}
 
 /// A live map instance. Storage is allocated once at creation so value
 /// pointers handed to programs remain valid for the map's lifetime.
@@ -108,7 +214,9 @@ pub struct Map {
     slots: Box<[AtomicU8]>,
     /// hash maps only: live element count.
     count: AtomicU32,
-    /// serializes structural changes (hash insert/delete).
+    /// ringbuf maps only: positions + drop accounting.
+    ring: Option<RingState>,
+    /// serializes structural changes (hash insert/delete, ring reserve).
     lock: SpinLock,
 }
 
@@ -146,11 +254,18 @@ fn zeroed_cells(n: usize) -> Box<[UnsafeCell<u8>]> {
 impl Map {
     pub fn new(def: MapDef, id: u32) -> Result<Map, String> {
         def.validate()?;
-        let nvals = match def.kind {
-            MapKind::PerCpuArray => def.max_entries as usize * NCPU,
-            _ => def.max_entries as usize,
+        let values = match def.kind {
+            // ring storage lives in RingState (8-aligned words): the
+            // data area + an equally sized slack region a
+            // boundary-crossing record writes contiguously into
+            // (emulating the kernel's double-mapped pages), so producer
+            // and consumer never have to split a record.
+            MapKind::RingBuf => zeroed_cells(0),
+            MapKind::PerCpuArray => {
+                zeroed_cells(def.max_entries as usize * NCPU * def.value_size as usize)
+            }
+            _ => zeroed_cells(def.max_entries as usize * def.value_size as usize),
         };
-        let values = zeroed_cells(nvals * def.value_size as usize);
         let (keys, slots) = if def.kind == MapKind::Hash {
             let keys = zeroed_cells(def.max_entries as usize * def.key_size as usize);
             let mut s = Vec::with_capacity(def.max_entries as usize);
@@ -159,6 +274,7 @@ impl Map {
         } else {
             (zeroed_cells(0), Vec::new().into_boxed_slice())
         };
+        let ring = (def.kind == MapKind::RingBuf).then(|| RingState::new(def.max_entries));
         Ok(Map {
             def,
             id,
@@ -166,6 +282,7 @@ impl Map {
             keys,
             slots,
             count: AtomicU32::new(0),
+            ring,
             lock: SpinLock::new(),
         })
     }
@@ -205,6 +322,7 @@ impl Map {
             return std::ptr::null_mut();
         }
         match self.def.kind {
+            MapKind::RingBuf => std::ptr::null_mut(),
             MapKind::Array => {
                 let idx = u32::from_le_bytes(key.try_into().unwrap()) as usize;
                 if idx >= self.def.max_entries as usize {
@@ -255,6 +373,9 @@ impl Map {
             return Err(format!("map '{}': bad value size {}", self.def.name, value.len()));
         }
         match self.def.kind {
+            MapKind::RingBuf => {
+                Err(format!("map '{}': ringbuf maps have no update", self.def.name))
+            }
             MapKind::Array | MapKind::PerCpuArray => {
                 let p = self.lookup(key);
                 if p.is_null() {
@@ -321,8 +442,8 @@ impl Map {
     /// Delete `key` (hash maps only; arrays cannot delete). Ok(true) if removed.
     pub fn delete(&self, key: &[u8]) -> Result<bool, String> {
         match self.def.kind {
-            MapKind::Array | MapKind::PerCpuArray => {
-                Err(format!("map '{}': delete unsupported on array maps", self.def.name))
+            MapKind::Array | MapKind::PerCpuArray | MapKind::RingBuf => {
+                Err(format!("map '{}': delete unsupported on this map kind", self.def.name))
             }
             MapKind::Hash => {
                 if key.len() != self.def.key_size as usize {
@@ -351,10 +472,12 @@ impl Map {
         }
     }
 
-    /// Number of live entries (hash) or max_entries (arrays).
+    /// Number of live entries (hash), unconsumed bytes (ringbuf), or
+    /// max_entries (arrays).
     pub fn len(&self) -> usize {
         match self.def.kind {
             MapKind::Hash => self.count.load(Ordering::Relaxed) as usize,
+            MapKind::RingBuf => self.ringbuf_query(ringbuf_query::AVAIL_DATA) as usize,
             _ => self.def.max_entries as usize,
         }
     }
@@ -467,12 +590,171 @@ impl Map {
         Some(total)
     }
 
-    /// True iff `ptr` points into this map's value storage (used by the
-    /// runtime to sanity-check helper arguments in debug builds).
+    /// True iff `ptr` points into this map's value or ring storage
+    /// (used by the runtime to sanity-check helper arguments in debug
+    /// builds).
     pub fn contains_ptr(&self, ptr: *const u8) -> bool {
         let base = self.values.as_ptr() as usize;
         let end = base + self.values.len();
-        (ptr as usize) >= base && (ptr as usize) < end
+        if (ptr as usize) >= base && (ptr as usize) < end {
+            return true;
+        }
+        if let Some(ring) = &self.ring {
+            let base = ring.data.as_ptr() as usize;
+            let end = base + ring.data.len() * 8;
+            return (ptr as usize) >= base && (ptr as usize) < end;
+        }
+        false
+    }
+
+    // -- ring buffer (MapKind::RingBuf) ---------------------------------------
+    //
+    // Kernel-shaped MPSC ring: reservation is serialized by the per-map
+    // spinlock over a handful of instructions (exactly like the
+    // kernel's BPF ringbuf producer lock); commit (submit/discard) is a
+    // single release-store on the record header, and the single
+    // consumer drains lock-free with acquire loads. Memory ordering:
+    //
+    // - reserve: header BUSY store, then `producer` release-store — a
+    //   consumer that observes the advanced producer position also
+    //   observes the BUSY header.
+    // - submit: release-store of the final header word — a consumer
+    //   whose acquire load sees BUSY cleared also sees every payload
+    //   byte the producer wrote.
+    // - drain: `consumer` release-store after the callback — a producer
+    //   whose reserve (acquire load of `consumer`) sees the freed space
+    //   cannot overwrite bytes the consumer is still reading.
+
+    /// Reserve `size` payload bytes in the ring; returns a pointer to
+    /// the payload (header excluded) or null when the ring is full /
+    /// the size is invalid. Every failed reservation counts as a drop.
+    pub fn ringbuf_reserve(&self, size: u64) -> *mut u8 {
+        let Some(ring) = &self.ring else { return std::ptr::null_mut() };
+        let ring_size = self.def.max_entries as u64;
+        let total = RINGBUF_HDR_SIZE + round_up8(size);
+        if size == 0 || size > RINGBUF_LEN_MASK as u64 || total > ring_size {
+            ring.drops.fetch_add(1, Ordering::Relaxed);
+            return std::ptr::null_mut();
+        }
+        self.lock.lock();
+        let prod = ring.producer.load(Ordering::Relaxed);
+        let cons = ring.consumer.load(Ordering::Acquire);
+        if prod + total - cons > ring_size {
+            self.lock.unlock();
+            ring.drops.fetch_add(1, Ordering::Relaxed);
+            return std::ptr::null_mut();
+        }
+        // header: BUSY | len, pg_off word zeroed
+        ring.hdr(prod).store(size as u32 | RINGBUF_BUSY_BIT, Ordering::Relaxed);
+        unsafe {
+            (ring.byte_ptr(prod).add(4) as *mut u32).write_unaligned(0);
+        }
+        ring.producer.store(prod + total, Ordering::Release);
+        self.lock.unlock();
+        unsafe { ring.byte_ptr(prod).add(RINGBUF_HDR_SIZE as usize) }
+    }
+
+    /// Commit a reserved record: clear BUSY with a release-store so the
+    /// consumer observes the payload. Takes only the record pointer —
+    /// the header sits 8 bytes below it (kernel calling convention).
+    ///
+    /// # Safety
+    /// `data` must be a pointer returned by [`Map::ringbuf_reserve`]
+    /// that has not yet been submitted or discarded (the verifier
+    /// enforces this for BPF callers via reference tracking).
+    pub unsafe fn ringbuf_submit(data: *mut u8) {
+        let hdr = &*(data.sub(RINGBUF_HDR_SIZE as usize) as *const AtomicU32);
+        let len = hdr.load(Ordering::Relaxed) & RINGBUF_LEN_MASK;
+        hdr.store(len, Ordering::Release);
+    }
+
+    /// Discard a reserved record: the consumer skips it (drop-accounted
+    /// as discarded, not as a drop — the producer chose to abandon it).
+    ///
+    /// # Safety
+    /// Same contract as [`Map::ringbuf_submit`].
+    pub unsafe fn ringbuf_discard(data: *mut u8) {
+        let hdr = &*(data.sub(RINGBUF_HDR_SIZE as usize) as *const AtomicU32);
+        let len = hdr.load(Ordering::Relaxed) & RINGBUF_LEN_MASK;
+        hdr.store(len | RINGBUF_DISCARD_BIT, Ordering::Release);
+    }
+
+    /// Copy `bytes` into the ring as one record (reserve + copy +
+    /// submit). Returns 0 on success, -1 when the ring is full (the
+    /// failed reservation is drop-accounted).
+    pub fn ringbuf_output(&self, bytes: &[u8]) -> i64 {
+        let p = self.ringbuf_reserve(bytes.len() as u64);
+        if p.is_null() {
+            return -1;
+        }
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), p, bytes.len());
+            Self::ringbuf_submit(p);
+        }
+        0
+    }
+
+    /// `bpf_ringbuf_query` (see [`ringbuf_query`] for flag values).
+    pub fn ringbuf_query(&self, flag: u64) -> u64 {
+        let Some(ring) = &self.ring else { return 0 };
+        match flag {
+            ringbuf_query::RING_SIZE => self.def.max_entries as u64,
+            ringbuf_query::CONS_POS => ring.consumer.load(Ordering::Acquire),
+            ringbuf_query::PROD_POS => ring.producer.load(Ordering::Acquire),
+            _ => ring
+                .producer
+                .load(Ordering::Acquire)
+                .saturating_sub(ring.consumer.load(Ordering::Acquire)),
+        }
+    }
+
+    /// Producer-side drop count (failed reservations).
+    pub fn ringbuf_dropped(&self) -> u64 {
+        self.ring.as_ref().map(|r| r.drops.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Records the consumer skipped because the producer discarded
+    /// them. Together with drains and drops this closes the accounting:
+    /// `drained + dropped + discarded == reserve/output attempts`.
+    pub fn ringbuf_discarded(&self) -> u64 {
+        self.ring.as_ref().map(|r| r.discards.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Drain every completed record, invoking `cb` with each submitted
+    /// payload (discarded records are skipped and counted in
+    /// [`Map::ringbuf_discarded`]). Stops at the first still-BUSY
+    /// record. Single-consumer: callers must serialize drains
+    /// themselves (the host wraps this in
+    /// [`crate::host::ringbuf::RingConsumer`]). Returns the number of
+    /// records delivered to `cb`.
+    pub fn ringbuf_drain(&self, cb: &mut dyn FnMut(&[u8])) -> usize {
+        let Some(ring) = &self.ring else { return 0 };
+        let mut delivered = 0usize;
+        loop {
+            let cons = ring.consumer.load(Ordering::Relaxed);
+            let prod = ring.producer.load(Ordering::Acquire);
+            if cons == prod {
+                return delivered;
+            }
+            let hdr = ring.hdr(cons).load(Ordering::Acquire);
+            if hdr & RINGBUF_BUSY_BIT != 0 {
+                return delivered; // oldest record still being written
+            }
+            let len = (hdr & RINGBUF_LEN_MASK) as u64;
+            if hdr & RINGBUF_DISCARD_BIT == 0 {
+                let data = unsafe {
+                    std::slice::from_raw_parts(
+                        ring.byte_ptr(cons).add(RINGBUF_HDR_SIZE as usize),
+                        len as usize,
+                    )
+                };
+                cb(data);
+                delivered += 1;
+            } else {
+                ring.discards.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.consumer.store(cons + RINGBUF_HDR_SIZE + round_up8(len), Ordering::Release);
+        }
     }
 }
 
@@ -780,6 +1062,196 @@ mod tests {
         assert!(r.by_name("latency_map").is_some());
         assert!(r.by_id(a.id).is_some());
         assert!(r.by_name("nope").is_none());
+    }
+
+    fn rbdef(name: &str, size: u32) -> MapDef {
+        MapDef {
+            name: name.into(),
+            kind: MapKind::RingBuf,
+            key_size: 0,
+            value_size: 0,
+            max_entries: size,
+        }
+    }
+
+    #[test]
+    fn ringbuf_reserve_submit_drain_roundtrip() {
+        let m = Map::new(rbdef("rb", 4096), 1).unwrap();
+        for i in 0..4u64 {
+            let p = m.ringbuf_reserve(16);
+            assert!(!p.is_null());
+            unsafe {
+                (p as *mut u64).write_unaligned(i);
+                ((p as *mut u64).add(1)).write_unaligned(i * 10);
+                Map::ringbuf_submit(p);
+            }
+        }
+        let mut got = Vec::new();
+        let n = m.ringbuf_drain(&mut |b| {
+            assert_eq!(b.len(), 16);
+            got.push(u64::from_le_bytes(b[..8].try_into().unwrap()));
+        });
+        assert_eq!(n, 4);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(m.ringbuf_query(ringbuf_query::AVAIL_DATA), 0);
+        assert_eq!(m.ringbuf_dropped(), 0);
+    }
+
+    #[test]
+    fn ringbuf_discard_skipped_and_busy_blocks() {
+        let m = Map::new(rbdef("rb", 4096), 1).unwrap();
+        assert_eq!(m.ringbuf_output(&1u64.to_le_bytes()), 0);
+        let d = m.ringbuf_reserve(8);
+        unsafe { Map::ringbuf_discard(d) };
+        m.ringbuf_output(&3u64.to_le_bytes());
+        // a still-BUSY record blocks everything behind it
+        let busy = m.ringbuf_reserve(8);
+        m.ringbuf_output(&5u64.to_le_bytes());
+        let mut got = Vec::new();
+        m.ringbuf_drain(&mut |b| got.push(u64::from_le_bytes(b.try_into().unwrap())));
+        assert_eq!(got, vec![1, 3], "discard skipped, BUSY blocks the tail");
+        assert_eq!(m.ringbuf_discarded(), 1, "the skipped discard must be accounted");
+        unsafe { Map::ringbuf_submit(busy) };
+        m.ringbuf_drain(&mut |b| got.push(u64::from_le_bytes(b.try_into().unwrap())));
+        assert_eq!(got, vec![1, 3, 0, 5]);
+    }
+
+    #[test]
+    fn ringbuf_wraps_and_spills_across_boundary() {
+        // 128-byte ring, 24-byte records (8 hdr + 16 data): positions
+        // wrap repeatedly and some records spill into the slack region.
+        let m = Map::new(rbdef("rb", 128), 1).unwrap();
+        let mut next_payload = 0u64;
+        let mut expect = 0u64;
+        for _ in 0..200 {
+            for _ in 0..3 {
+                let mut rec = [0u8; 16];
+                rec[..8].copy_from_slice(&next_payload.to_le_bytes());
+                rec[8..].copy_from_slice(&(!next_payload).to_le_bytes());
+                assert_eq!(m.ringbuf_output(&rec), 0);
+                next_payload += 1;
+            }
+            m.ringbuf_drain(&mut |b| {
+                assert_eq!(b.len(), 16);
+                let lo = u64::from_le_bytes(b[..8].try_into().unwrap());
+                let hi = u64::from_le_bytes(b[8..].try_into().unwrap());
+                assert_eq!(lo, expect, "records must drain in order");
+                assert_eq!(hi, !expect, "payload torn across the wrap boundary");
+                expect += 1;
+            });
+        }
+        assert_eq!(expect, next_payload);
+        assert_eq!(m.ringbuf_dropped(), 0);
+    }
+
+    #[test]
+    fn ringbuf_full_drops_and_recovers() {
+        let m = Map::new(rbdef("rb", 64), 1).unwrap();
+        // 24 bytes per record -> 2 fit in 64 bytes, the 3rd drops
+        assert_eq!(m.ringbuf_output(&[1u8; 16]), 0);
+        assert_eq!(m.ringbuf_output(&[2u8; 16]), 0);
+        assert_eq!(m.ringbuf_output(&[3u8; 16]), -1);
+        assert_eq!(m.ringbuf_dropped(), 1);
+        // oversized reservation also drops
+        assert!(m.ringbuf_reserve(64).is_null());
+        assert_eq!(m.ringbuf_dropped(), 2);
+        // draining frees space
+        let mut n = 0;
+        m.ringbuf_drain(&mut |_| n += 1);
+        assert_eq!(n, 2);
+        assert_eq!(m.ringbuf_output(&[4u8; 16]), 0);
+    }
+
+    #[test]
+    fn ringbuf_query_flags() {
+        let m = Map::new(rbdef("rb", 256), 1).unwrap();
+        assert_eq!(m.ringbuf_query(ringbuf_query::RING_SIZE), 256);
+        assert_eq!(m.ringbuf_output(&[0u8; 8]), 0);
+        assert_eq!(m.ringbuf_query(ringbuf_query::AVAIL_DATA), 16);
+        assert_eq!(m.ringbuf_query(ringbuf_query::PROD_POS), 16);
+        assert_eq!(m.ringbuf_query(ringbuf_query::CONS_POS), 0);
+        m.ringbuf_drain(&mut |_| {});
+        assert_eq!(m.ringbuf_query(ringbuf_query::CONS_POS), 16);
+        assert_eq!(m.len(), 0);
+    }
+
+    #[test]
+    fn ringbuf_validate_rejects_bad_defs() {
+        // non-power-of-two
+        assert!(Map::new(rbdef("rb", 100), 1).is_err());
+        // too small
+        assert!(Map::new(rbdef("rb", 32), 1).is_err());
+        // key/value sizes must be zero
+        let mut d = rbdef("rb", 128);
+        d.key_size = 4;
+        assert!(Map::new(d, 1).is_err());
+        // structured ops are rejected on ring maps
+        let m = Map::new(rbdef("rb", 128), 1).unwrap();
+        assert!(m.lookup(&[]).is_null());
+        assert!(m.update(&[], &[]).is_err());
+        assert!(m.delete(&[]).is_err());
+    }
+
+    /// MPSC integrity: 4 producers racing `ringbuf_output` against one
+    /// consumer; every submitted record arrives exactly once, untorn
+    /// (producer id and per-producer sequence agree in both halves),
+    /// and per-producer sequences arrive in order.
+    #[test]
+    fn ringbuf_mpsc_concurrent_integrity() {
+        const PRODUCERS: u64 = 4;
+        const PER_PRODUCER: u64 = 5_000;
+        let m = Arc::new(Map::new(rbdef("rb", 1 << 14), 1).unwrap());
+        let done = Arc::new(AtomicU32::new(0));
+        let mut handles = vec![];
+        for p in 0..PRODUCERS {
+            let m = m.clone();
+            let done = done.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut sent = 0u64;
+                let mut seq = 0u64;
+                while seq < PER_PRODUCER {
+                    let tag = (p << 32) | seq;
+                    let mut rec = [0u8; 16];
+                    rec[..8].copy_from_slice(&tag.to_le_bytes());
+                    rec[8..].copy_from_slice(&(!tag).to_le_bytes());
+                    if m.ringbuf_output(&rec) == 0 {
+                        sent += 1;
+                    }
+                    seq += 1;
+                }
+                done.fetch_add(1, Ordering::Release);
+                sent
+            }));
+        }
+        let consumer = {
+            let m = m.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut next_seq = [0u64; PRODUCERS as usize];
+                let mut received = 0u64;
+                loop {
+                    let drained = m.ringbuf_drain(&mut |b| {
+                        let tag = u64::from_le_bytes(b[..8].try_into().unwrap());
+                        let inv = u64::from_le_bytes(b[8..].try_into().unwrap());
+                        assert_eq!(!tag, inv, "torn record");
+                        let (p, seq) = ((tag >> 32) as usize, tag & 0xffff_ffff);
+                        assert!(seq >= next_seq[p], "producer {} went backwards", p);
+                        next_seq[p] = seq + 1;
+                        received += 1;
+                    });
+                    if drained == 0 && done.load(Ordering::Acquire) == PRODUCERS as u32 {
+                        // one final pass after all producers finished
+                        m.ringbuf_drain(&mut |_| received += 1);
+                        return received;
+                    }
+                    std::hint::spin_loop();
+                }
+            })
+        };
+        let sent: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let received = consumer.join().unwrap();
+        assert_eq!(received, sent, "every submitted record must be drained exactly once");
+        assert_eq!(sent + m.ringbuf_dropped(), PRODUCERS * PER_PRODUCER);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod object;
 pub mod program;
 pub mod verifier;
 
-pub use helpers::ProgType;
+pub use helpers::{PrintkSink, ProgType};
 pub use maps::{Map, MapDef, MapKind, MapRegistry};
 pub use object::Object;
 pub use program::{CtxLayouts, LoadError, LoadedProgram};

@@ -5,7 +5,7 @@
 //! BPF bytecode, once JIT-compiled, cannot violate its safety guarantees
 //! at runtime").
 
-use super::helpers::{HelperEnv, ProgType};
+use super::helpers::{HelperEnv, PrintkSink, ProgType};
 use super::insn::{pseudo, Insn};
 use super::interp::{self, Op};
 use super::jit::JitProgram;
@@ -129,6 +129,18 @@ pub fn load_object(
     registry: &MapRegistry,
     layouts: &CtxLayouts,
 ) -> Result<Vec<LoadedProgram>, LoadError> {
+    load_object_with_sink(obj, registry, layouts, None)
+}
+
+/// [`load_object`] with an explicit `bpf_trace_printk` sink: programs
+/// loaded here route printk output through `sink` instead of stderr
+/// (the host installs its own rebindable sink this way).
+pub fn load_object_with_sink(
+    obj: &Object,
+    registry: &MapRegistry,
+    layouts: &CtxLayouts,
+    sink: Option<Arc<PrintkSink>>,
+) -> Result<Vec<LoadedProgram>, LoadError> {
     // 1. register maps
     let mut live: Vec<(String, Arc<Map>)> = Vec::new();
     for def in &obj.maps {
@@ -147,7 +159,7 @@ pub fn load_object(
 
     let mut out = Vec::with_capacity(obj.progs.len());
     for p in &obj.progs {
-        out.push(load_program(p, registry, layouts, &live, &id_of, &map_defs)?);
+        out.push(load_program(p, registry, layouts, &live, &id_of, &map_defs, sink.clone())?);
     }
     Ok(out)
 }
@@ -159,6 +171,7 @@ fn load_program(
     live: &[(String, Arc<Map>)],
     id_of: &dyn Fn(&str) -> Option<u32>,
     map_defs: &HashMap<u32, MapDef>,
+    sink: Option<Arc<PrintkSink>>,
 ) -> Result<LoadedProgram, LoadError> {
     let pt = p.prog_type().ok_or_else(|| {
         LoadError::Structural(format!(
@@ -195,7 +208,8 @@ fn load_program(
     // 4. compile: pre-decode for the interpreter, then attempt native JIT
     let t1 = Instant::now();
     let ops = interp::predecode(&insns).map_err(LoadError::Structural)?;
-    let env = HelperEnv::new(registry, &info.used_maps).map_err(LoadError::Structural)?;
+    let mut env = HelperEnv::new(registry, &info.used_maps).map_err(LoadError::Structural)?;
+    env.printk = sink;
     let jit = JitProgram::compile(&ops);
     let compile_ns = t1.elapsed().as_nanos() as u64;
 

@@ -23,10 +23,23 @@
 //!    policy inputs read-only and outputs write-only.
 //! 7. **division by zero** — divisor intervals containing 0 are
 //!    rejected unless dominated by a `!= 0` check.
+//!
+//! On top of the type/interval lattice the verifier runs a **reference
+//! tracking** pass for ring-buffer records (kernel `ref_obj_id`
+//! semantics): `bpf_ringbuf_reserve` *acquires* a reference that must
+//! be *released* by `bpf_ringbuf_submit`/`bpf_ringbuf_discard` on
+//! every program path. Three more bug classes fall out:
+//!
+//! 8. **unreleased reference** — an exit path on which a reserved
+//!    record was neither submitted nor discarded.
+//! 9. **use after release** — any access through a record pointer (or
+//!    a copy/spill of it) after the submit/discard released it.
+//! 10. **reserved-size overflow** — accesses past the statically-known
+//!     reserved size (the reserve size argument must be a constant).
 
 use super::helpers::{self, ArgType, ProgType, RetType};
 use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
-use super::maps::MapDef;
+use super::maps::{MapDef, MapKind, RINGBUF_HDR_SIZE, RINGBUF_LEN_MASK};
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 
@@ -104,12 +117,24 @@ enum Reg {
     CtxPtr { off: i64 },
     /// offset relative to r10 (0 = frame top); valid bytes are [-512, 0)
     StackPtr { off: i64 },
-    /// verified non-null pointer into map value storage
-    MapValue { map_id: u32, off: i64, vsize: u32 },
+    /// verified non-null pointer into map value storage; the runtime
+    /// offset lies anywhere in [off, off + span] (span > 0 after
+    /// variable-offset arithmetic), and access checks bound *both*
+    /// extremes
+    MapValue { map_id: u32, off: i64, span: u64, vsize: u32 },
     /// result of bpf_map_lookup_elem before the null check
     MapValueOrNull { map_id: u32, vsize: u32, nid: u32 },
     /// map handle loaded via lddw map[id]
     MapPtr { map_id: u32 },
+    /// result of bpf_ringbuf_reserve before the null check; carries the
+    /// acquired reference id
+    RingBufMemOrNull { size: u32, ref_id: u32 },
+    /// verified non-null pointer into a reserved ringbuf record; same
+    /// [off, off + span] interval semantics as `MapValue`
+    RingBufMem { size: u32, off: i64, span: u64, ref_id: u32 },
+    /// a ringbuf record pointer whose reference was released by
+    /// submit/discard — any use is a use-after-release error
+    RingBufReleased { ref_id: u32 },
 }
 
 impl Reg {
@@ -127,6 +152,9 @@ impl Reg {
                 | Reg::MapValue { .. }
                 | Reg::MapValueOrNull { .. }
                 | Reg::MapPtr { .. }
+                | Reg::RingBufMemOrNull { .. }
+                | Reg::RingBufMem { .. }
+                | Reg::RingBufReleased { .. }
         )
     }
     fn type_name(&self) -> &'static str {
@@ -138,6 +166,9 @@ impl Reg {
             Reg::MapValue { .. } => "ptr_to_map_value",
             Reg::MapValueOrNull { .. } => "map_value_or_null",
             Reg::MapPtr { .. } => "const_map_ptr",
+            Reg::RingBufMemOrNull { .. } => "ringbuf_mem_or_null",
+            Reg::RingBufMem { .. } => "ptr_to_ringbuf_mem",
+            Reg::RingBufReleased { .. } => "ringbuf_mem_after_release",
         }
     }
 }
@@ -156,6 +187,9 @@ struct State {
     stack: [StackByte; STACK],
     /// 8-byte-aligned spill slots: offset (negative, multiple of 8) -> reg
     spills: BTreeMap<i64, Reg>,
+    /// acquired-but-unreleased ringbuf references on this path; every
+    /// entry must be released (submit/discard) before EXIT
+    refs: Vec<u32>,
 }
 
 impl State {
@@ -165,7 +199,12 @@ impl State {
             regs[1] = Reg::CtxPtr { off: 0 };
         }
         regs[10] = Reg::StackPtr { off: 0 };
-        State { regs, stack: [StackByte::Uninit; STACK], spills: BTreeMap::new() }
+        State {
+            regs,
+            stack: [StackByte::Uninit; STACK],
+            spills: BTreeMap::new(),
+            refs: Vec::new(),
+        }
     }
 
     /// stack byte index for r10-relative offset `off` in [-512, 0)
@@ -431,14 +470,27 @@ impl<'a> Verifier<'a> {
             if srcv.is_pointer() && dstv.is_pointer() {
                 return Err(self.err(pc, "arithmetic between two pointers".into()));
             }
-            if matches!(dstv, Reg::MapValueOrNull { .. })
-                || matches!(srcv, Reg::MapValueOrNull { .. })
+            if matches!(dstv, Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. })
+                || matches!(srcv, Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. })
             {
                 return Err(self.err(
                     pc,
                     format!(
-                        "R{} is a pointer to map_value_or_null; must check != NULL before \
+                        "R{} is a pointer to {}; must check != NULL before \
                          arithmetic",
+                        if dstv.is_pointer() { ins.dst } else { ins.src },
+                        if dstv.is_pointer() { dstv.type_name() } else { srcv.type_name() },
+                    ),
+                ));
+            }
+            if matches!(dstv, Reg::RingBufReleased { .. })
+                || matches!(srcv, Reg::RingBufReleased { .. })
+            {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} points into a ringbuf record that was already \
+                         submitted/discarded (use after release)",
                         if dstv.is_pointer() { ins.dst } else { ins.src }
                     ),
                 ));
@@ -477,11 +529,15 @@ impl<'a> Verifier<'a> {
                     ));
                 }
             }
-            // We conservatively use the *worst-case* offsets for later
-            // bounds checks by storing min/max in two passes: for exact
-            // tracking we keep only constant adjustments precise.
+            // Exact interval tracking: the pointer's runtime offset
+            // lies in [off + delta_min, off + delta_min + span']; both
+            // extremes are bounds-checked at every access (keeping only
+            // the worst-case maximum, as the seed did, missed negative
+            // runtime offsets — a record/value *header underflow* a
+            // SUB-by-bounded-scalar could smuggle past the checker).
             let delta_min = if op == alu::ADD { umin as i64 } else { -(umax as i64) };
             let delta_max = if op == alu::ADD { umax as i64 } else { -(umin as i64) };
+            let widen = (delta_max - delta_min) as u64;
             let moved = match ptr {
                 Reg::CtxPtr { off } => {
                     if delta_min != delta_max {
@@ -501,30 +557,21 @@ impl<'a> Verifier<'a> {
                     }
                     Reg::StackPtr { off: off + delta_min }
                 }
-                Reg::MapValue { map_id, off, vsize } => {
-                    // keep the worst case offset; access check uses width
-                    let _ = delta_max;
-                    Reg::MapValue { map_id, off: off + delta_min, vsize }
-                }
+                Reg::MapValue { map_id, off, span, vsize } => Reg::MapValue {
+                    map_id,
+                    off: off + delta_min,
+                    span: span + widen,
+                    vsize,
+                },
+                Reg::RingBufMem { size, off, span, ref_id } => Reg::RingBufMem {
+                    size,
+                    off: off + delta_min,
+                    span: span + widen,
+                    ref_id,
+                },
                 _ => unreachable!(),
             };
-            // For map values with a range, re-check both extremes by
-            // encoding the max into a second shadow check at access time:
-            // we choose the conservative (larger) offset for positive
-            // ranges since widths are checked against vsize.
-            let final_reg = if delta_min != delta_max {
-                match moved {
-                    Reg::MapValue { map_id, off, vsize } => Reg::MapValue {
-                        map_id,
-                        off: off.max(off + (delta_max - delta_min)),
-                        vsize,
-                    },
-                    other => other,
-                }
-            } else {
-                moved
-            };
-            return self.set_reg(st, ins.dst, final_reg, pc);
+            return self.set_reg(st, ins.dst, moved, pc);
         }
 
         // scalar-scalar ALU
@@ -713,26 +760,58 @@ impl<'a> Verifier<'a> {
                 }
                 Reg::scalar_unknown()
             }
-            Reg::MapValue { off: po, vsize, .. } => {
+            Reg::MapValue { off: po, span, vsize, .. } => {
+                // a = minimum runtime offset; a + span = maximum
                 let a = po + off;
-                if a < 0 || (a as u64 + width) > vsize as u64 {
+                if a < 0 || (a as u64 + span + width) > vsize as u64 {
                     return Err(self.err(
                         pc,
                         format!(
-                            "map value access out of bounds: offset {} width {} exceeds \
+                            "map value access out of bounds: offset {}..{} width {} exceeds \
                              value_size {}",
-                            a, width, vsize
+                            a,
+                            a + span as i64,
+                            width,
+                            vsize
                         ),
                     ));
                 }
                 Reg::scalar_unknown()
             }
-            Reg::MapValueOrNull { .. } => {
+            Reg::RingBufMem { off: po, span, size, .. } => {
+                let a = po + off;
+                if a < 0 || (a as u64 + span + width) > size as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "ringbuf record access out of bounds: offset {}..{} width {} \
+                             exceeds reserved size {}",
+                            a,
+                            a + span as i64,
+                            width,
+                            size
+                        ),
+                    ));
+                }
+                Reg::scalar_unknown()
+            }
+            Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. } => {
                 return Err(self.err(
                     pc,
                     format!(
-                        "R{} is a pointer to map_value_or_null; must check != NULL before \
+                        "R{} is a pointer to {}; must check != NULL before \
                          dereference",
+                        ins.src,
+                        base.type_name()
+                    ),
+                ));
+            }
+            Reg::RingBufReleased { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} points into a ringbuf record that was already \
+                         submitted/discarded (use after release)",
                         ins.src
                     ),
                 ));
@@ -821,29 +900,63 @@ impl<'a> Verifier<'a> {
                     self.info.stack_depth = depth;
                 }
             }
-            Reg::MapValue { off: po, vsize, .. } => {
+            Reg::MapValue { off: po, span, vsize, .. } => {
                 let a = po + off;
                 if val.is_pointer() {
                     return Err(self
                         .err(pc, "storing a pointer into a map value is not allowed".into()));
                 }
-                if a < 0 || (a as u64 + width) > vsize as u64 {
+                if a < 0 || (a as u64 + span + width) > vsize as u64 {
                     return Err(self.err(
                         pc,
                         format!(
-                            "map value access out of bounds: offset {} width {} exceeds \
+                            "map value access out of bounds: offset {}..{} width {} exceeds \
                              value_size {}",
-                            a, width, vsize
+                            a,
+                            a + span as i64,
+                            width,
+                            vsize
                         ),
                     ));
                 }
             }
-            Reg::MapValueOrNull { .. } => {
+            Reg::RingBufMem { off: po, span, size, .. } => {
+                let a = po + off;
+                if val.is_pointer() {
+                    return Err(self
+                        .err(pc, "storing a pointer into a ringbuf record is not allowed".into()));
+                }
+                if a < 0 || (a as u64 + span + width) > size as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "ringbuf record access out of bounds: offset {}..{} width {} \
+                             exceeds reserved size {}",
+                            a,
+                            a + span as i64,
+                            width,
+                            size
+                        ),
+                    ));
+                }
+            }
+            Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. } => {
                 return Err(self.err(
                     pc,
                     format!(
-                        "R{} is a pointer to map_value_or_null; must check != NULL before \
+                        "R{} is a pointer to {}; must check != NULL before \
                          dereference",
+                        ins.dst,
+                        base.type_name()
+                    ),
+                ));
+            }
+            Reg::RingBufReleased { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} points into a ringbuf record that was already \
+                         submitted/discarded (use after release)",
                         ins.dst
                     ),
                 ));
@@ -869,6 +982,17 @@ impl<'a> Verifier<'a> {
     ) -> VResult<Next> {
         let op = ins.op();
         if op == jmp::EXIT {
+            if let Some(&leaked) = st.refs.first() {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "unreleased reference: ringbuf record (ref {}) reserved by \
+                         bpf_ringbuf_reserve is never submitted or discarded on this exit \
+                         path",
+                        leaked
+                    ),
+                ));
+            }
             match st.regs[0] {
                 Reg::Scalar { .. } => Ok(Next::Exit),
                 Reg::Uninit => Err(self.err(pc, "R0 not set before exit".into())),
@@ -902,8 +1026,33 @@ impl<'a> Verifier<'a> {
                         } else {
                             (&mut fall, &mut taken)
                         };
-                        promote_nid(ok_side, nid, Reg::MapValue { map_id, off: 0, vsize });
+                        promote_nid(
+                            ok_side,
+                            nid,
+                            Reg::MapValue { map_id, off: 0, span: 0, vsize },
+                        );
                         promote_nid(null_side, nid, Reg::scalar_const(0));
+                        worklist.push((tgt, taken));
+                        *st = fall;
+                        return Ok(Next::Fallthrough(pc + 1));
+                    }
+                    if let Reg::RingBufMemOrNull { size, ref_id } = dstv {
+                        // split like lookup, but a NULL reserve acquired
+                        // nothing: the null side drops the reference
+                        let mut taken = st.clone();
+                        let mut fall = st.clone();
+                        let (null_side, ok_side) = if op == jmp::JEQ {
+                            (&mut taken, &mut fall)
+                        } else {
+                            (&mut fall, &mut taken)
+                        };
+                        promote_ring(
+                            ok_side,
+                            ref_id,
+                            Reg::RingBufMem { size, off: 0, span: 0, ref_id },
+                        );
+                        promote_ring(null_side, ref_id, Reg::scalar_const(0));
+                        null_side.refs.retain(|&r| r != ref_id);
                         worklist.push((tgt, taken));
                         *st = fall;
                         return Ok(Next::Fallthrough(pc + 1));
@@ -996,6 +1145,16 @@ impl<'a> Verifier<'a> {
         // the map referenced by a ConstMapPtr arg, for key/value sizing
         let mut call_map: Option<&MapDef> = None;
         let mut call_map_id: Option<u32> = None;
+        // constant reserve size (bpf_ringbuf_reserve)
+        let mut alloc_size: Option<u64> = None;
+        // ringbuf reference released by this call (submit/discard)
+        let mut released_ref: Option<u32> = None;
+        let is_ringbuf_helper = matches!(
+            hid,
+            helpers::id::RINGBUF_OUTPUT
+                | helpers::id::RINGBUF_RESERVE
+                | helpers::id::RINGBUF_QUERY
+        );
         for (i, at) in spec.args.iter().enumerate() {
             let r = (i + 1) as u8;
             let v = self.reg(st, r, pc).map_err(|e| {
@@ -1016,6 +1175,30 @@ impl<'a> Verifier<'a> {
                     };
                     call_map = self.maps.get(&map_id);
                     call_map_id = Some(map_id);
+                    // helper / map-kind compatibility: ringbuf helpers
+                    // take only ringbuf maps, element helpers never do
+                    if let Some(md) = call_map {
+                        let is_ring_map = md.kind == MapKind::RingBuf;
+                        if is_ringbuf_helper && !is_ring_map {
+                            return Err(self.err(
+                                pc,
+                                format!(
+                                    "{}: map '{}' is not a ringbuf map ({:?})",
+                                    spec.name, md.name, md.kind
+                                ),
+                            ));
+                        }
+                        if !is_ringbuf_helper && is_ring_map {
+                            return Err(self.err(
+                                pc,
+                                format!(
+                                    "{}: ringbuf map '{}' has no elements; use the \
+                                     bpf_ringbuf_* helpers",
+                                    spec.name, md.name
+                                ),
+                            ));
+                        }
+                    }
                 }
                 ArgType::MapKey | ArgType::MapValue => {
                     let need = {
@@ -1052,9 +1235,123 @@ impl<'a> Verifier<'a> {
                             format!("{} length arg must be a scalar", spec.name),
                         ));
                     };
-                    self.check_mem_arg(pc, spec.name, i + 1, v, umax.min(512), st)?;
+                    // ringbuf_output copies the full runtime length, so
+                    // the whole interval must be provably readable (an
+                    // unbounded length therefore fails the bounds check
+                    // and must be narrowed first); printk-style helpers
+                    // clamp at 512 in the runtime.
+                    let need = if hid == helpers::id::RINGBUF_OUTPUT {
+                        umax
+                    } else {
+                        umax.min(512)
+                    };
+                    self.check_mem_arg(pc, spec.name, i + 1, v, need, st)?;
                 }
+                ArgType::ConstAllocSize => {
+                    let Reg::Scalar { umin, umax } = v else {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{} (reserve size) must be a scalar, got {}",
+                                spec.name,
+                                i + 1,
+                                v.type_name()
+                            ),
+                        ));
+                    };
+                    if umin != umax {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{}: reserve size must be a known constant \
+                                 (got range {}..{})",
+                                spec.name,
+                                i + 1,
+                                umin,
+                                umax
+                            ),
+                        ));
+                    }
+                    if umin == 0 || umin > RINGBUF_LEN_MASK as u64 {
+                        return Err(self.err(
+                            pc,
+                            format!("{}: invalid reserve size {}", spec.name, umin),
+                        ));
+                    }
+                    if let Some(md) = call_map {
+                        let total = RINGBUF_HDR_SIZE + ((umin + 7) & !7);
+                        if total > md.max_entries as u64 {
+                            return Err(self.err(
+                                pc,
+                                format!(
+                                    "{}: reserve of {} bytes (+{} framing) exceeds \
+                                     ringbuf '{}' size {}",
+                                    spec.name, umin, RINGBUF_HDR_SIZE, md.name, md.max_entries
+                                ),
+                            ));
+                        }
+                    }
+                    alloc_size = Some(umin);
+                }
+                ArgType::RingBufMem => match v {
+                    Reg::RingBufMem { off, span, ref_id, .. } => {
+                        if off != 0 || span != 0 {
+                            return Err(self.err(
+                                pc,
+                                format!(
+                                    "{} arg{} must be the exact pointer returned by \
+                                     bpf_ringbuf_reserve (offset is {:+}..{:+})",
+                                    spec.name,
+                                    i + 1,
+                                    off,
+                                    off + span as i64
+                                ),
+                            ));
+                        }
+                        released_ref = Some(ref_id);
+                    }
+                    Reg::RingBufMemOrNull { .. } => {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{}: record pointer may be NULL; must check != NULL \
+                                 first",
+                                spec.name,
+                                i + 1
+                            ),
+                        ));
+                    }
+                    Reg::RingBufReleased { .. } => {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{}: ringbuf record was already submitted/discarded \
+                                 (double release / use after release)",
+                                spec.name,
+                                i + 1
+                            ),
+                        ));
+                    }
+                    other => {
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{} must be a reserved ringbuf record, got {}",
+                                spec.name,
+                                i + 1,
+                                other.type_name()
+                            ),
+                        ));
+                    }
+                },
             }
+        }
+
+        // release pass: submit/discard drops the reference and poisons
+        // every copy (registers and spills) of the record pointer
+        if let Some(ref_id) = released_ref {
+            st.refs.retain(|&r| r != ref_id);
+            promote_ring(st, ref_id, Reg::RingBufReleased { ref_id });
         }
 
         // clobber caller-saved registers, set R0 per return type
@@ -1074,6 +1371,16 @@ impl<'a> Verifier<'a> {
                     vsize: md.value_size,
                     nid,
                 }
+            }
+            RetType::RingBufMemOrNull => {
+                let size = alloc_size.ok_or_else(|| {
+                    self.err(pc, format!("{}: missing reserve size argument", spec.name))
+                })? as u32;
+                let ref_id = self.next_nid;
+                self.next_nid += 1;
+                // acquire: this path now owes a submit/discard
+                st.refs.push(ref_id);
+                Reg::RingBufMemOrNull { size, ref_id }
             }
         };
         Ok(())
@@ -1116,23 +1423,54 @@ impl<'a> Verifier<'a> {
                 }
                 Ok(())
             }
-            Reg::MapValue { off, vsize, .. } => {
-                if off < 0 || off as u64 + need > vsize as u64 {
+            Reg::MapValue { off, span, vsize, .. } => {
+                if off < 0 || off as u64 + span + need > vsize as u64 {
                     return Err(self.err(
                         pc,
                         format!(
-                            "{} arg{}: map-value buffer out of bounds (off {} need {} \
+                            "{} arg{}: map-value buffer out of bounds (off {}..{} need {} \
                              vsize {})",
-                            helper, argno, off, need, vsize
+                            helper,
+                            argno,
+                            off,
+                            off + span as i64,
+                            need,
+                            vsize
                         ),
                     ));
                 }
                 Ok(())
             }
-            Reg::MapValueOrNull { .. } => Err(self.err(
+            Reg::RingBufMem { off, span, size, .. } => {
+                if off < 0 || off as u64 + span + need > size as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "{} arg{}: ringbuf record buffer out of bounds (off {}..{} \
+                             need {} reserved {})",
+                            helper,
+                            argno,
+                            off,
+                            off + span as i64,
+                            need,
+                            size
+                        ),
+                    ));
+                }
+                Ok(())
+            }
+            Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. } => Err(self.err(
                 pc,
                 format!(
                     "{} arg{}: pointer may be NULL; must check != NULL first",
+                    helper, argno
+                ),
+            )),
+            Reg::RingBufReleased { .. } => Err(self.err(
+                pc,
+                format!(
+                    "{} arg{}: ringbuf record was already submitted/discarded (use after \
+                     release)",
                     helper, argno
                 ),
             )),
@@ -1163,6 +1501,29 @@ fn promote_nid(st: &mut State, nid: u32, to: Reg) {
             if *n == nid {
                 *r = to;
             }
+        }
+    }
+}
+
+/// Rewrite every register / spill slot carrying ringbuf reference
+/// `ref_id` (any of the three ringbuf pointer states).
+fn promote_ring(st: &mut State, ref_id: u32, to: Reg) {
+    let matches_ref = |r: &Reg| {
+        matches!(
+            r,
+            Reg::RingBufMemOrNull { ref_id: n, .. }
+            | Reg::RingBufMem { ref_id: n, .. }
+            | Reg::RingBufReleased { ref_id: n } if *n == ref_id
+        )
+    };
+    for r in st.regs.iter_mut() {
+        if matches_ref(r) {
+            *r = to;
+        }
+    }
+    for (_, r) in st.spills.iter_mut() {
+        if matches_ref(r) {
+            *r = to;
         }
     }
 }
@@ -1618,5 +1979,361 @@ mod tests {
     fn verify_info_tracks_stack_depth() {
         let info = ok(&[st_imm(size::DW, 10, -32, 1), mov64_imm(0, 0), exit()]);
         assert_eq!(info.stack_depth, 32);
+    }
+
+    // -- ringbuf reference tracking -----------------------------------------
+
+    /// maps: id 7 = array (as in `one_map`), id 9 = 4 KiB ringbuf
+    fn ring_maps() -> HashMap<u32, MapDef> {
+        let mut m = one_map();
+        m.insert(
+            9,
+            MapDef {
+                name: "events".into(),
+                kind: MapKind::RingBuf,
+                key_size: 0,
+                value_size: 0,
+                max_entries: 4096,
+            },
+        );
+        m
+    }
+
+    fn prof_ctx() -> CtxLayout {
+        CtxLayout { size: 32, read: vec![(0, 32)], write: vec![] }
+    }
+
+    fn rb_ok(prog: &[Insn]) -> VerifyInfo {
+        verify(prog, ProgType::Profiler, &prof_ctx(), &ring_maps()).expect("should verify")
+    }
+
+    fn rb_fails(prog: &[Insn]) -> VerifyError {
+        verify(prog, ProgType::Profiler, &prof_ctx(), &ring_maps())
+            .expect_err("should be rejected")
+    }
+
+    /// reserve(16) -> null-check -> [reserved program body] built by
+    /// each test; the prefix ends with the record pointer in r0.
+    fn reserve_prefix() -> Vec<Insn> {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131)); // bpf_ringbuf_reserve
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2)); // if r0 != 0 continue below
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p
+    }
+
+    fn submit(recp: u8) -> Vec<Insn> {
+        vec![mov64_reg(1, recp), mov64_imm(2, 0), call(132)]
+    }
+
+    #[test]
+    fn ringbuf_reserve_write_submit_ok() {
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(6, 0));
+        p.push(st_imm(size::DW, 6, 0, 42));
+        p.push(st_imm(size::DW, 6, 8, 43)); // [8,16) still in bounds
+        p.extend(submit(6));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let info = rb_ok(&p);
+        assert!(info.helpers_used.contains(&131));
+        assert!(info.helpers_used.contains(&132));
+        assert!(info.used_maps.contains(&9));
+    }
+
+    #[test]
+    fn ringbuf_discard_also_releases() {
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(1, 0));
+        p.push(mov64_imm(2, 0));
+        p.push(call(133)); // bpf_ringbuf_discard
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        rb_ok(&p);
+    }
+
+    #[test]
+    fn ringbuf_leak_on_exit_rejected() {
+        // success path exits without submit/discard
+        let mut p = reserve_prefix();
+        p.push(mov64_imm(0, 0));
+        p.push(exit()); // BUG: reserved record leaks
+        let e = rb_fails(&p);
+        assert!(e.message.contains("unreleased"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_leak_on_one_branch_rejected() {
+        // submit happens only when ctx[0] != 0: the other path leaks
+        let mut p = vec![mov64_reg(7, 1)]; // save ctx
+        p.extend(reserve_prefix());
+        p.push(mov64_reg(6, 0));
+        p.push(ldx(size::W, 8, 7, 0));
+        p.push(jmp_imm(jmp::JEQ, 8, 0, 3)); // skip the submit
+        p.extend(submit(6));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("unreleased"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_use_after_submit_rejected() {
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(6, 0));
+        p.extend(submit(6));
+        p.push(ldx(size::DW, 3, 6, 0)); // BUG: record already submitted
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("use after release"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_use_after_submit_via_spill_rejected() {
+        // the released reference must poison spilled copies too
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(6, 0));
+        p.push(stx(size::DW, 10, 6, -8)); // spill the record pointer
+        p.extend(submit(6));
+        p.push(ldx(size::DW, 7, 10, -8)); // restore the stale copy
+        p.push(ldx(size::DW, 3, 7, 0)); // BUG
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("use after release"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_double_submit_rejected() {
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(6, 0));
+        p.extend(submit(6));
+        p.extend(submit(6)); // BUG: double release
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(
+            e.message.contains("double release") || e.message.contains("use after release"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn ringbuf_write_past_reserved_size_rejected() {
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(6, 0));
+        p.push(st_imm(size::DW, 6, 12, 1)); // BUG: [12,20) > 16 reserved
+        p.extend(submit(6));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(
+            e.message.contains("out of bounds") && e.message.contains("reserved size"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn ringbuf_unchecked_reserve_deref_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(st_imm(size::DW, 0, 0, 1)); // BUG: no null check
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(
+            e.message.contains("ringbuf_mem_or_null") && e.message.contains("!= NULL"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn ringbuf_variable_reserve_size_rejected() {
+        let mut p = vec![];
+        p.push(ldx(size::W, 2, 1, 0)); // unknown scalar from ctx
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("known constant"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_reserve_larger_than_ring_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 8192)); // > 4096 ring
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("exceeds ringbuf"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_submit_of_offset_pointer_rejected() {
+        let mut p = reserve_prefix();
+        p.push(mov64_reg(6, 0));
+        p.push(alu64_imm(alu::ADD, 6, 8)); // move inside the record
+        p.extend(submit(6));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("exact pointer"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_helpers_on_element_map_rejected() {
+        // reserve on an array map
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7)); // array map
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("not a ringbuf map"), "{}", e.message);
+        // lookup on a ringbuf map
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 9));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("no elements"), "{}", e.message);
+    }
+
+    #[test]
+    fn ringbuf_helpers_not_whitelisted_for_tuner() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = verify(&p, ProgType::Tuner, &ctx_rw(), &ring_maps())
+            .expect_err("tuner must not reserve");
+        assert!(e.message.contains("illegal helper"), "{}", e.message);
+    }
+
+    /// Regression for the variable-offset soundness hole: tracking only
+    /// the *maximum* offset after pointer arithmetic with a bounded
+    /// scalar let a SUB smuggle a negative runtime offset past the
+    /// bounds check and write the record's framing header.
+    #[test]
+    fn ringbuf_variable_sub_header_underflow_rejected() {
+        let mut p = vec![mov64_reg(7, 1)]; // save ctx
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 32));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131)); // reserve 32
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_reg(8, 0)); // base pointer (for the submit)
+        p.push(mov64_reg(6, 0));
+        p.push(alu64_imm(alu::ADD, 6, 8));
+        p.push(ldx(size::W, 2, 7, 0)); // unknown scalar
+        p.push(jmp_imm(jmp::JLT, 2, 17, 2)); // bound r2 to [0,16]
+        p.push(mov64_imm(2, 0));
+        p.push(ja(0));
+        p.push(alu64_reg(alu::SUB, 6, 2)); // runtime offset in [-8, 8]
+        p.push(st_imm(size::DW, 6, 0, 1)); // BUG: may hit the header at -8
+        p.extend(submit(8));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("out of bounds"), "{}", e.message);
+    }
+
+    /// Same hole, ADD form: a variable positive offset followed by a
+    /// negative static displacement must check the *minimum* extreme.
+    #[test]
+    fn ringbuf_variable_add_negative_static_offset_rejected() {
+        let mut p = vec![mov64_reg(7, 1)];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 32));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_reg(8, 0)); // base pointer (for the submit)
+        p.push(mov64_reg(6, 0));
+        p.push(ldx(size::W, 2, 7, 0));
+        p.push(jmp_imm(jmp::JLT, 2, 17, 2)); // r2 in [0,16]
+        p.push(mov64_imm(2, 0));
+        p.push(ja(0));
+        p.push(alu64_reg(alu::ADD, 6, 2)); // tracked interval [0,16]
+        p.push(st_imm(size::DW, 6, -16, 1)); // BUG: runtime offset may be -16
+        p.extend(submit(8));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = rb_fails(&p);
+        assert!(e.message.contains("out of bounds"), "{}", e.message);
+    }
+
+    /// The sound counterpart still verifies: a bounded variable offset
+    /// whose whole interval stays inside the reservation.
+    #[test]
+    fn ringbuf_variable_offset_within_bounds_ok() {
+        let mut p = vec![mov64_reg(7, 1)];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 32));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_reg(6, 0));
+        p.push(ldx(size::W, 2, 7, 0));
+        p.push(jmp_imm(jmp::JLT, 2, 17, 2)); // r2 in [0,16]
+        p.push(mov64_imm(2, 0));
+        p.push(ja(0));
+        p.push(alu64_reg(alu::ADD, 6, 2)); // interval [0,16]
+        p.push(st_imm(size::DW, 6, 8, 1)); // [8,32) ⊆ [0,32) for all r2
+        // submit must still take the untouched base pointer
+        p.push(mov64_reg(1, 0));
+        p.push(mov64_imm(2, 0));
+        p.push(call(132));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        rb_ok(&p);
+    }
+
+    #[test]
+    fn ringbuf_output_from_stack_ok() {
+        let mut p = vec![];
+        p.push(st_imm(size::DW, 10, -16, 7));
+        p.push(st_imm(size::DW, 10, -8, 9));
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -16));
+        p.push(mov64_imm(3, 16));
+        p.push(mov64_imm(4, 0));
+        p.push(call(130)); // bpf_ringbuf_output
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let info = rb_ok(&p);
+        assert!(info.helpers_used.contains(&130));
     }
 }

@@ -106,6 +106,14 @@ pub fn builtin_consts() -> HashMap<&'static str, i64> {
         ("NCCL_COLL_REDUCESCATTER", 2),
         ("NCCL_COLL_BROADCAST", 3),
         ("BPF_ANY", 0),
+        // ringbuf flags (kernel numbering): output/submit wakeup hints
+        // are accepted and ignored by this runtime, query selectors work
+        ("BPF_RB_NO_WAKEUP", 1),
+        ("BPF_RB_FORCE_WAKEUP", 2),
+        ("BPF_RB_AVAIL_DATA", 0),
+        ("BPF_RB_RING_SIZE", 1),
+        ("BPF_RB_CONS_POS", 2),
+        ("BPF_RB_PROD_POS", 3),
     ])
 }
 
@@ -812,6 +820,16 @@ impl<'a> FnCtx<'a> {
 /// Convert a map declaration's types into a runtime MapDef.
 fn mapdef_of(unit: &Unit, structs: &HashMap<String, StructDef>, d: &MapDecl) -> CResult<MapDef> {
     let _ = unit;
+    if d.kind == crate::bpf::maps::MapKind::RingBuf {
+        // BPF_RINGBUF(name, size): no key/value; max_entries is bytes
+        return Ok(MapDef {
+            name: d.name.clone(),
+            kind: d.kind,
+            key_size: 0,
+            value_size: 0,
+            max_entries: d.max_entries,
+        });
+    }
     let sz = |t: &Ty| -> CResult<u32> {
         match t {
             Ty::Scalar(s) => Ok(s.size()),
@@ -1031,6 +1049,107 @@ int size_aware_adaptive(struct policy_context *ctx) {
         let mut pctx = PolicyContext::new(CollType::AllReduce, 16 << 10, 8, 7, 32);
         tuner.run(&mut pctx as *mut PolicyContext as *mut u8);
         assert_eq!(pctx.algorithm, abi::ALGO_TREE);
+    }
+
+    #[test]
+    fn ringbuf_output_policy_compiles_and_streams() {
+        let src = r#"
+struct rb_event {
+    __u32 a;
+    __u32 b;
+    __u64 c;
+};
+BPF_RINGBUF(events, 4096);
+SEC("profiler")
+int emit(struct profiler_context *ctx) {
+    struct rb_event ev = {};
+    ev.a = ctx->comm_id;
+    ev.b = ctx->n_channels;
+    ev.c = ctx->latency_ns;
+    bpf_ringbuf_output(&events, &ev, 16, 0);
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        let mut prof = crate::host::ctx::ProfilerContext {
+            comm_id: 42,
+            coll_type: 0,
+            msg_size: 1 << 20,
+            latency_ns: 777,
+            n_channels: 9,
+            seq: 0,
+        };
+        progs[0].run(&mut prof as *mut _ as *mut u8);
+        let ring = progs[0].map("events").expect("ring map bound");
+        let mut got = Vec::new();
+        ring.ringbuf_drain(&mut |b| {
+            assert_eq!(b.len(), 16);
+            got.push((
+                u32::from_le_bytes(b[0..4].try_into().unwrap()),
+                u32::from_le_bytes(b[4..8].try_into().unwrap()),
+                u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            ));
+        });
+        assert_eq!(got, vec![(42, 9, 777)]);
+    }
+
+    #[test]
+    fn ringbuf_reserve_submit_policy_via_cast() {
+        // the zero-copy authoring pattern: reserve, fill in place, submit
+        let src = r#"
+struct rb_event {
+    __u64 lat;
+    __u64 seq;
+};
+BPF_RINGBUF(events, 4096);
+SEC("profiler")
+int emit(struct profiler_context *ctx) {
+    struct rb_event *e = (struct rb_event *) bpf_ringbuf_reserve(&events, 16, 0);
+    if (!e) return 0;
+    e->lat = ctx->latency_ns;
+    e->seq = ctx->seq;
+    bpf_ringbuf_submit(e, 0);
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        let mut prof = crate::host::ctx::ProfilerContext {
+            comm_id: 1,
+            coll_type: 0,
+            msg_size: 0,
+            latency_ns: 555,
+            n_channels: 1,
+            seq: 3,
+        };
+        progs[0].run(&mut prof as *mut _ as *mut u8);
+        let ring = progs[0].map("events").expect("ring map bound");
+        let mut got = Vec::new();
+        ring.ringbuf_drain(&mut |b| {
+            got.push(u64::from_le_bytes(b[..8].try_into().unwrap()));
+            got.push(u64::from_le_bytes(b[8..16].try_into().unwrap()));
+        });
+        assert_eq!(got, vec![555, 3]);
+    }
+
+    #[test]
+    fn ringbuf_leaky_c_policy_rejected_at_load() {
+        // forgetting the submit is a load-time error, not a runtime leak
+        let src = r#"
+struct rb_event { __u64 lat; };
+BPF_RINGBUF(events, 4096);
+SEC("profiler")
+int leaky(struct profiler_context *ctx) {
+    struct rb_event *e = (struct rb_event *) bpf_ringbuf_reserve(&events, 8, 0);
+    if (!e) return 0;
+    e->lat = ctx->latency_ns;
+    return 0;
+}
+"#;
+        let unit = parse(src).unwrap();
+        let obj = compile_unit(&unit).unwrap();
+        let reg = MapRegistry::new();
+        let err = load_object(&obj, &reg, &layouts()).unwrap_err();
+        assert!(err.to_string().contains("unreleased"), "{}", err);
     }
 
     #[test]

@@ -129,6 +129,9 @@ impl Parser {
                 Tok::Ident(id) if id == "BPF_MAP" => {
                     unit.maps.push(self.map_decl()?);
                 }
+                Tok::Ident(id) if id == "BPF_RINGBUF" => {
+                    unit.maps.push(self.ringbuf_decl()?);
+                }
                 Tok::Ident(id) if id == "SEC" => {
                     unit.funcs.push(self.func_def()?);
                 }
@@ -183,6 +186,13 @@ impl Parser {
             "BPF_MAP_TYPE_HASH" => MapKind::Hash,
             "BPF_MAP_TYPE_ARRAY" => MapKind::Array,
             "BPF_MAP_TYPE_PERCPU_ARRAY" => MapKind::PerCpuArray,
+            "BPF_MAP_TYPE_RINGBUF" => {
+                return self.err(
+                    "ringbuf maps take no key/value types; declare with \
+                     BPF_RINGBUF(name, size_bytes)"
+                        .to_string(),
+                )
+            }
             other => return self.err(format!("unknown map type '{}'", other)),
         };
         self.expect(Tok::Comma)?;
@@ -197,6 +207,28 @@ impl Parser {
         self.expect(Tok::RParen)?;
         self.expect(Tok::Semi)?;
         Ok(MapDecl { name, kind, key_ty, value_ty, max_entries })
+    }
+
+    /// BPF_RINGBUF(events, 65536);  — size in bytes, power of two.
+    fn ringbuf_decl(&mut self) -> PResult<MapDecl> {
+        self.expect(Tok::Ident("BPF_RINGBUF".into()))?;
+        self.expect(Tok::LParen)?;
+        let name = self.ident()?;
+        self.expect(Tok::Comma)?;
+        let size = match self.next() {
+            Tok::Int(v) if v > 0 => v as u32,
+            other => return self.err(format!("expected ring size in bytes, got {}", other)),
+        };
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Semi)?;
+        // key/value types are placeholders; codegen emits 0/0 sizes
+        Ok(MapDecl {
+            name,
+            kind: MapKind::RingBuf,
+            key_ty: Ty::Scalar(ScalarTy::U32),
+            value_ty: Ty::Scalar(ScalarTy::U32),
+            max_entries: size,
+        })
     }
 
     /// SEC("tuner") int name(struct policy_context *ctx) { ... }
@@ -667,7 +699,19 @@ int ops(struct policy_context *ctx) {
     #[test]
     fn rejects_unknown_map_type() {
         let e = parse("BPF_MAP(m, BPF_MAP_TYPE_RINGBUF, __u32, __u64, 4);").unwrap_err();
+        assert!(e.message.contains("BPF_RINGBUF"), "steer to the ringbuf macro: {}", e);
+        let e = parse("BPF_MAP(m, BPF_MAP_TYPE_STACK, __u32, __u64, 4);").unwrap_err();
         assert!(e.message.contains("unknown map type"));
+    }
+
+    #[test]
+    fn parse_ringbuf_decl() {
+        let u = parse("BPF_RINGBUF(events, 65536);").unwrap();
+        assert_eq!(u.maps.len(), 1);
+        assert_eq!(u.maps[0].kind, MapKind::RingBuf);
+        assert_eq!(u.maps[0].max_entries, 65536);
+        assert!(parse("BPF_RINGBUF(events);").is_err());
+        assert!(parse("BPF_RINGBUF(events, 0);").is_err());
     }
 
     #[test]

@@ -2,6 +2,56 @@
 
 use std::collections::HashMap;
 
+/// The single source of truth for wired subcommands: (name, usage
+/// suffix, one-line help). `main` builds its dispatch from this table
+/// and the usage/error text is generated from it, so the help can
+/// never drift from the actually-wired set again.
+pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
+    ("verify", "<policy.c|.s>", "compile + verify a policy, print report"),
+    ("disasm", "<policy.c|.s>", "compile + disassemble"),
+    ("allreduce", "[--size 64M --ranks 8 --policy NAME]", "run one AllReduce under a policy"),
+    ("sweep", "[--ranks N]", "Table 2 algorithm sweep"),
+    ("train", "[--ranks 4 --steps 50 --policy NAME]", "DDP training with the policy attached"),
+    ("safety", "", "run the accept/reject suite (§5.2 + ringbuf classes)"),
+    ("hotreload", "", "demonstrate atomic policy swap"),
+    (
+        "traffic",
+        "[--comms N --threads N --ops K --reload-every MS]",
+        "concurrent multi-communicator traffic engine with invariant checks",
+    ),
+    (
+        "trace",
+        "[--ops N --json --follow --once]",
+        "stream structured latency events from a ringbuf profiler policy",
+    ),
+    (
+        "bench",
+        "[--out DIR] [--quick]",
+        "run the paper-shaped measurement suite, write BENCH_<name>.json",
+    ),
+];
+
+/// True iff `name` is a wired subcommand.
+pub fn is_subcommand(name: &str) -> bool {
+    SUBCOMMANDS.iter().any(|(n, _, _)| *n == name)
+}
+
+/// Usage text generated from [`SUBCOMMANDS`].
+pub fn usage() -> String {
+    let names: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _, _)| *n).collect();
+    let mut out = format!("usage: ncclbpf <{}> [flags]\n\nsubcommands:\n", names.join("|"));
+    for (name, args, help) in SUBCOMMANDS {
+        let left = if args.is_empty() {
+            (*name).to_string()
+        } else {
+            format!("{} {}", name, args)
+        };
+        out.push_str(&format!("  {:<55} {}\n", left, help));
+    }
+    out.push_str("\nsee README.md for examples");
+    out
+}
+
 /// Parsed command line: subcommand, positional args, --key value flags.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -82,5 +132,21 @@ mod tests {
         // --fast consumes prog.c as its value (documented behavior:
         // place boolean flags last or use --fast=true)
         assert_eq!(a.flag("fast"), Some("prog.c"));
+    }
+
+    #[test]
+    fn subcommand_table_is_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for (name, _, help) in SUBCOMMANDS {
+            assert!(!name.is_empty() && !help.is_empty());
+            assert!(seen.insert(*name), "duplicate subcommand '{}'", name);
+        }
+        assert!(is_subcommand("trace"));
+        assert!(is_subcommand("traffic"));
+        assert!(!is_subcommand("frobnicate"));
+        let u = usage();
+        for (name, _, _) in SUBCOMMANDS {
+            assert!(u.contains(name), "usage must list '{}'", name);
+        }
     }
 }

@@ -8,10 +8,11 @@ pub mod ctx;
 pub mod native;
 pub mod policydir;
 pub mod reload;
+pub mod ringbuf;
 pub mod traffic;
 
-use crate::bpf::program::load_object;
-use crate::bpf::{LoadError, Map, MapRegistry, Object, ProgType};
+use crate::bpf::program::load_object_with_sink;
+use crate::bpf::{LoadError, Map, MapRegistry, Object, PrintkSink, ProgType};
 use crate::cc::net::NetHook;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
 use ctx::{NetContext, PolicyContext, ProfilerContext};
@@ -45,6 +46,11 @@ pub struct NcclBpfHost {
     tuner: ReloadSlot,
     profiler: ReloadSlot,
     net: ReloadSlot,
+    /// host-owned `bpf_trace_printk` sink: every program installed into
+    /// this host writes through it, so `ncclbpf trace` can interleave
+    /// printk lines with ring events and tests can capture output
+    /// without process-global stdio hacks
+    printk: Arc<PrintkSink>,
     /// tuner decisions executed
     pub decisions: AtomicU64,
     /// profiler events executed
@@ -68,11 +74,18 @@ impl NcclBpfHost {
             tuner: ReloadSlot::new(),
             profiler: ReloadSlot::new(),
             net: ReloadSlot::new(),
+            printk: PrintkSink::stderr(),
             decisions: AtomicU64::new(0),
             prof_events: AtomicU64::new(0),
             net_events: AtomicU64::new(0),
             invalid_outputs: AtomicU64::new(0),
         }
+    }
+
+    /// The host's `bpf_trace_printk` sink (rebindable at any time;
+    /// already-installed programs pick the new target up immediately).
+    pub fn printk_sink(&self) -> Arc<PrintkSink> {
+        self.printk.clone()
     }
 
     fn slot(&self, pt: ProgType) -> &ReloadSlot {
@@ -88,7 +101,8 @@ impl NcclBpfHost {
     /// failure *nothing* is swapped — the old policies keep running
     /// ("the system never enters an unverified state", §4).
     pub fn install_object(&self, obj: &Object) -> Result<LoadReport, LoadError> {
-        let progs = load_object(obj, &self.maps, &ctx::layouts())?;
+        let progs =
+            load_object_with_sink(obj, &self.maps, &ctx::layouts(), Some(self.printk.clone()))?;
         let mut report = LoadReport::default();
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
@@ -584,6 +598,40 @@ have:
         let ops = m.read_value(&0u32.to_le_bytes()).unwrap();
         assert_eq!(u64::from_le_bytes(ops[8..16].try_into().unwrap()), 3);
         assert_eq!(host.net_events.load(Ordering::Relaxed), 3);
+    }
+
+    /// Satellite: trace_printk output is routed through the host-owned
+    /// sink, so tests capture it without process-global stdio capture.
+    #[test]
+    fn printk_routes_through_host_sink() {
+        let host = NcclBpfHost::new();
+        host.printk_sink().set_capture();
+        host.install_asm(
+            "prog profiler pk\n  stw [r10-8], 0x21746168\n  mov64 r1, r10\n  add64 r1, -8\n  \
+             mov64 r2, 4\n  call bpf_trace_printk\n  mov64 r0, 0\n  exit\n",
+        )
+        .unwrap();
+        let ev = ProfilerEvent::CollEnd {
+            comm_id: 1,
+            seq: 0,
+            coll: CollType::AllReduce,
+            nbytes: 1024,
+            cfg: CollConfig::new(Algo::Ring, Proto::Simple, 4),
+            ts_ns: 0,
+            latency_ns: 1000,
+        };
+        host.profiler_handle(&ev);
+        host.profiler_handle(&ev);
+        assert_eq!(
+            host.printk_sink().drain_captured(),
+            vec!["hat!".to_string(), "hat!".to_string()],
+            "printk lines must land in the host sink, not stderr"
+        );
+        // rebinding the sink affects already-installed programs
+        host.printk_sink().set_stderr();
+        host.printk_sink().set_capture();
+        host.profiler_handle(&ev);
+        assert_eq!(host.printk_sink().drain_captured().len(), 1);
     }
 
     #[test]

@@ -46,8 +46,9 @@ pub const SAFE_POLICIES: [&str; 7] = [
     "nvlink_ring_mid_v2",
 ];
 
-/// The 7 unsafe programs, one per bug class (§5.2).
-pub const UNSAFE_POLICIES: [(&str, &str); 7] = [
+/// The unsafe programs, one per bug class: the paper's seven (§5.2)
+/// plus the three ringbuf reference-tracking classes.
+pub const UNSAFE_POLICIES: [(&str, &str); 10] = [
     ("null_deref", "map_value_or_null"),
     ("oob_access", "out of bounds"),
     ("illegal_helper", "illegal helper"),
@@ -55,6 +56,9 @@ pub const UNSAFE_POLICIES: [(&str, &str); 7] = [
     ("unbounded_loop", "unbounded loop"),
     ("input_write", "read-only"),
     ("div_zero", "division by zero"),
+    ("ringbuf_leak", "unreleased"),
+    ("ringbuf_use_after_submit", "use after release"),
+    ("ringbuf_oob", "reserved size"),
 ];
 
 /// Build an unsafe-suite program from `policies/unsafe/`.
@@ -82,8 +86,9 @@ mod tests {
             host.install_object(&obj)
                 .unwrap_or_else(|e| panic!("{} must verify: {}", name, e));
         }
-        // profiler + net companions
-        for name in ["record_latency", "net_count", "bad_channels"] {
+        // profiler + net companions (latency_events is the ringbuf
+        // producer behind `ncclbpf trace` and the closed-loop driver)
+        for name in ["record_latency", "net_count", "bad_channels", "latency_events"] {
             let obj = build_named(name).unwrap();
             host.install_object(&obj).unwrap();
         }

@@ -27,7 +27,17 @@
 use crate::bpf::LoadedProgram;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock with poison recovery: a thread that panicked while holding one
+/// of the slot's mutexes (a dying benchmark thread mid-install) must
+/// not wedge every subsequent reload with a poisoned-mutex abort. The
+/// guarded state stays consistent under poisoning: `current` holds an
+/// Arc swap target and `retired` a retire list — both are valid at
+/// every instruction boundary, so recovering the inner value is safe.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Number of reader-counter stripes. Readers pick a stripe by thread,
 /// so concurrent dispatchers on different threads do not ping-pong one
@@ -138,7 +148,7 @@ impl ReloadSlot {
     pub fn swap(&self, new: Arc<LoadedProgram>) -> u64 {
         let new_ptr = Arc::as_ptr(&new) as *mut LoadedProgram;
         // serialize swappers; readers never take this lock
-        let mut cur = self.current.lock().unwrap();
+        let mut cur = plock(&self.current);
         let t0 = std::time::Instant::now();
         // CAS loop (paper: "atomically swaps the function pointer via
         // compare-and-swap"); under concurrent reloaders last-wins.
@@ -163,7 +173,7 @@ impl ReloadSlot {
         let prev = cur.replace(new);
         drop(cur);
         if let Some(old) = prev {
-            self.retired.lock().unwrap().push((epoch, old));
+            plock(&self.retired).push((epoch, old));
         }
         self.last_swap_ns.store(ns, Ordering::Relaxed);
         self.try_reclaim();
@@ -176,13 +186,13 @@ impl ReloadSlot {
     /// reclaimer that pre-loaded the epoch free it while a concurrent
     /// reader still holds it.
     pub fn clear(&self) {
-        let mut cur = self.current.lock().unwrap();
+        let mut cur = plock(&self.current);
         self.active.store(std::ptr::null_mut(), Ordering::SeqCst);
         let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
         let prev = cur.take();
         drop(cur);
         if let Some(old) = prev {
-            self.retired.lock().unwrap().push((epoch, old));
+            plock(&self.retired).push((epoch, old));
         }
         self.try_reclaim();
     }
@@ -197,7 +207,7 @@ impl ReloadSlot {
         if self.readers.iter().any(|s| s.0.load(Ordering::SeqCst) != 0) {
             return 0;
         }
-        let mut retired = self.retired.lock().unwrap();
+        let mut retired = plock(&self.retired);
         let before = retired.len();
         retired.retain(|(e, _)| *e > quiescent_epoch);
         before - retired.len()
@@ -205,7 +215,7 @@ impl ReloadSlot {
 
     /// Number of retired (still-alive, not-yet-reclaimed) versions.
     pub fn retired_count(&self) -> usize {
-        self.retired.lock().unwrap().len()
+        plock(&self.retired).len()
     }
 }
 
@@ -294,6 +304,37 @@ mod tests {
         assert_eq!(s.try_reclaim(), 0, "live reader must block reclamation");
         drop(g);
         assert_eq!(s.try_reclaim(), 1);
+        assert_eq!(s.retired_count(), 0);
+    }
+
+    /// Satellite: a thread that panics while holding the install-path
+    /// lock must not poison every subsequent reload. Before the
+    /// poison-recovering locks, the second `swap` below aborted with
+    /// `PoisonError`.
+    #[test]
+    fn poisoned_install_lock_recovers() {
+        let s = Arc::new(ReloadSlot::new());
+        s.swap(prog(101));
+        let s2 = s.clone();
+        let panicked = std::thread::spawn(move || {
+            let _guard = s2.current.lock().unwrap();
+            panic!("benchmark thread dies while holding the install path");
+        })
+        .join();
+        assert!(panicked.is_err(), "helper thread must have panicked");
+        // both mutexes: poison `retired` too via a guard held at panic
+        let s3 = s.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = s3.retired.lock().unwrap();
+            panic!("die holding the retire list");
+        })
+        .join();
+        // reload still works end to end
+        s.swap(prog(102));
+        assert_eq!(s.get().unwrap().run(std::ptr::null_mut()), 102);
+        s.clear();
+        assert!(s.get().is_none());
+        s.try_reclaim();
         assert_eq!(s.retired_count(), 0);
     }
 

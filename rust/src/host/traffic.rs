@@ -88,20 +88,36 @@ out:
   exit
 "#;
 
-/// Profiler policy: one per-cpu counter bump per CollEnd event.
+/// Profiler policy: one per-cpu counter bump per CollEnd event, plus a
+/// 16-byte structured event (latency_ns, seq) pushed into the
+/// `traffic_events` ring buffer — the consumer thread drains it live
+/// and the run checks `drained + dropped == ops` at the end.
 const PROFILER_COUNTER: &str = r#"
 map prof_hits percpu key=4 value=8 entries=1
+map traffic_events ringbuf entries=262144
 
 prog profiler traffic_prof
+  mov64 r6, r1
   stw   [r10-4], 0
   mov64 r2, r10
   add64 r2, -4
   ldmap r1, prof_hits
   call  bpf_map_lookup_elem
-  jeq   r0, 0, out
+  jeq   r0, 0, emit
   ldxdw r3, [r0+0]
   add64 r3, 1
   stxdw [r0+0], r3
+emit:
+  ldxdw r3, [r6+16]       ; latency_ns
+  stxdw [r10-24], r3
+  ldxw  r4, [r6+28]       ; seq
+  stxdw [r10-16], r4
+  ldmap r1, traffic_events
+  mov64 r2, r10
+  add64 r2, -24
+  mov64 r3, 16
+  mov64 r4, 0
+  call  bpf_ringbuf_output
 out:
   mov64 r0, 0
   exit
@@ -168,6 +184,10 @@ pub struct TrafficReport {
     /// all-slot sums of the policy counter maps
     pub tuner_map_hits: u64,
     pub prof_map_hits: u64,
+    /// structured events drained from the `traffic_events` ring this run
+    pub ring_drained: u64,
+    /// producer-side ring drops this run (failed reservations)
+    pub ring_dropped: u64,
     /// invariant violations (empty == clean run)
     pub violations: Vec<String>,
     pub per_thread: Vec<ThreadStats>,
@@ -203,6 +223,30 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
     let stop = Arc::new(AtomicBool::new(false));
     let reloads = Arc::new(AtomicU64::new(0));
 
+    // ring consumer: drain any leftovers from a previous run on this
+    // host first, then count only this run's records (drop/discard
+    // counters via delta)
+    let ring_map = host.map("traffic_events");
+    let ring_dropped_before = ring_map.as_ref().map(|m| m.ringbuf_dropped()).unwrap_or(0);
+    let ring_discarded_before = ring_map.as_ref().map(|m| m.ringbuf_discarded()).unwrap_or(0);
+    if let Some(m) = ring_map.as_ref() {
+        m.ringbuf_drain(&mut |_| {});
+    }
+    let consumer = ring_map.clone().map(|m| {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut c =
+                crate::host::ringbuf::RingConsumer::new(m).expect("traffic ring map kind");
+            let mut torn_records = 0u64;
+            let drained = c.drain_until(&stop, |b| {
+                if b.len() != 16 {
+                    torn_records += 1;
+                }
+            });
+            (drained, torn_records)
+        })
+    });
+
     // reloader: alternate tuner variants until the workers finish
     let reloader = opts.reload_every_ms.map(|every_ms| {
         let host = host.clone();
@@ -237,10 +281,23 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
     let per_thread: Vec<ThreadStats> =
         workers.into_iter().map(|h| h.join().expect("traffic worker panicked")).collect();
     let wall_ns = t0.elapsed().as_nanos() as u64;
-    stop.store(true, Ordering::Relaxed);
+    stop.store(true, Ordering::Release);
     if let Some(h) = reloader {
         h.join().expect("reloader panicked");
     }
+    let (ring_drained, ring_torn) = consumer
+        .map(|h| h.join().expect("ring consumer panicked"))
+        .unwrap_or((0, 0));
+    let ring_dropped = ring_map
+        .as_ref()
+        .map(|m| m.ringbuf_dropped())
+        .unwrap_or(0)
+        .saturating_sub(ring_dropped_before);
+    let ring_discarded = ring_map
+        .as_ref()
+        .map(|m| m.ringbuf_discarded())
+        .unwrap_or(0)
+        .saturating_sub(ring_discarded_before);
     host.reclaim_retired();
 
     // -- aggregate + invariant checks ----------------------------------------
@@ -290,6 +347,20 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
             ));
         }
     }
+    // event-stream conservation: every profiler invocation attempted
+    // one ring record, and each was drained, drop-accounted, or
+    // (for reserve+discard policies) discard-accounted
+    if ring_map.is_some() {
+        if ring_drained + ring_dropped + ring_discarded != total_ops {
+            violations.push(format!(
+                "ring events lost: drained {} + dropped {} + discarded {} != {} ops issued",
+                ring_drained, ring_dropped, ring_discarded, total_ops
+            ));
+        }
+        if ring_torn != 0 {
+            violations.push(format!("torn ring records: {} with wrong length", ring_torn));
+        }
+    }
     let (rt, rp, rn) = host.retired_counts();
     if rt + rp + rn > 2 {
         violations.push(format!(
@@ -320,6 +391,8 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
         mean_decision_ns: all_ns.iter().sum::<f64>() / all_ns.len().max(1) as f64,
         tuner_map_hits,
         prof_map_hits,
+        ring_drained,
+        ring_dropped,
         violations,
         per_thread,
     }
@@ -406,6 +479,13 @@ mod tests {
         assert_eq!(rep.total_decisions, 400);
         assert_eq!(rep.tuner_map_hits, 400);
         assert_eq!(rep.prof_map_hits, 400);
+        assert_eq!(
+            rep.ring_drained + rep.ring_dropped,
+            400,
+            "event-stream conservation: drained {} dropped {}",
+            rep.ring_drained,
+            rep.ring_dropped
+        );
         assert!(rep.decisions_per_sec > 0.0);
         assert!(rep.p99_decision_ns >= rep.p50_decision_ns);
         // no reloads requested: every decision saw variant A
@@ -426,6 +506,16 @@ mod tests {
             assert_eq!(s.torn, 0);
             assert_eq!(s.variant_a + s.variant_b, s.ops);
         }
+    }
+
+    /// The acceptance gate for the event stream: 8 worker threads with
+    /// a reload storm active, and the ring conserves every record.
+    #[test]
+    fn traffic_eight_threads_reload_storm_ring_conserved() {
+        let rep = run_traffic(&small(8, 8, Some(1)));
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.total_ops, 8 * 400);
+        assert_eq!(rep.ring_drained + rep.ring_dropped, rep.total_ops);
     }
 
     #[test]

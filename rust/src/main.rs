@@ -1,23 +1,14 @@
 //! ncclbpf — leader entrypoint + CLI.
 //!
-//! Subcommands:
-//!   verify <policy.c|.s>        compile + verify a policy, print report
-//!   disasm <policy.c|.s>        compile + disassemble
-//!   allreduce [--size 64M ...]  run one AllReduce under a policy
-//!   sweep                       Table 2 algorithm sweep
-//!   train [--ranks 4 ...]       DDP training with the policy attached
-//!   safety                      run the §5.2 accept/reject suite
-//!   hotreload                   demonstrate atomic policy swap
-//!   traffic [--comms N --threads N --ops K --reload-every MS]
-//!                               concurrent multi-communicator traffic
-//!                               engine with invariant checks
-//!   bench [--out DIR] [--quick] run the paper-shaped measurement suite
-//!                               and write BENCH_<name>.json files
+//! The wired subcommand set (and the generated usage text) lives in
+//! [`ncclbpf::cli::SUBCOMMANDS`]; `handler` below maps each entry to
+//! its implementation, and a test asserts the two never drift apart.
 
 use ncclbpf::bpf::ProgType;
 use ncclbpf::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology};
-use ncclbpf::cli::Args;
+use ncclbpf::cli::{self, Args};
 use ncclbpf::host::policydir;
+use ncclbpf::host::ringbuf::RingConsumer;
 use ncclbpf::host::{BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
 use ncclbpf::runtime::{default_artifacts_dir, Runtime};
 use ncclbpf::train::{DdpTrainer, TrainConfig};
@@ -25,25 +16,37 @@ use ncclbpf::util::{fmt_size, parse_size};
 use std::path::Path;
 use std::sync::Arc;
 
+/// Resolve a subcommand name to its implementation. Every name in
+/// [`cli::SUBCOMMANDS`] must resolve (tested below); anything else is
+/// unknown and gets the full generated usage.
+fn handler(name: &str) -> Option<fn(&Args) -> i32> {
+    Some(match name {
+        "verify" => cmd_verify,
+        "disasm" => cmd_disasm,
+        "allreduce" => cmd_allreduce,
+        "sweep" => cmd_sweep,
+        "train" => cmd_train,
+        "safety" => cmd_safety,
+        "hotreload" => cmd_hotreload,
+        "traffic" => cmd_traffic,
+        "trace" => cmd_trace,
+        "bench" => cmd_bench,
+        _ => return None,
+    })
+}
+
 fn main() {
     let args = Args::parse();
     let rc = match args.subcommand.as_deref() {
-        Some("verify") => cmd_verify(&args),
-        Some("disasm") => cmd_disasm(&args),
-        Some("allreduce") => cmd_allreduce(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("train") => cmd_train(&args),
-        Some("safety") => cmd_safety(),
-        Some("hotreload") => cmd_hotreload(),
-        Some("traffic") => cmd_traffic(&args),
-        Some("bench") => cmd_bench(&args),
-        _ => {
-            eprintln!(
-                "usage: ncclbpf \
-                 <verify|disasm|allreduce|sweep|train|safety|hotreload|traffic|bench> \
-                 [flags]\n\
-                 see README.md for examples"
-            );
+        Some(name) => match handler(name) {
+            Some(f) => f(&args),
+            None => {
+                eprintln!("unknown subcommand '{}'\n{}", name, cli::usage());
+                2
+            }
+        },
+        None => {
+            eprintln!("{}", cli::usage());
             2
         }
     };
@@ -197,7 +200,7 @@ fn cmd_train(args: &Args) -> i32 {
     0
 }
 
-fn cmd_safety() -> i32 {
+fn cmd_safety(_args: &Args) -> i32 {
     let host = NcclBpfHost::new();
     println!("== safe policies (must be ACCEPTED) ==");
     for name in policydir::SAFE_POLICIES {
@@ -221,7 +224,11 @@ fn cmd_safety() -> i32 {
             Err(e) => println!("  REJECT {} -> {}", name, e),
         }
     }
-    println!("safety suite: all 7 safe accepted, all 7 unsafe rejected");
+    println!(
+        "safety suite: all {} safe accepted, all {} unsafe rejected",
+        policydir::SAFE_POLICIES.len(),
+        policydir::UNSAFE_POLICIES.len()
+    );
     0
 }
 
@@ -264,6 +271,10 @@ fn cmd_traffic(args: &Args) -> i32 {
         rep.p99_decision_ns,
         rep.wall_ns as f64 / 1e6,
     );
+    println!(
+        "ring events: {} drained + {} dropped (of {} ops)",
+        rep.ring_drained, rep.ring_dropped, rep.total_ops
+    );
     if rep.violations.is_empty() {
         println!("invariant violations: 0");
         0
@@ -301,7 +312,140 @@ fn cmd_bench(args: &Args) -> i32 {
     }
 }
 
-fn cmd_hotreload() -> i32 {
+/// `ncclbpf trace`: install the `latency_events` profiler policy (a
+/// verified ringbuf producer) plus the `adaptive_channels` tuner,
+/// drive collectives, and stream the structured latency events live —
+/// closing the paper's loop through the ring: events drain into
+/// `latency_map`, which the tuner reads on the next decision.
+/// `bpf_trace_printk` output is routed to stdout through the host sink
+/// so it interleaves with the event stream.
+fn cmd_trace(args: &Args) -> i32 {
+    let mut ops = args.flag_usize("ops", 1000);
+    let once = args.flag_bool("once");
+    if once {
+        ops = ops.min(200);
+    }
+    let comms_n = args.flag_usize("comms", 2).max(1);
+    let ranks = args.flag_usize("ranks", 4).max(2);
+    let json = args.flag_bool("json");
+    // --once always means exactly one batch, even with --follow
+    let follow = args.flag_bool("follow") && !once;
+
+    let host = Arc::new(NcclBpfHost::new());
+    host.printk_sink().set_writer(Box::new(std::io::stdout()));
+    host.install_object(&policydir::build_named("latency_events").expect("latency_events"))
+        .expect("latency_events must verify");
+    host.install_object(&policydir::build_named("adaptive_channels").expect("adaptive_channels"))
+        .expect("adaptive_channels must verify");
+    let mut consumer =
+        RingConsumer::new(host.map("events").expect("ring map")).expect("ringbuf consumer");
+    let latency_map = host.map("latency_map").expect("latency_map");
+
+    let mut comms = Vec::with_capacity(comms_n);
+    for c in 0..comms_n {
+        let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
+        comm.reseed(0x7ace ^ c as u64);
+        comm.data_mode = DataMode::Sampled(4 << 10);
+        comm.prewarm_all();
+        comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+        comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+        comms.push(comm);
+    }
+    let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|r| vec![r as f32 + 1.0; 1 << 10]).collect();
+
+    if !json {
+        println!(
+            "trace: streaming latency events from {} comms ({} ops/batch{})",
+            comms_n,
+            ops,
+            if follow { ", --follow" } else { "" }
+        );
+    }
+    let mut rng = ncclbpf::util::Rng::new(0x7ace);
+    let mut batch = 0u64;
+    loop {
+        for _ in 0..ops.max(1) {
+            let comm = &comms[rng.below(comms_n as u64) as usize];
+            let coll = match rng.below(3) {
+                0 => CollType::AllReduce,
+                1 => CollType::AllGather,
+                _ => CollType::ReduceScatter,
+            };
+            let logical = (4usize << 10) << rng.below(11);
+            comm.run(coll, &mut bufs, logical);
+        }
+        // drain + stream this batch's events, folding them into the
+        // closed-loop average
+        let mut sum = 0u64;
+        let mut n = 0u64;
+        let mut chans = 0u64;
+        consumer.drain_events(|ev| {
+            if json {
+                println!("{}", ev.to_json());
+            } else {
+                println!(
+                    "event comm={:#010x} coll={} size={} latency={}us ch={} seq={}",
+                    ev.comm_id,
+                    ev.coll_type,
+                    fmt_size(ev.msg_size as usize),
+                    ev.latency_ns / 1000,
+                    ev.n_channels,
+                    ev.seq
+                );
+            }
+            sum += ev.latency_ns;
+            chans = ev.n_channels as u64;
+            n += 1;
+        });
+        if n > 0 {
+            // feed the tuner's shared map (value = [avg_latency, channels])
+            let mut value = vec![0u8; latency_map.def.value_size as usize];
+            value[..8].copy_from_slice(&(sum / n).to_le_bytes());
+            value[8..16].copy_from_slice(&chans.to_le_bytes());
+            for comm in &comms {
+                let key = ncclbpf::host::fold_comm_id(comm.comm_id());
+                let _ = latency_map.update(&key.to_le_bytes(), &value);
+            }
+        }
+        batch += 1;
+        let emitted = host.prof_events.load(std::sync::atomic::Ordering::Relaxed);
+        if !json {
+            println!(
+                "batch {}: {} events drained, {} dropped, avg latency {} us -> latency_map",
+                batch,
+                consumer.drained,
+                consumer.dropped(),
+                if n > 0 { sum / n / 1000 } else { 0 },
+            );
+        }
+        if !follow {
+            // conservation invariant: every profiler event was drained,
+            // drop-accounted, or discard-accounted
+            if consumer.drained + consumer.dropped() + consumer.discarded() != emitted {
+                eprintln!(
+                    "TRACE INVARIANT VIOLATION: drained {} + dropped {} + discarded {} != \
+                     emitted {}",
+                    consumer.drained,
+                    consumer.dropped(),
+                    consumer.discarded(),
+                    emitted
+                );
+                return 1;
+            }
+            if !json {
+                println!(
+                    "trace done: {} events emitted, {} drained, {} dropped (conserved)",
+                    emitted,
+                    consumer.drained,
+                    consumer.dropped()
+                );
+            }
+            return 0;
+        }
+    }
+}
+
+fn cmd_hotreload(_args: &Args) -> i32 {
     let host = NcclBpfHost::new();
     let a = policydir::build_named("static_ring").unwrap();
     let b = policydir::build_named("nvlink_ring_mid_v2").unwrap();
@@ -316,4 +460,19 @@ fn cmd_hotreload() -> i32 {
     let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
     println!("swaps={} last_swap={} ns", swaps, last_ns);
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The dispatch table and the help table must never drift apart:
+    /// every advertised subcommand has a handler.
+    #[test]
+    fn every_listed_subcommand_is_wired() {
+        for (name, _, _) in cli::SUBCOMMANDS {
+            assert!(handler(name).is_some(), "subcommand '{}' listed but not wired", name);
+        }
+        assert!(handler("frobnicate").is_none());
+    }
 }

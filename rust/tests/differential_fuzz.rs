@@ -11,10 +11,11 @@
 use ncclbpf::bpf::helpers::HelperEnv;
 use ncclbpf::bpf::insn::{
     alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, class, disasm, exit, jmp, jmp_imm, jmp_reg,
-    mov32_imm, mov64_imm, src, Insn,
+    ld_map_fd, lddw, mov32_imm, mov64_imm, mov64_reg, size as msz, src, stx, Insn,
 };
 use ncclbpf::bpf::jit::JitProgram;
-use ncclbpf::bpf::{interp, verifier, ProgType};
+use ncclbpf::bpf::maps::{MapDef, MapKind};
+use ncclbpf::bpf::{interp, verifier, MapRegistry, ProgType};
 use ncclbpf::host::ctx::layouts;
 use ncclbpf::util::Rng;
 use std::collections::HashMap;
@@ -172,7 +173,7 @@ fn differential_fuzz_verified_programs_interp_vs_jit() {
     let mut rng = Rng::new(0xf022_2026);
     let lay = layouts();
     let maps = HashMap::new();
-    let env = HelperEnv { maps: vec![] };
+    let env = HelperEnv { maps: vec![], printk: None };
     let mut jit_checked = 0;
     for case in 0..400 {
         let prog = gen_program(&mut rng);
@@ -210,5 +211,121 @@ fn fuzz_generator_is_deterministic() {
     let mut b = Rng::new(7);
     for _ in 0..10 {
         assert_eq!(gen_program(&mut a), gen_program(&mut b));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ringbuf helper differential: interp and JIT must agree on return
+// values AND on the exact bytes the host consumer drains afterwards.
+// ---------------------------------------------------------------------------
+
+const RING_MAP_ID_SLOT: u32 = 1; // first map registered per registry gets id 1
+
+fn ring_def() -> MapDef {
+    MapDef {
+        name: "fuzz_ring".into(),
+        kind: MapKind::RingBuf,
+        key_size: 0,
+        value_size: 0,
+        max_entries: 4096,
+    }
+}
+
+/// One random verified ringbuf program: either reserve → write random
+/// u64s → submit/discard → query, or output of a random stack buffer.
+fn gen_ringbuf_program(rng: &mut Rng) -> Vec<Insn> {
+    let map_id = RING_MAP_ID_SLOT;
+    let mut p = Vec::new();
+    if rng.below(2) == 0 {
+        let nbytes = 8 * (1 + rng.below(4)) as i32; // 8..32
+        p.extend(ld_map_fd(1, map_id));
+        p.push(mov64_imm(2, nbytes));
+        p.push(mov64_imm(3, 0));
+        p.push(Insn::new(class::JMP | jmp::CALL, 0, 0, 0, 131)); // reserve
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, -1));
+        p.push(exit());
+        p.push(mov64_reg(6, 0));
+        for k in 0..nbytes / 8 {
+            p.extend(lddw(1, 0, rng.next_u64()));
+            p.push(stx(msz::DW, 6, 1, (k * 8) as i16));
+        }
+        p.push(mov64_reg(1, 6));
+        p.push(mov64_imm(2, 0));
+        let release = if rng.below(4) == 0 { 133 } else { 132 }; // discard/submit
+        p.push(Insn::new(class::JMP | jmp::CALL, 0, 0, 0, release));
+        // r0 = bpf_ringbuf_query(ring, AVAIL_DATA)
+        p.extend(ld_map_fd(1, map_id));
+        p.push(mov64_imm(2, 0));
+        p.push(Insn::new(class::JMP | jmp::CALL, 0, 0, 0, 134));
+        p.push(exit());
+    } else {
+        let nbytes = 8 * (1 + rng.below(3)) as i32; // 8..24
+        for k in 0..nbytes / 8 {
+            p.extend(lddw(1, 0, rng.next_u64()));
+            p.push(stx(msz::DW, 10, 1, (-nbytes + k * 8) as i16));
+        }
+        p.extend(ld_map_fd(1, map_id));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -nbytes));
+        p.push(mov64_imm(3, nbytes));
+        p.push(mov64_imm(4, 0));
+        p.push(Insn::new(class::JMP | jmp::CALL, 0, 0, 0, 130)); // output
+        p.push(exit());
+    }
+    p
+}
+
+#[test]
+fn differential_ringbuf_helpers_interp_vs_jit() {
+    if !cfg!(all(unix, target_arch = "x86_64")) {
+        return; // no JIT to compare against
+    }
+    let mut rng = Rng::new(0x41b6_2026);
+    let lay = layouts();
+    let mut verifier_maps = HashMap::new();
+    verifier_maps.insert(RING_MAP_ID_SLOT, ring_def());
+    for case in 0..100 {
+        let prog = gen_ringbuf_program(&mut rng);
+        verifier::verify(&prog, ProgType::Profiler, &lay.profiler, &verifier_maps)
+            .unwrap_or_else(|e| {
+                panic!("case {}: unverifiable ringbuf program: {}\n{}", case, e, disasm(&prog))
+            });
+        let ops = interp::predecode(&prog).expect("predecode");
+
+        // one fresh registry + ring per engine: same map id (1) in both
+        let run = |use_jit: bool| -> (u64, Vec<Vec<u8>>) {
+            let reg = MapRegistry::new();
+            let ring = reg.create_or_get(&ring_def()).unwrap();
+            assert_eq!(ring.id, RING_MAP_ID_SLOT);
+            let env = HelperEnv::new(&reg, &[ring.id]).unwrap();
+            let r0 = if use_jit {
+                let j = JitProgram::compile_unchecked(&ops).expect("jit");
+                unsafe { j.call(std::ptr::null_mut(), &env) }
+            } else {
+                unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) }
+            };
+            let mut records = Vec::new();
+            ring.ringbuf_drain(&mut |b| records.push(b.to_vec()));
+            (r0, records)
+        };
+        let (want_r0, want_records) = run(false);
+        let (got_r0, got_records) = run(true);
+        assert_eq!(
+            got_r0,
+            want_r0,
+            "case {}: r0 interp {:#x} != jit {:#x}\n{}",
+            case,
+            want_r0,
+            got_r0,
+            disasm(&prog)
+        );
+        assert_eq!(
+            got_records,
+            want_records,
+            "case {}: drained records differ between engines\n{}",
+            case,
+            disasm(&prog)
+        );
     }
 }

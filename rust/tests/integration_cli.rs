@@ -35,10 +35,22 @@ fn no_subcommand_prints_usage_and_exits_2() {
     assert!(stderr(&o).contains("usage"), "{}", stderr(&o));
 }
 
+/// Satellite: unknown subcommands print the full generated subcommand
+/// list (from the shared cli table — it cannot drift from the wired
+/// set) and exit 2.
 #[test]
-fn unknown_subcommand_exits_2() {
+fn unknown_subcommand_exits_2_and_lists_everything() {
     let o = run(&["frobnicate"]);
     assert_eq!(o.status.code(), Some(2));
+    let err = stderr(&o);
+    assert!(err.contains("unknown subcommand 'frobnicate'"), "{}", err);
+    let expected = [
+        "verify", "disasm", "allreduce", "sweep", "train", "safety", "hotreload", "traffic",
+        "trace", "bench",
+    ];
+    for name in expected {
+        assert!(err.contains(name), "usage must list '{}', got:\n{}", name, err);
+    }
 }
 
 #[test]
@@ -103,7 +115,38 @@ fn safety_suite_green_end_to_end() {
     let o = run(&["safety"]);
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 7 safe accepted, all 7 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 7 safe accepted, all 10 unsafe rejected"), "{}", out);
+    // the three ringbuf reference-tracking classes are part of the suite
+    for name in ["ringbuf_leak", "ringbuf_use_after_submit", "ringbuf_oob"] {
+        assert!(out.contains(&format!("REJECT {}", name)), "{}", out);
+    }
+}
+
+/// `ncclbpf trace`: stream structured ring events end to end. The run
+/// must conserve events (drained + dropped == emitted) and, in JSON
+/// mode, emit one parseable object per event.
+#[test]
+fn trace_streams_ring_events_and_conserves() {
+    let o = run(&["trace", "--ops", "300", "--json"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    let events: Vec<&str> = out.lines().filter(|l| l.starts_with('{')).collect();
+    assert!(events.len() >= 250, "expected ~300 events, got {}", events.len());
+    for line in events.iter().take(50) {
+        let j = parse_json(line).unwrap_or_else(|e| panic!("bad event JSON: {}: {}", e, line));
+        assert!(j.get("latency_ns").and_then(Json::as_u64).is_some(), "{}", line);
+        assert!(j.get("msg_size").and_then(Json::as_u64).is_some(), "{}", line);
+    }
+}
+
+#[test]
+fn trace_human_output_reports_conservation() {
+    let o = run(&["trace", "--once", "--ops", "100"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("trace done:"), "{}", out);
+    assert!(out.contains("(conserved)"), "{}", out);
+    assert!(out.contains("event comm="), "{}", out);
 }
 
 #[test]
@@ -165,6 +208,7 @@ fn bench_writes_parseable_json_with_median_p99() {
         ("BENCH_fig2_allreduce.json", 16),
         ("BENCH_hotreload.json", 4),
         ("BENCH_traffic.json", 8),
+        ("BENCH_ringbuf.json", 6),
     ] {
         let path = dir.join(file);
         let text = std::fs::read_to_string(&path)

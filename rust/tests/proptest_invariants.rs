@@ -247,6 +247,91 @@ fn hash_map_model_equivalence() {
     }
 }
 
+/// INVARIANT (tombstone churn): the open-addressed fixed-capacity hash
+/// table agrees with a `std::collections::HashMap` model under *heavy*
+/// delete/reinsert pressure at tiny capacities — the regime where every
+/// probe chain crosses tombstones (the general model test above rarely
+/// exercises that). Insert success is asserted *exactly*: linear
+/// probing covers the full table, so an insert must succeed iff the key
+/// is present or the table is not full — a table that "leaks" slots to
+/// tombstones fails here.
+#[test]
+fn hash_map_tombstone_churn_model() {
+    let mut rng = Rng::new(0x70b5_70e5);
+    for case in 0..40 {
+        let cap = 1 + rng.below(8) as u32; // tiny: collisions guaranteed
+        let map = Map::new(
+            MapDef {
+                name: "churn".into(),
+                kind: MapKind::Hash,
+                key_size: 4,
+                value_size: 8,
+                max_entries: cap,
+            },
+            1,
+        )
+        .unwrap();
+        let mut model: HashMap<u32, u64> = HashMap::new();
+        for step in 0..2_000 {
+            // keys drawn from [0, cap+2): nearly every key collides
+            let key = rng.below(cap as u64 + 2) as u32;
+            match rng.below(4) {
+                0 | 1 => {
+                    let val = rng.next_u64();
+                    let ok = map.write_u64(key, val).is_ok();
+                    let expect_ok = model.contains_key(&key) || model.len() < cap as usize;
+                    assert_eq!(
+                        ok, expect_ok,
+                        "case {} step {}: insert({}) ok={} model expects {}",
+                        case, step, key, ok, expect_ok
+                    );
+                    if ok {
+                        model.insert(key, val);
+                    }
+                }
+                2 => {
+                    let removed = map.delete(&key.to_le_bytes()).unwrap();
+                    assert_eq!(
+                        removed,
+                        model.remove(&key).is_some(),
+                        "case {} step {}: delete({})",
+                        case,
+                        step,
+                        key
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        map.read_u64(key),
+                        model.get(&key).copied(),
+                        "case {} step {}: lookup({})",
+                        case,
+                        step,
+                        key
+                    );
+                }
+            }
+            assert_eq!(map.len(), model.len(), "case {} step {}", case, step);
+        }
+        // final sweep: every key agrees, including absent ones
+        for key in 0..cap + 2 {
+            assert_eq!(map.read_u64(key), model.get(&key).copied(), "case {} final {}", case, key);
+        }
+        // drain-and-refill: after deleting everything (all slots become
+        // tombstones), the table must accept a full reload
+        for key in 0..cap + 2 {
+            let _ = map.delete(&key.to_le_bytes());
+        }
+        assert_eq!(map.len(), 0);
+        for key in 0..cap {
+            map.write_u64(key, key as u64).unwrap_or_else(|e| {
+                panic!("case {}: refill({}) after full drain failed: {}", case, key, e)
+            });
+        }
+        assert_eq!(map.len(), cap as usize);
+    }
+}
+
 /// INVARIANT: cost-table argmin returns the minimum non-sentinel entry
 /// and None iff all entries are sentinels.
 #[test]

@@ -1,0 +1,55 @@
+/* chain_dispatch — the §5.4 message-size-aware policy rebuilt as a
+ * composable 3-link tail-call chain: a size-class dispatcher
+ * tail-calls one of three per-range tuners through the `chain` prog
+ * array. Installed with `NcclBpfHost::install_chain` (dispatcher ->
+ * tuner slot, tune_small/mid/large -> chain[0..2]); any single link
+ * can be hot-swapped mid-traffic without touching the dispatcher or
+ * the other links.
+ *
+ * With all three links installed the chain's decisions match the flat
+ * size_aware.c policy at its default threshold: <= 32 KiB -> Tree/LL,
+ * above -> Ring/Simple, 16 channels. An empty slot, an out-of-range
+ * bucket, or an exhausted 33-call chain limit degrades to the
+ * conservative fallthrough below — never a trap.
+ */
+
+BPF_PROG_ARRAY(chain, 4);
+
+static __noinline __u64 bucket_of(__u64 size) {
+    if (size <= 32 * 1024) return 0;
+    if (size <= 4 * 1024 * 1024) return 1;
+    return 2;
+}
+
+SEC("tuner")
+int chain_dispatch(struct policy_context *ctx) {
+    __u64 b = bucket_of(ctx->msg_size);
+    bpf_tail_call(ctx, &chain, b);
+    /* only reached when the tail call did not dispatch */
+    ctx->n_channels = 4;
+    return 0;
+}
+
+SEC("tuner")
+int tune_small(struct policy_context *ctx) {
+    ctx->algorithm = NCCL_ALGO_TREE;
+    ctx->protocol = NCCL_PROTO_LL;
+    ctx->n_channels = 16;
+    return 0;
+}
+
+SEC("tuner")
+int tune_mid(struct policy_context *ctx) {
+    ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    ctx->n_channels = 16;
+    return 0;
+}
+
+SEC("tuner")
+int tune_large(struct policy_context *ctx) {
+    ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    ctx->n_channels = 16;
+    return 0;
+}

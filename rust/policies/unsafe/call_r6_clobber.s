@@ -1,0 +1,12 @@
+; call_r6_clobber — bug class 13: the callee reads r6 expecting the
+; caller's value to flow through the call. Bpf-to-bpf calls pass only
+; r1-r5; r6-r9 belong to the caller (the machine saves and restores
+; them around the call), so in the callee they are uninitialized.
+
+prog tuner call_r6_clobber
+  mov64 r6, 7
+  call  use_r6
+  exit
+use_r6:
+  mov64 r0, r6            ; BUG: r6 is not an argument register
+  exit

@@ -1,0 +1,12 @@
+; call_recursion — bug class 11: a subprogram that calls itself. The
+; call graph must be acyclic (recursion cannot be bounded at load
+; time), so the verifier rejects the back-edge.
+
+prog tuner call_recursion
+  mov64 r1, 8
+  call  countdown
+  exit
+countdown:
+  sub64 r1, 1
+  call  countdown         ; BUG: self-recursion
+  exit

@@ -1,0 +1,13 @@
+; call_stack_overflow — bug class 12: each frame's stack use is locally
+; inside [r10-512, r10), but the *combined* stack of the call chain
+; exceeds the kernel's 512-byte cap. Only the cross-frame accounting
+; pass can see this one.
+
+prog tuner call_stack_overflow
+  stdw  [r10-384], 1      ; main frame: 384 bytes
+  call  helper
+  exit
+helper:
+  stdw  [r10-384], 2      ; BUG: 768 bytes combined across 2 frames
+  mov64 r0, 0
+  exit

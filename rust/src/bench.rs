@@ -15,6 +15,8 @@
 //! the same workload.
 
 use crate::bpf::maps::{Map, MapDef, MapKind};
+use crate::bpf::program::load_asm;
+use crate::bpf::MapRegistry;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, TunerPlugin};
 use crate::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology, MAX_CHANNELS};
 use crate::host::ctx::PolicyContext;
@@ -137,11 +139,23 @@ pub fn table1_overhead(opts: &BenchOpts) -> BenchReport {
         );
     }
 
-    // every safe policy through the full host decision path (JIT)
+    // every safe policy through the full host decision path (JIT).
+    // chain_dispatch is a *chain*: install it as one (dispatcher into
+    // the slot, links into the prog array) so its row measures real
+    // tail-call dispatch, not whichever leaf happened to win the slot.
     let host = NcclBpfHost::new();
     for name in policydir::SAFE_POLICIES {
         let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
-        host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        if name == "chain_dispatch" {
+            host.install_chain(
+                &obj,
+                "chain",
+                &[("tune_small", 0), ("tune_mid", 1), ("tune_large", 2)],
+            )
+            .unwrap_or_else(|e| panic!("{}: {}", name, e));
+        } else {
+            host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        }
         seed_policy_maps(&host, args.comm_id);
         let (p50, p99, mean) = measure(opts.calls, || {
             let mut cost = CostTable::all_sentinel();
@@ -452,6 +466,80 @@ pub fn ringbuf_bench(opts: &BenchOpts) -> BenchReport {
     rep
 }
 
+/// The subprogram called by the `subprog_call` series — identical
+/// arithmetic to the inlined twin, but behind a real bpf-to-bpf call.
+const CALL_POLICY: &str = r#"
+prog tuner call_cost
+  ldxdw r1, [r1+8]
+  call  body
+  exit
+body:
+  mov64 r0, r1
+  rsh64 r0, 20
+  add64 r0, 3
+  exit
+"#;
+
+const INLINE_POLICY: &str = r#"
+prog tuner inline_cost
+  ldxdw r1, [r1+8]
+  mov64 r0, r1
+  rsh64 r0, 20
+  add64 r0, 3
+  exit
+"#;
+
+/// BENCH_calls — the composition price list: a bpf-to-bpf call vs the
+/// same arithmetic inlined (per-call frame cost), and the 3-link
+/// `chain_dispatch` tail-call chain vs the flat `size_aware` branch
+/// ladder over a cycled size mix (per-decision dispatch cost).
+pub fn calls_bench(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("calls");
+
+    let reg = MapRegistry::new();
+    let lay = crate::host::ctx::layouts();
+    let with_call = load_asm(CALL_POLICY, &reg, &lay).expect("call policy").remove(0);
+    let inlined = load_asm(INLINE_POLICY, &reg, &lay).expect("inline policy").remove(0);
+    for (label, prog) in [("subprog_call", &with_call), ("inlined", &inlined)] {
+        let (p50, p99, mean) = measure(opts.calls, || {
+            let mut pctx =
+                PolicyContext::new(CollType::AllReduce, 8 << 20, 8, 1, MAX_CHANNELS);
+            prog.run(&mut pctx as *mut PolicyContext as *mut u8);
+            std::hint::black_box(pctx);
+        });
+        rep.push(
+            Series::new(label, "ns", p50, p99, mean)
+                .with("jitted", if prog.is_jitted() { 1.0 } else { 0.0 }),
+        );
+    }
+
+    let chain_host = NcclBpfHost::new();
+    let obj = policydir::build_named("chain_dispatch").expect("chain_dispatch");
+    chain_host
+        .install_chain(&obj, "chain", &[("tune_small", 0), ("tune_mid", 1), ("tune_large", 2)])
+        .expect("chain install");
+    let flat_host = NcclBpfHost::new();
+    flat_host
+        .install_object(&policydir::build_named("size_aware").expect("size_aware"))
+        .expect("flat install");
+    let mut rng = Rng::new(opts.seed);
+    let sizes: Vec<usize> = (0..64).map(|_| (4usize << 10) << rng.below(14)).collect();
+    for (label, host) in [("tail_call_dispatch", &chain_host), ("flat_branch_ladder", &flat_host)]
+    {
+        let mut i = 0usize;
+        let (p50, p99, mean) = measure(opts.calls, || {
+            let args = decision_args(sizes[i & 63]);
+            i = i.wrapping_add(1);
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            host.tuner_decide(&args, &mut cost, &mut ch);
+            std::hint::black_box((&cost, ch));
+        });
+        rep.push(Series::new(label, "ns", p50, p99, mean).with("sizes_cycled", 64.0));
+    }
+    rep
+}
+
 /// Run the full suite and write `BENCH_<name>.json` files into
 /// `out_dir`. Returns the written paths.
 pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>> {
@@ -462,6 +550,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         hotreload_swap(opts),
         traffic_scale(opts),
         ringbuf_bench(opts),
+        calls_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -481,8 +570,8 @@ mod tests {
     #[test]
     fn table1_rows_have_positive_latencies() {
         let rep = table1_overhead(&tiny());
-        // 4 native + 7 policies + 2 interp ablations + 2 stack-zeroing
-        assert_eq!(rep.series.len(), 15);
+        // 4 native + 8 policies + 2 interp ablations + 2 stack-zeroing
+        assert_eq!(rep.series.len(), 16);
         for s in &rep.series {
             assert!(s.median > 0.0 && s.p99 > 0.0 && s.mean > 0.0, "{}", s.label);
             assert_eq!(s.unit, "ns");
@@ -595,6 +684,20 @@ mod tests {
         assert!(find("policy_64mib").median > find("default_64mib").median * 1.04);
         for s in &rep.series {
             assert!(s.median > 0.0, "{}", s.label);
+        }
+    }
+
+    #[test]
+    fn calls_bench_reports_call_and_dispatch_costs() {
+        let rep = calls_bench(&tiny());
+        let labels: Vec<&str> = rep.series.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(
+            labels,
+            ["subprog_call", "inlined", "tail_call_dispatch", "flat_branch_ladder"]
+        );
+        for s in &rep.series {
+            assert!(s.median > 0.0 && s.p99 > 0.0 && s.mean > 0.0, "{}", s.label);
+            assert_eq!(s.unit, "ns");
         }
     }
 

@@ -26,9 +26,12 @@ use super::maps::{MapDef, MapKind};
 use super::object::{ObjProgram, Object, Reloc};
 use std::collections::HashMap;
 
+/// Assembly failure with its 1-based source line.
 #[derive(Debug)]
 pub struct AsmError {
+    /// 1-based source line of the offending statement
     pub line: usize,
+    /// what went wrong
     pub message: String,
 }
 
@@ -51,6 +54,8 @@ enum Pending {
     Done(Insn),
     /// conditional/unconditional branch to a label
     Branch { opcode: u8, dst: u8, src_reg: u8, imm: i32, label: String },
+    /// bpf-to-bpf call to a labelled subprogram (imm = relative offset)
+    PseudoCall { label: String },
     /// lddw map reference (expands to 2 slots + reloc)
     MapRef { dst: u8, map: String },
     /// lddw 64-bit immediate (expands to 2 slots)
@@ -201,6 +206,17 @@ pub fn assemble(source: &str) -> AResult<Object> {
                     }
                     insns.push(Insn::new(opcode, dst, src_reg, off as i16, imm));
                 }
+                Pending::PseudoCall { label } => {
+                    let tgt = *labels.get(&label).ok_or_else(|| AsmError {
+                        line,
+                        message: format!(
+                            "'{}' is neither a helper name nor a defined label",
+                            label
+                        ),
+                    })?;
+                    let imm = slot_of[tgt] as i64 - (slot_of[i] as i64 + 1);
+                    insns.push(insn::call_pseudo(imm as i32));
+                }
             }
         }
         Ok(ObjProgram { section: sec, name, insns, relocs })
@@ -234,7 +250,8 @@ pub fn assemble(source: &str) -> AResult<Object> {
                 if toks.len() < 4 || toks.len() > 6 {
                     return aerr(
                         line,
-                        "usage: map NAME array|hash|percpu|ringbuf [key=N] [value=N] entries=N",
+                        "usage: map NAME array|hash|percpu|ringbuf|progarray \
+                         [key=N] [value=N] entries=N",
                     );
                 }
                 let kind = match toks[2] {
@@ -242,6 +259,7 @@ pub fn assemble(source: &str) -> AResult<Object> {
                     "hash" => MapKind::Hash,
                     "percpu" => MapKind::PerCpuArray,
                     "ringbuf" => MapKind::RingBuf,
+                    "progarray" => MapKind::ProgArray,
                     k => return aerr(line, format!("unknown map kind '{}'", k)),
                 };
                 let mut key_size = 0;
@@ -265,9 +283,13 @@ pub fn assemble(source: &str) -> AResult<Object> {
                         })?;
                     }
                 }
-                // allow key= omitted for array maps; ringbufs have none
+                // allow key= omitted for array maps; ringbufs have none;
+                // prog arrays use the fixed kernel ABI (4-byte key/value)
                 if key_size == 0 && !matches!(kind, MapKind::Hash | MapKind::RingBuf) {
                     key_size = 4;
+                }
+                if kind == MapKind::ProgArray && value_size == 0 {
+                    value_size = 4;
                 }
                 let def = MapDef { name: toks[1].into(), kind, key_size, value_size, max_entries };
                 def.validate().map_err(|m| AsmError { line, message: m })?;
@@ -375,16 +397,18 @@ fn parse_insn(mnemonic: &str, toks: &[&str], line: usize) -> AResult<Pending> {
         }
         "call" => {
             if toks.len() != 2 {
-                return aerr(line, "usage: call HELPER_ID|helper_name");
+                return aerr(line, "usage: call HELPER_ID|helper_name|subprog_label");
             }
-            let id = if let Ok(v) = parse_imm(toks[1], line) {
-                v as i32
-            } else if let Some(spec) = super::helpers::spec_by_name(toks[1]) {
-                spec.id
+            let t = toks[1].trim_end_matches(',');
+            if let Ok(v) = parse_imm(t, line) {
+                Ok(Pending::Done(insn::call(v as i32)))
+            } else if let Some(spec) = super::helpers::spec_by_name(t) {
+                Ok(Pending::Done(insn::call(spec.id)))
             } else {
-                return aerr(line, format!("unknown helper '{}'", toks[1]));
-            };
-            Ok(Pending::Done(insn::call(id)))
+                // anything else is a bpf-to-bpf call to a label; the
+                // label is resolved (or rejected) at finish time
+                Ok(Pending::PseudoCall { label: t.to_string() })
+            }
         }
         "exit" => Ok(Pending::Done(insn::exit())),
         m => {
@@ -495,6 +519,59 @@ done:
         // non-power-of-two ring size is rejected by MapDef::validate
         let e = assemble("map ev ringbuf entries=100\n").unwrap_err();
         assert!(e.message.contains("power of two"), "{}", e.message);
+    }
+
+    #[test]
+    fn assemble_subprog_call() {
+        let src = r#"
+prog tuner with_sub
+  mov64 r1, 4
+  mov64 r2, 5
+  call  add_sub          ; bpf-to-bpf call to the label below
+  exit
+add_sub:
+  mov64 r0, r1
+  add64 r0, r2
+  exit
+"#;
+        let o = assemble(src).unwrap();
+        let insns = &o.progs[0].insns;
+        assert!(insns[2].is_pseudo_call());
+        // call at slot 2 targets slot 4: imm = 4 - 2 - 1 = 1
+        assert_eq!(insns[2].imm, 1);
+        let text = crate::bpf::insn::disasm(insns);
+        assert!(text.contains("call +1"), "{}", text);
+    }
+
+    #[test]
+    fn call_to_unknown_name_is_clean_error() {
+        let e = assemble("prog tuner t\n  call nowhere\n  exit\n").unwrap_err();
+        assert!(
+            e.message.contains("neither a helper name nor a defined label"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn duplicate_subprog_label_rejected() {
+        // two subprograms under one name would silently bind the call
+        // to whichever survived — must be a hard error instead
+        let src = "prog tuner t\n  call sub\n  exit\nsub:\n  exit\nsub:\n  exit\n";
+        let e = assemble(src).unwrap_err();
+        assert!(e.message.contains("duplicate"), "{}", e.message);
+    }
+
+    #[test]
+    fn assemble_progarray_map() {
+        let o = assemble(
+            "map chain progarray entries=4\nprog tuner t\n  mov64 r0, 0\n  exit\n",
+        )
+        .unwrap();
+        assert_eq!(o.maps[0].kind, MapKind::ProgArray);
+        assert_eq!(o.maps[0].key_size, 4);
+        assert_eq!(o.maps[0].value_size, 4);
+        assert_eq!(o.maps[0].max_entries, 4);
     }
 
     #[test]

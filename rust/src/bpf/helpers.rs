@@ -12,17 +12,34 @@ use std::time::Instant;
 
 /// Helper ids (kernel-compatible numbering where possible).
 pub mod id {
+    /// `bpf_map_lookup_elem(map, key) -> value_or_null`
     pub const MAP_LOOKUP_ELEM: i32 = 1;
+    /// `bpf_map_update_elem(map, key, value, flags)`
     pub const MAP_UPDATE_ELEM: i32 = 2;
+    /// `bpf_map_delete_elem(map, key)`
     pub const MAP_DELETE_ELEM: i32 = 3;
+    /// `bpf_ktime_get_ns()` — monotonic nanoseconds
     pub const KTIME_GET_NS: i32 = 5;
+    /// `bpf_trace_printk(fmt, len)` — debug output through the host sink
     pub const TRACE_PRINTK: i32 = 6;
+    /// `bpf_get_prandom_u32()` — fast pseudo-random draw
     pub const GET_PRANDOM_U32: i32 = 7;
+    /// `bpf_get_smp_processor_id()` — logical cpu slot
     pub const GET_SMP_PROCESSOR_ID: i32 = 8;
+    /// `bpf_tail_call(ctx, prog_array, index)` — jump to the verified
+    /// program in slot `index`; on success the caller never resumes,
+    /// on failure (empty slot, out of range, chain limit) execution
+    /// falls through with a nonzero R0
+    pub const TAIL_CALL: i32 = 12;
+    /// `bpf_ringbuf_output(ring, data, len, flags)` — copy-out emit
     pub const RINGBUF_OUTPUT: i32 = 130;
+    /// `bpf_ringbuf_reserve(ring, size, flags) -> record_or_null`
     pub const RINGBUF_RESERVE: i32 = 131;
+    /// `bpf_ringbuf_submit(record, flags)` — commit a reservation
     pub const RINGBUF_SUBMIT: i32 = 132;
+    /// `bpf_ringbuf_discard(record, flags)` — abandon a reservation
     pub const RINGBUF_DISCARD: i32 = 133;
+    /// `bpf_ringbuf_query(ring, flag)` — ring introspection
     pub const RINGBUF_QUERY: i32 = 134;
 }
 
@@ -39,6 +56,10 @@ pub enum ProgType {
 }
 
 impl ProgType {
+    /// Every program type, in tag order.
+    pub const ALL: [ProgType; 3] = [ProgType::Tuner, ProgType::Profiler, ProgType::Net];
+
+    /// Parse an object section name (`SEC("tuner")` etc).
     pub fn from_section(sec: &str) -> Option<ProgType> {
         match sec {
             "tuner" => Some(ProgType::Tuner),
@@ -47,11 +68,21 @@ impl ProgType {
             _ => None,
         }
     }
+    /// The object section name for this type.
     pub fn section(&self) -> &'static str {
         match self {
             ProgType::Tuner => "tuner",
             ProgType::Profiler => "profiler",
             ProgType::Net => "net",
+        }
+    }
+    /// Stable numeric tag — the prog-array slot compatibility key
+    /// ([`crate::bpf::maps::ProgSlot::tag`]).
+    pub fn tag(&self) -> u32 {
+        match self {
+            ProgType::Tuner => 0,
+            ProgType::Profiler => 1,
+            ProgType::Net => 2,
         }
     }
 }
@@ -74,6 +105,9 @@ pub enum ArgType {
     /// pointer previously returned by bpf_ringbuf_reserve (null-checked);
     /// passing it releases the verifier's reference
     RingBufMem,
+    /// the program's context pointer, exactly as received in R1
+    /// (offset 0) — `bpf_tail_call` hands it to the chained program
+    Ctx,
 }
 
 /// Helper return classes for verifier tracking.
@@ -85,18 +119,27 @@ pub enum RetType {
     /// null-checked AND submitted/discarded on every path (a verifier
     /// *reference*)
     RingBufMemOrNull,
+    /// plain scalar value
     Scalar,
 }
 
 /// Static helper signature used by the verifier.
 #[derive(Clone, Debug)]
 pub struct HelperSpec {
+    /// kernel-compatible helper id (the `call` immediate)
     pub id: i32,
+    /// C-level name policies call it by
     pub name: &'static str,
+    /// argument classes, checked left to right against r1..r5
     pub args: &'static [ArgType],
+    /// return-value class the verifier assigns to R0
     pub ret: RetType,
 }
 
+/// Every helper this runtime implements — THE single source of truth
+/// for helper signatures: the verifier type-checks against it, the
+/// assembler resolves names through it, and `ncclbpf docs` renders the
+/// reference from it.
 pub const HELPER_SPECS: &[HelperSpec] = &[
     HelperSpec {
         id: id::MAP_LOOKUP_ELEM,
@@ -141,6 +184,12 @@ pub const HELPER_SPECS: &[HelperSpec] = &[
         ret: RetType::Scalar,
     },
     HelperSpec {
+        id: id::TAIL_CALL,
+        name: "bpf_tail_call",
+        args: &[ArgType::Ctx, ArgType::ConstMapPtr, ArgType::Scalar],
+        ret: RetType::Scalar,
+    },
+    HelperSpec {
         id: id::RINGBUF_OUTPUT,
         name: "bpf_ringbuf_output",
         args: &[ArgType::ConstMapPtr, ArgType::MemLen, ArgType::Scalar, ArgType::Scalar],
@@ -172,10 +221,12 @@ pub const HELPER_SPECS: &[HelperSpec] = &[
     },
 ];
 
+/// Look up a helper signature by id.
 pub fn spec_by_id(idv: i32) -> Option<&'static HelperSpec> {
     HELPER_SPECS.iter().find(|s| s.id == idv)
 }
 
+/// Look up a helper signature by its C-level name.
 pub fn spec_by_name(name: &str) -> Option<&'static HelperSpec> {
     HELPER_SPECS.iter().find(|s| s.name == name)
 }
@@ -191,6 +242,7 @@ pub fn whitelist(pt: ProgType) -> &'static [i32] {
             id::KTIME_GET_NS,
             id::GET_PRANDOM_U32,
             id::GET_SMP_PROCESSOR_ID,
+            id::TAIL_CALL,
         ],
         ProgType::Profiler => &[
             id::MAP_LOOKUP_ELEM,
@@ -199,6 +251,7 @@ pub fn whitelist(pt: ProgType) -> &'static [i32] {
             id::KTIME_GET_NS,
             id::TRACE_PRINTK,
             id::GET_SMP_PROCESSOR_ID,
+            id::TAIL_CALL,
             id::RINGBUF_OUTPUT,
             id::RINGBUF_RESERVE,
             id::RINGBUF_SUBMIT,
@@ -210,12 +263,14 @@ pub fn whitelist(pt: ProgType) -> &'static [i32] {
             id::MAP_UPDATE_ELEM,
             id::KTIME_GET_NS,
             id::GET_SMP_PROCESSOR_ID,
+            id::TAIL_CALL,
             id::RINGBUF_OUTPUT,
             id::RINGBUF_QUERY,
         ],
     }
 }
 
+/// True iff `helper` is whitelisted for program type `pt`.
 pub fn is_allowed(pt: ProgType, helper: i32) -> bool {
     whitelist(pt).contains(&helper)
 }
@@ -287,6 +342,7 @@ impl Default for PrintkSink {
 }
 
 impl PrintkSink {
+    /// A new sink, initially routing to stderr.
     pub fn stderr() -> Arc<PrintkSink> {
         Arc::new(PrintkSink::default())
     }
@@ -340,9 +396,13 @@ pub struct HelperEnv {
     pub maps: Vec<(u32, Arc<Map>)>,
     /// trace_printk destination; `None` falls back to stderr.
     pub printk: Option<Arc<PrintkSink>>,
+    /// the owning program's type; tail calls check it against the
+    /// prog-array slot tag (`None` skips the check — raw-engine tests).
+    pub prog_type: Option<ProgType>,
 }
 
 impl HelperEnv {
+    /// Resolve `map_ids` against `registry` into an execution env.
     pub fn new(registry: &MapRegistry, map_ids: &[u32]) -> Result<HelperEnv, String> {
         let mut maps = Vec::with_capacity(map_ids.len());
         for &idv in map_ids {
@@ -351,7 +411,7 @@ impl HelperEnv {
                 .ok_or_else(|| format!("unresolved map id {}", idv))?;
             maps.push((idv, m));
         }
-        Ok(HelperEnv { maps, printk: None })
+        Ok(HelperEnv { maps, printk: None, prog_type: None })
     }
 
     /// Attach a trace_printk sink (builder style).
@@ -360,6 +420,7 @@ impl HelperEnv {
         self
     }
 
+    /// The map bound to live id `idv`, if this program references it.
     #[inline]
     pub fn map_by_id(&self, idv: u32) -> Option<&Arc<Map>> {
         // linear scan: policies reference 1-3 maps; faster than hashing.
@@ -420,6 +481,12 @@ impl HelperEnv {
             }
             id::GET_PRANDOM_U32 => prandom_u32() as u64,
             id::GET_SMP_PROCESSOR_ID => Map::current_cpu() as u64,
+            // both engines intercept tail calls before generic dispatch
+            // (the interpreter switches programs in place, the JIT goes
+            // through its two-word trampoline); reaching this arm means
+            // an engine without tail-call support, so fail the call —
+            // the kernel's fallthrough semantics, never a trap.
+            id::TAIL_CALL => u64::MAX,
             id::RINGBUF_OUTPUT => {
                 let map_id = args[0] as u32;
                 let Some(m) = self.map_by_id(map_id) else { return (-1i64) as u64 };
@@ -482,6 +549,19 @@ mod tests {
         assert!(is_allowed(ProgType::Net, id::RINGBUF_OUTPUT));
         assert!(!is_allowed(ProgType::Net, id::RINGBUF_RESERVE));
         assert!(!is_allowed(ProgType::Tuner, id::RINGBUF_OUTPUT));
+        // every hook type may chain via tail calls
+        for pt in ProgType::ALL {
+            assert!(is_allowed(pt, id::TAIL_CALL), "{:?}", pt);
+        }
+    }
+
+    #[test]
+    fn prog_type_tags_are_distinct_and_roundtrip() {
+        let mut seen = std::collections::HashSet::new();
+        for pt in ProgType::ALL {
+            assert!(seen.insert(pt.tag()), "duplicate tag for {:?}", pt);
+            assert_eq!(ProgType::from_section(pt.section()), Some(pt));
+        }
     }
 
     #[test]

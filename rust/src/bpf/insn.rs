@@ -18,13 +18,21 @@ use std::fmt;
 
 /// Instruction classes (low 3 bits of the opcode).
 pub mod class {
+    /// non-register load (lddw / legacy packet loads)
     pub const LD: u8 = 0x00;
+    /// register load: `dst = *(size*)(src + off)`
     pub const LDX: u8 = 0x01;
+    /// store immediate: `*(size*)(dst + off) = imm`
     pub const ST: u8 = 0x02;
+    /// store register: `*(size*)(dst + off) = src`
     pub const STX: u8 = 0x03;
+    /// 32-bit ALU (results zero-extend to 64)
     pub const ALU: u8 = 0x04;
+    /// 64-bit jumps, calls and exit
     pub const JMP: u8 = 0x05;
+    /// 32-bit-compare conditional jumps
     pub const JMP32: u8 = 0x06;
+    /// 64-bit ALU
     pub const ALU64: u8 = 0x07;
 }
 
@@ -38,18 +46,31 @@ pub mod src {
 
 /// ALU operation codes (bits 4..8).
 pub mod alu {
+    /// `dst += src`
     pub const ADD: u8 = 0x00;
+    /// `dst -= src`
     pub const SUB: u8 = 0x10;
+    /// `dst *= src`
     pub const MUL: u8 = 0x20;
+    /// `dst /= src` (unsigned; division by zero yields 0)
     pub const DIV: u8 = 0x30;
+    /// `dst |= src`
     pub const OR: u8 = 0x40;
+    /// `dst &= src`
     pub const AND: u8 = 0x50;
+    /// `dst <<= src`
     pub const LSH: u8 = 0x60;
+    /// `dst >>= src` (logical)
     pub const RSH: u8 = 0x70;
+    /// `dst = -dst`
     pub const NEG: u8 = 0x80;
+    /// `dst %= src` (unsigned; mod by zero yields dst)
     pub const MOD: u8 = 0x90;
+    /// `dst ^= src`
     pub const XOR: u8 = 0xa0;
+    /// `dst = src`
     pub const MOV: u8 = 0xb0;
+    /// `dst >>= src` (arithmetic, sign-extending)
     pub const ARSH: u8 = 0xc0;
     /// byte-swap (END) — we accept but treat as to-le no-op on x86.
     pub const END: u8 = 0xd0;
@@ -57,36 +78,60 @@ pub mod alu {
 
 /// JMP operation codes (bits 4..8).
 pub mod jmp {
+    /// unconditional jump
     pub const JA: u8 = 0x00;
+    /// jump if `dst == src`
     pub const JEQ: u8 = 0x10;
+    /// jump if `dst > src` (unsigned)
     pub const JGT: u8 = 0x20;
+    /// jump if `dst >= src` (unsigned)
     pub const JGE: u8 = 0x30;
+    /// jump if `dst & src != 0`
     pub const JSET: u8 = 0x40;
+    /// jump if `dst != src`
     pub const JNE: u8 = 0x50;
+    /// jump if `dst > src` (signed)
     pub const JSGT: u8 = 0x60;
+    /// jump if `dst >= src` (signed)
     pub const JSGE: u8 = 0x70;
+    /// helper call (imm = helper id) or bpf-to-bpf call
+    /// (src_reg = [`super::pseudo::CALL`], imm = relative offset)
     pub const CALL: u8 = 0x80;
+    /// program / subprogram exit; R0 is the return value
     pub const EXIT: u8 = 0x90;
+    /// jump if `dst < src` (unsigned)
     pub const JLT: u8 = 0xa0;
+    /// jump if `dst <= src` (unsigned)
     pub const JLE: u8 = 0xb0;
+    /// jump if `dst < src` (signed)
     pub const JSLT: u8 = 0xc0;
+    /// jump if `dst <= src` (signed)
     pub const JSLE: u8 = 0xd0;
 }
 
 /// Load/store size field (bits 3..5).
 pub mod size {
-    pub const W: u8 = 0x00; // u32
-    pub const H: u8 = 0x08; // u16
-    pub const B: u8 = 0x10; // u8
-    pub const DW: u8 = 0x18; // u64
+    /// 4-byte access (u32)
+    pub const W: u8 = 0x00;
+    /// 2-byte access (u16)
+    pub const H: u8 = 0x08;
+    /// 1-byte access (u8)
+    pub const B: u8 = 0x10;
+    /// 8-byte access (u64)
+    pub const DW: u8 = 0x18;
 }
 
 /// Load/store mode field (bits 5..8).
 pub mod mode {
-    pub const IMM: u8 = 0x00; // lddw (64-bit immediate, 2 slots)
+    /// lddw (64-bit immediate, 2 slots)
+    pub const IMM: u8 = 0x00;
+    /// legacy absolute packet load (unsupported here)
     pub const ABS: u8 = 0x20;
+    /// legacy indirect packet load (unsupported here)
     pub const IND: u8 = 0x40;
+    /// register + offset memory access
     pub const MEM: u8 = 0x60;
+    /// atomic read-modify-write (unsupported here)
     pub const ATOMIC: u8 = 0xc0;
 }
 
@@ -96,6 +141,11 @@ pub mod pseudo {
     pub const MAP_FD: u8 = 1;
     /// imm is a map id and the next imm an offset into the map value.
     pub const MAP_VALUE: u8 = 2;
+    /// `src_reg` value on a `call` instruction marking it as a
+    /// bpf-to-bpf call: `imm` is the *relative instruction offset* of
+    /// the callee entry (target = pc + 1 + imm), not a helper id.
+    /// This is the kernel's `BPF_PSEUDO_CALL`.
+    pub const CALL: u8 = 1;
 }
 
 /// Number of general-purpose registers. R10 is the read-only frame pointer.
@@ -106,14 +156,20 @@ pub const STACK_SIZE: i64 = 512;
 /// One 8-byte eBPF instruction (a `lddw` is two of these).
 #[derive(Clone, Copy, PartialEq, Eq)]
 pub struct Insn {
+    /// opcode byte: class | (op/src flag or mode/size)
     pub opcode: u8,
+    /// destination register (0..=10)
     pub dst: u8,
+    /// source register (0..=10), or a pseudo tag on lddw/call
     pub src: u8,
+    /// signed 16-bit offset (branches, memory accesses)
     pub off: i16,
+    /// signed 32-bit immediate
     pub imm: i32,
 }
 
 impl Insn {
+    /// Assemble an instruction from raw fields.
     pub const fn new(opcode: u8, dst: u8, src: u8, off: i16, imm: i32) -> Self {
         Insn { opcode, dst, src, off, imm }
     }
@@ -163,6 +219,13 @@ impl Insn {
     #[inline]
     pub fn is_lddw(&self) -> bool {
         self.opcode == (class::LD | size::DW | mode::IMM)
+    }
+
+    /// True if this is a bpf-to-bpf call (`call imm` with
+    /// `src_reg == pseudo::CALL`); `imm` is then a relative insn offset.
+    #[inline]
+    pub fn is_pseudo_call(&self) -> bool {
+        self.class() == class::JMP && self.op() == jmp::CALL && self.src == pseudo::CALL
     }
 
     /// Encode to the 8-byte wire format (little-endian).
@@ -278,6 +341,11 @@ pub fn ja(off: i16) -> Insn {
 pub fn call(helper: i32) -> Insn {
     Insn::new(class::JMP | jmp::CALL, 0, 0, 0, helper)
 }
+/// bpf-to-bpf call: `imm` is the relative insn offset of the callee
+/// entry (target = pc + 1 + imm); `src_reg` carries `pseudo::CALL`
+pub fn call_pseudo(imm: i32) -> Insn {
+    Insn::new(class::JMP | jmp::CALL, 0, pseudo::CALL, 0, imm)
+}
 /// program exit; R0 is the return value
 pub fn exit() -> Insn {
     Insn::new(class::JMP | jmp::EXIT, 0, 0, 0, 0)
@@ -359,7 +427,11 @@ pub fn disasm_one(i: &Insn, next: Option<&Insn>) -> String {
         class::JMP | class::JMP32 => {
             let op = i.op();
             if op == jmp::CALL {
-                format!("call {}", i.imm)
+                if i.src == pseudo::CALL {
+                    format!("call {:+} ; bpf-to-bpf", i.imm)
+                } else {
+                    format!("call {}", i.imm)
+                }
             } else if op == jmp::EXIT {
                 "exit".to_string()
             } else if op == jmp::JA {
@@ -480,5 +552,18 @@ mod tests {
         let p = ld_map_fd(1, 7);
         let text = disasm(&p);
         assert!(text.contains("map[7]"), "{}", text);
+    }
+
+    #[test]
+    fn pseudo_call_encoding_and_disasm() {
+        let c = call_pseudo(3);
+        assert!(c.is_pseudo_call());
+        assert!(!call(3).is_pseudo_call());
+        let back = Insn::decode(&c.encode());
+        assert_eq!(back, c);
+        assert!(back.is_pseudo_call());
+        let text = disasm(&[c, exit()]);
+        assert!(text.contains("call +3"), "{}", text);
+        assert!(disasm(&[call(3), exit()]).contains("call 3"));
     }
 }

@@ -10,35 +10,62 @@
 //! The engine dereferences raw pointers (ctx, stack, map values) without
 //! runtime checks, exactly like JIT-compiled eBPF: safety is established
 //! *statically* by [`super::verifier`]. The only public way to construct
-//! a runnable program is [`super::program::Program::load`], which
+//! a runnable program is [`super::program::load_object`], which
 //! verifies first.
 
-use super::helpers::HelperEnv;
+use super::helpers::{id as hid, HelperEnv};
 use super::insn::{alu, class, jmp, mode, pseudo, size, src, Insn};
+use super::program::{resolve_tail_call, LoadedProgram};
+use std::sync::Arc;
+
+/// Kernel chain limit: at most 33 taken tail calls per execution.
+pub const MAX_TAIL_CALLS: u32 = 33;
+
+thread_local! {
+    /// Taken tail calls in the current top-level execution. Shared with
+    /// the JIT's tail-call trampoline so a chain that crosses engines
+    /// (a JIT'd link dispatching into an interpreted one) still counts
+    /// as ONE chain against [`MAX_TAIL_CALLS`].
+    pub static TAIL_DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
 
 /// Pre-decoded instruction. Register indices are u8; `t` is the jump
 /// target (absolute pc) for branch ops.
 #[derive(Clone, Copy, Debug)]
 pub enum Op {
-    // alu64 reg/imm
+    /// 64-bit ALU, register source
     Alu64Reg { op: u8, dst: u8, src: u8 },
+    /// 64-bit ALU, immediate source
     Alu64Imm { op: u8, dst: u8, imm: i64 },
+    /// 32-bit ALU, register source (zero-extends)
     Alu32Reg { op: u8, dst: u8, src: u8 },
+    /// 32-bit ALU, immediate source (zero-extends)
     Alu32Imm { op: u8, dst: u8, imm: i64 },
+    /// 64-bit negate
     Neg64 { dst: u8 },
+    /// 32-bit negate (zero-extends)
     Neg32 { dst: u8 },
-    // memory
+    /// memory load `dst = *(width*)(src + off)`
     Load { width: u8, dst: u8, src: u8, off: i16 },
+    /// memory store `*(width*)(dst + off) = src`
     Store { width: u8, dst: u8, src: u8, off: i16 },
+    /// memory store `*(width*)(dst + off) = imm`
     StoreImm { width: u8, dst: u8, off: i16, imm: i64 },
+    /// 64-bit immediate load (from lddw)
     LoadImm64 { dst: u8, imm: u64 },
     /// resolved map reference: value is the map id (helpers resolve it)
     LoadMapFd { dst: u8, map_id: u32 },
-    // control
+    /// unconditional jump
     Ja { t: u32 },
+    /// conditional jump, register source
     JmpReg { op: u8, dst: u8, src: u8, t: u32, is32: bool },
+    /// conditional jump, immediate source
     JmpImm { op: u8, dst: u8, imm: i64, t: u32, is32: bool },
+    /// helper call by id (tail calls are intercepted by the engines)
     Call { helper: i32 },
+    /// bpf-to-bpf call to the subprogram starting at op index `t`
+    CallPseudo { t: u32 },
+    /// program / subprogram exit
     Exit,
 }
 
@@ -122,7 +149,22 @@ pub fn predecode(insns: &[Insn]) -> Result<Vec<Op>, String> {
                 if jop == jmp::EXIT {
                     Op::Exit
                 } else if jop == jmp::CALL {
-                    Op::Call { helper: ins.imm }
+                    if ins.is_pseudo_call() {
+                        let tgt_slot = i as i64 + 1 + ins.imm as i64;
+                        if tgt_slot < 0 || tgt_slot as usize >= insns.len() {
+                            return Err(format!("pseudo call target {} out of range", tgt_slot));
+                        }
+                        let t = slot2op[tgt_slot as usize];
+                        if t == u32::MAX {
+                            return Err(format!(
+                                "pseudo call into lddw interior at slot {}",
+                                tgt_slot
+                            ));
+                        }
+                        Op::CallPseudo { t }
+                    } else {
+                        Op::Call { helper: ins.imm }
+                    }
                 } else {
                     let tgt_slot = (i as i64 + 1 + ins.off as i64) as usize;
                     let t = slot2op[tgt_slot];
@@ -247,10 +289,23 @@ fn jmp_taken(op: u8, a: u64, b: u64, is32: bool) -> bool {
     }
 }
 
+/// One runtime bpf-to-bpf frame: the caller's resume point plus the
+/// machine-preserved registers (BPF r6–r9 and the frame pointer r10).
+struct CallFrame {
+    ret: usize,
+    saved: [u64; 5],
+}
+
 /// Execute a pre-decoded, verified program.
 ///
 /// `ctx` is the policy context pointer handed to the program in R1.
 /// Returns R0.
+///
+/// bpf-to-bpf calls push a runtime frame and give the callee a fresh
+/// 512-byte stack region (the verifier's cumulative cap bounds what a
+/// verified chain can actually touch); `bpf_tail_call` replaces the
+/// executing program in place — same frame, r1 still the ctx — so an
+/// interpreted chain runs entirely inside this one loop.
 ///
 /// # Safety
 /// `ops` must come from a program accepted by the verifier with a ctx
@@ -263,10 +318,24 @@ pub unsafe fn execute(ops: &[Op], ctx: *mut u8, env: &HelperEnv) -> u64 {
     regs[1] = ctx as u64;
     regs[10] = stack.top();
 
+    let mut frames: Vec<CallFrame> = Vec::new();
+    // boxed so pushing never moves a live frame's storage out from
+    // under its r10; popped with the frame (callee stacks are dead on
+    // return — verified code cannot read them again)
+    let mut frame_stacks: Vec<Box<Stack512>> = Vec::new();
+
+    // tail calls swap the executing program; the Arcs keep every
+    // chained program alive until this call returns. Raw pointers keep
+    // the borrow checker out of the (safe-by-Arc) self-reference.
+    let mut cur_ops: *const [Op] = ops;
+    let mut cur_env: *const HelperEnv = env;
+    let mut held: Vec<Arc<LoadedProgram>> = Vec::new();
+    let depth0 = TAIL_DEPTH.with(|d| d.get());
+
     let mut pc = 0usize;
     loop {
-        debug_assert!(pc < ops.len());
-        match *ops.get_unchecked(pc) {
+        debug_assert!(pc < (*cur_ops).len());
+        match *(*cur_ops).get_unchecked(pc) {
             Op::Alu64Reg { op, dst, src } => {
                 regs[dst as usize] = alu64(op, regs[dst as usize], regs[src as usize]);
                 pc += 1;
@@ -348,12 +417,65 @@ pub unsafe fn execute(ops: &[Op], ctx: *mut u8, env: &HelperEnv) -> u64 {
                     pc + 1
                 };
             }
+            Op::Call { helper } if helper == hid::TAIL_CALL => {
+                // bpf_tail_call(ctx = r1, prog_array = r2, index = r3):
+                // on success the current program is replaced in place
+                // and the caller never resumes; on failure (empty slot,
+                // out of range, chain limit, type mismatch) execution
+                // falls through with a nonzero r0 — never a trap.
+                let depth = TAIL_DEPTH.with(|d| d.get());
+                let target = if depth >= MAX_TAIL_CALLS {
+                    None
+                } else {
+                    resolve_tail_call(&*cur_env, regs[2] as u32, regs[3])
+                };
+                match target {
+                    Some(t) => {
+                        TAIL_DEPTH.with(|d| d.set(depth + 1));
+                        debug_assert!(frames.is_empty(), "tail call from frame 0 only");
+                        // same-frame semantics: r10 keeps the current
+                        // stack; r1 already holds the ctx argument
+                        cur_ops = t.ops.as_slice();
+                        cur_env = &t.env;
+                        held.push(t);
+                        pc = 0;
+                    }
+                    None => {
+                        regs[0] = u64::MAX;
+                        pc += 1;
+                    }
+                }
+            }
             Op::Call { helper } => {
                 let args = [regs[1], regs[2], regs[3], regs[4], regs[5]];
-                regs[0] = env.call(helper, args);
+                regs[0] = (*cur_env).call(helper, args);
                 pc += 1;
             }
-            Op::Exit => return regs[0],
+            Op::CallPseudo { t } => {
+                frames.push(CallFrame {
+                    ret: pc + 1,
+                    saved: [regs[6], regs[7], regs[8], regs[9], regs[10]],
+                });
+                let mut s = Box::new(Stack512::new());
+                regs[10] = s.top();
+                frame_stacks.push(s);
+                pc = t as usize;
+            }
+            Op::Exit => match frames.pop() {
+                Some(f) => {
+                    regs[6] = f.saved[0];
+                    regs[7] = f.saved[1];
+                    regs[8] = f.saved[2];
+                    regs[9] = f.saved[3];
+                    regs[10] = f.saved[4];
+                    frame_stacks.pop();
+                    pc = f.ret;
+                }
+                None => {
+                    TAIL_DEPTH.with(|d| d.set(depth0));
+                    return regs[0];
+                }
+            },
         }
     }
 }
@@ -371,10 +493,12 @@ pub unsafe fn execute(ops: &[Op], ctx: *mut u8, env: &HelperEnv) -> u64 {
 #[repr(align(16))]
 pub struct Stack512(std::mem::MaybeUninit<[u8; 512]>);
 impl Stack512 {
+    /// A fresh (deliberately uninitialized) stack region.
     #[inline(always)]
     pub fn new() -> Self {
         Stack512(std::mem::MaybeUninit::uninit())
     }
+    /// One-past-the-end address — the value BPF r10 starts at.
     #[inline(always)]
     pub fn top(&mut self) -> u64 {
         unsafe { (self.0.as_mut_ptr() as *mut u8).add(512) as u64 }
@@ -394,7 +518,7 @@ mod tests {
     use crate::bpf::maps::{MapDef, MapKind, MapRegistry};
 
     fn env() -> HelperEnv {
-        HelperEnv { maps: vec![], printk: None }
+        HelperEnv { maps: vec![], printk: None, prog_type: None }
     }
 
     unsafe fn run(prog: &[Insn]) -> u64 {
@@ -546,6 +670,45 @@ mod tests {
         p.push(exit());
         let want: u64 = (8..=512u64).step_by(8).sum();
         unsafe { assert_eq!(run(&p), want) };
+    }
+
+    #[test]
+    fn subprog_call_frames_and_preserved_regs() {
+        // main: r6..r9 live across the call; callee clobbers them all
+        // and uses its own stack — the frame must restore the caller's
+        let prog = [
+            mov64_imm(6, 6),               // 0
+            mov64_imm(7, 7),               // 1
+            mov64_imm(8, 8),               // 2
+            mov64_imm(9, 9),               // 3
+            st_imm(size::DW, 10, -8, 50),  // 4: caller stack
+            mov64_imm(1, 2),               // 5
+            call_pseudo(5),                // 6 -> 12
+            ldx(size::DW, 2, 10, -8),      // 7: caller stack intact
+            alu64_reg(alu::ADD, 0, 2),     // 8
+            alu64_reg(alu::ADD, 0, 6),     // 9
+            alu64_reg(alu::ADD, 0, 7),     // 10
+            exit(),                        // 11
+            mov64_imm(6, 1000),            // 12: callee trashes r6-r9
+            mov64_imm(7, 1000),            // 13
+            mov64_imm(8, 1000),            // 14
+            mov64_imm(9, 1000),            // 15
+            st_imm(size::DW, 10, -8, 999), // 16: callee's own frame
+            mov64_reg(0, 1),               // 17: r0 = arg
+            exit(),                        // 18
+        ];
+        // r0 = 2 (callee) + 50 (caller stack) + 6 + 7 = 65
+        unsafe { assert_eq!(run(&prog), 65) };
+    }
+
+    #[test]
+    fn predecode_pseudo_call_rejects_bad_targets() {
+        let bad = [mov64_imm(0, 0), call_pseudo(100), exit()];
+        assert!(predecode(&bad).is_err());
+        let mut into_lddw = vec![mov64_imm(0, 0), call_pseudo(1)];
+        into_lddw.extend(lddw(1, 0, 7)); // target = slot 3 = lddw interior
+        into_lddw.push(exit());
+        assert!(predecode(&into_lddw).is_err());
     }
 
     #[test]

@@ -21,13 +21,23 @@
 //! caller-saved registers so the clobber the verifier models is exactly
 //! what the hardware does.
 //!
+//! Bpf-to-bpf calls compile to native near calls: every pseudo-call
+//! target gets a per-subprog prologue that saves the caller's BPF
+//! r6–r9 and frame pointer (exactly the machine-preservation contract
+//! the verifier models) and carves a private 512-byte frame, so
+//! `call rel32` / `ret` do the rest. `bpf_tail_call` goes through a
+//! two-word trampoline returning (r0, taken) in rax:rdx — on a taken
+//! call the chained program already ran and the emitted code exits
+//! through the epilogue without resuming the caller.
+//!
 //! Any op the backend cannot compile aborts compilation and the program
 //! falls back to the pre-decoded interpreter — correctness never
 //! depends on the JIT (both engines only ever run verified code).
 
 use super::helpers::{id as hid, HelperEnv};
 use super::insn::{alu, jmp, size};
-use super::interp::Op;
+use super::interp::{Op, MAX_TAIL_CALLS, TAIL_DEPTH};
+use super::program::resolve_tail_call;
 
 /// Raw libc bindings for executable-memory management. The `libc`
 /// crate is not available offline, and these three symbols are part of
@@ -112,6 +122,43 @@ tramp!(tramp_rb_reserve, hid::RINGBUF_RESERVE);
 tramp!(tramp_rb_submit, hid::RINGBUF_SUBMIT);
 tramp!(tramp_rb_discard, hid::RINGBUF_DISCARD);
 tramp!(tramp_rb_query, hid::RINGBUF_QUERY);
+
+/// Two-word return of the tail-call trampoline: SysV returns the pair
+/// in rax:rdx, so the emitted code can test `taken` without reaching
+/// into Rust thread-locals — rax already holds the final r0.
+#[repr(C)]
+struct TailRet {
+    r0: u64,
+    taken: u64,
+}
+
+/// `bpf_tail_call` for JIT'd programs. On success the chained program
+/// runs to completion *here* and the emitted code jumps straight to
+/// the epilogue with our r0 — the caller never resumes, observably
+/// identical to the kernel's in-place jump (the target cannot read the
+/// dying frame: init-before-read is verified per program). The chain
+/// limit is shared with the interpreter through [`TAIL_DEPTH`], so
+/// mixed-engine chains count as one chain.
+unsafe extern "C" fn tramp_tail_call(
+    env: *const HelperEnv,
+    ctx: u64,
+    map_id: u64,
+    index: u64,
+    _a4: u64,
+    _a5: u64,
+) -> TailRet {
+    let depth = TAIL_DEPTH.with(|d| d.get());
+    if depth >= MAX_TAIL_CALLS {
+        return TailRet { r0: u64::MAX, taken: 0 };
+    }
+    let Some(target) = resolve_tail_call(&*env, map_id as u32, index) else {
+        return TailRet { r0: u64::MAX, taken: 0 };
+    };
+    TAIL_DEPTH.with(|d| d.set(depth + 1));
+    let r0 = target.run(ctx as *mut u8);
+    TAIL_DEPTH.with(|d| d.set(depth));
+    TailRet { r0, taken: 1 }
+}
 
 fn trampoline(helper: i32) -> Option<u64> {
     let f: unsafe extern "C" fn(*const HelperEnv, u64, u64, u64, u64, u64) -> u64 =
@@ -244,6 +291,63 @@ impl Emit {
     }
 }
 
+/// Shuffle BPF r1..r5 (rdi rsi rdx rcx r8) into SysV args 2..6, env
+/// (r12) into arg 1 — reverse order so nothing is clobbered early —
+/// then call the trampoline at `target` through r11.
+fn emit_call_shuffle(e: &mut Emit, target: u64) {
+    e.mov_rr(R9, R8); // a5
+    e.mov_rr(R8, RCX); // a4
+    e.mov_rr(RCX, RDX); // a3
+    e.mov_rr(RDX, RSI); // a2
+    e.mov_rr(RSI, RDI); // a1
+    e.mov_rr(RDI, R12); // env
+    e.mov_imm(R11, target as i64);
+    // call r11
+    e.u8(0x41);
+    e.u8(0xff);
+    e.modrm(0b11, 2, R11);
+}
+
+/// Tear down the main frame: add rsp, FRAME; pop callee-saved; ret.
+fn emit_main_epilogue(e: &mut Emit) {
+    e.alu_imm(0, RSP, FRAME, true);
+    for r in [RBP, R15, R14, R13, R12, RBX] {
+        e.pop(r);
+    }
+    e.u8(0xc3);
+}
+
+/// Subprogram prologue: save the caller's BPF r10 (rbp) and r6-r9
+/// (rbx r13 r14 r15) — bpf-to-bpf calls preserve exactly what the
+/// verifier models as preserved — then carve a fresh full-size stack
+/// frame (the verifier's cumulative cap bounds live usage; a private
+/// 512-byte frame per subprog only over-provides). Entry rsp is
+/// 8 mod 16 after the near call; 5 pushes + the 16-aligned frame put
+/// helper-call sites back on 16-byte alignment.
+fn emit_subprog_prologue(e: &mut Emit) {
+    for r in [RBP, RBX, R13, R14, R15] {
+        e.push(r);
+    }
+    // sub rsp, 512
+    e.alu_imm(5, RSP, STACK_BYTES, true);
+    // lea rbp, [rsp + 512] — BPF r10 = frame top
+    e.rex(true, RBP, RSP);
+    e.u8(0x8d);
+    e.modrm(0b10, RBP, RSP);
+    e.u8(0x24); // SIB: base=rsp
+    e.u32(STACK_BYTES as u32);
+}
+
+/// Subprogram exit: unwind the frame and restore the caller's BPF
+/// r6-r9 / r10; rax carries the scalar return (BPF r0).
+fn emit_subprog_epilogue(e: &mut Emit) {
+    e.alu_imm(0, RSP, STACK_BYTES, true);
+    for r in [R15, R14, R13, RBX, RBP] {
+        e.pop(r);
+    }
+    e.u8(0xc3);
+}
+
 /// A JIT-compiled program (owns executable memory).
 pub struct JitProgram {
     code: *mut u8,
@@ -297,11 +401,38 @@ impl JitProgram {
         e.mov_rr(R12, RSI);
         // rdi already holds ctx == BPF r1
 
+        // bpf-to-bpf layout: every pseudo-call target starts a
+        // subprogram, emitted in place behind its own prologue (the
+        // kernel-JIT shape: near calls between per-subprog functions,
+        // each with its own frame and callee-saved spills).
+        let mut entries: Vec<u32> = ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::CallPseudo { t } => Some(*t),
+                _ => None,
+            })
+            .collect();
+        entries.sort_unstable();
+        entries.dedup();
+        if entries.first() == Some(&0) {
+            // a callable main never comes out of the verifier; fall
+            // back to the interpreter rather than emit nonsense
+            return None;
+        }
+
         let mut op_off = vec![0u32; ops.len() + 1];
         let mut fixups: Vec<(usize, u32)> = Vec::new(); // (code pos of rel32, target op)
+        // call sites bind to the *prologue*, branches to the entry op
+        let mut prologue_off: Vec<(u32, u32)> = Vec::new();
+        let mut call_fixups: Vec<(usize, u32)> = Vec::new();
 
         for (i, op) in ops.iter().enumerate() {
+            if entries.binary_search(&(i as u32)).is_ok() {
+                prologue_off.push((i as u32, e.code.len() as u32));
+                emit_subprog_prologue(&mut e);
+            }
             op_off[i] = e.code.len() as u32;
+            let in_sub = entries.partition_point(|&en| (en as usize) <= i) > 0;
             match *op {
                 Op::Alu64Imm { op, dst, imm } => emit_alu_imm(&mut e, op, dst, imm, true)?,
                 Op::Alu32Imm { op, dst, imm } => emit_alu_imm(&mut e, op, dst, imm, false)?,
@@ -440,30 +571,38 @@ impl JitProgram {
                     fixups.push((e.code.len(), t));
                     e.u32(0);
                 }
+                Op::Call { helper } if helper == hid::TAIL_CALL => {
+                    // the verifier restricts tail calls to the main
+                    // frame, so the taken path leaves through the main
+                    // epilogue with rax = the chained program's r0
+                    emit_call_shuffle(&mut e, tramp_tail_call as usize as u64);
+                    // TailRet arrives in rax (r0) : rdx (taken)
+                    e.alu_rr(0x85, RDX, RDX, true); // test rdx, rdx
+                    e.u8(0x74); // jz rel8 over the epilogue (not taken)
+                    let jz = e.code.len();
+                    e.u8(0);
+                    emit_main_epilogue(&mut e);
+                    let end = e.code.len();
+                    e.code[jz] = (end - (jz + 1)) as u8;
+                }
                 Op::Call { helper } => {
                     let target = trampoline(helper)?;
-                    // shuffle BPF r1..r5 (rdi rsi rdx rcx r8) into SysV
-                    // args 2..6, env into arg 1 — reverse order so
-                    // nothing is clobbered early:
-                    e.mov_rr(R9, R8); // a5
-                    e.mov_rr(R8, RCX); // a4
-                    e.mov_rr(RCX, RDX); // a3
-                    e.mov_rr(RDX, RSI); // a2
-                    e.mov_rr(RSI, RDI); // a1
-                    e.mov_rr(RDI, R12); // env
-                    e.mov_imm(R11, target as i64);
-                    // call r11
-                    e.u8(0x41);
-                    e.u8(0xff);
-                    e.modrm(0b11, 2, R11);
+                    emit_call_shuffle(&mut e, target);
+                }
+                Op::CallPseudo { t } => {
+                    // near call; the callee's prologue saves BPF r6-r9
+                    // and rbp, so the machine preserves exactly what the
+                    // verifier models as preserved
+                    e.u8(0xe8);
+                    call_fixups.push((e.code.len(), t));
+                    e.u32(0);
                 }
                 Op::Exit => {
-                    // add rsp, FRAME; pops; ret
-                    e.alu_imm(0, RSP, FRAME, true);
-                    for r in [RBP, R15, R14, R13, R12, RBX] {
-                        e.pop(r);
+                    if in_sub {
+                        emit_subprog_epilogue(&mut e);
+                    } else {
+                        emit_main_epilogue(&mut e);
                     }
-                    e.u8(0xc3);
                 }
             }
         }
@@ -471,6 +610,11 @@ impl JitProgram {
 
         for (pos, target) in fixups {
             let rel = op_off[target as usize] as i64 - (pos as i64 + 4);
+            e.code[pos..pos + 4].copy_from_slice(&(rel as i32).to_le_bytes());
+        }
+        for (pos, target) in call_fixups {
+            let dst = prologue_off.iter().find(|&&(t, _)| t == target).map(|&(_, o)| o)?;
+            let rel = dst as i64 - (pos as i64 + 4);
             e.code[pos..pos + 4].copy_from_slice(&(rel as i32).to_le_bytes());
         }
 
@@ -506,6 +650,7 @@ impl JitProgram {
         f(ctx, env as *const HelperEnv)
     }
 
+    /// Bytes of emitted machine code (mapped length).
     pub fn code_len(&self) -> usize {
         self.len
     }
@@ -678,7 +823,7 @@ mod tests {
     use crate::util::Rng;
 
     fn env() -> HelperEnv {
-        HelperEnv { maps: vec![], printk: None }
+        HelperEnv { maps: vec![], printk: None, prog_type: None }
     }
 
     fn jit_run(prog: &[Insn], ctx: *mut u8, env: &HelperEnv) -> u64 {
@@ -846,6 +991,70 @@ mod tests {
             got.push(u64::from_le_bytes(b[8..16].try_into().unwrap()));
         });
         assert_eq!(got, vec![111, 222]);
+    }
+
+    #[test]
+    fn subprog_call_matches_interp() {
+        // main keeps r6/r7 live across the call; sub: r0 = r1 * 2 + r2
+        let prog = [
+            mov64_imm(6, 100),
+            mov64_imm(7, 10),
+            mov64_imm(1, 4),
+            mov64_imm(2, 5),
+            insn::call_pseudo(3), // -> 8
+            alu64_reg(alu::ADD, 0, 6),
+            alu64_reg(alu::ADD, 0, 7),
+            exit(),
+            mov64_reg(0, 1), // sub
+            alu64_imm(alu::MUL, 0, 2),
+            alu64_reg(alu::ADD, 0, 2),
+            exit(),
+        ];
+        let ops = interp::predecode(&prog).unwrap();
+        let want = unsafe { interp::execute(&ops, std::ptr::null_mut(), &env()) };
+        assert_eq!(want, 123);
+        assert_eq!(jit_run(&prog, std::ptr::null_mut(), &env()), want);
+    }
+
+    #[test]
+    fn subprog_own_stack_and_helper_alignment() {
+        let reg = MapRegistry::new();
+        let henv = HelperEnv::new(&reg, &[]).unwrap();
+        let prog = [
+            mov64_imm(6, 7),              // 0
+            insn::call_pseudo(2),         // 1 -> 4
+            alu64_reg(alu::ADD, 0, 6),    // 2: r6 preserved by the callee
+            exit(),                       // 3
+            st_imm(size::DW, 10, -8, 40), // 4: sub writes its own frame
+            insn::call(5),                // 5: helper inside a subprog
+            ldx(size::DW, 0, 10, -8),     // 6: frame survived the helper
+            alu64_imm(alu::ADD, 0, 2),    // 7
+            exit(),                       // 8
+        ];
+        assert_eq!(jit_run(&prog, std::ptr::null_mut(), &henv), 49);
+    }
+
+    #[test]
+    fn nested_subprog_calls_match_interp() {
+        // main -> a -> b, each preserving the caller's r6
+        let prog = [
+            mov64_imm(6, 1),           // 0
+            mov64_imm(1, 10),          // 1
+            insn::call_pseudo(2),      // 2 -> 5 (a)
+            alu64_reg(alu::ADD, 0, 6), // 3
+            exit(),                    // 4
+            mov64_reg(6, 1),           // 5: a's own r6
+            insn::call_pseudo(2),      // 6 -> 9 (b)
+            alu64_reg(alu::ADD, 0, 6), // 7: a's r6 survived b
+            exit(),                    // 8
+            mov64_imm(0, 100),         // 9: b
+            exit(),                    // 10
+        ];
+        // b returns 100; a adds its r6 (=10) -> 110; main adds 1 -> 111
+        let ops = interp::predecode(&prog).unwrap();
+        let want = unsafe { interp::execute(&ops, std::ptr::null_mut(), &env()) };
+        assert_eq!(want, 111);
+        assert_eq!(jit_run(&prog, std::ptr::null_mut(), &env()), want);
     }
 
     #[test]

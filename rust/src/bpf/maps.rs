@@ -32,26 +32,38 @@ use std::sync::{Arc, Mutex};
 /// Map type discriminator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MapKind {
+    /// fixed-size array, 4-byte index key, O(1) lookup
     Array,
+    /// open-addressed hash map, arbitrary fixed-size keys
     Hash,
+    /// one array instance per logical cpu slot
     PerCpuArray,
+    /// MPSC byte ring with kernel-compatible record framing
     RingBuf,
+    /// array of verified program handles, the `bpf_tail_call` jump
+    /// table: slots hold same-typed programs and are replaced
+    /// atomically (the composable-chain hot-reload mechanism)
+    ProgArray,
 }
 
 impl MapKind {
+    /// Decode the kernel `bpf_map_type` numbering used on the wire.
     pub fn from_u32(v: u32) -> Option<MapKind> {
         match v {
             1 => Some(MapKind::Hash),
             2 => Some(MapKind::Array),
+            3 => Some(MapKind::ProgArray),
             6 => Some(MapKind::PerCpuArray),
             27 => Some(MapKind::RingBuf),
             _ => None,
         }
     }
+    /// Kernel `bpf_map_type` id for this kind.
     pub fn to_u32(self) -> u32 {
         match self {
             MapKind::Hash => 1,
             MapKind::Array => 2,
+            MapKind::ProgArray => 3,
             MapKind::PerCpuArray => 6,
             MapKind::RingBuf => 27,
         }
@@ -61,17 +73,41 @@ impl MapKind {
 /// Static definition of a map (what a BPF object file declares).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MapDef {
+    /// map name — the cross-object sharing key in a [`MapRegistry`]
     pub name: String,
+    /// map type
     pub kind: MapKind,
+    /// key size in bytes (4 for arrays; 0 for ringbuf/prog-array convention aside)
     pub key_size: u32,
+    /// value size in bytes (0 for ringbuf)
     pub value_size: u32,
+    /// capacity: entries for element maps, data bytes for ringbufs,
+    /// slots for prog arrays
     pub max_entries: u32,
 }
 
 impl MapDef {
+    /// Kind-specific structural validation (sizes, power-of-two rings).
     pub fn validate(&self) -> Result<(), String> {
         if self.max_entries == 0 {
             return Err(format!("map '{}': max_entries must be > 0", self.name));
+        }
+        if self.kind == MapKind::ProgArray {
+            // kernel prog-array ABI: 4-byte index key, 4-byte (fd) value
+            if self.key_size != 4 || self.value_size != 4 {
+                return Err(format!(
+                    "map '{}': prog arrays require key_size == 4 and value_size == 4 \
+                     (got key={} value={})",
+                    self.name, self.key_size, self.value_size
+                ));
+            }
+            if self.max_entries > 1024 {
+                return Err(format!(
+                    "map '{}': prog arrays support at most 1024 slots (got {})",
+                    self.name, self.max_entries
+                ));
+            }
+            return Ok(());
         }
         if self.kind == MapKind::RingBuf {
             // kernel semantics: max_entries is the data size in bytes,
@@ -107,7 +143,7 @@ impl MapDef {
                     return Err(format!("map '{}': invalid key_size {}", self.name, self.key_size));
                 }
             }
-            MapKind::RingBuf => unreachable!(),
+            MapKind::RingBuf | MapKind::ProgArray => unreachable!(),
         }
         Ok(())
     }
@@ -138,9 +174,13 @@ pub const RINGBUF_HDR_SIZE: u64 = 8;
 
 /// `bpf_ringbuf_query` flag values (kernel numbering).
 pub mod ringbuf_query {
+    /// unconsumed bytes between producer and consumer
     pub const AVAIL_DATA: u64 = 0;
+    /// ring data size in bytes
     pub const RING_SIZE: u64 = 1;
+    /// logical consumer position
     pub const CONS_POS: u64 = 2;
+    /// logical producer position
     pub const PROD_POS: u64 = 3;
 }
 
@@ -201,10 +241,25 @@ impl RingState {
     }
 }
 
+/// One occupied slot of a [`MapKind::ProgArray`] map: a verified
+/// program handle plus its program-type tag. The handle is stored
+/// type-erased so the map layer stays independent of the program
+/// loader; [`crate::bpf::program`] owns the only (down)cast sites.
+#[derive(Clone)]
+pub struct ProgSlot {
+    /// program-type tag ([`crate::bpf::helpers::ProgType::tag`]): all
+    /// occupied slots of one prog array must share it
+    pub tag: u32,
+    /// the installed program (`Arc<LoadedProgram>` behind `dyn Any`)
+    pub handle: Arc<dyn std::any::Any + Send + Sync>,
+}
+
 /// A live map instance. Storage is allocated once at creation so value
 /// pointers handed to programs remain valid for the map's lifetime.
 pub struct Map {
+    /// the definition this map was created from
     pub def: MapDef,
+    /// registry-assigned live id (what `lddw rX, map[id]` resolves to)
     pub id: u32,
     /// value storage: max_entries * value_size (× NCPU for per-cpu).
     values: Box<[UnsafeCell<u8>]>,
@@ -216,6 +271,10 @@ pub struct Map {
     count: AtomicU32,
     /// ringbuf maps only: positions + drop accounting.
     ring: Option<RingState>,
+    /// prog-array maps only: the tail-call jump table. One mutex over
+    /// the whole table: writers (slot replacement) are rare
+    /// control-plane events, readers clone one `Arc` per tail call.
+    progs: Option<Mutex<Vec<Option<ProgSlot>>>>,
     /// serializes structural changes (hash insert/delete, ring reserve).
     lock: SpinLock,
 }
@@ -245,6 +304,14 @@ impl SpinLock {
     }
 }
 
+/// Poison-recovering lock over a prog array's slot table (same policy
+/// as `host::reload`: a panicking writer must not wedge the table).
+fn lock_progs(
+    m: &Mutex<Vec<Option<ProgSlot>>>,
+) -> std::sync::MutexGuard<'_, Vec<Option<ProgSlot>>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 fn zeroed_cells(n: usize) -> Box<[UnsafeCell<u8>]> {
     let mut v = Vec::with_capacity(n);
     v.resize_with(n, || UnsafeCell::new(0u8));
@@ -252,6 +319,7 @@ fn zeroed_cells(n: usize) -> Box<[UnsafeCell<u8>]> {
 }
 
 impl Map {
+    /// Allocate a map instance for `def` under registry id `id`.
     pub fn new(def: MapDef, id: u32) -> Result<Map, String> {
         def.validate()?;
         let values = match def.kind {
@@ -261,6 +329,8 @@ impl Map {
             // (emulating the kernel's double-mapped pages), so producer
             // and consumer never have to split a record.
             MapKind::RingBuf => zeroed_cells(0),
+            // prog-array slots live in `progs`, not byte storage
+            MapKind::ProgArray => zeroed_cells(0),
             MapKind::PerCpuArray => {
                 zeroed_cells(def.max_entries as usize * NCPU * def.value_size as usize)
             }
@@ -275,6 +345,8 @@ impl Map {
             (zeroed_cells(0), Vec::new().into_boxed_slice())
         };
         let ring = (def.kind == MapKind::RingBuf).then(|| RingState::new(def.max_entries));
+        let progs = (def.kind == MapKind::ProgArray)
+            .then(|| Mutex::new((0..def.max_entries).map(|_| None).collect()));
         Ok(Map {
             def,
             id,
@@ -283,6 +355,7 @@ impl Map {
             slots,
             count: AtomicU32::new(0),
             ring,
+            progs,
             lock: SpinLock::new(),
         })
     }
@@ -322,7 +395,8 @@ impl Map {
             return std::ptr::null_mut();
         }
         match self.def.kind {
-            MapKind::RingBuf => std::ptr::null_mut(),
+            // ringbufs and prog arrays have no data elements to point at
+            MapKind::RingBuf | MapKind::ProgArray => std::ptr::null_mut(),
             MapKind::Array => {
                 let idx = u32::from_le_bytes(key.try_into().unwrap()) as usize;
                 if idx >= self.def.max_entries as usize {
@@ -376,6 +450,11 @@ impl Map {
             MapKind::RingBuf => {
                 Err(format!("map '{}': ringbuf maps have no update", self.def.name))
             }
+            MapKind::ProgArray => Err(format!(
+                "map '{}': prog-array slots hold programs, not bytes \
+                 (use prog_array_set)",
+                self.def.name
+            )),
             MapKind::Array | MapKind::PerCpuArray => {
                 let p = self.lookup(key);
                 if p.is_null() {
@@ -442,7 +521,7 @@ impl Map {
     /// Delete `key` (hash maps only; arrays cannot delete). Ok(true) if removed.
     pub fn delete(&self, key: &[u8]) -> Result<bool, String> {
         match self.def.kind {
-            MapKind::Array | MapKind::PerCpuArray | MapKind::RingBuf => {
+            MapKind::Array | MapKind::PerCpuArray | MapKind::RingBuf | MapKind::ProgArray => {
                 Err(format!("map '{}': delete unsupported on this map kind", self.def.name))
             }
             MapKind::Hash => {
@@ -478,12 +557,69 @@ impl Map {
         match self.def.kind {
             MapKind::Hash => self.count.load(Ordering::Relaxed) as usize,
             MapKind::RingBuf => self.ringbuf_query(ringbuf_query::AVAIL_DATA) as usize,
+            MapKind::ProgArray => self
+                .progs
+                .as_ref()
+                .map(|p| lock_progs(p).iter().filter(|s| s.is_some()).count())
+                .unwrap_or(0),
             _ => self.def.max_entries as usize,
         }
     }
 
+    /// True when [`Map::len`] is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    // -- prog arrays (MapKind::ProgArray) -------------------------------------
+
+    /// Install `slot` at `index`, replacing any previous occupant
+    /// atomically (in-flight tail calls keep their `Arc` to the old
+    /// program; the next call observes the new one — the same
+    /// grace-period shape as [`crate::host::reload`]). All occupied
+    /// slots must share one program-type tag: the first insert pins it,
+    /// and a mismatched tag is rejected so a chain can never dispatch
+    /// into a program verified against a different ctx layout.
+    pub fn prog_array_set(&self, index: u32, slot: ProgSlot) -> Result<(), String> {
+        let Some(progs) = &self.progs else {
+            return Err(format!("map '{}' is not a prog array", self.def.name));
+        };
+        if index >= self.def.max_entries {
+            return Err(format!(
+                "map '{}': slot {} out of range (entries {})",
+                self.def.name, index, self.def.max_entries
+            ));
+        }
+        let mut g = lock_progs(progs);
+        if let Some(other) = g.iter().flatten().find(|s| s.tag != slot.tag) {
+            return Err(format!(
+                "map '{}': program type tag {} is incompatible with the array's \
+                 installed type tag {} (all slots of a prog array must hold the \
+                 same program type)",
+                self.def.name, slot.tag, other.tag
+            ));
+        }
+        g[index as usize] = Some(slot);
+        Ok(())
+    }
+
+    /// Read slot `index` (a cheap `Arc` clone). `None` for empty or
+    /// out-of-range slots — the tail-call fallthrough path.
+    pub fn prog_array_get(&self, index: u32) -> Option<ProgSlot> {
+        let progs = self.progs.as_ref()?;
+        if index >= self.def.max_entries {
+            return None;
+        }
+        lock_progs(progs)[index as usize].clone()
+    }
+
+    /// Empty slot `index`; returns true if a program was installed.
+    pub fn prog_array_clear(&self, index: u32) -> bool {
+        let Some(progs) = &self.progs else { return false };
+        if index >= self.def.max_entries {
+            return false;
+        }
+        lock_progs(progs)[index as usize].take().is_some()
     }
 
     /// Typed convenience: read the value for `key` as a copy.
@@ -506,6 +642,7 @@ impl Map {
         Some(u64::from_le_bytes(v[..8].try_into().unwrap()))
     }
 
+    /// Typed convenience: write `value` into the first 8 value bytes.
     pub fn write_u64(&self, key: u32, value: u64) -> Result<(), String> {
         let mut buf = vec![0u8; self.def.value_size as usize];
         if buf.len() < 8 {
@@ -803,6 +940,7 @@ struct RegistryInner {
 }
 
 impl MapRegistry {
+    /// An empty registry (one per [`crate::host::NcclBpfHost`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -831,16 +969,19 @@ impl MapRegistry {
         Ok(map)
     }
 
+    /// Resolve a live map id (the `lddw map[id]` operand).
     pub fn by_id(&self, id: u32) -> Option<Arc<Map>> {
         self.inner.lock().unwrap().by_id.get(&id).cloned()
     }
 
+    /// Resolve a map by its declared name.
     pub fn by_name(&self, name: &str) -> Option<Arc<Map>> {
         let g = self.inner.lock().unwrap();
         let id = g.by_name.get(name)?;
         g.by_id.get(id).cloned()
     }
 
+    /// Every registered map name (unsorted).
     pub fn names(&self) -> Vec<String> {
         self.inner.lock().unwrap().by_name.keys().cloned().collect()
     }
@@ -1252,6 +1393,52 @@ mod tests {
         let received = consumer.join().unwrap();
         assert_eq!(received, sent, "every submitted record must be drained exactly once");
         assert_eq!(sent + m.ringbuf_dropped(), PRODUCERS * PER_PRODUCER);
+    }
+
+    #[test]
+    fn prog_array_slots_and_type_pinning() {
+        let def = MapDef {
+            name: "chain".into(),
+            kind: MapKind::ProgArray,
+            key_size: 4,
+            value_size: 4,
+            max_entries: 4,
+        };
+        let m = Map::new(def, 1).unwrap();
+        assert!(m.is_empty());
+        assert!(m.prog_array_get(0).is_none());
+        assert!(m.prog_array_get(99).is_none(), "out of range is empty, not an error");
+        let slot = |tag: u32, v: u64| ProgSlot { tag, handle: Arc::new(v) };
+        m.prog_array_set(0, slot(0, 10)).unwrap();
+        m.prog_array_set(2, slot(0, 12)).unwrap();
+        assert_eq!(m.len(), 2);
+        // type pinning: a differently-tagged program is rejected
+        let err = m.prog_array_set(1, slot(1, 11)).unwrap_err();
+        assert!(err.contains("incompatible"), "{}", err);
+        // atomic replacement of one slot leaves the others untouched
+        m.prog_array_set(0, slot(0, 99)).unwrap();
+        let got = m.prog_array_get(0).unwrap();
+        assert_eq!(*got.handle.downcast_ref::<u64>().unwrap(), 99);
+        let other = m.prog_array_get(2).unwrap();
+        assert_eq!(*other.handle.downcast_ref::<u64>().unwrap(), 12);
+        // bounds + clear
+        assert!(m.prog_array_set(4, slot(0, 1)).is_err());
+        assert!(m.prog_array_clear(2));
+        assert!(!m.prog_array_clear(2));
+        assert_eq!(m.len(), 1);
+        // prog arrays have no byte elements
+        assert!(m.lookup(&0u32.to_le_bytes()).is_null());
+        assert!(m.update(&0u32.to_le_bytes(), &0u32.to_le_bytes()).is_err());
+        assert!(m.delete(&0u32.to_le_bytes()).is_err());
+        // shape validation
+        let bad = MapDef {
+            name: "b".into(),
+            kind: MapKind::ProgArray,
+            key_size: 8,
+            value_size: 4,
+            max_entries: 4,
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! via [`verifier`] → pre-decode via [`interp`] / native-compile via
 //! [`jit`]) → execute against typed [`maps`] and whitelisted
 //! [`helpers`].
+#![deny(missing_docs)]
 
 pub mod asm;
 pub mod helpers;
@@ -18,7 +19,7 @@ pub mod program;
 pub mod verifier;
 
 pub use helpers::{PrintkSink, ProgType};
-pub use maps::{Map, MapDef, MapKind, MapRegistry};
+pub use maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 pub use object::Object;
-pub use program::{CtxLayouts, LoadError, LoadedProgram};
+pub use program::{prog_array_update, CtxLayouts, LoadError, LoadedProgram};
 pub use verifier::{CtxLayout, VerifyError, VerifyInfo};

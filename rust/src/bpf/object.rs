@@ -27,20 +27,27 @@ const MAGIC: &[u8; 4] = b"BEF1";
 /// of an `lddw` whose imm must be patched with the live id of `map_name`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Reloc {
+    /// index of the first lddw slot to patch
     pub insn_idx: u32,
+    /// map name resolved against the registry at load time
     pub map_name: String,
 }
 
 /// One program section within an object.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ObjProgram {
+    /// section name (`tuner` / `profiler` / `net`)
     pub section: String,
+    /// program name (unique within the object)
     pub name: String,
+    /// the instruction stream (subprograms inline after the main body)
     pub insns: Vec<Insn>,
+    /// map-reference relocations
     pub relocs: Vec<Reloc>,
 }
 
 impl ObjProgram {
+    /// The program type implied by the section name, if recognized.
     pub fn prog_type(&self) -> Option<ProgType> {
         ProgType::from_section(&self.section)
     }
@@ -49,7 +56,9 @@ impl ObjProgram {
 /// A complete BPF object: maps + programs.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Object {
+    /// map declarations (resolved by name at load time)
     pub maps: Vec<MapDef>,
+    /// program sections
     pub progs: Vec<ObjProgram>,
 }
 
@@ -92,14 +101,17 @@ impl<'a> Reader<'a> {
 }
 
 impl Object {
+    /// Find a map declaration by name.
     pub fn map(&self, name: &str) -> Option<&MapDef> {
         self.maps.iter().find(|m| m.name == name)
     }
 
+    /// Find a program by name.
     pub fn prog(&self, name: &str) -> Option<&ObjProgram> {
         self.progs.iter().find(|p| p.name == name)
     }
 
+    /// Find the first program in `section`.
     pub fn prog_by_section(&self, section: &str) -> Option<&ObjProgram> {
         self.progs.iter().find(|p| p.section == section)
     }
@@ -184,10 +196,12 @@ impl Object {
         Ok(Object { maps, progs })
     }
 
+    /// Serialize to a `.bpfo` file.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_bytes())
     }
 
+    /// Read and parse a `.bpfo` file.
     pub fn load(path: &std::path::Path) -> Result<Object, String> {
         let bytes =
             std::fs::read(path).map_err(|e| format!("read {}: {}", path.display(), e))?;

@@ -9,7 +9,7 @@ use super::helpers::{HelperEnv, PrintkSink, ProgType};
 use super::insn::{pseudo, Insn};
 use super::interp::{self, Op};
 use super::jit::JitProgram;
-use super::maps::{Map, MapDef, MapRegistry};
+use super::maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 use super::object::{ObjProgram, Object};
 use super::verifier::{self, CtxLayout, VerifyError, VerifyInfo};
 use std::collections::HashMap;
@@ -20,12 +20,16 @@ use std::time::Instant;
 /// (defines which policy_context fields are inputs vs outputs).
 #[derive(Clone, Debug, Default)]
 pub struct CtxLayouts {
+    /// layout for `SEC("tuner")` programs
     pub tuner: CtxLayout,
+    /// layout for `SEC("profiler")` programs
     pub profiler: CtxLayout,
+    /// layout for `SEC("net")` programs
     pub net: CtxLayout,
 }
 
 impl CtxLayouts {
+    /// The layout a program of type `pt` is verified against.
     pub fn for_type(&self, pt: ProgType) -> &CtxLayout {
         match pt {
             ProgType::Tuner => &self.tuner,
@@ -38,8 +42,15 @@ impl CtxLayouts {
 /// Load-time failure: either structural or a verification rejection.
 #[derive(Debug)]
 pub enum LoadError {
+    /// malformed object / relocation / unresolvable map
     Structural(String),
-    Verify { prog: String, err: VerifyError },
+    /// the verifier rejected program `prog`
+    Verify {
+        /// name of the rejected program
+        prog: String,
+        /// the verifier's rejection
+        err: VerifyError,
+    },
 }
 
 impl std::fmt::Display for LoadError {
@@ -57,19 +68,28 @@ impl std::error::Error for LoadError {}
 /// hot-reload total ~9.4 ms of which only the pointer swap is hot).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LoadStats {
+    /// nanoseconds spent in the verifier
     pub verify_ns: u64,
+    /// nanoseconds spent pre-decoding + JIT-compiling
     pub compile_ns: u64,
 }
 
 /// A verified, executable program bound to its maps.
 pub struct LoadedProgram {
     // (fields below; Debug implemented manually — ops/env are not Debug)
+    /// program name from the object
     pub name: String,
+    /// hook type the program was verified for
     pub prog_type: ProgType,
+    /// verification summary (used maps, stack depth, subprogs, ...)
     pub info: VerifyInfo,
+    /// load timing decomposition
     pub stats: LoadStats,
-    ops: Vec<Op>,
-    env: HelperEnv,
+    /// pre-decoded instructions (the interpreter's input; tail calls
+    /// switch the executing slice to another program's `ops`)
+    pub(crate) ops: Vec<Op>,
+    /// resolved helper environment (maps + printk sink + prog type)
+    pub(crate) env: HelperEnv,
     jit: Option<JitProgram>,
     maps_by_name: Vec<(String, Arc<Map>)>,
 }
@@ -103,6 +123,7 @@ impl LoadedProgram {
         unsafe { interp::execute(&self.ops, ctx, &self.env) }
     }
 
+    /// True when [`LoadedProgram::run`] dispatches to native code.
     pub fn is_jitted(&self) -> bool {
         self.jit.is_some()
     }
@@ -113,6 +134,7 @@ impl LoadedProgram {
         self.maps_by_name.iter().find(|(n, _)| n == name).map(|(_, m)| m.clone())
     }
 
+    /// Number of pre-decoded ops (≈ instruction count).
     pub fn op_count(&self) -> usize {
         self.ops.len()
     }
@@ -210,6 +232,7 @@ fn load_program(
     let ops = interp::predecode(&insns).map_err(LoadError::Structural)?;
     let mut env = HelperEnv::new(registry, &info.used_maps).map_err(LoadError::Structural)?;
     env.printk = sink;
+    env.prog_type = Some(pt);
     let jit = JitProgram::compile(&ops);
     let compile_ns = t1.elapsed().as_nanos() as u64;
 
@@ -223,6 +246,44 @@ fn load_program(
         jit,
         maps_by_name: live.to_vec(),
     })
+}
+
+/// Install a verified program into slot `index` of prog array `map` —
+/// the composable-chain control-plane operation. The map layer pins
+/// slot type compatibility on the first insert (every occupied slot of
+/// one array must hold the same program type), and the replacement is
+/// atomic: in-flight tail calls keep the `Arc` they already resolved
+/// while the next call observes the new link — one link of a chain can
+/// be hot-swapped without touching the others.
+pub fn prog_array_update(map: &Map, index: u32, prog: &Arc<LoadedProgram>) -> Result<(), String> {
+    if map.def.kind != MapKind::ProgArray {
+        return Err(format!("map '{}' is not a prog array", map.def.name));
+    }
+    map.prog_array_set(index, ProgSlot { tag: prog.prog_type.tag(), handle: prog.clone() })
+}
+
+/// Resolve a `bpf_tail_call` attempt against `env`: the map must be a
+/// live prog array, the slot occupied, and the installed program's
+/// type must match the caller's (when the caller declares one —
+/// raw-engine tests may not). `None` is the fallthrough path, never an
+/// error: kernel semantics make a failed tail call a no-op.
+pub(crate) fn resolve_tail_call(
+    env: &HelperEnv,
+    map_id: u32,
+    index: u64,
+) -> Option<Arc<LoadedProgram>> {
+    let m = env.map_by_id(map_id)?;
+    if m.def.kind != MapKind::ProgArray {
+        return None;
+    }
+    let slot = m.prog_array_get(u32::try_from(index).ok()?)?;
+    let prog = slot.handle.clone().downcast::<LoadedProgram>().ok()?;
+    if let Some(pt) = env.prog_type {
+        if prog.prog_type != pt {
+            return None;
+        }
+    }
+    Some(prog)
 }
 
 /// Assemble + load in one step (tests, CLI, examples).
@@ -351,6 +412,120 @@ ok:
         let r = load_asm(reader, &reg, &layouts()).unwrap();
         assert_eq!(w[0].run(std::ptr::null_mut()), 0);
         assert_eq!(r[0].run(std::ptr::null_mut()), 4242);
+    }
+
+    #[test]
+    fn subprogram_policy_loads_and_runs() {
+        let src = r#"
+prog tuner composed
+  ldxdw r1, [r1+8]        ; msg_size as the subprogram argument
+  call  double_it
+  add64 r0, 1
+  exit
+double_it:
+  mov64 r0, r1
+  mul64 r0, 2
+  exit
+"#;
+        let reg = MapRegistry::new();
+        let progs = load_asm(src, &reg, &layouts()).unwrap();
+        assert_eq!(progs[0].info.subprogs, 1);
+        let mut ctx = [0u8; 64];
+        ctx[8..16].copy_from_slice(&21u64.to_le_bytes());
+        assert_eq!(progs[0].run(ctx.as_mut_ptr()), 43);
+        assert_eq!(progs[0].run_interp(ctx.as_mut_ptr()), 43);
+    }
+
+    const DISPATCHER: &str = r#"
+map chain progarray entries=4
+
+prog tuner dispatcher
+  mov64 r6, r1            ; save ctx (the helper call clobbers r1-r5)
+  ldxw  r3, [r1+0]        ; slot index from ctx input
+  ldmap r2, chain
+  call  bpf_tail_call
+  stw   [r6+36], 99       ; fallthrough marker
+  mov64 r0, 7
+  exit
+"#;
+
+    fn link_src(marker: u32, ret: u32) -> String {
+        format!(
+            "prog tuner link{m}\n  stw [r1+36], {m}\n  mov64 r0, {r}\n  exit\n",
+            m = marker,
+            r = ret
+        )
+    }
+
+    #[test]
+    fn tail_call_chain_dispatch_and_hot_swap() {
+        let reg = MapRegistry::new();
+        let disp = load_asm(DISPATCHER, &reg, &layouts()).unwrap().remove(0);
+        let link0 = Arc::new(load_asm(&link_src(10, 100), &reg, &layouts()).unwrap().remove(0));
+        let link1 = Arc::new(load_asm(&link_src(20, 200), &reg, &layouts()).unwrap().remove(0));
+        let chain = disp.map("chain").unwrap();
+        prog_array_update(&chain, 0, &link0).unwrap();
+        prog_array_update(&chain, 1, &link1).unwrap();
+
+        let run_at = |idx: u32, interp: bool| -> (u64, u32) {
+            let mut ctx = [0u8; 64];
+            ctx[0..4].copy_from_slice(&idx.to_le_bytes());
+            let r0 = if interp {
+                disp.run_interp(ctx.as_mut_ptr())
+            } else {
+                disp.run(ctx.as_mut_ptr())
+            };
+            (r0, u32::from_le_bytes(ctx[36..40].try_into().unwrap()))
+        };
+
+        for interp in [false, true] {
+            // occupied slots dispatch; the dispatcher never resumes
+            assert_eq!(run_at(0, interp), (100, 10), "interp={}", interp);
+            assert_eq!(run_at(1, interp), (200, 20), "interp={}", interp);
+            // empty slot and out-of-range degrade to fallthrough
+            assert_eq!(run_at(3, interp), (7, 99), "interp={}", interp);
+            assert_eq!(run_at(9, interp), (7, 99), "interp={}", interp);
+        }
+
+        // hot-swap one link; the other slot is untouched
+        let link0b = Arc::new(load_asm(&link_src(11, 111), &reg, &layouts()).unwrap().remove(0));
+        prog_array_update(&chain, 0, &link0b).unwrap();
+        for interp in [false, true] {
+            assert_eq!(run_at(0, interp), (111, 11), "interp={}", interp);
+            assert_eq!(run_at(1, interp), (200, 20), "interp={}", interp);
+        }
+        // and a cleared slot falls through again
+        assert!(chain.prog_array_clear(1));
+        for interp in [false, true] {
+            assert_eq!(run_at(1, interp), (7, 99), "interp={}", interp);
+        }
+    }
+
+    #[test]
+    fn prog_array_rejects_type_mismatch() {
+        let reg = MapRegistry::new();
+        let disp = load_asm(DISPATCHER, &reg, &layouts()).unwrap().remove(0);
+        let chain = disp.map("chain").unwrap();
+        let tuner = Arc::new(load_asm(&link_src(1, 1), &reg, &layouts()).unwrap().remove(0));
+        prog_array_update(&chain, 0, &tuner).unwrap();
+        let prof = Arc::new(
+            load_asm("prog profiler p\n  mov64 r0, 0\n  exit\n", &reg, &layouts())
+                .unwrap()
+                .remove(0),
+        );
+        let err = prog_array_update(&chain, 1, &prof).unwrap_err();
+        assert!(err.contains("incompatible"), "{}", err);
+        // a non-prog-array map is rejected outright
+        let other = load_asm(
+            "map plain array key=4 value=8 entries=2\nprog tuner t\n  mov64 r0, 0\n  exit\n",
+            &reg,
+            &layouts(),
+        )
+        .unwrap()
+        .remove(0);
+        let plain = other.map("plain").unwrap();
+        let err = prog_array_update(&plain, 0, &tuner).unwrap_err();
+        assert!(err.contains("not a prog array"), "{}", err);
     }
 
     #[test]

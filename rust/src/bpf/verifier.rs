@@ -36,6 +36,32 @@
 //!    a copy/spill of it) after the submit/discard released it.
 //! 10. **reserved-size overflow** — accesses past the statically-known
 //!     reserved size (the reserve size argument must be a constant).
+//!
+//! Programs may be *composed*: `call imm` with `src_reg ==
+//! BPF_PSEUDO_CALL` is a **bpf-to-bpf call** into a subprogram, and
+//! the verifier runs a call-graph pass with kernel frame semantics —
+//! the callee is analyzed inline per call site with the caller's
+//! r1–r5 as arguments (path-sensitive, like the kernel's non-BTF
+//! subprog handling), r6–r9 are machine-preserved across the call and
+//! start uninitialized in the callee, each frame gets its own
+//! byte-tracked stack, and stack pointers carry their owning frame so
+//! callees can safely use caller buffers. Three more bug classes:
+//!
+//! 11. **recursion** — a subprogram reachable from itself (directly or
+//!     mutually); an acyclic call graph is what keeps execution
+//!     bounded, so any back-edge is rejected.
+//! 12. **cross-frame stack overflow** — the kernel's cumulative cap:
+//!     the combined stack of all live frames must stay within 512
+//!     bytes even though each frame's accesses are locally in range.
+//! 13. **clobbered-register misuse** — reading r1–r5 after a call
+//!     (caller side) or r6–r9 before initializing them (callee side);
+//!     only r1–r5 cross the call boundary as arguments.
+//!
+//! `bpf_tail_call` chains are checked too: the map must be a prog
+//! array, arg1 must be the context pointer exactly as received, and
+//! tail calls are only legal from the main frame — the chained
+//! program itself is verified independently when it is installed into
+//! the array (with type compatibility pinned at update time).
 
 use super::helpers::{self, ArgType, ProgType, RetType};
 use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
@@ -48,6 +74,7 @@ use std::fmt;
 /// write output fields" (§3.3).
 #[derive(Clone, Debug, Default)]
 pub struct CtxLayout {
+    /// total context size in bytes
     pub size: u32,
     /// readable (start, len) ranges
     pub read: Vec<(u32, u32)>,
@@ -65,9 +92,11 @@ impl CtxLayout {
             .iter()
             .any(|&(rs, rl)| s >= rs as u64 && e <= rs as u64 + rl as u64)
     }
+    /// True if a `width`-byte read at `off` is within a readable range.
     pub fn can_read(&self, off: i64, width: u64) -> bool {
         Self::covered(&self.read, off, width)
     }
+    /// True if a `width`-byte write at `off` is within a writable range.
     pub fn can_write(&self, off: i64, width: u64) -> bool {
         Self::covered(&self.write, off, width)
     }
@@ -78,7 +107,9 @@ impl CtxLayout {
 /// error messages").
 #[derive(Clone, Debug)]
 pub struct VerifyError {
+    /// index of the offending instruction
     pub insn: usize,
+    /// actionable description of the rejection
     pub message: String,
 }
 
@@ -95,12 +126,14 @@ impl std::error::Error for VerifyError {}
 pub struct VerifyInfo {
     /// map ids referenced via lddw MAP_FD
     pub used_maps: Vec<u32>,
-    /// deepest stack byte used (positive number of bytes below r10)
+    /// deepest combined stack use across the call chain (bytes)
     pub stack_depth: u32,
     /// abstract instructions processed (complexity)
     pub insns_processed: u64,
     /// distinct helper ids called
     pub helpers_used: Vec<i32>,
+    /// bpf-to-bpf subprograms discovered (excluding the main program)
+    pub subprogs: u32,
 }
 
 /// total abstract instructions before declaring the program too complex
@@ -108,6 +141,8 @@ const COMPLEXITY_BUDGET: u64 = 200_000;
 /// per-instruction visit cap: exceeding it indicates an unbounded loop
 const VISIT_CAP: u32 = 20_000;
 const STACK: usize = STACK_SIZE as usize;
+/// maximum bpf-to-bpf call depth, incl. the main frame (kernel value)
+const MAX_CALL_FRAMES: usize = 8;
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 enum Reg {
@@ -115,8 +150,11 @@ enum Reg {
     /// unsigned interval [umin, umax]
     Scalar { umin: u64, umax: u64 },
     CtxPtr { off: i64 },
-    /// offset relative to r10 (0 = frame top); valid bytes are [-512, 0)
-    StackPtr { off: i64 },
+    /// offset relative to the owning frame's r10 (0 = frame top); valid
+    /// bytes are [-512, 0). `frame` indexes the verifier's frame stack
+    /// (0 = main program) — callees may receive and use pointers into
+    /// caller frames, and the frame tag keeps the byte tracking exact
+    StackPtr { off: i64, frame: u32 },
     /// verified non-null pointer into map value storage; the runtime
     /// offset lies anywhere in [off, off + span] (span > 0 after
     /// variable-offset arithmetic), and access checks bound *both*
@@ -181,38 +219,82 @@ enum StackByte {
     Spill,
 }
 
+/// One abstract call frame: registers, byte-tracked stack and spill
+/// slots, plus the call-graph bookkeeping (which subprogram executes
+/// here, where the caller resumes, how deep this frame's stack grew).
 #[derive(Clone)]
-struct State {
+struct Frame {
     regs: [Reg; NREGS],
     stack: [StackByte; STACK],
     /// 8-byte-aligned spill slots: offset (negative, multiple of 8) -> reg
     spills: BTreeMap<i64, Reg>,
+    /// index into `Verifier::subprogs` of the executing subprogram
+    subprog: usize,
+    /// caller resume pc (unused for frame 0)
+    ret_pc: usize,
+    /// deepest stack byte written in this frame — summed across frames
+    /// for the kernel's cumulative 512-byte cap
+    depth: u32,
+}
+
+impl Frame {
+    fn new(subprog: usize, ret_pc: usize, frame_idx: u32) -> Frame {
+        let mut regs = [Reg::Uninit; NREGS];
+        regs[10] = Reg::StackPtr { off: 0, frame: frame_idx };
+        Frame {
+            regs,
+            stack: [StackByte::Uninit; STACK],
+            spills: BTreeMap::new(),
+            subprog,
+            ret_pc,
+            depth: 0,
+        }
+    }
+}
+
+#[derive(Clone)]
+struct State {
+    /// the call stack; frames[0] is the main program
+    frames: Vec<Frame>,
     /// acquired-but-unreleased ringbuf references on this path; every
-    /// entry must be released (submit/discard) before EXIT
+    /// entry must be released (submit/discard) before the final EXIT.
+    /// Global across frames, as in the kernel: a callee may acquire a
+    /// reference its caller releases.
     refs: Vec<u32>,
 }
 
 impl State {
     fn initial(has_ctx: bool) -> State {
-        let mut regs = [Reg::Uninit; NREGS];
+        let mut f = Frame::new(0, 0, 0);
         if has_ctx {
-            regs[1] = Reg::CtxPtr { off: 0 };
+            f.regs[1] = Reg::CtxPtr { off: 0 };
         }
-        regs[10] = Reg::StackPtr { off: 0 };
-        State {
-            regs,
-            stack: [StackByte::Uninit; STACK],
-            spills: BTreeMap::new(),
-            refs: Vec::new(),
-        }
+        State { frames: vec![f], refs: Vec::new() }
+    }
+
+    #[inline]
+    fn cur(&self) -> &Frame {
+        self.frames.last().expect("state always has a frame")
+    }
+
+    #[inline]
+    fn cur_mut(&mut self) -> &mut Frame {
+        self.frames.last_mut().expect("state always has a frame")
     }
 
     /// stack byte index for r10-relative offset `off` in [-512, 0)
     fn sidx(off: i64) -> usize {
         (off + STACK_SIZE) as usize
     }
+
+    /// combined stack bytes across all live frames
+    fn total_stack(&self) -> u32 {
+        self.frames.iter().map(|f| f.depth).sum()
+    }
 }
 
+/// The abstract interpreter: construct with [`Verifier::new`], run
+/// with [`Verifier::verify`] (or use the [`verify`] free function).
 pub struct Verifier<'a> {
     insns: &'a [Insn],
     prog_type: ProgType,
@@ -222,11 +304,14 @@ pub struct Verifier<'a> {
     processed: u64,
     next_nid: u32,
     info: VerifyInfo,
+    /// subprogram regions as (start, end) insn ranges; [0] is main
+    subprogs: Vec<(usize, usize)>,
 }
 
 type VResult<T> = Result<T, VerifyError>;
 
 impl<'a> Verifier<'a> {
+    /// Bind a verifier to a program, its type's ctx layout and maps.
     pub fn new(
         insns: &'a [Insn],
         prog_type: ProgType,
@@ -242,6 +327,7 @@ impl<'a> Verifier<'a> {
             processed: 0,
             next_nid: 1,
             info: VerifyInfo::default(),
+            subprogs: Vec::new(),
         }
     }
 
@@ -258,6 +344,7 @@ impl<'a> Verifier<'a> {
             return Err(self.err(0, format!("program too large: {} insns", self.insns.len())));
         }
         self.check_structure()?;
+        self.info.subprogs = (self.subprogs.len() - 1) as u32;
 
         // DFS over paths with pruned branch states.
         let mut worklist: Vec<(usize, State)> = vec![(0, State::initial(true))];
@@ -267,6 +354,15 @@ impl<'a> Verifier<'a> {
                     return Err(self.err(
                         pc.saturating_sub(1),
                         "control flow falls off the end of the program".into(),
+                    ));
+                }
+                let (rs, re) = self.subprogs[st.cur().subprog];
+                if pc < rs || pc >= re {
+                    return Err(self.err(
+                        pc,
+                        "control flow crosses a subprogram boundary (subprograms \
+                         are entered via call and left via exit only)"
+                            .into(),
                     ));
                 }
                 self.processed += 1;
@@ -306,8 +402,10 @@ impl<'a> Verifier<'a> {
         Ok(self.info)
     }
 
-    /// Jump-target and lddw structural validation.
-    fn check_structure(&self) -> VResult<()> {
+    /// Jump-target and lddw structural validation, plus subprogram
+    /// discovery: every bpf-to-bpf call target starts a subprogram and
+    /// subprogram i spans [entry_i, entry_{i+1}).
+    fn check_structure(&mut self) -> VResult<()> {
         let n = self.insns.len();
         let mut is_lddw_hi = vec![false; n];
         let mut i = 0;
@@ -327,6 +425,38 @@ impl<'a> Verifier<'a> {
                 i += 1;
             }
         }
+        let mut entries: Vec<usize> = vec![0];
+        for (i, ins) in self.insns.iter().enumerate() {
+            if is_lddw_hi[i] || !ins.is_pseudo_call() {
+                continue;
+            }
+            let tgt = i as i64 + 1 + ins.imm as i64;
+            if tgt < 0 || tgt as usize >= n {
+                return Err(
+                    self.err(i, format!("bpf-to-bpf call out of range: target {}", tgt))
+                );
+            }
+            if is_lddw_hi[tgt as usize] {
+                return Err(self.err(
+                    i,
+                    format!("bpf-to-bpf call into the middle of lddw at insn {}", tgt),
+                ));
+            }
+            entries.push(tgt as usize);
+        }
+        entries.sort_unstable();
+        entries.dedup();
+        if entries.len() - 1 > MAX_CALL_FRAMES * 4 {
+            return Err(self.err(
+                0,
+                format!("too many subprograms: {} (max {})", entries.len() - 1, MAX_CALL_FRAMES * 4),
+            ));
+        }
+        self.subprogs = entries
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, entries.get(i + 1).copied().unwrap_or(n)))
+            .collect();
         for (i, ins) in self.insns.iter().enumerate() {
             if is_lddw_hi[i] {
                 continue;
@@ -345,17 +475,46 @@ impl<'a> Verifier<'a> {
                     return Err(self
                         .err(i, format!("jump into the middle of lddw at insn {}", tgt)));
                 }
+                if self.subprog_of(i) != self.subprog_of(tgt as usize) {
+                    return Err(self.err(
+                        i,
+                        format!(
+                            "jump crosses a subprogram boundary (target {}): subprograms \
+                             are entered via call and left via exit only",
+                            tgt
+                        ),
+                    ));
+                }
             }
         }
         Ok(())
+    }
+
+    /// Index of the subprogram whose region contains `pc`.
+    fn subprog_of(&self, pc: usize) -> usize {
+        match self.subprogs.binary_search_by(|&(s, _)| s.cmp(&pc)) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
     }
 
     fn reg(&self, st: &State, r: u8, at: usize) -> VResult<Reg> {
         if r as usize >= NREGS {
             return Err(self.err(at, format!("invalid register R{}", r)));
         }
-        let v = st.regs[r as usize];
+        let v = st.cur().regs[r as usize];
         if v == Reg::Uninit {
+            if st.frames.len() > 1 && (6..=9).contains(&r) {
+                return Err(self.err(
+                    at,
+                    format!(
+                        "R{} is uninitialized in this subprogram: bpf-to-bpf calls \
+                         pass only r1-r5; r6-r9 belong to the caller and are \
+                         restored on return",
+                        r
+                    ),
+                ));
+            }
             return Err(self.err(at, format!("R{} is uninitialized; read of uninit register", r)));
         }
         Ok(v)
@@ -368,7 +527,7 @@ impl<'a> Verifier<'a> {
         if r as usize >= NREGS {
             return Err(self.err(at, format!("invalid register R{}", r)));
         }
-        st.regs[r as usize] = v;
+        st.cur_mut().regs[r as usize] = v;
         Ok(())
     }
 
@@ -548,14 +707,14 @@ impl<'a> Verifier<'a> {
                     }
                     Reg::CtxPtr { off: off + delta_min }
                 }
-                Reg::StackPtr { off } => {
+                Reg::StackPtr { off, frame } => {
                     if delta_min != delta_max {
                         return Err(self.err(
                             pc,
                             "variable offset into stack is not allowed".into(),
                         ));
                     }
-                    Reg::StackPtr { off: off + delta_min }
+                    Reg::StackPtr { off: off + delta_min, frame }
                 }
                 Reg::MapValue { map_id, off, span, vsize } => Reg::MapValue {
                     map_id,
@@ -740,18 +899,25 @@ impl<'a> Verifier<'a> {
                 }
                 Reg::scalar_unknown()
             }
-            Reg::StackPtr { off: po } => {
+            Reg::StackPtr { off: po, frame } => {
                 let a = po + off;
                 self.check_stack_range(pc, a, width)?;
+                let fidx = frame as usize;
+                if fidx >= st.frames.len() {
+                    return Err(self.err(
+                        pc,
+                        "stack pointer into a frame that already returned".into(),
+                    ));
+                }
                 // spill restore: 8-byte aligned full-width load of a spill
                 if width == 8 && a % 8 == 0 {
-                    if let Some(&sp) = st.spills.get(&a) {
+                    if let Some(sp) = st.frames[fidx].spills.get(&a).copied() {
                         self.set_reg(st, ins.dst, sp, pc)?;
                         return Ok(());
                     }
                 }
                 for b in 0..width as i64 {
-                    if st.stack[State::sidx(a + b)] == StackByte::Uninit {
+                    if st.frames[fidx].stack[State::sidx(a + b)] == StackByte::Uninit {
                         return Err(self.err(
                             pc,
                             format!("invalid read of uninitialized stack at r10{:+}", a + b),
@@ -866,38 +1032,67 @@ impl<'a> Verifier<'a> {
                     ));
                 }
             }
-            Reg::StackPtr { off: po } => {
+            Reg::StackPtr { off: po, frame } => {
                 let a = po + off;
                 self.check_stack_range(pc, a, width)?;
-                if width == 8 && a % 8 == 0 {
-                    // full-slot store: track the precise register state
-                    // (pointer provenance AND scalar intervals — interval
-                    // tracking through spills is what lets bounded loops
-                    // over stack-resident counters verify by unrolling)
-                    st.spills.insert(a, val);
-                    for b in 0..8 {
-                        st.stack[State::sidx(a + b)] = StackByte::Spill;
+                let fidx = frame as usize;
+                if fidx >= st.frames.len() {
+                    return Err(self.err(
+                        pc,
+                        "stack pointer into a frame that already returned".into(),
+                    ));
+                }
+                {
+                    let fr = &mut st.frames[fidx];
+                    if width == 8 && a % 8 == 0 {
+                        // full-slot store: track the precise register state
+                        // (pointer provenance AND scalar intervals — interval
+                        // tracking through spills is what lets bounded loops
+                        // over stack-resident counters verify by unrolling)
+                        fr.spills.insert(a, val);
+                        for b in 0..8 {
+                            fr.stack[State::sidx(a + b)] = StackByte::Spill;
+                        }
+                    } else {
+                        if val.is_pointer() {
+                            return Err(self.err(
+                                pc,
+                                "partial/unaligned pointer spill to stack is not allowed".into(),
+                            ));
+                        }
+                        // a data write invalidates any overlapping spill
+                        let slot = a - a.rem_euclid(8);
+                        fr.spills.remove(&slot);
+                        if (a + width as i64 - 1) - (a + width as i64 - 1).rem_euclid(8) != slot {
+                            fr.spills.remove(&(slot + 8));
+                        }
+                        for b in 0..width as i64 {
+                            fr.stack[State::sidx(a + b)] = StackByte::Data;
+                        }
                     }
-                } else {
-                    if val.is_pointer() {
-                        return Err(self.err(
-                            pc,
-                            "partial/unaligned pointer spill to stack is not allowed".into(),
-                        ));
-                    }
-                    // a data write invalidates any overlapping spill
-                    let slot = a - a.rem_euclid(8);
-                    st.spills.remove(&slot);
-                    if (a + width as i64 - 1) - (a + width as i64 - 1).rem_euclid(8) != slot {
-                        st.spills.remove(&(slot + 8));
-                    }
-                    for b in 0..width as i64 {
-                        st.stack[State::sidx(a + b)] = StackByte::Data;
+                    let depth = (-(a)) as u32;
+                    if depth > fr.depth {
+                        fr.depth = depth;
                     }
                 }
-                let depth = (-(a)) as u32;
-                if depth > self.info.stack_depth {
-                    self.info.stack_depth = depth;
+                // the kernel's cumulative cap: each frame's accesses are
+                // locally in [-512, 0), but the *combined* stack of the
+                // whole call chain must also fit in 512 bytes
+                let total = st.total_stack();
+                if total > STACK_SIZE as u32 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "combined stack size of {} call frames is {} bytes; \
+                             exceeds the 512-byte limit (stack overflow across \
+                             bpf-to-bpf frames)",
+                            st.frames.len(),
+                            total
+                        ),
+                    ));
+                }
+                if total > self.info.stack_depth {
+                    self.info.stack_depth = total;
                 }
             }
             Reg::MapValue { off: po, span, vsize, .. } => {
@@ -982,6 +1177,9 @@ impl<'a> Verifier<'a> {
     ) -> VResult<Next> {
         let op = ins.op();
         if op == jmp::EXIT {
+            if st.frames.len() > 1 {
+                return self.subprog_exit(pc, st);
+            }
             if let Some(&leaked) = st.refs.first() {
                 return Err(self.err(
                     pc,
@@ -993,12 +1191,17 @@ impl<'a> Verifier<'a> {
                     ),
                 ));
             }
-            match st.regs[0] {
+            match st.cur().regs[0] {
                 Reg::Scalar { .. } => Ok(Next::Exit),
                 Reg::Uninit => Err(self.err(pc, "R0 not set before exit".into())),
                 _ => Err(self.err(pc, "R0 must be a scalar at exit (pointer leak)".into())),
             }
         } else if op == jmp::CALL {
+            // is_pseudo_call is JMP-class only — the structural pass
+            // validated exactly that set of call targets
+            if ins.is_pseudo_call() {
+                return self.call_subprog(pc, ins, st);
+            }
             self.call_helper(pc, ins, st)?;
             Ok(Next::Fallthrough(pc + 1))
         } else if op == jmp::JA {
@@ -1127,6 +1330,86 @@ impl<'a> Verifier<'a> {
         }
     }
 
+    /// Enter a bpf-to-bpf callee: kernel frame semantics, analyzed
+    /// inline per call site with the caller's r1-r5 as arguments.
+    fn call_subprog(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<Next> {
+        let tgt = (pc as i64 + 1 + ins.imm as i64) as usize; // range-checked structurally
+        let sp = self.subprog_of(tgt);
+        debug_assert_eq!(self.subprogs[sp].0, tgt, "call targets define subprog entries");
+        if st.frames.iter().any(|f| f.subprog == sp) {
+            return Err(self.err(
+                pc,
+                format!(
+                    "recursive call to the subprogram at insn {}: the call graph \
+                     must be acyclic (recursion cannot be bounded at load time)",
+                    tgt
+                ),
+            ));
+        }
+        if st.frames.len() >= MAX_CALL_FRAMES {
+            return Err(self.err(
+                pc,
+                format!("call stack too deep: more than {} nested frames", MAX_CALL_FRAMES),
+            ));
+        }
+        // r1-r5 cross the boundary as arguments (any state, incl.
+        // pointers into caller frames); r6-r9 stay with the caller and
+        // start uninitialized in the callee.
+        let args = [
+            st.cur().regs[1],
+            st.cur().regs[2],
+            st.cur().regs[3],
+            st.cur().regs[4],
+            st.cur().regs[5],
+        ];
+        let mut f = Frame::new(sp, pc + 1, st.frames.len() as u32);
+        f.regs[1..=5].copy_from_slice(&args);
+        st.frames.push(f);
+        Ok(Next::Fallthrough(tgt))
+    }
+
+    /// Return from a bpf-to-bpf callee into its caller.
+    fn subprog_exit(&mut self, pc: usize, st: &mut State) -> VResult<Next> {
+        match st.cur().regs[0] {
+            Reg::Scalar { .. } => {}
+            Reg::Uninit => {
+                return Err(self.err(pc, "R0 not set before subprogram exit".into()));
+            }
+            _ => {
+                return Err(self.err(
+                    pc,
+                    "R0 must be a scalar at subprogram exit (a pointer would \
+                     escape the dying frame)"
+                        .into(),
+                ));
+            }
+        }
+        let callee = st.frames.pop().expect("subprog_exit requires a callee frame");
+        // pointers into the popped frame are dangling from here on, and
+        // the frame index will be reused by the next call — demote every
+        // surviving copy (a callee can park one in a caller buffer)
+        let live = st.frames.len() as u32;
+        let dead = |r: &Reg| matches!(r, Reg::StackPtr { frame, .. } if *frame >= live);
+        for f in st.frames.iter_mut() {
+            for r in f.regs.iter_mut() {
+                if dead(r) {
+                    *r = Reg::Uninit;
+                }
+            }
+            for (_, r) in f.spills.iter_mut() {
+                if dead(r) {
+                    *r = Reg::Uninit;
+                }
+            }
+        }
+        let caller = st.cur_mut();
+        caller.regs[0] = callee.regs[0];
+        for r in 1..=5 {
+            caller.regs[r] = Reg::Uninit;
+        }
+        Ok(Next::Fallthrough(callee.ret_pc))
+    }
+
     fn call_helper(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
         let hid = ins.imm;
         let spec = helpers::spec_by_id(hid)
@@ -1141,6 +1424,31 @@ impl<'a> Verifier<'a> {
             ));
         }
         self.info.helpers_used.push(hid);
+        if hid == helpers::id::TAIL_CALL {
+            if st.frames.len() > 1 {
+                return Err(self.err(
+                    pc,
+                    "bpf_tail_call is only allowed from the main program frame, \
+                     not from a bpf-to-bpf callee"
+                        .into(),
+                ));
+            }
+            // a taken tail call never returns to this program, so any
+            // reservation still held here could never be released: the
+            // record would stay BUSY forever and stall the consumer
+            // (the kernel rejects this the same way)
+            if let Some(&held) = st.refs.first() {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "bpf_tail_call with an unreleased ringbuf reference (ref {}): \
+                         a taken tail call never returns, so the reservation would \
+                         leak — submit or discard it first",
+                        held
+                    ),
+                ));
+            }
+        }
 
         // the map referenced by a ConstMapPtr arg, for key/value sizing
         let mut call_map: Option<&MapDef> = None;
@@ -1176,9 +1484,30 @@ impl<'a> Verifier<'a> {
                     call_map = self.maps.get(&map_id);
                     call_map_id = Some(map_id);
                     // helper / map-kind compatibility: ringbuf helpers
-                    // take only ringbuf maps, element helpers never do
+                    // take only ringbuf maps, bpf_tail_call only prog
+                    // arrays, element helpers neither
                     if let Some(md) = call_map {
                         let is_ring_map = md.kind == MapKind::RingBuf;
+                        let is_prog_map = md.kind == MapKind::ProgArray;
+                        if hid == helpers::id::TAIL_CALL && !is_prog_map {
+                            return Err(self.err(
+                                pc,
+                                format!(
+                                    "bpf_tail_call: map '{}' is not a prog array ({:?})",
+                                    md.name, md.kind
+                                ),
+                            ));
+                        }
+                        if is_prog_map && hid != helpers::id::TAIL_CALL {
+                            return Err(self.err(
+                                pc,
+                                format!(
+                                    "{}: prog array '{}' holds program handles, not \
+                                     data elements; only bpf_tail_call may use it",
+                                    spec.name, md.name
+                                ),
+                            ));
+                        }
                         if is_ringbuf_helper && !is_ring_map {
                             return Err(self.err(
                                 pc,
@@ -1293,6 +1622,25 @@ impl<'a> Verifier<'a> {
                     }
                     alloc_size = Some(umin);
                 }
+                ArgType::Ctx => {
+                    if !matches!(v, Reg::CtxPtr { off: 0 }) {
+                        let got = if let Reg::CtxPtr { off } = v {
+                            format!("ctx pointer at offset {:+}", off)
+                        } else {
+                            v.type_name().to_string()
+                        };
+                        return Err(self.err(
+                            pc,
+                            format!(
+                                "{} arg{} must be the program's context pointer \
+                                 exactly as received in R1, got {}",
+                                spec.name,
+                                i + 1,
+                                got
+                            ),
+                        ));
+                    }
+                }
                 ArgType::RingBufMem => match v {
                     Reg::RingBufMem { off, span, ref_id, .. } => {
                         if off != 0 || span != 0 {
@@ -1356,9 +1704,9 @@ impl<'a> Verifier<'a> {
 
         // clobber caller-saved registers, set R0 per return type
         for r in 1..=5 {
-            st.regs[r] = Reg::Uninit;
+            st.cur_mut().regs[r] = Reg::Uninit;
         }
-        st.regs[0] = match spec.ret {
+        st.cur_mut().regs[0] = match spec.ret {
             RetType::Scalar => Reg::scalar_unknown(),
             RetType::MapValueOrNull => {
                 let md = call_map.ok_or_else(|| {
@@ -1396,7 +1744,7 @@ impl<'a> Verifier<'a> {
         st: &State,
     ) -> VResult<()> {
         match v {
-            Reg::StackPtr { off } => {
+            Reg::StackPtr { off, frame } => {
                 if off < -STACK_SIZE || off + need as i64 > 0 {
                     return Err(self.err(
                         pc,
@@ -1406,8 +1754,15 @@ impl<'a> Verifier<'a> {
                         ),
                     ));
                 }
+                let fidx = frame as usize;
+                if fidx >= st.frames.len() {
+                    return Err(self.err(
+                        pc,
+                        format!("{} arg{}: stack pointer into a returned frame", helper, argno),
+                    ));
+                }
                 for b in 0..need as i64 {
-                    if st.stack[State::sidx(off + b)] == StackByte::Uninit {
+                    if st.frames[fidx].stack[State::sidx(off + b)] == StackByte::Uninit {
                         return Err(self.err(
                             pc,
                             format!(
@@ -1487,26 +1842,26 @@ enum Next {
     Exit,
 }
 
-/// Rewrite every register / spill slot carrying null-id `nid`.
+/// Rewrite every register / spill slot (in every frame) carrying
+/// null-id `nid`.
 fn promote_nid(st: &mut State, nid: u32, to: Reg) {
-    for r in st.regs.iter_mut() {
-        if let Reg::MapValueOrNull { nid: n, .. } = r {
-            if *n == nid {
+    let matches_nid = |r: &Reg| matches!(r, Reg::MapValueOrNull { nid: n, .. } if *n == nid);
+    for f in st.frames.iter_mut() {
+        for r in f.regs.iter_mut() {
+            if matches_nid(r) {
                 *r = to;
             }
         }
-    }
-    for (_, r) in st.spills.iter_mut() {
-        if let Reg::MapValueOrNull { nid: n, .. } = r {
-            if *n == nid {
+        for (_, r) in f.spills.iter_mut() {
+            if matches_nid(r) {
                 *r = to;
             }
         }
     }
 }
 
-/// Rewrite every register / spill slot carrying ringbuf reference
-/// `ref_id` (any of the three ringbuf pointer states).
+/// Rewrite every register / spill slot (in every frame) carrying
+/// ringbuf reference `ref_id` (any of the three ringbuf pointer states).
 fn promote_ring(st: &mut State, ref_id: u32, to: Reg) {
     let matches_ref = |r: &Reg| {
         matches!(
@@ -1516,14 +1871,16 @@ fn promote_ring(st: &mut State, ref_id: u32, to: Reg) {
             | Reg::RingBufReleased { ref_id: n } if *n == ref_id
         )
     };
-    for r in st.regs.iter_mut() {
-        if matches_ref(r) {
-            *r = to;
+    for f in st.frames.iter_mut() {
+        for r in f.regs.iter_mut() {
+            if matches_ref(r) {
+                *r = to;
+            }
         }
-    }
-    for (_, r) in st.spills.iter_mut() {
-        if matches_ref(r) {
-            *r = to;
+        for (_, r) in f.spills.iter_mut() {
+            if matches_ref(r) {
+                *r = to;
+            }
         }
     }
 }
@@ -1587,7 +1944,7 @@ fn branch_decision(op: u8, a0: u64, a1: u64, b0: u64, b1: u64) -> Option<bool> {
 /// Narrow `reg`'s interval given that branch `op` against constant `k`
 /// was (taken=true) or was not (taken=false) taken.
 fn prune(st: &mut State, reg: u8, op: u8, k: u64, taken: bool) {
-    let Reg::Scalar { mut umin, mut umax } = st.regs[reg as usize] else {
+    let Reg::Scalar { mut umin, mut umax } = st.cur().regs[reg as usize] else {
         return;
     };
     // effective comparison after accounting for branch direction
@@ -1628,7 +1985,7 @@ fn prune(st: &mut State, reg: u8, op: u8, k: u64, taken: bool) {
         // decisions will be vacuous but safe.
         umax = umin;
     }
-    st.regs[reg as usize] = Reg::Scalar { umin, umax };
+    st.cur_mut().regs[reg as usize] = Reg::Scalar { umin, umax };
 }
 
 /// Convenience entry point.
@@ -2318,6 +2675,361 @@ mod tests {
         p.push(mov64_imm(0, 0));
         p.push(exit());
         rb_ok(&p);
+    }
+
+    // -- bpf-to-bpf calls ----------------------------------------------------
+
+    #[test]
+    fn subprog_call_and_preserved_regs_ok() {
+        // main: r6 = ctx, args in r1/r2, call sub, use the result and
+        // dereference r6 — preserved across the call by the machine
+        let p = vec![
+            mov64_reg(6, 1),           // 0
+            mov64_imm(1, 2),           // 1
+            mov64_imm(2, 40),          // 2
+            call_pseudo(2),            // 3 -> 6
+            ldx(size::W, 3, 6, 0),     // 4: r6 survived the call
+            exit(),                    // 5: r0 is the callee's scalar
+            mov64_reg(0, 1),           // 6: sub
+            alu64_reg(alu::ADD, 0, 2), // 7
+            exit(),                    // 8
+        ];
+        let info = ok(&p);
+        assert_eq!(info.subprogs, 1);
+    }
+
+    #[test]
+    fn caller_saved_regs_clobbered_by_call() {
+        let p = vec![
+            mov64_imm(1, 1),  // 0
+            call_pseudo(2),   // 1 -> 4
+            mov64_reg(0, 1),  // 2: BUG — r1 died with the call
+            exit(),           // 3
+            mov64_imm(0, 0),  // 4: sub
+            exit(),           // 5
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("uninitialized"), "{}", e.message);
+    }
+
+    #[test]
+    fn callee_reading_r6_rejected() {
+        let p = vec![
+            mov64_imm(6, 7), // 0
+            call_pseudo(1),  // 1 -> 3
+            exit(),          // 2
+            mov64_reg(0, 6), // 3: BUG — only r1-r5 cross the call
+            exit(),          // 4
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("pass only r1-r5"), "{}", e.message);
+    }
+
+    #[test]
+    fn direct_recursion_rejected() {
+        let p = vec![
+            mov64_imm(0, 0), // 0
+            call_pseudo(1),  // 1 -> 3
+            exit(),          // 2
+            call_pseudo(-1), // 3 -> 3: BUG
+            exit(),          // 4
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("recursive"), "{}", e.message);
+    }
+
+    #[test]
+    fn mutual_recursion_rejected() {
+        let p = vec![
+            mov64_imm(0, 0), // 0
+            call_pseudo(1),  // 1 -> 3 (A)
+            exit(),          // 2
+            call_pseudo(2),  // 3: A -> 6 (B)
+            mov64_imm(0, 0), // 4
+            exit(),          // 5
+            call_pseudo(-4), // 6: B -> 3 (A): BUG
+            exit(),          // 7
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("recursive"), "{}", e.message);
+    }
+
+    #[test]
+    fn combined_stack_across_frames_rejected() {
+        // each frame's 384 bytes are locally fine; 768 combined is not
+        let p = vec![
+            st_imm(size::DW, 10, -384, 1), // 0
+            call_pseudo(1),                // 1 -> 3
+            exit(),                        // 2
+            st_imm(size::DW, 10, -384, 1), // 3: BUG — 768 combined
+            mov64_imm(0, 0),               // 4
+            exit(),                        // 5
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("combined stack"), "{}", e.message);
+    }
+
+    #[test]
+    fn cumulative_stack_depth_reported() {
+        let p = vec![
+            st_imm(size::DW, 10, -64, 1),  // 0
+            call_pseudo(1),                // 1 -> 3
+            exit(),                        // 2
+            st_imm(size::DW, 10, -128, 1), // 3
+            mov64_imm(0, 0),               // 4
+            exit(),                        // 5
+        ];
+        let info = ok(&p);
+        assert_eq!(info.stack_depth, 192);
+    }
+
+    #[test]
+    fn cross_frame_stack_pointer_arg_ok() {
+        // the callee reads and writes through a pointer into the
+        // caller's frame — frame-tagged stack tracking keeps it exact
+        let p = vec![
+            st_imm(size::DW, 10, -8, 99), // 0
+            mov64_reg(1, 10),             // 1
+            alu64_imm(alu::ADD, 1, -8),   // 2
+            call_pseudo(1),               // 3 -> 5
+            exit(),                       // 4
+            ldx(size::DW, 0, 1, 0),       // 5: read caller stack
+            st_imm(size::DW, 1, 0, 42),   // 6: write caller stack
+            exit(),                       // 7
+        ];
+        ok(&p);
+    }
+
+    #[test]
+    fn callee_stack_pointer_escape_via_caller_buf_rejected() {
+        // the callee parks a pointer to its own (dying) frame in a
+        // caller buffer; the caller must not be able to dereference it
+        let p = vec![
+            st_imm(size::DW, 10, -8, 0), // 0
+            mov64_reg(1, 10),            // 1
+            alu64_imm(alu::ADD, 1, -8),  // 2
+            call_pseudo(3),              // 3 -> 7
+            ldx(size::DW, 2, 10, -8),    // 4: restores a demoted slot
+            ldx(size::DW, 3, 2, 0),      // 5: BUG — dead-frame pointer
+            exit(),                      // 6
+            mov64_reg(2, 10),            // 7: sub: r2 = own frame
+            stx(size::DW, 1, 2, 0),      // 8: park it in caller's buf
+            mov64_imm(0, 0),             // 9
+            exit(),                      // 10
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("uninitialized"), "{}", e.message);
+    }
+
+    #[test]
+    fn subprog_exit_with_pointer_rejected() {
+        let p = vec![
+            mov64_imm(1, 0),  // 0
+            call_pseudo(1),   // 1 -> 3
+            exit(),           // 2
+            mov64_reg(0, 10), // 3: BUG — frame pointer escapes
+            exit(),           // 4
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("subprogram exit"), "{}", e.message);
+    }
+
+    #[test]
+    fn jump_across_subprog_boundary_rejected() {
+        let p = vec![
+            mov64_imm(0, 0), // 0
+            call_pseudo(2),  // 1 -> 4
+            ja(2),           // 2 -> 5: BUG — jumps into the subprogram
+            exit(),          // 3
+            mov64_imm(0, 0), // 4: sub
+            exit(),          // 5
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("subprogram boundary"), "{}", e.message);
+    }
+
+    #[test]
+    fn fallthrough_into_subprog_rejected() {
+        let p = vec![
+            mov64_imm(0, 0), // 0
+            call_pseudo(1),  // 1 -> 3
+            mov64_imm(2, 1), // 2: no exit — falls into the subprogram
+            mov64_imm(0, 0), // 3: sub
+            exit(),          // 4
+        ];
+        let e = fails(&p);
+        assert!(e.message.contains("subprogram boundary"), "{}", e.message);
+    }
+
+    /// depth = number of chained subprograms; 7 callees (8 frames) is
+    /// the kernel limit, 8 callees must be rejected.
+    fn chain_prog(depth: usize) -> Vec<Insn> {
+        let mut p = vec![mov64_imm(0, 0), call_pseudo(1), exit()];
+        for i in 0..depth {
+            if i + 1 < depth {
+                p.push(call_pseudo(1));
+                p.push(exit());
+            } else {
+                p.push(mov64_imm(0, 0));
+                p.push(exit());
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn call_depth_limit_enforced() {
+        let info = ok(&chain_prog(7));
+        assert_eq!(info.subprogs, 7);
+        let e = fails(&chain_prog(8));
+        assert!(e.message.contains("too deep"), "{}", e.message);
+    }
+
+    // -- tail calls ----------------------------------------------------------
+
+    /// maps: id 7 = array (as in `one_map`), id 8 = 4-slot prog array
+    fn chain_maps() -> HashMap<u32, MapDef> {
+        let mut m = one_map();
+        m.insert(
+            8,
+            MapDef {
+                name: "chain".into(),
+                kind: MapKind::ProgArray,
+                key_size: 4,
+                value_size: 4,
+                max_entries: 4,
+            },
+        );
+        m
+    }
+
+    fn tc_ok(prog: &[Insn]) -> VerifyInfo {
+        verify(prog, ProgType::Tuner, &ctx_rw(), &chain_maps()).expect("should verify")
+    }
+
+    fn tc_fails(prog: &[Insn]) -> VerifyError {
+        verify(prog, ProgType::Tuner, &ctx_rw(), &chain_maps()).expect_err("should be rejected")
+    }
+
+    #[test]
+    fn tail_call_ok_and_fallthrough_verified() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(2, 8));
+        p.push(mov64_imm(3, 0));
+        p.push(call(12)); // r1 is still the ctx pointer
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let info = tc_ok(&p);
+        assert!(info.helpers_used.contains(&12));
+        assert!(info.used_maps.contains(&8));
+    }
+
+    #[test]
+    fn tail_call_requires_prog_array() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(2, 7)); // array map
+        p.push(mov64_imm(3, 0));
+        p.push(call(12));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = tc_fails(&p);
+        assert!(e.message.contains("not a prog array"), "{}", e.message);
+    }
+
+    #[test]
+    fn tail_call_arg1_must_be_exact_ctx() {
+        let mut p = vec![mov64_imm(1, 5)];
+        p.extend(ld_map_fd(2, 8));
+        p.push(mov64_imm(3, 0));
+        p.push(call(12));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = tc_fails(&p);
+        assert!(e.message.contains("context pointer"), "{}", e.message);
+        // an offset ctx pointer is rejected too
+        let mut p = vec![alu64_imm(alu::ADD, 1, 8)];
+        p.extend(ld_map_fd(2, 8));
+        p.push(mov64_imm(3, 0));
+        p.push(call(12));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = tc_fails(&p);
+        assert!(e.message.contains("offset"), "{}", e.message);
+    }
+
+    #[test]
+    fn element_helpers_on_prog_array_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 8));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1)); // lookup on a prog array
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = tc_fails(&p);
+        assert!(e.message.contains("only bpf_tail_call"), "{}", e.message);
+    }
+
+    /// A taken tail call never returns, so tail-calling while a
+    /// ringbuf reservation is still held would leak the BUSY record
+    /// and stall the consumer forever — reject at the call site, like
+    /// the kernel ("tail_call would lead to reference leak").
+    #[test]
+    fn tail_call_with_held_ringbuf_reference_rejected() {
+        // profiler maps: ringbuf (id 9) + a prog array (id 11)
+        let mut maps = ring_maps();
+        maps.insert(
+            11,
+            MapDef {
+                name: "pchain".into(),
+                kind: MapKind::ProgArray,
+                key_size: 4,
+                value_size: 4,
+                max_entries: 4,
+            },
+        );
+        let mut p = vec![mov64_reg(7, 1)]; // save ctx
+        p.extend(reserve_prefix()); // r0 = reserved record (held ref)
+        p.push(mov64_reg(6, 0));
+        p.push(mov64_reg(1, 7)); // ctx back in r1
+        p.extend(ld_map_fd(2, 11));
+        p.push(mov64_imm(3, 0));
+        p.push(call(12)); // BUG: ref still held across the tail call
+        p.extend(submit(6)); // fallthrough path releases — not enough
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = verify(&p, ProgType::Profiler, &prof_ctx(), &maps)
+            .expect_err("held reference across tail call must be rejected");
+        assert!(e.message.contains("reservation would leak"), "{}", e.message);
+        // the same shape with the release *before* the tail call is fine
+        let mut p = vec![mov64_reg(7, 1)];
+        p.extend(reserve_prefix());
+        p.push(mov64_reg(6, 0));
+        p.extend(submit(6)); // release first
+        p.push(mov64_reg(1, 7));
+        p.extend(ld_map_fd(2, 11));
+        p.push(mov64_imm(3, 0));
+        p.push(call(12));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        verify(&p, ProgType::Profiler, &prof_ctx(), &maps).expect("released before tail call");
+    }
+
+    #[test]
+    fn tail_call_from_subprog_rejected() {
+        let mut p = vec![
+            mov64_imm(0, 0), // 0
+            call_pseudo(1),  // 1 -> 3
+            exit(),          // 2
+        ];
+        p.extend(ld_map_fd(2, 8)); // 3-4 (callee; r1 is the passed ctx)
+        p.push(mov64_imm(3, 0));   // 5
+        p.push(call(12));          // 6: BUG
+        p.push(mov64_imm(0, 0));   // 7
+        p.push(exit());            // 8
+        let e = tc_fails(&p);
+        assert!(e.message.contains("main program frame"), "{}", e.message);
     }
 
     #[test]

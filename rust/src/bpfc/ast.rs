@@ -168,12 +168,25 @@ pub struct FuncDef {
     pub body: Vec<Stmt>,
 }
 
+/// A `__noinline` helper function — compiled as a bpf-to-bpf
+/// subprogram called with `call imm` (BPF_PSEUDO_CALL), not expanded
+/// at the call site. Parameters are scalars passed in r1..r5; the
+/// return value is a scalar in r0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubprogDef {
+    pub name: String,
+    /// up to 5 scalar parameters (name, type)
+    pub params: Vec<(String, ScalarTy)>,
+    pub body: Vec<Stmt>,
+}
+
 /// A whole translation unit.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Unit {
     pub structs: Vec<StructDef>,
     pub maps: Vec<MapDecl>,
     pub funcs: Vec<FuncDef>,
+    pub subprogs: Vec<SubprogDef>,
 }
 
 impl Unit {
@@ -182,6 +195,9 @@ impl Unit {
     }
     pub fn map_decl(&self, name: &str) -> Option<&MapDecl> {
         self.maps.iter().find(|m| m.name == name)
+    }
+    pub fn subprog(&self, name: &str) -> Option<&SubprogDef> {
+        self.subprogs.iter().find(|s| s.name == name)
     }
 }
 

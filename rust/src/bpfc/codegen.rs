@@ -136,6 +136,9 @@ enum Item {
     Insn(Insn),
     /// lddw map reference needing a relocation
     MapRef { dst: u8, map: String },
+    /// bpf-to-bpf call to a `__noinline` subprogram; the immediate is
+    /// patched at link time once the callee's entry offset is known
+    SubCall { name: String },
     Branch { opcode: u8, dst: u8, srcr: u8, imm: i32, label: usize },
     Ja { label: usize },
     Label(usize),
@@ -158,7 +161,7 @@ struct FnCtx<'a> {
 const CTX_REG: u8 = 9;
 
 impl<'a> FnCtx<'a> {
-    fn new(unit: &'a Unit, func: &FuncDef) -> FnCtx<'a> {
+    fn new_raw(unit: &'a Unit, ctx_param: String, ctx_struct: String) -> FnCtx<'a> {
         let mut structs: HashMap<String, StructDef> =
             builtin_structs().into_iter().map(|s| (s.name.clone(), s)).collect();
         for s in &unit.structs {
@@ -173,9 +176,19 @@ impl<'a> FnCtx<'a> {
             stack_used: 0,
             next_label: 0,
             pool: vec![6, 7, 8],
-            ctx_param: func.ctx_param.clone(),
-            ctx_struct: func.ctx_struct.clone(),
+            ctx_param,
+            ctx_struct,
         }
+    }
+
+    fn new(unit: &'a Unit, func: &FuncDef) -> FnCtx<'a> {
+        Self::new_raw(unit, func.ctx_param.clone(), func.ctx_struct.clone())
+    }
+
+    /// Codegen context for a `__noinline` subprogram: no ctx pointer
+    /// (the sentinel name can never lex as an identifier).
+    fn for_subprog(unit: &'a Unit) -> FnCtx<'a> {
+        Self::new_raw(unit, "\0no-ctx".into(), String::new())
     }
 
     fn label(&mut self) -> usize {
@@ -518,8 +531,38 @@ impl<'a> FnCtx<'a> {
         }
     }
 
-    /// Helper / builtin calls.
+    /// Helper / builtin / subprogram calls.
     fn eval_call(&mut self, name: &str, args: &[Expr]) -> CResult<(u8, CType)> {
+        // __noinline subprograms: a real bpf-to-bpf call. Arguments go
+        // through stack temporaries into r1..rN exactly like helper
+        // args; r6-r8 (the expression pool) and r9 (ctx) survive the
+        // call because bpf-to-bpf calls machine-preserve r6-r9.
+        if let Some(sp) = self.unit.subprog(name) {
+            if args.len() != sp.params.len() {
+                return cerr(format!(
+                    "'{}' takes {} argument(s), got {}",
+                    name,
+                    sp.params.len(),
+                    args.len()
+                ));
+            }
+            let mut offs = Vec::with_capacity(args.len());
+            for a in args {
+                let (r, _) = self.eval(a)?;
+                let off = self.alloc_stack(8)?;
+                self.emit(insn::stx(size::DW, 10, r, off as i16));
+                self.free_reg(r);
+                offs.push(off);
+            }
+            for (i, off) in offs.iter().enumerate() {
+                self.emit(insn::ldx(size::DW, (i + 1) as u8, 10, *off as i16));
+            }
+            self.items.push(Item::SubCall { name: name.to_string() });
+            let out = self.alloc_reg()?;
+            self.emit(insn::mov64_reg(out, 0));
+            return Ok((out, CType::Scalar));
+        }
+
         // builtins
         if name == "min" || name == "max" {
             if args.len() != 2 {
@@ -764,8 +807,9 @@ impl<'a> FnCtx<'a> {
         }
     }
 
-    /// Resolve labels and produce final instructions + relocations.
-    fn finish(self) -> CResult<(Vec<Insn>, Vec<Reloc>)> {
+    /// Resolve labels and produce final instructions + relocations +
+    /// unresolved subprogram call sites (patched at link time).
+    fn finish(self) -> CResult<(Vec<Insn>, Vec<Reloc>, Vec<(u32, String)>)> {
         // slot index of each item
         let mut label_slot: HashMap<usize, u32> = HashMap::new();
         let mut slot = 0u32;
@@ -778,13 +822,16 @@ impl<'a> FnCtx<'a> {
                 }
                 Item::MapRef { .. } => slot += 2,
                 Item::Insn(i) if i.is_lddw() => slot += 1, // lddw emitted as 2 Insns already
-                Item::Insn(_) | Item::Branch { .. } | Item::Ja { .. } => slot += 1,
+                Item::Insn(_) | Item::Branch { .. } | Item::Ja { .. } | Item::SubCall { .. } => {
+                    slot += 1
+                }
             }
         }
         let total = slot;
 
         let mut insns = Vec::with_capacity(total as usize);
         let mut relocs = Vec::new();
+        let mut subcalls = Vec::new();
         for (idx, it) in self.items.into_iter().enumerate() {
             let here = slots[idx];
             match it {
@@ -793,6 +840,10 @@ impl<'a> FnCtx<'a> {
                 Item::MapRef { dst, map } => {
                     relocs.push(Reloc { insn_idx: here, map_name: map });
                     insns.extend(insn::ld_map_fd(dst, 0));
+                }
+                Item::SubCall { name } => {
+                    subcalls.push((here, name));
+                    insns.push(insn::call_pseudo(0));
                 }
                 Item::Branch { opcode, dst, srcr, imm, label } => {
                     let tgt = *label_slot
@@ -813,8 +864,33 @@ impl<'a> FnCtx<'a> {
                 }
             }
         }
-        Ok((insns, relocs))
+        Ok((insns, relocs, subcalls))
     }
+}
+
+/// Compile one `__noinline` subprogram body: parameters arrive in
+/// r1..r5 and are spilled into ordinary local slots, then the body
+/// compiles with the same machinery as a policy function (minus ctx).
+fn compile_subprog(
+    unit: &Unit,
+    sp: &SubprogDef,
+) -> CResult<(Vec<Insn>, Vec<Reloc>, Vec<(u32, String)>)> {
+    let mut cx = FnCtx::for_subprog(unit);
+    for (i, (pname, ty)) in sp.params.iter().enumerate() {
+        if cx.locals.contains_key(pname) {
+            return cerr(format!("'{}': duplicate parameter '{}'", sp.name, pname));
+        }
+        let off = cx.alloc_stack(8)?;
+        cx.locals.insert(pname.clone(), LocalVar { off, ty: Ty::Scalar(*ty) });
+        cx.emit(insn::stx(size::DW, 10, (i + 1) as u8, off as i16));
+    }
+    for s in &sp.body {
+        cx.stmt(s)?;
+    }
+    // implicit `return 0` for falling off the end
+    cx.emit(insn::mov64_imm(0, 0));
+    cx.emit(insn::exit());
+    cx.finish()
 }
 
 /// Convert a map declaration's types into a runtime MapDef.
@@ -874,7 +950,45 @@ pub fn compile_unit(unit: &Unit) -> CResult<Object> {
         // implicit `return 0` for falling off the end
         cx.emit(insn::mov64_imm(0, 0));
         cx.emit(insn::exit());
-        let (insns, relocs) = cx.finish()?;
+        let (mut insns, mut relocs, main_calls) = cx.finish()?;
+
+        // link: append every transitively-called subprogram after the
+        // main body (each program carries its own copy — objects stay
+        // self-contained), then patch the pseudo-call immediates with
+        // the relative entry offsets.
+        let mut entries: Vec<(String, u32)> = Vec::new();
+        let mut calls: Vec<(u32, String)> = main_calls;
+        let mut queue: Vec<String> = calls.iter().map(|(_, n)| n.clone()).collect();
+        while let Some(name) = queue.pop() {
+            if entries.iter().any(|(n, _)| n == &name) {
+                continue;
+            }
+            let sp = unit.subprog(&name).ok_or(CompileError {
+                message: format!("internal: unknown subprogram '{}'", name),
+            })?;
+            let base = insns.len() as u32;
+            entries.push((name.clone(), base));
+            let (sub_insns, sub_relocs, sub_calls) = compile_subprog(unit, sp)?;
+            insns.extend(sub_insns);
+            relocs.extend(
+                sub_relocs
+                    .into_iter()
+                    .map(|r| Reloc { insn_idx: r.insn_idx + base, map_name: r.map_name }),
+            );
+            for (slot, callee) in sub_calls {
+                queue.push(callee.clone());
+                calls.push((slot + base, callee));
+            }
+        }
+        for (slot, callee) in calls {
+            let tgt = entries
+                .iter()
+                .find(|(n, _)| n == &callee)
+                .map(|&(_, b)| b)
+                .expect("every queued callee has an entry");
+            insns[slot as usize].imm = tgt as i32 - slot as i32 - 1;
+        }
+
         obj.progs.push(ObjProgram {
             section: f.section.clone(),
             name: f.name.clone(),
@@ -1186,6 +1300,91 @@ int bad(struct policy_context *ctx) {
         let reg = MapRegistry::new();
         let err = load_object(&obj, &reg, &layouts()).unwrap_err();
         assert!(err.to_string().contains("read-only"), "{}", err);
+    }
+
+    #[test]
+    fn noinline_subprogram_compiles_and_runs() {
+        let src = r#"
+static __noinline __u64 clamp_chan(__u64 c, __u64 hi) {
+    if (c > hi) return hi;
+    return c;
+}
+
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    __u64 want = ctx->msg_size >> 20;
+    ctx->n_channels = (__u32) clamp_chan(want, 16);
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        assert_eq!(progs[0].info.subprogs, 1);
+        assert_eq!(run_tuner(&progs, 3 << 20).n_channels, 3);
+        assert_eq!(run_tuner(&progs, 100 << 20).n_channels, 16);
+    }
+
+    #[test]
+    fn subprograms_can_call_subprograms() {
+        let src = r#"
+static __noinline __u64 double_it(__u64 v) {
+    return v * 2;
+}
+
+static __noinline __u64 quadruple(__u64 v) {
+    return double_it(double_it(v));
+}
+
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    ctx->n_channels = (__u32) quadruple(ctx->nranks);
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        assert_eq!(progs[0].info.subprogs, 2);
+        // nranks is 8 in run_tuner; 8 * 4 = 32
+        assert_eq!(run_tuner(&progs, 0).n_channels, 32);
+    }
+
+    #[test]
+    fn recursive_subprogram_rejected_at_load() {
+        let src = r#"
+static __noinline __u64 forever(__u64 v) {
+    return forever(v + 1);
+}
+
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    ctx->n_channels = (__u32) forever(1);
+    return 0;
+}
+"#;
+        let unit = parse(src).unwrap();
+        let obj = compile_unit(&unit).unwrap();
+        let reg = MapRegistry::new();
+        let err = load_object(&obj, &reg, &layouts()).unwrap_err();
+        assert!(err.to_string().contains("recursive"), "{}", err);
+    }
+
+    #[test]
+    fn prog_array_and_tail_call_compile_and_verify() {
+        let src = r#"
+BPF_PROG_ARRAY(chain, 4);
+
+SEC("tuner")
+int dispatch(struct policy_context *ctx) {
+    __u64 b = ctx->msg_size >> 22;
+    bpf_tail_call(ctx, &chain, b);
+    ctx->n_channels = 4;
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        // nothing installed in the chain yet: every call falls through
+        assert_eq!(run_tuner(&progs, 1 << 20).n_channels, 4);
+        let chain = progs[0].map("chain").unwrap();
+        assert_eq!(chain.def.kind, crate::bpf::maps::MapKind::ProgArray);
+        assert_eq!(chain.def.max_entries, 4);
     }
 
     #[test]

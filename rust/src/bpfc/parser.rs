@@ -132,11 +132,14 @@ impl Parser {
                 Tok::Ident(id) if id == "BPF_RINGBUF" => {
                     unit.maps.push(self.ringbuf_decl()?);
                 }
+                Tok::Ident(id) if id == "BPF_PROG_ARRAY" => {
+                    unit.maps.push(self.prog_array_decl()?);
+                }
                 Tok::Ident(id) if id == "SEC" => {
                     unit.funcs.push(self.func_def()?);
                 }
-                Tok::Ident(id) if id == "static" || id == "inline" => {
-                    self.next(); // tolerate qualifiers before SEC-less funcs
+                Tok::Ident(id) if id == "static" || id == "inline" || id == "__noinline" => {
+                    unit.subprogs.push(self.subprog_def()?);
                 }
                 _ => return self.err(format!("unexpected top-level token {}", self.peek())),
             }
@@ -229,6 +232,85 @@ impl Parser {
             value_ty: Ty::Scalar(ScalarTy::U32),
             max_entries: size,
         })
+    }
+
+    /// BPF_PROG_ARRAY(chain, 4); — a bpf_tail_call jump table with 4
+    /// slots. Key/value sizes are the fixed 4-byte kernel ABI.
+    fn prog_array_decl(&mut self) -> PResult<MapDecl> {
+        self.expect(Tok::Ident("BPF_PROG_ARRAY".into()))?;
+        self.expect(Tok::LParen)?;
+        let name = self.ident()?;
+        self.expect(Tok::Comma)?;
+        let slots = match self.next() {
+            Tok::Int(v) if v > 0 => v as u32,
+            other => return self.err(format!("expected slot count, got {}", other)),
+        };
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Semi)?;
+        Ok(MapDecl {
+            name,
+            kind: MapKind::ProgArray,
+            key_ty: Ty::Scalar(ScalarTy::U32),
+            value_ty: Ty::Scalar(ScalarTy::U32),
+            max_entries: slots,
+        })
+    }
+
+    /// `static __noinline __u64 name(__u64 a, __u32 b) { ... }` — a
+    /// bpf-to-bpf subprogram. `__noinline` is mandatory: it marks the
+    /// function as a real `call imm` target, and this compiler has no
+    /// inliner to fall back to.
+    fn subprog_def(&mut self) -> PResult<SubprogDef> {
+        let mut noinline = false;
+        loop {
+            if self.eat_ident("static") || self.eat_ident("inline") {
+                continue;
+            }
+            if self.eat_ident("__noinline") {
+                noinline = true;
+                continue;
+            }
+            break;
+        }
+        if !noinline {
+            return self.err(
+                "helper functions must be marked __noinline (they compile to \
+                 bpf-to-bpf subprograms; there is no inliner)",
+            );
+        }
+        let retname = self.ident()?;
+        if Self::scalar_kw(&retname).is_none() {
+            return self
+                .err(format!("subprogram return type must be a scalar, got '{}'", retname));
+        }
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        if !self.eat_ident("void") {
+            while *self.peek() != Tok::RParen {
+                let tyname = self.ident()?;
+                let ty = Self::scalar_kw(&tyname).ok_or_else(|| ParseError {
+                    line: self.line(),
+                    message: format!(
+                        "subprogram parameters must be scalars (passed in r1-r5), got '{}'",
+                        tyname
+                    ),
+                })?;
+                let pname = self.ident()?;
+                params.push((pname, ty));
+                if *self.peek() == Tok::Comma {
+                    self.next();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen)?;
+        if params.len() > 5 {
+            return self.err("subprograms take at most 5 parameters (r1-r5)");
+        }
+        let body = self.block()?;
+        Ok(SubprogDef { name, params, body })
     }
 
     /// SEC("tuner") int name(struct policy_context *ctx) { ... }
@@ -712,6 +794,50 @@ int ops(struct policy_context *ctx) {
         assert_eq!(u.maps[0].max_entries, 65536);
         assert!(parse("BPF_RINGBUF(events);").is_err());
         assert!(parse("BPF_RINGBUF(events, 0);").is_err());
+    }
+
+    #[test]
+    fn parse_noinline_subprog_and_prog_array() {
+        let src = r#"
+BPF_PROG_ARRAY(chain, 4);
+
+static __noinline __u64 bucket_of(__u64 size) {
+    if (size <= 32768) return 0;
+    return 1;
+}
+
+SEC("tuner")
+int dispatch(struct policy_context *ctx) {
+    bpf_tail_call(ctx, &chain, bucket_of(ctx->msg_size));
+    return 0;
+}
+"#;
+        let u = parse(src).unwrap();
+        assert_eq!(u.maps.len(), 1);
+        assert_eq!(u.maps[0].kind, MapKind::ProgArray);
+        assert_eq!(u.maps[0].max_entries, 4);
+        assert_eq!(u.subprogs.len(), 1);
+        let sp = u.subprog("bucket_of").unwrap();
+        assert_eq!(sp.params.len(), 1);
+        assert_eq!(sp.params[0].0, "size");
+        assert_eq!(u.funcs.len(), 1);
+    }
+
+    #[test]
+    fn helper_fn_without_noinline_rejected() {
+        let e = parse("static __u64 f(__u64 a) { return a; }").unwrap_err();
+        assert!(e.message.contains("__noinline"), "{}", e);
+        // struct params are rejected with a clear message
+        let e = parse("static __noinline __u64 f(struct policy_context *c) { return 0; }")
+            .unwrap_err();
+        assert!(e.message.contains("scalar"), "{}", e);
+        // more than 5 params cannot be passed in r1-r5
+        let e = parse(
+            "static __noinline __u64 f(__u64 a, __u64 b, __u64 c, __u64 d, __u64 e, __u64 g) \
+             { return 0; }",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("at most 5"), "{}", e);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
     ("allreduce", "[--size 64M --ranks 8 --policy NAME]", "run one AllReduce under a policy"),
     ("sweep", "[--ranks N]", "Table 2 algorithm sweep"),
     ("train", "[--ranks 4 --steps 50 --policy NAME]", "DDP training with the policy attached"),
-    ("safety", "", "run the accept/reject suite (§5.2 + ringbuf classes)"),
+    ("safety", "", "run the accept/reject suite (§5.2 + ringbuf + call-graph classes)"),
     ("hotreload", "", "demonstrate atomic policy swap"),
     (
         "traffic",
@@ -28,6 +28,11 @@ pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
         "bench",
         "[--out DIR] [--quick]",
         "run the paper-shaped measurement suite, write BENCH_<name>.json",
+    ),
+    (
+        "docs",
+        "[--out PATH] [--check PATH]",
+        "render docs/REFERENCE.md from the in-source tables (--check: drift gate)",
     ),
 ];
 

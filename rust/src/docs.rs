@@ -1,0 +1,237 @@
+//! Generated reference documentation.
+//!
+//! `ncclbpf docs` renders `docs/REFERENCE.md` from the same in-source
+//! tables the runtime executes against — [`helpers::HELPER_SPECS`] and
+//! the per-type whitelists, [`MapKind`], the ctx layouts, the CLI
+//! [`cli::SUBCOMMANDS`] table, and the §5.2 unsafe-program corpus — so
+//! the reference can never silently drift from the code. CI
+//! regenerates it (`ncclbpf docs --check docs/REFERENCE.md`) and fails
+//! on any diff, and `committed_reference_is_in_sync` below is the same
+//! gate as a plain `cargo test`.
+
+use crate::bpf::helpers::{self, ArgType, ProgType, RetType};
+use crate::bpf::maps::MapKind;
+use crate::cli;
+use crate::host::ctx;
+use crate::host::policydir;
+use std::fmt::Write as _;
+
+/// Short name an argument class is documented under.
+fn arg_name(a: ArgType) -> &'static str {
+    match a {
+        ArgType::ConstMapPtr => "map",
+        ArgType::MapKey => "key_ptr",
+        ArgType::MapValue => "value_ptr",
+        ArgType::Scalar => "scalar",
+        ArgType::MemLen => "mem_ptr",
+        ArgType::ConstAllocSize => "const_size",
+        ArgType::RingBufMem => "record_ptr",
+        ArgType::Ctx => "ctx",
+    }
+}
+
+/// Short name a return class is documented under.
+fn ret_name(r: RetType) -> &'static str {
+    match r {
+        RetType::Scalar => "scalar",
+        RetType::MapValueOrNull => "map_value_or_null",
+        RetType::RingBufMemOrNull => "ringbuf_record_or_null",
+    }
+}
+
+/// Every map kind with its documented operation surface, in kernel-id
+/// order. The declaration syntax strings are what the assembler and
+/// the restricted-C frontend actually parse.
+fn map_kind_rows() -> Vec<(MapKind, &'static str, &'static str, &'static str)> {
+    vec![
+        (
+            MapKind::Hash,
+            "map NAME hash key=K value=V entries=N",
+            "BPF_MAP(name, BPF_MAP_TYPE_HASH, K, V, N)",
+            "lookup, update, delete",
+        ),
+        (
+            MapKind::Array,
+            "map NAME array value=V entries=N",
+            "BPF_MAP(name, BPF_MAP_TYPE_ARRAY, __u32, V, N)",
+            "lookup, update",
+        ),
+        (
+            MapKind::ProgArray,
+            "map NAME progarray entries=N",
+            "BPF_PROG_ARRAY(name, N)",
+            "bpf_tail_call (host side: prog_array_update / clear)",
+        ),
+        (
+            MapKind::PerCpuArray,
+            "map NAME percpu value=V entries=N",
+            "BPF_MAP(name, BPF_MAP_TYPE_PERCPU_ARRAY, __u32, V, N)",
+            "lookup, update (per-cpu slot)",
+        ),
+        (
+            MapKind::RingBuf,
+            "map NAME ringbuf entries=BYTES",
+            "BPF_RINGBUF(name, BYTES)",
+            "bpf_ringbuf_output / reserve / submit / discard / query",
+        ),
+    ]
+}
+
+/// Render the full `docs/REFERENCE.md` contents. Byte-stable for a
+/// given source tree: the committed file must equal this string.
+pub fn reference_markdown() -> String {
+    let mut out = String::new();
+    out.push_str("# NCCLbpf reference\n");
+    out.push('\n');
+    out.push_str("<!-- GENERATED FILE - do not edit by hand. -->\n");
+    out.push_str("<!-- Regenerate: cargo run --release -- docs --out docs/REFERENCE.md -->\n");
+    out.push_str("<!-- Drift gate: cargo run --release -- docs --check docs/REFERENCE.md -->\n");
+    out.push('\n');
+    out.push_str(
+        "Rendered from the in-source tables the runtime executes against \
+         (`helpers::HELPER_SPECS`, the per-type whitelists, `MapKind`, the ctx \
+         layouts, `cli::SUBCOMMANDS`, `policydir::UNSAFE_POLICIES`). CI fails \
+         when this file drifts from the code.\n",
+    );
+    out.push('\n');
+
+    out.push_str("## Program types\n");
+    out.push('\n');
+    out.push_str("| section | ctx size | readable ranges | writable ranges |\n");
+    out.push_str("|---------|---------:|-----------------|----------------|\n");
+    let layouts = ctx::layouts();
+    for pt in ProgType::ALL {
+        let l = layouts.for_type(pt);
+        let fmt_ranges = |rs: &[(u32, u32)]| {
+            if rs.is_empty() {
+                "none".to_string()
+            } else {
+                rs.iter()
+                    .map(|&(s, n)| format!("[{}, {})", s, s + n))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            }
+        };
+        writeln!(
+            out,
+            "| `{}` | {} | {} | {} |",
+            pt.section(),
+            l.size,
+            fmt_ranges(&l.read),
+            fmt_ranges(&l.write)
+        )
+        .unwrap();
+    }
+    out.push('\n');
+
+    out.push_str("## Helper functions\n");
+    out.push('\n');
+    out.push_str(
+        "Argument classes are what the verifier type-checks r1..r5 against; a \
+         `mem_ptr` argument is followed by its byte length in the next \
+         argument. The last three columns are the per-program-type \
+         whitelists (calling a helper outside them is a load-time reject).\n",
+    );
+    out.push('\n');
+    out.push_str("| id | helper | arguments | returns | tuner | profiler | net |\n");
+    out.push_str("|---:|--------|-----------|---------|:-----:|:--------:|:---:|\n");
+    for spec in helpers::HELPER_SPECS {
+        let args = if spec.args.is_empty() {
+            "(none)".to_string()
+        } else {
+            spec.args.iter().map(|&a| arg_name(a)).collect::<Vec<_>>().join(", ")
+        };
+        let mark = |pt: ProgType| if helpers::is_allowed(pt, spec.id) { "yes" } else { "-" };
+        writeln!(
+            out,
+            "| {} | `{}` | {} | {} | {} | {} | {} |",
+            spec.id,
+            spec.name,
+            args,
+            ret_name(spec.ret),
+            mark(ProgType::Tuner),
+            mark(ProgType::Profiler),
+            mark(ProgType::Net)
+        )
+        .unwrap();
+    }
+    out.push('\n');
+
+    out.push_str("## Map kinds\n");
+    out.push('\n');
+    out.push_str("| kind | kernel id | asm declaration | restricted-C declaration | operations |\n");
+    out.push_str("|------|----------:|-----------------|--------------------------|------------|\n");
+    for (kind, asm, c, ops) in map_kind_rows() {
+        writeln!(out, "| {:?} | {} | `{}` | `{}` | {} |", kind, kind.to_u32(), asm, c, ops)
+            .unwrap();
+    }
+    out.push('\n');
+
+    out.push_str("## CLI subcommands\n");
+    out.push('\n');
+    out.push_str("| subcommand | arguments | description |\n");
+    out.push_str("|------------|-----------|-------------|\n");
+    for (name, args, help) in cli::SUBCOMMANDS {
+        // escape literal pipes so the markdown table stays a table
+        let a = if args.is_empty() {
+            "(none)".to_string()
+        } else {
+            args.replace('|', "\\|")
+        };
+        writeln!(out, "| `{}` | `{}` | {} |", name, a, help).unwrap();
+    }
+    out.push('\n');
+
+    out.push_str("## Verifier rejection corpus\n");
+    out.push('\n');
+    out.push_str(
+        "One unsafe program per bug class under `rust/policies/unsafe/`; the \
+         safety suite asserts each is rejected at load time with the listed \
+         needle in its error message.\n",
+    );
+    out.push('\n');
+    out.push_str("| program | expected error contains |\n");
+    out.push_str("|---------|-------------------------|\n");
+    for (name, needle) in policydir::UNSAFE_POLICIES {
+        writeln!(out, "| `{}` | `{}` |", name, needle).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The drift gate (same check as `ncclbpf docs --check` in CI):
+    /// the committed reference must be byte-identical to the generator
+    /// output.
+    #[test]
+    fn committed_reference_is_in_sync() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/REFERENCE.md");
+        let committed = std::fs::read_to_string(path)
+            .expect("docs/REFERENCE.md must exist (run `ncclbpf docs --out docs/REFERENCE.md`)");
+        assert_eq!(
+            committed,
+            reference_markdown(),
+            "doc drift: regenerate with `cargo run --release -- docs --out docs/REFERENCE.md`"
+        );
+    }
+
+    #[test]
+    fn reference_covers_every_table() {
+        let text = reference_markdown();
+        for spec in helpers::HELPER_SPECS {
+            assert!(text.contains(spec.name), "missing helper {}", spec.name);
+        }
+        for (name, _, _) in cli::SUBCOMMANDS {
+            assert!(text.contains(&format!("`{}`", name)), "missing subcommand {}", name);
+        }
+        for (name, _) in policydir::UNSAFE_POLICIES {
+            assert!(text.contains(name), "missing unsafe program {}", name);
+        }
+        for (kind, ..) in map_kind_rows() {
+            assert!(text.contains(&format!("{:?}", kind)), "missing map kind {:?}", kind);
+        }
+        assert!(text.contains("bpf_tail_call"));
+    }
+}

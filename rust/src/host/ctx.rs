@@ -15,13 +15,17 @@ use crate::cc::{Algo, CollType, Proto};
 /// Output value meaning "policy defers to the engine default".
 pub const DEFER: u32 = u32::MAX;
 
-/// Algorithm ids exposed to policies (NCCL_ALGO_*).
+/// Algorithm id exposed to policies: NCCL_ALGO_RING.
 pub const ALGO_RING: u32 = 0;
+/// Algorithm id exposed to policies: NCCL_ALGO_TREE.
 pub const ALGO_TREE: u32 = 1;
+/// Algorithm id exposed to policies: NCCL_ALGO_NVLS.
 pub const ALGO_NVLS: u32 = 2;
-/// Protocol ids exposed to policies (NCCL_PROTO_*).
+/// Protocol id exposed to policies: NCCL_PROTO_LL.
 pub const PROTO_LL: u32 = 0;
+/// Protocol id exposed to policies: NCCL_PROTO_LL128.
 pub const PROTO_LL128: u32 = 1;
+/// Protocol id exposed to policies: NCCL_PROTO_SIMPLE.
 pub const PROTO_SIMPLE: u32 = 2;
 
 /// Tuner policy context. Bytes [0, 32) are read-only inputs; bytes
@@ -29,25 +33,37 @@ pub const PROTO_SIMPLE: u32 = 2;
 #[repr(C)]
 #[derive(Clone, Copy, Debug)]
 pub struct PolicyContext {
-    // -- inputs --------------------------------------------------- off
-    pub coll_type: u32,   //  0
-    pub _pad0: u32,       //  4
-    pub msg_size: u64,    //  8
-    pub nranks: u32,      // 16
-    pub comm_id: u32,     // 20
-    pub max_channels: u32, // 24
-    pub _pad1: u32,       // 28
-    // -- outputs --------------------------------------------------
-    pub algorithm: u32,   // 32
-    pub protocol: u32,    // 36
-    pub n_channels: u32,  // 40
-    pub _pad2: u32,       // 44
+    /// input (offset 0): collective type index
+    pub coll_type: u32,
+    /// padding (offset 4)
+    pub _pad0: u32,
+    /// input (offset 8): message size in bytes
+    pub msg_size: u64,
+    /// input (offset 16): communicator rank count
+    pub nranks: u32,
+    /// input (offset 20): folded communicator id
+    pub comm_id: u32,
+    /// input (offset 24): engine channel ceiling
+    pub max_channels: u32,
+    /// padding (offset 28)
+    pub _pad1: u32,
+    /// output (offset 32): preferred algorithm id, or [`DEFER`]
+    pub algorithm: u32,
+    /// output (offset 36): preferred protocol id, or [`DEFER`]
+    pub protocol: u32,
+    /// output (offset 40): requested channel count (0 = engine default)
+    pub n_channels: u32,
+    /// padding (offset 44)
+    pub _pad2: u32,
 }
 
+/// Total byte size of [`PolicyContext`] (ABI).
 pub const POLICY_CTX_SIZE: u32 = 48;
+/// Byte offset where the write-only output fields start (ABI).
 pub const POLICY_CTX_OUT_START: u32 = 32;
 
 impl PolicyContext {
+    /// A fresh context with all outputs deferred.
     pub fn new(coll: CollType, msg_size: u64, nranks: u32, comm_id: u32, max_channels: u32) -> Self {
         PolicyContext {
             coll_type: coll.index() as u32,
@@ -89,27 +105,40 @@ impl PolicyContext {
 #[repr(C)]
 #[derive(Clone, Copy, Debug)]
 pub struct ProfilerContext {
-    pub comm_id: u32,    //  0
-    pub coll_type: u32,  //  4
-    pub msg_size: u64,   //  8
-    pub latency_ns: u64, // 16
-    pub n_channels: u32, // 24
-    pub seq: u32,        // 28
+    /// (offset 0) folded communicator id
+    pub comm_id: u32,
+    /// (offset 4) collective type index
+    pub coll_type: u32,
+    /// (offset 8) message size in bytes
+    pub msg_size: u64,
+    /// (offset 16) observed collective latency
+    pub latency_ns: u64,
+    /// (offset 24) channels the collective ran with
+    pub n_channels: u32,
+    /// (offset 28) per-communicator sequence number
+    pub seq: u32,
 }
 
+/// Total byte size of [`ProfilerContext`] (ABI).
 pub const PROFILER_CTX_SIZE: u32 = 32;
 
 /// Net-plugin hook context (all read-only).
 #[repr(C)]
 #[derive(Clone, Copy, Debug)]
 pub struct NetContext {
-    pub comm_id: u32, //  0
-    pub is_send: u32, //  4
-    pub bytes: u64,   //  8
-    pub peer: u32,    // 16
-    pub _pad: u32,    // 20
+    /// (offset 0) folded communicator id
+    pub comm_id: u32,
+    /// (offset 4) 1 for send, 0 for receive
+    pub is_send: u32,
+    /// (offset 8) transfer size in bytes
+    pub bytes: u64,
+    /// (offset 16) peer rank
+    pub peer: u32,
+    /// padding (offset 20)
+    pub _pad: u32,
 }
 
+/// Total byte size of [`NetContext`] (ABI).
 pub const NET_CTX_SIZE: u32 = 24;
 
 /// The ctx layouts the verifier enforces, per program type.

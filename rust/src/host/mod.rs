@@ -3,6 +3,7 @@
 //! *verified* eBPF policies at each hook, with typed shared maps and
 //! atomic hot-reload. No engine sources are modified: everything goes
 //! through the public plugin ABI in [`crate::cc::plugin`].
+#![deny(missing_docs)]
 
 pub mod ctx;
 pub mod native;
@@ -12,7 +13,9 @@ pub mod ringbuf;
 pub mod traffic;
 
 use crate::bpf::program::load_object_with_sink;
-use crate::bpf::{LoadError, Map, MapRegistry, Object, PrintkSink, ProgType};
+use crate::bpf::{
+    prog_array_update, LoadError, LoadedProgram, Map, MapRegistry, Object, PrintkSink, ProgType,
+};
 use crate::cc::net::NetHook;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
 use ctx::{NetContext, PolicyContext, ProfilerContext};
@@ -27,13 +30,16 @@ use std::time::Instant;
 pub struct LoadReport {
     /// (program name, type) installed
     pub programs: Vec<(String, ProgType)>,
+    /// total verification time across the object's programs
     pub verify_ns: u64,
+    /// total pre-decode + JIT time across the object's programs
     pub compile_ns: u64,
     /// per-slot CAS latencies
     pub swap_ns: Vec<u64>,
 }
 
 impl LoadReport {
+    /// Full reload cost: verify + compile + every swap.
     pub fn total_ns(&self) -> u64 {
         self.verify_ns + self.compile_ns + self.swap_ns.iter().sum::<u64>()
     }
@@ -68,6 +74,7 @@ impl Default for NcclBpfHost {
 }
 
 impl NcclBpfHost {
+    /// A fresh host with empty hook slots and its own map namespace.
     pub fn new() -> NcclBpfHost {
         NcclBpfHost {
             maps: MapRegistry::new(),
@@ -132,11 +139,92 @@ impl NcclBpfHost {
         self.install_object(&obj)
     }
 
+    /// Verify + compile every program in `obj` against this host's
+    /// registry and sink WITHOUT installing anything — the first half
+    /// of chain assembly (the programs go into a prog array, not into
+    /// the hook slots).
+    pub fn load_only(&self, obj: &Object) -> Result<Vec<Arc<LoadedProgram>>, LoadError> {
+        let progs =
+            load_object_with_sink(obj, &self.maps, &ctx::layouts(), Some(self.printk.clone()))?;
+        Ok(progs.into_iter().map(Arc::new).collect())
+    }
+
+    /// Install one already-loaded program into its hook slot; returns
+    /// the swap latency in ns.
+    pub fn install_program(&self, prog: Arc<LoadedProgram>) -> u64 {
+        self.slot(prog.prog_type).swap(prog)
+    }
+
+    /// Replace one slot of the named prog array with `prog` — the
+    /// chain hot-swap: in-flight tail calls finish on the program they
+    /// already resolved, the next dispatch lands on the new link, and
+    /// no other slot (or the dispatcher) is disturbed.
+    pub fn prog_array_set(
+        &self,
+        map: &str,
+        index: u32,
+        prog: &Arc<LoadedProgram>,
+    ) -> Result<(), String> {
+        let m = self
+            .maps
+            .by_name(map)
+            .ok_or_else(|| format!("no map named '{}' in this host", map))?;
+        prog_array_update(&m, index, prog)
+    }
+
+    /// Assemble a composable policy chain from one object: every
+    /// program named in `links` is verified and installed into the
+    /// named prog array at its slot; every *other* program (typically
+    /// the dispatcher doing the `bpf_tail_call`) is installed into its
+    /// hook slot. Verification failures install nothing.
+    pub fn install_chain(
+        &self,
+        obj: &Object,
+        array: &str,
+        links: &[(&str, u32)],
+    ) -> Result<LoadReport, LoadError> {
+        let progs = self.load_only(obj)?;
+        // every requested link must name a real program — a typo'd link
+        // would otherwise silently land in the hook slot while its
+        // chain slot stayed empty
+        for (name, _) in links {
+            if !progs.iter().any(|p| p.name == *name) {
+                return Err(LoadError::Structural(format!(
+                    "install_chain: no program named '{}' in the object (programs: {})",
+                    name,
+                    progs.iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(", ")
+                )));
+            }
+        }
+        let mut report = LoadReport::default();
+        for p in &progs {
+            report.verify_ns += p.stats.verify_ns;
+            report.compile_ns += p.stats.compile_ns;
+        }
+        for p in progs {
+            let slot = links.iter().find(|(name, _)| *name == p.name).map(|&(_, i)| i);
+            match slot {
+                Some(index) => {
+                    self.prog_array_set(array, index, &p).map_err(LoadError::Structural)?;
+                    report.programs.push((p.name.clone(), p.prog_type));
+                }
+                None => {
+                    let pt = p.prog_type;
+                    let name = p.name.clone();
+                    report.swap_ns.push(self.install_program(p));
+                    report.programs.push((name, pt));
+                }
+            }
+        }
+        Ok(report)
+    }
+
     /// Remove the policy for one hook.
     pub fn clear(&self, pt: ProgType) {
         self.slot(pt).clear();
     }
 
+    /// Name of the policy currently installed for hook `pt`, if any.
     pub fn active_name(&self, pt: ProgType) -> Option<String> {
         self.slot(pt).get().map(|p| p.name.clone())
     }
@@ -632,6 +720,97 @@ have:
         host.printk_sink().set_capture();
         host.profiler_handle(&ev);
         assert_eq!(host.printk_sink().drain_captured().len(), 1);
+    }
+
+    /// A 3-link tail-call chain assembled through the host API: the
+    /// dispatcher lives in the tuner slot, the per-range tuners in the
+    /// prog array, and one link hot-swaps without touching the others.
+    #[test]
+    fn install_chain_dispatches_and_hot_swaps_links() {
+        const CHAIN: &str = r#"
+map chain progarray entries=4
+
+prog tuner dispatcher
+  mov64 r6, r1
+  ldxdw r2, [r1+8]        ; msg_size
+  mov64 r3, 0
+  jle   r2, 32768, go     ; <=32KiB -> slot 0
+  mov64 r3, 1
+  jle   r2, 4194304, go   ; <=4MiB -> slot 1
+  mov64 r3, 2
+go:
+  ldmap r2, chain
+  call  bpf_tail_call
+  stw   [r6+40], 4        ; fallthrough: conservative default
+  mov64 r0, 0
+  exit
+
+prog tuner t_small
+  stw   [r1+32], 1
+  stw   [r1+36], 0
+  stw   [r1+40], 16
+  mov64 r0, 0
+  exit
+
+prog tuner t_mid
+  stw   [r1+32], 0
+  stw   [r1+36], 2
+  stw   [r1+40], 16
+  mov64 r0, 0
+  exit
+
+prog tuner t_large
+  stw   [r1+32], 0
+  stw   [r1+36], 2
+  stw   [r1+40], 32
+  mov64 r0, 0
+  exit
+"#;
+        let host = NcclBpfHost::new();
+        let obj = crate::bpf::asm::assemble(CHAIN).unwrap();
+        let report = host
+            .install_chain(&obj, "chain", &[("t_small", 0), ("t_mid", 1), ("t_large", 2)])
+            .unwrap();
+        assert_eq!(report.programs.len(), 4);
+        assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "dispatcher");
+
+        let decide = |bytes: usize| {
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            assert!(host.tuner_decide(&args(bytes), &mut cost, &mut ch));
+            (cost.argmin(), ch)
+        };
+        assert_eq!(decide(8 << 10), (Some((Algo::Tree, Proto::Ll)), 16));
+        assert_eq!(decide(1 << 20), (Some((Algo::Ring, Proto::Simple)), 16));
+        assert_eq!(decide(64 << 20), (Some((Algo::Ring, Proto::Simple)), 32));
+
+        // hot-swap only the mid link: small/large keep dispatching
+        let mid_v2 = Arc::new(
+            crate::bpf::program::load_asm(
+                "prog tuner t_mid_v2\n  stw [r1+32], 2\n  stw [r1+36], 2\n  \
+                 stw [r1+40], 8\n  mov64 r0, 0\n  exit\n",
+                &host.maps,
+                &ctx::layouts(),
+            )
+            .unwrap()
+            .remove(0),
+        );
+        host.prog_array_set("chain", 1, &mid_v2).unwrap();
+        assert_eq!(decide(1 << 20), (Some((Algo::Nvls, Proto::Simple)), 8));
+        assert_eq!(decide(8 << 10), (Some((Algo::Tree, Proto::Ll)), 16));
+        assert_eq!(decide(64 << 20), (Some((Algo::Ring, Proto::Simple)), 32));
+
+        // clearing a link degrades that range to the fallthrough path
+        assert!(host.map("chain").unwrap().prog_array_clear(1));
+        let (pref, ch) = decide(1 << 20);
+        assert_eq!(pref, None, "fallthrough defers algo/proto");
+        assert_eq!(ch, 4);
+
+        // a typo'd link name is a hard error before anything installs,
+        // never a silent misroute into the hook slot
+        let err = host.install_chain(&obj, "chain", &[("tune_smal", 0)]).unwrap_err();
+        assert!(err.to_string().contains("no program named"), "{}", err);
+        assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "dispatcher");
     }
 
     #[test]

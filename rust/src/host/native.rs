@@ -79,7 +79,9 @@ impl TunerPlugin for NativeRingMidV2 {
 /// cell standing in for the eBPF map) — reads last observed latency and
 /// nudges the channel count, writing back its decision.
 pub struct NativeAdaptive {
+    /// last observed latency (the "map" the profiler twin would write)
     pub latency_ns: AtomicU64,
+    /// current channel decision
     pub channels: AtomicU64,
 }
 

@@ -35,8 +35,9 @@ pub fn build_named(name: &str) -> Result<Object, String> {
     Err(format!("no policy named '{}' in {}", name, dir.display()))
 }
 
-/// The 7 safe policies of the §5.2 suite (all in Table 1 / §5.3).
-pub const SAFE_POLICIES: [&str; 7] = [
+/// The safe policies of the §5.2 suite (all in Table 1 / §5.3), plus
+/// the composable tail-call chain exemplar (§5.4 shape).
+pub const SAFE_POLICIES: [&str; 8] = [
     "noop",
     "static_ring",
     "size_aware",
@@ -44,11 +45,14 @@ pub const SAFE_POLICIES: [&str; 7] = [
     "latency_aware",
     "slo_enforcer",
     "nvlink_ring_mid_v2",
+    "chain_dispatch",
 ];
 
-/// The unsafe programs, one per bug class: the paper's seven (§5.2)
-/// plus the three ringbuf reference-tracking classes.
-pub const UNSAFE_POLICIES: [(&str, &str); 10] = [
+/// The unsafe programs, one per bug class: the paper's seven (§5.2),
+/// the three ringbuf reference-tracking classes, and the three
+/// call-graph classes (recursion, cross-frame stack overflow,
+/// clobbered-register misuse).
+pub const UNSAFE_POLICIES: [(&str, &str); 13] = [
     ("null_deref", "map_value_or_null"),
     ("oob_access", "out of bounds"),
     ("illegal_helper", "illegal helper"),
@@ -59,6 +63,9 @@ pub const UNSAFE_POLICIES: [(&str, &str); 10] = [
     ("ringbuf_leak", "unreleased"),
     ("ringbuf_use_after_submit", "use after release"),
     ("ringbuf_oob", "reserved size"),
+    ("call_recursion", "recursive"),
+    ("call_stack_overflow", "combined stack"),
+    ("call_r6_clobber", "r1-r5"),
 ];
 
 /// Build an unsafe-suite program from `policies/unsafe/`.

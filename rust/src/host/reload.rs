@@ -108,6 +108,7 @@ impl Default for ReloadSlot {
 }
 
 impl ReloadSlot {
+    /// An empty slot (no policy installed).
     pub fn new() -> ReloadSlot {
         ReloadSlot {
             active: AtomicPtr::new(std::ptr::null_mut()),

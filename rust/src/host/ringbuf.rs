@@ -26,11 +26,17 @@ pub const RB_EVENT_SIZE: usize = 32;
 /// policy (field order is ABI, mirrored in `policies/latency_events.c`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RbEvent {
+    /// folded communicator id
     pub comm_id: u32,
+    /// collective type index
     pub coll_type: u32,
+    /// message size in bytes
     pub msg_size: u64,
+    /// observed collective latency
     pub latency_ns: u64,
+    /// channels the collective ran with
     pub n_channels: u32,
+    /// per-communicator sequence number
     pub seq: u32,
 }
 

@@ -156,13 +156,19 @@ impl Default for TrafficOpts {
 /// Per-worker-thread statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ThreadStats {
+    /// worker index
     pub thread: usize,
+    /// communicators this worker drove
     pub comms: usize,
+    /// collective ops issued
     pub ops: u64,
-    /// decisions observing variant A's tuple / variant B's tuple
+    /// decisions observing variant A's output tuple
     pub variant_a: u64,
+    /// decisions observing variant B's output tuple
     pub variant_b: u64,
+    /// decisions observing a mixed tuple (must stay 0)
     pub torn: u64,
+    /// logical payload bytes moved
     pub bytes_moved: u64,
     /// per-decision host overhead samples (ns)
     pub decision_ns: Vec<f64>,
@@ -171,18 +177,29 @@ pub struct ThreadStats {
 /// Outcome of one traffic run.
 #[derive(Clone, Debug, Default)]
 pub struct TrafficReport {
+    /// worker threads used
     pub threads: usize,
+    /// communicators driven
     pub comms: usize,
+    /// total collective ops across all workers
     pub total_ops: u64,
+    /// tuner decisions executed
     pub total_decisions: u64,
+    /// tuner hot-reloads performed mid-traffic
     pub reloads: u64,
+    /// wall-clock duration of the run
     pub wall_ns: u64,
+    /// decision throughput over the whole run
     pub decisions_per_sec: f64,
+    /// median per-decision latency (ns)
     pub p50_decision_ns: f64,
+    /// 99th-percentile per-decision latency (ns)
     pub p99_decision_ns: f64,
+    /// mean per-decision latency (ns)
     pub mean_decision_ns: f64,
-    /// all-slot sums of the policy counter maps
+    /// all-slot sum of the tuner counter map
     pub tuner_map_hits: u64,
+    /// all-slot sum of the profiler counter map
     pub prof_map_hits: u64,
     /// structured events drained from the `traffic_events` ring this run
     pub ring_drained: u64,
@@ -190,6 +207,7 @@ pub struct TrafficReport {
     pub ring_dropped: u64,
     /// invariant violations (empty == clean run)
     pub violations: Vec<String>,
+    /// per-worker breakdown
     pub per_thread: Vec<ThreadStats>,
 }
 

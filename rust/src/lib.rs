@@ -36,6 +36,7 @@ pub mod bpf;
 pub mod bpfc;
 pub mod cc;
 pub mod cli;
+pub mod docs;
 pub mod host;
 pub mod metrics;
 pub mod runtime;

@@ -31,6 +31,7 @@ fn handler(name: &str) -> Option<fn(&Args) -> i32> {
         "traffic" => cmd_traffic,
         "trace" => cmd_trace,
         "bench" => cmd_bench,
+        "docs" => cmd_docs,
         _ => return None,
     })
 }
@@ -443,6 +444,47 @@ fn cmd_trace(args: &Args) -> i32 {
             return 0;
         }
     }
+}
+
+/// `ncclbpf docs`: render the generated reference. Default prints to
+/// stdout; `--out PATH` writes the file; `--check PATH` compares the
+/// committed file byte-for-byte and exits 1 on drift (the CI gate).
+fn cmd_docs(args: &Args) -> i32 {
+    let text = ncclbpf::docs::reference_markdown();
+    if let Some(path) = args.flag("check") {
+        return match std::fs::read_to_string(path) {
+            Ok(committed) if committed == text => {
+                println!("docs in sync: {}", path);
+                0
+            }
+            Ok(_) => {
+                eprintln!(
+                    "DOC DRIFT: {} differs from the in-source tables; regenerate with \
+                     `ncclbpf docs --out {}`",
+                    path, path
+                );
+                1
+            }
+            Err(e) => {
+                eprintln!("read {}: {}", path, e);
+                1
+            }
+        };
+    }
+    if let Some(path) = args.flag("out") {
+        return match std::fs::write(path, &text) {
+            Ok(()) => {
+                println!("wrote {}", path);
+                0
+            }
+            Err(e) => {
+                eprintln!("write {}: {}", path, e);
+                1
+            }
+        };
+    }
+    print!("{}", text);
+    0
 }
 
 fn cmd_hotreload(_args: &Args) -> i32 {

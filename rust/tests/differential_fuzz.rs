@@ -10,8 +10,9 @@
 
 use ncclbpf::bpf::helpers::HelperEnv;
 use ncclbpf::bpf::insn::{
-    alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, class, disasm, exit, jmp, jmp_imm, jmp_reg,
-    ld_map_fd, lddw, mov32_imm, mov64_imm, mov64_reg, size as msz, src, stx, Insn,
+    alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, call_pseudo, class, disasm, exit, jmp,
+    jmp_imm, jmp_reg, ld_map_fd, lddw, mov32_imm, mov64_imm, mov64_reg, size as msz, src, stx,
+    Insn,
 };
 use ncclbpf::bpf::jit::JitProgram;
 use ncclbpf::bpf::maps::{MapDef, MapKind};
@@ -173,7 +174,7 @@ fn differential_fuzz_verified_programs_interp_vs_jit() {
     let mut rng = Rng::new(0xf022_2026);
     let lay = layouts();
     let maps = HashMap::new();
-    let env = HelperEnv { maps: vec![], printk: None };
+    let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
     let mut jit_checked = 0;
     for case in 0..400 {
         let prog = gen_program(&mut rng);
@@ -200,6 +201,75 @@ fn differential_fuzz_verified_programs_interp_vs_jit() {
     // on x86-64 every case must actually exercise the JIT
     if cfg!(all(unix, target_arch = "x86_64")) {
         assert_eq!(jit_checked, 400);
+    }
+}
+
+/// One random verified program with a bpf-to-bpf subprogram: main
+/// keeps r6/r7 live across the call, the callee runs a random ALU mix
+/// over its argument registers (r1..r5) and deliberately trashes its
+/// own r6 — both engines must agree on the fold of result + preserved
+/// registers.
+fn gen_call_program(rng: &mut Rng) -> Vec<Insn> {
+    let mut p = Vec::new();
+    p.push(mov64_imm(6, rng.next_u32() as i32));
+    p.push(mov64_imm(7, rng.next_u32() as i32));
+    for r in 1..6u8 {
+        p.push(mov64_imm(r, rng.next_u32() as i32));
+    }
+    // main tail after the call is exactly 3 insns, so the subprogram
+    // entry sits at call + 4 (imm = 3)
+    p.push(call_pseudo(3));
+    p.push(alu64_reg(alu::XOR, 0, 6));
+    p.push(alu64_reg(alu::XOR, 0, 7));
+    p.push(exit());
+    // callee
+    p.push(mov64_imm(0, 0));
+    p.push(mov64_imm(6, 0x6666)); // clobber a machine-preserved reg
+    let n = 4 + rng.below(6);
+    for _ in 0..n {
+        let op = PLAIN_OPS[rng.below(PLAIN_OPS.len() as u64) as usize];
+        let srcr = 1 + rng.below(5) as u8;
+        if rng.below(2) == 0 {
+            p.push(alu64_reg(op, 0, srcr));
+        } else {
+            p.push(alu32_reg(op, 0, srcr));
+        }
+    }
+    p.push(alu64_reg(alu::XOR, 0, 6));
+    p.push(exit());
+    p
+}
+
+#[test]
+fn differential_call_programs_interp_vs_jit() {
+    let mut rng = Rng::new(0xca11_2026);
+    let lay = layouts();
+    let maps = HashMap::new();
+    let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
+    let mut jit_checked = 0;
+    for case in 0..200 {
+        let prog = gen_call_program(&mut rng);
+        verifier::verify(&prog, ProgType::Tuner, &lay.tuner, &maps).unwrap_or_else(|e| {
+            panic!("case {}: unverifiable call program: {}\n{}", case, e, disasm(&prog))
+        });
+        let ops = interp::predecode(&prog).expect("predecode");
+        let want = unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) };
+        if let Some(j) = JitProgram::compile_unchecked(&ops) {
+            let got = unsafe { j.call(std::ptr::null_mut(), &env) };
+            assert_eq!(
+                got,
+                want,
+                "case {}: interp {:#x} != jit {:#x}\n{}",
+                case,
+                want,
+                got,
+                disasm(&prog)
+            );
+            jit_checked += 1;
+        }
+    }
+    if cfg!(all(unix, target_arch = "x86_64")) {
+        assert_eq!(jit_checked, 200);
     }
 }
 

@@ -46,10 +46,39 @@ fn unknown_subcommand_exits_2_and_lists_everything() {
     assert!(err.contains("unknown subcommand 'frobnicate'"), "{}", err);
     let expected = [
         "verify", "disasm", "allreduce", "sweep", "train", "safety", "hotreload", "traffic",
-        "trace", "bench",
+        "trace", "bench", "docs",
     ];
     for name in expected {
         assert!(err.contains(name), "usage must list '{}', got:\n{}", name, err);
+    }
+}
+
+/// Satellite: `ncclbpf docs --check` is the doc drift gate — the
+/// committed reference must match the in-source tables byte for byte.
+#[test]
+fn docs_check_passes_on_committed_reference() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/REFERENCE.md");
+    let o = run(&["docs", "--check", path.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "doc drift: {}", stderr(&o));
+    assert!(stdout(&o).contains("in sync"), "{}", stdout(&o));
+    // default mode prints the reference to stdout
+    let o = run(&["docs"]);
+    assert_eq!(o.status.code(), Some(0));
+    let out = stdout(&o);
+    assert!(out.contains("# NCCLbpf reference"), "{}", out);
+    assert!(out.contains("bpf_tail_call"), "{}", out);
+}
+
+/// The composable-chain exemplar verifies through the CLI like any
+/// other policy (all four programs: dispatcher + three links).
+#[test]
+fn verify_accepts_chain_dispatch() {
+    let p = policy("chain_dispatch.c");
+    let o = run(&["verify", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    for name in ["chain_dispatch", "tune_small", "tune_mid", "tune_large"] {
+        assert!(out.contains(name), "missing {} in:\n{}", name, out);
     }
 }
 
@@ -209,6 +238,7 @@ fn bench_writes_parseable_json_with_median_p99() {
         ("BENCH_hotreload.json", 4),
         ("BENCH_traffic.json", 8),
         ("BENCH_ringbuf.json", 6),
+        ("BENCH_calls.json", 4),
     ] {
         let path = dir.join(file);
         let text = std::fs::read_to_string(&path)

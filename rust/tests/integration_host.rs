@@ -173,6 +173,94 @@ fn hotreload_under_continuous_load() {
 
 /// §5.3 net plugin: the eBPF-wrapped socket transport counts bytes/ops
 /// through a shared map while moving real TCP traffic.
+/// Acceptance (§5.4 composition): the verified 3-link tail-call chain
+/// loads, matches the flat `size_aware.c` policy's decisions across
+/// the size spectrum, and hot-swaps one link mid-traffic without
+/// disturbing the other links or the dispatcher.
+#[test]
+fn chain_dispatch_matches_size_aware_and_hot_swaps_mid_traffic() {
+    let flat = Arc::new(NcclBpfHost::new());
+    flat.install_object(&policydir::build_named("size_aware").unwrap()).unwrap();
+
+    let host = Arc::new(NcclBpfHost::new());
+    let obj = policydir::build_named("chain_dispatch").unwrap();
+    host.install_chain(&obj, "chain", &[("tune_small", 0), ("tune_mid", 1), ("tune_large", 2)])
+        .unwrap();
+    assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "chain_dispatch");
+
+    fn decide(h: &NcclBpfHost, bytes: usize) -> (Option<(Algo, Proto)>, u32) {
+        let args = ncclbpf::cc::CollInfoArgs {
+            coll: CollType::AllReduce,
+            nbytes: bytes,
+            nranks: 8,
+            comm_id: 1,
+            max_channels: 32,
+        };
+        let mut cost = ncclbpf::cc::CostTable::all_sentinel();
+        let mut ch = 0;
+        assert!(h.tuner_decide(&args, &mut cost, &mut ch));
+        (cost.argmin(), ch)
+    }
+
+    // the chain reproduces the flat policy decision for decision
+    for bytes in [1usize << 10, 32 << 10, (32 << 10) + 1, 1 << 20, 4 << 20, 64 << 20, 512 << 20]
+    {
+        assert_eq!(decide(&host, bytes), decide(&flat, bytes), "at {} bytes", bytes);
+    }
+
+    // pre-load both variants of the mid link
+    let links = host.load_only(&obj).unwrap();
+    let mid_v1 = links.iter().find(|p| p.name == "tune_mid").unwrap().clone();
+    let mid_v2 = Arc::new(
+        host.load_only(
+            &ncclbpf::bpf::asm::assemble(
+                "prog tuner tune_mid_v2\n  stw [r1+32], 1\n  stw [r1+36], 2\n  \
+                 stw [r1+40], 8\n  mov64 r0, 0\n  exit\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+        .remove(0),
+    );
+
+    // deciders hammer all three size classes while the control plane
+    // swaps chain[1] between the two variants: small/large must never
+    // change, and every mid decision must be exactly one variant's
+    // output tuple — a torn read would mix them
+    let stop = Arc::new(AtomicBool::new(false));
+    let decider = {
+        let host = host.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut mids = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                assert_eq!(decide(&host, 8 << 10), (Some((Algo::Tree, Proto::Ll)), 16));
+                assert_eq!(decide(&host, 64 << 20), (Some((Algo::Ring, Proto::Simple)), 16));
+                let got = decide(&host, 1 << 20);
+                let v1 = (Some((Algo::Ring, Proto::Simple)), 16);
+                let v2 = (Some((Algo::Tree, Proto::Simple)), 8);
+                assert!(got == v1 || got == v2, "torn mid decision: {:?}", got);
+                mids += 1;
+            }
+            mids
+        })
+    };
+    for i in 0..50 {
+        let link = if i % 2 == 0 { &mid_v2 } else { &mid_v1 };
+        host.prog_array_set("chain", 1, link).unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    stop.store(true, Ordering::Relaxed);
+    let mids = decider.join().unwrap();
+    assert!(mids > 50, "decider must have run mid decisions ({})", mids);
+
+    // back to v1: the chain is byte-for-byte the flat policy again
+    host.prog_array_set("chain", 1, &mid_v1).unwrap();
+    for bytes in [8usize << 10, 1 << 20, 64 << 20] {
+        assert_eq!(decide(&host, bytes), decide(&flat, bytes), "at {} bytes", bytes);
+    }
+}
+
 #[test]
 fn net_wrapper_counts_real_socket_traffic() {
     let host = Arc::new(NcclBpfHost::new());

@@ -50,6 +50,66 @@ fn verifier_total_on_random_programs() {
     assert!(accepted < CASES as u32 / 100, "accepted {} random programs", accepted);
 }
 
+/// INVARIANT (§5.4 composition): a verified chain of k ≤ 33 tail calls
+/// produces identical outputs under the interpreter and the JIT, and
+/// exceeding the 33-call chain limit degrades to the fallthrough path
+/// (not a trap) in both engines.
+#[test]
+fn tail_call_chains_agree_across_engines_and_cap_at_33() {
+    use ncclbpf::bpf::program::{load_asm, prog_array_update};
+    use ncclbpf::bpf::CtxLayouts;
+    use std::fmt::Write as _;
+
+    let layouts = CtxLayouts {
+        tuner: CtxLayout { size: 64, read: vec![(0, 64)], write: vec![(32, 32)] },
+        ..Default::default()
+    };
+    // link i bumps the ctx counter and tail-calls slot i+1; on any
+    // failed dispatch (empty slot, out of range, chain cap) it writes
+    // the fallthrough marker and returns its own index
+    let mut src = String::from("map pchain progarray entries=40\n");
+    for i in 0..40 {
+        write!(
+            src,
+            "prog tuner link{i}\n  mov64 r6, r1\n  ldxw  r7, [r1+40]\n  add64 r7, 1\n  \
+             stxw  [r6+40], r7\n  ldmap r2, pchain\n  mov64 r3, {next}\n  \
+             call  bpf_tail_call\n  stw   [r6+44], 77\n  mov64 r0, {i}\n  exit\n",
+            i = i,
+            next = i + 1
+        )
+        .unwrap();
+    }
+    for k in [1usize, 2, 5, 17, 33, 40] {
+        let reg = MapRegistry::new();
+        let links: Vec<_> = load_asm(&src, &reg, &layouts)
+            .unwrap()
+            .into_iter()
+            .map(std::sync::Arc::new)
+            .collect();
+        let chain = reg.by_name("pchain").unwrap();
+        for (i, l) in links.iter().take(k).enumerate() {
+            prog_array_update(&chain, i as u32, l).unwrap();
+        }
+        // links run until the first empty slot, capped at 34 programs
+        // (the original entry + 33 taken tail calls)
+        let entered = k.min(34) as u32;
+        let last = (entered - 1) as u64;
+        for use_jit in [true, false] {
+            let mut ctx = [0u8; 64];
+            let r0 = if use_jit {
+                links[0].run(ctx.as_mut_ptr())
+            } else {
+                links[0].run_interp(ctx.as_mut_ptr())
+            };
+            let counter = u32::from_le_bytes(ctx[40..44].try_into().unwrap());
+            let marker = u32::from_le_bytes(ctx[44..48].try_into().unwrap());
+            assert_eq!(r0, last, "k={} jit={}", k, use_jit);
+            assert_eq!(counter, entered, "k={} jit={}", k, use_jit);
+            assert_eq!(marker, 77, "k={} jit={}: fallthrough must run", k, use_jit);
+        }
+    }
+}
+
 /// INVARIANT: encode/decode round-trips any instruction stream whose
 /// fields are in range.
 #[test]

@@ -1,0 +1,41 @@
+/* stress_channel_scorer — verification-cost stress: a 32-lap
+ * per-channel scoring loop with a data-dependent branch in every lap.
+ *
+ * Exhaustive path enumeration doubles the live path count each lap
+ * (the branch depends on loop-variant data, so interval analysis can
+ * never decide it) and exhausts the verifier's complexity budget after
+ * ~13 laps. With state-equivalence pruning every forked arm is
+ * subsumed at the join checkpoint — both arms leave the accumulator
+ * fully unknown and the leftover condition scratch widens away — so
+ * verification cost stays linear in the lap count. The §5.2 suite
+ * asserts both directions: accepted with pruning well under budget,
+ * "program too complex" without. This is the shape every per-channel
+ * scoring policy (§5.4) grows into.
+ */
+
+SEC("tuner")
+int stress_channel_scorer(struct policy_context *ctx) {
+    __u64 sz = ctx->msg_size;
+    __u64 best = 0;
+    __u64 ch;
+    for (ch = 0; ch < 32; ch = ch + 1) {
+        __u64 v = (sz >> 3) ^ (sz + ch);
+        __u64 w = (v & 255) + (sz & 63);
+        if ((v & 7) > 3)
+            best = best | v;
+        else
+            best = best | w;
+        w = w * 3;
+        v = v + w;
+    }
+    if (best > 1000000) {
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_SIMPLE;
+        ctx->n_channels = 8;
+        return 0;
+    }
+    ctx->algorithm = NCCL_ALGO_TREE;
+    ctx->protocol = NCCL_PROTO_LL;
+    ctx->n_channels = 24;
+    return 0;
+}

@@ -1,0 +1,103 @@
+/* stress_ladder64 — verification-cost stress: a 64-arm message-size
+ * ladder whose arms join into a bounded refinement loop with one
+ * data-dependent branch per lap.
+ *
+ * The shape is deliberately hostile to exhaustive path enumeration:
+ * the 65 ladder paths each reach the tail loop, and the loop's 2^8 arm
+ * combinations multiply on top of them, which blows straight through
+ * the verifier's complexity budget. With state-equivalence pruning the
+ * arms merge at the join (their leftover scratch constants widen to
+ * unknown — the mark_chain_precision analog) and every loop fork is
+ * subsumed at the next checkpoint, so verification stays linear. The
+ * suite asserts both directions: accepted with pruning, "program too
+ * complex" without.
+ */
+
+SEC("tuner")
+int stress_ladder64(struct policy_context *ctx) {
+    __u64 sz = ctx->msg_size;
+    if (sz <= 65536) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 1; }
+    else if (sz <= 131072) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 2; }
+    else if (sz <= 196608) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 3; }
+    else if (sz <= 262144) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 4; }
+    else if (sz <= 327680) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 5; }
+    else if (sz <= 393216) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 6; }
+    else if (sz <= 458752) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 7; }
+    else if (sz <= 524288) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 8; }
+    else if (sz <= 589824) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 9; }
+    else if (sz <= 655360) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 10; }
+    else if (sz <= 720896) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 11; }
+    else if (sz <= 786432) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 12; }
+    else if (sz <= 851968) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 13; }
+    else if (sz <= 917504) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 14; }
+    else if (sz <= 983040) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 15; }
+    else if (sz <= 1048576) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL; ctx->n_channels = 16; }
+    else if (sz <= 1114112) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 17; }
+    else if (sz <= 1179648) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 18; }
+    else if (sz <= 1245184) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 19; }
+    else if (sz <= 1310720) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 20; }
+    else if (sz <= 1376256) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 21; }
+    else if (sz <= 1441792) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 22; }
+    else if (sz <= 1507328) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 23; }
+    else if (sz <= 1572864) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 24; }
+    else if (sz <= 1638400) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 25; }
+    else if (sz <= 1703936) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 26; }
+    else if (sz <= 1769472) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 27; }
+    else if (sz <= 1835008) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 28; }
+    else if (sz <= 1900544) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 29; }
+    else if (sz <= 1966080) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 30; }
+    else if (sz <= 2031616) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 31; }
+    else if (sz <= 2097152) { ctx->algorithm = NCCL_ALGO_TREE; ctx->protocol = NCCL_PROTO_LL128; ctx->n_channels = 32; }
+    else if (sz <= 2162688) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 1; }
+    else if (sz <= 2228224) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 2; }
+    else if (sz <= 2293760) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 3; }
+    else if (sz <= 2359296) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 4; }
+    else if (sz <= 2424832) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 5; }
+    else if (sz <= 2490368) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 6; }
+    else if (sz <= 2555904) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 7; }
+    else if (sz <= 2621440) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 8; }
+    else if (sz <= 2686976) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 9; }
+    else if (sz <= 2752512) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 10; }
+    else if (sz <= 2818048) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 11; }
+    else if (sz <= 2883584) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 12; }
+    else if (sz <= 2949120) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 13; }
+    else if (sz <= 3014656) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 14; }
+    else if (sz <= 3080192) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 15; }
+    else if (sz <= 3145728) { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 16; }
+    else if (sz <= 3211264) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 17; }
+    else if (sz <= 3276800) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 18; }
+    else if (sz <= 3342336) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 19; }
+    else if (sz <= 3407872) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 20; }
+    else if (sz <= 3473408) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 21; }
+    else if (sz <= 3538944) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 22; }
+    else if (sz <= 3604480) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 23; }
+    else if (sz <= 3670016) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 24; }
+    else if (sz <= 3735552) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 25; }
+    else if (sz <= 3801088) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 26; }
+    else if (sz <= 3866624) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 27; }
+    else if (sz <= 3932160) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 28; }
+    else if (sz <= 3997696) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 29; }
+    else if (sz <= 4063232) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 30; }
+    else if (sz <= 4128768) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 31; }
+    else if (sz <= 4194304) { ctx->algorithm = NCCL_ALGO_NVLS; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 32; }
+    else { ctx->algorithm = NCCL_ALGO_RING; ctx->protocol = NCCL_PROTO_SIMPLE; ctx->n_channels = 32; }
+
+    /* common tail: every arm joins here before the refinement loop */
+    __u64 bits = sz;
+    __u64 acc = 0;
+    __u64 probe = 0;
+    __u64 i;
+    for (i = 0; i < 8; i = i + 1) {
+        probe = (bits >> 3) ^ (bits + i);
+        if ((probe & 3) == 1)
+            acc = acc | probe;
+        else
+            acc = acc | bits;
+        bits = (bits >> 1) + (probe & 15);
+        probe = probe * 5;
+        acc = acc | (bits & 31);
+    }
+    if (acc > 4096)
+        return 1;
+    return 0;
+}

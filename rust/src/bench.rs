@@ -15,7 +15,7 @@
 //! the same workload.
 
 use crate::bpf::maps::{Map, MapDef, MapKind};
-use crate::bpf::program::load_asm;
+use crate::bpf::program::{load_asm, verify_object};
 use crate::bpf::MapRegistry;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, TunerPlugin};
 use crate::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology, MAX_CHANNELS};
@@ -25,6 +25,7 @@ use crate::host::ringbuf::RingConsumer;
 use crate::host::traffic::{run_traffic, TrafficOpts};
 use crate::host::{fold_comm_id, policydir, BpfTunerPlugin, NcclBpfHost};
 use crate::metrics::report::{BenchReport, Series};
+use crate::runtime::manifest::{parse_json, Json};
 use crate::util::{percentile, Rng};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -540,6 +541,204 @@ pub fn calls_bench(opts: &BenchOpts) -> BenchReport {
     rep
 }
 
+/// BENCH_verifier — verification cost over the full policy corpus plus
+/// the two verification-stress policies (§5.2 load-time gate): wall
+/// time per object with the pruning counters alongside. The stress
+/// rows are the canary — their `insns_processed` exploding toward the
+/// complexity budget means state-equivalence pruning stopped firing.
+/// Pruning is forced on explicitly so the bench measures the shipped
+/// verifier even under `NCCLBPF_VERIFIER_PRUNE=0` (where the stress
+/// rows would otherwise abort the whole bench run by design).
+pub fn verifier_bench(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("verifier");
+    let lay = crate::host::ctx::layouts();
+    let names = policydir::SAFE_POLICIES
+        .iter()
+        .copied()
+        .chain(policydir::STRESS_POLICIES.iter().map(|&(n, _)| n));
+    for name in names {
+        let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        let iters = opts.iters.max(3);
+        let mut times = Vec::with_capacity(iters);
+        let mut insns = 0u64;
+        let mut pruned = 0u64;
+        let mut peak = 0u64;
+        for _ in 0..iters {
+            let reg = MapRegistry::new();
+            let stats = verify_object(&obj, &reg, &lay, Some(true))
+                .unwrap_or_else(|e| panic!("{} must verify: {}", name, e));
+            times.push(stats.iter().map(|(_, _, ns)| *ns as f64).sum::<f64>());
+            insns = stats.iter().map(|(_, i, _)| i.insns_processed).sum();
+            pruned = stats.iter().map(|(_, i, _)| i.states_pruned).sum();
+            peak = stats.iter().map(|(_, i, _)| i.peak_states).max().unwrap_or(0);
+        }
+        let (p50, p99, mean) = stats3(&times);
+        rep.push(
+            Series::new(format!("verify_{}", name), "ns", p50, p99, mean)
+                .with("insns_processed", insns as f64)
+                .with("states_pruned", pruned as f64)
+                .with("peak_states", peak as f64),
+        );
+    }
+    rep
+}
+
+/// One `--compare` finding: a series whose fresh median regressed past
+/// tolerance (or disappeared) relative to the committed baseline.
+#[derive(Debug)]
+pub struct CompareViolation {
+    /// `BENCH_*.json` file name the series lives in
+    pub file: String,
+    /// series label
+    pub label: String,
+    /// human-readable description of the failure
+    pub detail: String,
+}
+
+/// Outcome of one bench `--compare` run.
+#[derive(Debug, Default)]
+pub struct CompareReport {
+    /// baseline files that were compared
+    pub compared: usize,
+    /// series that regressed past tolerance or went missing
+    pub violations: Vec<CompareViolation>,
+}
+
+/// Units where smaller is better; every other unit is a throughput.
+fn lower_is_better(unit: &str) -> bool {
+    matches!(unit, "ns" | "us" | "ms" | "s")
+}
+
+/// `(label, unit, median)` rows of one BENCH json file.
+fn load_series(path: &Path) -> Result<Vec<(String, String, f64)>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+    let j = parse_json(&text).map_err(|e| format!("{}: {}", path.display(), e))?;
+    let arr = j
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{}: no series array", path.display()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for s in arr {
+        let label = s.get("label").and_then(Json::as_str).unwrap_or("?").to_string();
+        let unit = s.get("unit").and_then(Json::as_str).unwrap_or("").to_string();
+        let median = match s.get("median") {
+            Some(Json::Num(n)) => *n,
+            _ => 0.0,
+        };
+        out.push((label, unit, median));
+    }
+    Ok(out)
+}
+
+/// The `BENCH_*.json` files directly inside `dir`, sorted by name.
+fn bench_files(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut out: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// The `ncclbpf bench --compare` gate: diff the freshly produced
+/// `BENCH_*.json` medians in `fresh_dir` against the committed
+/// baselines in `baseline_dir`. A series is a violation when its
+/// median is more than `tolerance_pct` percent *worse* than the
+/// baseline in its unit's direction (latency units up, throughput
+/// units down), or when a baseline series/file has no fresh
+/// counterpart (lost coverage). New fresh series with no baseline are
+/// fine — they become baselines at the next `--bless`.
+pub fn compare_bench_dirs(
+    fresh_dir: &Path,
+    baseline_dir: &Path,
+    tolerance_pct: f64,
+) -> Result<CompareReport, String> {
+    let mut rep = CompareReport::default();
+    for bpath in bench_files(baseline_dir) {
+        let fname = bpath
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let base = load_series(&bpath)?;
+        rep.compared += 1;
+        let fpath = fresh_dir.join(&fname);
+        let fresh = match load_series(&fpath) {
+            Ok(s) => s,
+            Err(e) => {
+                rep.violations.push(CompareViolation {
+                    file: fname.clone(),
+                    label: "*".into(),
+                    detail: format!("baseline exists but the fresh run produced none: {}", e),
+                });
+                continue;
+            }
+        };
+        for (label, unit, bmed) in &base {
+            let Some((_, _, fmed)) = fresh.iter().find(|(l, _, _)| l == label) else {
+                rep.violations.push(CompareViolation {
+                    file: fname.clone(),
+                    label: label.clone(),
+                    detail: "missing from the fresh run (present in the baseline)".into(),
+                });
+                continue;
+            };
+            if *bmed <= 0.0 {
+                // a real baseline median is always positive; 0.0 means
+                // the key is missing/non-numeric — flag it rather than
+                // silently disabling the gate for this series
+                rep.violations.push(CompareViolation {
+                    file: fname.clone(),
+                    label: label.clone(),
+                    detail: "baseline median missing or non-positive (corrupt baseline)".into(),
+                });
+                continue;
+            }
+            let worse_pct = if lower_is_better(unit) {
+                (fmed / bmed - 1.0) * 100.0
+            } else {
+                (bmed / fmed - 1.0) * 100.0
+            };
+            if worse_pct > tolerance_pct {
+                rep.violations.push(CompareViolation {
+                    file: fname.clone(),
+                    label: label.clone(),
+                    detail: format!(
+                        "median {:.1} vs baseline {:.1} {} ({:+.1}% worse, tolerance {}%)",
+                        fmed, bmed, unit, worse_pct, tolerance_pct
+                    ),
+                });
+            }
+        }
+    }
+    Ok(rep)
+}
+
+/// The documented `--bless` flow: copy this run's `BENCH_*.json` into
+/// the baseline directory (committed under `bench/baseline/`), turning
+/// the empty bench trajectory into a gated curve. Returns the number
+/// of files copied.
+pub fn bless_baselines(fresh_dir: &Path, baseline_dir: &Path) -> std::io::Result<usize> {
+    std::fs::create_dir_all(baseline_dir)?;
+    let mut n = 0;
+    for p in bench_files(fresh_dir) {
+        if let Some(name) = p.file_name() {
+            std::fs::copy(&p, baseline_dir.join(name))?;
+            n += 1;
+        }
+    }
+    Ok(n)
+}
+
 /// Run the full suite and write `BENCH_<name>.json` files into
 /// `out_dir`. Returns the written paths.
 pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>> {
@@ -551,6 +750,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         traffic_scale(opts),
         ringbuf_bench(opts),
         calls_bench(opts),
+        verifier_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -709,5 +909,118 @@ mod tests {
         for s in &rep.series {
             assert!(s.mean > 0.0, "{}", s.label);
         }
+    }
+
+    #[test]
+    fn verifier_bench_covers_corpus_and_stress_rows_prune() {
+        let rep = verifier_bench(&tiny());
+        assert_eq!(
+            rep.series.len(),
+            policydir::SAFE_POLICIES.len() + policydir::STRESS_POLICIES.len()
+        );
+        for s in &rep.series {
+            assert!(s.median > 0.0 && s.mean > 0.0, "{}", s.label);
+            assert_eq!(s.unit, "ns");
+        }
+        let field = |s: &Series, k: &str| {
+            s.extra.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        for (name, _) in policydir::STRESS_POLICIES {
+            let s = rep
+                .series
+                .iter()
+                .find(|s| s.label == format!("verify_{}", name))
+                .unwrap_or_else(|| panic!("missing verify_{}", name));
+            assert!(field(s, "states_pruned") > 0.0, "{}: pruning must fire", name);
+            assert!(
+                field(s, "insns_processed")
+                    < crate::bpf::verifier::COMPLEXITY_BUDGET as f64,
+                "{}: must verify under budget",
+                name
+            );
+        }
+    }
+
+    fn cmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ncclbpf_bench_{}", name));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn bench_compare_gates_on_direction_aware_medians() {
+        let base = cmp_dir("cmp_base");
+        let fresh = cmp_dir("cmp_fresh");
+        let mut b = BenchReport::new("cmpunit");
+        b.push(Series::new("lat", "ns", 100.0, 120.0, 105.0));
+        b.push(Series::new("bw", "gbps", 100.0, 90.0, 95.0));
+        b.push(Series::new("gone", "ns", 50.0, 60.0, 55.0));
+        b.write_to(&base).unwrap();
+        // fresh run: lat regressed 30% (ns: up is worse), bw improved
+        // 20% (gbps: up is better), "gone" vanished
+        let mut f = BenchReport::new("cmpunit");
+        f.push(Series::new("lat", "ns", 130.0, 140.0, 132.0));
+        f.push(Series::new("bw", "gbps", 120.0, 110.0, 118.0));
+        f.push(Series::new("brand_new", "ns", 1.0, 1.0, 1.0)); // never a violation
+        f.write_to(&fresh).unwrap();
+
+        let rep = compare_bench_dirs(&fresh, &base, 15.0).unwrap();
+        assert_eq!(rep.compared, 1);
+        let labels: Vec<&str> = rep.violations.iter().map(|v| v.label.as_str()).collect();
+        assert_eq!(labels, ["lat", "gone"], "{:?}", rep.violations);
+
+        // a generous tolerance forgives the latency but not the lost series
+        let rep = compare_bench_dirs(&fresh, &base, 50.0).unwrap();
+        let labels: Vec<&str> = rep.violations.iter().map(|v| v.label.as_str()).collect();
+        assert_eq!(labels, ["gone"]);
+
+        // throughput regression trips in the other direction
+        let mut f2 = BenchReport::new("cmpunit");
+        f2.push(Series::new("lat", "ns", 100.0, 120.0, 105.0));
+        f2.push(Series::new("bw", "gbps", 50.0, 45.0, 48.0)); // halved
+        f2.push(Series::new("gone", "ns", 50.0, 60.0, 55.0));
+        f2.write_to(&fresh).unwrap();
+        let rep = compare_bench_dirs(&fresh, &base, 15.0).unwrap();
+        let labels: Vec<&str> = rep.violations.iter().map(|v| v.label.as_str()).collect();
+        assert_eq!(labels, ["bw"]);
+
+        // empty baseline dir: nothing compared, nothing violated
+        let empty = cmp_dir("cmp_empty");
+        let rep = compare_bench_dirs(&fresh, &empty, 15.0).unwrap();
+        assert_eq!(rep.compared, 0);
+        assert!(rep.violations.is_empty());
+    }
+
+    /// A baseline whose median is missing/zero must flag the series
+    /// instead of silently disabling the gate for it.
+    #[test]
+    fn bench_compare_flags_corrupt_baseline_median() {
+        let base = cmp_dir("cmp_zero_base");
+        let fresh = cmp_dir("cmp_zero_fresh");
+        let mut b = BenchReport::new("zerounit");
+        b.push(Series::new("row", "ns", 0.0, 0.0, 0.0));
+        b.write_to(&base).unwrap();
+        let mut f = BenchReport::new("zerounit");
+        f.push(Series::new("row", "ns", 5.0, 6.0, 5.5));
+        f.write_to(&fresh).unwrap();
+        let rep = compare_bench_dirs(&fresh, &base, 15.0).unwrap();
+        assert_eq!(rep.violations.len(), 1, "{:?}", rep.violations);
+        assert!(rep.violations[0].detail.contains("corrupt"), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn bless_copies_bench_json_and_self_compare_is_clean() {
+        let fresh = cmp_dir("bless_fresh");
+        let base = cmp_dir("bless_base");
+        let mut r = BenchReport::new("blessunit");
+        r.push(Series::new("row", "ns", 10.0, 12.0, 11.0));
+        r.write_to(&fresh).unwrap();
+        let n = bless_baselines(&fresh, &base).unwrap();
+        assert_eq!(n, 1);
+        assert!(base.join("BENCH_blessunit.json").exists());
+        let rep = compare_bench_dirs(&fresh, &base, 0.0).unwrap();
+        assert_eq!(rep.compared, 1);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
     }
 }

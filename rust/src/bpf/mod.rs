@@ -21,5 +21,5 @@ pub mod verifier;
 pub use helpers::{PrintkSink, ProgType};
 pub use maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 pub use object::Object;
-pub use program::{prog_array_update, CtxLayouts, LoadError, LoadedProgram};
-pub use verifier::{CtxLayout, VerifyError, VerifyInfo};
+pub use program::{prog_array_update, verify_object, CtxLayouts, LoadError, LoadedProgram};
+pub use verifier::{CtxLayout, VerifierStats, VerifyError, VerifyInfo};

@@ -116,6 +116,13 @@ impl Object {
         self.progs.iter().find(|p| p.section == section)
     }
 
+    /// Total instruction count across every program in the object (the
+    /// size figure `ncclbpf verify --stats` reports next to the
+    /// verifier's insns-processed counters).
+    pub fn total_insns(&self) -> usize {
+        self.progs.iter().map(|p| p.insns.len()).sum()
+    }
+
     /// Serialize to the binary container format.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
@@ -279,6 +286,7 @@ mod tests {
         let o = sample();
         assert!(o.map("latency_map").is_some());
         assert!(o.map("nope").is_none());
+        assert_eq!(o.total_insns(), 4); // lddw (2 slots) + mov + exit
         assert_eq!(o.prog("size_aware").unwrap().section, "tuner");
         assert!(o.prog_by_section("tuner").is_some());
         assert_eq!(

@@ -11,7 +11,7 @@ use super::interp::{self, Op};
 use super::jit::JitProgram;
 use super::maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 use super::object::{ObjProgram, Object};
-use super::verifier::{self, CtxLayout, VerifyError, VerifyInfo};
+use super::verifier::{self, CtxLayout, VerifierStats, VerifyError, VerifyInfo};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -138,6 +138,92 @@ impl LoadedProgram {
     pub fn op_count(&self) -> usize {
         self.ops.len()
     }
+
+    /// This load's verification-cost counters (the `ncclbpf verify
+    /// --stats` row: insns processed, states pruned, peak states,
+    /// verifier wall time).
+    pub fn verifier_stats(&self) -> VerifierStats {
+        self.info.stats(self.stats.verify_ns)
+    }
+}
+
+/// Register `obj`'s maps and build the live-id table the verifier and
+/// helper environment resolve against.
+fn register_maps(
+    obj: &Object,
+    registry: &MapRegistry,
+) -> Result<(Vec<(String, Arc<Map>)>, HashMap<u32, MapDef>), LoadError> {
+    let mut live: Vec<(String, Arc<Map>)> = Vec::new();
+    for def in &obj.maps {
+        let m = registry.create_or_get(def).map_err(LoadError::Structural)?;
+        live.push((def.name.clone(), m));
+    }
+    let mut map_defs: HashMap<u32, MapDef> = HashMap::new();
+    for (_, m) in &live {
+        map_defs.insert(m.id, m.def.clone());
+    }
+    Ok((live, map_defs))
+}
+
+/// Resolve one program's type and patch its map-reference relocations
+/// against the live map table.
+fn relocate(
+    p: &ObjProgram,
+    live: &[(String, Arc<Map>)],
+) -> Result<(ProgType, Vec<Insn>), LoadError> {
+    let pt = p.prog_type().ok_or_else(|| {
+        LoadError::Structural(format!(
+            "program '{}': unknown section '{}' (expected tuner/profiler/net)",
+            p.name, p.section
+        ))
+    })?;
+    let mut insns: Vec<Insn> = p.insns.clone();
+    for r in &p.relocs {
+        let idx = r.insn_idx as usize;
+        if idx >= insns.len() || !insns[idx].is_lddw() || insns[idx].src != pseudo::MAP_FD {
+            return Err(LoadError::Structural(format!(
+                "program '{}': reloc {} does not target a map-load lddw",
+                p.name, idx
+            )));
+        }
+        let id = live
+            .iter()
+            .find(|(n, _)| n == &r.map_name)
+            .map(|(_, m)| m.id)
+            .ok_or_else(|| {
+                LoadError::Structural(format!(
+                    "program '{}': relocation against undeclared map '{}'",
+                    p.name, r.map_name
+                ))
+            })?;
+        insns[idx].imm = id as i32;
+    }
+    Ok((pt, insns))
+}
+
+/// Register maps, relocate, and **verify** every program in `obj`
+/// without compiling or installing anything — the verification-cost
+/// probe behind `ncclbpf verify --stats`, `BENCH_verifier.json`, and
+/// the pruning differential tests. `prune` overrides the
+/// `NCCLBPF_VERIFIER_PRUNE` default when `Some`. Returns, per program,
+/// its name, the verifier summary, and the verification wall time in
+/// nanoseconds.
+pub fn verify_object(
+    obj: &Object,
+    registry: &MapRegistry,
+    layouts: &CtxLayouts,
+    prune: Option<bool>,
+) -> Result<Vec<(String, VerifyInfo, u64)>, LoadError> {
+    let (live, map_defs) = register_maps(obj, registry)?;
+    let mut out = Vec::with_capacity(obj.progs.len());
+    for p in &obj.progs {
+        let (pt, insns) = relocate(p, &live)?;
+        let t0 = Instant::now();
+        let info = verifier::verify_with(&insns, pt, layouts.for_type(pt), &map_defs, prune)
+            .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
+        out.push((p.name.clone(), info, t0.elapsed().as_nanos() as u64));
+    }
+    Ok(out)
 }
 
 /// Load every program in an object against a shared map registry.
@@ -164,24 +250,10 @@ pub fn load_object_with_sink(
     sink: Option<Arc<PrintkSink>>,
 ) -> Result<Vec<LoadedProgram>, LoadError> {
     // 1. register maps
-    let mut live: Vec<(String, Arc<Map>)> = Vec::new();
-    for def in &obj.maps {
-        let m = registry.create_or_get(def).map_err(LoadError::Structural)?;
-        live.push((def.name.clone(), m));
-    }
-    let id_of = |name: &str| -> Option<u32> {
-        live.iter().find(|(n, _)| n == name).map(|(_, m)| m.id)
-    };
-
-    // map table keyed by live id, for the verifier
-    let mut map_defs: HashMap<u32, MapDef> = HashMap::new();
-    for (_, m) in &live {
-        map_defs.insert(m.id, m.def.clone());
-    }
-
+    let (live, map_defs) = register_maps(obj, registry)?;
     let mut out = Vec::with_capacity(obj.progs.len());
     for p in &obj.progs {
-        out.push(load_program(p, registry, layouts, &live, &id_of, &map_defs, sink.clone())?);
+        out.push(load_program(p, registry, layouts, &live, &map_defs, sink.clone())?);
     }
     Ok(out)
 }
@@ -191,35 +263,11 @@ fn load_program(
     registry: &MapRegistry,
     layouts: &CtxLayouts,
     live: &[(String, Arc<Map>)],
-    id_of: &dyn Fn(&str) -> Option<u32>,
     map_defs: &HashMap<u32, MapDef>,
     sink: Option<Arc<PrintkSink>>,
 ) -> Result<LoadedProgram, LoadError> {
-    let pt = p.prog_type().ok_or_else(|| {
-        LoadError::Structural(format!(
-            "program '{}': unknown section '{}' (expected tuner/profiler/net)",
-            p.name, p.section
-        ))
-    })?;
-
-    // 2. apply relocations
-    let mut insns: Vec<Insn> = p.insns.clone();
-    for r in &p.relocs {
-        let idx = r.insn_idx as usize;
-        if idx >= insns.len() || !insns[idx].is_lddw() || insns[idx].src != pseudo::MAP_FD {
-            return Err(LoadError::Structural(format!(
-                "program '{}': reloc {} does not target a map-load lddw",
-                p.name, idx
-            )));
-        }
-        let id = id_of(&r.map_name).ok_or_else(|| {
-            LoadError::Structural(format!(
-                "program '{}': relocation against undeclared map '{}'",
-                p.name, r.map_name
-            ))
-        })?;
-        insns[idx].imm = id as i32;
-    }
+    // 2. resolve the program type and apply relocations
+    let (pt, insns) = relocate(p, live)?;
 
     // 3. verify (the paper's load-time gate)
     let t0 = Instant::now();
@@ -337,6 +385,27 @@ ok:
         p.map("state").unwrap().write_u64(0, 77).unwrap();
         assert_eq!(p.run(std::ptr::null_mut()), 77);
         assert!(p.stats.verify_ns > 0);
+    }
+
+    #[test]
+    fn verify_object_reports_stats_without_installing() {
+        let obj = crate::bpf::asm::assemble(GOOD).unwrap();
+        let reg = MapRegistry::new();
+        let stats = verify_object(&obj, &reg, &layouts(), None).unwrap();
+        assert_eq!(stats.len(), 1);
+        let (name, info, ns) = &stats[0];
+        assert_eq!(name, "good");
+        assert!(info.insns_processed > 0);
+        assert!(*ns > 0);
+        // forcing exhaustive enumeration agrees on acceptance
+        let reg = MapRegistry::new();
+        assert!(verify_object(&obj, &reg, &layouts(), Some(false)).is_ok());
+        // and the loaded program surfaces the same counters
+        let reg = MapRegistry::new();
+        let progs = load_asm(GOOD, &reg, &layouts()).unwrap();
+        let st = progs[0].verifier_stats();
+        assert_eq!(st.insns_processed, progs[0].info.insns_processed);
+        assert!(st.verify_ns > 0);
     }
 
     #[test]

@@ -62,6 +62,23 @@
 //! tail calls are only legal from the main frame — the chained
 //! program itself is verified independently when it is installed into
 //! the array (with type compatibility pinned at update time).
+//!
+//! Path enumeration is kept tractable by kernel-style **state
+//! equivalence pruning** (`is_state_visited` analog): states are
+//! checkpointed at jump targets, and a path whose state is subsumed —
+//! register by register, stack slot by stack slot, frame-stack aware,
+//! with held ringbuf references paired bijectively and never against
+//! released ones — by an already-explored checkpoint is cut short. A
+//! forward **precision pass** (`mark_chain_precision` analog) widens
+//! scalars whose exact bounds can never be needed again to unknown at
+//! checkpoints, so paths differing only in incidental constants
+//! actually merge. Pruning only ever *skips re-verifying* behaviors an
+//! explored checkpoint already covers (subsumption is pointwise and
+//! the transfer functions are monotone), so the accept/reject verdict
+//! is unchanged for any program that fits the complexity budget —
+//! asserted by the prune-on/off differential suite. Set
+//! `NCCLBPF_VERIFIER_PRUNE=0` (or [`Verifier::with_pruning`]) to force
+//! exhaustive enumeration.
 
 use super::helpers::{self, ArgType, ProgType, RetType};
 use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
@@ -134,15 +151,61 @@ pub struct VerifyInfo {
     pub helpers_used: Vec<i32>,
     /// bpf-to-bpf subprograms discovered (excluding the main program)
     pub subprogs: u32,
+    /// paths cut short because their checkpoint state was subsumed by
+    /// an already-explored one
+    pub states_pruned: u64,
+    /// peak simultaneously tracked abstract states (stored checkpoints
+    /// plus queued branch states plus the in-flight walk)
+    pub peak_states: u64,
 }
 
-/// total abstract instructions before declaring the program too complex
-const COMPLEXITY_BUDGET: u64 = 200_000;
+/// Per-load verification-cost stats: the counters behind `ncclbpf
+/// verify --stats` and `BENCH_verifier.json`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerifierStats {
+    /// abstract instructions processed (complexity budget consumed)
+    pub insns_processed: u64,
+    /// paths cut by checkpoint-state subsumption
+    pub states_pruned: u64,
+    /// peak simultaneously tracked abstract states
+    pub peak_states: u64,
+    /// wall-clock nanoseconds spent in the verifier
+    pub verify_ns: u64,
+}
+
+impl VerifyInfo {
+    /// Bundle this summary's cost counters with a measured wall time.
+    pub fn stats(&self, verify_ns: u64) -> VerifierStats {
+        VerifierStats {
+            insns_processed: self.insns_processed,
+            states_pruned: self.states_pruned,
+            peak_states: self.peak_states,
+            verify_ns,
+        }
+    }
+}
+
+/// Total abstract instructions before declaring the program too
+/// complex (public so stress tests can assert pruning headroom).
+pub const COMPLEXITY_BUDGET: u64 = 200_000;
 /// per-instruction visit cap: exceeding it indicates an unbounded loop
 const VISIT_CAP: u32 = 20_000;
 const STACK: usize = STACK_SIZE as usize;
 /// maximum bpf-to-bpf call depth, incl. the main frame (kernel value)
 const MAX_CALL_FRAMES: usize = 8;
+/// cap on stored checkpoint states per prune point (memory bound; the
+/// kernel uses add-state heuristics for the same purpose)
+const MAX_STATES_PER_PC: usize = 64;
+
+/// True unless `NCCLBPF_VERIFIER_PRUNE` is set to `0`/`false`/`off`/
+/// `no` — the process-wide default for state-equivalence pruning,
+/// overridable per run with [`Verifier::with_pruning`].
+pub fn pruning_enabled_by_env() -> bool {
+    match std::env::var("NCCLBPF_VERIFIER_PRUNE") {
+        Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | "no"),
+        Err(_) => true,
+    }
+}
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 enum Reg {
@@ -293,6 +356,16 @@ impl State {
     }
 }
 
+/// One recorded checkpoint state awaiting equivalence matches.
+struct Checkpoint {
+    state: State,
+    /// outstanding unexplored leaves descending from this state (the
+    /// kernel's `branches`): the checkpoint becomes a prune candidate
+    /// only at 0 — pruning against a still-in-flight ancestor would
+    /// let an unbounded loop "verify" against itself
+    branches: u32,
+}
+
 /// The abstract interpreter: construct with [`Verifier::new`], run
 /// with [`Verifier::verify`] (or use the [`verify`] free function).
 pub struct Verifier<'a> {
@@ -306,9 +379,26 @@ pub struct Verifier<'a> {
     info: VerifyInfo,
     /// subprogram regions as (start, end) insn ranges; [0] is main
     subprogs: Vec<(usize, usize)>,
+    /// state-equivalence pruning enabled (env default; see
+    /// [`Verifier::with_pruning`])
+    prune: bool,
+    /// pcs where checkpoint states are recorded (jump targets)
+    prune_points: Vec<bool>,
+    /// per-pc bitmask of registers whose exact bounds may still be
+    /// needed (bit r = rN); clear bits widen at checkpoints
+    bounds_live: Vec<u16>,
+    /// recorded checkpoint states
+    entries: Vec<Checkpoint>,
+    /// checkpoint indices per pc
+    by_pc: HashMap<usize, Vec<usize>>,
 }
 
 type VResult<T> = Result<T, VerifyError>;
+
+/// One queued exploration: resume pc, abstract state, and the
+/// checkpoint entries this branch descends from (their `branches`
+/// counters were incremented when it was queued).
+type WorkItem = (usize, State, Vec<usize>);
 
 impl<'a> Verifier<'a> {
     /// Bind a verifier to a program, its type's ctx layout and maps.
@@ -328,7 +418,20 @@ impl<'a> Verifier<'a> {
             next_nid: 1,
             info: VerifyInfo::default(),
             subprogs: Vec::new(),
+            prune: pruning_enabled_by_env(),
+            prune_points: Vec::new(),
+            bounds_live: Vec::new(),
+            entries: Vec::new(),
+            by_pc: HashMap::new(),
         }
+    }
+
+    /// Override the state-equivalence pruning default (environment
+    /// `NCCLBPF_VERIFIER_PRUNE`); `false` forces exhaustive path
+    /// enumeration — the differential-testing knob.
+    pub fn with_pruning(mut self, on: bool) -> Verifier<'a> {
+        self.prune = on;
+        self
     }
 
     fn err(&self, insn: usize, message: String) -> VerifyError {
@@ -345,10 +448,14 @@ impl<'a> Verifier<'a> {
         }
         self.check_structure()?;
         self.info.subprogs = (self.subprogs.len() - 1) as u32;
+        self.prune_points = self.compute_prune_points();
+        if self.prune {
+            self.bounds_live = self.compute_bounds_liveness();
+        }
 
         // DFS over paths with pruned branch states.
-        let mut worklist: Vec<(usize, State)> = vec![(0, State::initial(true))];
-        while let Some((mut pc, mut st)) = worklist.pop() {
+        let mut worklist: Vec<WorkItem> = vec![(0, State::initial(true), Vec::new())];
+        while let Some((mut pc, mut st, mut ancestors)) = worklist.pop() {
             loop {
                 if pc >= self.insns.len() {
                     return Err(self.err(
@@ -364,6 +471,15 @@ impl<'a> Verifier<'a> {
                          are entered via call and left via exit only)"
                             .into(),
                     ));
+                }
+                if self.prune
+                    && self.prune_points[pc]
+                    && self.visit_checkpoint(pc, &mut st, &mut ancestors, worklist.len())
+                {
+                    // subsumed by an explored checkpoint: every behavior
+                    // of this path's continuation was already verified
+                    self.info.states_pruned += 1;
+                    break;
                 }
                 self.processed += 1;
                 if self.processed > COMPLEXITY_BUDGET {
@@ -388,10 +504,15 @@ impl<'a> Verifier<'a> {
                     ));
                 }
 
-                match self.step(pc, &mut st, &mut worklist)? {
+                match self.step(pc, &mut st, &mut worklist, &ancestors)? {
                     Next::Fallthrough(n) => pc = n,
                     Next::Exit => break,
                 }
+            }
+            // this walk's leaf is done (exit or pruned): release its
+            // claim on every checkpoint it descends from
+            for &e in &ancestors {
+                self.entries[e].branches -= 1;
             }
         }
         self.info.insns_processed = self.processed;
@@ -498,6 +619,259 @@ impl<'a> Verifier<'a> {
         }
     }
 
+    // -- state-equivalence pruning -------------------------------------------
+
+    /// Marks the second slot of every lddw (never a real instruction).
+    fn lddw_hi_mask(&self) -> Vec<bool> {
+        let mut hi = vec![false; self.insns.len()];
+        let mut i = 0;
+        while i < self.insns.len() {
+            if self.insns[i].is_lddw() {
+                if i + 1 < self.insns.len() {
+                    hi[i + 1] = true;
+                }
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        hi
+    }
+
+    /// Checkpoint states are recorded at jump targets: that covers
+    /// both join points (where forked paths reconverge) and loop heads
+    /// (back-edge targets), the two places subsumption can fire.
+    fn compute_prune_points(&self) -> Vec<bool> {
+        let hi = self.lddw_hi_mask();
+        let n = self.insns.len();
+        let mut pts = vec![false; n];
+        for (i, ins) in self.insns.iter().enumerate() {
+            if hi[i] {
+                continue;
+            }
+            let cls = ins.class();
+            if cls != class::JMP && cls != class::JMP32 {
+                continue;
+            }
+            let op = ins.op();
+            if op == jmp::CALL || op == jmp::EXIT {
+                continue;
+            }
+            let tgt = i as i64 + 1 + ins.off as i64;
+            if tgt >= 0 && (tgt as usize) < n {
+                pts[tgt as usize] = true;
+            }
+        }
+        pts
+    }
+
+    /// Backwards may-analysis over the CFG: bit r at pc is set when
+    /// some path from pc can still need register r's exact value
+    /// interval — it feeds a conditional jump, 64-bit add/sub (possible
+    /// pointer arithmetic, whose range check inspects the scalar), a
+    /// divisor, a helper argument, a store (a spill can round-trip
+    /// bounds through the stack), or transitively another register
+    /// whose bounds are needed. A scalar with a clear bit can soundly
+    /// widen to full-range unknown at a checkpoint: no later check
+    /// reads its interval and no branch decision consults it, so
+    /// widening can neither admit nor newly reject anything — it only
+    /// lets states differing in incidental constants merge.
+    fn compute_bounds_liveness(&self) -> Vec<u16> {
+        let n = self.insns.len();
+        let hi = self.lddw_hi_mask();
+        let has_subprogs = self.subprogs.len() > 1;
+        let mut live = vec![0u16; n];
+        loop {
+            let mut changed = false;
+            for pc in (0..n).rev() {
+                if hi[pc] {
+                    continue;
+                }
+                let ins = &self.insns[pc];
+                let cls = ins.class();
+                // union of successor in-sets
+                let mut out: u16 = 0;
+                if ins.is_lddw() {
+                    if pc + 2 < n {
+                        out = live[pc + 2];
+                    }
+                } else if cls == class::JMP || cls == class::JMP32 {
+                    let op = ins.op();
+                    if op == jmp::EXIT {
+                        out = 0;
+                    } else if op == jmp::CALL {
+                        if pc + 1 < n {
+                            out = live[pc + 1];
+                        }
+                    } else {
+                        let t = pc as i64 + 1 + ins.off as i64;
+                        if t >= 0 && (t as usize) < n {
+                            out = live[t as usize];
+                        }
+                        if op != jmp::JA && pc + 1 < n {
+                            out |= live[pc + 1];
+                        }
+                    }
+                } else if pc + 1 < n {
+                    out = live[pc + 1];
+                }
+                let inb = self.bounds_transfer(ins, out, has_subprogs);
+                if inb != live[pc] {
+                    live[pc] = inb;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        live
+    }
+
+    /// One instruction's backwards transfer for the bounds-liveness
+    /// analysis: `out` is the union of the successors' needs.
+    fn bounds_transfer(&self, ins: &Insn, out: u16, has_subprogs: bool) -> u16 {
+        let cls = ins.class();
+        match cls {
+            class::ALU | class::ALU64 => {
+                let op = ins.op();
+                let d = bit(ins.dst);
+                let s = if ins.src_flag() == src::X { bit(ins.src) } else { 0 };
+                match op {
+                    alu::MOV => {
+                        if out & d != 0 {
+                            (out & !d) | s
+                        } else {
+                            out & !d
+                        }
+                    }
+                    // result is always full-unknown: incoming bounds moot
+                    alu::NEG | alu::END => out & !d,
+                    // possible pointer arithmetic: the scalar operand's
+                    // range is checked regardless of later uses
+                    alu::ADD | alu::SUB if cls == class::ALU64 => out | d | s,
+                    alu::DIV | alu::MOD => {
+                        // the divisor interval feeds the /0 check
+                        let base = if out & d != 0 { out } else { out & !d };
+                        base | s
+                    }
+                    _ => {
+                        if out & d != 0 {
+                            out | s
+                        } else {
+                            out & !d
+                        }
+                    }
+                }
+            }
+            class::LD | class::LDX => out & !bit(ins.dst),
+            class::ST => out,
+            // conservative: an 8-byte spill preserves the interval and
+            // a later restore may need it
+            class::STX => out | bit(ins.src),
+            class::JMP | class::JMP32 => {
+                let op = ins.op();
+                if op == jmp::EXIT {
+                    // a callee's r0 flows to its caller, which may
+                    // branch on it; the main program's r0 only needs
+                    // to *be* a scalar
+                    if has_subprogs {
+                        bit(0)
+                    } else {
+                        0
+                    }
+                } else if op == jmp::CALL {
+                    // r1-r5 are arguments (sizes, keys, lengths); r0 is
+                    // redefined by the return value
+                    (out & !bit(0)) | 0b0011_1110
+                } else if op == jmp::JA {
+                    out
+                } else {
+                    let s = if ins.src_flag() == src::X { bit(ins.src) } else { 0 };
+                    out | bit(ins.dst) | s
+                }
+            }
+            _ => out,
+        }
+    }
+
+    /// The `mark_chain_precision` analog, run forward: at a checkpoint,
+    /// every scalar whose bounds-liveness bit is clear widens to
+    /// full-range unknown. Caller frames widen against the liveness at
+    /// their resume pc. Pointers and spills are never widened.
+    fn widen(&self, st: &mut State, pc: usize) {
+        let nframes = st.frames.len();
+        for fi in 0..nframes {
+            let look = if fi + 1 == nframes { pc } else { st.frames[fi + 1].ret_pc };
+            let live = self.bounds_live.get(look).copied().unwrap_or(u16::MAX);
+            let frame = &mut st.frames[fi];
+            for (r, reg) in frame.regs.iter_mut().take(10).enumerate() {
+                if live & (1u16 << r) != 0 {
+                    continue;
+                }
+                if let Reg::Scalar { umin, umax } = *reg {
+                    if umin != 0 || umax != u64::MAX {
+                        *reg = Reg::scalar_unknown();
+                    }
+                }
+            }
+        }
+    }
+
+    /// The `is_state_visited` analog: widen bounds-dead scalars, then
+    /// either prune against an explored checkpoint that subsumes the
+    /// state (returns true) or record a new checkpoint (returns false).
+    /// In-flight checkpoints (`branches > 0`) are never prune
+    /// candidates: a loop that reproduces an ancestor's state must keep
+    /// running into the visit cap, exactly like the unpruned verifier.
+    fn visit_checkpoint(
+        &mut self,
+        pc: usize,
+        st: &mut State,
+        ancestors: &mut Vec<usize>,
+        queued: usize,
+    ) -> bool {
+        self.widen(st, pc);
+        if let Some(ids) = self.by_pc.get(&pc) {
+            for &id in ids {
+                let cp = &self.entries[id];
+                if cp.branches == 0 && state_subsumes(&cp.state, st) {
+                    return true;
+                }
+            }
+        }
+        let next_id = self.entries.len();
+        let ids = self.by_pc.entry(pc).or_default();
+        let record = ids.len() < MAX_STATES_PER_PC;
+        if record {
+            ids.push(next_id);
+        }
+        if record {
+            self.entries.push(Checkpoint { state: st.clone(), branches: 1 });
+            ancestors.push(next_id);
+            self.note_peak(queued);
+        }
+        false
+    }
+
+    /// Queue a forked branch state, charging it to every checkpoint the
+    /// current walk descends from (kernel `branches` propagation).
+    fn fork(&mut self, worklist: &mut Vec<WorkItem>, ancestors: &[usize], pc: usize, st: State) {
+        for &e in ancestors {
+            self.entries[e].branches += 1;
+        }
+        worklist.push((pc, st, ancestors.to_vec()));
+        self.note_peak(worklist.len());
+    }
+
+    /// Track the peak number of simultaneously live abstract states.
+    fn note_peak(&mut self, queued: usize) {
+        let tracked = (self.entries.len() + queued + 1) as u64;
+        if tracked > self.info.peak_states {
+            self.info.peak_states = tracked;
+        }
+    }
+
     fn reg(&self, st: &State, r: u8, at: usize) -> VResult<Reg> {
         if r as usize >= NREGS {
             return Err(self.err(at, format!("invalid register R{}", r)));
@@ -535,7 +909,8 @@ impl<'a> Verifier<'a> {
         &mut self,
         pc: usize,
         st: &mut State,
-        worklist: &mut Vec<(usize, State)>,
+        worklist: &mut Vec<WorkItem>,
+        ancestors: &[usize],
     ) -> VResult<Next> {
         let ins = self.insns[pc];
         match ins.class() {
@@ -552,7 +927,7 @@ impl<'a> Verifier<'a> {
                 self.store(pc, &ins, st)?;
                 Ok(Next::Fallthrough(pc + 1))
             }
-            class::JMP | class::JMP32 => self.jump(pc, &ins, st, worklist),
+            class::JMP | class::JMP32 => self.jump(pc, &ins, st, worklist, ancestors),
             c => Err(self.err(pc, format!("unknown instruction class {:#x}", c))),
         }
     }
@@ -1173,7 +1548,8 @@ impl<'a> Verifier<'a> {
         pc: usize,
         ins: &Insn,
         st: &mut State,
-        worklist: &mut Vec<(usize, State)>,
+        worklist: &mut Vec<WorkItem>,
+        ancestors: &[usize],
     ) -> VResult<Next> {
         let op = ins.op();
         if op == jmp::EXIT {
@@ -1235,7 +1611,7 @@ impl<'a> Verifier<'a> {
                             Reg::MapValue { map_id, off: 0, span: 0, vsize },
                         );
                         promote_nid(null_side, nid, Reg::scalar_const(0));
-                        worklist.push((tgt, taken));
+                        self.fork(worklist, ancestors, tgt, taken);
                         *st = fall;
                         return Ok(Next::Fallthrough(pc + 1));
                     }
@@ -1256,7 +1632,7 @@ impl<'a> Verifier<'a> {
                         );
                         promote_ring(null_side, ref_id, Reg::scalar_const(0));
                         null_side.refs.retain(|&r| r != ref_id);
-                        worklist.push((tgt, taken));
+                        self.fork(worklist, ancestors, tgt, taken);
                         *st = fall;
                         return Ok(Next::Fallthrough(pc + 1));
                     }
@@ -1268,7 +1644,8 @@ impl<'a> Verifier<'a> {
                     && (op == jmp::JEQ || op == jmp::JNE)
                 {
                     // pointer-pointer eq: explore both
-                    worklist.push((tgt, st.clone()));
+                    let taken = st.clone();
+                    self.fork(worklist, ancestors, tgt, taken);
                     return Ok(Next::Fallthrough(pc + 1));
                 }
                 return Err(self.err(
@@ -1323,7 +1700,7 @@ impl<'a> Verifier<'a> {
                         prune(&mut taken, ins.dst, op, k, true);
                         prune(st, ins.dst, op, k, false);
                     }
-                    worklist.push((tgt, taken));
+                    self.fork(worklist, ancestors, tgt, taken);
                     Ok(Next::Fallthrough(pc + 1))
                 }
             }
@@ -1842,6 +2219,151 @@ enum Next {
     Exit,
 }
 
+/// Bitmask slot of register `r` in the bounds-liveness sets.
+fn bit(r: u8) -> u16 {
+    1u16 << (r as u16 & 0xf)
+}
+
+/// Bidirectionally consistent pairing of path-local ids: map-lookup
+/// null ids and ringbuf reference ids differ numerically between
+/// paths, so subsumption matches their *shape* — each old id pairs
+/// with exactly one cur id and vice versa.
+fn idmap_check(map: &mut Vec<(u32, u32)>, old: u32, cur: u32) -> bool {
+    for &(o, c) in map.iter() {
+        if o == old {
+            return c == cur;
+        }
+        if c == cur {
+            // cur id already paired with a different old id
+            return false;
+        }
+    }
+    map.push((old, cur));
+    true
+}
+
+/// True when checkpoint register `old` covers every concrete value
+/// `cur` can hold (pointwise weaker-or-equal) — the register half of
+/// the kernel's `states_equal` with range-within rules for scalars and
+/// pointer offset intervals.
+fn reg_subsumes(old: Reg, cur: Reg, ids: &mut Vec<(u32, u32)>) -> bool {
+    if old == Reg::Uninit {
+        // the explored continuation never read this register (a read
+        // of uninit would have failed verification), so any current
+        // content is covered
+        return true;
+    }
+    match (old, cur) {
+        (Reg::Scalar { umin: o0, umax: o1 }, Reg::Scalar { umin: c0, umax: c1 }) => {
+            o0 <= c0 && c1 <= o1
+        }
+        (Reg::CtxPtr { off: a }, Reg::CtxPtr { off: b }) => a == b,
+        (Reg::StackPtr { off: a, frame: fa }, Reg::StackPtr { off: b, frame: fb }) => {
+            a == b && fa == fb
+        }
+        (
+            Reg::MapValue { map_id: ma, off: oa, span: sa, vsize: va },
+            Reg::MapValue { map_id: mb, off: ob, span: sb, vsize: vb },
+        ) => ma == mb && va == vb && oa <= ob && ob + sb as i64 <= oa + sa as i64,
+        (
+            Reg::MapValueOrNull { map_id: ma, vsize: va, nid: na },
+            Reg::MapValueOrNull { map_id: mb, vsize: vb, nid: nb },
+        ) => ma == mb && va == vb && idmap_check(ids, na, nb),
+        (Reg::MapPtr { map_id: a }, Reg::MapPtr { map_id: b }) => a == b,
+        (
+            Reg::RingBufMemOrNull { size: sa, ref_id: ra },
+            Reg::RingBufMemOrNull { size: sb, ref_id: rb },
+        ) => sa == sb && idmap_check(ids, ra, rb),
+        (
+            Reg::RingBufMem { size: za, off: oa, span: sa, ref_id: ra },
+            Reg::RingBufMem { size: zb, off: ob, span: sb, ref_id: rb },
+        ) => {
+            za == zb && oa <= ob && ob + sb as i64 <= oa + sa as i64 && idmap_check(ids, ra, rb)
+        }
+        (Reg::RingBufReleased { ref_id: ra }, Reg::RingBufReleased { ref_id: rb }) => {
+            idmap_check(ids, ra, rb)
+        }
+        // everything else (scalar vs pointer, held vs released record,
+        // different pointer kinds) never subsumes
+        _ => false,
+    }
+}
+
+/// Frame-stack-aware state subsumption (`states_equal` analog): true
+/// when every concrete machine state described by `cur` is also
+/// described by `old`, so a path arriving in `cur` at a checkpoint
+/// already explored from `old` cannot reach any behavior that
+/// exploration did not cover.
+fn state_subsumes(old: &State, cur: &State) -> bool {
+    if old.frames.len() != cur.frames.len() || old.refs.len() != cur.refs.len() {
+        return false;
+    }
+    let mut ids: Vec<(u32, u32)> = Vec::new();
+    for (fo, fc) in old.frames.iter().zip(cur.frames.iter()) {
+        if fo.subprog != fc.subprog || fo.ret_pc != fc.ret_pc || fc.depth > fo.depth {
+            // frame-shape mismatch, or the current path already sits
+            // deeper in the 512-byte cumulative stack than anything
+            // the explored continuation was checked against
+            return false;
+        }
+        for (ro, rc) in fo.regs.iter().zip(fc.regs.iter()) {
+            if !reg_subsumes(*ro, *rc, &mut ids) {
+                return false;
+            }
+        }
+        for (off, ro) in fo.spills.iter() {
+            match fc.spills.get(off) {
+                Some(rc) => {
+                    if !reg_subsumes(*ro, *rc, &mut ids) {
+                        return false;
+                    }
+                }
+                None => return false,
+            }
+        }
+        // cur-only spills: the checkpoint saw plain data bytes there,
+        // so its continuation may restore the slot as a scalar — a
+        // pointer smuggled in a cur-side spill would escape as a
+        // "scalar" (e.g. leak through r0 at exit) even though the
+        // exhaustive walk of cur would have rejected it. Readable
+        // old-Data bytes therefore only cover scalar spills.
+        for (off, rc) in fc.spills.iter() {
+            if fo.spills.contains_key(off) {
+                continue;
+            }
+            let base = State::sidx(*off);
+            let old_reads = fo.stack[base..base + 8].iter().any(|b| *b != StackByte::Uninit);
+            if old_reads && !matches!(rc, Reg::Scalar { .. }) {
+                return false;
+            }
+        }
+        for (a, b) in fo.stack.iter().zip(fc.stack.iter()) {
+            match (a, b) {
+                // old never read the byte (reads of uninit stack fail
+                // verification), so anything current is covered
+                (StackByte::Uninit, _) => {}
+                // a spill byte reads back as data, so it covers Data
+                (StackByte::Data, StackByte::Data | StackByte::Spill) => {}
+                (StackByte::Spill, StackByte::Spill) => {}
+                _ => return false,
+            }
+        }
+    }
+    // held references must pair bijectively: a reservation held on the
+    // current path must correspond to one the explored continuation
+    // provably releases — and a held reference never prunes against a
+    // released one (reg_subsumes already rejects that shape)
+    for &o in &old.refs {
+        let Some(&(_, c)) = ids.iter().find(|&&(po, _)| po == o) else {
+            return false;
+        };
+        if !cur.refs.contains(&c) {
+            return false;
+        }
+    }
+    true
+}
+
 /// Rewrite every register / spill slot (in every frame) carrying
 /// null-id `nid`.
 fn promote_nid(st: &mut State, nid: u32, to: Reg) {
@@ -1996,6 +2518,23 @@ pub fn verify(
     maps: &HashMap<u32, MapDef>,
 ) -> Result<VerifyInfo, VerifyError> {
     Verifier::new(insns, prog_type, ctx, maps).verify()
+}
+
+/// [`verify`] with an explicit pruning override (`None` keeps the
+/// `NCCLBPF_VERIFIER_PRUNE` environment default) — the entry point the
+/// prune-on/off differential tests and `BENCH_verifier.json` use.
+pub fn verify_with(
+    insns: &[Insn],
+    prog_type: ProgType,
+    ctx: &CtxLayout,
+    maps: &HashMap<u32, MapDef>,
+    prune: Option<bool>,
+) -> Result<VerifyInfo, VerifyError> {
+    let mut v = Verifier::new(insns, prog_type, ctx, maps);
+    if let Some(on) = prune {
+        v = v.with_pruning(on);
+    }
+    v.verify()
 }
 
 #[cfg(test)]
@@ -3047,5 +3586,225 @@ mod tests {
         p.push(exit());
         let info = rb_ok(&p);
         assert!(info.helpers_used.contains(&130));
+    }
+
+    // -- state-equivalence pruning -------------------------------------------
+
+    fn verify_prune(prog: &[Insn], prune: bool) -> Result<VerifyInfo, VerifyError> {
+        verify_with(prog, ProgType::Tuner, &ctx_rw(), &one_map(), Some(prune))
+    }
+
+    /// The classic two-branch-join shape: the arms differ only in an
+    /// incidental constant (r3 = 5 vs 7) that nothing ever reads
+    /// again. Precision widening turns both into `unknown` at the join
+    /// checkpoint, so the forked arm prunes instead of re-walking the
+    /// tail.
+    #[test]
+    fn widened_scalar_prune_fires_on_two_branch_join() {
+        let p = vec![
+            ldx(size::W, 2, 1, 0),      // 0: unknown
+            jmp_imm(jmp::JNE, 2, 0, 2), // 1 -> 4
+            mov64_imm(3, 5),            // 2
+            ja(1),                      // 3 -> 5 (join)
+            mov64_imm(3, 7),            // 4
+            mov64_imm(0, 0),            // 5: join
+            exit(),                     // 6
+        ];
+        let with = verify_prune(&p, true).expect("verifies with pruning");
+        assert_eq!(with.states_pruned, 1, "forked arm must prune at the join");
+        assert!(with.peak_states > 0);
+        let without = verify_prune(&p, false).expect("verifies exhaustively too");
+        assert_eq!(without.states_pruned, 0);
+        assert!(without.insns_processed > with.insns_processed);
+    }
+
+    /// Widening must respect bounds-liveness: here the arm constant is
+    /// a later *divisor*, so it may NOT widen to unknown (that would
+    /// turn a provably non-zero divisor into a possible /0 and falsely
+    /// reject). The program must verify — and therefore not prune.
+    #[test]
+    fn bounds_live_scalar_is_not_widened() {
+        let p = vec![
+            ldx(size::W, 2, 1, 0),       // 0
+            jmp_imm(jmp::JNE, 2, 0, 2),  // 1 -> 4
+            mov64_imm(3, 1),             // 2
+            ja(1),                       // 3 -> 5
+            mov64_imm(3, 3),             // 4
+            mov64_imm(0, 10),            // 5: join
+            alu64_reg(alu::DIV, 0, 3),   // 6: r3 bounds feed the /0 check
+            exit(),                      // 7
+        ];
+        let info = verify_prune(&p, true).expect("divisor must stay precise");
+        assert_eq!(info.states_pruned, 0, "live-bounds arms must not merge");
+        verify_prune(&p, false).expect("exhaustive agrees");
+    }
+
+    /// A bounded loop with a data-dependent fork per iteration: with
+    /// pruning every fork is subsumed at the join (both arms leave r4
+    /// fully unknown), so verification stays linear; exhaustive
+    /// enumeration walks the 2^16 arm combinations and blows the
+    /// complexity budget.
+    #[test]
+    fn loop_body_forks_prune_instead_of_exploding() {
+        let p = vec![
+            ldx(size::W, 3, 1, 0),        // 0: unknown
+            mov64_imm(2, 0),              // 1: counter
+            mov64_imm(4, 0),              // 2: accumulator
+            jmp_imm(jmp::JGE, 2, 16, 6),  // 3 -> 10: loop exit
+            jmp_imm(jmp::JSET, 3, 1, 2),  // 4 -> 7: fork
+            alu64_reg(alu::OR, 4, 3),     // 5: fall arm
+            ja(1),                        // 6 -> 8
+            alu64_imm(alu::OR, 4, 1),     // 7: taken arm
+            alu64_imm(alu::ADD, 2, 1),    // 8: join
+            ja(-7),                       // 9 -> 3
+            mov64_imm(0, 0),              // 10
+            exit(),                       // 11
+        ];
+        let with = verify_prune(&p, true).expect("pruned loop verifies");
+        assert!(with.states_pruned >= 16, "one prune per iteration fork: {:?}", with);
+        assert!(
+            with.insns_processed * 5 <= COMPLEXITY_BUDGET,
+            "pruned cost must leave 5x headroom, got {}",
+            with.insns_processed
+        );
+        let e = verify_prune(&p, false).expect_err("exhaustive must exhaust the budget");
+        assert!(
+            e.message.contains("too complex") || e.message.contains("unbounded loop"),
+            "{}",
+            e.message
+        );
+    }
+
+    /// Pruning must not weaken the termination guarantee: unbounded
+    /// loops reproduce an *in-flight* checkpoint state, which is never
+    /// a prune candidate, so they still run into the caps.
+    #[test]
+    fn unbounded_loops_rejected_with_pruning_on_and_off() {
+        let tight = [ja(-1), exit()];
+        let growing = [mov64_imm(2, 0), alu64_imm(alu::ADD, 2, 1), ja(-2), exit()];
+        for prog in [&tight[..], &growing[..]] {
+            for prune in [true, false] {
+                let e = verify_prune(prog, prune).expect_err("must reject");
+                assert!(
+                    e.message.contains("unbounded loop") || e.message.contains("too complex"),
+                    "prune={}: {}",
+                    prune,
+                    e.message
+                );
+            }
+        }
+    }
+
+    // -- subsumption corner cases (direct on state_subsumes) -----------------
+
+    #[test]
+    fn subsumption_scalar_range_is_directional() {
+        let mut old = State::initial(true);
+        let mut cur = State::initial(true);
+        old.cur_mut().regs[2] = Reg::Scalar { umin: 0, umax: 10 };
+        cur.cur_mut().regs[2] = Reg::Scalar { umin: 2, umax: 5 };
+        assert!(state_subsumes(&old, &cur), "wider old covers narrower cur");
+        assert!(!state_subsumes(&cur, &old), "narrower old cannot cover wider cur");
+        // uninit old covers anything; anything never covers uninit cur
+        old.cur_mut().regs[2] = Reg::Uninit;
+        assert!(state_subsumes(&old, &cur));
+        cur.cur_mut().regs[2] = Reg::Uninit;
+        old.cur_mut().regs[2] = Reg::scalar_unknown();
+        assert!(!state_subsumes(&old, &cur));
+    }
+
+    #[test]
+    fn subsumption_spilled_pointer_vs_scalar_never_matches() {
+        let mut old = State::initial(true);
+        let mut cur = State::initial(true);
+        for st in [&mut old, &mut cur] {
+            for b in 0..8 {
+                st.cur_mut().stack[State::sidx(-8 + b)] = StackByte::Spill;
+            }
+        }
+        old.cur_mut().spills.insert(-8, Reg::CtxPtr { off: 0 });
+        cur.cur_mut().spills.insert(-8, Reg::scalar_unknown());
+        assert!(!state_subsumes(&old, &cur));
+        assert!(!state_subsumes(&cur, &old));
+        // identical pointer spills do subsume
+        cur.cur_mut().spills.insert(-8, Reg::CtxPtr { off: 0 });
+        assert!(state_subsumes(&old, &cur));
+        // a spilled slot in old requires a spilled slot in cur
+        cur.cur_mut().spills.remove(&(-8));
+        for b in 0..8 {
+            cur.cur_mut().stack[State::sidx(-8 + b)] = StackByte::Data;
+        }
+        assert!(!state_subsumes(&old, &cur));
+    }
+
+    /// Regression for the Data-vs-Spill hole: a checkpoint that saw
+    /// plain data bytes may only cover a *scalar* spill in the current
+    /// state — a pointer parked in a cur-only spill would escape as a
+    /// "scalar" through the pruned continuation (e.g. leak via r0).
+    #[test]
+    fn subsumption_data_bytes_never_cover_pointer_spill() {
+        let mut old = State::initial(true);
+        for b in 0..8 {
+            old.cur_mut().stack[State::sidx(-8 + b)] = StackByte::Data;
+        }
+        let mut cur = State::initial(true);
+        for b in 0..8 {
+            cur.cur_mut().stack[State::sidx(-8 + b)] = StackByte::Spill;
+        }
+        cur.cur_mut().spills.insert(-8, Reg::CtxPtr { off: 0 });
+        assert!(!state_subsumes(&old, &cur), "pointer spill must not hide under Data");
+        // the same shape with a scalar spill is covered (a restore
+        // yields a scalar either way)
+        cur.cur_mut().spills.insert(-8, Reg::Scalar { umin: 3, umax: 9 });
+        assert!(state_subsumes(&old, &cur));
+        // and never-read (Uninit) old bytes cover even a pointer spill
+        let blank = State::initial(true);
+        cur.cur_mut().spills.insert(-8, Reg::CtxPtr { off: 0 });
+        assert!(state_subsumes(&blank, &cur));
+    }
+
+    #[test]
+    fn subsumption_held_ringbuf_ref_never_matches_released() {
+        let mut held = State::initial(true);
+        held.cur_mut().regs[6] = Reg::RingBufMem { size: 16, off: 0, span: 0, ref_id: 3 };
+        held.refs.push(3);
+        let mut released = State::initial(true);
+        released.cur_mut().regs[6] = Reg::RingBufReleased { ref_id: 9 };
+        released.refs.push(9); // equal ref counts isolate the reg check
+        assert!(!state_subsumes(&held, &released));
+        assert!(!state_subsumes(&released, &held));
+        // held vs held matches with the reference ids paired by shape,
+        // not numerically
+        let mut held2 = State::initial(true);
+        held2.cur_mut().regs[6] = Reg::RingBufMem { size: 16, off: 0, span: 0, ref_id: 9 };
+        held2.refs.push(9);
+        assert!(state_subsumes(&held, &held2));
+    }
+
+    #[test]
+    fn subsumption_frame_mismatch_never_matches() {
+        let one = State::initial(true);
+        let mut two = State::initial(true);
+        two.frames.push(Frame::new(0, 1, 1));
+        assert!(!state_subsumes(&one, &two));
+        assert!(!state_subsumes(&two, &one));
+        // same frame count, but deeper cumulative stack use on the
+        // current path is not covered by a shallower checkpoint
+        let mut shallow = State::initial(true);
+        shallow.cur_mut().depth = 64;
+        let mut deep = State::initial(true);
+        deep.cur_mut().depth = 128;
+        assert!(state_subsumes(&deep, &shallow));
+        assert!(!state_subsumes(&shallow, &deep));
+    }
+
+    #[test]
+    fn verify_info_reports_pruning_counters() {
+        let info = ok(&[mov64_imm(0, 0), exit()]);
+        let stats = info.stats(1234);
+        assert_eq!(stats.insns_processed, info.insns_processed);
+        assert_eq!(stats.verify_ns, 1234);
+        assert_eq!(stats.states_pruned, info.states_pruned);
+        assert_eq!(stats.peak_states, info.peak_states);
     }
 }

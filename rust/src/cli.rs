@@ -7,12 +7,17 @@ use std::collections::HashMap;
 /// and the usage/error text is generated from it, so the help can
 /// never drift from the actually-wired set again.
 pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
-    ("verify", "<policy.c|.s>", "compile + verify a policy, print report"),
+    (
+        "verify",
+        "<policy.c|.s> [--stats]",
+        "compile + verify a policy; prints `OK <name> insns=<n> states=<n>` per program \
+         (--stats: full verifier cost counters)",
+    ),
     ("disasm", "<policy.c|.s>", "compile + disassemble"),
     ("allreduce", "[--size 64M --ranks 8 --policy NAME]", "run one AllReduce under a policy"),
     ("sweep", "[--ranks N]", "Table 2 algorithm sweep"),
     ("train", "[--ranks 4 --steps 50 --policy NAME]", "DDP training with the policy attached"),
-    ("safety", "", "run the accept/reject suite (§5.2 + ringbuf + call-graph classes)"),
+    ("safety", "", "run the accept/reject suite (§5.2 + ringbuf + call-graph + stress corpus)"),
     ("hotreload", "", "demonstrate atomic policy swap"),
     (
         "traffic",
@@ -26,8 +31,10 @@ pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
     ),
     (
         "bench",
-        "[--out DIR] [--quick]",
-        "run the paper-shaped measurement suite, write BENCH_<name>.json",
+        "[--out DIR] [--quick] [--compare DIR [--tolerance-pct N] [--bless]]",
+        "run the paper-shaped measurement suite, write BENCH_<name>.json (--compare: exit \
+         non-zero when medians regress past tolerance vs the committed baselines; --bless: \
+         copy this run's JSON into the baseline dir)",
     ),
     (
         "docs",

@@ -90,8 +90,9 @@ pub fn reference_markdown() -> String {
     out.push_str(
         "Rendered from the in-source tables the runtime executes against \
          (`helpers::HELPER_SPECS`, the per-type whitelists, `MapKind`, the ctx \
-         layouts, `cli::SUBCOMMANDS`, `policydir::UNSAFE_POLICIES`). CI fails \
-         when this file drifts from the code.\n",
+         layouts, `cli::SUBCOMMANDS`, `policydir::UNSAFE_POLICIES`, \
+         `policydir::STRESS_POLICIES`). CI fails when this file drifts from \
+         the code.\n",
     );
     out.push('\n');
 
@@ -195,6 +196,23 @@ pub fn reference_markdown() -> String {
     for (name, needle) in policydir::UNSAFE_POLICIES {
         writeln!(out, "| `{}` | `{}` |", name, needle).unwrap();
     }
+    out.push('\n');
+
+    out.push_str("## Verification stress corpus\n");
+    out.push('\n');
+    out.push_str(
+        "Safe policies sized so exhaustive path enumeration exhausts the \
+         verifier's complexity budget while state-equivalence pruning \
+         verifies them with large headroom; `tests/verifier_pruning.rs` \
+         asserts both directions and `BENCH_verifier.json` tracks their \
+         cost.\n",
+    );
+    out.push('\n');
+    out.push_str("| program | shape |\n");
+    out.push_str("|---------|-------|\n");
+    for (name, shape) in policydir::STRESS_POLICIES {
+        writeln!(out, "| `{}` | {} |", name, shape).unwrap();
+    }
     out
 }
 
@@ -228,6 +246,9 @@ mod tests {
         }
         for (name, _) in policydir::UNSAFE_POLICIES {
             assert!(text.contains(name), "missing unsafe program {}", name);
+        }
+        for (name, _) in policydir::STRESS_POLICIES {
+            assert!(text.contains(name), "missing stress policy {}", name);
         }
         for (kind, ..) in map_kind_rows() {
             assert!(text.contains(&format!("{:?}", kind)), "missing map kind {:?}", kind);

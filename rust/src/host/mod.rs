@@ -15,6 +15,7 @@ pub mod traffic;
 use crate::bpf::program::load_object_with_sink;
 use crate::bpf::{
     prog_array_update, LoadError, LoadedProgram, Map, MapRegistry, Object, PrintkSink, ProgType,
+    VerifierStats,
 };
 use crate::cc::net::NetHook;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
@@ -30,6 +31,9 @@ use std::time::Instant;
 pub struct LoadReport {
     /// (program name, type) installed
     pub programs: Vec<(String, ProgType)>,
+    /// per-program verification-cost counters, in load order (the
+    /// `ncclbpf verify --stats` rows)
+    pub prog_stats: Vec<(String, VerifierStats)>,
     /// total verification time across the object's programs
     pub verify_ns: u64,
     /// total pre-decode + JIT time across the object's programs
@@ -114,6 +118,7 @@ impl NcclBpfHost {
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
             report.compile_ns += p.stats.compile_ns;
+            report.prog_stats.push((p.name.clone(), p.verifier_stats()));
         }
         for p in progs {
             let pt = p.prog_type;
@@ -200,6 +205,7 @@ impl NcclBpfHost {
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
             report.compile_ns += p.stats.compile_ns;
+            report.prog_stats.push((p.name.clone(), p.verifier_stats()));
         }
         for p in progs {
             let slot = links.iter().find(|(name, _)| *name == p.name).map(|&(_, i)| i);
@@ -470,6 +476,17 @@ done:
         host.tuner_decide(&args(8 << 10), &mut cost, &mut ch);
         assert_eq!(cost.argmin(), Some((Algo::Tree, Proto::Ll)));
         assert_eq!(host.decisions.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn install_reports_per_program_verifier_stats() {
+        let host = NcclBpfHost::new();
+        let rep = host.install_asm(SIZE_AWARE_ASM).unwrap();
+        assert_eq!(rep.prog_stats.len(), 1);
+        let (name, st) = &rep.prog_stats[0];
+        assert_eq!(name, "size_aware");
+        assert!(st.insns_processed > 0);
+        assert!(st.verify_ns > 0);
     }
 
     #[test]

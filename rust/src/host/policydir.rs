@@ -68,6 +68,18 @@ pub const UNSAFE_POLICIES: [(&str, &str); 13] = [
     ("call_r6_clobber", "r1-r5"),
 ];
 
+/// The verification-cost stress corpus: safe policies sized so that
+/// exhaustive path enumeration exhausts the verifier's complexity
+/// budget while state-equivalence pruning verifies them with large
+/// headroom (asserted both ways by `tests/verifier_pruning.rs`). They
+/// live outside [`SAFE_POLICIES`] so Table 1 keeps measuring exactly
+/// the paper's corpus; `ncclbpf safety` and `BENCH_verifier.json`
+/// cover them whenever pruning is enabled.
+pub const STRESS_POLICIES: [(&str, &str); 2] = [
+    ("stress_ladder64", "64-arm size ladder joining into a bounded refinement loop"),
+    ("stress_channel_scorer", "32-lap channel scorer with a data-dependent branch per lap"),
+];
+
 /// Build an unsafe-suite program from `policies/unsafe/`.
 pub fn build_unsafe(name: &str) -> Result<Object, String> {
     let dir = policies_dir().join("unsafe");
@@ -98,6 +110,19 @@ mod tests {
         for name in ["record_latency", "net_count", "bad_channels", "latency_events"] {
             let obj = build_named(name).unwrap();
             host.install_object(&obj).unwrap();
+        }
+    }
+
+    #[test]
+    fn stress_policies_build_and_install_with_pruning() {
+        let host = NcclBpfHost::new();
+        for (name, _shape) in STRESS_POLICIES {
+            let obj = build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            let rep = host
+                .install_object(&obj)
+                .unwrap_or_else(|e| panic!("{} must verify with pruning on: {}", name, e));
+            let (_, st) = &rep.prog_stats[0];
+            assert!(st.states_pruned > 0, "{}: pruning must actually fire", name);
         }
     }
 

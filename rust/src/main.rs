@@ -66,7 +66,7 @@ fn cmd_verify(args: &Args) -> i32 {
         eprintln!("{}", e);
         std::process::exit(1)
     }) else {
-        eprintln!("usage: ncclbpf verify <policy.c|policy.s>");
+        eprintln!("usage: ncclbpf verify <policy.c|policy.s> [--stats]");
         return 2;
     };
     let host = NcclBpfHost::new();
@@ -74,6 +74,24 @@ fn cmd_verify(args: &Args) -> i32 {
         Ok(report) => {
             for (name, pt) in &report.programs {
                 println!("VERIFIER ACCEPT: {} ({:?})", name, pt);
+            }
+            // stats-lite one-liner per program, stable for scripts
+            for (name, st) in &report.prog_stats {
+                println!("OK {} insns={} states={}", name, st.insns_processed, st.peak_states);
+            }
+            if args.flag_bool("stats") {
+                println!("object: {} programs, {} insns", obj.progs.len(), obj.total_insns());
+                for (name, st) in &report.prog_stats {
+                    println!(
+                        "STATS {} insns_processed={} states_pruned={} peak_states={} \
+                         verify_ns={}",
+                        name,
+                        st.insns_processed,
+                        st.states_pruned,
+                        st.peak_states,
+                        st.verify_ns
+                    );
+                }
             }
             println!(
                 "verify {} us, compile {} us, swap {:?} ns",
@@ -225,6 +243,31 @@ fn cmd_safety(_args: &Args) -> i32 {
             Err(e) => println!("  REJECT {} -> {}", name, e),
         }
     }
+    println!("== stress policies (must verify under the complexity budget) ==");
+    if ncclbpf::bpf::verifier::pruning_enabled_by_env() {
+        for (name, shape) in policydir::STRESS_POLICIES {
+            let obj = policydir::build_named(name).expect(name);
+            match host.install_object(&obj) {
+                Ok(rep) => {
+                    let (insns, pruned) = rep
+                        .prog_stats
+                        .first()
+                        .map(|(_, s)| (s.insns_processed, s.states_pruned))
+                        .unwrap_or((0, 0));
+                    println!(
+                        "  ACCEPT {} ({}; insns_processed={} states_pruned={})",
+                        name, shape, insns, pruned
+                    );
+                }
+                Err(e) => {
+                    println!("  UNEXPECTED REJECT {}: {}", name, e);
+                    return 1;
+                }
+            }
+        }
+    } else {
+        println!("  SKIP: NCCLBPF_VERIFIER_PRUNE=0 (the stress corpus needs pruning by design)");
+    }
     println!(
         "safety suite: all {} safe accepted, all {} unsafe rejected",
         policydir::SAFE_POLICIES.len(),
@@ -302,12 +345,57 @@ fn cmd_bench(args: &Args) -> i32 {
         opts.calls, opts.iters, opts.seed, out
     );
     match ncclbpf::bench::run_all(Path::new(out), &opts) {
-        Ok(paths) => {
-            println!("wrote {} reports", paths.len());
-            0
-        }
+        Ok(paths) => println!("wrote {} reports", paths.len()),
         Err(e) => {
             eprintln!("bench failed: {}", e);
+            return 1;
+        }
+    }
+    let Some(baseline) = args.flag("compare") else {
+        return 0;
+    };
+    if args.flag_bool("bless") {
+        return match ncclbpf::bench::bless_baselines(Path::new(out), Path::new(baseline)) {
+            Ok(n) => {
+                println!("blessed {} baseline files into {} (commit them)", n, baseline);
+                0
+            }
+            Err(e) => {
+                eprintln!("bless failed: {}", e);
+                1
+            }
+        };
+    }
+    let tol: f64 = args.flag("tolerance-pct").and_then(|v| v.parse().ok()).unwrap_or(15.0);
+    match ncclbpf::bench::compare_bench_dirs(Path::new(out), Path::new(baseline), tol) {
+        Ok(rep) if rep.compared == 0 => {
+            println!(
+                "bench compare: no BENCH_*.json baselines in {} yet; create them with \
+                 `ncclbpf bench --out {} --compare {} --bless`",
+                baseline, out, baseline
+            );
+            0
+        }
+        Ok(rep) if rep.violations.is_empty() => {
+            println!(
+                "bench compare: {} baseline files within {}% median tolerance",
+                rep.compared, tol
+            );
+            0
+        }
+        Ok(rep) => {
+            for v in &rep.violations {
+                eprintln!("BENCH REGRESSION: {} {}: {}", v.file, v.label, v.detail);
+            }
+            eprintln!(
+                "bench compare: {} regressions past {}% tolerance",
+                rep.violations.len(),
+                tol
+            );
+            1
+        }
+        Err(e) => {
+            eprintln!("bench compare failed: {}", e);
             1
         }
     }

@@ -6,13 +6,17 @@
 //! sign extension (negative immediates, ARSH, signed compares), and
 //! JMP32 — then asserts `run_interp == run_jit` on the result.
 //!
-//! Runs under plain `cargo test` and in the CI smoke job.
+//! Runs under plain `cargo test` and in the CI smoke job; the nightly
+//! CI job scales every generator with `NCCLBPF_FUZZ_CASES` (10x the
+//! default), and the pruning-soundness job re-runs the whole file with
+//! `NCCLBPF_VERIFIER_PRUNE=0` — plus an explicit in-process test that
+//! pruning on/off produce identical accept/reject verdicts.
 
 use ncclbpf::bpf::helpers::HelperEnv;
 use ncclbpf::bpf::insn::{
     alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, call_pseudo, class, disasm, exit, jmp,
-    jmp_imm, jmp_reg, ld_map_fd, lddw, mov32_imm, mov64_imm, mov64_reg, size as msz, src, stx,
-    Insn,
+    jmp_imm, jmp_reg, ld_map_fd, lddw, ldx, mov32_imm, mov64_imm, mov64_reg, size as msz, src,
+    stx, Insn,
 };
 use ncclbpf::bpf::jit::JitProgram;
 use ncclbpf::bpf::maps::{MapDef, MapKind};
@@ -20,6 +24,17 @@ use ncclbpf::bpf::{interp, verifier, MapRegistry, ProgType};
 use ncclbpf::host::ctx::layouts;
 use ncclbpf::util::Rng;
 use std::collections::HashMap;
+
+/// Base case count, scaled by `NCCLBPF_FUZZ_CASES` (which names the
+/// main generator's count; the other generators keep their ratio to
+/// it). The nightly CI job sets 4000 for a 10x sweep.
+fn fuzz_cases(default: usize) -> usize {
+    let scale: usize = std::env::var("NCCLBPF_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    (default * scale / 400).max(1)
+}
 
 fn jmp32_imm(op: u8, dst: u8, imm: i32, off: i16) -> Insn {
     Insn::new(class::JMP32 | src::K | op, dst, 0, off, imm)
@@ -176,7 +191,8 @@ fn differential_fuzz_verified_programs_interp_vs_jit() {
     let maps = HashMap::new();
     let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
     let mut jit_checked = 0;
-    for case in 0..400 {
+    let cases = fuzz_cases(400);
+    for case in 0..cases {
         let prog = gen_program(&mut rng);
         // every generated program must pass the same gate real policies do
         verifier::verify(&prog, ProgType::Tuner, &lay.tuner, &maps).unwrap_or_else(|e| {
@@ -200,7 +216,7 @@ fn differential_fuzz_verified_programs_interp_vs_jit() {
     }
     // on x86-64 every case must actually exercise the JIT
     if cfg!(all(unix, target_arch = "x86_64")) {
-        assert_eq!(jit_checked, 400);
+        assert_eq!(jit_checked, cases);
     }
 }
 
@@ -247,7 +263,8 @@ fn differential_call_programs_interp_vs_jit() {
     let maps = HashMap::new();
     let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
     let mut jit_checked = 0;
-    for case in 0..200 {
+    let cases = fuzz_cases(200);
+    for case in 0..cases {
         let prog = gen_call_program(&mut rng);
         verifier::verify(&prog, ProgType::Tuner, &lay.tuner, &maps).unwrap_or_else(|e| {
             panic!("case {}: unverifiable call program: {}\n{}", case, e, disasm(&prog))
@@ -269,8 +286,57 @@ fn differential_call_programs_interp_vs_jit() {
         }
     }
     if cfg!(all(unix, target_arch = "x86_64")) {
-        assert_eq!(jit_checked, 200);
+        assert_eq!(jit_checked, cases);
     }
+}
+
+/// Pruning-soundness differential: state-equivalence pruning must
+/// never change a verdict — not accept what exhaustive enumeration
+/// rejects (that would be an admitted bug class) and not reject what
+/// it accepts (precision widening gone wrong). Half the corpus is
+/// mutated toward rejection shapes (uninitialized reads, unguarded
+/// divides, scalar dereferences) so both verdict kinds are exercised;
+/// on a reject, the site and message must match exactly.
+#[test]
+fn prune_on_off_verdicts_agree() {
+    let mut rng = Rng::new(0x9009_2026);
+    let lay = layouts();
+    let maps = HashMap::new();
+    let mut rejects = 0usize;
+    for case in 0..fuzz_cases(200) {
+        let mut prog = gen_program(&mut rng);
+        if rng.below(2) == 0 {
+            let i = rng.below((prog.len() - 1) as u64) as usize;
+            match rng.below(3) {
+                0 => prog[i] = mov64_reg(0, 6 + rng.below(4) as u8), // r6..r9: uninit
+                1 => prog[i] = alu64_reg(alu::DIV, 0, rng.below(6) as u8), // unguarded /0
+                _ => prog[i] = ldx(msz::DW, 0, rng.below(6) as u8, 0), // scalar deref
+            }
+        }
+        let on = verifier::verify_with(&prog, ProgType::Tuner, &lay.tuner, &maps, Some(true));
+        let off = verifier::verify_with(&prog, ProgType::Tuner, &lay.tuner, &maps, Some(false));
+        match (&on, &off) {
+            (Ok(_), Ok(_)) => {}
+            (Err(a), Err(b)) => {
+                rejects += 1;
+                assert_eq!(
+                    (a.insn, &a.message),
+                    (b.insn, &b.message),
+                    "case {}: reject differs between prune modes\n{}",
+                    case,
+                    disasm(&prog)
+                );
+            }
+            _ => panic!(
+                "case {}: verdicts differ (prune-on ok={}, prune-off ok={})\n{}",
+                case,
+                on.is_ok(),
+                off.is_ok(),
+                disasm(&prog)
+            ),
+        }
+    }
+    assert!(rejects > 0, "mutation pass must exercise the reject path");
 }
 
 /// Determinism guard: the generator is seeded, so two runs produce the
@@ -355,7 +421,7 @@ fn differential_ringbuf_helpers_interp_vs_jit() {
     let lay = layouts();
     let mut verifier_maps = HashMap::new();
     verifier_maps.insert(RING_MAP_ID_SLOT, ring_def());
-    for case in 0..100 {
+    for case in 0..fuzz_cases(100) {
         let prog = gen_ringbuf_program(&mut rng);
         verifier::verify(&prog, ProgType::Profiler, &lay.profiler, &verifier_maps)
             .unwrap_or_else(|e| {

@@ -89,6 +89,44 @@ fn verify_accepts_safe_policy() {
     assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
     let out = stdout(&o);
     assert!(out.contains("VERIFIER ACCEPT"), "{}", out);
+    // the stats-lite success line scripts parse: OK <name> insns=<n> states=<n>
+    let ok_line = out
+        .lines()
+        .find(|l| l.starts_with("OK size_aware"))
+        .unwrap_or_else(|| panic!("missing OK line in:\n{}", out));
+    assert!(ok_line.contains(" insns=") && ok_line.contains(" states="), "{}", ok_line);
+    let insns: u64 = ok_line
+        .split(" insns=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable OK line: {}", ok_line));
+    assert!(insns > 0, "{}", ok_line);
+}
+
+/// `verify --stats`: the full verification-cost report (per-program
+/// insns processed, states pruned, peak states, wall time).
+#[test]
+fn verify_stats_reports_verifier_cost_counters() {
+    let p = policy("stress_channel_scorer.c");
+    let o = run(&["verify", p.to_str().unwrap(), "--stats"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("object: 1 programs"), "{}", out);
+    let stats_line = out
+        .lines()
+        .find(|l| l.starts_with("STATS stress_channel_scorer"))
+        .unwrap_or_else(|| panic!("missing STATS line in:\n{}", out));
+    for key in ["insns_processed=", "states_pruned=", "peak_states=", "verify_ns="] {
+        assert!(stats_line.contains(key), "missing {} in: {}", key, stats_line);
+    }
+    let pruned: u64 = stats_line
+        .split("states_pruned=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap();
+    assert!(pruned > 0, "stress policy must exercise pruning: {}", stats_line);
 }
 
 #[test]
@@ -144,11 +182,30 @@ fn safety_suite_green_end_to_end() {
     let o = run(&["safety"]);
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 7 safe accepted, all 10 unsafe rejected"), "{}", out);
-    // the three ringbuf reference-tracking classes are part of the suite
-    for name in ["ringbuf_leak", "ringbuf_use_after_submit", "ringbuf_oob"] {
+    assert!(out.contains("all 8 safe accepted, all 13 unsafe rejected"), "{}", out);
+    // the ringbuf reference-tracking and call-graph classes are in the suite
+    for name in ["ringbuf_leak", "ringbuf_use_after_submit", "ringbuf_oob", "call_recursion"] {
         assert!(out.contains(&format!("REJECT {}", name)), "{}", out);
     }
+    // the verification-stress corpus verifies under the budget
+    for name in ["stress_ladder64", "stress_channel_scorer"] {
+        assert!(out.contains(&format!("ACCEPT {}", name)), "{}", out);
+    }
+}
+
+/// With pruning disabled the safety verdicts must not change — the
+/// suite skips only the stress corpus (which needs pruning by design).
+#[test]
+fn safety_suite_green_with_pruning_disabled() {
+    let o = Command::new(bin())
+        .args(["safety"])
+        .env("NCCLBPF_VERIFIER_PRUNE", "0")
+        .output()
+        .expect("spawn");
+    assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
+    let out = stdout(&o);
+    assert!(out.contains("all 8 safe accepted, all 13 unsafe rejected"), "{}", out);
+    assert!(out.contains("SKIP: NCCLBPF_VERIFIER_PRUNE=0"), "{}", out);
 }
 
 /// `ncclbpf trace`: stream structured ring events end to end. The run
@@ -239,6 +296,7 @@ fn bench_writes_parseable_json_with_median_p99() {
         ("BENCH_traffic.json", 8),
         ("BENCH_ringbuf.json", 6),
         ("BENCH_calls.json", 4),
+        ("BENCH_verifier.json", 10),
     ] {
         let path = dir.join(file);
         let text = std::fs::read_to_string(&path)
@@ -280,4 +338,64 @@ fn bench_writes_parseable_json_with_median_p99() {
             );
         }
     }
+}
+
+/// The CI bench-regression gate end to end: comparing against an empty
+/// baseline dir is a documented no-op, `--bless` commits this run's
+/// JSON as the baselines, a re-compare is green, and a baseline with a
+/// wildly better median makes the gate exit non-zero.
+#[test]
+fn bench_compare_gate_blesses_and_flags_regressions() {
+    let root = std::env::temp_dir().join("ncclbpf_cli_bench_cmp");
+    let _ = std::fs::remove_dir_all(&root);
+    let out = root.join("fresh");
+    let baseline = root.join("baseline");
+    std::fs::create_dir_all(&baseline).unwrap();
+    let bench = |extra: &[&str]| {
+        let mut args = vec![
+            "bench",
+            "--out",
+            out.to_str().unwrap(),
+            "--quick",
+            "--calls",
+            "1000",
+            "--iters",
+            "2",
+            "--compare",
+            baseline.to_str().unwrap(),
+        ];
+        args.extend_from_slice(extra);
+        run(&args)
+    };
+
+    // 1. empty baseline dir: the gate reports and passes
+    let o = bench(&[]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    assert!(stdout(&o).contains("no BENCH_*.json baselines"), "{}", stdout(&o));
+
+    // 2. bless: this run's JSON becomes the committed baselines
+    let o = bench(&["--bless"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    assert!(stdout(&o).contains("blessed"), "{}", stdout(&o));
+    assert!(baseline.join("BENCH_verifier.json").exists());
+
+    // 3. compare against the just-blessed baselines with a huge
+    //    tolerance: green (the tolerance only needs to absorb run-to-run
+    //    noise on a shared machine, not real regressions)
+    let o = bench(&["--tolerance-pct", "100000"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    assert!(stdout(&o).contains("within 100000% median tolerance"), "{}", stdout(&o));
+
+    // 4. a baseline claiming an absurdly better median must trip the gate
+    std::fs::write(
+        baseline.join("BENCH_hotreload.json"),
+        r#"{"schema": 1, "name": "hotreload", "created_unix": 0, "git_sha": "test",
+            "machine": {"os": "test"},
+            "series": [{"label": "swap", "unit": "ns",
+                        "median": 0.000001, "p99": 0.000001, "mean": 0.000001}]}"#,
+    )
+    .unwrap();
+    let o = bench(&["--tolerance-pct", "100000"]);
+    assert_eq!(o.status.code(), Some(1), "gate must fail: {}", stdout(&o));
+    assert!(stderr(&o).contains("BENCH REGRESSION"), "{}", stderr(&o));
 }

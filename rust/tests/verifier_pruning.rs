@@ -1,0 +1,118 @@
+//! Acceptance gates for verifier state-equivalence pruning (§5.2
+//! scalability):
+//!
+//! - both stress policies verify with pruning ON and exhaust the
+//!   complexity budget with pruning OFF (the `prune` knob kept for
+//!   differential testing);
+//! - the full 13-program unsafe corpus is rejected identically in both
+//!   modes — pruning never admits a program the exhaustive verifier
+//!   rejects;
+//! - the safe corpus is accepted identically in both modes — precision
+//!   widening never produces a false reject;
+//! - `insns_processed` on the loop-heavy stress policy drops >= 5x
+//!   with pruning (the `verify --stats` regression gate).
+
+use ncclbpf::bpf::program::verify_object;
+use ncclbpf::bpf::verifier::COMPLEXITY_BUDGET;
+use ncclbpf::bpf::MapRegistry;
+use ncclbpf::host::ctx;
+use ncclbpf::host::policydir::{
+    build_named, build_unsafe, SAFE_POLICIES, STRESS_POLICIES, UNSAFE_POLICIES,
+};
+
+#[test]
+fn stress_policies_verify_with_pruning_and_exhaust_budget_without() {
+    let lay = ctx::layouts();
+    for (name, shape) in STRESS_POLICIES {
+        let obj = build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        let reg = MapRegistry::new();
+        let stats = verify_object(&obj, &reg, &lay, Some(true))
+            .unwrap_or_else(|e| panic!("{} ({}) must verify pruned: {}", name, shape, e));
+        let insns: u64 = stats.iter().map(|(_, i, _)| i.insns_processed).sum();
+        let pruned: u64 = stats.iter().map(|(_, i, _)| i.states_pruned).sum();
+        assert!(pruned > 0, "{}: pruning must fire", name);
+        assert!(
+            insns < COMPLEXITY_BUDGET,
+            "{}: {} insns processed must stay under the {} budget",
+            name,
+            insns,
+            COMPLEXITY_BUDGET
+        );
+
+        let reg = MapRegistry::new();
+        let err = verify_object(&obj, &reg, &lay, Some(false))
+            .expect_err(&format!("{} must exhaust the budget without pruning", name));
+        let msg = err.to_string();
+        assert!(
+            msg.contains("too complex") || msg.contains("unbounded loop"),
+            "{}: expected a complexity-budget rejection, got: {}",
+            name,
+            msg
+        );
+    }
+}
+
+/// The `verify --stats` regression gate: on the loop-heavy scorer the
+/// pruned cost must leave at least 5x headroom against the budget the
+/// exhaustive walk provably blows through.
+#[test]
+fn insns_processed_drops_5x_on_loop_heavy_stress_policy() {
+    let lay = ctx::layouts();
+    let obj = build_named("stress_channel_scorer").expect("stress_channel_scorer");
+    let reg = MapRegistry::new();
+    let stats = verify_object(&obj, &reg, &lay, Some(true)).expect("verifies with pruning");
+    let insns: u64 = stats.iter().map(|(_, i, _)| i.insns_processed).sum();
+    assert!(
+        insns * 5 <= COMPLEXITY_BUDGET,
+        "pruned cost {} must be at least 5x under the exhausted budget {}",
+        insns,
+        COMPLEXITY_BUDGET
+    );
+    let reg = MapRegistry::new();
+    assert!(
+        verify_object(&obj, &reg, &lay, Some(false)).is_err(),
+        "exhaustive enumeration must exceed the budget"
+    );
+}
+
+#[test]
+fn unsafe_corpus_rejected_identically_with_and_without_pruning() {
+    let lay = ctx::layouts();
+    for (name, needle) in UNSAFE_POLICIES {
+        let obj = build_unsafe(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        let mut msgs = Vec::new();
+        for prune in [true, false] {
+            let reg = MapRegistry::new();
+            let err = verify_object(&obj, &reg, &lay, Some(prune))
+                .expect_err(&format!("{} must be rejected (prune={})", name, prune));
+            let msg = err.to_string();
+            assert!(
+                msg.to_lowercase().contains(needle),
+                "{} (prune={}): expected '{}' in: {}",
+                name,
+                prune,
+                needle,
+                msg
+            );
+            msgs.push(msg);
+        }
+        assert_eq!(
+            msgs[0], msgs[1],
+            "{}: rejection must be identical in both prune modes",
+            name
+        );
+    }
+}
+
+#[test]
+fn safe_corpus_accepted_identically_with_and_without_pruning() {
+    let lay = ctx::layouts();
+    for name in SAFE_POLICIES {
+        let obj = build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        for prune in [true, false] {
+            let reg = MapRegistry::new();
+            let r = verify_object(&obj, &reg, &lay, Some(prune));
+            r.unwrap_or_else(|e| panic!("{} must verify (prune={}): {}", name, prune, e));
+        }
+    }
+}

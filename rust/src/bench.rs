@@ -15,8 +15,8 @@
 //! the same workload.
 
 use crate::bpf::maps::{Map, MapDef, MapKind};
-use crate::bpf::program::{load_asm, verify_object};
-use crate::bpf::MapRegistry;
+use crate::bpf::program::{load, load_asm};
+use crate::bpf::{LoadOptions, MapRegistry};
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, TunerPlugin};
 use crate::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology, MAX_CHANNELS};
 use crate::host::ctx::PolicyContext;
@@ -565,8 +565,10 @@ pub fn verifier_bench(opts: &BenchOpts) -> BenchReport {
         let mut peak = 0u64;
         for _ in 0..iters {
             let reg = MapRegistry::new();
-            let stats = verify_object(&obj, &reg, &lay, Some(true))
-                .unwrap_or_else(|e| panic!("{} must verify: {}", name, e));
+            let stats =
+                load(&obj, &reg, &lay, &LoadOptions::new().verify_only(true).prune(Some(true)))
+                    .unwrap_or_else(|e| panic!("{} must verify: {}", name, e))
+                    .verified;
             times.push(stats.iter().map(|(_, _, ns)| *ns as f64).sum::<f64>());
             insns = stats.iter().map(|(_, i, _)| i.insns_processed).sum();
             pruned = stats.iter().map(|(_, i, _)| i.states_pruned).sum();
@@ -578,6 +580,87 @@ pub fn verifier_bench(opts: &BenchOpts) -> BenchReport {
                 .with("insns_processed", insns as f64)
                 .with("states_pruned", pruned as f64)
                 .with("peak_states", peak as f64),
+        );
+    }
+    rep
+}
+
+/// BENCH_inline — the verifier-informed JIT inlining price list: the
+/// map-lookup tuner policies and the ringbuf profiler policy measured
+/// through the full hook path with call-site inlining on (the default)
+/// vs off (every helper through the generic trampoline), plus a
+/// native-Rust reference so the JIT-vs-native gap stays on the
+/// trajectory. The acceptance shape: every `<policy>_inline` median at
+/// or below its `<policy>_trampoline` twin.
+pub fn inline_bench(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("inline");
+    let args = decision_args(8 << 20);
+
+    // native reference: the adaptive policy's logic as ordinary Rust
+    let native = NativeAdaptive::default();
+    let (p50, p99, native_mean) = measure(opts.calls, || {
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0u32;
+        native.get_coll_info(&args, &mut cost, &mut ch);
+        std::hint::black_box((&cost, ch));
+    });
+    rep.push(Series::new("native_adaptive", "ns", p50, p99, native_mean));
+
+    // map-lookup tuner policies through the full decision path, one
+    // fresh host per mode so each policy is measured twice
+    for name in ["adaptive_channels", "latency_aware", "slo_enforcer"] {
+        for (mode, inline) in [("inline", None), ("trampoline", Some(false))] {
+            let mut host = NcclBpfHost::new();
+            host.set_load_options(LoadOptions::new().inline(inline));
+            let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            seed_policy_maps(&host, args.comm_id);
+            let (p50, p99, mean) = measure(opts.calls, || {
+                let mut cost = CostTable::all_sentinel();
+                let mut ch = 0u32;
+                host.tuner_decide(&args, &mut cost, &mut ch);
+                std::hint::black_box((&cost, ch));
+            });
+            let prog = host.tuner_program().expect("tuner installed");
+            let st = prog.jit_inline_stats().unwrap_or_default();
+            rep.push(
+                Series::new(format!("{}_{}", name, mode), "ns", p50, p99, mean)
+                    .with("jitted", if prog.is_jitted() { 1.0 } else { 0.0 })
+                    .with("delta_vs_native_ns", mean - native_mean)
+                    .with("inlined_lookups", st.inlined_lookups as f64)
+                    .with("direct_calls", st.direct_calls as f64)
+                    .with("trampoline_calls", st.trampoline_calls as f64),
+            );
+        }
+    }
+
+    // the ringbuf fast path: the `latency_events` profiler policy
+    // (bpf_ringbuf reserve/submit per event), with the ring drained in
+    // the loop so the measured path stays the steady-state reserve
+    for (mode, inline) in [("inline", None), ("trampoline", Some(false))] {
+        let mut host = NcclBpfHost::new();
+        host.set_load_options(LoadOptions::new().inline(inline));
+        host.install_object(&policydir::build_named("latency_events").expect("latency_events"))
+            .expect("latency_events must verify");
+        let ring = host.map("events").expect("ring map");
+        let ev = ProfilerEvent::CollEnd {
+            comm_id: 1,
+            seq: 0,
+            coll: CollType::AllReduce,
+            nbytes: 1 << 20,
+            cfg: CollConfig::new(Algo::Ring, Proto::Simple, 8),
+            ts_ns: 0,
+            latency_ns: 500_000,
+        };
+        let (p50, p99, mean) = measure(opts.calls, || {
+            host.profiler_handle(&ev);
+            ring.ringbuf_drain(&mut |b| {
+                std::hint::black_box(b);
+            });
+        });
+        rep.push(
+            Series::new(format!("latency_events_{}", mode), "ns", p50, p99, mean)
+                .with("includes_drain", 1.0),
         );
     }
     rep
@@ -751,6 +834,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         ringbuf_bench(opts),
         calls_bench(opts),
         verifier_bench(opts),
+        inline_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -938,6 +1022,42 @@ mod tests {
                 "{}: must verify under budget",
                 name
             );
+        }
+    }
+
+    #[test]
+    fn inline_bench_reports_on_off_pairs() {
+        let rep = inline_bench(&tiny());
+        // 1 native + 3 tuner policies x 2 modes + ringbuf x 2 modes
+        assert_eq!(rep.series.len(), 9);
+        for s in &rep.series {
+            assert!(s.median > 0.0 && s.p99 > 0.0 && s.mean > 0.0, "{}", s.label);
+            assert_eq!(s.unit, "ns");
+        }
+        for name in ["adaptive_channels", "latency_aware", "slo_enforcer", "latency_events"] {
+            for mode in ["inline", "trampoline"] {
+                assert!(
+                    rep.series.iter().any(|s| s.label == format!("{}_{}", name, mode)),
+                    "missing {}_{}",
+                    name,
+                    mode
+                );
+            }
+        }
+        // when the JIT is live, the trampoline build reports no inlined
+        // call sites and the inline build reports at least one (no p50
+        // ordering assertion here — that's the bench gate's job, and a
+        // loaded test harness makes single-run orderings noisy)
+        let find = |label: &str| rep.series.iter().find(|s| s.label == label).unwrap();
+        let field = |s: &Series, k: &str| {
+            s.extra.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        let on = find("adaptive_channels_inline");
+        let off = find("adaptive_channels_trampoline");
+        if field(on, "jitted") == 1.0 && field(off, "jitted") == 1.0 {
+            assert!(field(on, "inlined_lookups") + field(on, "direct_calls") > 0.0, "{:?}", on);
+            assert_eq!(field(off, "inlined_lookups") + field(off, "direct_calls"), 0.0);
+            assert!(field(off, "trampoline_calls") > 0.0);
         }
     }
 

@@ -10,7 +10,7 @@
 //! The engine dereferences raw pointers (ctx, stack, map values) without
 //! runtime checks, exactly like JIT-compiled eBPF: safety is established
 //! *statically* by [`super::verifier`]. The only public way to construct
-//! a runnable program is [`super::program::load_object`], which
+//! a runnable program is [`super::program::load`], which
 //! verifies first.
 
 use super::helpers::{id as hid, HelperEnv};
@@ -74,6 +74,14 @@ pub enum Op {
 /// because `lddw` collapses 2 slots into 1 op, we first build a slot→op
 /// index mapping.
 pub fn predecode(insns: &[Insn]) -> Result<Vec<Op>, String> {
+    predecode_mapped(insns).map(|(ops, _)| ops)
+}
+
+/// [`predecode`] that also returns the raw-slot → op-index mapping
+/// (`u32::MAX` marks lddw interiors). The verifier's per-instruction
+/// fact table is slot-indexed; the JIT consumes ops — this mapping is
+/// how `remap_facts` translates between the two.
+pub fn predecode_mapped(insns: &[Insn]) -> Result<(Vec<Op>, Vec<u32>), String> {
     // map raw slot index -> decoded index
     let mut slot2op = vec![u32::MAX; insns.len() + 1];
     let mut count = 0u32;
@@ -196,7 +204,30 @@ pub fn predecode(insns: &[Insn]) -> Result<Vec<Op>, String> {
         ops.push(op);
         i += 1;
     }
-    Ok(ops)
+    Ok((ops, slot2op))
+}
+
+/// Translate the verifier's slot-indexed [`InsnFacts`] table into an
+/// op-indexed one for the JIT, using the `slot2op` mapping from
+/// [`predecode_mapped`]. lddw interiors (`u32::MAX`) carry no facts.
+/// Returns an empty vec when `facts` is empty (fact emission was off) —
+/// the JIT treats that as "no facts, trampoline everything".
+pub fn remap_facts(
+    facts: &[super::verifier::InsnFacts],
+    slot2op: &[u32],
+    n_ops: usize,
+) -> Vec<super::verifier::InsnFacts> {
+    if facts.is_empty() {
+        return Vec::new();
+    }
+    let mut out = vec![super::verifier::InsnFacts::default(); n_ops];
+    for (slot, f) in facts.iter().enumerate() {
+        let op = slot2op.get(slot).copied().unwrap_or(u32::MAX);
+        if op != u32::MAX && (op as usize) < n_ops {
+            out[op as usize] = *f;
+        }
+    }
+    out
 }
 
 #[inline(always)]

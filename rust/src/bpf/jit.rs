@@ -33,11 +33,31 @@
 //! Any op the backend cannot compile aborts compilation and the program
 //! falls back to the pre-decoded interpreter — correctness never
 //! depends on the JIT (both engines only ever run verified code).
+//!
+//! **Verifier-informed inlining** ([`JitOptions`]): when the load path
+//! hands the per-op fact table from verification to
+//! [`JitProgram::compile_with`], helper-call sites the verifier proved
+//! safe are
+//! specialized — a constant-key `Array` lookup becomes an immediate
+//! address, a bounded-key lookup a load+scale with the index check
+//! elided, ringbuf submit/discard a handful of inline stores, and the
+//! remaining whitelisted helpers direct calls into per-helper entry
+//! points that skip the dispatch trampoline and argument shuffle.
+//! Every site without a proving fact keeps the generic trampoline,
+//! and `JitOptions::inline` (driven by `NCCLBPF_JIT_INLINE` at the
+//! CLI edge) turns the whole tier off, so the differential nets can
+//! pin interp == JIT-trampoline == JIT-inlined. Soundness argument:
+//! DESIGN.md §11 — facts are consequences of accepted verification,
+//! so the specialized code is refinement-equivalent to the trampoline
+//! path it replaces.
 
 use super::helpers::{id as hid, HelperEnv};
 use super::insn::{alu, jmp, size};
 use super::interp::{Op, MAX_TAIL_CALLS, TAIL_DEPTH};
+use super::maps::{Map, MapKind, RINGBUF_DISCARD_BIT, RINGBUF_HDR_SIZE, RINGBUF_LEN_MASK};
 use super::program::resolve_tail_call;
+use super::verifier::InsnFacts;
+use std::sync::Arc;
 
 /// Raw libc bindings for executable-memory management. The `libc`
 /// crate is not available offline, and these three symbols are part of
@@ -180,6 +200,109 @@ fn trampoline(helper: i32) -> Option<u64> {
     Some(f as usize as u64)
 }
 
+// -- direct-call entry points -------------------------------------------------
+//
+// At a BPF helper-call site r1–r5 already sit in rdi rsi rdx rcx r8 —
+// exactly the SysV argument slots — so once the verifier has proved
+// which map a site touches, a specialized entry point taking the BPF
+// arguments *directly* needs only `mov rdi, <map ptr>` emitted ahead
+// of the call: no argument shuffle, no helper-id dispatch, no linear
+// map scan. Each body replicates the corresponding `HelperEnv::call`
+// arm bit-for-bit (same slice sizes, same return codes) so the
+// differential net can hold inlined == trampoline == interpreter.
+// The embedded `*const Map` stays valid because the emitted code is
+// owned by a `LoadedProgram` that also owns the `HelperEnv` (and its
+// `Arc<Map>`s) it was compiled against.
+
+unsafe extern "C" fn drct_lookup(m: *const Map, key: *const u8) -> u64 {
+    let m = &*m;
+    let key = std::slice::from_raw_parts(key, m.def.key_size as usize);
+    m.lookup(key) as u64
+}
+
+unsafe extern "C" fn drct_update(m: *const Map, key: *const u8, val: *const u8) -> u64 {
+    let m = &*m;
+    let key = std::slice::from_raw_parts(key, m.def.key_size as usize);
+    let val = std::slice::from_raw_parts(val, m.def.value_size as usize);
+    match m.update(key, val) {
+        Ok(()) => 0,
+        Err(_) => (-1i64) as u64,
+    }
+}
+
+unsafe extern "C" fn drct_delete(m: *const Map, key: *const u8) -> u64 {
+    let m = &*m;
+    let key = std::slice::from_raw_parts(key, m.def.key_size as usize);
+    match m.delete(key) {
+        Ok(true) => 0,
+        _ => (-1i64) as u64,
+    }
+}
+
+unsafe extern "C" fn drct_rb_reserve(m: *const Map, size: u64) -> u64 {
+    (*m).ringbuf_reserve(size) as u64
+}
+
+unsafe extern "C" fn drct_rb_output(m: *const Map, data: *const u8, len: u64) -> u64 {
+    let bytes = std::slice::from_raw_parts(data, len as usize);
+    (*m).ringbuf_output(bytes) as u64
+}
+
+unsafe extern "C" fn drct_rb_query(m: *const Map, flag: u64) -> u64 {
+    (*m).ringbuf_query(flag)
+}
+
+unsafe extern "C" fn drct_ktime() -> u64 {
+    super::helpers::ktime_get_ns()
+}
+
+unsafe extern "C" fn drct_prandom() -> u64 {
+    super::helpers::prandom_u32() as u64
+}
+
+unsafe extern "C" fn drct_cpuid() -> u64 {
+    Map::current_cpu() as u64
+}
+
+/// Codegen options for [`JitProgram::compile_with`].
+#[derive(Clone, Copy, Default)]
+pub struct JitOptions<'a> {
+    /// Per-op verifier fact table (op-indexed — raw slot-indexed facts
+    /// from [`super::verifier::VerifyInfo`] must first go through
+    /// [`super::interp::remap_facts`]). `None` disables specialization.
+    pub facts: Option<&'a [InsnFacts]>,
+    /// Helper environment the program will run against, used to
+    /// resolve map ids to live map pointers at compile time. Inlined
+    /// code embeds those pointers, so the program must only ever run
+    /// against this environment (the load path guarantees it:
+    /// `LoadedProgram` owns both).
+    pub env: Option<&'a HelperEnv>,
+    /// Tri-state inlining toggle: `None` means on whenever `facts`
+    /// and `env` are both present; `Some(false)` forces every call
+    /// site through the generic trampoline (the `NCCLBPF_JIT_INLINE=0`
+    /// path, threaded from the CLI edge).
+    pub inline: Option<bool>,
+}
+
+/// Per-site codegen decisions made while compiling one program —
+/// the JIT-side mirror of the verifier's `inline_candidates` /
+/// `bounds_elided` counters, reported by `BENCH_inline.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JitInlineStats {
+    /// `Array` lookups compiled to base+offset address computation.
+    pub inlined_lookups: u64,
+    /// Ringbuf submit/discard sites compiled to inline header stores.
+    pub inlined_ringbuf: u64,
+    /// Helper sites compiled to direct calls into specialized entry
+    /// points (per-cpu/hash lookups, updates, reserve, output, ...).
+    pub direct_calls: u64,
+    /// Array index checks elided because the verifier bounded the key
+    /// below `max_entries`.
+    pub bounds_elided: u64,
+    /// Call sites that kept the generic dispatch trampoline.
+    pub trampoline_calls: u64,
+}
+
 // -- emitter -------------------------------------------------------------------
 
 struct Emit {
@@ -308,6 +431,222 @@ fn emit_call_shuffle(e: &mut Emit, target: u64) {
     e.modrm(0b11, 2, R11);
 }
 
+/// Direct near call to a specialized entry point: BPF r1–r5 already
+/// sit in the SysV argument slots, so only the resolved map pointer
+/// (when the target takes one) needs to be materialized into arg 1.
+fn emit_direct_call(e: &mut Emit, map: Option<u64>, target: u64) {
+    if let Some(p) = map {
+        e.mov_imm(RDI, p as i64);
+    }
+    e.mov_imm(R11, target as i64);
+    // call r11
+    e.u8(0x41);
+    e.u8(0xff);
+    e.modrm(0b11, 2, R11);
+}
+
+/// Inline `bpf_ringbuf_submit`/`discard`: the record header is the
+/// u32 at `data - 8`; committing is one release store of the length
+/// with the busy bit clear (plus the discard bit for discard) — on
+/// x86-64 a plain 32-bit mov *is* a release store, so the whole
+/// helper is four instructions and r0 = 0, exactly what
+/// `Map::ringbuf_submit`/`ringbuf_discard` do.
+fn emit_ringbuf_release(e: &mut Emit, discard: bool) {
+    let hdr_off = -(RINGBUF_HDR_SIZE as i32);
+    // mov r11d, [rdi + hdr_off]
+    e.rex(false, R11, RDI);
+    e.u8(0x8b);
+    e.mem(R11, RDI, hdr_off);
+    // and r11d, LEN_MASK (clears busy + discard bits)
+    e.rex(false, 0, R11);
+    e.u8(0x81);
+    e.modrm(0b11, 4, R11);
+    e.u32(RINGBUF_LEN_MASK);
+    if discard {
+        // or r11d, DISCARD_BIT
+        e.rex(false, 0, R11);
+        e.u8(0x81);
+        e.modrm(0b11, 1, R11);
+        e.u32(RINGBUF_DISCARD_BIT);
+    }
+    // mov [rdi + hdr_off], r11d — the committing release store
+    e.rex(false, R11, RDI);
+    e.u8(0x89);
+    e.mem(R11, RDI, hdr_off);
+    // xor eax, eax — the helper returns 0
+    e.alu_rr(0x31, RAX, RAX, false);
+}
+
+/// Inline an `Array` lookup at a site where the verifier proved the
+/// map constant. Three tiers, cheapest first: constant key → the
+/// element address is a single immediate (index check discharged at
+/// verification time); key bounded below `max_entries` → load + scale
+/// with the index check elided; key bounded but not below capacity →
+/// load + check + scale (still no dispatch). Returns false when no
+/// key fact exists — the caller falls back to a direct call or the
+/// trampoline, which is the "non-constant map index" fallback the
+/// test suite pins.
+fn emit_array_lookup(e: &mut Emit, m: &Map, f: &InsnFacts, stats: &mut JitInlineStats) -> bool {
+    let base = m.value_base_ptr() as u64;
+    let vsize = m.def.value_size as u64;
+    let n = m.def.max_entries as u64;
+    if vsize == 0 || vsize > i32::MAX as u64 {
+        return false;
+    }
+    if let Some(k) = f.const_key {
+        if k < n {
+            e.mov_imm(RAX, (base + k * vsize) as i64);
+        } else {
+            // constant out-of-range index: lookup is statically null
+            e.alu_rr(0x31, RAX, RAX, false);
+        }
+        stats.inlined_lookups += 1;
+        stats.bounds_elided += 1;
+        return true;
+    }
+    let Some(umax) = f.key_umax else { return false };
+    // mov eax, dword [rsi] — the verified 4-byte key behind BPF r2
+    e.rex(false, RAX, RSI);
+    e.u8(0x8b);
+    e.mem(RAX, RSI, 0);
+    let mut done_patch = None;
+    if umax >= n {
+        // cmp eax, max_entries; jb .in; xor eax, eax; jmp .done; .in:
+        e.alu_imm(7, RAX, m.def.max_entries as i32, false);
+        e.u8(0x72); // jb rel8
+        let jb = e.code.len();
+        e.u8(0);
+        e.alu_rr(0x31, RAX, RAX, false);
+        e.u8(0xeb); // jmp rel8
+        let jmp = e.code.len();
+        e.u8(0);
+        let in_off = e.code.len();
+        e.code[jb] = (in_off - (jb + 1)) as u8;
+        done_patch = Some(jmp);
+    } else {
+        stats.bounds_elided += 1;
+    }
+    // imul rax, rax, value_size
+    e.rex(true, RAX, RAX);
+    e.u8(0x69);
+    e.modrm(0b11, RAX, RAX);
+    e.u32(vsize as u32);
+    e.mov_imm(R11, base as i64);
+    e.alu_rr(0x01, RAX, R11, true); // add rax, r11
+    if let Some(jmp) = done_patch {
+        let done = e.code.len();
+        e.code[jmp] = (done - (jmp + 1)) as u8;
+    }
+    stats.inlined_lookups += 1;
+    true
+}
+
+/// Emit specialized code for one helper-call site using the
+/// verifier's facts. Returns false when no sound specialization
+/// applies — the caller keeps the generic trampoline. Every arm is
+/// guarded on `f.direct_call` (the verifier's "argument types permit
+/// a direct call on every path" proof), so a site reached with
+/// conflicting maps or a released ringbuf record never specializes.
+fn emit_inline_call(
+    e: &mut Emit,
+    helper: i32,
+    f: &InsnFacts,
+    env: &HelperEnv,
+    stats: &mut JitInlineStats,
+) -> bool {
+    if !f.direct_call {
+        return false;
+    }
+    let map = f.map_id.and_then(|id| env.map_by_id(id));
+    let map_ptr = map.map(|m| Arc::as_ptr(m) as u64);
+    match helper {
+        hid::RINGBUF_SUBMIT | hid::RINGBUF_DISCARD => {
+            emit_ringbuf_release(e, helper == hid::RINGBUF_DISCARD);
+            stats.inlined_ringbuf += 1;
+            true
+        }
+        hid::KTIME_GET_NS => {
+            emit_direct_call(e, None, drct_ktime as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::GET_PRANDOM_U32 => {
+            emit_direct_call(e, None, drct_prandom as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::GET_SMP_PROCESSOR_ID => {
+            emit_direct_call(e, None, drct_cpuid as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::MAP_LOOKUP_ELEM => {
+            let Some(m) = map else { return false };
+            if m.def.kind == MapKind::Array && emit_array_lookup(e, m, f, stats) {
+                return true;
+            }
+            match m.def.kind {
+                // per-cpu lookups resolve the pinned cpu slot (a
+                // thread-local read) inside the entry point — a direct
+                // call, not pure address arithmetic; hash lookups probe
+                MapKind::Array | MapKind::PerCpuArray | MapKind::Hash => {
+                    emit_direct_call(e, map_ptr, drct_lookup as usize as u64);
+                    stats.direct_calls += 1;
+                    true
+                }
+                _ => false,
+            }
+        }
+        hid::MAP_UPDATE_ELEM => {
+            if map.is_none() {
+                return false;
+            }
+            emit_direct_call(e, map_ptr, drct_update as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::MAP_DELETE_ELEM => {
+            if map.is_none() {
+                return false;
+            }
+            emit_direct_call(e, map_ptr, drct_delete as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::RINGBUF_RESERVE => {
+            let Some(m) = map else { return false };
+            if m.def.kind != MapKind::RingBuf {
+                return false;
+            }
+            // the entry point is the slow path too: reservation takes
+            // the ring lock and handles wrap, so "fast path" here means
+            // skipping dispatch + map scan + shuffle, not the lock
+            emit_direct_call(e, map_ptr, drct_rb_reserve as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::RINGBUF_OUTPUT => {
+            let Some(m) = map else { return false };
+            if m.def.kind != MapKind::RingBuf {
+                return false;
+            }
+            emit_direct_call(e, map_ptr, drct_rb_output as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        hid::RINGBUF_QUERY => {
+            let Some(m) = map else { return false };
+            if m.def.kind != MapKind::RingBuf {
+                return false;
+            }
+            emit_direct_call(e, map_ptr, drct_rb_query as usize as u64);
+            stats.direct_calls += 1;
+            true
+        }
+        _ => false,
+    }
+}
+
 /// Tear down the main frame: add rsp, FRAME; pop callee-saved; ret.
 fn emit_main_epilogue(e: &mut Emit) {
     e.alu_imm(0, RSP, FRAME, true);
@@ -352,6 +691,7 @@ fn emit_subprog_epilogue(e: &mut Emit) {
 pub struct JitProgram {
     code: *mut u8,
     len: usize,
+    stats: JitInlineStats,
 }
 
 unsafe impl Send for JitProgram {}
@@ -367,23 +707,44 @@ impl Drop for JitProgram {
 
 impl JitProgram {
     /// Attempt to compile; `None` falls back to the interpreter.
+    /// Trampoline-only codegen — see [`JitProgram::compile_with`] for
+    /// the verifier-informed inlining tier.
     pub fn compile(ops: &[Op]) -> Option<JitProgram> {
+        Self::compile_with(ops, &JitOptions::default())
+    }
+
+    /// Attempt to compile with explicit [`JitOptions`]; `None` falls
+    /// back to the interpreter.
+    pub fn compile_with(ops: &[Op], opts: &JitOptions) -> Option<JitProgram> {
         if std::env::var_os("NCCLBPF_NO_JIT").is_some() {
             return None;
         }
-        Self::compile_unchecked(ops)
+        Self::compile_with_unchecked(ops, opts)
     }
 
     /// Compile regardless of the `NCCLBPF_NO_JIT` gate. Used by tests
     /// so they do not have to mutate process-global environment state
     /// (which would race with concurrently running tests).
     pub fn compile_unchecked(ops: &[Op]) -> Option<JitProgram> {
+        Self::compile_with_unchecked(ops, &JitOptions::default())
+    }
+
+    /// [`JitProgram::compile_with`] without the `NCCLBPF_NO_JIT` gate.
+    pub fn compile_with_unchecked(ops: &[Op], opts: &JitOptions) -> Option<JitProgram> {
         if !cfg!(all(unix, target_arch = "x86_64")) {
             // the emitter below produces x86-64 SysV code and the
             // executable mapping uses POSIX mmap; everything else
             // falls back to the pre-decoded interpreter
             return None;
         }
+        // inlining needs a valid per-op fact table *and* the live maps
+        // to resolve pointers against; anything less keeps every call
+        // site on the generic trampoline
+        let facts = match (opts.inline.unwrap_or(true), opts.env, opts.facts) {
+            (true, Some(_), Some(f)) if f.len() == ops.len() => Some(f),
+            _ => None,
+        };
+        let mut stats = JitInlineStats::default();
         let mut e = Emit::new();
         // prologue
         for r in [RBX, R12, R13, R14, R15, RBP] {
@@ -586,8 +947,15 @@ impl JitProgram {
                     e.code[jz] = (end - (jz + 1)) as u8;
                 }
                 Op::Call { helper } => {
-                    let target = trampoline(helper)?;
-                    emit_call_shuffle(&mut e, target);
+                    let mut inlined = false;
+                    if let (Some(f), Some(env)) = (facts, opts.env) {
+                        inlined = emit_inline_call(&mut e, helper, &f[i], env, &mut stats);
+                    }
+                    if !inlined {
+                        let target = trampoline(helper)?;
+                        emit_call_shuffle(&mut e, target);
+                        stats.trampoline_calls += 1;
+                    }
                 }
                 Op::CallPseudo { t } => {
                     // near call; the callee's prologue saves BPF r6-r9
@@ -637,12 +1005,17 @@ impl JitProgram {
                 sys::munmap(mem, len);
                 return None;
             }
-            Some(JitProgram { code: mem as *mut u8, len })
+            Some(JitProgram { code: mem as *mut u8, len, stats })
         }
     }
 
     /// # Safety
-    /// Same contract as [`super::interp::execute`].
+    /// Same contract as [`super::interp::execute`]. Additionally, if
+    /// the program was compiled with [`JitOptions::env`], the emitted
+    /// code embeds raw pointers into that environment's maps — it must
+    /// only be called while those maps are alive, and semantically
+    /// `env` should be that same environment (the load path satisfies
+    /// both: `LoadedProgram` owns the env its JIT was compiled with).
     #[inline]
     pub unsafe fn call(&self, ctx: *mut u8, env: &HelperEnv) -> u64 {
         let f: unsafe extern "C" fn(*mut u8, *const HelperEnv) -> u64 =
@@ -653,6 +1026,12 @@ impl JitProgram {
     /// Bytes of emitted machine code (mapped length).
     pub fn code_len(&self) -> usize {
         self.len
+    }
+
+    /// Per-site codegen decisions made during compilation (all zero
+    /// for trampoline-only compiles).
+    pub fn inline_stats(&self) -> JitInlineStats {
+        self.stats
     }
 }
 
@@ -820,6 +1199,7 @@ mod tests {
     use crate::bpf::insn::{self, *};
     use crate::bpf::interp;
     use crate::bpf::maps::{MapDef, MapKind, MapRegistry};
+    use crate::bpf::verifier;
     use crate::util::Rng;
 
     fn env() -> HelperEnv {
@@ -1129,6 +1509,217 @@ mod tests {
             let got = unsafe { j.call(std::ptr::null_mut(), &env()) };
             assert_eq!(got, want, "case {} program:\n{}", case, insn::disasm(&p));
         }
+    }
+
+    /// verify → facts → predecode → remap: the exact fact pipeline
+    /// the load path runs, for driving `compile_with_unchecked`.
+    fn ops_and_facts(
+        prog: &[Insn],
+        pt: crate::bpf::helpers::ProgType,
+        ctx: &verifier::CtxLayout,
+        maps: &std::collections::HashMap<u32, MapDef>,
+    ) -> (Vec<Op>, Vec<InsnFacts>) {
+        let info = verifier::verify(prog, pt, ctx, maps).expect("verifies");
+        let (ops, slot2op) = interp::predecode_mapped(prog).unwrap();
+        let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
+        (ops, facts)
+    }
+
+    fn tuner_ctx() -> verifier::CtxLayout {
+        verifier::CtxLayout { size: 64, read: vec![(0, 64)], write: vec![(32, 32)] }
+    }
+
+    fn array_fixture(value_at_2: u64) -> (MapRegistry, u32, std::collections::HashMap<u32, MapDef>)
+    {
+        let reg = MapRegistry::new();
+        let m = reg
+            .create_or_get(&MapDef {
+                name: "m".into(),
+                kind: MapKind::Array,
+                key_size: 4,
+                value_size: 8,
+                max_entries: 4,
+            })
+            .unwrap();
+        m.write_u64(2, value_at_2).unwrap();
+        let id = m.id;
+        let mut defs = std::collections::HashMap::new();
+        defs.insert(id, m.def.clone());
+        (reg, id, defs)
+    }
+
+    /// Trailer shared by the lookup tests: null-check r0, return the
+    /// looked-up u64 (or 0 on null).
+    fn lookup_tail(p: &mut Vec<Insn>) {
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 0, 0, 0));
+        p.push(exit());
+    }
+
+    #[test]
+    fn inline_const_key_lookup_matches_trampoline_and_interp() {
+        let (reg, id, defs) = array_fixture(777);
+        let henv = HelperEnv::new(&reg, &[id]).unwrap();
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, id));
+        p.push(st_imm(size::DW, 10, -8, 2)); // tracked spill → const key 2
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -8));
+        p.push(insn::call(1));
+        lookup_tail(&mut p);
+        let (ops, facts) =
+            ops_and_facts(&p, crate::bpf::helpers::ProgType::Tuner, &tuner_ctx(), &defs);
+        let opts = JitOptions { facts: Some(&facts), env: Some(&henv), inline: None };
+        let jin = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+        let joff =
+            JitProgram::compile_with_unchecked(&ops, &JitOptions { inline: Some(false), ..opts })
+                .expect("jit");
+        let want = unsafe { interp::execute(&ops, std::ptr::null_mut(), &henv) };
+        assert_eq!(want, 777);
+        assert_eq!(unsafe { jin.call(std::ptr::null_mut(), &henv) }, want);
+        assert_eq!(unsafe { joff.call(std::ptr::null_mut(), &henv) }, want);
+        let s = jin.inline_stats();
+        assert_eq!(s.inlined_lookups, 1, "const-key lookup must address-inline");
+        assert_eq!(s.bounds_elided, 1, "constant in-range index discharges the check");
+        assert_eq!(s.trampoline_calls, 0);
+        assert_eq!(
+            joff.inline_stats(),
+            JitInlineStats { trampoline_calls: 1, ..JitInlineStats::default() },
+            "inline=Some(false) must keep every site on the trampoline"
+        );
+    }
+
+    #[test]
+    fn nonconstant_key_falls_back_to_generic_call() {
+        // a 4-byte store is untracked by the spill model, so the
+        // verifier emits no key fact — the site must NOT address-inline
+        // (it falls back to the generic direct-call/trampoline tier)
+        let (reg, id, defs) = array_fixture(555);
+        let henv = HelperEnv::new(&reg, &[id]).unwrap();
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, id));
+        p.push(st_imm(size::W, 10, -8, 2)); // untracked: no key fact
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -8));
+        p.push(insn::call(1));
+        lookup_tail(&mut p);
+        let (ops, facts) =
+            ops_and_facts(&p, crate::bpf::helpers::ProgType::Tuner, &tuner_ctx(), &defs);
+        let opts = JitOptions { facts: Some(&facts), env: Some(&henv), inline: None };
+        let jin = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+        let want = unsafe { interp::execute(&ops, std::ptr::null_mut(), &henv) };
+        assert_eq!(want, 555);
+        assert_eq!(unsafe { jin.call(std::ptr::null_mut(), &henv) }, want);
+        let s = jin.inline_stats();
+        assert_eq!(s.inlined_lookups, 0, "no key fact → no address inlining");
+        assert_eq!(s.bounds_elided, 0);
+        assert_eq!(s.direct_calls, 1, "known map still skips dispatch via direct call");
+    }
+
+    #[test]
+    fn undischarged_bound_keeps_index_check() {
+        // key bounded to [0,9] but max_entries is 4: the bound is NOT
+        // discharged, so the inlined code must keep the cmp — an
+        // out-of-capacity runtime index still observes a null lookup
+        let (reg, id, defs) = array_fixture(999);
+        let henv = HelperEnv::new(&reg, &[id]).unwrap();
+        let mut p = vec![];
+        p.extend(ld_map_fd(6, id)); // 0-1
+        p.push(ldx(size::W, 3, 1, 0)); // 2: r3 = ctx[0]
+        p.push(jmp_imm(jmp::JGT, 3, 9, 10)); // 3: -> 14 (out)
+        p.push(stx(size::DW, 10, 3, -8)); // 4: tracked spill, umax 9
+        p.push(mov64_reg(1, 6)); // 5
+        p.push(mov64_reg(2, 10)); // 6
+        p.push(alu64_imm(alu::ADD, 2, -8)); // 7
+        p.push(insn::call(1)); // 8
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2)); // 9: -> 12
+        p.push(mov64_imm(0, 0)); // 10
+        p.push(exit()); // 11
+        p.push(ldx(size::DW, 0, 0, 0)); // 12
+        p.push(exit()); // 13
+        p.push(mov64_imm(0, 42)); // 14: out
+        p.push(exit()); // 15
+        let (ops, facts) =
+            ops_and_facts(&p, crate::bpf::helpers::ProgType::Tuner, &tuner_ctx(), &defs);
+        let opts = JitOptions { facts: Some(&facts), env: Some(&henv), inline: None };
+        let jin = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+        let joff =
+            JitProgram::compile_with_unchecked(&ops, &JitOptions { inline: Some(false), ..opts })
+                .expect("jit");
+        let s = jin.inline_stats();
+        assert_eq!(s.inlined_lookups, 1, "bounded key still address-inlines");
+        assert_eq!(s.bounds_elided, 0, "undischarged bound must keep the check");
+        // in-capacity index → the stored value; out-of-capacity (but
+        // in-bound) index → null path; both engines and modes agree
+        for idx in [2u32, 5u32] {
+            let mut ctx = [0u8; 64];
+            ctx[0..4].copy_from_slice(&idx.to_le_bytes());
+            let want = unsafe { interp::execute(&ops, ctx.as_mut_ptr(), &henv) };
+            assert_eq!(want, if idx == 2 { 999 } else { 0 });
+            assert_eq!(unsafe { jin.call(ctx.as_mut_ptr(), &henv) }, want, "idx {}", idx);
+            assert_eq!(unsafe { joff.call(ctx.as_mut_ptr(), &henv) }, want, "idx {}", idx);
+        }
+    }
+
+    #[test]
+    fn inline_ringbuf_submit_matches_trampoline_bytes() {
+        let reg = MapRegistry::new();
+        let m = reg
+            .create_or_get(&MapDef {
+                name: "rb".into(),
+                kind: MapKind::RingBuf,
+                key_size: 0,
+                value_size: 0,
+                max_entries: 4096,
+            })
+            .unwrap();
+        let henv = HelperEnv::new(&reg, &[m.id]).unwrap();
+        let mut defs = std::collections::HashMap::new();
+        defs.insert(m.id, m.def.clone());
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, m.id));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(insn::call(131));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_reg(6, 0));
+        p.push(st_imm(size::DW, 6, 0, 111));
+        p.push(st_imm(size::DW, 6, 8, 222));
+        p.push(mov64_reg(1, 6));
+        p.push(mov64_imm(2, 0));
+        p.push(insn::call(132));
+        p.push(mov64_imm(0, 1));
+        p.push(exit());
+        let prof = verifier::CtxLayout { size: 32, read: vec![(0, 32)], write: vec![] };
+        let (ops, facts) =
+            ops_and_facts(&p, crate::bpf::helpers::ProgType::Profiler, &prof, &defs);
+        let opts = JitOptions { facts: Some(&facts), env: Some(&henv), inline: None };
+        let jin = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+        let joff =
+            JitProgram::compile_with_unchecked(&ops, &JitOptions { inline: Some(false), ..opts })
+                .expect("jit");
+        let s = jin.inline_stats();
+        assert_eq!(s.inlined_ringbuf, 1, "submit must inline to header stores");
+        assert_eq!(s.direct_calls, 1, "reserve goes through the direct entry point");
+        assert_eq!(joff.inline_stats().trampoline_calls, 2);
+        let drain = |label: &str| {
+            let mut got = vec![];
+            m.ringbuf_drain(&mut |b| {
+                got.push(u64::from_le_bytes(b[..8].try_into().unwrap()));
+                got.push(u64::from_le_bytes(b[8..16].try_into().unwrap()));
+            });
+            assert_eq!(got, vec![111, 222], "{}", label);
+        };
+        assert_eq!(unsafe { jin.call(std::ptr::null_mut(), &henv) }, 1);
+        drain("inlined");
+        assert_eq!(unsafe { joff.call(std::ptr::null_mut(), &henv) }, 1);
+        drain("trampoline");
+        assert_eq!(unsafe { interp::execute(&ops, std::ptr::null_mut(), &henv) }, 1);
+        drain("interp");
     }
 
     #[test]

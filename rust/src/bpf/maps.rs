@@ -366,6 +366,17 @@ impl Map {
         unsafe { self.values.as_ptr().add(index * self.def.value_size as usize) as *mut u8 }
     }
 
+    /// Base pointer of the contiguous value storage (`Array` /
+    /// `PerCpuArray` element 0). Storage is allocated once at creation
+    /// and never reallocated, so the pointer is stable for the map's
+    /// lifetime — the contract that lets the JIT embed it as an
+    /// immediate in inlined array-lookup code (the emitted code is
+    /// owned by a `LoadedProgram` that also owns an `Arc` to this map).
+    #[inline]
+    pub(crate) fn value_base_ptr(&self) -> *mut u8 {
+        self.values.as_ptr() as *mut u8
+    }
+
     #[inline]
     fn key_ptr_at(&self, slot: usize) -> *mut u8 {
         unsafe { self.keys.as_ptr().add(slot * self.def.key_size as usize) as *mut u8 }

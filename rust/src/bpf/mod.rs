@@ -2,9 +2,10 @@
 //! embeds into the collective library's plugin hooks.
 //!
 //! Pipeline: author (restricted C via [`crate::bpfc`], or [`asm`]) →
-//! [`object`] container → [`program::load_object`] (relocate → verify
+//! [`object`] container → [`program::load`] (relocate → verify
 //! via [`verifier`] → pre-decode via [`interp`] / native-compile via
-//! [`jit`]) → execute against typed [`maps`] and whitelisted
+//! [`jit`], with the verifier's fact table driving call-site
+//! inlining) → execute against typed [`maps`] and whitelisted
 //! [`helpers`].
 #![deny(missing_docs)]
 
@@ -19,7 +20,12 @@ pub mod program;
 pub mod verifier;
 
 pub use helpers::{PrintkSink, ProgType};
+pub use jit::JitInlineStats;
 pub use maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 pub use object::Object;
-pub use program::{prog_array_update, verify_object, CtxLayouts, LoadError, LoadedProgram};
-pub use verifier::{CtxLayout, VerifierStats, VerifyError, VerifyInfo};
+#[allow(deprecated)]
+pub use program::verify_object;
+pub use program::{
+    load, prog_array_update, CtxLayouts, LoadError, LoadOptions, LoadOutcome, LoadedProgram,
+};
+pub use verifier::{CtxLayout, InsnFacts, VerifierConfig, VerifierStats, VerifyError, VerifyInfo};

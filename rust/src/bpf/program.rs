@@ -8,10 +8,10 @@
 use super::helpers::{HelperEnv, PrintkSink, ProgType};
 use super::insn::{pseudo, Insn};
 use super::interp::{self, Op};
-use super::jit::JitProgram;
+use super::jit::{JitInlineStats, JitOptions, JitProgram};
 use super::maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 use super::object::{ObjProgram, Object};
-use super::verifier::{self, CtxLayout, VerifierStats, VerifyError, VerifyInfo};
+use super::verifier::{self, CtxLayout, VerifierConfig, VerifierStats, VerifyError, VerifyInfo};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -145,6 +145,83 @@ impl LoadedProgram {
     pub fn verifier_stats(&self) -> VerifierStats {
         self.info.stats(self.stats.verify_ns)
     }
+
+    /// Per-site JIT codegen decisions (inlined lookups, direct calls,
+    /// elided checks) — `None` when the program runs interpreted.
+    pub fn jit_inline_stats(&self) -> Option<JitInlineStats> {
+        self.jit.as_ref().map(|j| j.inline_stats())
+    }
+}
+
+/// Options for [`load`] — the one public load/verify entry point.
+/// Builder-style; the default is "verify with facts, compile with
+/// inlining, no printk sink":
+///
+/// ```text
+/// load(&obj, &reg, &layouts, &LoadOptions::new())                      // plain load
+/// load(&obj, &reg, &layouts, &LoadOptions::new().sink(Some(s)))       // host load
+/// load(&obj, &reg, &layouts, &LoadOptions::new().verify_only(true))   // verify probe
+/// load(&obj, &reg, &layouts, &LoadOptions::new().inline(Some(false))) // trampoline JIT
+/// ```
+///
+/// Environment overrides (`NCCLBPF_VERIFIER_PRUNE`,
+/// `NCCLBPF_JIT_INLINE`) are parsed once at the CLI edge and threaded
+/// in here — nothing under `bpf/` reads them.
+#[derive(Clone, Default)]
+pub struct LoadOptions {
+    /// `bpf_trace_printk` sink loaded programs route output through
+    /// (`None` keeps the stderr default).
+    pub sink: Option<Arc<PrintkSink>>,
+    /// verifier knobs: pruning override, complexity budget, fact
+    /// emission.
+    pub verifier: VerifierConfig,
+    /// JIT inlining toggle: `None` = on whenever facts are available,
+    /// `Some(false)` = trampoline-only codegen (the
+    /// `NCCLBPF_JIT_INLINE=0` path).
+    pub inline: Option<bool>,
+    /// verify without compiling or installing anything (the `ncclbpf
+    /// verify` probe): [`LoadOutcome::programs`] stays empty.
+    pub verify_only: bool,
+}
+
+impl LoadOptions {
+    /// Default options (see type-level docs).
+    pub fn new() -> LoadOptions {
+        LoadOptions::default()
+    }
+    /// Route `bpf_trace_printk` output through `sink`.
+    pub fn sink(mut self, sink: Option<Arc<PrintkSink>>) -> LoadOptions {
+        self.sink = sink;
+        self
+    }
+    /// Override verifier state pruning (`None` keeps the default).
+    pub fn prune(mut self, prune: Option<bool>) -> LoadOptions {
+        self.verifier.prune = prune;
+        self
+    }
+    /// Override verifier-informed JIT inlining (`None` keeps it on).
+    pub fn inline(mut self, inline: Option<bool>) -> LoadOptions {
+        self.inline = inline;
+        self
+    }
+    /// Verify only — skip compilation and installation.
+    pub fn verify_only(mut self, verify_only: bool) -> LoadOptions {
+        self.verify_only = verify_only;
+        self
+    }
+}
+
+/// What [`load`] produced: compiled programs (unless
+/// [`LoadOptions::verify_only`]) plus the per-program verification
+/// record either way.
+pub struct LoadOutcome {
+    /// verified + compiled programs, in object order (empty under
+    /// `verify_only`)
+    pub programs: Vec<LoadedProgram>,
+    /// per program: name, verifier summary, verification wall time in
+    /// nanoseconds — the `ncclbpf verify --stats` / `BENCH_verifier`
+    /// rows
+    pub verified: Vec<(String, VerifyInfo, u64)>,
 }
 
 /// Register `obj`'s maps and build the live-id table the verifier and
@@ -201,61 +278,78 @@ fn relocate(
     Ok((pt, insns))
 }
 
+/// Load and/or verify every program in `obj` against a shared map
+/// registry — the single public load/verify entry point.
+///
+/// All map declarations are registered first (created, or attached to
+/// existing same-name maps — the cross-plugin sharing mechanism), then
+/// each program is relocated, verified against its program type's ctx
+/// layout under `opts.verifier`, and — unless `opts.verify_only` —
+/// compiled, with the verifier's fact table driving JIT inlining per
+/// `opts.inline`.
+pub fn load(
+    obj: &Object,
+    registry: &MapRegistry,
+    layouts: &CtxLayouts,
+    opts: &LoadOptions,
+) -> Result<LoadOutcome, LoadError> {
+    // 1. register maps
+    let (live, map_defs) = register_maps(obj, registry)?;
+    let mut out = LoadOutcome { programs: Vec::new(), verified: Vec::new() };
+    for p in &obj.progs {
+        if opts.verify_only {
+            let (pt, insns) = relocate(p, &live)?;
+            let t0 = Instant::now();
+            let info = verifier::verify_with_config(
+                &insns,
+                pt,
+                layouts.for_type(pt),
+                &map_defs,
+                &opts.verifier,
+            )
+            .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
+            out.verified.push((p.name.clone(), info, t0.elapsed().as_nanos() as u64));
+        } else {
+            let prog = load_program(p, registry, layouts, &live, &map_defs, opts)?;
+            out.verified.push((prog.name.clone(), prog.info.clone(), prog.stats.verify_ns));
+            out.programs.push(prog);
+        }
+    }
+    Ok(out)
+}
+
 /// Register maps, relocate, and **verify** every program in `obj`
-/// without compiling or installing anything — the verification-cost
-/// probe behind `ncclbpf verify --stats`, `BENCH_verifier.json`, and
-/// the pruning differential tests. `prune` overrides the
-/// `NCCLBPF_VERIFIER_PRUNE` default when `Some`. Returns, per program,
-/// its name, the verifier summary, and the verification wall time in
-/// nanoseconds.
+/// without compiling or installing anything.
+#[deprecated(note = "use load with LoadOptions::new().verify_only(true).prune(prune)")]
 pub fn verify_object(
     obj: &Object,
     registry: &MapRegistry,
     layouts: &CtxLayouts,
     prune: Option<bool>,
 ) -> Result<Vec<(String, VerifyInfo, u64)>, LoadError> {
-    let (live, map_defs) = register_maps(obj, registry)?;
-    let mut out = Vec::with_capacity(obj.progs.len());
-    for p in &obj.progs {
-        let (pt, insns) = relocate(p, &live)?;
-        let t0 = Instant::now();
-        let info = verifier::verify_with(&insns, pt, layouts.for_type(pt), &map_defs, prune)
-            .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
-        out.push((p.name.clone(), info, t0.elapsed().as_nanos() as u64));
-    }
-    Ok(out)
+    load(obj, registry, layouts, &LoadOptions::new().verify_only(true).prune(prune))
+        .map(|o| o.verified)
 }
 
 /// Load every program in an object against a shared map registry.
-///
-/// All map declarations are registered first (created, or attached to
-/// existing same-name maps — the cross-plugin sharing mechanism), then
-/// each program is relocated, verified against its program type's ctx
-/// layout, and compiled.
+#[deprecated(note = "use load with &LoadOptions::new()")]
 pub fn load_object(
     obj: &Object,
     registry: &MapRegistry,
     layouts: &CtxLayouts,
 ) -> Result<Vec<LoadedProgram>, LoadError> {
-    load_object_with_sink(obj, registry, layouts, None)
+    load(obj, registry, layouts, &LoadOptions::new()).map(|o| o.programs)
 }
 
-/// [`load_object`] with an explicit `bpf_trace_printk` sink: programs
-/// loaded here route printk output through `sink` instead of stderr
-/// (the host installs its own rebindable sink this way).
+/// `load_object` with an explicit `bpf_trace_printk` sink.
+#[deprecated(note = "use load with LoadOptions::new().sink(sink)")]
 pub fn load_object_with_sink(
     obj: &Object,
     registry: &MapRegistry,
     layouts: &CtxLayouts,
     sink: Option<Arc<PrintkSink>>,
 ) -> Result<Vec<LoadedProgram>, LoadError> {
-    // 1. register maps
-    let (live, map_defs) = register_maps(obj, registry)?;
-    let mut out = Vec::with_capacity(obj.progs.len());
-    for p in &obj.progs {
-        out.push(load_program(p, registry, layouts, &live, &map_defs, sink.clone())?);
-    }
-    Ok(out)
+    load(obj, registry, layouts, &LoadOptions::new().sink(sink)).map(|o| o.programs)
 }
 
 fn load_program(
@@ -264,24 +358,34 @@ fn load_program(
     layouts: &CtxLayouts,
     live: &[(String, Arc<Map>)],
     map_defs: &HashMap<u32, MapDef>,
-    sink: Option<Arc<PrintkSink>>,
+    opts: &LoadOptions,
 ) -> Result<LoadedProgram, LoadError> {
     // 2. resolve the program type and apply relocations
     let (pt, insns) = relocate(p, live)?;
 
     // 3. verify (the paper's load-time gate)
     let t0 = Instant::now();
-    let info = verifier::verify(&insns, pt, layouts.for_type(pt), map_defs)
-        .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
+    let info =
+        verifier::verify_with_config(&insns, pt, layouts.for_type(pt), map_defs, &opts.verifier)
+            .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
     let verify_ns = t0.elapsed().as_nanos() as u64;
 
-    // 4. compile: pre-decode for the interpreter, then attempt native JIT
+    // 4. compile: pre-decode for the interpreter, then attempt native
+    //    JIT with the verifier's fact table driving call-site inlining
+    //    (the facts are slot-indexed; lddw collapses two slots into one
+    //    op, so remap before handing them to the backend)
     let t1 = Instant::now();
-    let ops = interp::predecode(&insns).map_err(LoadError::Structural)?;
+    let (ops, slot2op) = interp::predecode_mapped(&insns).map_err(LoadError::Structural)?;
+    let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
     let mut env = HelperEnv::new(registry, &info.used_maps).map_err(LoadError::Structural)?;
-    env.printk = sink;
+    env.printk = opts.sink.clone();
     env.prog_type = Some(pt);
-    let jit = JitProgram::compile(&ops);
+    let jit_opts = JitOptions {
+        facts: if facts.is_empty() { None } else { Some(&facts) },
+        env: Some(&env),
+        inline: opts.inline,
+    };
+    let jit = JitProgram::compile_with(&ops, &jit_opts);
     let compile_ns = t1.elapsed().as_nanos() as u64;
 
     Ok(LoadedProgram {
@@ -342,7 +446,7 @@ pub fn load_asm(
 ) -> Result<Vec<LoadedProgram>, LoadError> {
     let obj = super::asm::assemble(source)
         .map_err(|e| LoadError::Structural(e.to_string()))?;
-    load_object(&obj, registry, layouts)
+    load(&obj, registry, layouts, &LoadOptions::new()).map(|o| o.programs)
 }
 
 #[cfg(test)]
@@ -388,24 +492,67 @@ ok:
     }
 
     #[test]
-    fn verify_object_reports_stats_without_installing() {
+    fn verify_only_reports_stats_without_installing() {
         let obj = crate::bpf::asm::assemble(GOOD).unwrap();
         let reg = MapRegistry::new();
-        let stats = verify_object(&obj, &reg, &layouts(), None).unwrap();
-        assert_eq!(stats.len(), 1);
-        let (name, info, ns) = &stats[0];
+        let out = load(&obj, &reg, &layouts(), &LoadOptions::new().verify_only(true)).unwrap();
+        assert!(out.programs.is_empty(), "verify_only must not compile");
+        assert_eq!(out.verified.len(), 1);
+        let (name, info, ns) = &out.verified[0];
         assert_eq!(name, "good");
         assert!(info.insns_processed > 0);
         assert!(*ns > 0);
         // forcing exhaustive enumeration agrees on acceptance
         let reg = MapRegistry::new();
-        assert!(verify_object(&obj, &reg, &layouts(), Some(false)).is_ok());
-        // and the loaded program surfaces the same counters
+        let opts = LoadOptions::new().verify_only(true).prune(Some(false));
+        assert!(load(&obj, &reg, &layouts(), &opts).is_ok());
+        // and a full load surfaces the same verification record
         let reg = MapRegistry::new();
-        let progs = load_asm(GOOD, &reg, &layouts()).unwrap();
-        let st = progs[0].verifier_stats();
-        assert_eq!(st.insns_processed, progs[0].info.insns_processed);
+        let out = load(&obj, &reg, &layouts(), &LoadOptions::new()).unwrap();
+        assert_eq!(out.verified.len(), out.programs.len());
+        let st = out.programs[0].verifier_stats();
+        assert_eq!(st.insns_processed, out.programs[0].info.insns_processed);
+        assert_eq!(st.insns_processed, out.verified[0].1.insns_processed);
         assert!(st.verify_ns > 0);
+    }
+
+    #[test]
+    fn deprecated_shims_still_load() {
+        // the one-PR compatibility shims delegate to load()
+        #[allow(deprecated)]
+        {
+            let obj = crate::bpf::asm::assemble(GOOD).unwrap();
+            let reg = MapRegistry::new();
+            assert_eq!(load_object(&obj, &reg, &layouts()).unwrap().len(), 1);
+            let reg = MapRegistry::new();
+            assert_eq!(verify_object(&obj, &reg, &layouts(), None).unwrap().len(), 1);
+            let reg = MapRegistry::new();
+            assert_eq!(load_object_with_sink(&obj, &reg, &layouts(), None).unwrap().len(), 1);
+        }
+    }
+
+    #[test]
+    fn load_threads_inline_toggle_to_jit() {
+        let reg = MapRegistry::new();
+        let on = load_asm(GOOD, &reg, &layouts()).unwrap().remove(0);
+        let obj = crate::bpf::asm::assemble(GOOD).unwrap();
+        let off = load(&obj, &reg, &layouts(), &LoadOptions::new().inline(Some(false)))
+            .unwrap()
+            .programs
+            .remove(0);
+        on.map("state").unwrap().write_u64(0, 77).unwrap();
+        assert_eq!(on.run(std::ptr::null_mut()), 77);
+        assert_eq!(off.run(std::ptr::null_mut()), 77);
+        if on.is_jitted() {
+            // GOOD's key is a 4-byte store (untracked), so the lookup
+            // site becomes a direct call rather than an address inline
+            let s = on.jit_inline_stats().unwrap();
+            assert_eq!(s.direct_calls, 1);
+            assert_eq!(s.trampoline_calls, 0);
+            let s = off.jit_inline_stats().unwrap();
+            assert_eq!(s.direct_calls, 0);
+            assert_eq!(s.trampoline_calls, 1);
+        }
     }
 
     #[test]

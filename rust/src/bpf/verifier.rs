@@ -76,9 +76,22 @@
 //! explored checkpoint already covers (subsumption is pointwise and
 //! the transfer functions are monotone), so the accept/reject verdict
 //! is unchanged for any program that fits the complexity budget —
-//! asserted by the prune-on/off differential suite. Set
-//! `NCCLBPF_VERIFIER_PRUNE=0` (or [`Verifier::with_pruning`]) to force
-//! exhaustive enumeration.
+//! asserted by the prune-on/off differential suite. Pruning, the
+//! complexity budget, and fact emission are configured through
+//! [`VerifierConfig`] (environment variables are parsed once at the
+//! CLI edge and threaded in; the verifier itself never reads them).
+//!
+//! Beyond the accept/reject verdict, verification **proves facts** the
+//! JIT can specialize on: constant map ids and constant/bounded keys at
+//! `map_lookup` sites, constant ringbuf reserve sizes, discharged
+//! variable-offset bounds checks, and helper-call sites whose argument
+//! types permit a direct call. These are collected per instruction into
+//! an [`InsnFacts`] table on [`VerifyInfo`]. A fact is recorded as the
+//! meet over every explored visit of its instruction, and pruning only
+//! skips paths subsumed by explored checkpoints (interval containment),
+//! so every recorded fact also holds on every pruned path — inlined
+//! code specialized on the table is refinement-equivalent to the
+//! trampoline build (DESIGN.md §11).
 
 use super::helpers::{self, ArgType, ProgType, RetType};
 use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
@@ -138,6 +151,45 @@ impl fmt::Display for VerifyError {
 
 impl std::error::Error for VerifyError {}
 
+/// Facts the verifier proved at one instruction site, consumed by the
+/// JIT to specialize codegen (`InsnFacts` per paper §11). Each field is
+/// the meet over every explored visit of the instruction: a constant
+/// survives only if every path agrees on it, a bound is the maximum
+/// over paths, and the flags are conjunctions — so a fact in the table
+/// holds on *every* accepted execution, including pruned ones.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InsnFacts {
+    /// at a helper call with a `ConstMapPtr` arg: the (unique) map id
+    pub map_id: Option<u32>,
+    /// at a `map_lookup` site: the key is this constant on every path
+    /// (extracted from the 8-byte spill slot the key pointer targets)
+    pub const_key: Option<u64>,
+    /// at a `map_lookup` site: the key is provably `<= key_umax` on
+    /// every path (present whenever `const_key` is; wider otherwise)
+    pub key_umax: Option<u64>,
+    /// at a `ringbuf_reserve` site: the constant reserve size
+    pub alloc_size: Option<u32>,
+    /// the helper's argument types permit a direct near call (no env
+    /// dispatch needed: maps resolved, no printk sink / tail-call
+    /// engine semantics involved)
+    pub direct_call: bool,
+    /// a variable-offset map-value / ringbuf access at this site had
+    /// its bounds check discharged by the offset-interval analysis
+    pub bounds_discharged: bool,
+}
+
+impl InsnFacts {
+    /// True when the JIT can specialize this site at all: a direct
+    /// call, a constant reserve size, or a lookup with a known map and
+    /// a constant/bounded key.
+    pub fn is_inline_candidate(&self) -> bool {
+        self.direct_call
+            || self.alloc_size.is_some()
+            || (self.map_id.is_some()
+                && (self.const_key.is_some() || self.key_umax.is_some()))
+    }
+}
+
 /// Successful verification summary.
 #[derive(Clone, Debug, Default)]
 pub struct VerifyInfo {
@@ -157,6 +209,16 @@ pub struct VerifyInfo {
     /// peak simultaneously tracked abstract states (stored checkpoints
     /// plus queued branch states plus the in-flight walk)
     pub peak_states: u64,
+    /// per-instruction fact table (empty when
+    /// [`VerifierConfig::emit_facts`] is off); indexed by raw
+    /// instruction slot — remap through `predecode_mapped` before
+    /// feeding the JIT
+    pub facts: Vec<InsnFacts>,
+    /// instruction sites whose facts qualify for JIT specialization
+    pub inline_candidates: u64,
+    /// variable-offset accesses whose bounds checks the interval
+    /// analysis discharged
+    pub bounds_elided: u64,
 }
 
 /// Per-load verification-cost stats: the counters behind `ncclbpf
@@ -171,6 +233,10 @@ pub struct VerifierStats {
     pub peak_states: u64,
     /// wall-clock nanoseconds spent in the verifier
     pub verify_ns: u64,
+    /// instruction sites whose facts qualify for JIT specialization
+    pub inline_candidates: u64,
+    /// variable-offset accesses whose bounds checks were discharged
+    pub bounds_elided: u64,
 }
 
 impl VerifyInfo {
@@ -181,6 +247,8 @@ impl VerifyInfo {
             states_pruned: self.states_pruned,
             peak_states: self.peak_states,
             verify_ns,
+            inline_candidates: self.inline_candidates,
+            bounds_elided: self.bounds_elided,
         }
     }
 }
@@ -198,12 +266,38 @@ const MAX_CALL_FRAMES: usize = 8;
 const MAX_STATES_PER_PC: usize = 64;
 
 /// True unless `NCCLBPF_VERIFIER_PRUNE` is set to `0`/`false`/`off`/
-/// `no` — the process-wide default for state-equivalence pruning,
-/// overridable per run with [`Verifier::with_pruning`].
+/// `no`.
+#[deprecated(
+    note = "env parsing moved to the CLI edge: use crate::cli::env_verifier_prune() \
+            and thread it through VerifierConfig / LoadOptions"
+)]
 pub fn pruning_enabled_by_env() -> bool {
     match std::env::var("NCCLBPF_VERIFIER_PRUNE") {
         Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | "no"),
         Err(_) => true,
+    }
+}
+
+/// Verification knobs, threaded in from the load path (`LoadOptions`).
+/// The verifier never reads environment variables: `NCCLBPF_*`
+/// overrides are parsed once at the CLI edge and land here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifierConfig {
+    /// state-equivalence pruning; `None` keeps the built-in default
+    /// (on), `Some(false)` forces exhaustive enumeration — the
+    /// differential-testing knob
+    pub prune: Option<bool>,
+    /// abstract-instruction complexity budget (default
+    /// [`COMPLEXITY_BUDGET`])
+    pub budget: u64,
+    /// collect the per-instruction [`InsnFacts`] table (default on;
+    /// off skips the bookkeeping for verify-cost microbenchmarks)
+    pub emit_facts: bool,
+}
+
+impl Default for VerifierConfig {
+    fn default() -> Self {
+        VerifierConfig { prune: None, budget: COMPLEXITY_BUDGET, emit_facts: true }
     }
 }
 
@@ -379,9 +473,15 @@ pub struct Verifier<'a> {
     info: VerifyInfo,
     /// subprogram regions as (start, end) insn ranges; [0] is main
     subprogs: Vec<(usize, usize)>,
-    /// state-equivalence pruning enabled (env default; see
-    /// [`Verifier::with_pruning`])
+    /// state-equivalence pruning enabled (see [`VerifierConfig`])
     prune: bool,
+    /// abstract-instruction complexity budget
+    budget: u64,
+    /// collect the per-instruction fact table
+    emit_facts: bool,
+    /// per-pc "facts recorded at least once" marker (first visit sets,
+    /// later visits meet)
+    facts_seen: Vec<bool>,
     /// pcs where checkpoint states are recorded (jump targets)
     prune_points: Vec<bool>,
     /// per-pc bitmask of registers whose exact bounds may still be
@@ -418,7 +518,10 @@ impl<'a> Verifier<'a> {
             next_nid: 1,
             info: VerifyInfo::default(),
             subprogs: Vec::new(),
-            prune: pruning_enabled_by_env(),
+            prune: true,
+            budget: COMPLEXITY_BUDGET,
+            emit_facts: true,
+            facts_seen: Vec::new(),
             prune_points: Vec::new(),
             bounds_live: Vec::new(),
             entries: Vec::new(),
@@ -426,9 +529,20 @@ impl<'a> Verifier<'a> {
         }
     }
 
-    /// Override the state-equivalence pruning default (environment
-    /// `NCCLBPF_VERIFIER_PRUNE`); `false` forces exhaustive path
-    /// enumeration — the differential-testing knob.
+    /// Apply a [`VerifierConfig`] (builder style): pruning override,
+    /// complexity budget, and fact-table emission.
+    pub fn with_config(mut self, cfg: &VerifierConfig) -> Verifier<'a> {
+        if let Some(on) = cfg.prune {
+            self.prune = on;
+        }
+        self.budget = cfg.budget;
+        self.emit_facts = cfg.emit_facts;
+        self
+    }
+
+    /// Override the state-equivalence pruning default; `false` forces
+    /// exhaustive path enumeration.
+    #[deprecated(note = "use Verifier::with_config with VerifierConfig { prune, .. }")]
     pub fn with_pruning(mut self, on: bool) -> Verifier<'a> {
         self.prune = on;
         self
@@ -436,6 +550,48 @@ impl<'a> Verifier<'a> {
 
     fn err(&self, insn: usize, message: String) -> VerifyError {
         VerifyError { insn, message }
+    }
+
+    /// Record facts proven on this visit of `pc`, meeting them with
+    /// facts from earlier visits: constants survive only if every path
+    /// agrees, bounds take the path maximum, `direct_call` is a
+    /// conjunction. `bounds_discharged` is a disjunction — it only
+    /// feeds the cost surface, never codegen, and "a variable-offset
+    /// access was discharged here on some path" is the honest count.
+    fn note_fact(&mut self, pc: usize, f: InsnFacts) {
+        if !self.emit_facts {
+            return;
+        }
+        if !self.facts_seen[pc] {
+            self.facts_seen[pc] = true;
+            self.info.facts[pc] = f;
+            return;
+        }
+        let cur = &mut self.info.facts[pc];
+        if cur.map_id != f.map_id {
+            cur.map_id = None;
+        }
+        if cur.const_key != f.const_key {
+            cur.const_key = None;
+        }
+        cur.key_umax = match (cur.key_umax, f.key_umax) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            _ => None,
+        };
+        if cur.alloc_size != f.alloc_size {
+            cur.alloc_size = None;
+        }
+        cur.direct_call &= f.direct_call;
+        cur.bounds_discharged |= f.bounds_discharged;
+    }
+
+    /// A variable-offset map-value / ringbuf access at `pc` passed its
+    /// interval bounds check — no runtime check is needed.
+    fn note_bounds_discharged(&mut self, pc: usize) {
+        if self.emit_facts && !self.info.facts.is_empty() {
+            self.info.facts[pc].bounds_discharged = true;
+            self.facts_seen[pc] = true;
+        }
     }
 
     /// Structural pre-checks, then abstract interpretation of all paths.
@@ -451,6 +607,10 @@ impl<'a> Verifier<'a> {
         self.prune_points = self.compute_prune_points();
         if self.prune {
             self.bounds_live = self.compute_bounds_liveness();
+        }
+        if self.emit_facts {
+            self.info.facts = vec![InsnFacts::default(); self.insns.len()];
+            self.facts_seen = vec![false; self.insns.len()];
         }
 
         // DFS over paths with pruned branch states.
@@ -482,13 +642,13 @@ impl<'a> Verifier<'a> {
                     break;
                 }
                 self.processed += 1;
-                if self.processed > COMPLEXITY_BUDGET {
+                if self.processed > self.budget {
                     return Err(self.err(
                         pc,
                         format!(
                             "program too complex: exceeded {} processed instructions \
                              (possibly unbounded loop)",
-                            COMPLEXITY_BUDGET
+                            self.budget
                         ),
                     ));
                 }
@@ -520,6 +680,10 @@ impl<'a> Verifier<'a> {
         self.info.used_maps.dedup();
         self.info.helpers_used.sort_unstable();
         self.info.helpers_used.dedup();
+        self.info.inline_candidates =
+            self.info.facts.iter().filter(|f| f.is_inline_candidate()).count() as u64;
+        self.info.bounds_elided =
+            self.info.facts.iter().filter(|f| f.bounds_discharged).count() as u64;
         Ok(self.info)
     }
 
@@ -1317,6 +1481,9 @@ impl<'a> Verifier<'a> {
                         ),
                     ));
                 }
+                if span > 0 {
+                    self.note_bounds_discharged(pc);
+                }
                 Reg::scalar_unknown()
             }
             Reg::RingBufMem { off: po, span, size, .. } => {
@@ -1333,6 +1500,9 @@ impl<'a> Verifier<'a> {
                             size
                         ),
                     ));
+                }
+                if span > 0 {
+                    self.note_bounds_discharged(pc);
                 }
                 Reg::scalar_unknown()
             }
@@ -1489,6 +1659,9 @@ impl<'a> Verifier<'a> {
                         ),
                     ));
                 }
+                if span > 0 {
+                    self.note_bounds_discharged(pc);
+                }
             }
             Reg::RingBufMem { off: po, span, size, .. } => {
                 let a = po + off;
@@ -1508,6 +1681,9 @@ impl<'a> Verifier<'a> {
                             size
                         ),
                     ));
+                }
+                if span > 0 {
+                    self.note_bounds_discharged(pc);
                 }
             }
             Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. } => {
@@ -1834,6 +2010,10 @@ impl<'a> Verifier<'a> {
         let mut alloc_size: Option<u64> = None;
         // ringbuf reference released by this call (submit/discard)
         let mut released_ref: Option<u32> = None;
+        // lookup-key facts extracted from the spill slot the key
+        // pointer targets (for the JIT's array-lookup inlining)
+        let mut key_const: Option<u64> = None;
+        let mut key_umax: Option<u64> = None;
         let is_ringbuf_helper = matches!(
             hid,
             helpers::id::RINGBUF_OUTPUT
@@ -1918,6 +2098,35 @@ impl<'a> Verifier<'a> {
                         }
                     };
                     self.check_mem_arg(pc, spec.name, i + 1, v, need, st)?;
+                    // fact extraction: a lookup key that lives at the
+                    // start of one tracked 8-byte spill slot holding a
+                    // scalar yields a constant / bounded key (little
+                    // endian: the low `need` bytes are the key)
+                    if *at == ArgType::MapKey
+                        && hid == helpers::id::MAP_LOOKUP_ELEM
+                        && need <= 8
+                    {
+                        if let Reg::StackPtr { off, frame } = v {
+                            let fidx = frame as usize;
+                            if off % 8 == 0 && fidx < st.frames.len() {
+                                if let Some(Reg::Scalar { umin, umax }) =
+                                    st.frames[fidx].spills.get(&off).copied()
+                                {
+                                    let mask = if need == 8 {
+                                        u64::MAX
+                                    } else {
+                                        (1u64 << (need * 8)) - 1
+                                    };
+                                    if umin == umax {
+                                        key_const = Some(umin & mask);
+                                        key_umax = Some(umin & mask);
+                                    } else if umax <= mask {
+                                        key_umax = Some(umax);
+                                    }
+                                }
+                            }
+                        }
+                    }
                 }
                 ArgType::Scalar => {
                     if v.is_pointer() {
@@ -2071,6 +2280,19 @@ impl<'a> Verifier<'a> {
                 },
             }
         }
+
+        // fact record: meet this visit's proven facts into the table
+        self.note_fact(
+            pc,
+            InsnFacts {
+                map_id: call_map_id,
+                const_key: key_const,
+                key_umax,
+                alloc_size: alloc_size.map(|s| s as u32),
+                direct_call: direct_callable(hid, call_map_id.is_some()),
+                bounds_discharged: false,
+            },
+        );
 
         // release pass: submit/discard drops the reference and poisons
         // every copy (registers and spills) of the record pointer
@@ -2510,6 +2732,26 @@ fn prune(st: &mut State, reg: u8, op: u8, k: u64, taken: bool) {
     st.cur_mut().regs[reg as usize] = Reg::Scalar { umin, umax };
 }
 
+/// True when a helper call site with these properties can bypass the
+/// generic `HelperEnv::call` dispatch: map-taking helpers need the map
+/// id proven constant, env-free helpers always qualify, and helpers
+/// with host-side state (`trace_printk`'s sink) or engine-level
+/// semantics (`tail_call`) never do.
+fn direct_callable(hid: i32, has_map: bool) -> bool {
+    use helpers::id;
+    match hid {
+        id::KTIME_GET_NS | id::GET_PRANDOM_U32 | id::GET_SMP_PROCESSOR_ID => true,
+        id::RINGBUF_SUBMIT | id::RINGBUF_DISCARD => true,
+        id::MAP_LOOKUP_ELEM
+        | id::MAP_UPDATE_ELEM
+        | id::MAP_DELETE_ELEM
+        | id::RINGBUF_OUTPUT
+        | id::RINGBUF_RESERVE
+        | id::RINGBUF_QUERY => has_map,
+        _ => false,
+    }
+}
+
 /// Convenience entry point.
 pub fn verify(
     insns: &[Insn],
@@ -2520,9 +2762,22 @@ pub fn verify(
     Verifier::new(insns, prog_type, ctx, maps).verify()
 }
 
+/// [`verify`] with an explicit [`VerifierConfig`] — the entry point the
+/// load path, the prune-on/off differential tests, and
+/// `BENCH_verifier.json` use.
+pub fn verify_with_config(
+    insns: &[Insn],
+    prog_type: ProgType,
+    ctx: &CtxLayout,
+    maps: &HashMap<u32, MapDef>,
+    cfg: &VerifierConfig,
+) -> Result<VerifyInfo, VerifyError> {
+    Verifier::new(insns, prog_type, ctx, maps).with_config(cfg).verify()
+}
+
 /// [`verify`] with an explicit pruning override (`None` keeps the
-/// `NCCLBPF_VERIFIER_PRUNE` environment default) — the entry point the
-/// prune-on/off differential tests and `BENCH_verifier.json` use.
+/// built-in default).
+#[deprecated(note = "use verify_with_config with VerifierConfig { prune, .. }")]
 pub fn verify_with(
     insns: &[Insn],
     prog_type: ProgType,
@@ -2530,11 +2785,13 @@ pub fn verify_with(
     maps: &HashMap<u32, MapDef>,
     prune: Option<bool>,
 ) -> Result<VerifyInfo, VerifyError> {
-    let mut v = Verifier::new(insns, prog_type, ctx, maps);
-    if let Some(on) = prune {
-        v = v.with_pruning(on);
-    }
-    v.verify()
+    verify_with_config(
+        insns,
+        prog_type,
+        ctx,
+        maps,
+        &VerifierConfig { prune, ..VerifierConfig::default() },
+    )
 }
 
 #[cfg(test)]
@@ -3591,7 +3848,13 @@ mod tests {
     // -- state-equivalence pruning -------------------------------------------
 
     fn verify_prune(prog: &[Insn], prune: bool) -> Result<VerifyInfo, VerifyError> {
-        verify_with(prog, ProgType::Tuner, &ctx_rw(), &one_map(), Some(prune))
+        verify_with_config(
+            prog,
+            ProgType::Tuner,
+            &ctx_rw(),
+            &one_map(),
+            &VerifierConfig { prune: Some(prune), ..VerifierConfig::default() },
+        )
     }
 
     /// The classic two-branch-join shape: the arms differ only in an
@@ -3806,5 +4069,208 @@ mod tests {
         assert_eq!(stats.verify_ns, 1234);
         assert_eq!(stats.states_pruned, info.states_pruned);
         assert_eq!(stats.peak_states, info.peak_states);
+        assert_eq!(stats.inline_candidates, info.inline_candidates);
+        assert_eq!(stats.bounds_elided, info.bounds_elided);
+    }
+
+    // -- fact table (verifier-informed JIT inlining) -------------------------
+
+    #[test]
+    fn facts_const_key_lookup() {
+        // key spilled via stdw: the tracked 8-byte slot yields an exact
+        // constant key at the lookup site
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::DW, 10, -8, 3));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -8));
+        let call_pc = p.len();
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 0, 0, 0));
+        p.push(exit());
+        let info = ok(&p);
+        let f = info.facts[call_pc];
+        assert_eq!(f.map_id, Some(7));
+        assert_eq!(f.const_key, Some(3));
+        assert_eq!(f.key_umax, Some(3));
+        assert!(f.direct_call);
+        assert!(f.is_inline_candidate());
+        assert!(info.inline_candidates >= 1, "{}", info.inline_candidates);
+    }
+
+    #[test]
+    fn facts_bounded_key_lookup() {
+        // ctx-derived key bounded to <= 5 by a branch, spilled via
+        // stxdw: the fact table records the bound, not a constant
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(ldx(size::W, 3, 1, 0));
+        p.push(jmp_imm(jmp::JGT, 3, 5, 5)); // r3 > 5 -> reject path
+        p.push(stx(size::DW, 10, 3, -8));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -8));
+        let call_pc = p.len();
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 0, 0, 0));
+        p.push(exit());
+        let info = ok(&p);
+        let f = info.facts[call_pc];
+        assert_eq!(f.map_id, Some(7));
+        assert_eq!(f.const_key, None);
+        assert_eq!(f.key_umax, Some(5));
+        assert!(f.is_inline_candidate());
+    }
+
+    #[test]
+    fn facts_untracked_key_has_no_bound() {
+        // a 4-byte stw key write is byte-tracked, not spill-tracked:
+        // no constant or bound survives to the fact table, and the JIT
+        // must keep the runtime index check
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        let call_pc = p.len();
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 0, 0, 0));
+        p.push(exit());
+        let info = ok(&p);
+        let f = info.facts[call_pc];
+        assert_eq!(f.map_id, Some(7));
+        assert_eq!(f.const_key, None);
+        assert_eq!(f.key_umax, None);
+        // still a candidate: the constant map id permits a direct call
+        assert!(f.direct_call);
+    }
+
+    #[test]
+    fn facts_conflicting_const_keys_meet_to_bound() {
+        // two paths spill different constants (2 vs 3) into the key
+        // slot: the meet drops the constant but keeps the max bound
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(ldx(size::W, 3, 1, 0));
+        p.push(jmp_imm(jmp::JEQ, 3, 0, 2)); // branch on ctx input
+        p.push(st_imm(size::DW, 10, -8, 2));
+        p.push(ja(1));
+        p.push(st_imm(size::DW, 10, -8, 3));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -8));
+        let call_pc = p.len();
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 0, 0, 0));
+        p.push(exit());
+        let info = ok(&p);
+        let f = info.facts[call_pc];
+        assert_eq!(f.map_id, Some(7));
+        assert_eq!(f.const_key, None, "paths disagree on the constant");
+        assert_eq!(f.key_umax, Some(3), "meet keeps the path maximum");
+    }
+
+    #[test]
+    fn facts_ringbuf_reserve_size_and_discharged_bounds() {
+        // reserve(16) with a constant size, then a variable-offset
+        // store into the record: alloc_size + bounds_discharged facts
+        let mut p = vec![];
+        p.push(mov64_reg(6, 1)); // save ctx (the call clobbers r1-r5)
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        let reserve_pc = p.len();
+        p.push(call(helpers::id::RINGBUF_RESERVE));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_reg(7, 0)); // pristine record base for the release
+        // bounded variable offset: r4 = ctx[0] & 7, r0 += r4
+        p.push(ldx(size::W, 4, 6, 0));
+        p.push(alu64_imm(alu::AND, 4, 7));
+        p.push(alu64_reg(alu::ADD, 0, 4));
+        let store_pc = p.len();
+        p.push(stx(size::B, 0, 4, 0)); // store through span > 0 pointer
+        // release via discard to keep the test focused on facts
+        p.push(mov64_reg(1, 7));
+        p.push(mov64_imm(2, 0));
+        p.push(call(helpers::id::RINGBUF_DISCARD));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let info = verify(&p, ProgType::Profiler, &prof_ctx(), &ring_maps())
+            .expect("should verify");
+        let f = info.facts[reserve_pc];
+        assert_eq!(f.map_id, Some(9));
+        assert_eq!(f.alloc_size, Some(16));
+        assert!(f.is_inline_candidate());
+        assert!(info.facts[store_pc].bounds_discharged);
+        assert!(info.bounds_elided >= 1, "{}", info.bounds_elided);
+    }
+
+    #[test]
+    fn facts_emission_can_be_disabled() {
+        let p = vec![mov64_imm(0, 0), exit()];
+        let info = verify_with_config(
+            &p,
+            ProgType::Tuner,
+            &ctx_rw(),
+            &one_map(),
+            &VerifierConfig { emit_facts: false, ..VerifierConfig::default() },
+        )
+        .unwrap();
+        assert!(info.facts.is_empty());
+        assert_eq!(info.inline_candidates, 0);
+    }
+
+    #[test]
+    fn facts_stable_under_pruning() {
+        // the meet over explored visits must cover pruned paths: on a
+        // diamond that merges, prune-on and prune-off agree on the
+        // lookup-site facts
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(ldx(size::W, 3, 1, 0));
+        p.push(jmp_imm(jmp::JEQ, 3, 0, 2));
+        p.push(mov64_imm(4, 5)); // incidental constant, arms differ
+        p.push(ja(1));
+        p.push(mov64_imm(4, 7));
+        p.push(st_imm(size::DW, 10, -8, 1));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -8));
+        let call_pc = p.len();
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(ldx(size::DW, 0, 0, 0));
+        p.push(exit());
+        let on = verify_prune(&p, true).unwrap();
+        let off = verify_prune(&p, false).unwrap();
+        assert_eq!(on.facts[call_pc], off.facts[call_pc]);
+        assert_eq!(on.facts[call_pc].const_key, Some(1));
+    }
+
+    #[test]
+    fn custom_budget_is_honored() {
+        let p = vec![mov64_imm(0, 0), exit()];
+        let err = verify_with_config(
+            &p,
+            ProgType::Tuner,
+            &ctx_rw(),
+            &one_map(),
+            &VerifierConfig { budget: 1, ..VerifierConfig::default() },
+        )
+        .expect_err("budget of 1 insn must be exceeded");
+        assert!(err.message.contains("too complex"), "{}", err.message);
     }
 }

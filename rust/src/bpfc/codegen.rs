@@ -1003,7 +1003,7 @@ pub fn compile_unit(unit: &Unit) -> CResult<Object> {
 mod tests {
     use super::*;
     use crate::bpf::program::load_asm;
-    use crate::bpf::program::load_object;
+    use crate::bpf::program::{load, LoadOptions};
     use crate::bpf::MapRegistry;
     use crate::bpfc::parser::parse;
     use crate::host::ctx::{layouts, PolicyContext};
@@ -1013,7 +1013,7 @@ mod tests {
         let unit = parse(src).unwrap();
         let obj = compile_unit(&unit).unwrap();
         let reg = MapRegistry::new();
-        load_object(&obj, &reg, &layouts()).expect("compiled policy must verify")
+        load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).expect("compiled policy must verify")
     }
 
     fn run_tuner(progs: &[crate::bpf::LoadedProgram], msg_size: u64) -> PolicyContext {
@@ -1131,7 +1131,7 @@ int size_aware_adaptive(struct policy_context *ctx) {
         let unit = parse(src).unwrap();
         let obj = compile_unit(&unit).unwrap();
         let reg = MapRegistry::new();
-        let progs = load_object(&obj, &reg, &layouts()).unwrap();
+        let progs = load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).unwrap();
         assert_eq!(progs.len(), 2);
         let profiler = progs.iter().find(|p| p.name == "record_latency").unwrap();
         let tuner = progs.iter().find(|p| p.name == "size_aware_adaptive").unwrap();
@@ -1262,7 +1262,7 @@ int leaky(struct profiler_context *ctx) {
         let unit = parse(src).unwrap();
         let obj = compile_unit(&unit).unwrap();
         let reg = MapRegistry::new();
-        let err = load_object(&obj, &reg, &layouts()).unwrap_err();
+        let err = load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).unwrap_err();
         assert!(err.to_string().contains("unreleased"), "{}", err);
     }
 
@@ -1282,7 +1282,7 @@ int bad(struct policy_context *ctx) {
         let unit = parse(src).unwrap();
         let obj = compile_unit(&unit).unwrap();
         let reg = MapRegistry::new();
-        let err = load_object(&obj, &reg, &layouts()).unwrap_err();
+        let err = load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).unwrap_err();
         assert!(err.to_string().contains("map_value_or_null"), "{}", err);
     }
 
@@ -1298,7 +1298,7 @@ int bad(struct policy_context *ctx) {
         let unit = parse(src).unwrap();
         let obj = compile_unit(&unit).unwrap();
         let reg = MapRegistry::new();
-        let err = load_object(&obj, &reg, &layouts()).unwrap_err();
+        let err = load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).unwrap_err();
         assert!(err.to_string().contains("read-only"), "{}", err);
     }
 
@@ -1362,7 +1362,7 @@ int f(struct policy_context *ctx) {
         let unit = parse(src).unwrap();
         let obj = compile_unit(&unit).unwrap();
         let reg = MapRegistry::new();
-        let err = load_object(&obj, &reg, &layouts()).unwrap_err();
+        let err = load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).unwrap_err();
         assert!(err.to_string().contains("recursive"), "{}", err);
     }
 
@@ -1420,7 +1420,7 @@ int f(struct policy_context *ctx) {
                 // constant-folding-free codegen may still fit in 3 regs
                 // depending on shape; if it compiles it must verify+run.
                 let reg = MapRegistry::new();
-                load_object(&obj, &reg, &layouts()).unwrap();
+                load(&obj, &reg, &layouts(), &LoadOptions::new()).map(|o| o.programs).unwrap();
             }
             Err(e) => assert!(e.message.contains("too deep"), "{}", e),
         }

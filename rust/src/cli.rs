@@ -48,6 +48,28 @@ pub fn is_subcommand(name: &str) -> bool {
     SUBCOMMANDS.iter().any(|(n, _, _)| *n == name)
 }
 
+/// Parse a boolean-ish environment toggle: unset → `None`; `"0"`,
+/// `"false"`, `"off"`, `"no"` (case-insensitive, trimmed) →
+/// `Some(false)`; any other set value → `Some(true)`.
+fn env_toggle(name: &str) -> Option<bool> {
+    let v = std::env::var(name).ok()?;
+    Some(!matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "false" | "off" | "no"))
+}
+
+/// `NCCLBPF_VERIFIER_PRUNE`, parsed once here at the CLI edge and
+/// threaded into [`crate::bpf::LoadOptions`] — nothing under `bpf/`
+/// reads the environment.
+pub fn env_verifier_prune() -> Option<bool> {
+    env_toggle("NCCLBPF_VERIFIER_PRUNE")
+}
+
+/// `NCCLBPF_JIT_INLINE`, parsed once here at the CLI edge and threaded
+/// into [`crate::bpf::LoadOptions`] — nothing under `bpf/` reads the
+/// environment.
+pub fn env_jit_inline() -> Option<bool> {
+    env_toggle("NCCLBPF_JIT_INLINE")
+}
+
 /// Usage text generated from [`SUBCOMMANDS`].
 pub fn usage() -> String {
     let names: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _, _)| *n).collect();
@@ -144,6 +166,22 @@ mod tests {
         // --fast consumes prog.c as its value (documented behavior:
         // place boolean flags last or use --fast=true)
         assert_eq!(a.flag("fast"), Some("prog.c"));
+    }
+
+    #[test]
+    fn env_toggle_parses_off_values() {
+        // unique var names: cargo runs tests in parallel threads and
+        // the environment is process-global
+        assert_eq!(env_toggle("NCCLBPF_TEST_TOGGLE_UNSET_XQ"), None);
+        std::env::set_var("NCCLBPF_TEST_TOGGLE_A_XQ", "0");
+        assert_eq!(env_toggle("NCCLBPF_TEST_TOGGLE_A_XQ"), Some(false));
+        std::env::set_var("NCCLBPF_TEST_TOGGLE_A_XQ", " OFF ");
+        assert_eq!(env_toggle("NCCLBPF_TEST_TOGGLE_A_XQ"), Some(false));
+        std::env::set_var("NCCLBPF_TEST_TOGGLE_A_XQ", "1");
+        assert_eq!(env_toggle("NCCLBPF_TEST_TOGGLE_A_XQ"), Some(true));
+        std::env::set_var("NCCLBPF_TEST_TOGGLE_A_XQ", "anything");
+        assert_eq!(env_toggle("NCCLBPF_TEST_TOGGLE_A_XQ"), Some(true));
+        std::env::remove_var("NCCLBPF_TEST_TOGGLE_A_XQ");
     }
 
     #[test]

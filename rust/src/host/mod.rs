@@ -12,10 +12,9 @@ pub mod reload;
 pub mod ringbuf;
 pub mod traffic;
 
-use crate::bpf::program::load_object_with_sink;
 use crate::bpf::{
-    prog_array_update, LoadError, LoadedProgram, Map, MapRegistry, Object, PrintkSink, ProgType,
-    VerifierStats,
+    load, prog_array_update, LoadError, LoadOptions, LoadedProgram, Map, MapRegistry, Object,
+    PrintkSink, ProgType, VerifierStats,
 };
 use crate::cc::net::NetHook;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
@@ -61,6 +60,10 @@ pub struct NcclBpfHost {
     /// printk lines with ring events and tests can capture output
     /// without process-global stdio hacks
     printk: Arc<PrintkSink>,
+    /// load-pipeline configuration applied to every install (verifier
+    /// pruning/budget, JIT inlining); the sink field is always
+    /// overridden with this host's own printk sink
+    load_opts: LoadOptions,
     /// tuner decisions executed
     pub decisions: AtomicU64,
     /// profiler events executed
@@ -86,6 +89,7 @@ impl NcclBpfHost {
             profiler: ReloadSlot::new(),
             net: ReloadSlot::new(),
             printk: PrintkSink::stderr(),
+            load_opts: LoadOptions::new(),
             decisions: AtomicU64::new(0),
             prof_events: AtomicU64::new(0),
             net_events: AtomicU64::new(0),
@@ -97,6 +101,22 @@ impl NcclBpfHost {
     /// already-installed programs pick the new target up immediately).
     pub fn printk_sink(&self) -> Arc<PrintkSink> {
         self.printk.clone()
+    }
+
+    /// Set the load-pipeline options applied to every subsequent
+    /// install (verifier pruning/budget, JIT inlining). Environment
+    /// overrides are parsed at the CLI edge (see
+    /// [`crate::cli::env_verifier_prune`] /
+    /// [`crate::cli::env_jit_inline`]) and threaded in here; the sink
+    /// field is always overridden with the host's own printk sink.
+    pub fn set_load_options(&mut self, opts: LoadOptions) {
+        self.load_opts = opts;
+    }
+
+    /// [`LoadOptions`] for one install: the configured options with
+    /// the host's printk sink bound in.
+    fn install_opts(&self) -> LoadOptions {
+        self.load_opts.clone().sink(Some(self.printk.clone()))
     }
 
     fn slot(&self, pt: ProgType) -> &ReloadSlot {
@@ -112,8 +132,7 @@ impl NcclBpfHost {
     /// failure *nothing* is swapped — the old policies keep running
     /// ("the system never enters an unverified state", §4).
     pub fn install_object(&self, obj: &Object) -> Result<LoadReport, LoadError> {
-        let progs =
-            load_object_with_sink(obj, &self.maps, &ctx::layouts(), Some(self.printk.clone()))?;
+        let progs = load(obj, &self.maps, &ctx::layouts(), &self.install_opts())?.programs;
         let mut report = LoadReport::default();
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
@@ -149,8 +168,7 @@ impl NcclBpfHost {
     /// of chain assembly (the programs go into a prog array, not into
     /// the hook slots).
     pub fn load_only(&self, obj: &Object) -> Result<Vec<Arc<LoadedProgram>>, LoadError> {
-        let progs =
-            load_object_with_sink(obj, &self.maps, &ctx::layouts(), Some(self.printk.clone()))?;
+        let progs = load(obj, &self.maps, &ctx::layouts(), &self.install_opts())?.programs;
         Ok(progs.into_iter().map(Arc::new).collect())
     }
 
@@ -828,6 +846,33 @@ prog tuner t_large
         let err = host.install_chain(&obj, "chain", &[("tune_smal", 0)]).unwrap_err();
         assert!(err.to_string().contains("no program named"), "{}", err);
         assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "dispatcher");
+    }
+
+    /// Satellite: [`LoadOptions`] set on the host reach the JIT — the
+    /// same policy installs with call-site inlining on by default and
+    /// falls back to trampolines when the toggle is off.
+    #[test]
+    fn load_options_inline_toggle_threads_through_host() {
+        let run = |inline: Option<bool>| {
+            let mut host = NcclBpfHost::new();
+            host.set_load_options(LoadOptions::new().inline(inline));
+            host.install_asm(ADAPTIVE_TUNER_ASM).unwrap();
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0;
+            assert!(host.tuner_decide(&args(1024), &mut cost, &mut ch));
+            assert_eq!(ch, 4, "no samples yet: conservative default");
+            host.tuner_program().unwrap().jit_inline_stats()
+        };
+        // None under NCCLBPF_NO_JIT — behavior above is still asserted
+        if let (Some(on), Some(off)) = (run(None), run(Some(false))) {
+            assert!(
+                on.inlined_lookups + on.direct_calls > 0,
+                "default install should inline the map lookup: {:?}",
+                on
+            );
+            assert_eq!(off.inlined_lookups + off.direct_calls, 0, "{:?}", off);
+            assert!(off.trampoline_calls > 0, "{:?}", off);
+        }
     }
 
     #[test]

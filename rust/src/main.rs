@@ -4,7 +4,7 @@
 //! [`ncclbpf::cli::SUBCOMMANDS`]; `handler` below maps each entry to
 //! its implementation, and a test asserts the two never drift apart.
 
-use ncclbpf::bpf::ProgType;
+use ncclbpf::bpf::{LoadOptions, ProgType};
 use ncclbpf::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology};
 use ncclbpf::cli::{self, Args};
 use ncclbpf::host::policydir;
@@ -54,6 +54,17 @@ fn main() {
     std::process::exit(rc);
 }
 
+/// A host configured from the environment overrides parsed here at
+/// the CLI edge (`NCCLBPF_VERIFIER_PRUNE`, `NCCLBPF_JIT_INLINE`) —
+/// the only place they are read; `bpf/` sees plain [`LoadOptions`].
+fn env_host() -> NcclBpfHost {
+    let mut host = NcclBpfHost::new();
+    host.set_load_options(
+        LoadOptions::new().prune(cli::env_verifier_prune()).inline(cli::env_jit_inline()),
+    );
+    host
+}
+
 fn load_policy_arg(args: &Args) -> Result<Option<ncclbpf::bpf::Object>, String> {
     let Some(path) = args.positional.first() else {
         return Ok(None);
@@ -69,7 +80,7 @@ fn cmd_verify(args: &Args) -> i32 {
         eprintln!("usage: ncclbpf verify <policy.c|policy.s> [--stats]");
         return 2;
     };
-    let host = NcclBpfHost::new();
+    let host = env_host();
     match host.install_object(&obj) {
         Ok(report) => {
             for (name, pt) in &report.programs {
@@ -84,12 +95,14 @@ fn cmd_verify(args: &Args) -> i32 {
                 for (name, st) in &report.prog_stats {
                     println!(
                         "STATS {} insns_processed={} states_pruned={} peak_states={} \
-                         verify_ns={}",
+                         verify_ns={} inline_candidates={} bounds_elided={}",
                         name,
                         st.insns_processed,
                         st.states_pruned,
                         st.peak_states,
-                        st.verify_ns
+                        st.verify_ns,
+                        st.inline_candidates,
+                        st.bounds_elided
                     );
                 }
             }
@@ -130,7 +143,7 @@ fn cmd_allreduce(args: &Args) -> i32 {
     comm.data_mode = DataMode::Sampled(1 << 20);
     comm.prewarm_all();
 
-    let host = Arc::new(NcclBpfHost::new());
+    let host = Arc::new(env_host());
     if let Some(policy) = args.flag("policy") {
         let obj = policydir::build_named(policy).expect("policy");
         host.install_object(&obj).expect("verify");
@@ -196,7 +209,7 @@ fn cmd_train(args: &Args) -> i32 {
         Runtime::load(&default_artifacts_dir()).expect("load artifacts (run `make artifacts`)"),
     );
     let mut comm = Communicator::new(Topology::nvlink_b300(ranks.max(2)));
-    let host = Arc::new(NcclBpfHost::new());
+    let host = Arc::new(env_host());
     let policy = args.flag("policy").unwrap_or("nvlink_ring_mid_v2");
     let obj = policydir::build_named(policy).expect("policy");
     host.install_object(&obj).expect("verify");
@@ -220,7 +233,7 @@ fn cmd_train(args: &Args) -> i32 {
 }
 
 fn cmd_safety(_args: &Args) -> i32 {
-    let host = NcclBpfHost::new();
+    let host = env_host();
     println!("== safe policies (must be ACCEPTED) ==");
     for name in policydir::SAFE_POLICIES {
         let obj = policydir::build_named(name).expect(name);
@@ -244,7 +257,7 @@ fn cmd_safety(_args: &Args) -> i32 {
         }
     }
     println!("== stress policies (must verify under the complexity budget) ==");
-    if ncclbpf::bpf::verifier::pruning_enabled_by_env() {
+    if cli::env_verifier_prune().unwrap_or(true) {
         for (name, shape) in policydir::STRESS_POLICIES {
             let obj = policydir::build_named(name).expect(name);
             match host.install_object(&obj) {
@@ -420,7 +433,7 @@ fn cmd_trace(args: &Args) -> i32 {
     // --once always means exactly one batch, even with --follow
     let follow = args.flag_bool("follow") && !once;
 
-    let host = Arc::new(NcclBpfHost::new());
+    let host = Arc::new(env_host());
     host.printk_sink().set_writer(Box::new(std::io::stdout()));
     host.install_object(&policydir::build_named("latency_events").expect("latency_events"))
         .expect("latency_events must verify");
@@ -576,7 +589,7 @@ fn cmd_docs(args: &Args) -> i32 {
 }
 
 fn cmd_hotreload(_args: &Args) -> i32 {
-    let host = NcclBpfHost::new();
+    let host = env_host();
     let a = policydir::build_named("static_ring").unwrap();
     let b = policydir::build_named("nvlink_ring_mid_v2").unwrap();
     let r1 = host.install_object(&a).unwrap();

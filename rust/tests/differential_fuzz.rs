@@ -16,14 +16,25 @@ use ncclbpf::bpf::helpers::HelperEnv;
 use ncclbpf::bpf::insn::{
     alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, call_pseudo, class, disasm, exit, jmp,
     jmp_imm, jmp_reg, ld_map_fd, lddw, ldx, mov32_imm, mov64_imm, mov64_reg, size as msz, src,
-    stx, Insn,
+    st_imm, stx, Insn,
 };
-use ncclbpf::bpf::jit::JitProgram;
+use ncclbpf::bpf::jit::{JitOptions, JitProgram};
 use ncclbpf::bpf::maps::{MapDef, MapKind};
-use ncclbpf::bpf::{interp, verifier, MapRegistry, ProgType};
+use ncclbpf::bpf::{interp, verifier, MapRegistry, ProgType, VerifierConfig};
 use ncclbpf::host::ctx::layouts;
 use ncclbpf::util::Rng;
 use std::collections::HashMap;
+
+/// Which engine one differential arm runs a program on. `JitInline`
+/// compiles with the verifier's fact table (call-site inlining forced
+/// on); `JitTrampoline` compiles without facts, so every helper goes
+/// through the generic trampoline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Engine {
+    Interp,
+    JitTrampoline,
+    JitInline,
+}
 
 /// Base case count, scaled by `NCCLBPF_FUZZ_CASES` (which names the
 /// main generator's count; the other generators keep their ratio to
@@ -313,8 +324,11 @@ fn prune_on_off_verdicts_agree() {
                 _ => prog[i] = ldx(msz::DW, 0, rng.below(6) as u8, 0), // scalar deref
             }
         }
-        let on = verifier::verify_with(&prog, ProgType::Tuner, &lay.tuner, &maps, Some(true));
-        let off = verifier::verify_with(&prog, ProgType::Tuner, &lay.tuner, &maps, Some(false));
+        let cfg = |prune| VerifierConfig { prune: Some(prune), ..Default::default() };
+        let on =
+            verifier::verify_with_config(&prog, ProgType::Tuner, &lay.tuner, &maps, &cfg(true));
+        let off =
+            verifier::verify_with_config(&prog, ProgType::Tuner, &lay.tuner, &maps, &cfg(false));
         match (&on, &off) {
             (Ok(_), Ok(_)) => {}
             (Err(a), Err(b)) => {
@@ -423,45 +437,192 @@ fn differential_ringbuf_helpers_interp_vs_jit() {
     verifier_maps.insert(RING_MAP_ID_SLOT, ring_def());
     for case in 0..fuzz_cases(100) {
         let prog = gen_ringbuf_program(&mut rng);
-        verifier::verify(&prog, ProgType::Profiler, &lay.profiler, &verifier_maps)
+        let info = verifier::verify(&prog, ProgType::Profiler, &lay.profiler, &verifier_maps)
             .unwrap_or_else(|e| {
                 panic!("case {}: unverifiable ringbuf program: {}\n{}", case, e, disasm(&prog))
             });
-        let ops = interp::predecode(&prog).expect("predecode");
+        let (ops, slot2op) = interp::predecode_mapped(&prog).expect("predecode");
+        let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
 
-        // one fresh registry + ring per engine: same map id (1) in both
-        let run = |use_jit: bool| -> (u64, Vec<Vec<u8>>) {
+        // one fresh registry + ring per engine: same map id (1) in all
+        let run = |engine: Engine| -> (u64, Vec<Vec<u8>>) {
             let reg = MapRegistry::new();
             let ring = reg.create_or_get(&ring_def()).unwrap();
             assert_eq!(ring.id, RING_MAP_ID_SLOT);
             let env = HelperEnv::new(&reg, &[ring.id]).unwrap();
-            let r0 = if use_jit {
-                let j = JitProgram::compile_unchecked(&ops).expect("jit");
-                unsafe { j.call(std::ptr::null_mut(), &env) }
-            } else {
-                unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) }
+            let r0 = match engine {
+                Engine::Interp => unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) },
+                Engine::JitTrampoline => {
+                    let j = JitProgram::compile_unchecked(&ops).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+                Engine::JitInline => {
+                    let opts =
+                        JitOptions { facts: Some(&facts), env: Some(&env), inline: None };
+                    let j = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
             };
             let mut records = Vec::new();
             ring.ringbuf_drain(&mut |b| records.push(b.to_vec()));
             (r0, records)
         };
-        let (want_r0, want_records) = run(false);
-        let (got_r0, got_records) = run(true);
-        assert_eq!(
-            got_r0,
-            want_r0,
-            "case {}: r0 interp {:#x} != jit {:#x}\n{}",
-            case,
-            want_r0,
-            got_r0,
-            disasm(&prog)
-        );
-        assert_eq!(
-            got_records,
-            want_records,
-            "case {}: drained records differ between engines\n{}",
-            case,
-            disasm(&prog)
-        );
+        let (want_r0, want_records) = run(Engine::Interp);
+        for engine in [Engine::JitTrampoline, Engine::JitInline] {
+            let (got_r0, got_records) = run(engine);
+            assert_eq!(
+                got_r0,
+                want_r0,
+                "case {}: r0 interp {:#x} != {:?} {:#x}\n{}",
+                case,
+                want_r0,
+                engine,
+                got_r0,
+                disasm(&prog)
+            );
+            assert_eq!(
+                got_records,
+                want_records,
+                "case {}: drained records differ between interp and {:?}\n{}",
+                case,
+                engine,
+                disasm(&prog)
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lookup-inlining differential: array / per-cpu-array lookups with
+// constant and bounded spilled keys, plus bounded-scalar pointer
+// arithmetic into the value — the exact shapes the verifier's fact
+// table lets the JIT inline. Interp, trampoline-only JIT, and
+// fact-driven JIT must agree on every verified program.
+// ---------------------------------------------------------------------------
+
+const ARRAY_MAP_ID: u32 = 1; // first map registered per registry
+const PERCPU_MAP_ID: u32 = 2; // second
+
+fn lookup_defs() -> [MapDef; 2] {
+    [
+        MapDef {
+            name: "fuzz_arr".into(),
+            kind: MapKind::Array,
+            key_size: 4,
+            value_size: 16,
+            max_entries: 8,
+        },
+        MapDef {
+            name: "fuzz_pcpu".into(),
+            kind: MapKind::PerCpuArray,
+            key_size: 4,
+            value_size: 16,
+            max_entries: 8,
+        },
+    ]
+}
+
+/// One random verified lookup program: pick the array or per-cpu map,
+/// store a constant key (sometimes out of range — the inlined path
+/// must produce the same NULL) or a masked bounded key into a tracked
+/// 8-byte spill slot, look it up, then read a dword at a bounded
+/// variable offset into the 16-byte value.
+fn gen_lookup_program(rng: &mut Rng) -> Vec<Insn> {
+    let map_id = if rng.below(2) == 0 { ARRAY_MAP_ID } else { PERCPU_MAP_ID };
+    let mut p = Vec::new();
+    if rng.below(2) == 0 {
+        // constant key, 0..9 over 8 entries: in range → inlined
+        // base+offset address; out of range → constant NULL
+        p.push(st_imm(msz::DW, 10, -8, rng.below(10) as i32));
+    } else {
+        // bounded non-constant key: umax 7 < entries, so the verifier
+        // discharges the bound and the inlined path may elide its check
+        p.push(mov64_imm(7, rng.next_u32() as i32));
+        p.push(alu64_imm(alu::AND, 7, 7));
+        p.push(stx(msz::DW, 10, 7, -8));
+    }
+    p.extend(ld_map_fd(1, map_id));
+    p.push(mov64_reg(2, 10));
+    p.push(alu64_imm(alu::ADD, 2, -8));
+    p.push(Insn::new(class::JMP | jmp::CALL, 0, 0, 0, 1)); // map_lookup
+    p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+    p.push(mov64_imm(0, -1));
+    p.push(exit());
+    // bounded-scalar pointer arithmetic: read value[0..8] or value[8..16]
+    p.push(mov64_imm(8, rng.next_u32() as i32));
+    p.push(alu64_imm(alu::AND, 8, 1));
+    p.push(alu64_imm(alu::LSH, 8, 3));
+    p.push(alu64_reg(alu::ADD, 0, 8));
+    p.push(ldx(msz::DW, 0, 0, 0));
+    p.push(exit());
+    p
+}
+
+#[test]
+fn differential_lookup_inlining_interp_vs_jit() {
+    if !cfg!(all(unix, target_arch = "x86_64")) {
+        return; // no JIT to compare against
+    }
+    let mut rng = Rng::new(0x100c_2026);
+    let lay = layouts();
+    let mut verifier_maps = HashMap::new();
+    let [arr_def, pcpu_def] = lookup_defs();
+    verifier_maps.insert(ARRAY_MAP_ID, arr_def);
+    verifier_maps.insert(PERCPU_MAP_ID, pcpu_def);
+    for case in 0..fuzz_cases(150) {
+        let prog = gen_lookup_program(&mut rng);
+        let info = verifier::verify(&prog, ProgType::Tuner, &lay.tuner, &verifier_maps)
+            .unwrap_or_else(|e| {
+                panic!("case {}: unverifiable lookup program: {}\n{}", case, e, disasm(&prog))
+            });
+        let (ops, slot2op) = interp::predecode_mapped(&prog).expect("predecode");
+        let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
+        let salt = rng.next_u64();
+
+        let run = |engine: Engine| -> u64 {
+            let reg = MapRegistry::new();
+            let [arr_def, pcpu_def] = lookup_defs();
+            let arr = reg.create_or_get(&arr_def).unwrap();
+            let pcpu = reg.create_or_get(&pcpu_def).unwrap();
+            assert_eq!((arr.id, pcpu.id), (ARRAY_MAP_ID, PERCPU_MAP_ID));
+            // identical deterministic contents per engine, both value
+            // dwords populated so the variable-offset read observes them
+            for m in [&arr, &pcpu] {
+                for k in 0u32..8 {
+                    let mut v = [0u8; 16];
+                    v[..8].copy_from_slice(&salt.wrapping_mul(2 * k as u64 + 1).to_le_bytes());
+                    v[8..].copy_from_slice(&salt.rotate_left(k).to_le_bytes());
+                    m.update(&k.to_le_bytes(), &v).unwrap();
+                }
+            }
+            let env = HelperEnv::new(&reg, &[arr.id, pcpu.id]).unwrap();
+            match engine {
+                Engine::Interp => unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) },
+                Engine::JitTrampoline => {
+                    let j = JitProgram::compile_unchecked(&ops).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+                Engine::JitInline => {
+                    let opts =
+                        JitOptions { facts: Some(&facts), env: Some(&env), inline: None };
+                    let j = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+            }
+        };
+        let want = run(Engine::Interp);
+        for engine in [Engine::JitTrampoline, Engine::JitInline] {
+            let got = run(engine);
+            assert_eq!(
+                got,
+                want,
+                "case {}: interp {:#x} != {:?} {:#x}\n{}",
+                case,
+                want,
+                engine,
+                got,
+                disasm(&prog)
+            );
+        }
     }
 }

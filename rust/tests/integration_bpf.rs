@@ -1,7 +1,7 @@
 //! Integration tests across the BPF substrate: C → object → verifier →
 //! engines, plus object round trips through disk.
 
-use ncclbpf::bpf::program::{load_asm, load_object};
+use ncclbpf::bpf::program::{load, load_asm, LoadOptions};
 use ncclbpf::bpf::{MapRegistry, Object, ProgType};
 use ncclbpf::bpfc;
 use ncclbpf::cc::CollType;
@@ -10,7 +10,7 @@ use ncclbpf::host::ctx::{layouts, PolicyContext};
 fn run_tuner_c(src: &str, msg_size: u64) -> PolicyContext {
     let obj = bpfc::compile(src).expect("compile");
     let reg = MapRegistry::new();
-    let progs = load_object(&obj, &reg, &layouts()).expect("verify");
+    let progs = load(&obj, &reg, &layouts(), &LoadOptions::new()).expect("verify").programs;
     let mut ctx = PolicyContext::new(CollType::AllReduce, msg_size, 8, 1, 32);
     progs[0].run(&mut ctx as *mut _ as *mut u8);
     ctx
@@ -33,7 +33,7 @@ int f(struct policy_context *ctx) {
     let back = Object::load(&path).unwrap();
     assert_eq!(obj, back);
     let reg = MapRegistry::new();
-    let progs = load_object(&back, &reg, &layouts()).unwrap();
+    let progs = load(&back, &reg, &layouts(), &LoadOptions::new()).unwrap().programs;
     assert_eq!(progs[0].prog_type, ProgType::Tuner);
     let mut ctx = PolicyContext::new(CollType::AllReduce, 2 << 20, 8, 1, 32);
     progs[0].run(&mut ctx as *mut _ as *mut u8);
@@ -95,7 +95,7 @@ int count(struct profiler_context *ctx) {
 "#;
     let obj = bpfc::compile(src).unwrap();
     let reg = MapRegistry::new();
-    load_object(&obj, &reg, &layouts()).expect("percpu policy must verify");
+    load(&obj, &reg, &layouts(), &LoadOptions::new()).expect("percpu policy must verify");
     let m = reg.by_name("counters").unwrap();
     assert_eq!(m.def.kind, ncclbpf::bpf::MapKind::PerCpuArray);
 }
@@ -178,7 +178,7 @@ int f(struct {} *ctx) {{
         );
         let obj = bpfc::compile(&src).unwrap();
         let reg = MapRegistry::new();
-        let r = load_object(&obj, &reg, &layouts());
+        let r = load(&obj, &reg, &layouts(), &LoadOptions::new());
         assert_eq!(r.is_ok(), ok, "section {}", sec);
     }
 }

@@ -6,7 +6,7 @@
 
 use ncclbpf::bpf::insn::{decode_program, encode_program, Insn};
 use ncclbpf::bpf::maps::{Map, MapDef, MapKind};
-use ncclbpf::bpf::program::load_object;
+use ncclbpf::bpf::program::{load, LoadOptions};
 use ncclbpf::bpf::verifier::{verify, CtxLayout};
 use ncclbpf::bpf::{MapRegistry, ProgType};
 use ncclbpf::cc::algo::{chunk_ranges, ring_all_reduce, NativeSum};
@@ -160,7 +160,9 @@ int f(struct policy_context *ctx) {
     // back to an equivalent asm program — the property targets the
     // executor, not the frontend.
     let progs = match obj {
-        Ok(o) => load_object(&o, &reg, &ncclbpf::host::ctx::layouts()).unwrap(),
+        Ok(o) => {
+            load(&o, &reg, &ncclbpf::host::ctx::layouts(), &LoadOptions::new()).unwrap().programs
+        }
         Err(_) => ncclbpf::bpf::program::load_asm(
             r#"
 map state hash key=4 value=8 entries=16

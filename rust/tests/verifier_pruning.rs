@@ -12,13 +12,24 @@
 //! - `insns_processed` on the loop-heavy stress policy drops >= 5x
 //!   with pruning (the `verify --stats` regression gate).
 
-use ncclbpf::bpf::program::verify_object;
+use ncclbpf::bpf::program::load;
 use ncclbpf::bpf::verifier::COMPLEXITY_BUDGET;
-use ncclbpf::bpf::MapRegistry;
+use ncclbpf::bpf::{CtxLayouts, LoadError, LoadOptions, MapRegistry, Object, VerifyInfo};
 use ncclbpf::host::ctx;
 use ncclbpf::host::policydir::{
     build_named, build_unsafe, SAFE_POLICIES, STRESS_POLICIES, UNSAFE_POLICIES,
 };
+
+/// The old `verify_object` shape through the unified [`load`] entry
+/// point: verify-only, with an explicit pruning override.
+fn verify_object(
+    obj: &Object,
+    reg: &MapRegistry,
+    lay: &CtxLayouts,
+    prune: Option<bool>,
+) -> Result<Vec<(String, VerifyInfo, u64)>, LoadError> {
+    load(obj, reg, lay, &LoadOptions::new().verify_only(true).prune(prune)).map(|o| o.verified)
+}
 
 #[test]
 fn stress_policies_verify_with_pruning_and_exhaust_budget_without() {

@@ -1,0 +1,13 @@
+; cost_blowout -- verifies clean (bounded and safe) but its certified
+; worst-case cost (2*3000 + 3 = 6003 units) exceeds the Tuner install
+; budget (5000), so the host's cost-certifier gate must reject it at
+; load with a diagnostic naming the hot path. Deliberately NOT in the
+; unsafe corpus: the verifier accepts it; only the budget gate fires.
+
+prog tuner cost_blowout
+  mov64 r1, 3000
+loop:
+  sub64 r1, 1
+  jne r1, 0, loop
+  mov64 r0, 0
+  exit

@@ -1,0 +1,12 @@
+; cost_tight -- a safe tuner sized to certify just under the Tuner
+; install budget (5000 cost units): a concrete 2483-lap countdown
+; certifies 2*2483 + 3 = 4969 units, >95% of the budget, exercising
+; the worst-case cost certifier's headroom accounting at install.
+
+prog tuner cost_tight
+  mov64 r1, 2483
+loop:
+  sub64 r1, 1
+  jne r1, 0, loop
+  mov64 r0, 0
+  exit

@@ -585,6 +585,83 @@ pub fn verifier_bench(opts: &BenchOpts) -> BenchReport {
     rep
 }
 
+/// BENCH_analysis — the post-verification static-analysis price list:
+/// per-policy analyze wall time (liveness + CFG + dead-code rewrite +
+/// cost report, verification excluded) over the safe corpus with the
+/// certified numbers alongside (`dead_insns`, `max_cost`,
+/// `removed_insns`), plus per-decision execution twins with the
+/// verifier-proven rewrite on (the default) vs off — the acceptance
+/// shape: every `<policy>_rewrite` median at or below its
+/// `<policy>_norewrite` twin within noise, since rewriting only ever
+/// removes instructions.
+pub fn analysis_bench(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("analysis");
+    let lay = crate::host::ctx::layouts();
+
+    // analyze wall time + certified numbers per safe policy
+    for name in policydir::SAFE_POLICIES {
+        let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+        let iters = opts.iters.max(3);
+        let mut times = Vec::with_capacity(iters);
+        let mut dead = 0u64;
+        let mut max_cost = 0u64;
+        let mut removed = 0u64;
+        for _ in 0..iters {
+            let reg = MapRegistry::new();
+            let analyses = crate::bpf::analysis::analyze_object(
+                &obj,
+                &reg,
+                &lay,
+                &crate::bpf::VerifierConfig::default(),
+            )
+            .unwrap_or_else(|e| panic!("{} must analyze: {}", name, e));
+            times.push(analyses.iter().map(|a| a.analyze_ns as f64).sum::<f64>());
+            dead = analyses.iter().map(|a| a.info.dead_insns).sum();
+            max_cost = analyses.iter().map(|a| a.info.max_cost).max().unwrap_or(0);
+            removed = analyses
+                .iter()
+                .filter_map(|a| a.rewrite.as_ref())
+                .map(|r| r.stats.removed_insns as u64)
+                .sum();
+        }
+        let (p50, p99, mean) = stats3(&times);
+        rep.push(
+            Series::new(format!("analyze_{}", name), "ns", p50, p99, mean)
+                .with("dead_insns", dead as f64)
+                .with("max_cost", max_cost as f64)
+                .with("removed_insns", removed as f64),
+        );
+    }
+
+    // per-decision twins: full hook path with the rewrite on vs off
+    let args = decision_args(8 << 20);
+    for name in ["adaptive_channels", "slo_enforcer", "cost_tight"] {
+        for (mode, rewrite) in [("rewrite", None), ("norewrite", Some(false))] {
+            let mut host = NcclBpfHost::new();
+            host.set_load_options(LoadOptions::new().rewrite(rewrite));
+            let obj = policydir::build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            host.install_object(&obj).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            seed_policy_maps(&host, args.comm_id);
+            let (p50, p99, mean) = measure(opts.calls, || {
+                let mut cost = CostTable::all_sentinel();
+                let mut ch = 0u32;
+                host.tuner_decide(&args, &mut cost, &mut ch);
+                std::hint::black_box((&cost, ch));
+            });
+            let removed = host
+                .tuner_program()
+                .and_then(|p| p.rewrite_stats)
+                .map(|s| s.removed_insns as f64)
+                .unwrap_or(0.0);
+            rep.push(
+                Series::new(format!("{}_{}", name, mode), "ns", p50, p99, mean)
+                    .with("removed_insns", removed),
+            );
+        }
+    }
+    rep
+}
+
 /// BENCH_inline — the verifier-informed JIT inlining price list: the
 /// map-lookup tuner policies and the ringbuf profiler policy measured
 /// through the full hook path with call-site inlining on (the default)
@@ -835,6 +912,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         calls_bench(opts),
         verifier_bench(opts),
         inline_bench(opts),
+        analysis_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -854,8 +932,8 @@ mod tests {
     #[test]
     fn table1_rows_have_positive_latencies() {
         let rep = table1_overhead(&tiny());
-        // 4 native + 8 policies + 2 interp ablations + 2 stack-zeroing
-        assert_eq!(rep.series.len(), 16);
+        // 4 native + 9 policies + 2 interp ablations + 2 stack-zeroing
+        assert_eq!(rep.series.len(), 17);
         for s in &rep.series {
             assert!(s.median > 0.0 && s.p99 > 0.0 && s.mean > 0.0, "{}", s.label);
             assert_eq!(s.unit, "ns");
@@ -1022,6 +1100,40 @@ mod tests {
                 "{}: must verify under budget",
                 name
             );
+        }
+    }
+
+    #[test]
+    fn analysis_bench_covers_corpus_and_rewrite_pairs() {
+        let rep = analysis_bench(&tiny());
+        // one analyze row per safe policy + 3 policies x 2 rewrite modes
+        assert_eq!(rep.series.len(), policydir::SAFE_POLICIES.len() + 6);
+        for s in &rep.series {
+            assert!(s.median > 0.0 && s.mean > 0.0, "{}", s.label);
+            assert_eq!(s.unit, "ns");
+        }
+        let field = |s: &Series, k: &str| {
+            s.extra.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        // the certifier's core promise: every safe policy gets a
+        // finite, positive worst-case cost certificate
+        for name in policydir::SAFE_POLICIES {
+            let s = rep
+                .series
+                .iter()
+                .find(|s| s.label == format!("analyze_{}", name))
+                .unwrap_or_else(|| panic!("missing analyze_{}", name));
+            assert!(field(s, "max_cost") > 0.0, "{}: must certify a cost", name);
+        }
+        for name in ["adaptive_channels", "slo_enforcer", "cost_tight"] {
+            for mode in ["rewrite", "norewrite"] {
+                assert!(
+                    rep.series.iter().any(|s| s.label == format!("{}_{}", name, mode)),
+                    "missing {}_{}",
+                    name,
+                    mode
+                );
+            }
         }
     }
 

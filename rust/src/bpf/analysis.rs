@@ -1,0 +1,1159 @@
+//! Post-verification static analysis: liveness, verifier-proven
+//! dead-code rewriting, and the worst-case cost certifier (DESIGN.md
+//! §12).
+//!
+//! Everything in this module consumes what path exploration already
+//! proved — [`VerifyInfo::branch_fates`], [`VerifyInfo::insn_max_count`]
+//! and the checkpoint-memoized cost bounds — and turns it into three
+//! load-time surfaces:
+//!
+//! 1. **Liveness** ([`liveness`]): a backward register/stack dataflow
+//!    over the CFG, 64/32-bit reads distinguished, call-frame aware
+//!    across bpf-to-bpf subprograms. Reported by `ncclbpf analyze`;
+//!    deliberately conservative (a derived stack pointer makes the
+//!    whole frame live) because it is an analysis surface, not a
+//!    rewrite driver.
+//! 2. **Dead-code rewriting** ([`rewrite`]): conditional jumps whose
+//!    outcome was constant on every accepted path are hard-wired to
+//!    `ja` / `ja +0`, and never-visited instructions are removed, with
+//!    facts, branch offsets, subprogram call offsets and lddw pairs
+//!    remapped so the verifier-informed JIT still fires on the
+//!    rewritten program. Sound because every concrete execution of an
+//!    accepted program is covered by some explored visit (pruned
+//!    continuations by the explored continuation of their subsuming
+//!    checkpoint).
+//! 3. **Cost certification** ([`cost_report`], [`budget_diagnostic`]):
+//!    the verifier's path-consistent `max_cost` (per-instruction costs
+//!    from [`insn_cost`], tail-call chain factor from
+//!    [`chain_factor`]) rendered as a per-subprogram report with the
+//!    hot path named — the admission-gate diagnostic for
+//!    `LoadOptions::max_cost` and the host's per-hook budgets.
+
+use super::helpers::{self, ArgType, ProgType};
+use super::insn::{self, class, jmp, size, src, Insn, STACK_SIZE};
+use super::interp;
+use super::maps::MapRegistry;
+use super::object::Object;
+use super::program::{self, CtxLayouts, LoadError};
+use super::verifier::{self, BranchFate, InsnFacts, VerifierConfig, VerifyInfo};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Cost model
+// ---------------------------------------------------------------------------
+
+/// Abstract cost of one helper call, in the same units as plain
+/// instructions (1 unit ≈ one interpreted ALU op). The table is a
+/// relative-latency model, not a measurement: map mutations cost more
+/// than lookups, `trace_printk` is the formatting outlier, ringbuf
+/// copy-out (`output`) costs more than reserve/submit. Unknown helpers
+/// get a deliberately pessimistic default so a certificate never
+/// under-states a helper the table has not priced.
+pub fn helper_cost(id: i32) -> u64 {
+    match id {
+        helpers::id::MAP_LOOKUP_ELEM => 20,
+        helpers::id::MAP_UPDATE_ELEM => 25,
+        helpers::id::MAP_DELETE_ELEM => 25,
+        helpers::id::KTIME_GET_NS => 10,
+        helpers::id::TRACE_PRINTK => 100,
+        helpers::id::GET_PRANDOM_U32 => 10,
+        helpers::id::GET_SMP_PROCESSOR_ID => 5,
+        helpers::id::TAIL_CALL => 15,
+        helpers::id::RINGBUF_OUTPUT => 40,
+        helpers::id::RINGBUF_RESERVE => 25,
+        helpers::id::RINGBUF_SUBMIT => 15,
+        helpers::id::RINGBUF_DISCARD => 15,
+        helpers::id::RINGBUF_QUERY => 10,
+        _ => 50,
+    }
+}
+
+/// Abstract cost of executing one instruction once: 1 unit, plus the
+/// helper surcharge at helper call sites (bpf-to-bpf calls cost 1 —
+/// the callee's instructions are accounted individually).
+pub fn insn_cost(ins: &Insn) -> u64 {
+    if ins.class() == class::JMP && ins.op() == jmp::CALL && !ins.is_pseudo_call() {
+        1 + helper_cost(ins.imm)
+    } else {
+        1
+    }
+}
+
+/// Tail-call chain multiplier: a program that can `bpf_tail_call` may
+/// transfer control up to [`interp::MAX_TAIL_CALLS`] times, so its
+/// certified per-invocation cost is the single-body worst case times
+/// the maximum chain length (34 bodies). Programs that never tail-call
+/// pay no factor.
+pub fn chain_factor(helpers_used: &[i32]) -> u64 {
+    if helpers_used.contains(&helpers::id::TAIL_CALL) {
+        interp::MAX_TAIL_CALLS as u64 + 1
+    } else {
+        1
+    }
+}
+
+/// Mark the second (operand-carrying) slot of every 16-byte `lddw`.
+fn lddw_hi_mask(insns: &[Insn]) -> Vec<bool> {
+    let mut hi = vec![false; insns.len()];
+    let mut i = 0;
+    while i < insns.len() {
+        if insns[i].is_lddw() {
+            if i + 1 < insns.len() {
+                hi[i + 1] = true;
+            }
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    hi
+}
+
+// ---------------------------------------------------------------------------
+// CFG
+// ---------------------------------------------------------------------------
+
+/// One basic block of the instruction stream, in raw slot indices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    /// first slot of the block
+    pub start: usize,
+    /// one past the last slot
+    pub end: usize,
+    /// successor blocks, by their `start` slot (`exit` blocks have
+    /// none; call edges are not represented — calls return)
+    pub succs: Vec<usize>,
+}
+
+/// Partition a program into basic blocks. Leaders are slot 0, every
+/// branch / `ja` target, every fall-through after a branch or `exit`,
+/// and every bpf-to-bpf call target (subprogram entry). Helper calls
+/// do not end blocks.
+pub fn cfg(insns: &[Insn]) -> Vec<Block> {
+    let n = insns.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let hi = lddw_hi_mask(insns);
+    let mut leader = vec![false; n + 1];
+    leader[0] = true;
+    leader[n] = true;
+    for (i, ins) in insns.iter().enumerate() {
+        if hi[i] || (ins.class() != class::JMP && ins.class() != class::JMP32) {
+            continue;
+        }
+        let op = ins.op();
+        if op == jmp::EXIT {
+            leader[i + 1] = true;
+        } else if op == jmp::CALL {
+            if ins.is_pseudo_call() {
+                let t = (i as i64 + 1 + ins.imm as i64) as usize;
+                if t < n {
+                    leader[t] = true;
+                }
+            }
+        } else {
+            let t = (i as i64 + 1 + ins.off as i64) as usize;
+            if t < n {
+                leader[t] = true;
+            }
+            leader[i + 1] = true;
+        }
+    }
+    let starts: Vec<usize> = (0..n).filter(|&i| leader[i]).collect();
+    let mut blocks = Vec::with_capacity(starts.len());
+    for (bi, &start) in starts.iter().enumerate() {
+        let end = starts.get(bi + 1).copied().unwrap_or(n);
+        let mut last = end - 1;
+        if hi[last] && last > start {
+            last -= 1;
+        }
+        let ins = &insns[last];
+        let mut succs = Vec::new();
+        if ins.class() == class::JMP || ins.class() == class::JMP32 {
+            let op = ins.op();
+            if op == jmp::EXIT {
+                // no successors
+            } else if op == jmp::JA {
+                succs.push((last as i64 + 1 + ins.off as i64) as usize);
+            } else if op == jmp::CALL {
+                if end < n {
+                    succs.push(end);
+                }
+            } else {
+                succs.push((last as i64 + 1 + ins.off as i64) as usize);
+                if end < n {
+                    succs.push(end);
+                }
+            }
+        } else if end < n {
+            succs.push(end);
+        }
+        blocks.push(Block { start, end, succs });
+    }
+    blocks
+}
+
+// ---------------------------------------------------------------------------
+// Liveness
+// ---------------------------------------------------------------------------
+
+/// Live-in set at one instruction: which registers are read below
+/// before being overwritten (full-width vs low-32-bit demand tracked
+/// separately) and which stack dwords of the current frame may still
+/// be read.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LiveSet {
+    /// bit r set: the full 64 bits of `r` are live
+    pub live64: u16,
+    /// bit r set: the low 32 bits of `r` are live (a 32-bit read)
+    pub live32: u16,
+    /// bit k set: dword k of the 512-byte frame (k = 0 at the frame
+    /// bottom, `r10-512`; k = 63 just below `r10`) may be read
+    pub stack: u64,
+}
+
+impl LiveSet {
+    fn union(self, o: LiveSet) -> LiveSet {
+        LiveSet {
+            live64: self.live64 | o.live64,
+            live32: self.live32 | o.live32,
+            stack: self.stack | o.stack,
+        }
+    }
+    fn kill(&mut self, r: u8) {
+        self.live64 &= !rbit(r);
+        self.live32 &= !rbit(r);
+    }
+    fn gen64(&mut self, r: u8) {
+        self.live64 |= rbit(r);
+    }
+    fn gen32(&mut self, r: u8) {
+        self.live32 |= rbit(r);
+    }
+    fn demanded(&self, r: u8) -> bool {
+        (self.live64 | self.live32) & rbit(r) != 0
+    }
+}
+
+const fn rbit(r: u8) -> u16 {
+    1u16 << r
+}
+
+/// r1–r5: the argument registers a bpf-to-bpf call hands to its callee.
+const ARGS_MASK: u16 = 0b11_1110;
+/// r0–r5: clobbered by every call (helper or bpf-to-bpf).
+const CALL_CLOBBER: u16 = 0b11_1111;
+
+/// The dword-granular stack bits an access at `off` (frame-relative,
+/// negative) of `width` bytes touches. Out-of-frame accesses (which
+/// the verifier rejects) map to no bits.
+fn stack_bits(off: i16, width: u64) -> u64 {
+    let lo = off as i64 + STACK_SIZE;
+    if lo < 0 || lo + width as i64 > STACK_SIZE {
+        return 0;
+    }
+    let first = lo / 8;
+    let last = (lo + width as i64 - 1) / 8;
+    let mut m = 0u64;
+    for b in first..=last {
+        m |= 1 << b;
+    }
+    m
+}
+
+/// Forward may-analysis: bit r set at a slot's entry means rr may hold
+/// a frame-derived pointer there (r10 always does). Feeds the
+/// conservative side of [`liveness`]: a load through a derived stack
+/// pointer makes the whole frame live, because the dataflow does not
+/// track pointer offsets.
+fn stackish(insns: &[Insn]) -> Vec<u16> {
+    let n = insns.len();
+    let hi = lddw_hi_mask(insns);
+    let mut st = vec![0u16; n + 1];
+    if n > 0 {
+        st[0] = rbit(10);
+    }
+    fn prop(st: &mut [u16], j: usize, bits: u16, changed: &mut bool) {
+        if j < st.len() && st[j] | bits != st[j] {
+            st[j] |= bits;
+            *changed = true;
+        }
+    }
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            if hi[i] {
+                continue;
+            }
+            let ins = &insns[i];
+            let cur = st[i] | rbit(10);
+            match ins.class() {
+                class::LD => {
+                    // lddw: dst becomes a map pointer or constant
+                    prop(&mut st, i + 2, (cur & !rbit(ins.dst)) | rbit(10), &mut changed);
+                }
+                class::LDX => {
+                    // a fill from a (possibly derived) stack slot may
+                    // reload a spilled frame pointer
+                    let out = if cur & rbit(ins.src) != 0 {
+                        cur | rbit(ins.dst)
+                    } else {
+                        cur & !rbit(ins.dst)
+                    };
+                    prop(&mut st, i + 1, out | rbit(10), &mut changed);
+                }
+                class::ST | class::STX => {
+                    prop(&mut st, i + 1, cur, &mut changed);
+                }
+                class::ALU64 => {
+                    use super::insn::alu;
+                    let out = match ins.op() {
+                        alu::MOV => {
+                            if ins.src_flag() == src::X {
+                                if cur & rbit(ins.src) != 0 {
+                                    cur | rbit(ins.dst)
+                                } else {
+                                    cur & !rbit(ins.dst)
+                                }
+                            } else {
+                                cur & !rbit(ins.dst)
+                            }
+                        }
+                        alu::ADD | alu::SUB => {
+                            // pointer arithmetic preserves pointer-ness
+                            if ins.src_flag() == src::X && cur & rbit(ins.src) != 0 {
+                                cur | rbit(ins.dst)
+                            } else {
+                                cur
+                            }
+                        }
+                        _ => cur & !rbit(ins.dst),
+                    };
+                    prop(&mut st, i + 1, out | rbit(10), &mut changed);
+                }
+                class::ALU => {
+                    // 32-bit writes truncate: never a usable pointer
+                    prop(&mut st, i + 1, (cur & !rbit(ins.dst)) | rbit(10), &mut changed);
+                }
+                class::JMP | class::JMP32 => {
+                    let op = ins.op();
+                    if op == jmp::EXIT {
+                        // return handled at the call site
+                    } else if op == jmp::JA {
+                        let t = (i as i64 + 1 + ins.off as i64) as usize;
+                        prop(&mut st, t, cur, &mut changed);
+                    } else if op == jmp::CALL {
+                        if ins.is_pseudo_call() {
+                            let t = (i as i64 + 1 + ins.imm as i64) as usize;
+                            prop(&mut st, t, (cur & ARGS_MASK) | rbit(10), &mut changed);
+                        }
+                        prop(&mut st, i + 1, (cur & !CALL_CLOBBER) | rbit(10), &mut changed);
+                    } else {
+                        let t = (i as i64 + 1 + ins.off as i64) as usize;
+                        prop(&mut st, t, cur, &mut changed);
+                        prop(&mut st, i + 1, cur, &mut changed);
+                    }
+                }
+                _ => {
+                    prop(&mut st, i + 1, cur, &mut changed);
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    st.truncate(n);
+    st
+}
+
+/// Backward register/stack liveness over the whole instruction stream
+/// (subprogram-aware: a bpf-to-bpf call's register demand is its
+/// callee's entry live-in restricted to r1–r5). Returns the live-in
+/// set per raw slot; an lddw's second slot carries its own
+/// fall-through set so the table reads contiguously.
+///
+/// Conservative choices (sound over-approximation, documented in
+/// DESIGN.md §12): a helper whose signature reads memory
+/// (`MapKey`/`MapValue`/`MemLen`) makes the whole frame live, as does
+/// any bpf-to-bpf call (the callee may read the caller frame through
+/// pointer arguments) and any load through a frame-derived pointer
+/// that is not r10 itself.
+pub fn liveness(insns: &[Insn], _spans: &[(u32, u32)]) -> Vec<LiveSet> {
+    let n = insns.len();
+    let hi = lddw_hi_mask(insns);
+    let stackish = stackish(insns);
+    let mut live = vec![LiveSet::default(); n + 1];
+    loop {
+        let mut changed = false;
+        for i in (0..n).rev() {
+            let new_in = if hi[i] {
+                live[i + 1]
+            } else {
+                transfer(insns, i, &live, &stackish)
+            };
+            if new_in != live[i] {
+                live[i] = new_in;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    live.truncate(n);
+    live
+}
+
+/// One backward transfer: live-in of slot `i` from the live-in sets of
+/// its successors.
+fn transfer(insns: &[Insn], i: usize, live: &[LiveSet], stackish: &[u16]) -> LiveSet {
+    use super::insn::alu;
+    let ins = &insns[i];
+    let n = insns.len();
+    let succ = |j: usize| -> LiveSet {
+        if j < n {
+            live[j]
+        } else {
+            LiveSet::default()
+        }
+    };
+    match ins.class() {
+        class::LD => {
+            // lddw: pure 64-bit def of dst
+            let mut s = succ(i + 2);
+            s.kill(ins.dst);
+            s
+        }
+        class::LDX => {
+            let mut s = succ(i + 1);
+            s.kill(ins.dst);
+            s.gen64(ins.src);
+            if ins.src == 10 {
+                s.stack |= stack_bits(ins.off, ins.access_width());
+            } else if stackish[i] & rbit(ins.src) != 0 {
+                s.stack = u64::MAX;
+            }
+            s
+        }
+        class::ST | class::STX => {
+            let mut s = succ(i + 1);
+            // an exact dword store through r10 overwrites the slot:
+            // its previous value is dead above this point
+            if ins.dst == 10 && ins.sz() == size::DW && (ins.off as i64 + STACK_SIZE) % 8 == 0 {
+                s.stack &= !stack_bits(ins.off, 8);
+            }
+            s.gen64(ins.dst);
+            if ins.class() == class::STX {
+                if ins.sz() == size::DW {
+                    s.gen64(ins.src);
+                } else {
+                    s.gen32(ins.src);
+                }
+            }
+            s
+        }
+        class::ALU64 => {
+            let out = succ(i + 1);
+            match ins.op() {
+                alu::MOV => {
+                    let d64 = out.live64 & rbit(ins.dst) != 0;
+                    let d32 = out.live32 & rbit(ins.dst) != 0;
+                    let mut s = out;
+                    s.kill(ins.dst);
+                    if ins.src_flag() == src::X {
+                        // demand transfers to the source at the widths
+                        // the destination was read at
+                        if d64 {
+                            s.gen64(ins.src);
+                        }
+                        if d32 {
+                            s.gen32(ins.src);
+                        }
+                    }
+                    s
+                }
+                alu::NEG | alu::END => {
+                    let mut s = out;
+                    if s.demanded(ins.dst) {
+                        s.gen64(ins.dst);
+                    } else {
+                        s.kill(ins.dst);
+                    }
+                    s
+                }
+                _ => {
+                    let mut s = out;
+                    if s.demanded(ins.dst) {
+                        s.gen64(ins.dst);
+                        if ins.src_flag() == src::X {
+                            s.gen64(ins.src);
+                        }
+                    } else {
+                        s.kill(ins.dst);
+                    }
+                    s
+                }
+            }
+        }
+        class::ALU => {
+            // 32-bit ALU zero-extends: the write fully defines dst,
+            // and any demand on dst (either width) becomes a 32-bit
+            // demand on the operands
+            let out = succ(i + 1);
+            let demanded = out.demanded(ins.dst);
+            let mut s = out;
+            s.kill(ins.dst);
+            if demanded {
+                match ins.op() {
+                    alu::MOV => {
+                        if ins.src_flag() == src::X {
+                            s.gen32(ins.src);
+                        }
+                    }
+                    alu::NEG | alu::END => {
+                        s.gen32(ins.dst);
+                    }
+                    _ => {
+                        s.gen32(ins.dst);
+                        if ins.src_flag() == src::X {
+                            s.gen32(ins.src);
+                        }
+                    }
+                }
+            }
+            s
+        }
+        class::JMP | class::JMP32 => {
+            let op = ins.op();
+            if op == jmp::EXIT {
+                // r0 is the return value: observable at the hook
+                // boundary (main) and by the caller (subprograms)
+                let mut s = LiveSet::default();
+                s.gen64(0);
+                s
+            } else if op == jmp::JA {
+                succ((i as i64 + 1 + ins.off as i64) as usize)
+            } else if op == jmp::CALL {
+                let mut s = succ(i + 1);
+                s.live64 &= !CALL_CLOBBER;
+                s.live32 &= !CALL_CLOBBER;
+                if ins.is_pseudo_call() {
+                    // the callee's entry demand on r1..r5 is this
+                    // call's register read set; its pointer args may
+                    // read anywhere in the caller frame
+                    let callee = succ((i as i64 + 1 + ins.imm as i64) as usize);
+                    s.live64 |= callee.live64 & ARGS_MASK;
+                    s.live32 |= callee.live32 & ARGS_MASK;
+                    s.stack = u64::MAX;
+                } else {
+                    match helpers::spec_by_id(ins.imm) {
+                        Some(spec) => {
+                            for (k, arg) in spec.args.iter().enumerate() {
+                                s.gen64(k as u8 + 1);
+                                if matches!(
+                                    arg,
+                                    ArgType::MapKey | ArgType::MapValue | ArgType::MemLen
+                                ) {
+                                    s.stack = u64::MAX;
+                                }
+                            }
+                        }
+                        None => {
+                            for r in 1..=5u8 {
+                                s.gen64(r);
+                            }
+                            s.stack = u64::MAX;
+                        }
+                    }
+                }
+                s
+            } else {
+                let t = succ((i as i64 + 1 + ins.off as i64) as usize);
+                let mut s = t.union(succ(i + 1));
+                if ins.class() == class::JMP32 {
+                    s.gen32(ins.dst);
+                    if ins.src_flag() == src::X {
+                        s.gen32(ins.src);
+                    }
+                } else {
+                    s.gen64(ins.dst);
+                    if ins.src_flag() == src::X {
+                        s.gen64(ins.src);
+                    }
+                }
+                s
+            }
+        }
+        _ => succ(i + 1),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dead-code rewriting
+// ---------------------------------------------------------------------------
+
+/// What [`rewrite`] changed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RewriteStats {
+    /// conditionals hard-wired to an unconditional `ja` (always taken)
+    pub wired_taken: u32,
+    /// conditionals hard-wired to `ja +0` (always fell through)
+    pub wired_fallthrough: u32,
+    /// never-visited slots removed (lddw pairs count as 2)
+    pub removed_insns: u32,
+}
+
+/// A rewritten program: the new instruction stream, the fact table
+/// remapped onto it, and the old-slot → new-slot map
+/// ([`u32::MAX`] = removed — the same convention
+/// `interp::predecode_mapped` uses).
+#[derive(Clone, Debug)]
+pub struct Rewrite {
+    /// the rewritten instruction stream
+    pub insns: Vec<Insn>,
+    /// [`VerifyInfo::facts`] remapped to the new slots (empty when fact
+    /// emission was off)
+    pub facts: Vec<InsnFacts>,
+    /// old slot → new slot (`u32::MAX` for removed slots); one
+    /// past-the-end sentinel included
+    pub slot_map: Vec<u32>,
+    /// what changed
+    pub stats: RewriteStats,
+}
+
+/// Apply verifier-proven dead-code rewriting: hard-wire conditionals
+/// whose [`BranchFate`] was constant on every accepted path, drop
+/// never-visited slots (lddw pairs live and die together), and remap
+/// branch offsets, bpf-to-bpf call offsets and the fact table onto the
+/// compacted stream. Returns `None` when the verifier proved nothing
+/// rewritable (or `info` carries no per-slot tables — e.g. a
+/// hand-built `VerifyInfo`).
+///
+/// Soundness: a `BranchFate::AlwaysTaken`/`AlwaysFallthrough` records
+/// that *every* explored visit of the branch resolved the same way,
+/// and every concrete execution of an accepted program is covered by
+/// some explored visit (pruned continuations inherit their subsuming
+/// checkpoint's explored continuation) — so the never-observed arm is
+/// unreachable at runtime, and every removed slot
+/// (`insn_max_count == 0`) can never execute. Kept branch targets are
+/// always kept themselves: a hard-wired `ja`'s target was visited on
+/// the surviving arm.
+pub fn rewrite(insns: &[Insn], info: &VerifyInfo) -> Option<Rewrite> {
+    let n = insns.len();
+    if n == 0 || info.insn_max_count.len() != n || info.branch_fates.len() != n {
+        return None;
+    }
+    let hi = lddw_hi_mask(insns);
+
+    // pass 1: hard-wire proven-constant conditionals
+    let mut out: Vec<Insn> = insns.to_vec();
+    let mut stats = RewriteStats::default();
+    for (i, ins) in insns.iter().enumerate() {
+        if info.insn_max_count[i] == 0
+            || (ins.class() != class::JMP && ins.class() != class::JMP32)
+        {
+            continue;
+        }
+        let op = ins.op();
+        if op == jmp::JA || op == jmp::CALL || op == jmp::EXIT {
+            continue;
+        }
+        match info.branch_fates[i] {
+            BranchFate::AlwaysTaken => {
+                out[i] = insn::ja(ins.off);
+                stats.wired_taken += 1;
+            }
+            BranchFate::AlwaysFallthrough => {
+                out[i] = insn::ja(0);
+                stats.wired_fallthrough += 1;
+            }
+            _ => {}
+        }
+    }
+
+    // pass 2: removal mask — a slot survives iff it was visited on
+    // some accepted path; an lddw's hi slot follows its lo slot
+    let keep: Vec<bool> = (0..n)
+        .map(|i| {
+            if hi[i] {
+                info.insn_max_count[i - 1] > 0
+            } else {
+                info.insn_max_count[i] > 0
+            }
+        })
+        .collect();
+    let removed = keep.iter().filter(|&&k| !k).count();
+    if removed == 0 && stats.wired_taken == 0 && stats.wired_fallthrough == 0 {
+        return None;
+    }
+    stats.removed_insns = removed as u32;
+
+    // old slot -> new slot (u32::MAX = removed), sentinel included
+    let mut slot_map = vec![u32::MAX; n + 1];
+    let mut next = 0u32;
+    for i in 0..n {
+        if keep[i] {
+            slot_map[i] = next;
+            next += 1;
+        }
+    }
+    slot_map[n] = next;
+
+    // pass 3: rebuild, remapping branch offsets and pseudo-call imms.
+    // Distances only shrink (removal is compaction), so i16/i32 ranges
+    // cannot overflow.
+    let mut new_insns: Vec<Insn> = Vec::with_capacity(next as usize);
+    for (i, ins) in out.iter().enumerate() {
+        if !keep[i] {
+            continue;
+        }
+        let mut ins = *ins;
+        if ins.class() == class::JMP || ins.class() == class::JMP32 {
+            let op = ins.op();
+            if op == jmp::CALL {
+                if ins.is_pseudo_call() {
+                    let tgt = (i as i64 + 1 + ins.imm as i64) as usize;
+                    debug_assert!(keep[tgt], "call target removed");
+                    ins.imm = (slot_map[tgt] as i64 - slot_map[i] as i64 - 1) as i32;
+                }
+            } else if op != jmp::EXIT {
+                let tgt = (i as i64 + 1 + ins.off as i64) as usize;
+                debug_assert!(keep[tgt], "branch target removed");
+                ins.off = (slot_map[tgt] as i64 - slot_map[i] as i64 - 1) as i16;
+            }
+        }
+        new_insns.push(ins);
+    }
+    let new_len = new_insns.len();
+    let facts = interp::remap_facts(&info.facts, &slot_map, new_len);
+    Some(Rewrite { insns: new_insns, facts, slot_map, stats })
+}
+
+// ---------------------------------------------------------------------------
+// Cost report + budget diagnostic
+// ---------------------------------------------------------------------------
+
+/// The certified worst-case cost of one program, decomposed for the
+/// `ncclbpf analyze` report and the host's admission diagnostic.
+#[derive(Clone, Debug, Default)]
+pub struct CostReport {
+    /// certified per-invocation worst case (chain factor included) —
+    /// [`VerifyInfo::max_cost`]
+    pub total: u64,
+    /// tail-call chain multiplier baked into `total` (1 or 34)
+    pub chain_factor: u64,
+    /// worst-case cost envelope per subprogram span ([0] = main)
+    pub per_subprog: Vec<u64>,
+    /// the single hottest instruction, if any cost was certified
+    pub hot: Option<HotSpot>,
+}
+
+/// The instruction contributing the most to the worst-case envelope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HotSpot {
+    /// raw slot index
+    pub pc: usize,
+    /// maximum executions on any single explored path
+    pub count: u32,
+    /// `count * insn_cost` — this slot's envelope contribution
+    pub cost: u64,
+    /// index into [`VerifyInfo::subprog_spans`] (0 = main)
+    pub subprog: usize,
+}
+
+/// Which subprogram span `pc` falls in (0 = main when spans are empty
+/// or no span matches — defensive, spans cover the whole program).
+fn subprog_of(spans: &[(u32, u32)], pc: usize) -> usize {
+    spans
+        .iter()
+        .position(|&(s, e)| (s as usize) <= pc && pc < e as usize)
+        .unwrap_or(0)
+}
+
+/// Decompose a verified program's certified cost: total, chain factor,
+/// per-subprogram envelope, and the hottest instruction.
+pub fn cost_report(info: &VerifyInfo) -> CostReport {
+    let per_subprog = info
+        .subprog_spans
+        .iter()
+        .map(|&(s, e)| {
+            info.insn_worst_cost
+                .get(s as usize..e as usize)
+                .map(|w| w.iter().sum())
+                .unwrap_or(0)
+        })
+        .collect();
+    let hot = info
+        .insn_worst_cost
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, &c)| c)
+        .filter(|&(_, &c)| c > 0)
+        .map(|(pc, &cost)| HotSpot {
+            pc,
+            count: info.insn_max_count.get(pc).copied().unwrap_or(0),
+            cost,
+            subprog: subprog_of(&info.subprog_spans, pc),
+        });
+    CostReport {
+        total: info.max_cost,
+        chain_factor: chain_factor(&info.helpers_used),
+        per_subprog,
+        hot,
+    }
+}
+
+/// The admission-gate rejection message: names the certified cost, the
+/// violated budget, and the hot path (slot, execution count, envelope
+/// contribution, subprogram) so an over-budget policy author knows
+/// what to shrink.
+pub fn budget_diagnostic(info: &VerifyInfo, budget: u64) -> String {
+    let r = cost_report(info);
+    match r.hot {
+        Some(h) => format!(
+            "certified max_cost {} exceeds the cost budget {}: hot path peaks at insn {} \
+             (executes up to {}x for {} cost units, subprog {})",
+            info.max_cost, budget, h.pc, h.count, h.cost, h.subprog
+        ),
+        None => format!(
+            "certified max_cost {} exceeds the cost budget {}",
+            info.max_cost, budget
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-object analysis (the `ncclbpf analyze` backend)
+// ---------------------------------------------------------------------------
+
+/// Everything `ncclbpf analyze` reports for one program.
+pub struct ProgramAnalysis {
+    /// program name from the object
+    pub name: String,
+    /// hook type it was verified for
+    pub prog_type: ProgType,
+    /// relocated instruction stream (pre-rewrite)
+    pub insns: Vec<Insn>,
+    /// the verification summary the analyses are built from
+    pub info: VerifyInfo,
+    /// live-in set per raw slot
+    pub live: Vec<LiveSet>,
+    /// basic blocks of the pre-rewrite stream
+    pub blocks: Vec<Block>,
+    /// the dead-code rewrite, when anything was rewritable
+    pub rewrite: Option<Rewrite>,
+    /// certified-cost decomposition
+    pub cost: CostReport,
+    /// wall time of the post-verification analyses (excludes
+    /// verification itself)
+    pub analyze_ns: u64,
+}
+
+/// Register maps, relocate, verify, and run every post-verification
+/// analysis for each program in `obj` — the `ncclbpf analyze` backend
+/// and the `BENCH_analysis` measurement path.
+pub fn analyze_object(
+    obj: &Object,
+    registry: &MapRegistry,
+    layouts: &CtxLayouts,
+    vcfg: &VerifierConfig,
+) -> Result<Vec<ProgramAnalysis>, LoadError> {
+    let (live_maps, map_defs) = program::register_maps(obj, registry)?;
+    let mut out = Vec::new();
+    for p in &obj.progs {
+        let (pt, insns) = program::relocate(p, &live_maps)?;
+        let info = verifier::verify_with_config(&insns, pt, layouts.for_type(pt), &map_defs, vcfg)
+            .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
+        let t0 = Instant::now();
+        let live = liveness(&insns, &info.subprog_spans);
+        let blocks = cfg(&insns);
+        let rw = rewrite(&insns, &info);
+        let cost = cost_report(&info);
+        let analyze_ns = t0.elapsed().as_nanos() as u64;
+        out.push(ProgramAnalysis {
+            name: p.name.clone(),
+            prog_type: pt,
+            insns,
+            info,
+            live,
+            blocks,
+            rewrite: rw,
+            cost,
+            analyze_ns,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::insn::{alu, disasm};
+    use super::super::verifier::CtxLayout;
+    use super::*;
+    use std::collections::HashMap;
+
+    fn verify(insns: &[Insn], cfg: &VerifierConfig) -> VerifyInfo {
+        let ctx = CtxLayout { size: 8, read: vec![(0, 8)], write: vec![] };
+        verifier::verify_with_config(insns, ProgType::Tuner, &ctx, &HashMap::new(), cfg)
+            .expect("test program must verify")
+    }
+
+    fn verify_default(insns: &[Insn]) -> VerifyInfo {
+        verify(insns, &VerifierConfig::default())
+    }
+
+    #[test]
+    fn cost_table_shape() {
+        assert_eq!(insn_cost(&insn::mov64_imm(0, 1)), 1);
+        assert_eq!(insn_cost(&insn::call(helpers::id::MAP_LOOKUP_ELEM)), 21);
+        assert_eq!(insn_cost(&insn::call(helpers::id::TRACE_PRINTK)), 101);
+        // unknown helpers get the pessimistic default
+        assert_eq!(insn_cost(&insn::call(9999)), 51);
+        // bpf-to-bpf calls cost 1 (callee bodies accounted per-slot)
+        assert_eq!(insn_cost(&insn::call_pseudo(3)), 1);
+        assert_eq!(chain_factor(&[helpers::id::TAIL_CALL]), 34);
+        assert_eq!(chain_factor(&[helpers::id::MAP_LOOKUP_ELEM]), 1);
+        assert_eq!(chain_factor(&[]), 1);
+    }
+
+    #[test]
+    fn liveness_kills_dead_writes() {
+        let insns = [
+            insn::mov64_imm(0, 1),
+            insn::mov64_imm(2, 7), // r2 never read
+            insn::exit(),
+        ];
+        let live = liveness(&insns, &[(0, 3)]);
+        assert_ne!(live[2].live64 & 1, 0, "r0 live at exit");
+        assert_ne!(live[1].live64 & 1, 0, "r0 live across the dead write");
+        assert_eq!(live[1].live64 & (1 << 2), 0, "dead r2 write generates no demand");
+        assert_eq!(live[0].live64, 0, "r0 defined at slot 0: nothing live-in");
+    }
+
+    #[test]
+    fn liveness_distinguishes_32bit_reads() {
+        let insns = [
+            insn::mov64_imm(1, 5),
+            insn::alu32_reg(alu::MOV, 0, 1), // w0 = w1: a 32-bit read of r1
+            insn::exit(),
+        ];
+        let live = liveness(&insns, &[(0, 3)]);
+        assert_ne!(live[1].live32 & (1 << 1), 0, "r1 demanded at 32 bits");
+        assert_eq!(live[1].live64 & (1 << 1), 0, "no 64-bit demand on r1");
+    }
+
+    #[test]
+    fn liveness_tracks_stack_slots() {
+        let insns = [
+            insn::mov64_imm(1, 9),
+            insn::stx(size::DW, 10, 1, -8),
+            insn::ldx(size::DW, 0, 10, -8),
+            insn::exit(),
+        ];
+        let live = liveness(&insns, &[(0, 4)]);
+        let top = 1u64 << 63; // dword just below r10
+        assert_ne!(live[2].stack & top, 0, "slot live at the load");
+        assert_eq!(live[1].stack & top, 0, "dword store kills the slot above it");
+        assert_ne!(live[1].live64 & (1 << 1), 0, "stored r1 is read");
+    }
+
+    #[test]
+    fn cfg_splits_on_branches() {
+        let insns = [
+            insn::mov64_imm(0, 0),
+            insn::jmp_imm(jmp::JEQ, 0, 0, 1), // -> 3
+            insn::mov64_imm(0, 1),
+            insn::exit(),
+        ];
+        let blocks = cfg(&insns);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0], Block { start: 0, end: 2, succs: vec![3, 2] });
+        assert_eq!(blocks[1], Block { start: 2, end: 3, succs: vec![3] });
+        assert_eq!(blocks[2], Block { start: 3, end: 4, succs: vec![] });
+    }
+
+    #[test]
+    fn rewrite_hardwires_fallthrough_and_drops_dead_tail() {
+        let insns = [
+            insn::mov64_imm(0, 1),
+            insn::jmp_imm(jmp::JEQ, 0, 0, 1), // r0 == 1: always falls through
+            insn::exit(),
+            insn::mov64_imm(0, 2), // dead
+            insn::exit(),          // dead
+        ];
+        let info = verify_default(&insns);
+        assert_eq!(info.branch_fates[1], BranchFate::AlwaysFallthrough);
+        assert_eq!(info.dead_insns, 2);
+        let rw = rewrite(&insns, &info).expect("rewrite fires");
+        assert_eq!(rw.insns.len(), 3);
+        assert_eq!(rw.stats.wired_fallthrough, 1);
+        assert_eq!(rw.stats.removed_insns, 2);
+        assert!(
+            disasm(&rw.insns).contains("ja +0"),
+            "hard-wired fallthrough disassembles as ja +0:\n{}",
+            disasm(&rw.insns)
+        );
+        // the rewritten stream is still a verifiable program
+        let info2 = verify_default(&rw.insns);
+        assert_eq!(info2.dead_insns, 0);
+    }
+
+    #[test]
+    fn rewrite_remaps_call_offsets_across_removed_lddw() {
+        let lddw = insn::lddw(1, 0, 0x1234_5678_9abc);
+        let insns = [
+            insn::mov64_imm(6, 0),
+            insn::jmp_imm(jmp::JEQ, 6, 0, 3), // r6 == 0: always taken -> 5
+            lddw[0],                          // dead (2 slots)
+            lddw[1],
+            insn::mov64_imm(0, 9), // dead
+            insn::call_pseudo(1),  // -> callee at 7
+            insn::exit(),
+            insn::mov64_imm(0, 7), // callee
+            insn::exit(),
+        ];
+        let mut info = verify_default(&insns);
+        assert_eq!(info.branch_fates[1], BranchFate::AlwaysTaken);
+        assert_eq!(info.subprogs, 1);
+        // pin fact remap across the removed range: plant a marker fact
+        // at the call site and check it lands on the new slot
+        info.facts[5].map_id = Some(7);
+        let rw = rewrite(&insns, &info).expect("rewrite fires");
+        assert_eq!(rw.insns.len(), 6);
+        assert_eq!(rw.stats.wired_taken, 1);
+        assert_eq!(rw.stats.removed_insns, 3);
+        // slots 2..=4 removed: 0,1 keep their index, 5..=8 shift by 3
+        assert_eq!(rw.slot_map[..6], [0, 1, u32::MAX, u32::MAX, u32::MAX, 2]);
+        // the hard-wired branch now lands on its fallthrough
+        assert_eq!(rw.insns[1].op(), jmp::JA);
+        assert_eq!(rw.insns[1].off, 0);
+        // the bpf-to-bpf call still reaches the callee (7 -> 4)
+        assert!(rw.insns[2].is_pseudo_call());
+        assert_eq!(rw.insns[2].imm, 1);
+        assert_eq!(rw.facts[2].map_id, Some(7), "fact followed its slot");
+        let info2 = verify_default(&rw.insns);
+        assert_eq!(info2.subprogs, 1);
+        assert_eq!(info2.dead_insns, 0);
+    }
+
+    #[test]
+    fn rewrite_kills_dead_branch_inside_subprogram() {
+        let insns = [
+            insn::call_pseudo(1), // -> callee at 2
+            insn::exit(),
+            insn::mov64_imm(0, 7),            // callee
+            insn::jmp_imm(jmp::JNE, 0, 0, 1), // r0 == 7: always taken -> 5
+            insn::mov64_imm(0, 1),            // dead
+            insn::exit(),
+        ];
+        let info = verify_default(&insns);
+        assert_eq!(info.branch_fates[3], BranchFate::AlwaysTaken);
+        assert_eq!(info.dead_insns, 1);
+        let rw = rewrite(&insns, &info).expect("rewrite fires");
+        assert_eq!(rw.insns.len(), 5);
+        assert_eq!(rw.insns[3].op(), jmp::JA);
+        assert_eq!(rw.insns[3].off, 0, "taken target is the next kept slot");
+        let info2 = verify_default(&rw.insns);
+        assert_eq!(info2.subprogs, 1);
+    }
+
+    #[test]
+    fn rewrite_is_none_when_nothing_proved() {
+        let insns = [insn::mov64_imm(0, 0), insn::exit()];
+        let info = verify_default(&insns);
+        assert!(rewrite(&insns, &info).is_none());
+        // and on a hand-built VerifyInfo with no per-slot tables
+        assert!(rewrite(&insns, &VerifyInfo::default()).is_none());
+    }
+
+    #[test]
+    fn cost_certifies_straight_line() {
+        let insns = [insn::mov64_imm(0, 0), insn::exit()];
+        let info = verify_default(&insns);
+        assert_eq!(info.max_cost, 2);
+        let r = cost_report(&info);
+        assert_eq!(r.total, 2);
+        assert_eq!(r.chain_factor, 1);
+        assert_eq!(r.per_subprog, vec![2]);
+    }
+
+    #[test]
+    fn cost_takes_the_worse_branch() {
+        let insns = [
+            insn::ldx(size::W, 2, 1, 0),      // unknown ctx scalar
+            insn::jmp_imm(jmp::JEQ, 2, 0, 2), // -> 4 (the longer arm)
+            insn::mov64_imm(0, 1),
+            insn::exit(),
+            insn::mov64_imm(0, 2),
+            insn::mov64_imm(0, 3),
+            insn::exit(),
+        ];
+        let info = verify_default(&insns);
+        assert_eq!(info.branch_fates[1], BranchFate::Both);
+        // worse path: slots 0,1,4,5,6 = 5 units
+        assert_eq!(info.max_cost, 5);
+    }
+
+    #[test]
+    fn cost_is_pruning_invariant_on_single_path_loops() {
+        let insns = [
+            insn::mov64_imm(1, 10),
+            insn::alu64_imm(alu::SUB, 1, 1),
+            insn::jmp_imm(jmp::JNE, 1, 0, -2),
+            insn::mov64_imm(0, 0),
+            insn::exit(),
+        ];
+        let pruned = verify(&insns, &VerifierConfig { prune: Some(true), ..Default::default() });
+        let exhaustive =
+            verify(&insns, &VerifierConfig { prune: Some(false), ..Default::default() });
+        // 1 + 10*2 + 1 + 1: the countdown body runs 10 times
+        assert_eq!(exhaustive.max_cost, 23);
+        assert_eq!(pruned.max_cost, exhaustive.max_cost);
+        assert_eq!(pruned.insn_max_count[1], 10);
+    }
+
+    #[test]
+    fn pruned_cost_is_an_upper_bound() {
+        // data-dependent early exit: pruning may merge the short
+        // continuation into a checkpoint certified for the long one —
+        // the certificate must never shrink below the exhaustive bound
+        let insns = [
+            insn::ldx(size::W, 2, 1, 0),
+            insn::mov64_imm(1, 4),
+            insn::alu64_imm(alu::SUB, 1, 1),
+            insn::jmp_imm(jmp::JEQ, 2, 0, 1), // early out -> 5
+            insn::jmp_imm(jmp::JNE, 1, 0, -3),
+            insn::mov64_imm(0, 0),
+            insn::exit(),
+        ];
+        let pruned = verify(&insns, &VerifierConfig { prune: Some(true), ..Default::default() });
+        let exhaustive =
+            verify(&insns, &VerifierConfig { prune: Some(false), ..Default::default() });
+        assert!(exhaustive.max_cost > 0);
+        assert!(
+            pruned.max_cost >= exhaustive.max_cost,
+            "pruned certificate {} under-states exhaustive {}",
+            pruned.max_cost,
+            exhaustive.max_cost
+        );
+    }
+
+    #[test]
+    fn budget_diagnostic_names_the_hot_path() {
+        let insns = [
+            insn::mov64_imm(1, 10),
+            insn::alu64_imm(alu::SUB, 1, 1),
+            insn::jmp_imm(jmp::JNE, 1, 0, -2),
+            insn::mov64_imm(0, 0),
+            insn::exit(),
+        ];
+        let info = verify_default(&insns);
+        let d = budget_diagnostic(&info, 10);
+        assert!(d.contains("cost budget 10"), "{}", d);
+        assert!(d.contains("max_cost 23"), "{}", d);
+        assert!(d.contains("insn 1") || d.contains("insn 2"), "hot slot named: {}", d);
+        assert!(d.contains("10x"), "hot count named: {}", d);
+    }
+}

@@ -9,6 +9,7 @@
 //! [`helpers`].
 #![deny(missing_docs)]
 
+pub mod analysis;
 pub mod asm;
 pub mod helpers;
 pub mod insn;
@@ -19,13 +20,14 @@ pub mod object;
 pub mod program;
 pub mod verifier;
 
+pub use analysis::{CostReport, HotSpot, LiveSet, ProgramAnalysis, Rewrite, RewriteStats};
 pub use helpers::{PrintkSink, ProgType};
 pub use jit::JitInlineStats;
 pub use maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 pub use object::Object;
-#[allow(deprecated)]
-pub use program::verify_object;
 pub use program::{
     load, prog_array_update, CtxLayouts, LoadError, LoadOptions, LoadOutcome, LoadedProgram,
 };
-pub use verifier::{CtxLayout, InsnFacts, VerifierConfig, VerifierStats, VerifyError, VerifyInfo};
+pub use verifier::{
+    BranchFate, CtxLayout, InsnFacts, VerifierConfig, VerifierStats, VerifyError, VerifyInfo,
+};

@@ -5,13 +5,16 @@
 //! BPF bytecode, once JIT-compiled, cannot violate its safety guarantees
 //! at runtime").
 
+use super::analysis;
 use super::helpers::{HelperEnv, PrintkSink, ProgType};
 use super::insn::{pseudo, Insn};
 use super::interp::{self, Op};
 use super::jit::{JitInlineStats, JitOptions, JitProgram};
 use super::maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 use super::object::{ObjProgram, Object};
-use super::verifier::{self, CtxLayout, VerifierConfig, VerifierStats, VerifyError, VerifyInfo};
+use super::verifier::{
+    self, CtxLayout, InsnFacts, VerifierConfig, VerifierStats, VerifyError, VerifyInfo,
+};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -51,6 +54,16 @@ pub enum LoadError {
         /// the verifier's rejection
         err: VerifyError,
     },
+    /// program `prog` verified, but its certified worst-case cost
+    /// exceeds the admission budget (the `LoadOptions::max_cost` gate
+    /// or the host's per-hook default)
+    Budget {
+        /// name of the rejected program
+        prog: String,
+        /// the cost diagnostic ([`analysis::budget_diagnostic`]:
+        /// certified cost, violated budget, hot path)
+        detail: String,
+    },
 }
 
 impl std::fmt::Display for LoadError {
@@ -58,6 +71,7 @@ impl std::fmt::Display for LoadError {
         match self {
             LoadError::Structural(m) => write!(f, "load error: {}", m),
             LoadError::Verify { prog, err } => write!(f, "program '{}': {}", prog, err),
+            LoadError::Budget { prog, detail } => write!(f, "program '{}': {}", prog, detail),
         }
     }
 }
@@ -90,6 +104,10 @@ pub struct LoadedProgram {
     pub(crate) ops: Vec<Op>,
     /// resolved helper environment (maps + printk sink + prog type)
     pub(crate) env: HelperEnv,
+    /// what load-time dead-code rewriting changed (`None`: rewriting
+    /// was off, or the verifier proved nothing rewritable). `info`
+    /// stays slot-indexed over the *original* program either way.
+    pub rewrite_stats: Option<analysis::RewriteStats>,
     jit: Option<JitProgram>,
     maps_by_name: Vec<(String, Arc<Map>)>,
 }
@@ -165,8 +183,8 @@ impl LoadedProgram {
 /// ```
 ///
 /// Environment overrides (`NCCLBPF_VERIFIER_PRUNE`,
-/// `NCCLBPF_JIT_INLINE`) are parsed once at the CLI edge and threaded
-/// in here — nothing under `bpf/` reads them.
+/// `NCCLBPF_JIT_INLINE`, `NCCLBPF_REWRITE`) are parsed once at the CLI
+/// edge and threaded in here — nothing under `bpf/` reads them.
 #[derive(Clone, Default)]
 pub struct LoadOptions {
     /// `bpf_trace_printk` sink loaded programs route output through
@@ -182,6 +200,14 @@ pub struct LoadOptions {
     /// verify without compiling or installing anything (the `ncclbpf
     /// verify` probe): [`LoadOutcome::programs`] stays empty.
     pub verify_only: bool,
+    /// cost-admission gate: reject a program whose certified
+    /// [`VerifyInfo::max_cost`] exceeds this (`None` = no library-level
+    /// gate; the host layers per-hook defaults on top).
+    pub max_cost: Option<u64>,
+    /// verifier-proven dead-code rewriting: `None` = on when the
+    /// verifier proved anything rewritable, `Some(false)` = execute
+    /// the program exactly as authored (the `NCCLBPF_REWRITE=0` path).
+    pub rewrite: Option<bool>,
 }
 
 impl LoadOptions {
@@ -209,6 +235,17 @@ impl LoadOptions {
         self.verify_only = verify_only;
         self
     }
+    /// Reject programs whose certified worst-case cost exceeds
+    /// `max_cost` (`None` disables the library-level gate).
+    pub fn max_cost(mut self, max_cost: Option<u64>) -> LoadOptions {
+        self.max_cost = max_cost;
+        self
+    }
+    /// Override dead-code rewriting (`None` keeps it on).
+    pub fn rewrite(mut self, rewrite: Option<bool>) -> LoadOptions {
+        self.rewrite = rewrite;
+        self
+    }
 }
 
 /// What [`load`] produced: compiled programs (unless
@@ -226,7 +263,7 @@ pub struct LoadOutcome {
 
 /// Register `obj`'s maps and build the live-id table the verifier and
 /// helper environment resolve against.
-fn register_maps(
+pub(crate) fn register_maps(
     obj: &Object,
     registry: &MapRegistry,
 ) -> Result<(Vec<(String, Arc<Map>)>, HashMap<u32, MapDef>), LoadError> {
@@ -244,7 +281,7 @@ fn register_maps(
 
 /// Resolve one program's type and patch its map-reference relocations
 /// against the live map table.
-fn relocate(
+pub(crate) fn relocate(
     p: &ObjProgram,
     live: &[(String, Arc<Map>)],
 ) -> Result<(ProgType, Vec<Insn>), LoadError> {
@@ -318,40 +355,6 @@ pub fn load(
     Ok(out)
 }
 
-/// Register maps, relocate, and **verify** every program in `obj`
-/// without compiling or installing anything.
-#[deprecated(note = "use load with LoadOptions::new().verify_only(true).prune(prune)")]
-pub fn verify_object(
-    obj: &Object,
-    registry: &MapRegistry,
-    layouts: &CtxLayouts,
-    prune: Option<bool>,
-) -> Result<Vec<(String, VerifyInfo, u64)>, LoadError> {
-    load(obj, registry, layouts, &LoadOptions::new().verify_only(true).prune(prune))
-        .map(|o| o.verified)
-}
-
-/// Load every program in an object against a shared map registry.
-#[deprecated(note = "use load with &LoadOptions::new()")]
-pub fn load_object(
-    obj: &Object,
-    registry: &MapRegistry,
-    layouts: &CtxLayouts,
-) -> Result<Vec<LoadedProgram>, LoadError> {
-    load(obj, registry, layouts, &LoadOptions::new()).map(|o| o.programs)
-}
-
-/// `load_object` with an explicit `bpf_trace_printk` sink.
-#[deprecated(note = "use load with LoadOptions::new().sink(sink)")]
-pub fn load_object_with_sink(
-    obj: &Object,
-    registry: &MapRegistry,
-    layouts: &CtxLayouts,
-    sink: Option<Arc<PrintkSink>>,
-) -> Result<Vec<LoadedProgram>, LoadError> {
-    load(obj, registry, layouts, &LoadOptions::new().sink(sink)).map(|o| o.programs)
-}
-
 fn load_program(
     p: &ObjProgram,
     registry: &MapRegistry,
@@ -370,13 +373,37 @@ fn load_program(
             .map_err(|err| LoadError::Verify { prog: p.name.clone(), err })?;
     let verify_ns = t0.elapsed().as_nanos() as u64;
 
-    // 4. compile: pre-decode for the interpreter, then attempt native
+    // 4. post-verification static analysis (DESIGN.md §12): the
+    //    cost-admission gate fires before any compilation work, then
+    //    verifier-proven dead code is rewritten out of the stream the
+    //    engines will execute. `info` stays indexed over the original
+    //    slots; the rewrite carries its own remapped fact table.
+    if let Some(budget) = opts.max_cost {
+        if info.max_cost > budget {
+            return Err(LoadError::Budget {
+                prog: p.name.clone(),
+                detail: analysis::budget_diagnostic(&info, budget),
+            });
+        }
+    }
+    let rewritten = if opts.rewrite.unwrap_or(true) {
+        analysis::rewrite(&insns, &info)
+    } else {
+        None
+    };
+    let rewrite_stats = rewritten.as_ref().map(|r| r.stats);
+    let (code, slot_facts): (&[Insn], &[InsnFacts]) = match &rewritten {
+        Some(r) => (&r.insns, &r.facts),
+        None => (&insns, &info.facts),
+    };
+
+    // 5. compile: pre-decode for the interpreter, then attempt native
     //    JIT with the verifier's fact table driving call-site inlining
     //    (the facts are slot-indexed; lddw collapses two slots into one
     //    op, so remap before handing them to the backend)
     let t1 = Instant::now();
-    let (ops, slot2op) = interp::predecode_mapped(&insns).map_err(LoadError::Structural)?;
-    let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
+    let (ops, slot2op) = interp::predecode_mapped(code).map_err(LoadError::Structural)?;
+    let facts = interp::remap_facts(slot_facts, &slot2op, ops.len());
     let mut env = HelperEnv::new(registry, &info.used_maps).map_err(LoadError::Structural)?;
     env.printk = opts.sink.clone();
     env.prog_type = Some(pt);
@@ -395,6 +422,7 @@ fn load_program(
         stats: LoadStats { verify_ns, compile_ns },
         ops,
         env,
+        rewrite_stats,
         jit,
         maps_by_name: live.to_vec(),
     })
@@ -517,18 +545,59 @@ ok:
     }
 
     #[test]
-    fn deprecated_shims_still_load() {
-        // the one-PR compatibility shims delegate to load()
-        #[allow(deprecated)]
-        {
-            let obj = crate::bpf::asm::assemble(GOOD).unwrap();
-            let reg = MapRegistry::new();
-            assert_eq!(load_object(&obj, &reg, &layouts()).unwrap().len(), 1);
-            let reg = MapRegistry::new();
-            assert_eq!(verify_object(&obj, &reg, &layouts(), None).unwrap().len(), 1);
-            let reg = MapRegistry::new();
-            assert_eq!(load_object_with_sink(&obj, &reg, &layouts(), None).unwrap().len(), 1);
+    fn rewrite_toggle_and_cost_gate() {
+        // GOOD's null check is genuinely two-way, so nothing is
+        // rewritable — both toggles load and agree on behavior
+        let reg = MapRegistry::new();
+        let obj = crate::bpf::asm::assemble(GOOD).unwrap();
+        let on = load(&obj, &reg, &layouts(), &LoadOptions::new()).unwrap().programs.remove(0);
+        let off = load(&obj, &reg, &layouts(), &LoadOptions::new().rewrite(Some(false)))
+            .unwrap()
+            .programs
+            .remove(0);
+        on.map("state").unwrap().write_u64(0, 77).unwrap();
+        assert_eq!(on.run(std::ptr::null_mut()), 77);
+        assert_eq!(off.run(std::ptr::null_mut()), 77);
+        assert!(on.rewrite_stats.is_none());
+        assert!(off.rewrite_stats.is_none());
+        // the certified cost is finite and the admission gate enforces it
+        assert!(on.info.max_cost > 0);
+        match load(&obj, &reg, &layouts(), &LoadOptions::new().max_cost(Some(1))).unwrap_err() {
+            LoadError::Budget { prog, detail } => {
+                assert_eq!(prog, "good");
+                assert!(detail.contains("cost budget 1"), "{}", detail);
+            }
+            e => panic!("expected Budget rejection, got {}", e),
         }
+    }
+
+    #[test]
+    fn load_rewrites_proven_dead_code() {
+        const DEAD: &str = r#"
+prog tuner deadcode
+  mov64 r0, 1
+  jne   r0, 0, live
+  mov64 r0, 5
+live:
+  exit
+"#;
+        let reg = MapRegistry::new();
+        let obj = crate::bpf::asm::assemble(DEAD).unwrap();
+        let p = load(&obj, &reg, &layouts(), &LoadOptions::new()).unwrap().programs.remove(0);
+        let s = p.rewrite_stats.expect("always-taken branch is rewritable");
+        assert_eq!(s.wired_taken, 1);
+        assert_eq!(s.removed_insns, 1);
+        assert_eq!(p.info.dead_insns, 1);
+        assert_eq!(p.op_count(), 3, "mov, ja, exit after the rewrite");
+        assert_eq!(p.run(std::ptr::null_mut()), 1);
+        // rewriting off preserves both shape and behavior
+        let off = load(&obj, &reg, &layouts(), &LoadOptions::new().rewrite(Some(false)))
+            .unwrap()
+            .programs
+            .remove(0);
+        assert!(off.rewrite_stats.is_none());
+        assert_eq!(off.op_count(), 4);
+        assert_eq!(off.run(std::ptr::null_mut()), 1);
     }
 
     #[test]

@@ -93,6 +93,7 @@
 //! code specialized on the table is refinement-equivalent to the
 //! trampoline build (DESIGN.md §11).
 
+use super::analysis;
 use super::helpers::{self, ArgType, ProgType, RetType};
 use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
 use super::maps::{MapDef, MapKind, RINGBUF_HDR_SIZE, RINGBUF_LEN_MASK};
@@ -190,6 +191,43 @@ impl InsnFacts {
     }
 }
 
+/// What exploration proved about a conditional jump's outcome across
+/// every accepted path — the raw material for dead-code rewriting
+/// (`analysis::rewrite`): an `AlwaysTaken` branch can be hard-wired to
+/// `ja`, an `AlwaysFallthrough` one to a no-op, and `Unseen` slots are
+/// unreachable. Sound because every concrete execution of an accepted
+/// program is covered by some explored visit (pruned continuations by
+/// the explored continuation of their subsuming checkpoint), so an
+/// outcome never observed during exploration can never occur at
+/// runtime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BranchFate {
+    /// not a conditional jump, or never reached on any accepted path
+    #[default]
+    Unseen,
+    /// taken on every explored visit
+    AlwaysTaken,
+    /// fell through on every explored visit
+    AlwaysFallthrough,
+    /// both outcomes occurred (or could not be decided)
+    Both,
+}
+
+impl BranchFate {
+    /// Merge one more observed outcome into the running fate.
+    fn merge(self, taken: bool) -> BranchFate {
+        match (self, taken) {
+            (BranchFate::Unseen, true) | (BranchFate::AlwaysTaken, true) => {
+                BranchFate::AlwaysTaken
+            }
+            (BranchFate::Unseen, false) | (BranchFate::AlwaysFallthrough, false) => {
+                BranchFate::AlwaysFallthrough
+            }
+            _ => BranchFate::Both,
+        }
+    }
+}
+
 /// Successful verification summary.
 #[derive(Clone, Debug, Default)]
 pub struct VerifyInfo {
@@ -219,6 +257,28 @@ pub struct VerifyInfo {
     /// variable-offset accesses whose bounds checks the interval
     /// analysis discharged
     pub bounds_elided: u64,
+    /// per-slot conditional-jump outcome over every accepted path
+    /// (`Unseen` for non-branches and dead code) — feeds
+    /// `analysis::rewrite`
+    pub branch_fates: Vec<BranchFate>,
+    /// per-slot maximum execution count over any single explored path
+    /// (0 = proven dead; lddw hi slots are always 0 by construction)
+    pub insn_max_count: Vec<u32>,
+    /// per-slot worst-case cost contribution:
+    /// `insn_max_count * analysis::insn_cost` — the hot-path surface
+    /// (per-path maxima summed per slot, so an upper envelope, not a
+    /// single path; [`VerifyInfo::max_cost`] is the path-consistent
+    /// certificate)
+    pub insn_worst_cost: Vec<u64>,
+    /// subprogram regions as (start, end) raw-slot ranges; [0] is main
+    pub subprog_spans: Vec<(u32, u32)>,
+    /// instruction slots never visited on any accepted path (lddw hi
+    /// slots excluded — they are operand storage, not instructions)
+    pub dead_insns: u64,
+    /// certified worst-case cost of one invocation in `analysis` cost
+    /// units, tail-call chain factor included (×34 when the program
+    /// can `bpf_tail_call`)
+    pub max_cost: u64,
 }
 
 /// Per-load verification-cost stats: the counters behind `ncclbpf
@@ -237,6 +297,11 @@ pub struct VerifierStats {
     pub inline_candidates: u64,
     /// variable-offset accesses whose bounds checks were discharged
     pub bounds_elided: u64,
+    /// instruction slots proven dead (never visited on any accepted
+    /// path; lddw hi slots excluded)
+    pub dead_insns: u64,
+    /// certified worst-case invocation cost (tail-call factor included)
+    pub max_cost: u64,
 }
 
 impl VerifyInfo {
@@ -249,6 +314,8 @@ impl VerifyInfo {
             verify_ns,
             inline_candidates: self.inline_candidates,
             bounds_elided: self.bounds_elided,
+            dead_insns: self.dead_insns,
+            max_cost: self.max_cost,
         }
     }
 }
@@ -264,19 +331,6 @@ const MAX_CALL_FRAMES: usize = 8;
 /// cap on stored checkpoint states per prune point (memory bound; the
 /// kernel uses add-state heuristics for the same purpose)
 const MAX_STATES_PER_PC: usize = 64;
-
-/// True unless `NCCLBPF_VERIFIER_PRUNE` is set to `0`/`false`/`off`/
-/// `no`.
-#[deprecated(
-    note = "env parsing moved to the CLI edge: use crate::cli::env_verifier_prune() \
-            and thread it through VerifierConfig / LoadOptions"
-)]
-pub fn pruning_enabled_by_env() -> bool {
-    match std::env::var("NCCLBPF_VERIFIER_PRUNE") {
-        Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | "no"),
-        Err(_) => true,
-    }
-}
 
 /// Verification knobs, threaded in from the load path (`LoadOptions`).
 /// The verifier never reads environment variables: `NCCLBPF_*`
@@ -458,6 +512,17 @@ struct Checkpoint {
     /// only at 0 — pruning against a still-in-flight ancestor would
     /// let an unbounded loop "verify" against itself
     branches: u32,
+    /// walk cost accumulated when this checkpoint was recorded
+    /// (excluding the checkpointed pc itself)
+    cost_at_entry: u64,
+    /// certified worst-case cost of every explored continuation from
+    /// this state (max over descendant leaves of `leaf_total -
+    /// cost_at_entry`). Final once `branches == 0` — exactly the
+    /// condition under which the checkpoint can subsume — so a pruned
+    /// arrival soundly inherits it: subsumption implies behavior
+    /// inclusion, hence the pruned continuation's true cost is ≤ this
+    /// residual
+    residual: u64,
 }
 
 /// The abstract interpreter: construct with [`Verifier::new`], run
@@ -491,14 +556,32 @@ pub struct Verifier<'a> {
     entries: Vec<Checkpoint>,
     /// checkpoint indices per pc
     by_pc: HashMap<usize, Vec<usize>>,
+    /// cost accumulated along the in-flight walk (cost units)
+    cur_cost: u64,
+    /// per-slot execution counts along the in-flight walk
+    cur_counts: Vec<u32>,
+    /// max certified single-walk cost over all leaves (pre chain
+    /// factor)
+    max_leaf_cost: u64,
+    /// per-slot max execution count over all explored walks
+    max_counts: Vec<u32>,
+    /// conditional-jump outcomes merged across visits
+    fates: Vec<BranchFate>,
 }
 
 type VResult<T> = Result<T, VerifyError>;
 
-/// One queued exploration: resume pc, abstract state, and the
-/// checkpoint entries this branch descends from (their `branches`
-/// counters were incremented when it was queued).
-type WorkItem = (usize, State, Vec<usize>);
+/// One queued exploration: resume pc, abstract state, the checkpoint
+/// entries this branch descends from (their `branches` counters were
+/// incremented when it was queued), and the cost/execution-count
+/// prefix accumulated up to the fork point.
+struct WorkItem {
+    pc: usize,
+    state: State,
+    ancestors: Vec<usize>,
+    cost: u64,
+    counts: Vec<u32>,
+}
 
 impl<'a> Verifier<'a> {
     /// Bind a verifier to a program, its type's ctx layout and maps.
@@ -526,6 +609,11 @@ impl<'a> Verifier<'a> {
             bounds_live: Vec::new(),
             entries: Vec::new(),
             by_pc: HashMap::new(),
+            cur_cost: 0,
+            cur_counts: vec![0; insns.len()],
+            max_leaf_cost: 0,
+            max_counts: vec![0; insns.len()],
+            fates: vec![BranchFate::Unseen; insns.len()],
         }
     }
 
@@ -537,14 +625,6 @@ impl<'a> Verifier<'a> {
         }
         self.budget = cfg.budget;
         self.emit_facts = cfg.emit_facts;
-        self
-    }
-
-    /// Override the state-equivalence pruning default; `false` forces
-    /// exhaustive path enumeration.
-    #[deprecated(note = "use Verifier::with_config with VerifierConfig { prune, .. }")]
-    pub fn with_pruning(mut self, on: bool) -> Verifier<'a> {
-        self.prune = on;
         self
     }
 
@@ -614,8 +694,20 @@ impl<'a> Verifier<'a> {
         }
 
         // DFS over paths with pruned branch states.
-        let mut worklist: Vec<WorkItem> = vec![(0, State::initial(true), Vec::new())];
-        while let Some((mut pc, mut st, mut ancestors)) = worklist.pop() {
+        let mut worklist: Vec<WorkItem> = vec![WorkItem {
+            pc: 0,
+            state: State::initial(true),
+            ancestors: Vec::new(),
+            cost: 0,
+            counts: vec![0; self.insns.len()],
+        }];
+        while let Some(item) = worklist.pop() {
+            let WorkItem { mut pc, state: mut st, mut ancestors, cost, counts } = item;
+            self.cur_cost = cost;
+            self.cur_counts = counts;
+            // residual cost inherited from the subsuming checkpoint
+            // when this walk ends in a prune instead of an exit
+            let mut pruned_residual: Option<u64> = None;
             loop {
                 if pc >= self.insns.len() {
                     return Err(self.err(
@@ -632,14 +724,18 @@ impl<'a> Verifier<'a> {
                             .into(),
                     ));
                 }
-                if self.prune
-                    && self.prune_points[pc]
-                    && self.visit_checkpoint(pc, &mut st, &mut ancestors, worklist.len())
-                {
-                    // subsumed by an explored checkpoint: every behavior
-                    // of this path's continuation was already verified
-                    self.info.states_pruned += 1;
-                    break;
+                if self.prune && self.prune_points[pc] {
+                    if let Some(residual) =
+                        self.visit_checkpoint(pc, &mut st, &mut ancestors, worklist.len())
+                    {
+                        // subsumed by an explored checkpoint: every
+                        // behavior of this path's continuation was
+                        // already verified, and its cost is bounded by
+                        // the checkpoint's certified residual
+                        self.info.states_pruned += 1;
+                        pruned_residual = Some(residual);
+                        break;
+                    }
                 }
                 self.processed += 1;
                 if self.processed > self.budget {
@@ -663,16 +759,36 @@ impl<'a> Verifier<'a> {
                         ),
                     ));
                 }
+                self.cur_cost += analysis::insn_cost(&self.insns[pc]);
+                self.cur_counts[pc] += 1;
 
                 match self.step(pc, &mut st, &mut worklist, &ancestors)? {
                     Next::Fallthrough(n) => pc = n,
                     Next::Exit => break,
                 }
             }
-            // this walk's leaf is done (exit or pruned): release its
-            // claim on every checkpoint it descends from
+            // this walk's leaf is done (exit or pruned): its certified
+            // cost is its own prefix plus, when pruned, the subsumed
+            // continuation's residual
+            let leaf_total = self.cur_cost + pruned_residual.unwrap_or(0);
+            if leaf_total > self.max_leaf_cost {
+                self.max_leaf_cost = leaf_total;
+            }
+            // release this walk's claim on every checkpoint it descends
+            // from, folding its cost into their residuals (final once
+            // branches hits 0 — the only point subsumption may fire)
             for &e in &ancestors {
-                self.entries[e].branches -= 1;
+                let cp = &mut self.entries[e];
+                cp.branches -= 1;
+                let r = leaf_total.saturating_sub(cp.cost_at_entry);
+                if r > cp.residual {
+                    cp.residual = r;
+                }
+            }
+            for (i, &c) in self.cur_counts.iter().enumerate() {
+                if c > self.max_counts[i] {
+                    self.max_counts[i] = c;
+                }
             }
         }
         self.info.insns_processed = self.processed;
@@ -684,6 +800,28 @@ impl<'a> Verifier<'a> {
             self.info.facts.iter().filter(|f| f.is_inline_candidate()).count() as u64;
         self.info.bounds_elided =
             self.info.facts.iter().filter(|f| f.bounds_discharged).count() as u64;
+        // post-exploration static-analysis surface (analysis.rs): what
+        // exploration proved about reachability, branch outcomes, and
+        // worst-case cost
+        self.info.branch_fates = std::mem::take(&mut self.fates);
+        self.info.insn_max_count = std::mem::take(&mut self.max_counts);
+        self.info.insn_worst_cost = self
+            .insns
+            .iter()
+            .enumerate()
+            .map(|(i, ins)| self.info.insn_max_count[i] as u64 * analysis::insn_cost(ins))
+            .collect();
+        self.info.subprog_spans =
+            self.subprogs.iter().map(|&(s, e)| (s as u32, e as u32)).collect();
+        let hi = self.lddw_hi_mask();
+        self.info.dead_insns = self
+            .visit_count
+            .iter()
+            .enumerate()
+            .filter(|&(i, &c)| c == 0 && !hi[i])
+            .count() as u64;
+        self.info.max_cost =
+            self.max_leaf_cost * analysis::chain_factor(&self.info.helpers_used);
         Ok(self.info)
     }
 
@@ -994,13 +1132,16 @@ impl<'a> Verifier<'a> {
         st: &mut State,
         ancestors: &mut Vec<usize>,
         queued: usize,
-    ) -> bool {
+    ) -> Option<u64> {
         self.widen(st, pc);
         if let Some(ids) = self.by_pc.get(&pc) {
             for &id in ids {
                 let cp = &self.entries[id];
                 if cp.branches == 0 && state_subsumes(&cp.state, st) {
-                    return true;
+                    // prune: hand back the checkpoint's certified
+                    // residual so the cut continuation still has a
+                    // sound cost bound
+                    return Some(cp.residual);
                 }
             }
         }
@@ -1011,21 +1152,46 @@ impl<'a> Verifier<'a> {
             ids.push(next_id);
         }
         if record {
-            self.entries.push(Checkpoint { state: st.clone(), branches: 1 });
+            self.entries.push(Checkpoint {
+                state: st.clone(),
+                branches: 1,
+                cost_at_entry: self.cur_cost,
+                residual: 0,
+            });
             ancestors.push(next_id);
             self.note_peak(queued);
         }
-        false
+        None
     }
 
     /// Queue a forked branch state, charging it to every checkpoint the
-    /// current walk descends from (kernel `branches` propagation).
+    /// current walk descends from (kernel `branches` propagation). The
+    /// fork inherits the walk's cost/count prefix — both arms replay
+    /// the shared prefix in their own accounting.
     fn fork(&mut self, worklist: &mut Vec<WorkItem>, ancestors: &[usize], pc: usize, st: State) {
         for &e in ancestors {
             self.entries[e].branches += 1;
         }
-        worklist.push((pc, st, ancestors.to_vec()));
+        worklist.push(WorkItem {
+            pc,
+            state: st,
+            ancestors: ancestors.to_vec(),
+            cost: self.cur_cost,
+            counts: self.cur_counts.clone(),
+        });
         self.note_peak(worklist.len());
+    }
+
+    /// Merge one observed outcome of the conditional jump at `pc` into
+    /// its running [`BranchFate`].
+    fn note_fate(&mut self, pc: usize, taken: bool) {
+        self.fates[pc] = self.fates[pc].merge(taken);
+    }
+
+    /// Record that both outcomes of the conditional jump at `pc` are
+    /// possible (forked exploration).
+    fn note_fate_both(&mut self, pc: usize) {
+        self.fates[pc] = BranchFate::Both;
     }
 
     /// Track the peak number of simultaneously live abstract states.
@@ -1787,6 +1953,7 @@ impl<'a> Verifier<'a> {
                             Reg::MapValue { map_id, off: 0, span: 0, vsize },
                         );
                         promote_nid(null_side, nid, Reg::scalar_const(0));
+                        self.note_fate_both(pc);
                         self.fork(worklist, ancestors, tgt, taken);
                         *st = fall;
                         return Ok(Next::Fallthrough(pc + 1));
@@ -1808,12 +1975,14 @@ impl<'a> Verifier<'a> {
                         );
                         promote_ring(null_side, ref_id, Reg::scalar_const(0));
                         null_side.refs.retain(|&r| r != ref_id);
+                        self.note_fate_both(pc);
                         self.fork(worklist, ancestors, tgt, taken);
                         *st = fall;
                         return Ok(Next::Fallthrough(pc + 1));
                     }
                     // other pointers are never null: branch statically
                     let always = op == jmp::JNE;
+                    self.note_fate(pc, always);
                     return Ok(Next::Fallthrough(if always { tgt } else { pc + 1 }));
                 }
                 if srcv.map(|s| s.is_pointer()).unwrap_or(false)
@@ -1821,6 +1990,7 @@ impl<'a> Verifier<'a> {
                 {
                     // pointer-pointer eq: explore both
                     let taken = st.clone();
+                    self.note_fate_both(pc);
                     self.fork(worklist, ancestors, tgt, taken);
                     return Ok(Next::Fallthrough(pc + 1));
                 }
@@ -1866,8 +2036,14 @@ impl<'a> Verifier<'a> {
             };
 
             match branch_decision(op, a0, a1, b0, b1) {
-                Some(true) => Ok(Next::Fallthrough(tgt)),
-                Some(false) => Ok(Next::Fallthrough(pc + 1)),
+                Some(true) => {
+                    self.note_fate(pc, true);
+                    Ok(Next::Fallthrough(tgt))
+                }
+                Some(false) => {
+                    self.note_fate(pc, false);
+                    Ok(Next::Fallthrough(pc + 1))
+                }
                 None => {
                     // both possible: prune const-compare intervals
                     let mut taken = st.clone();
@@ -1876,6 +2052,7 @@ impl<'a> Verifier<'a> {
                         prune(&mut taken, ins.dst, op, k, true);
                         prune(st, ins.dst, op, k, false);
                     }
+                    self.note_fate_both(pc);
                     self.fork(worklist, ancestors, tgt, taken);
                     Ok(Next::Fallthrough(pc + 1))
                 }
@@ -2773,25 +2950,6 @@ pub fn verify_with_config(
     cfg: &VerifierConfig,
 ) -> Result<VerifyInfo, VerifyError> {
     Verifier::new(insns, prog_type, ctx, maps).with_config(cfg).verify()
-}
-
-/// [`verify`] with an explicit pruning override (`None` keeps the
-/// built-in default).
-#[deprecated(note = "use verify_with_config with VerifierConfig { prune, .. }")]
-pub fn verify_with(
-    insns: &[Insn],
-    prog_type: ProgType,
-    ctx: &CtxLayout,
-    maps: &HashMap<u32, MapDef>,
-    prune: Option<bool>,
-) -> Result<VerifyInfo, VerifyError> {
-    verify_with_config(
-        insns,
-        prog_type,
-        ctx,
-        maps,
-        &VerifierConfig { prune, ..VerifierConfig::default() },
-    )
 }
 
 #[cfg(test)]

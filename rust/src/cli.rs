@@ -14,6 +14,12 @@ pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          (--stats: full verifier cost counters)",
     ),
     ("disasm", "<policy.c|.s>", "compile + disassemble"),
+    (
+        "analyze",
+        "<policy.c|.s> [--json]",
+        "post-verification static analysis: CFG, liveness, dead/live instruction map, \
+         verifier-proven rewrite, per-subprog and total worst-case cost certificate",
+    ),
     ("allreduce", "[--size 64M --ranks 8 --policy NAME]", "run one AllReduce under a policy"),
     ("sweep", "[--ranks N]", "Table 2 algorithm sweep"),
     ("train", "[--ranks 4 --steps 50 --policy NAME]", "DDP training with the policy attached"),
@@ -68,6 +74,14 @@ pub fn env_verifier_prune() -> Option<bool> {
 /// environment.
 pub fn env_jit_inline() -> Option<bool> {
     env_toggle("NCCLBPF_JIT_INLINE")
+}
+
+/// `NCCLBPF_REWRITE` (verifier-proven dead-code rewriting), parsed
+/// once here at the CLI edge and threaded into
+/// [`crate::bpf::LoadOptions`] — nothing under `bpf/` reads the
+/// environment.
+pub fn env_rewrite() -> Option<bool> {
+    env_toggle("NCCLBPF_REWRITE")
 }
 
 /// Usage text generated from [`SUBCOMMANDS`].

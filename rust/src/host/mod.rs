@@ -12,6 +12,7 @@ pub mod reload;
 pub mod ringbuf;
 pub mod traffic;
 
+use crate::bpf::analysis;
 use crate::bpf::{
     load, prog_array_update, LoadError, LoadOptions, LoadedProgram, Map, MapRegistry, Object,
     PrintkSink, ProgType, VerifierStats,
@@ -104,13 +105,38 @@ impl NcclBpfHost {
     }
 
     /// Set the load-pipeline options applied to every subsequent
-    /// install (verifier pruning/budget, JIT inlining). Environment
-    /// overrides are parsed at the CLI edge (see
-    /// [`crate::cli::env_verifier_prune`] /
-    /// [`crate::cli::env_jit_inline`]) and threaded in here; the sink
-    /// field is always overridden with the host's own printk sink.
+    /// install (verifier pruning/budget, JIT inlining, dead-code
+    /// rewriting, cost gate). Environment overrides are parsed at the
+    /// CLI edge (see [`crate::cli::env_verifier_prune`] /
+    /// [`crate::cli::env_jit_inline`] / [`crate::cli::env_rewrite`])
+    /// and threaded in here; the sink field is always overridden with
+    /// the host's own printk sink. When no explicit
+    /// [`LoadOptions::max_cost`] gate is configured, the host enforces
+    /// the per-hook [`default_cost_budget`] instead.
     pub fn set_load_options(&mut self, opts: LoadOptions) {
         self.load_opts = opts;
+    }
+
+    /// Enforce the per-hook-type cost budgets on freshly loaded
+    /// programs — the admission criterion that makes "predictable
+    /// policy overhead" a load-time guarantee rather than a hope.
+    /// Skipped when the caller configured an explicit
+    /// [`LoadOptions::max_cost`] gate (that gate already ran inside
+    /// [`load`]).
+    fn enforce_budgets(&self, progs: &[LoadedProgram]) -> Result<(), LoadError> {
+        if self.load_opts.max_cost.is_some() {
+            return Ok(());
+        }
+        for p in progs {
+            let budget = default_cost_budget(p.prog_type);
+            if p.info.max_cost > budget {
+                return Err(LoadError::Budget {
+                    prog: p.name.clone(),
+                    detail: analysis::budget_diagnostic(&p.info, budget),
+                });
+            }
+        }
+        Ok(())
     }
 
     /// [`LoadOptions`] for one install: the configured options with
@@ -133,6 +159,7 @@ impl NcclBpfHost {
     /// ("the system never enters an unverified state", §4).
     pub fn install_object(&self, obj: &Object) -> Result<LoadReport, LoadError> {
         let progs = load(obj, &self.maps, &ctx::layouts(), &self.install_opts())?.programs;
+        self.enforce_budgets(&progs)?;
         let mut report = LoadReport::default();
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
@@ -169,6 +196,7 @@ impl NcclBpfHost {
     /// the hook slots).
     pub fn load_only(&self, obj: &Object) -> Result<Vec<Arc<LoadedProgram>>, LoadError> {
         let progs = load(obj, &self.maps, &ctx::layouts(), &self.install_opts())?.programs;
+        self.enforce_budgets(&progs)?;
         Ok(progs.into_iter().map(Arc::new).collect())
     }
 
@@ -408,6 +436,18 @@ impl NcclBpfHost {
     /// (observability for the reload-leak regression test).
     pub fn retired_counts(&self) -> (usize, usize, usize) {
         (self.tuner.retired_count(), self.profiler.retired_count(), self.net.retired_count())
+    }
+}
+
+/// Default per-hook worst-case cost budgets, in `analysis` cost units
+/// (DESIGN.md §12). The tuner sits on the collective hot path and gets
+/// the tightest budget; profiler and net hooks run off the decision
+/// path. An explicit [`LoadOptions::max_cost`] replaces these.
+pub fn default_cost_budget(pt: ProgType) -> u64 {
+    match pt {
+        ProgType::Tuner => 5_000,
+        ProgType::Profiler => 10_000,
+        ProgType::Net => 10_000,
     }
 }
 
@@ -873,6 +913,47 @@ prog tuner t_large
             assert_eq!(off.inlined_lookups + off.direct_calls, 0, "{:?}", off);
             assert!(off.trampoline_calls > 0, "{:?}", off);
         }
+    }
+
+    /// Satellite: the host enforces per-hook cost budgets at install
+    /// time with a diagnostic naming the hot path; an explicit
+    /// `max_cost` gate replaces the default.
+    #[test]
+    fn cost_budget_gate_rejects_over_budget_tuner() {
+        // ~2 units per lap x 3000 laps blows the 5000-unit tuner budget
+        let blowout = "prog tuner hog\n  mov64 r1, 3000\nloop:\n  sub64 r1, 1\n  \
+                       jne r1, 0, loop\n  mov64 r0, 0\n  exit\n";
+        let host = NcclBpfHost::new();
+        let err = host.install_asm(blowout).unwrap_err();
+        assert!(err.to_string().contains("cost budget"), "{}", err);
+        assert!(host.active_name(ProgType::Tuner).is_none(), "nothing installs");
+        // an explicit (huge) max_cost gate replaces the default budget
+        let mut host = NcclBpfHost::new();
+        host.set_load_options(LoadOptions::new().max_cost(Some(u64::MAX)));
+        host.install_asm(blowout).unwrap();
+        assert_eq!(host.active_name(ProgType::Tuner).unwrap(), "hog");
+    }
+
+    /// Satellite: the rewrite toggle threads through the host like the
+    /// prune/inline toggles, and decisions agree either way.
+    #[test]
+    fn load_options_rewrite_toggle_threads_through_host() {
+        let dead = "prog tuner dead_arm\n  mov64 r2, 1\n  jne r2, 0, live\n  \
+                    stw [r1+40], 2\nlive:\n  stw [r1+40], 6\n  mov64 r0, 0\n  exit\n";
+        let run = |rewrite: Option<bool>| {
+            let mut host = NcclBpfHost::new();
+            host.set_load_options(LoadOptions::new().rewrite(rewrite));
+            host.install_asm(dead).unwrap();
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0;
+            assert!(host.tuner_decide(&args(1024), &mut cost, &mut ch));
+            assert_eq!(ch, 6, "the live arm decides");
+            host.tuner_program().unwrap().rewrite_stats
+        };
+        let on = run(None).expect("the dead arm is rewritable");
+        assert_eq!(on.wired_taken, 1);
+        assert_eq!(on.removed_insns, 1);
+        assert!(run(Some(false)).is_none(), "rewriting off: program as authored");
     }
 
     #[test]

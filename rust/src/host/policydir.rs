@@ -36,8 +36,10 @@ pub fn build_named(name: &str) -> Result<Object, String> {
 }
 
 /// The safe policies of the §5.2 suite (all in Table 1 / §5.3), plus
-/// the composable tail-call chain exemplar (§5.4 shape).
-pub const SAFE_POLICIES: [&str; 8] = [
+/// the composable tail-call chain exemplar (§5.4 shape) and the
+/// cost-corpus exemplar sized just under the Tuner install budget
+/// (the certifier-headroom probe).
+pub const SAFE_POLICIES: [&str; 9] = [
     "noop",
     "static_ring",
     "size_aware",
@@ -46,6 +48,7 @@ pub const SAFE_POLICIES: [&str; 8] = [
     "slo_enforcer",
     "nvlink_ring_mid_v2",
     "chain_dispatch",
+    "cost_tight",
 ];
 
 /// The unsafe programs, one per bug class: the paper's seven (§5.2),
@@ -79,6 +82,14 @@ pub const STRESS_POLICIES: [(&str, &str); 2] = [
     ("stress_ladder64", "64-arm size ladder joining into a bounded refinement loop"),
     ("stress_channel_scorer", "32-lap channel scorer with a data-dependent branch per lap"),
 ];
+
+/// The over-budget cost corpus: policies the verifier *accepts*
+/// (bounded, memory-safe) whose certified worst-case cost exceeds the
+/// per-hook install budget, so the host's cost-certifier gate must
+/// reject them at load. They are deliberately not in
+/// [`UNSAFE_POLICIES`]: that corpus asserts verifier rejections, and
+/// these programs verify clean — only the budget gate fires.
+pub const OVER_BUDGET_POLICIES: [&str; 1] = ["cost_blowout"];
 
 /// Build an unsafe-suite program from `policies/unsafe/`.
 pub fn build_unsafe(name: &str) -> Result<Object, String> {
@@ -124,6 +135,20 @@ mod tests {
             let (_, st) = &rep.prog_stats[0];
             assert!(st.states_pruned > 0, "{}: pruning must actually fire", name);
         }
+    }
+
+    #[test]
+    fn over_budget_policies_verify_but_fail_the_cost_gate() {
+        let host = NcclBpfHost::new();
+        for name in OVER_BUDGET_POLICIES {
+            let obj = build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            let err = host
+                .install_object(&obj)
+                .expect_err(&format!("{} must exceed the cost budget", name));
+            let msg = err.to_string();
+            assert!(msg.contains("cost budget"), "{}: expected cost diagnostic, got: {}", name, msg);
+        }
+        assert!(host.active_name(crate::bpf::ProgType::Tuner).is_none());
     }
 
     #[test]

@@ -4,12 +4,15 @@
 //! [`ncclbpf::cli::SUBCOMMANDS`]; `handler` below maps each entry to
 //! its implementation, and a test asserts the two never drift apart.
 
-use ncclbpf::bpf::{LoadOptions, ProgType};
+use ncclbpf::bpf::{
+    analysis, BranchFate, LiveSet, LoadOptions, MapRegistry, ProgType, ProgramAnalysis,
+    VerifierConfig,
+};
 use ncclbpf::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology};
 use ncclbpf::cli::{self, Args};
 use ncclbpf::host::policydir;
 use ncclbpf::host::ringbuf::RingConsumer;
-use ncclbpf::host::{BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
+use ncclbpf::host::{default_cost_budget, BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
 use ncclbpf::runtime::{default_artifacts_dir, Runtime};
 use ncclbpf::train::{DdpTrainer, TrainConfig};
 use ncclbpf::util::{fmt_size, parse_size};
@@ -23,6 +26,7 @@ fn handler(name: &str) -> Option<fn(&Args) -> i32> {
     Some(match name {
         "verify" => cmd_verify,
         "disasm" => cmd_disasm,
+        "analyze" => cmd_analyze,
         "allreduce" => cmd_allreduce,
         "sweep" => cmd_sweep,
         "train" => cmd_train,
@@ -55,12 +59,16 @@ fn main() {
 }
 
 /// A host configured from the environment overrides parsed here at
-/// the CLI edge (`NCCLBPF_VERIFIER_PRUNE`, `NCCLBPF_JIT_INLINE`) —
-/// the only place they are read; `bpf/` sees plain [`LoadOptions`].
+/// the CLI edge (`NCCLBPF_VERIFIER_PRUNE`, `NCCLBPF_JIT_INLINE`,
+/// `NCCLBPF_REWRITE`) — the only place they are read; `bpf/` sees
+/// plain [`LoadOptions`].
 fn env_host() -> NcclBpfHost {
     let mut host = NcclBpfHost::new();
     host.set_load_options(
-        LoadOptions::new().prune(cli::env_verifier_prune()).inline(cli::env_jit_inline()),
+        LoadOptions::new()
+            .prune(cli::env_verifier_prune())
+            .inline(cli::env_jit_inline())
+            .rewrite(cli::env_rewrite()),
     );
     host
 }
@@ -95,14 +103,17 @@ fn cmd_verify(args: &Args) -> i32 {
                 for (name, st) in &report.prog_stats {
                     println!(
                         "STATS {} insns_processed={} states_pruned={} peak_states={} \
-                         verify_ns={} inline_candidates={} bounds_elided={}",
+                         verify_ns={} inline_candidates={} bounds_elided={} dead_insns={} \
+                         max_cost={}",
                         name,
                         st.insns_processed,
                         st.states_pruned,
                         st.peak_states,
                         st.verify_ns,
                         st.inline_candidates,
-                        st.bounds_elided
+                        st.bounds_elided,
+                        st.dead_insns,
+                        st.max_cost
                     );
                 }
             }
@@ -134,6 +145,211 @@ fn cmd_disasm(args: &Args) -> i32 {
         print!("{}", ncclbpf::bpf::insn::disasm(&p.insns));
     }
     0
+}
+
+/// `ncclbpf analyze`: post-verification static analysis. Prints, per
+/// program: the CFG, a liveness-annotated dead/live instruction map,
+/// the verifier-proven rewrite summary, and the worst-case cost
+/// certificate (per subprogram and total). `--json` emits one JSON
+/// object per program with the same data.
+fn cmd_analyze(args: &Args) -> i32 {
+    let Some(obj) = load_policy_arg(args).unwrap_or_else(|e| {
+        eprintln!("{}", e);
+        std::process::exit(1)
+    }) else {
+        eprintln!("usage: ncclbpf analyze <policy.c|policy.s> [--json]");
+        return 2;
+    };
+    let registry = MapRegistry::new();
+    let layouts = ncclbpf::host::ctx::layouts();
+    let vcfg = VerifierConfig { prune: cli::env_verifier_prune(), ..Default::default() };
+    let analyses = match analysis::analyze_object(&obj, &registry, &layouts, &vcfg) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{}", e);
+            return 1;
+        }
+    };
+    for a in &analyses {
+        if args.flag_bool("json") {
+            println!("{}", analysis_json(a));
+        } else {
+            print_analysis(a);
+        }
+    }
+    0
+}
+
+/// Live-in registers at one slot, `r` for full-width demand and `w`
+/// for 32-bit-only demand (`-` when nothing is live).
+fn live_regs(l: &LiveSet) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for r in 0..11u8 {
+        let bit = 1u16 << r;
+        if l.live64 & bit != 0 {
+            parts.push(format!("r{}", r));
+        } else if l.live32 & bit != 0 {
+            parts.push(format!("w{}", r));
+        }
+    }
+    if parts.is_empty() {
+        "-".to_string()
+    } else {
+        parts.join(",")
+    }
+}
+
+/// Real instruction slots (lddw hi operand slots excluded) the
+/// verifier proved dead — `insn_max_count == 0`.
+fn dead_slots(a: &ProgramAnalysis) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < a.insns.len() {
+        if a.info.insn_max_count.get(i).copied().unwrap_or(0) == 0 {
+            out.push(i);
+        }
+        i += if a.insns[i].is_lddw() { 2 } else { 1 };
+    }
+    out
+}
+
+fn print_analysis(a: &ProgramAnalysis) {
+    println!("== {} ({:?}) ==", a.name, a.prog_type);
+    println!(
+        "insns={} subprogs={} helpers={:?} stack_depth={}",
+        a.insns.len(),
+        a.info.subprog_spans.len(),
+        a.info.helpers_used,
+        a.info.stack_depth
+    );
+    println!("cfg: {} blocks", a.blocks.len());
+    for b in &a.blocks {
+        let succs = if b.succs.is_empty() {
+            "exit".to_string()
+        } else {
+            b.succs.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        };
+        println!("  block [{}..{}) -> {}", b.start, b.end, succs);
+    }
+    println!("instructions (count = worst-case executions on one path):");
+    let mut i = 0;
+    while i < a.insns.len() {
+        let ins = &a.insns[i];
+        let count = a.info.insn_max_count.get(i).copied().unwrap_or(0);
+        let mark =
+            if count == 0 { "DEAD ".to_string() } else { format!("x{:<4}", count) };
+        let fate = match a.info.branch_fates.get(i) {
+            Some(BranchFate::AlwaysTaken) => " [always-taken]",
+            Some(BranchFate::AlwaysFallthrough) => " [always-fallthrough]",
+            _ => "",
+        };
+        let text = ncclbpf::bpf::insn::disasm_one(ins, a.insns.get(i + 1));
+        let live = a.live.get(i).copied().unwrap_or_default();
+        println!(
+            "  {:4}: {} {:<30} ; live={} stack_dwords={}{}",
+            i,
+            mark,
+            text,
+            live_regs(&live),
+            live.stack.count_ones(),
+            fate
+        );
+        i += if ins.is_lddw() { 2 } else { 1 };
+    }
+    let dead = dead_slots(a);
+    if dead.is_empty() {
+        println!("dead code: none ({} live slots)", a.insns.len());
+    } else {
+        println!("dead code: {} slots {:?}", dead.len(), dead);
+    }
+    match &a.rewrite {
+        Some(rw) => println!(
+            "rewrite: wired_taken={} wired_fallthrough={} removed_insns={} -> {} insns",
+            rw.stats.wired_taken,
+            rw.stats.wired_fallthrough,
+            rw.stats.removed_insns,
+            rw.insns.len()
+        ),
+        None => println!("rewrite: nothing provable (stream unchanged)"),
+    }
+    println!("cost: certified max_cost={} chain_factor={}", a.cost.total, a.cost.chain_factor);
+    for (k, units) in a.cost.per_subprog.iter().enumerate() {
+        let (s, e) = a.info.subprog_spans.get(k).copied().unwrap_or((0, 0));
+        println!("  subprog {} [{}..{}): {} units", k, s, e, units);
+    }
+    if let Some(h) = &a.cost.hot {
+        println!(
+            "  hot: insn {} executes up to {}x for {} cost units (subprog {})",
+            h.pc, h.count, h.cost, h.subprog
+        );
+    }
+    println!("analyze_ns={}", a.analyze_ns);
+}
+
+/// One JSON object per program, hand-rolled like the bench reports.
+fn analysis_json(a: &ProgramAnalysis) -> String {
+    let join = |v: Vec<String>| v.join(",");
+    let blocks = join(
+        a.blocks
+            .iter()
+            .map(|b| {
+                format!(
+                    "{{\"start\":{},\"end\":{},\"succs\":[{}]}}",
+                    b.start,
+                    b.end,
+                    join(b.succs.iter().map(|s| s.to_string()).collect())
+                )
+            })
+            .collect(),
+    );
+    let spans = join(
+        a.info.subprog_spans.iter().map(|&(s, e)| format!("[{},{}]", s, e)).collect(),
+    );
+    let live = join(
+        a.live
+            .iter()
+            .map(|l| {
+                format!(
+                    "{{\"live64\":{},\"live32\":{},\"stack\":{}}}",
+                    l.live64, l.live32, l.stack
+                )
+            })
+            .collect(),
+    );
+    let hot = match &a.cost.hot {
+        Some(h) => format!(
+            "{{\"pc\":{},\"count\":{},\"cost\":{},\"subprog\":{}}}",
+            h.pc, h.count, h.cost, h.subprog
+        ),
+        None => "null".to_string(),
+    };
+    let rewrite = match &a.rewrite {
+        Some(rw) => format!(
+            "{{\"wired_taken\":{},\"wired_fallthrough\":{},\"removed_insns\":{},\"new_len\":{}}}",
+            rw.stats.wired_taken, rw.stats.wired_fallthrough, rw.stats.removed_insns, rw.insns.len()
+        ),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"name\":\"{}\",\"prog_type\":\"{:?}\",\"insns\":{},\"subprog_spans\":[{}],\
+         \"blocks\":[{}],\"live_in\":[{}],\"dead_slots\":[{}],\"dead_insns\":{},\
+         \"rewrite\":{},\"cost\":{{\"total\":{},\"chain_factor\":{},\"per_subprog\":[{}],\
+         \"hot\":{}}},\"analyze_ns\":{}}}",
+        a.name,
+        a.prog_type,
+        a.insns.len(),
+        spans,
+        blocks,
+        live,
+        join(dead_slots(a).iter().map(|s| s.to_string()).collect()),
+        a.info.dead_insns,
+        rewrite,
+        a.cost.total,
+        a.cost.chain_factor,
+        join(a.cost.per_subprog.iter().map(|c| c.to_string()).collect()),
+        hot,
+        a.analyze_ns
+    )
 }
 
 fn cmd_allreduce(args: &Args) -> i32 {
@@ -280,6 +496,33 @@ fn cmd_safety(_args: &Args) -> i32 {
         }
     } else {
         println!("  SKIP: NCCLBPF_VERIFIER_PRUNE=0 (the stress corpus needs pruning by design)");
+    }
+    println!("== cost budgets (worst-case certifier gate at install) ==");
+    {
+        // cost_tight already passed the safe loop; reinstall to report
+        // its certified margin against the per-hook default budget
+        let budget = default_cost_budget(ProgType::Tuner);
+        let obj = policydir::build_named("cost_tight").expect("cost_tight");
+        match host.install_object(&obj) {
+            Ok(rep) => {
+                let cost = rep.prog_stats.first().map(|(_, s)| s.max_cost).unwrap_or(0);
+                println!("  ACCEPT cost_tight (certified max_cost={} <= budget {})", cost, budget);
+            }
+            Err(e) => {
+                println!("  UNEXPECTED REJECT cost_tight: {}", e);
+                return 1;
+            }
+        }
+    }
+    for name in policydir::OVER_BUDGET_POLICIES {
+        let obj = policydir::build_named(name).expect(name);
+        match host.install_object(&obj) {
+            Ok(_) => {
+                println!("  UNEXPECTED ACCEPT {} (must exceed the cost budget)", name);
+                return 1;
+            }
+            Err(e) => println!("  REJECT {} -> {}", name, e),
+        }
     }
     println!(
         "safety suite: all {} safe accepted, all {} unsafe rejected",

@@ -20,7 +20,7 @@ use ncclbpf::bpf::insn::{
 };
 use ncclbpf::bpf::jit::{JitOptions, JitProgram};
 use ncclbpf::bpf::maps::{MapDef, MapKind};
-use ncclbpf::bpf::{interp, verifier, MapRegistry, ProgType, VerifierConfig};
+use ncclbpf::bpf::{analysis, interp, verifier, InsnFacts, MapRegistry, ProgType, VerifierConfig};
 use ncclbpf::host::ctx::layouts;
 use ncclbpf::util::Rng;
 use std::collections::HashMap;
@@ -351,6 +351,152 @@ fn prune_on_off_verdicts_agree() {
         }
     }
     assert!(rejects > 0, "mutation pass must exercise the reject path");
+}
+
+/// Execute one instruction stream on every available engine (interp
+/// always; trampoline and fact-driven JIT on x86-64), returning the r0
+/// of each. `slot_facts` is the slot-indexed fact table matching
+/// `insns` — the original program uses the verifier's table, the
+/// rewritten one the table `analysis::rewrite` remapped.
+fn exec_all_engines(insns: &[Insn], slot_facts: &[InsnFacts], env: &HelperEnv) -> Vec<u64> {
+    let (ops, slot2op) = interp::predecode_mapped(insns).expect("predecode");
+    let facts = interp::remap_facts(slot_facts, &slot2op, ops.len());
+    let mut out = vec![unsafe { interp::execute(&ops, std::ptr::null_mut(), env) }];
+    if let Some(j) = JitProgram::compile_unchecked(&ops) {
+        out.push(unsafe { j.call(std::ptr::null_mut(), env) });
+    }
+    let opts = JitOptions { facts: Some(&facts), env: Some(env), inline: None };
+    if let Some(j) = JitProgram::compile_with_unchecked(&ops, &opts) {
+        out.push(unsafe { j.call(std::ptr::null_mut(), env) });
+    }
+    out
+}
+
+/// Rewrite differential: for every generated program the verifier
+/// proves something about (hard-wired branch fates, dead slots), the
+/// rewritten stream must re-verify and produce the same r0 as the
+/// original on the interpreter, the trampoline JIT and the fact-driven
+/// JIT. The generators build programs over constant immediates, so the
+/// verifier decides most branches concretely and the rewriter fires on
+/// nearly every case — including across bpf-to-bpf calls, whose
+/// offsets the rewrite must remap.
+#[test]
+fn differential_rewrite_preserves_behavior() {
+    let mut rng = Rng::new(0x2e72_2026);
+    let lay = layouts();
+    let maps = HashMap::new();
+    let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
+    let mut rewritten_cases = 0usize;
+    for case in 0..fuzz_cases(300) {
+        // call programs are branch-free by construction, so wrap them
+        // in a concretely-dead prefix: removing a slot ahead of the
+        // pseudo-call forces the call-offset remap through shifted slots
+        let prog = if case % 3 == 0 {
+            let mut p = vec![mov64_imm(8, 5), jmp_imm(jmp::JEQ, 8, 5, 1), mov64_imm(8, 99)];
+            p.extend(gen_call_program(&mut rng));
+            p
+        } else {
+            gen_program(&mut rng)
+        };
+        let info = verifier::verify(&prog, ProgType::Tuner, &lay.tuner, &maps)
+            .unwrap_or_else(|e| {
+                panic!("case {}: unverifiable program: {}\n{}", case, e, disasm(&prog))
+            });
+        let Some(rw) = analysis::rewrite(&prog, &info) else {
+            continue;
+        };
+        rewritten_cases += 1;
+        // the rewritten stream must pass the same gate
+        verifier::verify(&rw.insns, ProgType::Tuner, &lay.tuner, &maps).unwrap_or_else(|e| {
+            panic!(
+                "case {}: rewritten program no longer verifies: {}\noriginal:\n{}rewritten:\n{}",
+                case,
+                e,
+                disasm(&prog),
+                disasm(&rw.insns)
+            )
+        });
+        let want = exec_all_engines(&prog, &info.facts, &env);
+        let got = exec_all_engines(&rw.insns, &rw.facts, &env);
+        assert_eq!(
+            got,
+            want,
+            "case {}: rewrite changed behavior\noriginal:\n{}rewritten:\n{}",
+            case,
+            disasm(&prog),
+            disasm(&rw.insns)
+        );
+    }
+    assert!(rewritten_cases > 0, "corpus must exercise the rewriter");
+}
+
+/// Rewrite differential over the ringbuf corpus: r0 AND the exact
+/// drained record bytes must match between the original and rewritten
+/// streams on every engine. Each case is wrapped in a concretely-dead
+/// prefix (an always-taken guard over a junk mov) so the rewriter has
+/// something to prove even though reserve's null-check explores both
+/// arms.
+#[test]
+fn differential_rewrite_ringbuf_records_agree() {
+    let mut rng = Rng::new(0x2e73_2026);
+    let lay = layouts();
+    let mut verifier_maps = HashMap::new();
+    verifier_maps.insert(RING_MAP_ID_SLOT, ring_def());
+    let mut rewritten_cases = 0usize;
+    for case in 0..fuzz_cases(100) {
+        let mut prog = vec![mov64_imm(6, 7), jmp_imm(jmp::JEQ, 6, 7, 1), mov64_imm(6, 99)];
+        prog.extend(gen_ringbuf_program(&mut rng));
+        let info = verifier::verify(&prog, ProgType::Profiler, &lay.profiler, &verifier_maps)
+            .unwrap_or_else(|e| {
+                panic!("case {}: unverifiable ringbuf program: {}\n{}", case, e, disasm(&prog))
+            });
+        let Some(rw) = analysis::rewrite(&prog, &info) else {
+            continue;
+        };
+        rewritten_cases += 1;
+
+        // run one stream on one engine against a fresh ring; return r0
+        // plus everything the consumer drains afterwards
+        let run = |insns: &[Insn], slot_facts: &[InsnFacts], engine: Engine| {
+            let (ops, slot2op) = interp::predecode_mapped(insns).expect("predecode");
+            let facts = interp::remap_facts(slot_facts, &slot2op, ops.len());
+            let reg = MapRegistry::new();
+            let ring = reg.create_or_get(&ring_def()).unwrap();
+            assert_eq!(ring.id, RING_MAP_ID_SLOT);
+            let env = HelperEnv::new(&reg, &[ring.id]).unwrap();
+            let r0 = match engine {
+                Engine::Interp => unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) },
+                Engine::JitTrampoline => match JitProgram::compile_unchecked(&ops) {
+                    Some(j) => unsafe { j.call(std::ptr::null_mut(), &env) },
+                    None => return None,
+                },
+                Engine::JitInline => {
+                    let opts = JitOptions { facts: Some(&facts), env: Some(&env), inline: None };
+                    match JitProgram::compile_with_unchecked(&ops, &opts) {
+                        Some(j) => unsafe { j.call(std::ptr::null_mut(), &env) },
+                        None => return None,
+                    }
+                }
+            };
+            let mut records = Vec::new();
+            ring.ringbuf_drain(&mut |b| records.push(b.to_vec()));
+            Some((r0, records))
+        };
+        for engine in [Engine::Interp, Engine::JitTrampoline, Engine::JitInline] {
+            let want = run(&prog, &info.facts, engine);
+            let got = run(&rw.insns, &rw.facts, engine);
+            assert_eq!(
+                got,
+                want,
+                "case {}: {:?} diverges after rewrite\noriginal:\n{}rewritten:\n{}",
+                case,
+                engine,
+                disasm(&prog),
+                disasm(&rw.insns)
+            );
+        }
+    }
+    assert!(rewritten_cases > 0, "every wrapped ringbuf case must be rewritable");
 }
 
 /// Determinism guard: the generator is seeded, so two runs produce the

@@ -45,8 +45,8 @@ fn unknown_subcommand_exits_2_and_lists_everything() {
     let err = stderr(&o);
     assert!(err.contains("unknown subcommand 'frobnicate'"), "{}", err);
     let expected = [
-        "verify", "disasm", "allreduce", "sweep", "train", "safety", "hotreload", "traffic",
-        "trace", "bench", "docs",
+        "verify", "disasm", "analyze", "allreduce", "sweep", "train", "safety", "hotreload",
+        "traffic", "trace", "bench", "docs",
     ];
     for name in expected {
         assert!(err.contains(name), "usage must list '{}', got:\n{}", name, err);
@@ -117,16 +117,26 @@ fn verify_stats_reports_verifier_cost_counters() {
         .lines()
         .find(|l| l.starts_with("STATS stress_channel_scorer"))
         .unwrap_or_else(|| panic!("missing STATS line in:\n{}", out));
-    for key in ["insns_processed=", "states_pruned=", "peak_states=", "verify_ns="] {
+    for key in [
+        "insns_processed=",
+        "states_pruned=",
+        "peak_states=",
+        "verify_ns=",
+        "dead_insns=",
+        "max_cost=",
+    ] {
         assert!(stats_line.contains(key), "missing {} in: {}", key, stats_line);
     }
-    let pruned: u64 = stats_line
-        .split("states_pruned=")
-        .nth(1)
-        .and_then(|s| s.split_whitespace().next())
-        .and_then(|s| s.parse().ok())
-        .unwrap();
-    assert!(pruned > 0, "stress policy must exercise pruning: {}", stats_line);
+    let field = |key: &str| -> u64 {
+        stats_line
+            .split(key)
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap()
+    };
+    assert!(field("states_pruned=") > 0, "stress policy must exercise pruning: {}", stats_line);
+    assert!(field("max_cost=") > 0, "every accepted program certifies a cost: {}", stats_line);
 }
 
 #[test]
@@ -168,6 +178,79 @@ fn disasm_prints_instructions() {
     assert!(!out.contains("??"), "undecodable instructions:\n{}", out);
 }
 
+/// `ncclbpf analyze` on a corpus policy: CFG, liveness-annotated
+/// instruction map, rewrite summary and the cost certificate all
+/// present; the certified max_cost is positive and finite.
+#[test]
+fn analyze_reports_cfg_liveness_and_cost_certificate() {
+    let p = policy("size_aware.c");
+    let o = run(&["analyze", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("== size_aware (Tuner) =="), "{}", out);
+    assert!(out.contains("cfg:"), "{}", out);
+    assert!(out.contains("block [0.."), "{}", out);
+    assert!(out.contains("live="), "{}", out);
+    assert!(out.contains("cost: certified max_cost="), "{}", out);
+    assert!(out.contains("subprog 0 ["), "{}", out);
+    let cost: u64 = out
+        .split("certified max_cost=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable cost line in:\n{}", out));
+    assert!(cost > 0, "{}", out);
+}
+
+/// `ncclbpf analyze` on a program with verifier-provable dead code:
+/// the dead slot is marked, the branch fate is annotated, and the
+/// rewrite summary reports the hard-wired conditional and removal.
+/// `--json` emits the same data as parseable JSON.
+#[test]
+fn analyze_marks_dead_code_and_reports_rewrite() {
+    let dir = std::env::temp_dir().join("ncclbpf_cli_analyze");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = "prog tuner deaddemo\n  mov64 r0, 1\n  jne r0, 0, live\n  mov64 r0, 5\nlive:\n  exit\n";
+    let path = dir.join("deaddemo.s");
+    std::fs::write(&path, src).unwrap();
+
+    let o = run(&["analyze", path.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("[always-taken]"), "{}", out);
+    assert!(out.contains("DEAD"), "{}", out);
+    assert!(out.contains("dead code: 1 slots [2]"), "{}", out);
+    assert!(
+        out.contains("rewrite: wired_taken=1 wired_fallthrough=0 removed_insns=1 -> 3 insns"),
+        "{}",
+        out
+    );
+
+    let o = run(&["analyze", path.to_str().unwrap(), "--json"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    let line = out
+        .lines()
+        .find(|l| l.starts_with('{'))
+        .unwrap_or_else(|| panic!("no JSON object in:\n{}", out));
+    let j = parse_json(line).unwrap_or_else(|e| panic!("bad analyze JSON: {}: {}", e, line));
+    assert_eq!(j.get("name").and_then(Json::as_str), Some("deaddemo"), "{}", line);
+    assert_eq!(j.get("insns").and_then(Json::as_u64), Some(4), "{}", line);
+    assert_eq!(j.get("dead_insns").and_then(Json::as_u64), Some(1), "{}", line);
+    assert_eq!(
+        j.get("rewrite").and_then(|r| r.get("removed_insns")).and_then(Json::as_u64),
+        Some(1),
+        "{}",
+        line
+    );
+    assert!(
+        j.get("cost").and_then(|c| c.get("total")).and_then(Json::as_u64).unwrap_or(0) > 0,
+        "{}",
+        line
+    );
+}
+
 #[test]
 fn sweep_runs_and_prints_table() {
     let o = run(&["sweep", "--ranks", "4"]);
@@ -182,7 +265,7 @@ fn safety_suite_green_end_to_end() {
     let o = run(&["safety"]);
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 8 safe accepted, all 13 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 9 safe accepted, all 13 unsafe rejected"), "{}", out);
     // the ringbuf reference-tracking and call-graph classes are in the suite
     for name in ["ringbuf_leak", "ringbuf_use_after_submit", "ringbuf_oob", "call_recursion"] {
         assert!(out.contains(&format!("REJECT {}", name)), "{}", out);
@@ -191,6 +274,11 @@ fn safety_suite_green_end_to_end() {
     for name in ["stress_ladder64", "stress_channel_scorer"] {
         assert!(out.contains(&format!("ACCEPT {}", name)), "{}", out);
     }
+    // the cost corpus: the near-budget policy certifies and installs,
+    // the over-budget one is rejected by the certifier gate at load
+    assert!(out.contains("ACCEPT cost_tight"), "{}", out);
+    assert!(out.contains("REJECT cost_blowout"), "{}", out);
+    assert!(out.contains("cost budget"), "{}", out);
 }
 
 /// With pruning disabled the safety verdicts must not change — the
@@ -204,7 +292,7 @@ fn safety_suite_green_with_pruning_disabled() {
         .expect("spawn");
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 8 safe accepted, all 13 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 9 safe accepted, all 13 unsafe rejected"), "{}", out);
     assert!(out.contains("SKIP: NCCLBPF_VERIFIER_PRUNE=0"), "{}", out);
 }
 
@@ -296,7 +384,8 @@ fn bench_writes_parseable_json_with_median_p99() {
         ("BENCH_traffic.json", 8),
         ("BENCH_ringbuf.json", 6),
         ("BENCH_calls.json", 4),
-        ("BENCH_verifier.json", 10),
+        ("BENCH_verifier.json", 11),
+        ("BENCH_analysis.json", 15),
     ] {
         let path = dir.join(file);
         let text = std::fs::read_to_string(&path)

@@ -89,7 +89,8 @@ fn main() {
     stop.store(true, Ordering::Relaxed);
     caller.join().unwrap();
 
-    let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
+    let snap = host.snapshot();
+    let hook = snap.hook(ProgType::Tuner);
     println!();
     println!(
         "continuous invocation: {} calls, {} reloads ({} rejected attempts), lost calls: {}",
@@ -98,7 +99,7 @@ fn main() {
         rejected,
         lost.load(Ordering::Relaxed)
     );
-    println!("total successful swaps: {}, last swap: {} ns", swaps, last_ns);
+    println!("total successful swaps: {}, last swap: {} ns", hook.swaps, hook.last_swap_ns);
     assert_eq!(lost.load(Ordering::Relaxed), 0, "zero lost calls is the paper's claim");
     println!("RESULT: zero lost calls across {} invocations (paper: 0/400,000)", INVOCATIONS);
 }

@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     operator.join().unwrap();
-    let (swaps, _) = host.swap_stats(ncclbpf::bpf::ProgType::Tuner);
+    let swaps = host.snapshot().hook(ncclbpf::bpf::ProgType::Tuner).swaps;
     println!(
         "\n{} collectives executed across {} policy swaps with zero downtime",
         calls, swaps

@@ -291,6 +291,7 @@ pub fn hotreload_swap(opts: &BenchOpts) -> BenchReport {
     let cycles = opts.iters.max(10);
     let mut swap = Vec::with_capacity(cycles);
     let mut verify = Vec::with_capacity(cycles);
+    let mut analyze = Vec::with_capacity(cycles);
     let mut compile = Vec::with_capacity(cycles);
     let mut total = Vec::with_capacity(cycles);
     for i in 0..cycles {
@@ -299,12 +300,14 @@ pub fn hotreload_swap(opts: &BenchOpts) -> BenchReport {
         let r = host.install_object(obj).expect("reload");
         total.push(t0.elapsed().as_nanos() as f64);
         verify.push(r.verify_ns as f64);
+        analyze.push(r.analyze_ns as f64);
         compile.push(r.compile_ns as f64);
         swap.push(r.swap_ns.iter().sum::<u64>() as f64);
     }
     for (label, xs) in [
         ("swap", &swap),
         ("verify", &verify),
+        ("analyze", &analyze),
         ("compile", &compile),
         ("reload_total", &total),
     ] {
@@ -743,6 +746,113 @@ pub fn inline_bench(opts: &BenchOpts) -> BenchReport {
     rep
 }
 
+/// BENCH_obs — the observability price list: the per-decision cost of
+/// per-program run-stat recording ([`LoadOptions::stats`]) measured as
+/// off/on twins per execution engine (interpreter, trampoline-only
+/// JIT, fact-driven inlined JIT), the wall cost of one
+/// [`NcclBpfHost::snapshot`] frame on a populated host, and the
+/// reload path with the ledger + journal recording off vs on. The
+/// acceptance shape: every `_stats_on` median within noise of its
+/// `_stats_off` twin (the stripes exist so recording never serializes
+/// the hot path), and `snapshot` stays microseconds-scale.
+pub fn obs_bench(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("obs");
+    let args = decision_args(8 << 20);
+
+    // run-stat recording cost, per engine: the same map-lookup policy
+    // measured with stats off then on, through the same dispatch path
+    for (engine, inline, interp) in [
+        ("interp", None, true),
+        ("jit_trampoline", Some(false), false),
+        ("jit_inline", None, false),
+    ] {
+        let mut off_mean = 0.0f64;
+        for (mode, stats) in [("off", Some(false)), ("on", Some(true))] {
+            let mut host = NcclBpfHost::new();
+            host.set_load_options(LoadOptions::new().inline(inline).stats(stats));
+            let obj = policydir::build_named("adaptive_channels").expect("adaptive_channels");
+            host.install_object(&obj).expect("adaptive_channels must verify");
+            seed_policy_maps(&host, args.comm_id);
+            let (p50, p99, mean) = if interp {
+                let prog = host.tuner_program().expect("tuner installed");
+                measure(opts.calls, || {
+                    let mut pctx = PolicyContext::new(
+                        args.coll,
+                        args.nbytes as u64,
+                        args.nranks as u32,
+                        fold_comm_id(args.comm_id),
+                        args.max_channels,
+                    );
+                    prog.run_interp(&mut pctx as *mut PolicyContext as *mut u8);
+                    std::hint::black_box(pctx);
+                })
+            } else {
+                measure(opts.calls, || {
+                    let mut cost = CostTable::all_sentinel();
+                    let mut ch = 0u32;
+                    host.tuner_decide(&args, &mut cost, &mut ch);
+                    std::hint::black_box((&cost, ch));
+                })
+            };
+            if mode == "off" {
+                off_mean = mean;
+            }
+            rep.push(
+                Series::new(format!("{}_stats_{}", engine, mode), "ns", p50, p99, mean)
+                    .with("stats", if mode == "on" { 1.0 } else { 0.0 })
+                    .with("overhead_vs_off_ns", mean - off_mean),
+            );
+        }
+    }
+
+    // one `ncclbpf stats` frame: snapshot cost on a host with live
+    // programs, maps, a populated ledger, and run history
+    {
+        let mut host = NcclBpfHost::new();
+        host.set_load_options(LoadOptions::new().stats(Some(true)));
+        let obj = policydir::build_named("latency_events").expect("latency_events");
+        host.install_object(&obj).expect("latency_events must verify");
+        let obj = policydir::build_named("adaptive_channels").expect("adaptive_channels");
+        host.install_object(&obj).expect("adaptive_channels must verify");
+        seed_policy_maps(&host, args.comm_id);
+        for _ in 0..1_000 {
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            host.tuner_decide(&args, &mut cost, &mut ch);
+        }
+        let (p50, p99, mean) = measure(opts.calls.min(20_000), || {
+            std::hint::black_box(host.snapshot());
+        });
+        rep.push(Series::new("snapshot", "ns", p50, p99, mean));
+    }
+
+    // reload-path bookkeeping: install_object records one ledger entry
+    // + journal row per swap; measure the full reload with stats off
+    // vs on (the ledger/journal run either way — the twin isolates the
+    // stat-cell allocation)
+    for (mode, stats) in [("off", Some(false)), ("on", Some(true))] {
+        let mut host = NcclBpfHost::new();
+        host.set_load_options(LoadOptions::new().stats(stats));
+        let a = policydir::build_named("static_ring").expect("static_ring");
+        let b = policydir::build_named("nvlink_ring_mid_v2").expect("nvlink_ring_mid_v2");
+        host.install_object(&a).expect("install");
+        let cycles = opts.iters.max(10);
+        let mut total = Vec::with_capacity(cycles);
+        for i in 0..cycles {
+            let obj = if i % 2 == 0 { &b } else { &a };
+            let t0 = Instant::now();
+            host.install_object(obj).expect("reload");
+            total.push(t0.elapsed().as_nanos() as f64);
+        }
+        let (p50, p99, mean) = stats3(&total);
+        rep.push(
+            Series::new(format!("reload_stats_{}", mode), "ns", p50, p99, mean)
+                .with("cycles", cycles as f64),
+        );
+    }
+    rep
+}
+
 /// One `--compare` finding: a series whose fresh median regressed past
 /// tolerance (or disappeared) relative to the committed baseline.
 #[derive(Debug)]
@@ -913,6 +1023,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         verifier_bench(opts),
         inline_bench(opts),
         analysis_bench(opts),
+        obs_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -1067,9 +1178,32 @@ mod tests {
     fn hotreload_reports_all_phases() {
         let rep = hotreload_swap(&tiny());
         let labels: Vec<&str> = rep.series.iter().map(|s| s.label.as_str()).collect();
-        assert_eq!(labels, ["swap", "verify", "compile", "reload_total"]);
+        assert_eq!(labels, ["swap", "verify", "analyze", "compile", "reload_total"]);
         for s in &rep.series {
             assert!(s.mean > 0.0, "{}", s.label);
+        }
+    }
+
+    #[test]
+    fn obs_bench_reports_stats_on_off_per_engine() {
+        let rep = obs_bench(&tiny());
+        assert_eq!(rep.series.len(), 9);
+        for s in &rep.series {
+            assert!(s.median > 0.0 && s.mean > 0.0, "{}", s.label);
+            assert_eq!(s.unit, "ns");
+        }
+        for engine in ["interp", "jit_trampoline", "jit_inline"] {
+            for mode in ["on", "off"] {
+                assert!(
+                    rep.series.iter().any(|s| s.label == format!("{}_stats_{}", engine, mode)),
+                    "missing {}_stats_{}",
+                    engine,
+                    mode
+                );
+            }
+        }
+        for label in ["snapshot", "reload_stats_off", "reload_stats_on"] {
+            assert!(rep.series.iter().any(|s| s.label == label), "missing {}", label);
         }
     }
 

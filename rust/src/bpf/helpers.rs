@@ -399,6 +399,11 @@ pub struct HelperEnv {
     /// the owning program's type; tail calls check it against the
     /// prog-array slot tag (`None` skips the check — raw-engine tests).
     pub prog_type: Option<ProgType>,
+    /// per-program run-stat cell (`NCCLBPF_STATS` / `LoadOptions::stats`);
+    /// `None` means stats are off and every record site is one untaken
+    /// branch. Shared with the host's install ledger so counts survive
+    /// hot-reload retirement.
+    pub stats: Option<Arc<super::stats::RunStatsCell>>,
 }
 
 impl HelperEnv {
@@ -411,7 +416,7 @@ impl HelperEnv {
                 .ok_or_else(|| format!("unresolved map id {}", idv))?;
             maps.push((idv, m));
         }
-        Ok(HelperEnv { maps, printk: None, prog_type: None })
+        Ok(HelperEnv { maps, printk: None, prog_type: None, stats: None })
     }
 
     /// Attach a trace_printk sink (builder style).

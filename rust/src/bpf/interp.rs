@@ -464,6 +464,12 @@ pub unsafe fn execute(ops: &[Op], ctx: *mut u8, env: &HelperEnv) -> u64 {
                     Some(t) => {
                         TAIL_DEPTH.with(|d| d.set(depth + 1));
                         debug_assert!(frames.is_empty(), "tail call from frame 0 only");
+                        // kernel-style attribution: the dispatch counts
+                        // against the initiator; the target gets no
+                        // run_cnt of its own (no re-entry)
+                        if let Some(cell) = &(*cur_env).stats {
+                            cell.record_tail_call(depth + 1);
+                        }
                         // same-frame semantics: r10 keeps the current
                         // stack; r1 already holds the ctx argument
                         cur_ops = t.ops.as_slice();
@@ -472,6 +478,9 @@ pub unsafe fn execute(ops: &[Op], ctx: *mut u8, env: &HelperEnv) -> u64 {
                         pc = 0;
                     }
                     None => {
+                        if let Some(cell) = &(*cur_env).stats {
+                            cell.record_error();
+                        }
                         regs[0] = u64::MAX;
                         pc += 1;
                     }
@@ -549,7 +558,7 @@ mod tests {
     use crate::bpf::maps::{MapDef, MapKind, MapRegistry};
 
     fn env() -> HelperEnv {
-        HelperEnv { maps: vec![], printk: None, prog_type: None }
+        HelperEnv { maps: vec![], printk: None, prog_type: None, stats: None }
     }
 
     unsafe fn run(prog: &[Insn]) -> u64 {

@@ -169,13 +169,25 @@ unsafe extern "C" fn tramp_tail_call(
 ) -> TailRet {
     let depth = TAIL_DEPTH.with(|d| d.get());
     if depth >= MAX_TAIL_CALLS {
+        if let Some(cell) = &(*env).stats {
+            cell.record_error();
+        }
         return TailRet { r0: u64::MAX, taken: 0 };
     }
     let Some(target) = resolve_tail_call(&*env, map_id as u32, index) else {
+        if let Some(cell) = &(*env).stats {
+            cell.record_error();
+        }
         return TailRet { r0: u64::MAX, taken: 0 };
     };
     TAIL_DEPTH.with(|d| d.set(depth + 1));
-    let r0 = target.run(ctx as *mut u8);
+    // kernel-style attribution: the dispatch counts against the
+    // initiator; the target runs untracked (a taken tail call is not a
+    // fresh top-level entry), matching the interpreter's in-place switch
+    if let Some(cell) = &(*env).stats {
+        cell.record_tail_call(depth + 1);
+    }
+    let r0 = target.run_untracked(ctx as *mut u8);
     TAIL_DEPTH.with(|d| d.set(depth));
     TailRet { r0, taken: 1 }
 }
@@ -1203,7 +1215,7 @@ mod tests {
     use crate::util::Rng;
 
     fn env() -> HelperEnv {
-        HelperEnv { maps: vec![], printk: None, prog_type: None }
+        HelperEnv { maps: vec![], printk: None, prog_type: None, stats: None }
     }
 
     fn jit_run(prog: &[Insn], ctx: *mut u8, env: &HelperEnv) -> u64 {

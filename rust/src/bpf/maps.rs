@@ -24,6 +24,7 @@
 //! contract the paper's T2 tension describes: structured, fixed-size
 //! state with atomic element access replacing ad hoc shared memory.
 
+use super::stats::{MapPressure, MapPressureStats};
 use std::cell::UnsafeCell;
 use std::collections::HashMap as StdHashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
@@ -207,6 +208,12 @@ struct RingState {
     drops: AtomicU64,
     /// consumer-side records skipped because the producer discarded them
     discards: AtomicU64,
+    /// successfully reserved records (later submitted *or* discarded)
+    emitted: AtomicU64,
+    /// consumer-side records delivered to a drain callback
+    drained: AtomicU64,
+    /// deepest unconsumed backlog in bytes ever observed at reserve time
+    hiwater: AtomicU64,
 }
 
 impl RingState {
@@ -221,6 +228,9 @@ impl RingState {
             consumer: AtomicU64::new(0),
             drops: AtomicU64::new(0),
             discards: AtomicU64::new(0),
+            emitted: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            hiwater: AtomicU64::new(0),
         }
     }
 
@@ -277,6 +287,9 @@ pub struct Map {
     progs: Option<Mutex<Vec<Option<ProgSlot>>>>,
     /// serializes structural changes (hash insert/delete, ring reserve).
     lock: SpinLock,
+    /// always-on striped operation counters (lookups/updates/deletes/
+    /// tombstone churn) — the `ncclbpf stats` map-pressure rows.
+    pressure: MapPressure,
 }
 
 // SAFETY: concurrent byte-level access to `values` is the documented eBPF
@@ -357,6 +370,7 @@ impl Map {
             ring,
             progs,
             lock: SpinLock::new(),
+            pressure: MapPressure::default(),
         })
     }
 
@@ -402,6 +416,7 @@ impl Map {
     /// Look up `key`; returns a stable pointer to the value or null.
     /// This is the hot path behind `bpf_map_lookup_elem`.
     pub fn lookup(&self, key: &[u8]) -> *mut u8 {
+        self.pressure.record_lookup();
         if key.len() != self.def.key_size as usize {
             return std::ptr::null_mut();
         }
@@ -451,6 +466,7 @@ impl Map {
 
     /// Insert or overwrite. Returns Err if the (hash) map is full.
     pub fn update(&self, key: &[u8], value: &[u8]) -> Result<(), String> {
+        self.pressure.record_update();
         if key.len() != self.def.key_size as usize {
             return Err(format!("map '{}': bad key size {}", self.def.name, key.len()));
         }
@@ -503,6 +519,9 @@ impl Map {
                 }
                 SLOT_EMPTY => {
                     let free = first_free.unwrap_or(slot);
+                    if first_free.is_some() {
+                        self.pressure.record_tombstone(); // reused one
+                    }
                     return self.fill_slot(free, key, value);
                 }
                 _ => {
@@ -514,6 +533,7 @@ impl Map {
             slot = (slot + 1) % cap;
         }
         if let Some(free) = first_free {
+            self.pressure.record_tombstone(); // reused one
             return self.fill_slot(free, key, value);
         }
         Err(format!("map '{}' full ({} entries)", self.def.name, cap))
@@ -531,6 +551,7 @@ impl Map {
 
     /// Delete `key` (hash maps only; arrays cannot delete). Ok(true) if removed.
     pub fn delete(&self, key: &[u8]) -> Result<bool, String> {
+        self.pressure.record_delete();
         match self.def.kind {
             MapKind::Array | MapKind::PerCpuArray | MapKind::RingBuf | MapKind::ProgArray => {
                 Err(format!("map '{}': delete unsupported on this map kind", self.def.name))
@@ -549,6 +570,7 @@ impl Map {
                         SLOT_FULL if self.key_eq(slot, key) => {
                             self.slots[slot].store(SLOT_TOMBSTONE, Ordering::Release);
                             self.count.fetch_sub(1, Ordering::Relaxed);
+                            self.pressure.record_tombstone(); // left one
                             removed = true;
                             break;
                         }
@@ -798,6 +820,10 @@ impl Map {
             (ring.byte_ptr(prod).add(4) as *mut u32).write_unaligned(0);
         }
         ring.producer.store(prod + total, Ordering::Release);
+        // backlog accounting under the same lock: emitted records and
+        // the deepest unconsumed-byte watermark ever observed
+        ring.emitted.fetch_add(1, Ordering::Relaxed);
+        ring.hiwater.fetch_max(prod + total - cons, Ordering::Relaxed);
         self.lock.unlock();
         unsafe { ring.byte_ptr(prod).add(RINGBUF_HDR_SIZE as usize) }
     }
@@ -868,6 +894,30 @@ impl Map {
         self.ring.as_ref().map(|r| r.discards.load(Ordering::Relaxed)).unwrap_or(0)
     }
 
+    /// Successfully reserved records (whether later submitted or
+    /// discarded). Conservation against the consumer side:
+    /// `emitted == drained + discarded + still-unconsumed records`.
+    pub fn ringbuf_emitted(&self) -> u64 {
+        self.ring.as_ref().map(|r| r.emitted.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Records delivered to drain callbacks over the map's lifetime
+    /// (the producer-independent side of the conservation identity).
+    pub fn ringbuf_drained(&self) -> u64 {
+        self.ring.as_ref().map(|r| r.drained.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Deepest unconsumed backlog in bytes ever observed at reserve
+    /// time — how close the ring has come to dropping.
+    pub fn ringbuf_hiwater(&self) -> u64 {
+        self.ring.as_ref().map(|r| r.hiwater.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Aggregate this map's operation-pressure counters (always on).
+    pub fn pressure_stats(&self) -> MapPressureStats {
+        self.pressure.aggregate()
+    }
+
     /// Drain every completed record, invoking `cb` with each submitted
     /// payload (discarded records are skipped and counted in
     /// [`Map::ringbuf_discarded`]). Stops at the first still-BUSY
@@ -897,6 +947,7 @@ impl Map {
                     )
                 };
                 cb(data);
+                ring.drained.fetch_add(1, Ordering::Relaxed);
                 delivered += 1;
             } else {
                 ring.discards.fetch_add(1, Ordering::Relaxed);
@@ -1086,6 +1137,50 @@ mod tests {
         m.delete(&1u32.to_le_bytes()).unwrap();
         m.write_u64(3, 3).unwrap();
         assert_eq!(m.read_u64(3), Some(3));
+    }
+
+    #[test]
+    fn pressure_counters_track_operations() {
+        let m = Map::new(hdef("h", 4, 8, 4), 1).unwrap();
+        m.write_u64(1, 10).unwrap(); // update
+        let _ = m.read_u64(1); // lookup
+        let _ = m.lookup(&9u32.to_le_bytes()); // miss still counts
+        m.delete(&1u32.to_le_bytes()).unwrap(); // delete + tombstone left
+        m.write_u64(1, 20).unwrap(); // update + tombstone reused
+        let p = m.pressure_stats();
+        assert_eq!(p.updates, 2);
+        assert_eq!(p.deletes, 1);
+        assert!(p.lookups >= 2);
+        assert_eq!(p.tombstones, 2, "one left by delete, one reused by insert");
+    }
+
+    #[test]
+    fn ringbuf_emitted_drained_hiwater_accounting() {
+        let def = MapDef {
+            name: "rb".into(),
+            kind: MapKind::RingBuf,
+            key_size: 0,
+            value_size: 0,
+            max_entries: 4096,
+        };
+        let m = Map::new(def, 1).unwrap();
+        assert_eq!(m.ringbuf_emitted(), 0);
+        for i in 0..3u64 {
+            assert_eq!(m.ringbuf_output(&i.to_le_bytes()), 0);
+        }
+        // one reserved-then-discarded record
+        let p = m.ringbuf_reserve(8);
+        assert!(!p.is_null());
+        unsafe { Map::ringbuf_discard(p) };
+        assert_eq!(m.ringbuf_emitted(), 4);
+        assert!(m.ringbuf_hiwater() >= 4 * 16, "4 records of 16 bytes backlogged");
+        let mut n = 0usize;
+        m.ringbuf_drain(&mut |_| n += 1);
+        assert_eq!(n, 3);
+        assert_eq!(m.ringbuf_drained(), 3);
+        assert_eq!(m.ringbuf_discarded(), 1);
+        // conservation: emitted == drained + discarded (+ 0 in flight)
+        assert_eq!(m.ringbuf_emitted(), m.ringbuf_drained() + m.ringbuf_discarded());
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod jit;
 pub mod maps;
 pub mod object;
 pub mod program;
+pub mod stats;
 pub mod verifier;
 
 pub use analysis::{CostReport, HotSpot, LiveSet, ProgramAnalysis, Rewrite, RewriteStats};
@@ -26,8 +27,10 @@ pub use jit::JitInlineStats;
 pub use maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 pub use object::Object;
 pub use program::{
-    load, prog_array_update, CtxLayouts, LoadError, LoadOptions, LoadOutcome, LoadedProgram,
+    load, prog_array_update, CtxLayouts, LoadError, LoadOptions, LoadOutcome, LoadStats,
+    LoadedProgram,
 };
+pub use stats::{MapPressureStats, RunStats, RunStatsCell};
 pub use verifier::{
     BranchFate, CtxLayout, InsnFacts, VerifierConfig, VerifierStats, VerifyError, VerifyInfo,
 };

@@ -12,6 +12,7 @@ use super::interp::{self, Op};
 use super::jit::{JitInlineStats, JitOptions, JitProgram};
 use super::maps::{Map, MapDef, MapKind, MapRegistry, ProgSlot};
 use super::object::{ObjProgram, Object};
+use super::stats::{RunStats, RunStatsCell};
 use super::verifier::{
     self, CtxLayout, InsnFacts, VerifierConfig, VerifierStats, VerifyError, VerifyInfo,
 };
@@ -84,6 +85,9 @@ impl std::error::Error for LoadError {}
 pub struct LoadStats {
     /// nanoseconds spent in the verifier
     pub verify_ns: u64,
+    /// nanoseconds spent in post-verification static analysis (the
+    /// cost-admission gate + dead-code rewrite, DESIGN.md §12)
+    pub analyze_ns: u64,
     /// nanoseconds spent pre-decoding + JIT-compiling
     pub compile_ns: u64,
 }
@@ -126,19 +130,56 @@ impl std::fmt::Debug for LoadedProgram {
 impl LoadedProgram {
     /// Execute with `ctx` in R1; returns R0. Uses the native JIT when
     /// available, the pre-decoded interpreter otherwise.
+    ///
+    /// When the program was loaded with run stats enabled
+    /// ([`LoadOptions::stats`] / `NCCLBPF_STATS`), each top-level entry
+    /// records run count and wall time into the program's striped
+    /// [`RunStatsCell`]; when stats are off the only cost is one
+    /// `Option` test on an always-`None` field.
     #[inline]
     pub fn run(&self, ctx: *mut u8) -> u64 {
-        if let Some(j) = &self.jit {
-            unsafe { j.call(ctx, &self.env) }
+        if let Some(cell) = &self.env.stats {
+            let t0 = Instant::now();
+            let r0 = unsafe { self.run_untracked(ctx) };
+            cell.record_run(t0.elapsed().as_nanos() as u64, self.jit.is_some());
+            r0
+        } else {
+            unsafe { self.run_untracked(ctx) }
+        }
+    }
+
+    /// Force interpreter execution (for JIT-vs-interp ablation benches).
+    /// Records into the run-stat cell like [`LoadedProgram::run`], but
+    /// attributed as an interpreted entry even when a JIT body exists.
+    #[inline]
+    pub fn run_interp(&self, ctx: *mut u8) -> u64 {
+        if let Some(cell) = &self.env.stats {
+            let t0 = Instant::now();
+            let r0 = unsafe { interp::execute(&self.ops, ctx, &self.env) };
+            cell.record_run(t0.elapsed().as_nanos() as u64, false);
+            r0
         } else {
             unsafe { interp::execute(&self.ops, ctx, &self.env) }
         }
     }
 
-    /// Force interpreter execution (for JIT-vs-interp ablation benches).
+    /// Dispatch without touching run stats — the engines' tail-call
+    /// path. Kernel attribution model: a taken tail call is *not* a
+    /// fresh top-level entry, so the target must not self-record
+    /// (`run_cnt` conservation: `sum(run_cnt) == host decisions` even
+    /// with dispatch chains installed).
+    ///
+    /// # Safety
+    /// `ctx` must satisfy the same contract as [`LoadedProgram::run`]:
+    /// a pointer valid for the verified ctx layout of this program
+    /// type (null is allowed when the program never dereferences r1).
     #[inline]
-    pub fn run_interp(&self, ctx: *mut u8) -> u64 {
-        unsafe { interp::execute(&self.ops, ctx, &self.env) }
+    pub(crate) unsafe fn run_untracked(&self, ctx: *mut u8) -> u64 {
+        if let Some(j) = &self.jit {
+            j.call(ctx, &self.env)
+        } else {
+            interp::execute(&self.ops, ctx, &self.env)
+        }
     }
 
     /// True when [`LoadedProgram::run`] dispatches to native code.
@@ -168,6 +209,20 @@ impl LoadedProgram {
     /// elided checks) — `None` when the program runs interpreted.
     pub fn jit_inline_stats(&self) -> Option<JitInlineStats> {
         self.jit.as_ref().map(|j| j.inline_stats())
+    }
+
+    /// Aggregate run statistics (the kernel `BPF_ENABLE_STATS` analog:
+    /// run count, cumulative run time, errors, tail-call counters).
+    /// All-zero when the program was loaded with stats off.
+    pub fn run_stats(&self) -> RunStats {
+        self.env.stats.as_ref().map(|c| c.aggregate()).unwrap_or_default()
+    }
+
+    /// The shared striped stat cell, when stats were enabled at load
+    /// time. The host clones this `Arc` into its ledger so counts
+    /// survive hot-reload retirement.
+    pub fn stats_cell(&self) -> Option<Arc<RunStatsCell>> {
+        self.env.stats.clone()
     }
 }
 
@@ -208,6 +263,13 @@ pub struct LoadOptions {
     /// verifier proved anything rewritable, `Some(false)` = execute
     /// the program exactly as authored (the `NCCLBPF_REWRITE=0` path).
     pub rewrite: Option<bool>,
+    /// per-program run statistics (the kernel `BPF_ENABLE_STATS`
+    /// analog): `Some(true)` allocates a striped [`RunStatsCell`] per
+    /// program and records run count/time at every top-level entry;
+    /// `None` or `Some(false)` keeps the kernel default of off — the
+    /// hot path then pays only one `Option` test (the
+    /// `NCCLBPF_STATS` path).
+    pub stats: Option<bool>,
 }
 
 impl LoadOptions {
@@ -244,6 +306,12 @@ impl LoadOptions {
     /// Override dead-code rewriting (`None` keeps it on).
     pub fn rewrite(mut self, rewrite: Option<bool>) -> LoadOptions {
         self.rewrite = rewrite;
+        self
+    }
+    /// Enable per-program run statistics (`None`/`Some(false)` keep
+    /// them off, mirroring the kernel's `BPF_ENABLE_STATS` default).
+    pub fn stats(mut self, stats: Option<bool>) -> LoadOptions {
+        self.stats = stats;
         self
     }
 }
@@ -378,6 +446,7 @@ fn load_program(
     //    verifier-proven dead code is rewritten out of the stream the
     //    engines will execute. `info` stays indexed over the original
     //    slots; the rewrite carries its own remapped fact table.
+    let t_analyze = Instant::now();
     if let Some(budget) = opts.max_cost {
         if info.max_cost > budget {
             return Err(LoadError::Budget {
@@ -396,6 +465,7 @@ fn load_program(
         Some(r) => (&r.insns, &r.facts),
         None => (&insns, &info.facts),
     };
+    let analyze_ns = t_analyze.elapsed().as_nanos() as u64;
 
     // 5. compile: pre-decode for the interpreter, then attempt native
     //    JIT with the verifier's fact table driving call-site inlining
@@ -407,6 +477,7 @@ fn load_program(
     let mut env = HelperEnv::new(registry, &info.used_maps).map_err(LoadError::Structural)?;
     env.printk = opts.sink.clone();
     env.prog_type = Some(pt);
+    env.stats = if opts.stats.unwrap_or(false) { Some(RunStatsCell::new()) } else { None };
     let jit_opts = JitOptions {
         facts: if facts.is_empty() { None } else { Some(&facts) },
         env: Some(&env),
@@ -419,7 +490,7 @@ fn load_program(
         name: p.name.clone(),
         prog_type: pt,
         info,
-        stats: LoadStats { verify_ns, compile_ns },
+        stats: LoadStats { verify_ns, analyze_ns, compile_ns },
         ops,
         env,
         rewrite_stats,
@@ -622,6 +693,68 @@ live:
             assert_eq!(s.direct_calls, 0);
             assert_eq!(s.trampoline_calls, 1);
         }
+    }
+
+    #[test]
+    fn run_stats_toggle_counts_entries() {
+        let reg = MapRegistry::new();
+        let obj = crate::bpf::asm::assemble(GOOD).unwrap();
+        let on = load(&obj, &reg, &layouts(), &LoadOptions::new().stats(Some(true)))
+            .unwrap()
+            .programs
+            .remove(0);
+        on.map("state").unwrap().write_u64(0, 5).unwrap();
+        for _ in 0..3 {
+            assert_eq!(on.run(std::ptr::null_mut()), 5);
+        }
+        assert_eq!(on.run_interp(std::ptr::null_mut()), 5);
+        let s = on.run_stats();
+        assert_eq!(s.run_cnt, 4);
+        assert_eq!(s.interp_runs + s.jit_runs, 4);
+        assert!(s.interp_runs >= 1, "run_interp records as interpreted");
+        assert_eq!(s.error_cnt, 0);
+        assert!(on.stats_cell().is_some());
+        // default keeps stats off: cell absent, aggregate all-zero
+        let off = load(&obj, &reg, &layouts(), &LoadOptions::new()).unwrap().programs.remove(0);
+        assert_eq!(off.run(std::ptr::null_mut()), 5);
+        assert!(off.stats_cell().is_none());
+        assert_eq!(off.run_stats(), RunStats::default());
+    }
+
+    #[test]
+    fn tail_call_attribution_conserves_run_cnt() {
+        // kernel attribution: the dispatch counts against the
+        // initiator; tail-called links get no run_cnt of their own
+        let reg = MapRegistry::new();
+        let obj = crate::bpf::asm::assemble(DISPATCHER).unwrap();
+        let stats_on = LoadOptions::new().stats(Some(true));
+        let disp = load(&obj, &reg, &layouts(), &stats_on).unwrap().programs.remove(0);
+        let lobj = crate::bpf::asm::assemble(&link_src(10, 100)).unwrap();
+        let link = Arc::new(load(&lobj, &reg, &layouts(), &stats_on).unwrap().programs.remove(0));
+        let chain = disp.map("chain").unwrap();
+        prog_array_update(&chain, 0, &link).unwrap();
+        for interp in [false, true] {
+            let mut ctx = [0u8; 64];
+            let r0 = if interp {
+                disp.run_interp(ctx.as_mut_ptr())
+            } else {
+                disp.run(ctx.as_mut_ptr())
+            };
+            assert_eq!(r0, 100);
+        }
+        let d = disp.run_stats();
+        let l = link.run_stats();
+        assert_eq!(d.run_cnt, 2);
+        assert_eq!(d.tail_calls, 2, "both engines record the taken dispatch");
+        assert_eq!(d.tail_depth_max, 1);
+        assert_eq!(l.run_cnt, 0, "tail-called target must not self-record");
+        // a failed tail call (empty slot) records an error, not a run
+        assert!(chain.prog_array_clear(0));
+        let mut ctx = [0u8; 64];
+        assert_eq!(disp.run(ctx.as_mut_ptr()), 7);
+        let d2 = disp.run_stats();
+        assert_eq!(d2.run_cnt, 3);
+        assert_eq!(d2.error_cnt, 1, "fallthrough dispatch counted as error");
     }
 
     #[test]

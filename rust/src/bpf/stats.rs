@@ -1,0 +1,305 @@
+//! Kernel-style per-program run statistics — the `BPF_ENABLE_STATS`
+//! analog (DESIGN.md §13).
+//!
+//! When a program is loaded with [`LoadOptions::stats`] enabled (or
+//! `NCCLBPF_STATS=1` at the CLI edge), its helper environment carries a
+//! [`RunStatsCell`]: eight cache-line-aligned stripes of relaxed
+//! atomics, one picked per thread, so concurrent decision threads
+//! never contend on a shared counter line (the same striping idiom as
+//! the reload slot's reader ledger). With stats off the cell is simply
+//! absent (`Option::None`) and every record site is a single untaken
+//! branch — the near-zero-cost-when-off contract `BENCH_obs.json`
+//! tracks.
+//!
+//! Attribution mirrors the kernel: `run_cnt`/`run_time_ns` are
+//! recorded once per *entry* into a program (interpreter or JIT), and
+//! a taken `bpf_tail_call` does **not** re-enter — the chained
+//! program's execution is attributed to the program that started the
+//! decision, while the initiator's `tail_calls`/`tail_depth_max`
+//! counters record the dispatch itself. `error_cnt` counts failed
+//! tail-call dispatches (chain limit exhausted or an empty prog-array
+//! slot), the only runtime fault class verified programs retain.
+//!
+//! [`LoadOptions::stats`]: super::program::LoadOptions
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Stripe count — matches the reload slot's reader ledger so one
+/// thread-local index serves both.
+const STRIPES: usize = 8;
+
+/// This thread's stripe index: assigned round-robin on first use.
+fn stripe_idx() -> usize {
+    thread_local! {
+        static STRIPE: usize = {
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES
+        };
+    }
+    STRIPE.with(|s| *s)
+}
+
+/// One cache line of per-thread counters (padded to 64 bytes so
+/// stripes never false-share).
+#[repr(align(64))]
+#[derive(Default)]
+struct Stripe {
+    run_cnt: AtomicU64,
+    run_time_ns: AtomicU64,
+    error_cnt: AtomicU64,
+    tail_calls: AtomicU64,
+    tail_depth_max: AtomicU64,
+    jit_runs: AtomicU64,
+    interp_runs: AtomicU64,
+}
+
+/// Striped run-stat counters attached to one loaded program's helper
+/// environment. Shared by `Arc` between the program (which records)
+/// and the host's install ledger (which keeps the counts alive after
+/// a hot-reload retires the program, so conservation invariants hold
+/// across reload storms).
+#[derive(Default)]
+pub struct RunStatsCell {
+    stripes: [Stripe; STRIPES],
+}
+
+impl RunStatsCell {
+    /// A fresh zeroed cell behind an `Arc` (the only way cells are
+    /// ever held).
+    pub fn new() -> Arc<RunStatsCell> {
+        Arc::new(RunStatsCell::default())
+    }
+
+    #[inline]
+    fn stripe(&self) -> &Stripe {
+        &self.stripes[stripe_idx()]
+    }
+
+    /// Record one completed top-level run: wall time and which engine
+    /// executed it.
+    #[inline]
+    pub fn record_run(&self, ns: u64, jitted: bool) {
+        let s = self.stripe();
+        s.run_cnt.fetch_add(1, Ordering::Relaxed);
+        s.run_time_ns.fetch_add(ns, Ordering::Relaxed);
+        if jitted {
+            s.jit_runs.fetch_add(1, Ordering::Relaxed);
+        } else {
+            s.interp_runs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one taken `bpf_tail_call` dispatched at `depth` (1-based
+    /// chain position of the target).
+    #[inline]
+    pub fn record_tail_call(&self, depth: u64) {
+        let s = self.stripe();
+        s.tail_calls.fetch_add(1, Ordering::Relaxed);
+        s.tail_depth_max.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Record one failed tail-call dispatch (fall-through path).
+    #[inline]
+    pub fn record_error(&self) {
+        self.stripe().error_cnt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold every stripe into one [`RunStats`] value. Relaxed reads:
+    /// the snapshot is monotone per counter but not a single atomic
+    /// cut across counters (DESIGN.md §13 consistency semantics).
+    pub fn aggregate(&self) -> RunStats {
+        let mut out = RunStats::default();
+        for s in &self.stripes {
+            out.run_cnt += s.run_cnt.load(Ordering::Relaxed);
+            out.run_time_ns += s.run_time_ns.load(Ordering::Relaxed);
+            out.error_cnt += s.error_cnt.load(Ordering::Relaxed);
+            out.tail_calls += s.tail_calls.load(Ordering::Relaxed);
+            out.tail_depth_max =
+                out.tail_depth_max.max(s.tail_depth_max.load(Ordering::Relaxed));
+            out.jit_runs += s.jit_runs.load(Ordering::Relaxed);
+            out.interp_runs += s.interp_runs.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// Aggregated per-program run statistics — the bpftool
+/// `run_cnt`/`run_time_ns` shape plus this runtime's engine and
+/// tail-call detail.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunStats {
+    /// Top-level entries into the program (tail-called runs are
+    /// attributed to the initiating program, as in the kernel).
+    pub run_cnt: u64,
+    /// Total wall nanoseconds across those runs.
+    pub run_time_ns: u64,
+    /// Failed tail-call dispatches (chain limit / empty slot).
+    pub error_cnt: u64,
+    /// Taken tail-call dispatches initiated by this program.
+    pub tail_calls: u64,
+    /// Deepest chain position this program dispatched into.
+    pub tail_depth_max: u64,
+    /// Runs executed by the native JIT.
+    pub jit_runs: u64,
+    /// Runs executed by the pre-decoded interpreter.
+    pub interp_runs: u64,
+}
+
+impl RunStats {
+    /// Fold another program's stats into this one (counters add,
+    /// depth takes the max) — used when the host compacts retired
+    /// ledger entries into one per-hook aggregate.
+    pub fn absorb(&mut self, other: &RunStats) {
+        self.run_cnt += other.run_cnt;
+        self.run_time_ns += other.run_time_ns;
+        self.error_cnt += other.error_cnt;
+        self.tail_calls += other.tail_calls;
+        self.tail_depth_max = self.tail_depth_max.max(other.tail_depth_max);
+        self.jit_runs += other.jit_runs;
+        self.interp_runs += other.interp_runs;
+    }
+
+    /// Mean nanoseconds per run (0 when the program never ran).
+    pub fn avg_run_ns(&self) -> u64 {
+        if self.run_cnt == 0 {
+            0
+        } else {
+            self.run_time_ns / self.run_cnt
+        }
+    }
+}
+
+/// One cache line of per-thread map-pressure counters.
+#[repr(align(64))]
+#[derive(Default)]
+struct PressureStripe {
+    lookups: AtomicU64,
+    updates: AtomicU64,
+    deletes: AtomicU64,
+    tombstones: AtomicU64,
+}
+
+/// Striped per-map operation counters (always on: the stripes keep the
+/// hot lookup path off shared cache lines, so the unconditional count
+/// stays in the noise of the lookup itself).
+#[derive(Default)]
+pub struct MapPressure {
+    stripes: [PressureStripe; STRIPES],
+}
+
+impl MapPressure {
+    #[inline]
+    fn stripe(&self) -> &PressureStripe {
+        &self.stripes[stripe_idx()]
+    }
+
+    /// Count one lookup (hit or miss).
+    #[inline]
+    pub fn record_lookup(&self) {
+        self.stripe().lookups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one update (insert or overwrite).
+    #[inline]
+    pub fn record_update(&self) {
+        self.stripe().updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one delete.
+    #[inline]
+    pub fn record_delete(&self) {
+        self.stripe().deletes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one tombstone transition (a delete leaving a tombstone,
+    /// or an insert reusing one) — hash-map churn pressure.
+    #[inline]
+    pub fn record_tombstone(&self) {
+        self.stripe().tombstones.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold every stripe into one [`MapPressureStats`] value.
+    pub fn aggregate(&self) -> MapPressureStats {
+        let mut out = MapPressureStats::default();
+        for s in &self.stripes {
+            out.lookups += s.lookups.load(Ordering::Relaxed);
+            out.updates += s.updates.load(Ordering::Relaxed);
+            out.deletes += s.deletes.load(Ordering::Relaxed);
+            out.tombstones += s.tombstones.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// Aggregated per-map operation counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MapPressureStats {
+    /// Lookup operations (helper + host side).
+    pub lookups: u64,
+    /// Update operations.
+    pub updates: u64,
+    /// Delete operations.
+    pub deletes: u64,
+    /// Tombstone churn events (left by deletes, reused by inserts).
+    pub tombstones: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_stats_aggregate_and_absorb() {
+        let cell = RunStatsCell::new();
+        cell.record_run(100, true);
+        cell.record_run(50, false);
+        cell.record_tail_call(2);
+        cell.record_tail_call(1);
+        cell.record_error();
+        let agg = cell.aggregate();
+        assert_eq!(agg.run_cnt, 2);
+        assert_eq!(agg.run_time_ns, 150);
+        assert_eq!(agg.jit_runs, 1);
+        assert_eq!(agg.interp_runs, 1);
+        assert_eq!(agg.tail_calls, 2);
+        assert_eq!(agg.tail_depth_max, 2);
+        assert_eq!(agg.error_cnt, 1);
+        assert_eq!(agg.avg_run_ns(), 75);
+
+        let mut total = RunStats::default();
+        total.absorb(&agg);
+        total.absorb(&agg);
+        assert_eq!(total.run_cnt, 4);
+        assert_eq!(total.tail_depth_max, 2);
+    }
+
+    #[test]
+    fn striped_counters_conserve_across_threads() {
+        let cell = RunStatsCell::new();
+        let press = Arc::new(MapPressure::default());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cell = cell.clone();
+            let press = press.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    cell.record_run(1, false);
+                    press.record_lookup();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cell.aggregate().run_cnt, 8000);
+        assert_eq!(cell.aggregate().run_time_ns, 8000);
+        assert_eq!(press.aggregate().lookups, 8000);
+    }
+
+    #[test]
+    fn zeroed_default_reads_zero() {
+        assert_eq!(RunStatsCell::new().aggregate(), RunStats::default());
+        assert_eq!(MapPressure::default().aggregate(), MapPressureStats::default());
+    }
+}

@@ -36,6 +36,18 @@ pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
         "stream structured latency events from a ringbuf profiler policy",
     ),
     (
+        "stats",
+        "[--json|--prom] [--ops N]",
+        "one-shot host introspection snapshot: per-program run stats, map pressure, reload \
+         journal (--json: machine-readable; --prom: Prometheus exposition)",
+    ),
+    (
+        "top",
+        "[--interval MS] [--ops N]",
+        "live-refreshing stats over the concurrent traffic engine (bounded run; final frame \
+         printed on exit)",
+    ),
+    (
         "bench",
         "[--out DIR] [--quick] [--compare DIR [--tolerance-pct N] [--bless]]",
         "run the paper-shaped measurement suite, write BENCH_<name>.json (--compare: exit \
@@ -82,6 +94,14 @@ pub fn env_jit_inline() -> Option<bool> {
 /// environment.
 pub fn env_rewrite() -> Option<bool> {
     env_toggle("NCCLBPF_REWRITE")
+}
+
+/// `NCCLBPF_STATS` (per-program run statistics, the `BPF_ENABLE_STATS`
+/// analog), parsed once here at the CLI edge and threaded into
+/// [`crate::bpf::LoadOptions`] — nothing under `bpf/` reads the
+/// environment.
+pub fn env_stats() -> Option<bool> {
+    env_toggle("NCCLBPF_STATS")
 }
 
 /// Usage text generated from [`SUBCOMMANDS`].

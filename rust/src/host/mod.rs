@@ -10,19 +10,25 @@ pub mod native;
 pub mod policydir;
 pub mod reload;
 pub mod ringbuf;
+pub mod snapshot;
 pub mod traffic;
 
 use crate::bpf::analysis;
 use crate::bpf::{
-    load, prog_array_update, LoadError, LoadOptions, LoadedProgram, Map, MapRegistry, Object,
-    PrintkSink, ProgType, VerifierStats,
+    load, prog_array_update, LoadError, LoadOptions, LoadStats, LoadedProgram, Map, MapRegistry,
+    Object, PrintkSink, ProgType, VerifierStats,
 };
 use crate::cc::net::NetHook;
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
 use ctx::{NetContext, PolicyContext, ProfilerContext};
 use reload::{ProgGuard, ReloadSlot};
+use snapshot::{
+    HookRow, HostSnapshot, InstallLedger, JournalEntry, MapRow, ProgramRow, RingStats, HOOKS,
+    JOURNAL_CAP,
+};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Report of one load/reload (§4: total reload is ms-scale; only the
@@ -36,6 +42,9 @@ pub struct LoadReport {
     pub prog_stats: Vec<(String, VerifierStats)>,
     /// total verification time across the object's programs
     pub verify_ns: u64,
+    /// total post-verification analysis time (cost gate + dead-code
+    /// rewrite) across the object's programs
+    pub analyze_ns: u64,
     /// total pre-decode + JIT time across the object's programs
     pub compile_ns: u64,
     /// per-slot CAS latencies
@@ -43,9 +52,11 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    /// Full reload cost: verify + compile + every swap.
+    /// Full reload cost: verify + analyze + compile + every swap —
+    /// the same decomposition the reload journal records, so
+    /// `BENCH_hotreload.json` and `ncclbpf stats` agree on "load".
     pub fn total_ns(&self) -> u64 {
-        self.verify_ns + self.compile_ns + self.swap_ns.iter().sum::<u64>()
+        self.verify_ns + self.analyze_ns + self.compile_ns + self.swap_ns.iter().sum::<u64>()
     }
 }
 
@@ -73,6 +84,12 @@ pub struct NcclBpfHost {
     pub net_events: AtomicU64,
     /// policies that wrote semantically invalid outputs (deferred)
     pub invalid_outputs: AtomicU64,
+    /// bounded install ledger: every program this host installed, with
+    /// a strong clone of its run-stat cell so counts survive retirement
+    ledger: Mutex<InstallLedger>,
+    /// bounded reload journal: the last [`JOURNAL_CAP`] hook swaps with
+    /// their verify/analyze/compile/swap timing
+    journal: Mutex<VecDeque<JournalEntry>>,
 }
 
 impl Default for NcclBpfHost {
@@ -95,6 +112,8 @@ impl NcclBpfHost {
             prof_events: AtomicU64::new(0),
             net_events: AtomicU64::new(0),
             invalid_outputs: AtomicU64::new(0),
+            ledger: Mutex::new(InstallLedger::default()),
+            journal: Mutex::new(VecDeque::new()),
         }
     }
 
@@ -163,13 +182,14 @@ impl NcclBpfHost {
         let mut report = LoadReport::default();
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
+            report.analyze_ns += p.stats.analyze_ns;
             report.compile_ns += p.stats.compile_ns;
             report.prog_stats.push((p.name.clone(), p.verifier_stats()));
         }
         for p in progs {
             let pt = p.prog_type;
             let name = p.name.clone();
-            let ns = self.slot(pt).swap(Arc::new(p));
+            let ns = self.install_program(Arc::new(p));
             report.swap_ns.push(ns);
             report.programs.push((name, pt));
         }
@@ -201,9 +221,31 @@ impl NcclBpfHost {
     }
 
     /// Install one already-loaded program into its hook slot; returns
-    /// the swap latency in ns.
+    /// the swap latency in ns. Every install lands in the ledger and
+    /// the reload journal ([`NcclBpfHost::snapshot`]).
     pub fn install_program(&self, prog: Arc<LoadedProgram>) -> u64 {
-        self.slot(prog.prog_type).swap(prog)
+        let pt = prog.prog_type;
+        let old = self.active_name(pt);
+        lock_plain(&self.ledger).record(&prog);
+        let new = prog.name.clone();
+        let LoadStats { verify_ns, analyze_ns, compile_ns } = prog.stats;
+        let ns = self.slot(pt).swap(prog);
+        let epoch = self.slot(pt).swaps.load(Ordering::Relaxed);
+        let mut j = lock_plain(&self.journal);
+        if j.len() >= JOURNAL_CAP {
+            j.pop_front();
+        }
+        j.push_back(JournalEntry {
+            epoch,
+            hook: pt,
+            old,
+            new,
+            verify_ns,
+            analyze_ns,
+            compile_ns,
+            swap_ns: ns,
+        });
+        ns
     }
 
     /// Replace one slot of the named prog array with `prog` — the
@@ -220,7 +262,11 @@ impl NcclBpfHost {
             .maps
             .by_name(map)
             .ok_or_else(|| format!("no map named '{}' in this host", map))?;
-        prog_array_update(&m, index, prog)
+        prog_array_update(&m, index, prog)?;
+        // chain links count as installs for the ledger (their run-stat
+        // cells stay attributed even after the slot is re-pointed)
+        lock_plain(&self.ledger).record(prog);
+        Ok(())
     }
 
     /// Assemble a composable policy chain from one object: every
@@ -250,6 +296,7 @@ impl NcclBpfHost {
         let mut report = LoadReport::default();
         for p in &progs {
             report.verify_ns += p.stats.verify_ns;
+            report.analyze_ns += p.stats.analyze_ns;
             report.compile_ns += p.stats.compile_ns;
             report.prog_stats.push((p.name.clone(), p.verifier_stats()));
         }
@@ -281,7 +328,9 @@ impl NcclBpfHost {
         self.slot(pt).get().map(|p| p.name.clone())
     }
 
-    /// (swap count, last swap latency ns) for a hook.
+    /// (swap count, last swap latency ns) for a hook. Prefer
+    /// [`NcclBpfHost::snapshot`], which folds this into [`HookRow`]
+    /// alongside the rest of the host's introspection surface.
     pub fn swap_stats(&self, pt: ProgType) -> (u64, u64) {
         let s = self.slot(pt);
         (s.swaps.load(Ordering::Relaxed), s.last_swap_ns.load(Ordering::Relaxed))
@@ -433,10 +482,99 @@ impl NcclBpfHost {
     }
 
     /// Retired-but-unreclaimed program versions across all hook slots
-    /// (observability for the reload-leak regression test).
+    /// (observability for the reload-leak regression test). Prefer
+    /// [`NcclBpfHost::snapshot`], which carries the same counts per
+    /// [`HookRow`].
     pub fn retired_counts(&self) -> (usize, usize, usize) {
         (self.tuner.retired_count(), self.profiler.retired_count(), self.net.retired_count())
     }
+
+    /// Whether programs this host installs record per-program run
+    /// stats ([`LoadOptions::stats`] / `NCCLBPF_STATS`).
+    pub fn stats_enabled(&self) -> bool {
+        self.load_opts.stats.unwrap_or(false)
+    }
+
+    /// One host-wide introspection snapshot: installed programs (with
+    /// run stats), per-map pressure, hook-slot lifecycle, the recent
+    /// reload journal, and the host event counters — the shape behind
+    /// `ncclbpf stats` / `ncclbpf top`. Counters are relaxed-read, so
+    /// the snapshot is monotone per counter, not an atomic cut.
+    pub fn snapshot(&self) -> HostSnapshot {
+        let ledger = lock_plain(&self.ledger);
+        let programs: Vec<ProgramRow> = ledger
+            .entries
+            .iter()
+            .map(|e| ProgramRow {
+                name: e.name.clone(),
+                prog_type: e.prog_type,
+                insns: e.insns,
+                max_cost: e.max_cost,
+                jitted: e.jitted,
+                live: e.prog.upgrade().is_some(),
+                inline_stats: e.inline_stats,
+                run: e.cell.as_ref().map(|c| c.aggregate()).unwrap_or_default(),
+            })
+            .collect();
+        let hooks = HOOKS
+            .iter()
+            .map(|&pt| {
+                let (swaps, last_swap_ns) = self.swap_stats(pt);
+                let i = snapshot::hook_idx(pt);
+                HookRow {
+                    hook: pt,
+                    active: self.active_name(pt),
+                    swaps,
+                    last_swap_ns,
+                    retired: self.slot(pt).retired_count(),
+                    compacted_installs: ledger.retired_installs[i],
+                    compacted_run: ledger.retired_run[i],
+                    total_run: ledger.hook_run_stats(pt),
+                }
+            })
+            .collect();
+        drop(ledger);
+        let mut maps: Vec<MapRow> = self
+            .maps
+            .names()
+            .into_iter()
+            .filter_map(|name| self.maps.by_name(&name))
+            .map(|m| MapRow {
+                name: m.def.name.clone(),
+                kind: m.def.kind,
+                id: m.id,
+                entries: m.len(),
+                max_entries: m.def.max_entries,
+                pressure: m.pressure_stats(),
+                ring: (m.def.kind == crate::bpf::MapKind::RingBuf).then(|| RingStats {
+                    emitted: m.ringbuf_emitted(),
+                    drained: m.ringbuf_drained(),
+                    dropped: m.ringbuf_dropped(),
+                    discarded: m.ringbuf_discarded(),
+                    hiwater_bytes: m.ringbuf_hiwater(),
+                }),
+            })
+            .collect();
+        maps.sort_by_key(|m| m.id);
+        let journal = lock_plain(&self.journal).iter().cloned().collect();
+        HostSnapshot {
+            programs,
+            maps,
+            hooks,
+            journal,
+            decisions: self.decisions.load(Ordering::Relaxed),
+            prof_events: self.prof_events.load(Ordering::Relaxed),
+            net_events: self.net_events.load(Ordering::Relaxed),
+            invalid_outputs: self.invalid_outputs.load(Ordering::Relaxed),
+            stats_enabled: self.stats_enabled(),
+        }
+    }
+}
+
+/// Poison-recovering lock (same policy as `host::reload`: a panicking
+/// holder must not wedge the host's observability surface).
+fn lock_plain<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Default per-hook worst-case cost budgets, in `analysis` cost units
@@ -954,6 +1092,71 @@ prog tuner t_large
         assert_eq!(on.wired_taken, 1);
         assert_eq!(on.removed_insns, 1);
         assert!(run(Some(false)).is_none(), "rewriting off: program as authored");
+    }
+
+    /// Tentpole: one snapshot covers programs (with run stats), maps
+    /// (with pressure), hook lifecycle, and the reload journal — and
+    /// run counts survive a hot reload (conservation).
+    #[test]
+    fn snapshot_covers_programs_maps_hooks_and_journal() {
+        let mut host = NcclBpfHost::new();
+        host.set_load_options(LoadOptions::new().stats(Some(true)));
+        assert!(host.stats_enabled());
+        host.install_asm(RECORD_LATENCY_ASM).unwrap();
+        host.install_asm(ADAPTIVE_TUNER_ASM).unwrap();
+        let mut cost = CostTable::all_sentinel();
+        let mut ch = 0;
+        for _ in 0..5 {
+            host.tuner_decide(&args(1024), &mut cost, &mut ch);
+        }
+        // hot-reload the tuner, then keep deciding on the new program
+        host.install_asm(SIZE_AWARE_ASM).unwrap();
+        for _ in 0..3 {
+            host.tuner_decide(&args(1024), &mut cost, &mut ch);
+        }
+        let snap = host.snapshot();
+        assert!(snap.stats_enabled);
+        assert_eq!(snap.decisions, 8);
+        // conservation across the reload: retired adaptive's 5 runs +
+        // live size_aware's 3 still sum to the decision count
+        assert_eq!(snap.hook_run_cnt(ProgType::Tuner), 8);
+        assert_eq!(snap.hook_run_cnt(ProgType::Profiler), 0);
+        // every install is a program row; the tuner hook saw 2 swaps
+        let names: Vec<&str> = snap.programs.iter().map(|p| p.name.as_str()).collect();
+        for expect in ["record_latency", "adaptive", "size_aware"] {
+            assert!(names.contains(&expect), "missing program row {expect}: {names:?}");
+        }
+        let th = snap.hook(ProgType::Tuner);
+        assert_eq!(th.swaps, 2);
+        assert_eq!(th.active.as_deref(), Some("size_aware"));
+        // the shared map shows pressure from both hooks' operations
+        let lm = snap.maps.iter().find(|m| m.name == "latency_map").unwrap();
+        assert!(lm.pressure.lookups > 0, "{:?}", lm.pressure);
+        assert!(lm.ring.is_none());
+        // journal: oldest-first, epochs monotone per hook, phases timed
+        assert_eq!(snap.journal.len(), 3);
+        assert_eq!(snap.journal[2].new, "size_aware");
+        assert_eq!(snap.journal[2].old.as_deref(), Some("adaptive"));
+        assert!(snap.journal[2].verify_ns > 0);
+        assert!(snap.journal[2].total_ns() >= snap.journal[2].verify_ns);
+    }
+
+    /// Satellite 6: `LoadReport::total_ns` includes the analyze phase,
+    /// matching the journal's decomposition.
+    #[test]
+    fn load_report_total_includes_analyze_phase() {
+        let host = NcclBpfHost::new();
+        let rep = host.install_asm(SIZE_AWARE_ASM).unwrap();
+        assert_eq!(
+            rep.total_ns(),
+            rep.verify_ns + rep.analyze_ns + rep.compile_ns + rep.swap_ns.iter().sum::<u64>()
+        );
+        let j = host.snapshot().journal;
+        assert_eq!(j.len(), 1);
+        assert_eq!(
+            j[0].total_ns(),
+            j[0].verify_ns + j[0].analyze_ns + j[0].compile_ns + j[0].swap_ns
+        );
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Host-wide introspection: one consistent-enough snapshot of every
+//! installed program, shared map, hook slot, and recent reload — the
+//! shape behind `ncclbpf stats` / `ncclbpf top` (DESIGN.md §13).
+//!
+//! Two host-side records feed the snapshot:
+//!
+//! - the **install ledger**: one entry per program the host ever
+//!   installed (hook slots and prog-array chain links alike), holding
+//!   a `Weak` handle to the program plus a strong clone of its
+//!   [`RunStatsCell`] — so run counts survive hot-reload retirement
+//!   and conservation invariants (`sum(run_cnt) == decisions`) hold
+//!   across reload storms. The ledger is bounded: past
+//!   [`LEDGER_CAP`] entries, dead programs are folded into one
+//!   per-hook [`RunStats`] aggregate.
+//! - the **reload journal**: a bounded ring of the last
+//!   [`JOURNAL_CAP`] hook-slot swaps with their full load-phase
+//!   timing (verify → analyze → compile → swap), the `bpftool prog
+//!   list`-meets-audit-log surface.
+//!
+//! Consistency: counters are relaxed atomics read without a global
+//! pause, so a snapshot is monotone per counter but not an atomic cut
+//! across counters — the same contract as [`RunStatsCell::aggregate`].
+
+use crate::bpf::stats::{MapPressureStats, RunStats, RunStatsCell};
+use crate::bpf::{JitInlineStats, LoadedProgram, MapKind, ProgType};
+use std::sync::{Arc, Weak};
+
+/// Ledger bound: past this many entries, dead programs are compacted
+/// into the per-hook retired aggregate.
+pub const LEDGER_CAP: usize = 256;
+
+/// Journal bound: swaps beyond this evict the oldest entry.
+pub const JOURNAL_CAP: usize = 64;
+
+/// Dense index for per-hook arrays (`[T; 3]` keyed by [`ProgType`]).
+pub(crate) fn hook_idx(pt: ProgType) -> usize {
+    match pt {
+        ProgType::Tuner => 0,
+        ProgType::Profiler => 1,
+        ProgType::Net => 2,
+    }
+}
+
+/// The three hook types in `hook_idx` order.
+pub(crate) const HOOKS: [ProgType; 3] = [ProgType::Tuner, ProgType::Profiler, ProgType::Net];
+
+/// One install the host performed (hook slot or chain link).
+pub(crate) struct LedgerEntry {
+    pub(crate) name: String,
+    pub(crate) prog_type: ProgType,
+    pub(crate) insns: usize,
+    pub(crate) max_cost: u64,
+    pub(crate) jitted: bool,
+    pub(crate) inline_stats: Option<JitInlineStats>,
+    /// strong clone of the program's run-stat cell: counts outlive the
+    /// program across hot-reload retirement
+    pub(crate) cell: Option<Arc<RunStatsCell>>,
+    /// liveness probe — `upgrade()` fails once every hook slot,
+    /// prog-array slot, and in-flight execution has dropped it
+    pub(crate) prog: Weak<LoadedProgram>,
+}
+
+/// The bounded install ledger plus the per-hook compaction aggregates.
+#[derive(Default)]
+pub(crate) struct InstallLedger {
+    pub(crate) entries: Vec<LedgerEntry>,
+    /// run stats folded out of compacted (dead) entries, per hook
+    pub(crate) retired_run: [RunStats; 3],
+    /// how many installs were compacted away, per hook
+    pub(crate) retired_installs: [u64; 3],
+}
+
+impl InstallLedger {
+    /// Append one install, refusing duplicates of a still-tracked
+    /// program (re-installing the same `Arc` must not double-count its
+    /// shared stat cell) and compacting dead entries past the cap.
+    pub(crate) fn record(&mut self, prog: &Arc<LoadedProgram>) {
+        if self.entries.iter().any(|e| std::ptr::eq(e.prog.as_ptr(), Arc::as_ptr(prog))) {
+            return;
+        }
+        self.entries.push(LedgerEntry {
+            name: prog.name.clone(),
+            prog_type: prog.prog_type,
+            insns: prog.op_count(),
+            max_cost: prog.info.max_cost,
+            jitted: prog.is_jitted(),
+            inline_stats: prog.jit_inline_stats(),
+            cell: prog.stats_cell(),
+            prog: Arc::downgrade(prog),
+        });
+        if self.entries.len() > LEDGER_CAP {
+            self.compact();
+        }
+    }
+
+    /// Fold every dead entry into the per-hook retired aggregate.
+    pub(crate) fn compact(&mut self) {
+        let (retired_run, retired_installs) = (&mut self.retired_run, &mut self.retired_installs);
+        self.entries.retain(|e| {
+            if e.prog.upgrade().is_some() {
+                return true;
+            }
+            let i = hook_idx(e.prog_type);
+            if let Some(cell) = &e.cell {
+                retired_run[i].absorb(&cell.aggregate());
+            }
+            retired_installs[i] += 1;
+            false
+        });
+    }
+
+    /// Total run stats attributed to hook `pt`: live + dead tracked
+    /// entries plus the compacted aggregate — the left-hand side of
+    /// the conservation invariant.
+    pub(crate) fn hook_run_stats(&self, pt: ProgType) -> RunStats {
+        let mut total = self.retired_run[hook_idx(pt)];
+        for e in self.entries.iter().filter(|e| e.prog_type == pt) {
+            if let Some(cell) = &e.cell {
+                total.absorb(&cell.aggregate());
+            }
+        }
+        total
+    }
+}
+
+/// One row of [`HostSnapshot::programs`]: a program the host installed,
+/// its load-time facts, and its run stats so far.
+#[derive(Clone, Debug)]
+pub struct ProgramRow {
+    /// program name from the object
+    pub name: String,
+    /// hook type it was verified for
+    pub prog_type: ProgType,
+    /// pre-decoded instruction count
+    pub insns: usize,
+    /// certified worst-case cost (the admission-gate input)
+    pub max_cost: u64,
+    /// whether [`LoadedProgram::run`] dispatches to native code
+    pub jitted: bool,
+    /// still reachable from a hook slot / prog array / in-flight run
+    pub live: bool,
+    /// per-site JIT codegen decisions (`None` when interpreted)
+    pub inline_stats: Option<JitInlineStats>,
+    /// aggregated run stats (all-zero when stats were off at load)
+    pub run: RunStats,
+}
+
+/// Ring-buffer counters for one ringbuf map (conservation:
+/// `emitted == drained + discarded + still-unconsumed`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RingStats {
+    /// successfully reserved records
+    pub emitted: u64,
+    /// records delivered to drain callbacks
+    pub drained: u64,
+    /// failed reservations (ring full / bad size)
+    pub dropped: u64,
+    /// producer-discarded records skipped by the consumer
+    pub discarded: u64,
+    /// deepest unconsumed backlog in bytes ever observed
+    pub hiwater_bytes: u64,
+}
+
+/// One row of [`HostSnapshot::maps`]: a shared map and its pressure.
+#[derive(Clone, Debug)]
+pub struct MapRow {
+    /// declared map name
+    pub name: String,
+    /// map kind
+    pub kind: MapKind,
+    /// registry-assigned live id
+    pub id: u32,
+    /// live entries ([`crate::bpf::Map::len`] semantics per kind)
+    pub entries: usize,
+    /// declared capacity
+    pub max_entries: u32,
+    /// operation counters (always on)
+    pub pressure: MapPressureStats,
+    /// ringbuf counters (`None` for non-ringbuf maps)
+    pub ring: Option<RingStats>,
+}
+
+/// One row of [`HostSnapshot::hooks`]: a hook slot's lifecycle state.
+#[derive(Clone, Debug)]
+pub struct HookRow {
+    /// which hook
+    pub hook: ProgType,
+    /// name of the currently installed policy, if any
+    pub active: Option<String>,
+    /// total hook-slot swaps
+    pub swaps: u64,
+    /// latency of the most recent swap (ns)
+    pub last_swap_ns: u64,
+    /// retired-but-unreclaimed program versions in the slot
+    pub retired: usize,
+    /// installs compacted out of the ledger
+    pub compacted_installs: u64,
+    /// run stats folded out of compacted installs
+    pub compacted_run: RunStats,
+    /// total run stats attributed to this hook (live + retired) — the
+    /// conservation-invariant sum
+    pub total_run: RunStats,
+}
+
+/// One reload-journal entry: a hook-slot swap with its full load-phase
+/// timing decomposition.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    /// swap epoch (the hook's swap counter after this swap)
+    pub epoch: u64,
+    /// which hook swapped
+    pub hook: ProgType,
+    /// previously active policy (`None` for the first install)
+    pub old: Option<String>,
+    /// newly installed policy
+    pub new: String,
+    /// verifier time for the new program (ns)
+    pub verify_ns: u64,
+    /// post-verification analysis time (cost gate + rewrite, ns)
+    pub analyze_ns: u64,
+    /// pre-decode + JIT time (ns)
+    pub compile_ns: u64,
+    /// pointer-swap CAS latency (ns)
+    pub swap_ns: u64,
+}
+
+impl JournalEntry {
+    /// Full reload cost of this swap: verify + analyze + compile +
+    /// swap — the same decomposition as
+    /// [`crate::host::LoadReport::total_ns`].
+    pub fn total_ns(&self) -> u64 {
+        self.verify_ns + self.analyze_ns + self.compile_ns + self.swap_ns
+    }
+}
+
+/// Everything `ncclbpf stats` / `top` shows: the host's installed
+/// programs, shared maps, hook slots, recent reloads, and event
+/// counters, in one value.
+#[derive(Clone, Debug)]
+pub struct HostSnapshot {
+    /// every install still tracked by the ledger (live and retired)
+    pub programs: Vec<ProgramRow>,
+    /// every map in the host's registry, sorted by id
+    pub maps: Vec<MapRow>,
+    /// the three hook slots in tuner/profiler/net order
+    pub hooks: Vec<HookRow>,
+    /// the most recent hook-slot swaps, oldest first
+    pub journal: Vec<JournalEntry>,
+    /// tuner decisions executed
+    pub decisions: u64,
+    /// profiler events executed
+    pub prof_events: u64,
+    /// net hook invocations
+    pub net_events: u64,
+    /// policies that wrote semantically invalid outputs
+    pub invalid_outputs: u64,
+    /// whether per-program run stats were enabled on this host's
+    /// load options when the snapshot was taken
+    pub stats_enabled: bool,
+}
+
+impl HostSnapshot {
+    /// The hook row for `pt` (the snapshot always carries all three).
+    pub fn hook(&self, pt: ProgType) -> &HookRow {
+        &self.hooks[hook_idx(pt)]
+    }
+
+    /// Sum of `run_cnt` attributed to hook `pt` across live, retired,
+    /// and compacted programs — compare against the host's decision
+    /// counter for the conservation invariant.
+    pub fn hook_run_cnt(&self, pt: ProgType) -> u64 {
+        self.hook(pt).total_run.run_cnt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bpf::{CtxLayouts, LoadOptions, MapRegistry};
+
+    fn tuner(reg: &MapRegistry, name: &str) -> Arc<LoadedProgram> {
+        let src = format!("prog tuner {}\n  mov64 r0, 0\n  exit\n", name);
+        let obj = crate::bpf::asm::assemble(&src).unwrap();
+        let layouts = CtxLayouts::default();
+        let opts = LoadOptions::new().stats(Some(true));
+        Arc::new(crate::bpf::load(&obj, reg, &layouts, &opts).unwrap().programs.remove(0))
+    }
+
+    #[test]
+    fn ledger_compaction_preserves_run_counts() {
+        let reg = MapRegistry::new();
+        let mut ledger = InstallLedger::default();
+        let mut expect = 0u64;
+        for i in 0..(LEDGER_CAP + 10) {
+            let p = tuner(&reg, &format!("p{}", i));
+            p.run(std::ptr::null_mut());
+            expect += 1;
+            ledger.record(&p);
+            // p drops here: the entry's Weak dies, the cell survives
+        }
+        assert!(ledger.entries.len() <= LEDGER_CAP, "compaction bounds the ledger");
+        assert_eq!(ledger.hook_run_stats(ProgType::Tuner).run_cnt, expect);
+        assert_eq!(ledger.hook_run_stats(ProgType::Profiler).run_cnt, 0);
+        assert!(ledger.retired_installs[hook_idx(ProgType::Tuner)] > 0);
+    }
+
+    #[test]
+    fn ledger_refuses_duplicate_installs() {
+        let reg = MapRegistry::new();
+        let mut ledger = InstallLedger::default();
+        let p = tuner(&reg, "p");
+        ledger.record(&p);
+        ledger.record(&p);
+        assert_eq!(ledger.entries.len(), 1, "same Arc must not double-count");
+        p.run(std::ptr::null_mut());
+        assert_eq!(ledger.hook_run_stats(ProgType::Tuner).run_cnt, 1);
+    }
+}

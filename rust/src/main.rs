@@ -5,13 +5,14 @@
 //! its implementation, and a test asserts the two never drift apart.
 
 use ncclbpf::bpf::{
-    analysis, BranchFate, LiveSet, LoadOptions, MapRegistry, ProgType, ProgramAnalysis,
+    analysis, BranchFate, LiveSet, LoadOptions, MapRegistry, ProgType, ProgramAnalysis, RunStats,
     VerifierConfig,
 };
 use ncclbpf::cc::{Algo, CollConfig, CollType, Communicator, DataMode, Proto, Topology};
 use ncclbpf::cli::{self, Args};
 use ncclbpf::host::policydir;
 use ncclbpf::host::ringbuf::RingConsumer;
+use ncclbpf::host::snapshot::HostSnapshot;
 use ncclbpf::host::{default_cost_budget, BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
 use ncclbpf::runtime::{default_artifacts_dir, Runtime};
 use ncclbpf::train::{DdpTrainer, TrainConfig};
@@ -34,6 +35,8 @@ fn handler(name: &str) -> Option<fn(&Args) -> i32> {
         "hotreload" => cmd_hotreload,
         "traffic" => cmd_traffic,
         "trace" => cmd_trace,
+        "stats" => cmd_stats,
+        "top" => cmd_top,
         "bench" => cmd_bench,
         "docs" => cmd_docs,
         _ => return None,
@@ -60,15 +63,32 @@ fn main() {
 
 /// A host configured from the environment overrides parsed here at
 /// the CLI edge (`NCCLBPF_VERIFIER_PRUNE`, `NCCLBPF_JIT_INLINE`,
-/// `NCCLBPF_REWRITE`) — the only place they are read; `bpf/` sees
-/// plain [`LoadOptions`].
+/// `NCCLBPF_REWRITE`, `NCCLBPF_STATS`) — the only place they are read;
+/// `bpf/` sees plain [`LoadOptions`].
 fn env_host() -> NcclBpfHost {
     let mut host = NcclBpfHost::new();
     host.set_load_options(
         LoadOptions::new()
             .prune(cli::env_verifier_prune())
             .inline(cli::env_jit_inline())
-            .rewrite(cli::env_rewrite()),
+            .rewrite(cli::env_rewrite())
+            .stats(cli::env_stats()),
+    );
+    host
+}
+
+/// Same as [`env_host`] but with per-program run stats defaulting ON —
+/// the `stats`/`top` surfaces exist to show them. `NCCLBPF_STATS=0`
+/// still disables (so the overhead of the surface itself can be
+/// inspected).
+fn stats_host() -> NcclBpfHost {
+    let mut host = NcclBpfHost::new();
+    host.set_load_options(
+        LoadOptions::new()
+            .prune(cli::env_verifier_prune())
+            .inline(cli::env_jit_inline())
+            .rewrite(cli::env_rewrite())
+            .stats(cli::env_stats().or(Some(true))),
     );
     host
 }
@@ -777,12 +797,34 @@ fn cmd_trace(args: &Args) -> i32 {
                 );
                 return 1;
             }
+            // the host snapshot's ring accounting must agree with the
+            // consumer-side view; producer-side emits (successful
+            // reserves) exclude dropped reservations, which never
+            // entered the ring
+            let snap = host.snapshot();
+            let ring = snap
+                .maps
+                .iter()
+                .find(|m| m.name == "events")
+                .and_then(|m| m.ring)
+                .expect("events is a ringbuf");
+            if ring.emitted != consumer.drained + consumer.discarded() {
+                eprintln!(
+                    "TRACE INVARIANT VIOLATION: snapshot emitted {} != drained {} + discarded {}",
+                    ring.emitted,
+                    consumer.drained,
+                    consumer.discarded()
+                );
+                return 1;
+            }
             if !json {
                 println!(
-                    "trace done: {} events emitted, {} drained, {} dropped (conserved)",
+                    "trace done: {} events emitted, {} drained, {} dropped (conserved; \
+                     ring hiwater {} bytes)",
                     emitted,
                     consumer.drained,
-                    consumer.dropped()
+                    consumer.dropped(),
+                    ring.hiwater_bytes
                 );
             }
             return 0;
@@ -839,13 +881,377 @@ fn cmd_hotreload(_args: &Args) -> i32 {
     println!("installed static_ring: total {} us", r1.total_ns() / 1000);
     let r2 = host.install_object(&b).unwrap();
     println!(
-        "hot-reloaded to nvlink_ring_mid_v2: verify+compile {} us, swap {} ns",
-        (r2.verify_ns + r2.compile_ns) / 1000,
+        "hot-reloaded to nvlink_ring_mid_v2: verify+analyze+compile {} us, swap {} ns",
+        (r2.verify_ns + r2.analyze_ns + r2.compile_ns) / 1000,
         r2.swap_ns[0]
     );
-    let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
-    println!("swaps={} last_swap={} ns", swaps, last_ns);
+    let snap = host.snapshot();
+    let hook = snap.hook(ProgType::Tuner);
+    println!("swaps={} last_swap={} ns", hook.swaps, hook.last_swap_ns);
+    for j in &snap.journal {
+        println!(
+            "journal[{}] {:?}: {} -> {} (verify {} + analyze {} + compile {} + swap {} ns)",
+            j.epoch,
+            j.hook,
+            j.old.as_deref().unwrap_or("-"),
+            j.new,
+            j.verify_ns,
+            j.analyze_ns,
+            j.compile_ns,
+            j.swap_ns
+        );
+    }
     0
+}
+
+/// `ncclbpf stats`: build a self-contained host with per-program run
+/// stats on, install a representative policy set (ringbuf profiler +
+/// tuner, with one mid-workload hot-reload so the journal and the
+/// retired-attribution path are both populated), drive a bounded
+/// workload, and print one [`HostSnapshot`] — the `bpftool prog list`
+/// analog. `--json` emits the machine-readable snapshot; `--prom`
+/// publishes it into the global metrics registry and prints the
+/// Prometheus exposition.
+fn cmd_stats(args: &Args) -> i32 {
+    let ops = args.flag_usize("ops", 100).max(2);
+    let host = Arc::new(stats_host());
+    host.install_object(&policydir::build_named("latency_events").expect("latency_events"))
+        .expect("latency_events must verify");
+    host.install_object(&policydir::build_named("adaptive_channels").expect("adaptive_channels"))
+        .expect("adaptive_channels must verify");
+    drive_sample_traffic(&host, ops / 2);
+    // hot-reload mid-workload: the snapshot keeps the retired tuner's
+    // run counts and the journal records the swap timing
+    host.install_object(&policydir::build_named("size_aware").expect("size_aware"))
+        .expect("size_aware must verify");
+    drive_sample_traffic(&host, ops - ops / 2);
+    let snap = host.snapshot();
+    if args.flag_bool("prom") {
+        publish_snapshot(&snap, ncclbpf::metrics::global());
+        print!("{}", ncclbpf::metrics::global().render());
+    } else if args.flag_bool("json") {
+        println!("{}", snapshot_json(&snap));
+    } else {
+        print!("{}", render_snapshot(&snap));
+    }
+    0
+}
+
+/// `ncclbpf top`: run the concurrent traffic engine (reload storm
+/// included) against a stats-on host in the background and repaint the
+/// live [`HostSnapshot`] every `--interval` ms until the bounded run
+/// completes. The final frame and the traffic summary are printed
+/// without a screen clear so they survive in scrollback.
+fn cmd_top(args: &Args) -> i32 {
+    let interval = args.flag_usize("interval", 500).max(50) as u64;
+    let opts = ncclbpf::host::traffic::TrafficOpts {
+        comms: args.flag_usize("comms", 4),
+        threads: args.flag_usize("threads", 4),
+        ops_per_comm: args.flag_usize("ops", 20_000),
+        reload_every_ms: args.flag("reload-every").and_then(|v| v.parse().ok()).or(Some(200)),
+        seed: ncclbpf::host::traffic::TrafficOpts::default().seed,
+        ranks: args.flag_usize("ranks", 4),
+    };
+    let host = Arc::new(stats_host());
+    ncclbpf::host::traffic::install_traffic_policies(&host)
+        .expect("traffic policies must verify");
+    let h = host.clone();
+    let worker = std::thread::spawn(move || ncclbpf::host::traffic::run_traffic_on(h, &opts));
+    while !worker.is_finished() {
+        std::thread::sleep(std::time::Duration::from_millis(interval));
+        print!("\x1b[2J\x1b[H{}", render_snapshot(&host.snapshot()));
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+    }
+    let rep = worker.join().expect("traffic worker panicked");
+    print!("{}", render_snapshot(&host.snapshot()));
+    println!(
+        "traffic: {} ops, {} decisions, {} reloads, decision p50 {:.0} ns, p99 {:.0} ns",
+        rep.total_ops, rep.total_decisions, rep.reloads, rep.p50_decision_ns, rep.p99_decision_ns
+    );
+    if rep.violations.is_empty() {
+        0
+    } else {
+        for v in &rep.violations {
+            eprintln!("INVARIANT VIOLATION: {}", v);
+        }
+        1
+    }
+}
+
+/// Drive a bounded mixed-collective workload against `host` so its
+/// stats surfaces have something to show, then drain the event ring
+/// (leaving the snapshot's ring accounting fully consumed).
+fn drive_sample_traffic(host: &Arc<NcclBpfHost>, ops: usize) {
+    let ranks = 4;
+    let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
+    comm.reseed(0x57a7 ^ ops as u64);
+    comm.data_mode = DataMode::Sampled(4 << 10);
+    comm.prewarm_all();
+    comm.set_tuner(Some(Arc::new(BpfTunerPlugin(host.clone()))));
+    comm.set_profiler(Some(Arc::new(BpfProfilerPlugin(host.clone()))));
+    let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|r| vec![r as f32 + 1.0; 1 << 10]).collect();
+    let mut rng = ncclbpf::util::Rng::new(0x57a7);
+    for _ in 0..ops {
+        let coll = match rng.below(3) {
+            0 => CollType::AllReduce,
+            1 => CollType::AllGather,
+            _ => CollType::ReduceScatter,
+        };
+        let logical = (4usize << 10) << rng.below(11);
+        comm.run(coll, &mut bufs, logical);
+    }
+    if let Some(m) = host.map("events") {
+        m.ringbuf_drain(&mut |_| {});
+    }
+}
+
+/// Human-readable snapshot tables (the default `stats`/`top` output).
+fn render_snapshot(s: &HostSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "host: decisions={} prof_events={} net_events={} invalid_outputs={} stats={}\n",
+        s.decisions,
+        s.prof_events,
+        s.net_events,
+        s.invalid_outputs,
+        if s.stats_enabled { "on" } else { "off" }
+    ));
+    out.push_str("\nprograms:\n");
+    out.push_str(&format!(
+        "  {:<20} {:<9} {:>5} {:>8} {:>4} {:>4} {:>10} {:>9} {:>6} {:>5}\n",
+        "name", "hook", "insns", "max_cost", "jit", "live", "run_cnt", "avg_ns", "errors", "tail"
+    ));
+    for p in &s.programs {
+        let hook = format!("{:?}", p.prog_type);
+        out.push_str(&format!(
+            "  {:<20} {:<9} {:>5} {:>8} {:>4} {:>4} {:>10} {:>9} {:>6} {:>5}\n",
+            p.name,
+            hook,
+            p.insns,
+            p.max_cost,
+            if p.jitted { "yes" } else { "no" },
+            if p.live { "yes" } else { "no" },
+            p.run.run_cnt,
+            p.run.avg_run_ns(),
+            p.run.error_cnt,
+            p.run.tail_calls
+        ));
+    }
+    out.push_str("\nmaps:\n");
+    out.push_str(&format!(
+        "  {:<16} {:<8} {:>3} {:>9} {:>9} {:>9} {:>9} {:>22}\n",
+        "name", "kind", "id", "entries", "lookups", "updates", "deletes", "ring(emit/drain/drop)"
+    ));
+    for m in &s.maps {
+        let ring = match &m.ring {
+            Some(r) => format!("{}/{}/{}", r.emitted, r.drained, r.dropped),
+            None => "-".to_string(),
+        };
+        let kind = format!("{:?}", m.kind);
+        let fill = format!("{}/{}", m.entries, m.max_entries);
+        out.push_str(&format!(
+            "  {:<16} {:<8} {:>3} {:>9} {:>9} {:>9} {:>9} {:>22}\n",
+            m.name,
+            kind,
+            m.id,
+            fill,
+            m.pressure.lookups,
+            m.pressure.updates,
+            m.pressure.deletes,
+            ring
+        ));
+    }
+    out.push_str("\nhooks:\n");
+    for h in &s.hooks {
+        let hook = format!("{:?}", h.hook);
+        let last = format!("{}ns", h.last_swap_ns);
+        out.push_str(&format!(
+            "  {:<9} active={:<18} swaps={:<4} last_swap={:<8} retired={} run_cnt={}\n",
+            hook,
+            h.active.as_deref().unwrap_or("-"),
+            h.swaps,
+            last,
+            h.retired,
+            h.total_run.run_cnt
+        ));
+    }
+    if !s.journal.is_empty() {
+        out.push_str("\nreload journal (oldest first):\n");
+        for j in &s.journal {
+            out.push_str(&format!(
+                "  [{}] {:?}: {} -> {} ({} us: verify {} + analyze {} + compile {} + swap {} ns)\n",
+                j.epoch,
+                j.hook,
+                j.old.as_deref().unwrap_or("-"),
+                j.new,
+                j.total_ns() / 1000,
+                j.verify_ns,
+                j.analyze_ns,
+                j.compile_ns,
+                j.swap_ns
+            ));
+        }
+    }
+    out
+}
+
+/// Machine-readable snapshot, hand-rolled JSON like the bench reports.
+fn snapshot_json(s: &HostSnapshot) -> String {
+    let join = |v: Vec<String>| v.join(",");
+    let run_json = |r: &RunStats| {
+        format!(
+            "{{\"run_cnt\":{},\"run_time_ns\":{},\"error_cnt\":{},\"tail_calls\":{},\
+             \"tail_depth_max\":{},\"jit_runs\":{},\"interp_runs\":{}}}",
+            r.run_cnt,
+            r.run_time_ns,
+            r.error_cnt,
+            r.tail_calls,
+            r.tail_depth_max,
+            r.jit_runs,
+            r.interp_runs
+        )
+    };
+    let opt_str = |o: &Option<String>| match o {
+        Some(n) => format!("\"{}\"", n),
+        None => "null".to_string(),
+    };
+    let progs = join(
+        s.programs
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"name\":\"{}\",\"hook\":\"{:?}\",\"insns\":{},\"max_cost\":{},\
+                     \"jitted\":{},\"live\":{},\"run\":{}}}",
+                    p.name, p.prog_type, p.insns, p.max_cost, p.jitted, p.live, run_json(&p.run)
+                )
+            })
+            .collect(),
+    );
+    let maps = join(
+        s.maps
+            .iter()
+            .map(|m| {
+                let ring = match &m.ring {
+                    Some(r) => format!(
+                        "{{\"emitted\":{},\"drained\":{},\"dropped\":{},\"discarded\":{},\
+                         \"hiwater_bytes\":{}}}",
+                        r.emitted, r.drained, r.dropped, r.discarded, r.hiwater_bytes
+                    ),
+                    None => "null".to_string(),
+                };
+                format!(
+                    "{{\"name\":\"{}\",\"kind\":\"{:?}\",\"id\":{},\"entries\":{},\
+                     \"max_entries\":{},\"lookups\":{},\"updates\":{},\"deletes\":{},\
+                     \"tombstones\":{},\"ring\":{}}}",
+                    m.name,
+                    m.kind,
+                    m.id,
+                    m.entries,
+                    m.max_entries,
+                    m.pressure.lookups,
+                    m.pressure.updates,
+                    m.pressure.deletes,
+                    m.pressure.tombstones,
+                    ring
+                )
+            })
+            .collect(),
+    );
+    let hooks = join(
+        s.hooks
+            .iter()
+            .map(|h| {
+                format!(
+                    "{{\"hook\":\"{:?}\",\"active\":{},\"swaps\":{},\"last_swap_ns\":{},\
+                     \"retired\":{},\"compacted_installs\":{},\"total_run\":{}}}",
+                    h.hook,
+                    opt_str(&h.active),
+                    h.swaps,
+                    h.last_swap_ns,
+                    h.retired,
+                    h.compacted_installs,
+                    run_json(&h.total_run)
+                )
+            })
+            .collect(),
+    );
+    let journal = join(
+        s.journal
+            .iter()
+            .map(|j| {
+                format!(
+                    "{{\"epoch\":{},\"hook\":\"{:?}\",\"old\":{},\"new\":\"{}\",\
+                     \"verify_ns\":{},\"analyze_ns\":{},\"compile_ns\":{},\"swap_ns\":{},\
+                     \"total_ns\":{}}}",
+                    j.epoch,
+                    j.hook,
+                    opt_str(&j.old),
+                    j.new,
+                    j.verify_ns,
+                    j.analyze_ns,
+                    j.compile_ns,
+                    j.swap_ns,
+                    j.total_ns()
+                )
+            })
+            .collect(),
+    );
+    format!(
+        "{{\"stats_enabled\":{},\"decisions\":{},\"prof_events\":{},\"net_events\":{},\
+         \"invalid_outputs\":{},\"programs\":[{}],\"maps\":[{}],\"hooks\":[{}],\
+         \"journal\":[{}]}}",
+        s.stats_enabled,
+        s.decisions,
+        s.prof_events,
+        s.net_events,
+        s.invalid_outputs,
+        progs,
+        maps,
+        hooks,
+        journal
+    )
+}
+
+/// Mirror a [`HostSnapshot`] into a metrics registry so `--prom` (and
+/// anything else scraping it) sees the host counters as Prometheus
+/// series. The host maintains its own atomics, so mirrored series are
+/// `set`, not `inc`; installs of the same policy name are aggregated
+/// into one labeled series. Label values go through
+/// [`ncclbpf::metrics::escape_label`].
+fn publish_snapshot(s: &HostSnapshot, reg: &ncclbpf::metrics::Registry) {
+    use ncclbpf::metrics::escape_label as esc;
+    reg.counter("ncclbpf_decisions_total").set(s.decisions);
+    reg.counter("ncclbpf_profiler_events_total").set(s.prof_events);
+    reg.counter("ncclbpf_net_events_total").set(s.net_events);
+    reg.counter("ncclbpf_invalid_outputs_total").set(s.invalid_outputs);
+    let mut by_prog: std::collections::HashMap<String, RunStats> = Default::default();
+    for p in &s.programs {
+        let label = format!("prog=\"{}\",hook=\"{:?}\"", esc(&p.name), p.prog_type);
+        by_prog.entry(label).or_default().absorb(&p.run);
+    }
+    for (l, run) in &by_prog {
+        reg.counter(&format!("ncclbpf_prog_run_total{{{}}}", l)).set(run.run_cnt);
+        reg.counter(&format!("ncclbpf_prog_run_ns_total{{{}}}", l)).set(run.run_time_ns);
+        reg.counter(&format!("ncclbpf_prog_errors_total{{{}}}", l)).set(run.error_cnt);
+        reg.counter(&format!("ncclbpf_prog_tail_calls_total{{{}}}", l)).set(run.tail_calls);
+    }
+    for m in &s.maps {
+        let l = format!("map=\"{}\"", esc(&m.name));
+        reg.counter(&format!("ncclbpf_map_lookups_total{{{}}}", l)).set(m.pressure.lookups);
+        reg.counter(&format!("ncclbpf_map_updates_total{{{}}}", l)).set(m.pressure.updates);
+        reg.counter(&format!("ncclbpf_map_deletes_total{{{}}}", l)).set(m.pressure.deletes);
+        if let Some(r) = &m.ring {
+            reg.counter(&format!("ncclbpf_ring_emitted_total{{{}}}", l)).set(r.emitted);
+            reg.counter(&format!("ncclbpf_ring_drained_total{{{}}}", l)).set(r.drained);
+            reg.counter(&format!("ncclbpf_ring_dropped_total{{{}}}", l)).set(r.dropped);
+        }
+    }
+    for h in &s.hooks {
+        let l = format!("hook=\"{:?}\"", h.hook);
+        reg.counter(&format!("ncclbpf_hook_swaps_total{{{}}}", l)).set(h.swaps);
+        reg.counter(&format!("ncclbpf_hook_run_total{{{}}}", l)).set(h.total_run.run_cnt);
+    }
 }
 
 #[cfg(test)]

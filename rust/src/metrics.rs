@@ -22,6 +22,12 @@ impl Counter {
     pub fn add(&self, v: u64) {
         self.0.fetch_add(v, Ordering::Relaxed);
     }
+    /// Overwrite the value — for republishing an externally maintained
+    /// monotone counter (e.g. a [`crate::host::snapshot::HostSnapshot`]
+    /// counter mirrored into the registry before rendering).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -42,6 +48,51 @@ impl LatencyHist {
     }
     pub fn count(&self) -> u64 {
         self.inner.lock().unwrap().count()
+    }
+    /// A point-in-time copy of the underlying histogram (bucket counts
+    /// + sum) — what the Prometheus renderer reads.
+    pub fn snapshot(&self) -> Histogram {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Escape a label *value* per the Prometheus exposition format:
+/// backslash, double quote, and newline must be escaped.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Metric family of a possibly-labeled series name (`m{a="b"}` → `m`).
+fn family(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// `_bucket` series name with `le` merged into any existing label set.
+fn bucket_series(name: &str, le: &str) -> String {
+    match name.split_once('{') {
+        Some((base, rest)) => {
+            let labels = rest.trim_end_matches('}');
+            format!("{}_bucket{{{},le=\"{}\"}}", base, labels, le)
+        }
+        None => format!("{}_bucket{{le=\"{}\"}}", name, le),
+    }
+}
+
+/// Suffix a possibly-labeled series name (`m{a="b"}`, `_sum` →
+/// `m_sum{a="b"}`).
+fn suffixed(name: &str, suffix: &str) -> String {
+    match name.split_once('{') {
+        Some((base, rest)) => format!("{}{}{{{}", base, suffix, rest),
+        None => format!("{}{}", name, suffix),
     }
 }
 
@@ -70,18 +121,29 @@ impl Registry {
             .clone()
     }
 
-    /// Render all metrics as "name value" lines (Prometheus-ish).
+    /// Render every metric in the Prometheus text exposition format:
+    /// one `# TYPE` line per family, plain `name value` samples for
+    /// counters, and cumulative `_bucket{le=...}` / `_sum` / `_count`
+    /// series for histograms (the log2 buckets become `le = 2^(i+1)`
+    /// upper bounds). Series names may carry a label set (`m{a="b"}`);
+    /// label values must be pre-escaped with [`escape_label`].
     pub fn render(&self) -> String {
         let mut out = String::new();
-        let mut names: Vec<(String, u64)> = self
+        let mut counters: Vec<(String, u64)> = self
             .counters
             .lock()
             .unwrap()
             .iter()
             .map(|(k, v)| (k.clone(), v.get()))
             .collect();
-        names.sort();
-        for (k, v) in names {
+        counters.sort();
+        let mut last_family = String::new();
+        for (k, v) in counters {
+            let fam = family(&k);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {} counter\n", fam));
+                last_family = fam.to_string();
+            }
             out.push_str(&format!("{} {}\n", k, v));
         }
         let mut hists: Vec<(String, Arc<LatencyHist>)> = self
@@ -92,16 +154,27 @@ impl Registry {
             .map(|(k, v)| (k.clone(), v.clone()))
             .collect();
         hists.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut last_family = String::new();
         for (k, h) in hists {
-            out.push_str(&format!(
-                "{}_p50_ns {}\n{}_p99_ns {}\n{}_count {}\n",
-                k,
-                h.quantile(0.5),
-                k,
-                h.quantile(0.99),
-                k,
-                h.count()
-            ));
+            let snap = h.snapshot();
+            let fam = family(&k);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {} histogram\n", fam));
+                last_family = fam.to_string();
+            }
+            let buckets = snap.buckets();
+            let top = buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in buckets.iter().take(top + 1).enumerate() {
+                cum += c;
+                // bucket i holds [2^i, 2^(i+1)): le is the upper bound
+                // (u128: i can reach 63, where 2^64 overflows u64)
+                let le = (1u128 << (i + 1)).to_string();
+                out.push_str(&format!("{} {}\n", bucket_series(&k, &le), cum));
+            }
+            out.push_str(&format!("{} {}\n", bucket_series(&k, "+Inf"), snap.count()));
+            out.push_str(&format!("{} {}\n", suffixed(&k, "_sum"), snap.sum()));
+            out.push_str(&format!("{} {}\n", suffixed(&k, "_count"), snap.count()));
         }
         out
     }
@@ -146,7 +219,55 @@ mod tests {
         r.hist("y").record_ns(10);
         let out = r.render();
         assert!(out.contains("x 1"));
-        assert!(out.contains("y_p50_ns"));
+        assert!(out.contains("y_sum 10"));
         assert!(out.contains("y_count 1"));
+    }
+
+    /// Satellite 1: the renderer emits *valid* Prometheus exposition —
+    /// `# TYPE` per family, cumulative buckets ending in `+Inf`,
+    /// `_sum`/`_count`, and labels carried through every series.
+    #[test]
+    fn render_is_valid_prometheus_exposition() {
+        let r = Registry::default();
+        r.counter("ncclbpf_decisions").add(7);
+        r.counter(&format!("ncclbpf_run_cnt{{prog=\"{}\"}}", escape_label("a\"b"))).add(3);
+        let h = r.hist("decision_ns");
+        h.record_ns(3); // bucket [2,4): le=4
+        h.record_ns(9); // bucket [8,16): le=16
+        let hl = r.hist("run_ns{prog=\"p\"}");
+        hl.record_ns(1);
+        let out = r.render();
+        // counters: one TYPE line per family, label escaping intact
+        assert!(out.contains("# TYPE ncclbpf_decisions counter\n"));
+        assert!(out.contains("ncclbpf_decisions 7\n"));
+        assert!(out.contains("# TYPE ncclbpf_run_cnt counter\n"));
+        assert!(out.contains("ncclbpf_run_cnt{prog=\"a\\\"b\"} 3\n"));
+        // histogram: cumulative buckets, +Inf closes at the count
+        assert!(out.contains("# TYPE decision_ns histogram\n"));
+        assert!(out.contains("decision_ns_bucket{le=\"4\"} 1\n"));
+        assert!(out.contains("decision_ns_bucket{le=\"16\"} 2\n"));
+        assert!(out.contains("decision_ns_bucket{le=\"+Inf\"} 2\n"));
+        assert!(out.contains("decision_ns_sum 12\n"));
+        assert!(out.contains("decision_ns_count 2\n"));
+        // labeled histogram: le merges into the label set, suffixes
+        // keep the labels
+        assert!(out.contains("run_ns_bucket{prog=\"p\",le=\"2\"} 1\n"));
+        assert!(out.contains("run_ns_bucket{prog=\"p\",le=\"+Inf\"} 1\n"));
+        assert!(out.contains("run_ns_sum{prog=\"p\"} 1\n"));
+        assert!(out.contains("run_ns_count{prog=\"p\"} 1\n"));
+        // every non-comment line is "<series> <integer>"
+        for line in out.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("sample line");
+            val.parse::<u64>().unwrap_or_else(|_| panic!("bad sample: {line}"));
+        }
+        // TYPE precedes the family's first sample, exactly once each
+        assert_eq!(out.matches("# TYPE decision_ns histogram").count(), 1);
+    }
+
+    #[test]
+    fn escape_label_covers_specials() {
+        assert_eq!(escape_label(r#"a\b"c"#), r#"a\\b\"c"#);
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+        assert_eq!(escape_label("plain"), "plain");
     }
 }

@@ -141,6 +141,7 @@ pub fn p50_p99(ns: &[f64]) -> (f64, f64) {
 pub struct Histogram {
     buckets: Vec<u64>,
     count: u64,
+    sum: u64,
 }
 
 impl Default for Histogram {
@@ -151,17 +152,30 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Histogram {
-        Histogram { buckets: vec![0; 64], count: 0 }
+        Histogram { buckets: vec![0; 64], count: 0, sum: 0 }
     }
 
     pub fn record(&mut self, v: u64) {
         let b = 64 - v.max(1).leading_zeros() as usize - 1;
         self.buckets[b.min(63)] += 1;
         self.count += 1;
+        self.sum = self.sum.saturating_add(v);
     }
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Sum of all recorded values (exact, unlike the bucketed
+    /// quantiles) — the Prometheus `_sum` series.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// The log2 bucket counts: `buckets()[i]` holds values in
+    /// `[2^i, 2^(i+1))` — the Prometheus `_bucket` series source.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
     }
 
     /// approximate quantile from the log2 buckets (bucket midpoint).

@@ -8,9 +8,11 @@
 //!
 //! Runs under plain `cargo test` and in the CI smoke job; the nightly
 //! CI job scales every generator with `NCCLBPF_FUZZ_CASES` (10x the
-//! default), and the pruning-soundness job re-runs the whole file with
+//! default), the pruning-soundness job re-runs the whole file with
 //! `NCCLBPF_VERIFIER_PRUNE=0` — plus an explicit in-process test that
-//! pruning on/off produce identical accept/reject verdicts.
+//! pruning on/off produce identical accept/reject verdicts — and the
+//! stats-differential job re-runs it with `NCCLBPF_STATS` set and
+//! cleared, backed by an in-process stats-on/off differential.
 
 use ncclbpf::bpf::helpers::HelperEnv;
 use ncclbpf::bpf::insn::{
@@ -20,7 +22,9 @@ use ncclbpf::bpf::insn::{
 };
 use ncclbpf::bpf::jit::{JitOptions, JitProgram};
 use ncclbpf::bpf::maps::{MapDef, MapKind};
-use ncclbpf::bpf::{analysis, interp, verifier, InsnFacts, MapRegistry, ProgType, VerifierConfig};
+use ncclbpf::bpf::{
+    analysis, interp, verifier, InsnFacts, MapRegistry, ProgType, RunStatsCell, VerifierConfig,
+};
 use ncclbpf::host::ctx::layouts;
 use ncclbpf::util::Rng;
 use std::collections::HashMap;
@@ -200,7 +204,7 @@ fn differential_fuzz_verified_programs_interp_vs_jit() {
     let mut rng = Rng::new(0xf022_2026);
     let lay = layouts();
     let maps = HashMap::new();
-    let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
+    let env = HelperEnv { maps: vec![], printk: None, prog_type: None, stats: None };
     let mut jit_checked = 0;
     let cases = fuzz_cases(400);
     for case in 0..cases {
@@ -272,7 +276,7 @@ fn differential_call_programs_interp_vs_jit() {
     let mut rng = Rng::new(0xca11_2026);
     let lay = layouts();
     let maps = HashMap::new();
-    let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
+    let env = HelperEnv { maps: vec![], printk: None, prog_type: None, stats: None };
     let mut jit_checked = 0;
     let cases = fuzz_cases(200);
     for case in 0..cases {
@@ -385,7 +389,7 @@ fn differential_rewrite_preserves_behavior() {
     let mut rng = Rng::new(0x2e72_2026);
     let lay = layouts();
     let maps = HashMap::new();
-    let env = HelperEnv { maps: vec![], printk: None, prog_type: None };
+    let env = HelperEnv { maps: vec![], printk: None, prog_type: None, stats: None };
     let mut rewritten_cases = 0usize;
     for case in 0..fuzz_cases(300) {
         // call programs are branch-free by construction, so wrap them
@@ -630,6 +634,89 @@ fn differential_ringbuf_helpers_interp_vs_jit() {
                 got_records,
                 want_records,
                 "case {}: drained records differ between interp and {:?}\n{}",
+                case,
+                engine,
+                disasm(&prog)
+            );
+        }
+    }
+}
+
+/// Stats instrumentation must be behaviorally invisible: the same
+/// verified program run with a `RunStatsCell` attached and without one
+/// must produce the same r0 and drain the same ringbuf bytes on every
+/// engine. Half the corpus is ringbuf programs (exercising the helper
+/// paths whose trampolines sit next to the record sites), half is the
+/// pure-ALU generator. The CI `stats-differential` job re-runs this
+/// whole file with `NCCLBPF_STATS` both set and cleared.
+#[test]
+fn differential_stats_on_off_agree() {
+    let mut rng = Rng::new(0x57a7_2026);
+    let lay = layouts();
+    let mut ring_maps = HashMap::new();
+    ring_maps.insert(RING_MAP_ID_SLOT, ring_def());
+    let plain_maps = HashMap::new();
+    let engines: &[Engine] = if cfg!(all(unix, target_arch = "x86_64")) {
+        &[Engine::Interp, Engine::JitTrampoline, Engine::JitInline]
+    } else {
+        &[Engine::Interp]
+    };
+    for case in 0..fuzz_cases(100) {
+        let ring_case = case % 2 == 0;
+        let prog = if ring_case {
+            gen_ringbuf_program(&mut rng)
+        } else {
+            gen_program(&mut rng)
+        };
+        let (pt, ctx, vmaps) = if ring_case {
+            (ProgType::Profiler, &lay.profiler, &ring_maps)
+        } else {
+            (ProgType::Tuner, &lay.tuner, &plain_maps)
+        };
+        let info = verifier::verify(&prog, pt, ctx, vmaps).unwrap_or_else(|e| {
+            panic!("case {}: unverifiable program: {}\n{}", case, e, disasm(&prog))
+        });
+        let (ops, slot2op) = interp::predecode_mapped(&prog).expect("predecode");
+        let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
+
+        // one fresh registry + ring per arm, so the drained bytes are
+        // attributable to exactly this (engine, stats-mode) run
+        let run = |engine: Engine, stats: bool| -> (u64, Vec<Vec<u8>>) {
+            let reg = MapRegistry::new();
+            let ring = reg.create_or_get(&ring_def()).unwrap();
+            assert_eq!(ring.id, RING_MAP_ID_SLOT);
+            let mut env = if ring_case {
+                HelperEnv::new(&reg, &[ring.id]).unwrap()
+            } else {
+                HelperEnv { maps: vec![], printk: None, prog_type: None, stats: None }
+            };
+            if stats {
+                env.stats = Some(RunStatsCell::new());
+            }
+            let r0 = match engine {
+                Engine::Interp => unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) },
+                Engine::JitTrampoline => {
+                    let j = JitProgram::compile_unchecked(&ops).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+                Engine::JitInline => {
+                    let opts =
+                        JitOptions { facts: Some(&facts), env: Some(&env), inline: None };
+                    let j = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+            };
+            let mut records = Vec::new();
+            ring.ringbuf_drain(&mut |b| records.push(b.to_vec()));
+            (r0, records)
+        };
+        for &engine in engines {
+            let off = run(engine, false);
+            let on = run(engine, true);
+            assert_eq!(
+                on,
+                off,
+                "case {}: {:?} diverges with stats enabled\n{}",
                 case,
                 engine,
                 disasm(&prog)

@@ -166,9 +166,10 @@ fn hotreload_under_continuous_load() {
     let (calls, misses) = decider.join().unwrap();
     assert!(calls > 100, "decider must have run ({} calls)", calls);
     assert_eq!(misses, 0, "no decision may observe a missing policy");
-    let (swaps, last_ns) = host.swap_stats(ProgType::Tuner);
-    assert_eq!(swaps, 31);
-    assert!(last_ns < 100_000, "swap took {} ns", last_ns);
+    let snap = host.snapshot();
+    let hook = snap.hook(ProgType::Tuner);
+    assert_eq!(hook.swaps, 31);
+    assert!(hook.last_swap_ns < 100_000, "swap took {} ns", hook.last_swap_ns);
 }
 
 /// §5.3 net plugin: the eBPF-wrapped socket transport counts bytes/ops

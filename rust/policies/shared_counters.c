@@ -1,0 +1,38 @@
+/* shared_counters — contended shared state as a first-class policy
+ * shape (Table 1's atomic row): one plain Array map element shared by
+ * every invocation across every thread, updated with BPF_ATOMIC
+ * read-modify-writes instead of per-cpu slots.
+ *
+ * Statement-position __sync_fetch_and_add lowers to the fetchless
+ * `lock add` form; the expression-position call keeps the BPF_FETCH
+ * bit and returns the pre-add value, which feeds the channel ramp.
+ * Conservation is exact under concurrency and reload storms:
+ *   decisions == number of tuner invocations, bytes == sum(msg_size).
+ */
+
+struct shared_stats {
+    __u64 decisions;
+    __u64 bytes;
+};
+
+BPF_MAP(shared_stats_map, BPF_MAP_TYPE_ARRAY, __u32, struct shared_stats, 1);
+
+SEC("tuner")
+int shared_counters(struct policy_context *ctx) {
+    __u32 zero = 0;
+    struct shared_stats *st = bpf_map_lookup_elem(&shared_stats_map, &zero);
+    if (!st) {
+        ctx->n_channels = 2;
+        return 0;
+    }
+    __sync_fetch_and_add(&st->bytes, ctx->msg_size);
+    __u64 seen = __sync_fetch_and_add(&st->decisions, 1);
+    ctx->algorithm = NCCL_ALGO_RING;
+    ctx->protocol = NCCL_PROTO_SIMPLE;
+    if (seen < 64) {
+        ctx->n_channels = 4;
+    } else {
+        ctx->n_channels = 12;
+    }
+    return 0;
+}

@@ -1,0 +1,60 @@
+/* size_histogram — a lock-free message-size histogram over one plain
+ * Array map (Table 1's second atomic row). Every decision picks a
+ * power-of-4 size bucket with a branch ladder and bumps the bucket's
+ * hit/byte counters with BPF_ATOMIC adds; a compare-and-swap latches
+ * the first non-zero bucket index ever observed into slot 0's `first`
+ * field (cmpxchg succeeds exactly once, so the field records the
+ * earliest large transfer, not the latest).
+ *
+ * All counters live in shared memory — no per-cpu slots — so host-side
+ * sums are exact under arbitrary thread counts and reload storms:
+ *   sum(bucket.hits) == number of tuner invocations.
+ */
+
+struct size_bucket {
+    __u64 hits;
+    __u64 bytes;
+    __u64 first;
+};
+
+BPF_MAP(size_hist, BPF_MAP_TYPE_ARRAY, __u32, struct size_bucket, 8);
+
+SEC("tuner")
+int size_histogram(struct policy_context *ctx) {
+    __u64 sz = ctx->msg_size;
+    __u32 idx = 0;
+    if (sz > 16384) { idx = 1; }
+    if (sz > 65536) { idx = 2; }
+    if (sz > 262144) { idx = 3; }
+    if (sz > 1048576) { idx = 4; }
+    if (sz > 4194304) { idx = 5; }
+    if (sz > 16777216) { idx = 6; }
+    if (sz > 67108864) { idx = 7; }
+
+    struct size_bucket *b = bpf_map_lookup_elem(&size_hist, &idx);
+    if (!b) {
+        ctx->n_channels = 2;
+        return 0;
+    }
+    __sync_fetch_and_add(&b->hits, 1);
+    __sync_fetch_and_add(&b->bytes, sz);
+
+    __u32 zero = 0;
+    struct size_bucket *head = bpf_map_lookup_elem(&size_hist, &zero);
+    if (head) {
+        if (idx > 0) {
+            __sync_val_compare_and_swap(&head->first, 0, idx);
+        }
+    }
+
+    if (idx < 3) {
+        ctx->algorithm = NCCL_ALGO_TREE;
+        ctx->protocol = NCCL_PROTO_LL;
+        ctx->n_channels = 4;
+    } else {
+        ctx->algorithm = NCCL_ALGO_RING;
+        ctx->protocol = NCCL_PROTO_SIMPLE;
+        ctx->n_channels = 16;
+    }
+    return 0;
+}

@@ -1,0 +1,21 @@
+; atomic_misaligned — atomic bug class 2: a 64-bit atomic at a
+; non-8-byte-aligned offset into a map value. Hardware atomicity is
+; only guaranteed for naturally aligned operands, so the verifier
+; insists on 4/8-byte alignment at the proven constant offset.
+
+map m array key=4 value=16 entries=4
+
+prog tuner atomic_misaligned
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, m
+  call  bpf_map_lookup_elem
+  jne   r0, 0, ok
+  mov64 r0, 0
+  exit
+ok:
+  mov64 r2, 1
+  lock add64 [r0+4], r2   ; BUG: offset 4 is not 8-byte aligned
+  mov64 r0, 0
+  exit

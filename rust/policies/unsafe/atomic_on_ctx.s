@@ -1,0 +1,10 @@
+; atomic_on_ctx — atomic bug class 1: atomic read-modify-write on the
+; context. Atomics are only meaningful on shared map-value memory; the
+; ctx is a per-invocation scratch structure owned by the runtime, and
+; an RMW through it would bypass the read/write window contract.
+
+prog tuner atomic_on_ctx
+  mov64 r2, 1
+  lock add64 [r1+40], r2  ; BUG: ctx pointer, not map-value memory
+  mov64 r0, 0
+  exit

@@ -1,0 +1,21 @@
+; atomic_oob — atomic bug class 3: an atomic whose operand extends
+; past the end of the map value. The RMW window [16, 24) exceeds the
+; 16-byte value, so the bounds check fires before any alignment or
+; type reasoning.
+
+map m array key=4 value=16 entries=4
+
+prog tuner atomic_oob
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, m
+  call  bpf_map_lookup_elem
+  jne   r0, 0, ok
+  mov64 r0, 0
+  exit
+ok:
+  mov64 r2, 1
+  lock add64 [r0+16], r2  ; BUG: offset 16 + width 8 > value_size 16
+  mov64 r0, 0
+  exit

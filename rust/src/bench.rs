@@ -14,7 +14,7 @@
 //! [`Communicator::reseed`], so two runs on the same machine measure
 //! the same workload.
 
-use crate::bpf::maps::{Map, MapDef, MapKind};
+use crate::bpf::maps::{pin_thread_cpu_slot, Map, MapDef, MapKind, NCPU};
 use crate::bpf::program::{load, load_asm};
 use crate::bpf::{LoadOptions, MapRegistry};
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, TunerPlugin};
@@ -853,6 +853,127 @@ pub fn obs_bench(opts: &BenchOpts) -> BenchReport {
     rep
 }
 
+/// The BENCH_atomics counter strategies: one increment per decision,
+/// identical lookup preamble, three update disciplines.
+const ATOMIC_COUNTER_POLICY: &str = r#"
+map atomic_ctr array key=4 value=8 entries=1
+
+prog tuner atomic_counter
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, atomic_ctr
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  mov64 r3, 1
+  lock add64 [r0+0], r3
+out:
+  mov64 r0, 0
+  exit
+"#;
+
+const PERCPU_COUNTER_POLICY: &str = r#"
+map percpu_ctr percpu key=4 value=8 entries=1
+
+prog tuner percpu_counter
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, percpu_ctr
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  ldxdw r3, [r0+0]
+  add64 r3, 1
+  stxdw [r0+0], r3
+out:
+  mov64 r0, 0
+  exit
+"#;
+
+const HASH_COUNTER_POLICY: &str = r#"
+map hash_ctr hash key=4 value=8 entries=4
+
+prog tuner hash_counter
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, hash_ctr
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  ldxdw r3, [r0+0]
+  add64 r3, 1
+  stxdw [r0+0], r3
+out:
+  mov64 r0, 0
+  exit
+"#;
+
+/// BENCH_atomics — the contended-shared-state price list: one counter
+/// increment per tuner decision at 1→64 worker threads, under three
+/// disciplines sharing the same lookup preamble:
+/// - `atomic`: BPF_ATOMIC `lock add64` on one plain Array element —
+///   lock-free and exact at any thread count,
+/// - `percpu`: plain load/add/store on the thread's per-cpu slot —
+///   exact only while every thread has its own slot (≤ NCPU),
+/// - `hash_lock`: the pre-atomics pattern, a plain RMW on a hash-map
+///   element serialized by one host-side mutex.
+/// Each series carries `counted` and `conserved` so lost updates are
+/// visible in the trajectory, not just throughput.
+pub fn atomics_bench(opts: &BenchOpts) -> BenchReport {
+    let mut rep = BenchReport::new("atomics");
+    let per_thread = (opts.calls / 64).clamp(200, 20_000);
+    for &threads in &[1usize, 2, 4, 8, 16, 32, 64] {
+        for (strat, src, map_name) in [
+            ("atomic", ATOMIC_COUNTER_POLICY, "atomic_ctr"),
+            ("percpu", PERCPU_COUNTER_POLICY, "percpu_ctr"),
+            ("hash_lock", HASH_COUNTER_POLICY, "hash_ctr"),
+        ] {
+            let host = Arc::new(NcclBpfHost::new());
+            host.install_asm(src).expect("counter policy must verify");
+            let m = host.map(map_name).expect("counter map");
+            if strat == "hash_lock" {
+                // hash lookups miss until the element exists
+                m.write_u64(0, 0).expect("seed hash element");
+            }
+            let lock = Arc::new(std::sync::Mutex::new(()));
+            let t0 = Instant::now();
+            let workers: Vec<_> = (0..threads)
+                .map(|t| {
+                    let host = host.clone();
+                    let lock = lock.clone();
+                    let locked = strat == "hash_lock";
+                    std::thread::spawn(move || {
+                        pin_thread_cpu_slot(t);
+                        let args = decision_args(1 << 20);
+                        for _ in 0..per_thread {
+                            let mut cost = CostTable::all_sentinel();
+                            let mut ch = 0u32;
+                            let _g = if locked { Some(lock.lock().unwrap()) } else { None };
+                            host.tuner_decide(&args, &mut cost, &mut ch);
+                            std::hint::black_box((&cost, ch));
+                        }
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().expect("atomics bench worker panicked");
+            }
+            let wall_s = (t0.elapsed().as_nanos() as f64 / 1e9).max(1e-9);
+            let total = (threads * per_thread) as u64;
+            let counted = m.read_u64_all(0).unwrap_or(0);
+            let eps = total as f64 / wall_s;
+            rep.push(
+                Series::new(format!("{}_{}t", strat, threads), "ops_per_sec", eps, eps, eps)
+                    .with("threads", threads as f64)
+                    .with("ops", total as f64)
+                    .with("counted", counted as f64)
+                    .with("conserved", if counted == total { 1.0 } else { 0.0 }),
+            );
+        }
+    }
+    rep
+}
+
 /// One `--compare` finding: a series whose fresh median regressed past
 /// tolerance (or disappeared) relative to the committed baseline.
 #[derive(Debug)]
@@ -1024,6 +1145,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         inline_bench(opts),
         analysis_bench(opts),
         obs_bench(opts),
+        atomics_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -1043,8 +1165,8 @@ mod tests {
     #[test]
     fn table1_rows_have_positive_latencies() {
         let rep = table1_overhead(&tiny());
-        // 4 native + 9 policies + 2 interp ablations + 2 stack-zeroing
-        assert_eq!(rep.series.len(), 17);
+        // 4 native + 11 policies + 2 interp ablations + 2 stack-zeroing
+        assert_eq!(rep.series.len(), 19);
         for s in &rep.series {
             assert!(s.median > 0.0 && s.p99 > 0.0 && s.mean > 0.0, "{}", s.label);
             assert_eq!(s.unit, "ns");
@@ -1304,6 +1426,41 @@ mod tests {
             assert!(field(on, "inlined_lookups") + field(on, "direct_calls") > 0.0, "{:?}", on);
             assert_eq!(field(off, "inlined_lookups") + field(off, "direct_calls"), 0.0);
             assert!(field(off, "trampoline_calls") > 0.0);
+        }
+    }
+
+    /// BENCH_atomics coverage + the conservation contract per
+    /// strategy: atomic and hash_lock counters are exact at every
+    /// thread count; per-cpu counters are exact while threads ≤ NCPU
+    /// (beyond that, slot sharing makes plain RMWs racy by design).
+    #[test]
+    fn atomics_bench_scaling_curve_conserves_counts() {
+        let rep = atomics_bench(&tiny());
+        assert_eq!(rep.series.len(), 21); // 3 strategies x 7 thread counts
+        let field = |s: &Series, k: &str| {
+            s.extra.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        for &threads in &[1usize, 2, 4, 8, 16, 32, 64] {
+            for strat in ["atomic", "percpu", "hash_lock"] {
+                let s = rep
+                    .series
+                    .iter()
+                    .find(|s| s.label == format!("{}_{}t", strat, threads))
+                    .unwrap_or_else(|| panic!("missing {}_{}t", strat, threads));
+                assert!(s.mean > 0.0, "{}", s.label);
+                assert_eq!(s.unit, "ops_per_sec");
+                let exact_expected = strat != "percpu" || threads <= NCPU;
+                if exact_expected {
+                    assert_eq!(
+                        field(s, "conserved"),
+                        1.0,
+                        "{}: counted {} of {} ops",
+                        s.label,
+                        field(s, "counted"),
+                        field(s, "ops")
+                    );
+                }
+            }
         }
     }
 

@@ -30,7 +30,7 @@
 //!    `LoadOptions::max_cost` and the host's per-hook budgets.
 
 use super::helpers::{self, ArgType, ProgType};
-use super::insn::{self, class, jmp, size, src, Insn, STACK_SIZE};
+use super::insn::{self, atomic, class, jmp, size, src, Insn, STACK_SIZE};
 use super::interp;
 use super::maps::MapRegistry;
 use super::object::Object;
@@ -70,10 +70,23 @@ pub fn helper_cost(id: i32) -> u64 {
 
 /// Abstract cost of executing one instruction once: 1 unit, plus the
 /// helper surcharge at helper call sites (bpf-to-bpf calls cost 1 —
-/// the callee's instructions are accounted individually).
+/// the callee's instructions are accounted individually). Atomic
+/// read-modify-writes are priced well above a plain store: a
+/// `lock`-prefixed RMW takes exclusive cache-line ownership with full
+/// fence semantics, and the bitwise forms lower to a compare-exchange
+/// retry loop in the JIT, so they pay a further surcharge.
 pub fn insn_cost(ins: &Insn) -> u64 {
     if ins.class() == class::JMP && ins.op() == jmp::CALL && !ins.is_pseudo_call() {
         1 + helper_cost(ins.imm)
+    } else if ins.is_atomic() {
+        match ins.imm {
+            // single-instruction lowerings: lock add / lock xadd /
+            // xchg / lock cmpxchg
+            atomic::ADD | atomic::XCHG | atomic::CMPXCHG => 8,
+            x if x == atomic::ADD | atomic::FETCH => 8,
+            // and/or/xor lower to a cmpxchg retry loop
+            _ => 12,
+        }
     } else {
         1
     }
@@ -304,7 +317,21 @@ fn stackish(insns: &[Insn]) -> Vec<u16> {
                     prop(&mut st, i + 1, out | rbit(10), &mut changed);
                 }
                 class::ST | class::STX => {
-                    prop(&mut st, i + 1, cur, &mut changed);
+                    // atomic fetch forms redefine the source register
+                    // (and cmpxchg redefines r0) with the loaded
+                    // scalar — definitely not a frame pointer
+                    let out = if ins.is_atomic() {
+                        if ins.imm == atomic::CMPXCHG {
+                            cur & !rbit(0)
+                        } else if ins.atomic_fetches() {
+                            cur & !rbit(ins.src)
+                        } else {
+                            cur
+                        }
+                    } else {
+                        cur
+                    };
+                    prop(&mut st, i + 1, out | rbit(10), &mut changed);
                 }
                 class::ALU64 => {
                     use super::insn::alu;
@@ -439,6 +466,34 @@ fn transfer(insns: &[Insn], i: usize, live: &[LiveSet], stackish: &[u16]) -> Liv
         }
         class::ST | class::STX => {
             let mut s = succ(i + 1);
+            if ins.is_atomic() {
+                // uses: dst (the pointer), src (the value operand),
+                // and r0 for cmpxchg (the compare operand). Defs: the
+                // fetch forms and xchg redefine src with the old
+                // value; cmpxchg redefines r0 with the observed value.
+                // The memory side effect itself is unconditional —
+                // an atomic is never a dead store.
+                let w32 = ins.sz() == size::W;
+                if ins.imm == atomic::CMPXCHG {
+                    s.kill(0);
+                } else if ins.atomic_fetches() {
+                    s.kill(ins.src);
+                }
+                s.gen64(ins.dst);
+                if w32 {
+                    s.gen32(ins.src);
+                } else {
+                    s.gen64(ins.src);
+                }
+                if ins.imm == atomic::CMPXCHG {
+                    if w32 {
+                        s.gen32(0);
+                    } else {
+                        s.gen64(0);
+                    }
+                }
+                return s;
+            }
             // an exact dword store through r10 overwrites the slot:
             // its previous value is dead above this point
             if ins.dst == 10 && ins.sz() == size::DW && (ins.off as i64 + STACK_SIZE) % 8 == 0 {
@@ -913,6 +968,21 @@ mod tests {
         assert_eq!(insn_cost(&insn::call(9999)), 51);
         // bpf-to-bpf calls cost 1 (callee bodies accounted per-slot)
         assert_eq!(insn_cost(&insn::call_pseudo(3)), 1);
+        // atomics price well above a plain store (1 unit)
+        assert_eq!(insn_cost(&insn::stx(size::DW, 1, 2, 0)), 1);
+        assert_eq!(insn_cost(&insn::atomic_insn(size::DW, 1, 2, 0, atomic::ADD)), 8);
+        assert_eq!(
+            insn_cost(&insn::atomic_insn(size::W, 1, 2, 0, atomic::ADD | atomic::FETCH)),
+            8
+        );
+        assert_eq!(insn_cost(&insn::atomic_insn(size::DW, 1, 2, 0, atomic::XCHG)), 8);
+        assert_eq!(insn_cost(&insn::atomic_insn(size::DW, 1, 2, 0, atomic::CMPXCHG)), 8);
+        // the bitwise forms lower to a cmpxchg retry loop
+        assert_eq!(insn_cost(&insn::atomic_insn(size::DW, 1, 2, 0, atomic::AND)), 12);
+        assert_eq!(
+            insn_cost(&insn::atomic_insn(size::W, 1, 2, 0, atomic::XOR | atomic::FETCH)),
+            12
+        );
         assert_eq!(chain_factor(&[helpers::id::TAIL_CALL]), 34);
         assert_eq!(chain_factor(&[helpers::id::MAP_LOOKUP_ELEM]), 1);
         assert_eq!(chain_factor(&[]), 1);
@@ -957,6 +1027,53 @@ mod tests {
         assert_ne!(live[2].stack & top, 0, "slot live at the load");
         assert_eq!(live[1].stack & top, 0, "dword store kills the slot above it");
         assert_ne!(live[1].live64 & (1 << 1), 0, "stored r1 is read");
+    }
+
+    #[test]
+    fn liveness_models_atomic_uses_and_defs() {
+        // fetchadd: r2 (value) and r1 (pointer) are used; r2 is
+        // redefined with the old value, so its prior value is not
+        // demanded above the mov that feeds it
+        let insns = [
+            insn::mov64_imm(2, 1),
+            insn::atomic_insn(size::DW, 1, 2, 0, atomic::ADD | atomic::FETCH),
+            insn::mov64_reg(0, 2), // read the fetched old value
+            insn::exit(),
+        ];
+        let live = liveness(&insns, &[(0, 4)]);
+        assert_ne!(live[1].live64 & (1 << 1), 0, "pointer r1 used by the atomic");
+        assert_ne!(live[1].live64 & (1 << 2), 0, "value r2 used by the atomic");
+        assert_eq!(
+            live[2].live64 & (1 << 2),
+            (1 << 2),
+            "fetched r2 demanded by the mov below"
+        );
+        assert_eq!(live[0].live64 & (1 << 2), 0, "r2 defined at slot 0");
+
+        // cmpxchg: r0 is both used (compare) and redefined (observed
+        // value) — demand on r0 below the cmpxchg does not propagate
+        // above it, but the cmpxchg itself demands r0
+        let cx = [
+            insn::mov64_imm(0, 5),
+            insn::mov64_imm(2, 7),
+            insn::atomic_insn(size::DW, 1, 2, 0, atomic::CMPXCHG),
+            insn::exit(), // r0 = observed value
+        ];
+        let lv = liveness(&cx, &[(0, 4)]);
+        assert_ne!(lv[2].live64 & 1, 0, "cmpxchg reads r0");
+        assert_ne!(lv[1].live64 & 1, 0, "compare operand live across the mov r2");
+        assert_eq!(lv[0].live64 & 1, 0, "r0 defined at slot 0");
+
+        // a fetchless atomic is a pure use of src — no kill
+        let fl = [
+            insn::mov64_imm(2, 1),
+            insn::atomic_insn(size::W, 1, 2, 0, atomic::ADD),
+            insn::mov64_reg(0, 2),
+            insn::exit(),
+        ];
+        let lf = liveness(&fl, &[(0, 4)]);
+        assert_ne!(lf[1].live32 & (1 << 2), 0, "32-bit atomic reads w2");
+        assert_ne!(lf[1].live64 & (1 << 2), 0, "r2 still demanded below (no redefinition)");
     }
 
     #[test]

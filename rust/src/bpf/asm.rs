@@ -370,6 +370,66 @@ fn parse_insn(mnemonic: &str, toks: &[&str], line: usize) -> AResult<Pending> {
             return Ok(Pending::Done(insn::st_imm(sfx, d, off, imm as i32)));
         }
     }
+    // atomics: lock OP{32,64} [rD+off], rS       (fetchless rmw)
+    //          lock fetchOP{32,64} rS, [rD+off]  (old value lands in rS)
+    if mnemonic == "lock" {
+        if toks.len() != 4 {
+            return aerr(
+                line,
+                "usage: lock OP64 [rD+off], rS  |  lock fetchOP64 rS, [rD+off]",
+            );
+        }
+        let sub = toks[1];
+        for (suffix, sz) in [("64", size::DW), ("32", size::W)] {
+            if let Some(base) = sub.strip_suffix(suffix) {
+                let (name, fetch) = match base.strip_prefix("fetch") {
+                    Some(n) => (n, true),
+                    None => (base, false),
+                };
+                let aop = match name {
+                    "add" => insn::atomic::ADD,
+                    "or" => insn::atomic::OR,
+                    "and" => insn::atomic::AND,
+                    "xor" => insn::atomic::XOR,
+                    _ => return aerr(line, format!("unknown atomic op '{}'", sub)),
+                };
+                let aop = if fetch { aop | insn::atomic::FETCH } else { aop };
+                return Ok(Pending::Done(if fetch {
+                    let s = parse_reg(toks[2], line)?;
+                    let (d, off) = parse_mem(toks[3], line)?;
+                    insn::atomic_insn(sz, d, s, off, aop)
+                } else {
+                    let (d, off) = parse_mem(toks[2], line)?;
+                    let s = parse_reg(toks[3], line)?;
+                    insn::atomic_insn(sz, d, s, off, aop)
+                }));
+            }
+        }
+        return aerr(line, format!("unknown atomic op '{}'", sub));
+    }
+    // xchgNN rS, [rD+off] — atomic exchange (old value lands in rS)
+    for (m, sz) in [("xchg64", size::DW), ("xchg32", size::W)] {
+        if mnemonic == m {
+            if toks.len() != 3 {
+                return aerr(line, format!("usage: {} rS, [rD+off]", m));
+            }
+            let s = parse_reg(toks[1], line)?;
+            let (d, off) = parse_mem(toks[2], line)?;
+            return Ok(Pending::Done(insn::atomic_insn(sz, d, s, off, insn::atomic::XCHG)));
+        }
+    }
+    // cmpxchgNN [rD+off], rS — compare against r0, store rS on match;
+    // the value observed in memory lands in r0 either way
+    for (m, sz) in [("cmpxchg64", size::DW), ("cmpxchg32", size::W)] {
+        if mnemonic == m {
+            if toks.len() != 3 {
+                return aerr(line, format!("usage: {} [rD+off], rS", m));
+            }
+            let (d, off) = parse_mem(toks[1], line)?;
+            let s = parse_reg(toks[2], line)?;
+            return Ok(Pending::Done(insn::atomic_insn(sz, d, s, off, insn::atomic::CMPXCHG)));
+        }
+    }
     match mnemonic {
         "lddw" => {
             let dst = parse_reg(toks[1], line)?;
@@ -412,7 +472,13 @@ fn parse_insn(mnemonic: &str, toks: &[&str], line: usize) -> AResult<Pending> {
         }
         "exit" => Ok(Pending::Done(insn::exit())),
         m => {
-            if let Some(op) = jmp_op(m) {
+            // conditional jumps: jOP (64-bit compare) / jOP32 (compare
+            // on the low 32 bits, the BPF_JMP32 class)
+            let (base, cls) = match m.strip_suffix("32") {
+                Some(b) if jmp_op(b).is_some() => (b, class::JMP32),
+                _ => (m, class::JMP),
+            };
+            if let Some(op) = jmp_op(base) {
                 if toks.len() != 4 {
                     return aerr(line, format!("usage: {} rD, rS|imm, LABEL", m));
                 }
@@ -421,7 +487,7 @@ fn parse_insn(mnemonic: &str, toks: &[&str], line: usize) -> AResult<Pending> {
                 if toks[2].starts_with('r') {
                     let s = parse_reg(toks[2], line)?;
                     Ok(Pending::Branch {
-                        opcode: class::JMP | src::X | op,
+                        opcode: cls | src::X | op,
                         dst,
                         src_reg: s,
                         imm: 0,
@@ -430,7 +496,7 @@ fn parse_insn(mnemonic: &str, toks: &[&str], line: usize) -> AResult<Pending> {
                 } else {
                     let imm = parse_imm(toks[2], line)?;
                     Ok(Pending::Branch {
-                        opcode: class::JMP | src::K | op,
+                        opcode: cls | src::K | op,
                         dst,
                         src_reg: 0,
                         imm: imm as i32,
@@ -572,6 +638,74 @@ add_sub:
         assert_eq!(o.maps[0].key_size, 4);
         assert_eq!(o.maps[0].value_size, 4);
         assert_eq!(o.maps[0].max_entries, 4);
+    }
+
+    #[test]
+    fn assemble_jmp32_mnemonics() {
+        use crate::bpf::insn::{class, disasm_one, jmp, src};
+        let src_text = r#"
+prog tuner t
+  jlt32 r1, 5, done
+  jsgt32 r1, r2, done
+  jeq   r1, 0, done
+done:
+  mov64 r0, 0
+  exit
+"#;
+        let o = assemble(src_text).unwrap();
+        let insns = &o.progs[0].insns;
+        assert_eq!(insns[0].opcode, class::JMP32 | src::K | jmp::JLT);
+        assert_eq!(insns[0].imm, 5);
+        assert_eq!(insns[1].opcode, class::JMP32 | src::X | jmp::JSGT);
+        assert_eq!(insns[1].src, 2);
+        assert_eq!(insns[2].opcode, class::JMP | src::K | jmp::JEQ);
+        // jmp32 disasm carries the 32 suffix and reassembles
+        assert!(disasm_one(&insns[0], None).starts_with("jlt32 r1, 5"));
+        assert!(disasm_one(&insns[1], None).starts_with("jsgt32 r1, r2"));
+    }
+
+    #[test]
+    fn assemble_atomics_roundtrip_through_disasm() {
+        use crate::bpf::insn::{atomic, disasm_one, size};
+        let src = r#"
+prog tuner t
+  lock add64 [r1+8], r2
+  lock fetchadd32 r3, [r1+4]
+  lock xor64 [r1+0], r4
+  xchg64 r2, [r1+16]
+  cmpxchg32 [r1+4], r5
+  mov64 r0, 0
+  exit
+"#;
+        let o = assemble(src).unwrap();
+        let insns = &o.progs[0].insns;
+        assert_eq!(insns[0], crate::bpf::insn::atomic_insn(size::DW, 1, 2, 8, atomic::ADD));
+        assert_eq!(
+            insns[1],
+            crate::bpf::insn::atomic_insn(size::W, 1, 3, 4, atomic::ADD | atomic::FETCH)
+        );
+        assert_eq!(insns[2], crate::bpf::insn::atomic_insn(size::DW, 1, 4, 0, atomic::XOR));
+        assert_eq!(insns[3], crate::bpf::insn::atomic_insn(size::DW, 1, 2, 16, atomic::XCHG));
+        assert_eq!(insns[4], crate::bpf::insn::atomic_insn(size::W, 1, 5, 4, atomic::CMPXCHG));
+        // every atomic disassembles back to text this assembler accepts
+        for ins in &insns[..5] {
+            let text = format!("prog tuner t\n  {}\n  exit\n", disasm_one(ins, None));
+            let back = assemble(&text).unwrap();
+            assert_eq!(&back.progs[0].insns[0], ins, "{}", text);
+        }
+    }
+
+    #[test]
+    fn atomic_parse_errors() {
+        assert!(assemble("prog tuner t\n  lock sub64 [r1+0], r2\n  exit\n")
+            .unwrap_err()
+            .message
+            .contains("unknown atomic op"));
+        assert!(assemble("prog tuner t\n  lock add64\n  exit\n")
+            .unwrap_err()
+            .message
+            .contains("usage: lock"));
+        assert!(assemble("prog tuner t\n  cmpxchg64 r1, r2\n  exit\n").is_err());
     }
 
     #[test]

@@ -131,8 +131,32 @@ pub mod mode {
     pub const IND: u8 = 0x40;
     /// register + offset memory access
     pub const MEM: u8 = 0x60;
-    /// atomic read-modify-write (unsupported here)
+    /// atomic read-modify-write (`STX` class only; the sub-op lives
+    /// in `imm`, see [`super::atomic`])
     pub const ATOMIC: u8 = 0xc0;
+}
+
+/// Atomic sub-op selectors carried in `imm` on `STX | ATOMIC`
+/// instructions (the kernel's `BPF_ATOMIC` class, opcode 0xdb for
+/// 64-bit and 0xc3 for 32-bit). The arithmetic selectors reuse the
+/// ALU encodings; OR-ing in [`FETCH`] additionally loads the pre-op
+/// value into the source register.
+pub mod atomic {
+    /// `*(size*)(dst + off) += src`
+    pub const ADD: i32 = 0x00;
+    /// `*(size*)(dst + off) |= src`
+    pub const OR: i32 = 0x40;
+    /// `*(size*)(dst + off) &= src`
+    pub const AND: i32 = 0x50;
+    /// `*(size*)(dst + off) ^= src`
+    pub const XOR: i32 = 0xa0;
+    /// flag: also load the pre-op value into `src`
+    pub const FETCH: i32 = 0x01;
+    /// atomic exchange: `src = xchg(dst + off, src)` (always fetches)
+    pub const XCHG: i32 = 0xe1;
+    /// compare-and-exchange against r0: if `*(dst + off) == r0` store
+    /// `src`; the value observed in memory lands in r0 either way
+    pub const CMPXCHG: i32 = 0xf1;
 }
 
 /// `src_reg` pseudo values for `lddw` (BPF_LD | BPF_IMM | BPF_DW).
@@ -219,6 +243,26 @@ impl Insn {
     #[inline]
     pub fn is_lddw(&self) -> bool {
         self.opcode == (class::LD | size::DW | mode::IMM)
+    }
+
+    /// True for an atomic read-modify-write (`STX | ATOMIC`).
+    #[inline]
+    pub fn is_atomic(&self) -> bool {
+        self.class() == class::STX && self.mode() == mode::ATOMIC
+    }
+
+    /// Atomic sub-op (the `imm` field of an atomic instruction).
+    #[inline]
+    pub fn atomic_op(&self) -> i32 {
+        self.imm
+    }
+
+    /// True if this atomic writes the pre-op value back into a
+    /// register: `fetch`-flagged arithmetic and `xchg` overwrite the
+    /// source register, `cmpxchg` overwrites r0.
+    #[inline]
+    pub fn atomic_fetches(&self) -> bool {
+        self.imm & atomic::FETCH != 0
     }
 
     /// True if this is a bpf-to-bpf call (`call imm` with
@@ -314,6 +358,12 @@ pub fn stx(sz: u8, dst: u8, srcr: u8, off: i16) -> Insn {
 pub fn st_imm(sz: u8, dst: u8, off: i16, imm: i32) -> Insn {
     Insn::new(class::ST | sz | mode::MEM, dst, 0, off, imm)
 }
+/// atomic read-modify-write on `*(size*)(dst + off)`; `aop` is one of
+/// the [`atomic`] selectors (optionally OR'd with [`atomic::FETCH`]).
+/// `sz` must be [`size::W`] or [`size::DW`].
+pub fn atomic_insn(sz: u8, dst: u8, srcr: u8, off: i16, aop: i32) -> Insn {
+    Insn::new(class::STX | sz | mode::ATOMIC, dst, srcr, off, aop)
+}
 /// two-slot 64-bit immediate load; `src_reg` selects pseudo meaning
 pub fn lddw(dst: u8, srcr: u8, v: u64) -> [Insn; 2] {
     [
@@ -403,6 +453,28 @@ fn size_name(sz: u8) -> &'static str {
     }
 }
 
+/// Render an atomic instruction in the assembler's own syntax so the
+/// disassembly round-trips through `asm::assemble`.
+fn atomic_disasm(i: &Insn) -> String {
+    let w = if i.sz() == size::DW { "64" } else { "32" };
+    let arith = |name: &str, fetch: bool| {
+        if fetch {
+            format!("lock fetch{}{} r{}, [r{}{:+}]", name, w, i.src, i.dst, i.off)
+        } else {
+            format!("lock {}{} [r{}{:+}], r{}", name, w, i.dst, i.off, i.src)
+        }
+    };
+    match i.imm {
+        x if x == atomic::XCHG => format!("xchg{} r{}, [r{}{:+}]", w, i.src, i.dst, i.off),
+        x if x == atomic::CMPXCHG => format!("cmpxchg{} [r{}{:+}], r{}", w, i.dst, i.off, i.src),
+        x if x & !atomic::FETCH == atomic::ADD => arith("add", x & atomic::FETCH != 0),
+        x if x & !atomic::FETCH == atomic::OR => arith("or", x & atomic::FETCH != 0),
+        x if x & !atomic::FETCH == atomic::AND => arith("and", x & atomic::FETCH != 0),
+        x if x & !atomic::FETCH == atomic::XOR => arith("xor", x & atomic::FETCH != 0),
+        other => format!("atomic? imm={:#x}", other),
+    }
+}
+
 impl fmt::Debug for Insn {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}", disasm_one(self, None))
@@ -436,10 +508,13 @@ pub fn disasm_one(i: &Insn, next: Option<&Insn>) -> String {
                 "exit".to_string()
             } else if op == jmp::JA {
                 format!("ja {:+}", i.off)
-            } else if i.src_flag() == src::X {
-                format!("{} r{}, r{}, {:+}", jmp_name(op), i.dst, i.src, i.off)
             } else {
-                format!("{} r{}, {}, {:+}", jmp_name(op), i.dst, i.imm, i.off)
+                let sfx = if i.class() == class::JMP32 { "32" } else { "" };
+                if i.src_flag() == src::X {
+                    format!("{}{} r{}, r{}, {:+}", jmp_name(op), sfx, i.dst, i.src, i.off)
+                } else {
+                    format!("{}{} r{}, {}, {:+}", jmp_name(op), sfx, i.dst, i.imm, i.off)
+                }
             }
         }
         class::LDX => format!(
@@ -449,13 +524,13 @@ pub fn disasm_one(i: &Insn, next: Option<&Insn>) -> String {
             i.src,
             i.off
         ),
-        class::STX => format!(
-            "stx{} [r{}{:+}], r{}",
-            size_name(i.sz()),
-            i.dst,
-            i.off,
-            i.src
-        ),
+        class::STX => {
+            if i.mode() == mode::ATOMIC {
+                atomic_disasm(i)
+            } else {
+                format!("stx{} [r{}{:+}], r{}", size_name(i.sz()), i.dst, i.off, i.src)
+            }
+        }
         class::ST => format!(
             "st{} [r{}{:+}], {}",
             size_name(i.sz()),
@@ -552,6 +627,40 @@ mod tests {
         let p = ld_map_fd(1, 7);
         let text = disasm(&p);
         assert!(text.contains("map[7]"), "{}", text);
+    }
+
+    #[test]
+    fn atomic_encoding_and_predicates() {
+        let a = atomic_insn(size::DW, 1, 2, 8, atomic::ADD);
+        assert_eq!(a.opcode, 0xdb);
+        assert!(a.is_atomic());
+        assert!(!a.atomic_fetches());
+        let f = atomic_insn(size::W, 1, 2, 0, atomic::ADD | atomic::FETCH);
+        assert_eq!(f.opcode, 0xc3);
+        assert!(f.atomic_fetches());
+        assert!(atomic_insn(size::DW, 1, 2, 0, atomic::XCHG).atomic_fetches());
+        assert!(atomic_insn(size::DW, 1, 2, 0, atomic::CMPXCHG).atomic_fetches());
+        assert!(!stx(size::DW, 1, 2, 0).is_atomic());
+        let back = Insn::decode(&a.encode());
+        assert_eq!(back, a);
+        assert!(back.is_atomic());
+    }
+
+    #[test]
+    fn atomic_disasm_syntax() {
+        let cases = [
+            (atomic_insn(size::DW, 1, 2, 8, atomic::ADD), "lock add64 [r1+8], r2"),
+            (atomic_insn(size::W, 1, 2, 4, atomic::AND), "lock and32 [r1+4], r2"),
+            (
+                atomic_insn(size::DW, 1, 2, 0, atomic::ADD | atomic::FETCH),
+                "lock fetchadd64 r2, [r1+0]",
+            ),
+            (atomic_insn(size::W, 3, 4, 0, atomic::XCHG), "xchg32 r4, [r3+0]"),
+            (atomic_insn(size::DW, 1, 2, 16, atomic::CMPXCHG), "cmpxchg64 [r1+16], r2"),
+        ];
+        for (ins, want) in cases {
+            assert_eq!(disasm_one(&ins, None), want);
+        }
     }
 
     #[test]

@@ -52,7 +52,7 @@
 //! path it replaces.
 
 use super::helpers::{id as hid, HelperEnv};
-use super::insn::{alu, jmp, size};
+use super::insn::{alu, atomic, jmp, size};
 use super::interp::{Op, MAX_TAIL_CALLS, TAIL_DEPTH};
 use super::maps::{Map, MapKind, RINGBUF_DISCARD_BIT, RINGBUF_HDR_SIZE, RINGBUF_LEN_MASK};
 use super::program::resolve_tail_call;
@@ -100,6 +100,7 @@ const RSI: u8 = 6;
 const RDI: u8 = 7;
 const R8: u8 = 8;
 const R9: u8 = 9;
+const R10: u8 = 10;
 const R11: u8 = 11;
 const R12: u8 = 12;
 const R13: u8 = 13;
@@ -455,6 +456,67 @@ fn emit_direct_call(e: &mut Emit, map: Option<u64>, target: u64) {
     e.u8(0x41);
     e.u8(0xff);
     e.modrm(0b11, 2, R11);
+}
+
+/// The `and`/`or`/`xor` atomics (fetch and fetchless) have no
+/// single-instruction x86 lowering that also observes the old value
+/// atomically, so they compile to the kernel-JIT cmpxchg retry loop:
+/// observe, compute the new value in a scratch register, `lock
+/// cmpxchg`, retry if another thread won the race. `r9`/`r10`/`r11`
+/// are scratch; BPF r0 (`rax`, the implicit cmpxchg comparand) is
+/// saved and restored around the loop unless the op fetches into it.
+fn emit_atomic_loop(e: &mut Emit, aop: i32, d: u8, s: u8, off: i16, w: bool) -> Option<()> {
+    let opcode = match aop & !atomic::FETCH {
+        atomic::AND => 0x21,
+        atomic::OR => 0x09,
+        atomic::XOR => 0x31,
+        _ => return None,
+    };
+    let fetch = aop & atomic::FETCH != 0;
+    e.push(RAX); // save BPF r0: the loop owns rax
+    e.mov_rr(R9, d); // base pointer (d may be rax)
+    e.mov_rr(R10, s); // value operand (s may be rax)
+    // mov (e)ax, [r9 + off] — the initial observation
+    e.rex(w, RAX, R9);
+    e.u8(0x8b);
+    e.mem(RAX, R9, off as i32);
+    let retry = e.code.len();
+    if w {
+        e.mov_rr(R11, RAX);
+    } else {
+        e.mov_rr32(R11, RAX);
+    }
+    e.alu_rr(opcode, R11, R10, w); // r11 = old OP operand
+    // lock cmpxchg [r9 + off], r11 — succeeds iff memory still holds
+    // rax; on failure rax receives the value that beat us
+    e.u8(0xf0);
+    e.rex(w, R11, R9);
+    e.u8(0x0f);
+    e.u8(0xb1);
+    e.mem(R11, R9, off as i32);
+    // jne retry (rel8 — the loop body is ~20 bytes)
+    e.u8(0x75);
+    let rel = retry as i64 - (e.code.len() as i64 + 1);
+    e.u8(rel as i8 as u8);
+    // rax now holds the pre-op value (32-bit forms zero-extended by
+    // the 32-bit load / cmpxchg writeback)
+    if fetch {
+        if s == RAX {
+            // the fetch destination IS r0: keep the old value in rax
+            // and drop the saved copy (add rsp, 8)
+            e.alu_imm(0, RSP, 8, true);
+        } else {
+            if w {
+                e.mov_rr(s, RAX);
+            } else {
+                e.mov_rr32(s, RAX);
+            }
+            e.pop(RAX);
+        }
+    } else {
+        e.pop(RAX);
+    }
+    Some(())
 }
 
 /// Inline `bpf_ringbuf_submit`/`discard`: the record header is the
@@ -910,6 +972,54 @@ impl JitProgram {
                         }
                     }
                 }
+                Op::Atomic { aop, dst, src, off, is64 } => {
+                    let d = REGMAP[dst as usize];
+                    let s = REGMAP[src as usize];
+                    match aop {
+                        x if x == atomic::ADD => {
+                            // lock add [d + off], s
+                            e.u8(0xf0);
+                            e.rex(is64, s, d);
+                            e.u8(0x01);
+                            e.mem(s, d, off as i32);
+                        }
+                        x if x == atomic::ADD | atomic::FETCH => {
+                            // lock xadd [d + off], s — s receives the
+                            // old value (32-bit writes zero-extend)
+                            e.u8(0xf0);
+                            e.rex(is64, s, d);
+                            e.u8(0x0f);
+                            e.u8(0xc1);
+                            e.mem(s, d, off as i32);
+                        }
+                        x if x == atomic::XCHG => {
+                            // xchg with a memory operand is implicitly
+                            // locked
+                            e.rex(is64, s, d);
+                            e.u8(0x87);
+                            e.mem(s, d, off as i32);
+                        }
+                        x if x == atomic::CMPXCHG => {
+                            // lock cmpxchg [d + off], s: rax IS BPF r0
+                            // in our REGMAP, so the comparand and the
+                            // observed-value destination need no
+                            // shuffling. (dst == r0 cannot reach the
+                            // JIT: the verifier requires a scalar r0.)
+                            e.u8(0xf0);
+                            e.rex(is64, s, d);
+                            e.u8(0x0f);
+                            e.u8(0xb1);
+                            e.mem(s, d, off as i32);
+                            if !is64 {
+                                // the success path leaves eax
+                                // unwritten — force the zero-extension
+                                // the BPF ISA promises for 32-bit r0
+                                e.mov_rr32(RAX, RAX);
+                            }
+                        }
+                        _ => emit_atomic_loop(&mut e, aop, d, s, off, is64)?,
+                    }
+                }
                 Op::Ja { t } => {
                     e.u8(0xe9);
                     fixups.push((e.code.len(), t));
@@ -1316,6 +1426,105 @@ mod tests {
         let r = jit_run(&prog, ctx.as_mut_ptr(), &env());
         assert_eq!(r, 131); // 124 + 7
         assert_eq!(u32::from_le_bytes(ctx[8..12].try_into().unwrap()), 124);
+    }
+
+    #[test]
+    fn atomics_match_interp() {
+        // each case: run interp and JIT on identical 8-aligned
+        // buffers, compare r0 AND final memory
+        let progs: Vec<Vec<Insn>> = vec![
+            // lock add64 (fetchless)
+            vec![mov64_imm(2, 5), atomic_insn(size::DW, 1, 2, 0, atomic::ADD), mov64_imm(0, 0), exit()],
+            // lock fetchadd64: r0 = old value
+            vec![
+                mov64_imm(2, 5),
+                atomic_insn(size::DW, 1, 2, 0, atomic::ADD | atomic::FETCH),
+                mov64_reg(0, 2),
+                exit(),
+            ],
+            // fetchadd into r0 itself (s == rax path)
+            vec![
+                mov64_imm(0, 3),
+                atomic_insn(size::DW, 1, 0, 0, atomic::ADD | atomic::FETCH),
+                exit(),
+            ],
+            // 32-bit fetchadd zero-extends
+            vec![
+                mov64_imm(2, -1),
+                atomic_insn(size::W, 1, 2, 0, atomic::ADD | atomic::FETCH),
+                mov64_reg(0, 2),
+                exit(),
+            ],
+            // xchg64
+            vec![
+                mov64_imm(2, 99),
+                atomic_insn(size::DW, 1, 2, 8, atomic::XCHG),
+                mov64_reg(0, 2),
+                exit(),
+            ],
+            // cmpxchg64 success (mem[0]=10, compare 10)
+            vec![
+                mov64_imm(0, 10),
+                mov64_imm(2, 77),
+                atomic_insn(size::DW, 1, 2, 0, atomic::CMPXCHG),
+                exit(),
+            ],
+            // cmpxchg64 failure (compare 11 != 10): r0 = observed 10
+            vec![
+                mov64_imm(0, 11),
+                mov64_imm(2, 77),
+                atomic_insn(size::DW, 1, 2, 0, atomic::CMPXCHG),
+                exit(),
+            ],
+            // cmpxchg32: success path must still zero-extend r0
+            {
+                let hi = lddw(0, 0, 0xdead_beef_0000_000a);
+                vec![
+                    hi[0],
+                    hi[1],
+                    mov64_imm(2, 4),
+                    atomic_insn(size::W, 1, 2, 0, atomic::CMPXCHG),
+                    exit(),
+                ]
+            },
+            // cmpxchg loop forms: and/or/xor, fetch and fetchless
+            vec![mov64_imm(2, 6), atomic_insn(size::DW, 1, 2, 0, atomic::AND), mov64_imm(0, 0), exit()],
+            vec![
+                mov64_imm(2, 0x101),
+                atomic_insn(size::DW, 1, 2, 0, atomic::OR | atomic::FETCH),
+                mov64_reg(0, 2),
+                exit(),
+            ],
+            vec![
+                mov64_imm(2, 0xff),
+                atomic_insn(size::W, 1, 2, 8, atomic::XOR | atomic::FETCH),
+                mov64_reg(0, 2),
+                exit(),
+            ],
+            // fetch-and into r0 itself through the loop lowering
+            vec![
+                mov64_imm(0, 0xf0),
+                atomic_insn(size::DW, 1, 0, 0, atomic::AND | atomic::FETCH),
+                exit(),
+            ],
+            // dst in r0 (rax as base pointer) for the loop lowering
+            vec![
+                mov64_reg(0, 1),
+                mov64_imm(2, 0x0f),
+                atomic_insn(size::DW, 0, 2, 0, atomic::XOR),
+                mov64_imm(0, 0),
+                exit(),
+            ],
+        ];
+        for (i, p) in progs.iter().enumerate() {
+            let mut mem_i = [10u64, 0u64];
+            let mut mem_j = [10u64, 0u64];
+            let ops = interp::predecode(p).unwrap();
+            let want = unsafe { interp::execute(&ops, mem_i.as_mut_ptr() as *mut u8, &env()) };
+            let got = jit_run(p, mem_j.as_mut_ptr() as *mut u8, &env());
+            assert_eq!(got, want, "program {}: r0 mismatch", i);
+            assert_eq!(mem_j, mem_i, "program {}: final memory mismatch", i);
+        }
     }
 
     #[test]

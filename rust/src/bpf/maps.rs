@@ -271,8 +271,10 @@ pub struct Map {
     pub def: MapDef,
     /// registry-assigned live id (what `lddw rX, map[id]` resolves to)
     pub id: u32,
-    /// value storage: max_entries * value_size (× NCPU for per-cpu).
-    values: Box<[UnsafeCell<u8>]>,
+    /// value storage: max_entries * value_size (× NCPU for per-cpu);
+    /// 8-aligned so verified atomic instructions can overlay
+    /// `AtomicU32`/`AtomicU64` on any naturally-aligned offset.
+    values: AlignedBytes,
     /// hash maps only: key storage, max_entries * key_size.
     keys: Box<[UnsafeCell<u8>]>,
     /// hash maps only: slot occupancy flags.
@@ -331,6 +333,37 @@ fn zeroed_cells(n: usize) -> Box<[UnsafeCell<u8>]> {
     v.into_boxed_slice()
 }
 
+/// Zero-initialized byte storage with guaranteed 8-byte alignment
+/// (u64 words under the hood). A plain `Box<[UnsafeCell<u8>]>` only
+/// promises 1-byte alignment, but the atomic instruction class
+/// overlays `AtomicU32`/`AtomicU64` onto map-value memory — both the
+/// interpreter and the JIT's `lock`-prefixed ops require the base to
+/// be naturally aligned so the verifier's offset-alignment rule
+/// (relative to this base) is sufficient.
+pub(crate) struct AlignedBytes {
+    words: Box<[UnsafeCell<u64>]>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    fn zeroed(len: usize) -> AlignedBytes {
+        let mut v = Vec::with_capacity(len.div_ceil(8));
+        v.resize_with(len.div_ceil(8), || UnsafeCell::new(0u64));
+        AlignedBytes { words: v.into_boxed_slice(), len }
+    }
+
+    /// Base byte pointer (8-aligned, stable for the map's lifetime).
+    #[inline]
+    fn as_ptr(&self) -> *mut u8 {
+        self.words.as_ptr() as *mut u8
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
 impl Map {
     /// Allocate a map instance for `def` under registry id `id`.
     pub fn new(def: MapDef, id: u32) -> Result<Map, String> {
@@ -341,13 +374,13 @@ impl Map {
             // boundary-crossing record writes contiguously into
             // (emulating the kernel's double-mapped pages), so producer
             // and consumer never have to split a record.
-            MapKind::RingBuf => zeroed_cells(0),
+            MapKind::RingBuf => AlignedBytes::zeroed(0),
             // prog-array slots live in `progs`, not byte storage
-            MapKind::ProgArray => zeroed_cells(0),
+            MapKind::ProgArray => AlignedBytes::zeroed(0),
             MapKind::PerCpuArray => {
-                zeroed_cells(def.max_entries as usize * NCPU * def.value_size as usize)
+                AlignedBytes::zeroed(def.max_entries as usize * NCPU * def.value_size as usize)
             }
-            _ => zeroed_cells(def.max_entries as usize * def.value_size as usize),
+            _ => AlignedBytes::zeroed(def.max_entries as usize * def.value_size as usize),
         };
         let (keys, slots) = if def.kind == MapKind::Hash {
             let keys = zeroed_cells(def.max_entries as usize * def.key_size as usize);
@@ -377,7 +410,7 @@ impl Map {
     #[inline]
     fn value_ptr_at(&self, index: usize) -> *mut u8 {
         debug_assert!((index + 1) * self.def.value_size as usize <= self.values.len());
-        unsafe { self.values.as_ptr().add(index * self.def.value_size as usize) as *mut u8 }
+        unsafe { self.values.as_ptr().add(index * self.def.value_size as usize) }
     }
 
     /// Base pointer of the contiguous value storage (`Array` /
@@ -388,7 +421,7 @@ impl Map {
     /// owned by a `LoadedProgram` that also owns an `Arc` to this map).
     #[inline]
     pub(crate) fn value_base_ptr(&self) -> *mut u8 {
-        self.values.as_ptr() as *mut u8
+        self.values.as_ptr()
     }
 
     #[inline]

@@ -95,7 +95,7 @@
 
 use super::analysis;
 use super::helpers::{self, ArgType, ProgType, RetType};
-use super::insn::{alu, class, jmp, mode, pseudo, src, Insn, NREGS, STACK_SIZE};
+use super::insn::{alu, atomic, class, jmp, mode, pseudo, size, src, Insn, NREGS, STACK_SIZE};
 use super::maps::{MapDef, MapKind, RINGBUF_HDR_SIZE, RINGBUF_LEN_MASK};
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
@@ -279,6 +279,8 @@ pub struct VerifyInfo {
     /// units, tail-call chain factor included (×34 when the program
     /// can `bpf_tail_call`)
     pub max_cost: u64,
+    /// atomic (`STX|ATOMIC`) instructions in the program (static count)
+    pub atomic_insns: u64,
 }
 
 /// Per-load verification-cost stats: the counters behind `ncclbpf
@@ -302,6 +304,8 @@ pub struct VerifierStats {
     pub dead_insns: u64,
     /// certified worst-case invocation cost (tail-call factor included)
     pub max_cost: u64,
+    /// atomic (`STX|ATOMIC`) instructions in the program
+    pub atomic_insns: u64,
 }
 
 impl VerifyInfo {
@@ -316,6 +320,7 @@ impl VerifyInfo {
             bounds_elided: self.bounds_elided,
             dead_insns: self.dead_insns,
             max_cost: self.max_cost,
+            atomic_insns: self.atomic_insns,
         }
     }
 }
@@ -684,6 +689,7 @@ impl<'a> Verifier<'a> {
         }
         self.check_structure()?;
         self.info.subprogs = (self.subprogs.len() - 1) as u32;
+        self.info.atomic_insns = self.insns.iter().filter(|i| i.is_atomic()).count() as u64;
         self.prune_points = self.compute_prune_points();
         if self.prune {
             self.bounds_live = self.compute_bounds_liveness();
@@ -1068,9 +1074,26 @@ impl<'a> Verifier<'a> {
             }
             class::LD | class::LDX => out & !bit(ins.dst),
             class::ST => out,
-            // conservative: an 8-byte spill preserves the interval and
-            // a later restore may need it
-            class::STX => out | bit(ins.src),
+            class::STX => {
+                if ins.mode() == mode::ATOMIC {
+                    // atomics neither spill intervals nor consult the
+                    // value operand's range, but the fetch forms and
+                    // xchg REDEFINE the source register (and cmpxchg
+                    // redefines r0) with an unknown scalar — incoming
+                    // bounds for the redefined register are moot
+                    if ins.imm == atomic::CMPXCHG {
+                        out & !bit(0)
+                    } else if ins.atomic_fetches() {
+                        out & !bit(ins.src)
+                    } else {
+                        out
+                    }
+                } else {
+                    // conservative: an 8-byte spill preserves the
+                    // interval and a later restore may need it
+                    out | bit(ins.src)
+                }
+            }
             class::JMP | class::JMP32 => {
                 let op = ins.op();
                 if op == jmp::EXIT {
@@ -1707,9 +1730,183 @@ impl<'a> Verifier<'a> {
         self.set_reg(st, ins.dst, loaded, pc)
     }
 
+    /// `STX | ATOMIC`: read-modify-write, confined to map-value memory.
+    ///
+    /// The rules mirror the kernel with one deliberate narrowing: the
+    /// kernel also admits stack atomics, we restrict to map values —
+    /// the only memory in this runtime that is both shared across
+    /// concurrent executions and backed by 8-aligned storage. Ctx is
+    /// per-invocation input/output (no alignment promise), stack is
+    /// private to the frame, and a ringbuf record is unpublished
+    /// private memory until submit — an atomic there is a bug in the
+    /// policy, so all three are rejected outright.
+    ///
+    /// Register effects: fetch-flagged arithmetic and `xchg` overwrite
+    /// the source register with the old value; `cmpxchg` reads r0 as
+    /// the compare operand and clobbers it with the observed value.
+    fn atomic_store(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
+        let width = match ins.sz() {
+            size::W => 4u64,
+            size::DW => 8u64,
+            _ => {
+                return Err(self.err(
+                    pc,
+                    "atomic operand must be 32- or 64-bit (byte/halfword atomics \
+                     do not exist)"
+                        .into(),
+                ))
+            }
+        };
+        let aop = ins.imm;
+        let known = matches!(aop, atomic::XCHG | atomic::CMPXCHG)
+            || matches!(
+                aop & !atomic::FETCH,
+                atomic::ADD | atomic::OR | atomic::AND | atomic::XOR
+            );
+        if !known {
+            return Err(self.err(pc, format!("unknown atomic operation imm={:#x}", aop)));
+        }
+        // the value operand must be an initialized non-pointer
+        let val = self.reg(st, ins.src, pc)?;
+        if val.is_pointer() {
+            return Err(self.err(
+                pc,
+                format!("atomic store of pointer R{} into a map value is not allowed", ins.src),
+            ));
+        }
+        let base = self.reg(st, ins.dst, pc)?;
+        let off = ins.off as i64;
+        match base {
+            Reg::MapValue { off: po, span, vsize, .. } => {
+                let a = po + off;
+                if a < 0 || (a as u64 + span + width) > vsize as u64 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "map value access out of bounds: offset {}..{} width {} exceeds \
+                             value_size {}",
+                            a,
+                            a + span as i64,
+                            width,
+                            vsize
+                        ),
+                    ));
+                }
+                // natural alignment: map value bases are 8-aligned, so
+                // the offset check is sufficient. A variable offset
+                // (span > 0) may take ANY value in its interval — the
+                // interval domain cannot prove alignment, so the
+                // offset must be refined to a constant first.
+                if span > 0 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "misaligned atomic access: variable offset {}..{} cannot prove \
+                             {}-byte alignment (refine the offset to a constant first)",
+                            a,
+                            a + span as i64,
+                            width
+                        ),
+                    ));
+                }
+                if a as u64 % width != 0 {
+                    return Err(self.err(
+                        pc,
+                        format!(
+                            "misaligned atomic access: offset {} is not {}-byte aligned",
+                            a, width
+                        ),
+                    ));
+                }
+            }
+            Reg::CtxPtr { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "atomic op on ctx pointer R{} is not allowed (atomics require \
+                         map-value memory)",
+                        ins.dst
+                    ),
+                ));
+            }
+            Reg::StackPtr { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "atomic op on stack pointer R{} is not allowed (atomics require \
+                         map-value memory)",
+                        ins.dst
+                    ),
+                ));
+            }
+            Reg::RingBufMem { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "atomic op on ringbuf record pointer R{} is not allowed (atomics \
+                         require map-value memory)",
+                        ins.dst
+                    ),
+                ));
+            }
+            Reg::MapValueOrNull { .. } | Reg::RingBufMemOrNull { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} is a pointer to {}; must check != NULL before \
+                         dereference",
+                        ins.dst,
+                        base.type_name()
+                    ),
+                ));
+            }
+            Reg::RingBufReleased { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!(
+                        "R{} points into a ringbuf record that was already \
+                         submitted/discarded (use after release)",
+                        ins.dst
+                    ),
+                ));
+            }
+            Reg::Scalar { .. } => {
+                return Err(self.err(
+                    pc,
+                    format!("R{} is a scalar; cannot dereference (possible NULL deref)", ins.dst),
+                ));
+            }
+            other => {
+                return Err(self.err(
+                    pc,
+                    format!("cannot store through R{} ({})", ins.dst, other.type_name()),
+                ));
+            }
+        }
+        if aop == atomic::CMPXCHG {
+            // r0 is the implicit compare operand and receives the
+            // value observed in memory
+            let r0 = self.reg(st, 0, pc)?;
+            if r0.is_pointer() {
+                return Err(self.err(
+                    pc,
+                    "cmpxchg compare operand r0 must be a scalar, not a pointer".into(),
+                ));
+            }
+            self.set_reg(st, 0, Reg::scalar_unknown(), pc)?;
+        } else if ins.atomic_fetches() {
+            self.set_reg(st, ins.src, Reg::scalar_unknown(), pc)?;
+        }
+        Ok(())
+    }
+
     fn store(&mut self, pc: usize, ins: &Insn, st: &mut State) -> VResult<()> {
         if ins.mode() == mode::ATOMIC {
-            return Err(self.err(pc, "atomic memory ops not supported".into()));
+            if ins.class() != class::STX {
+                return Err(self
+                    .err(pc, "invalid ST|ATOMIC encoding (atomics are STX-class only)".into()));
+            }
+            return self.atomic_store(pc, ins, st);
         }
         let base = self.reg(st, ins.dst, pc)?;
         let width = ins.access_width();
@@ -3084,6 +3281,238 @@ mod tests {
         p.push(exit());
         let e = fails(&p);
         assert!(e.message.contains("out of bounds"), "{}", e.message);
+    }
+
+    /// lookup key 0, null-check — ends with r0 = MapValue (vsize 16)
+    fn lookup_preamble() -> Vec<Insn> {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1));
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p
+    }
+
+    #[test]
+    fn atomic_on_map_value_ok_and_counted() {
+        let mut p = lookup_preamble();
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 8, atomic::ADD));
+        p.push(atomic_insn(size::W, 0, 2, 4, atomic::ADD | atomic::FETCH));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let info = ok(&p);
+        assert_eq!(info.atomic_insns, 2);
+        // non-atomic programs report zero
+        assert_eq!(ok(&[mov64_imm(0, 0), exit()]).atomic_insns, 0);
+    }
+
+    #[test]
+    fn atomic_on_ctx_rejected() {
+        let e = fails(&[
+            mov64_imm(2, 1),
+            atomic_insn(size::DW, 1, 2, 32, atomic::ADD),
+            mov64_imm(0, 0),
+            exit(),
+        ]);
+        assert!(e.message.contains("ctx pointer"), "{}", e.message);
+        assert!(e.message.contains("map-value memory"), "{}", e.message);
+    }
+
+    #[test]
+    fn atomic_on_stack_rejected() {
+        let e = fails(&[
+            st_imm(size::DW, 10, -8, 0),
+            mov64_imm(2, 1),
+            atomic_insn(size::DW, 10, 2, -8, atomic::ADD),
+            mov64_imm(0, 0),
+            exit(),
+        ]);
+        assert!(e.message.contains("stack pointer"), "{}", e.message);
+    }
+
+    #[test]
+    fn atomic_on_ringbuf_record_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 9));
+        p.push(mov64_imm(2, 16));
+        p.push(mov64_imm(3, 0));
+        p.push(call(131)); // bpf_ringbuf_reserve
+        p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 0, atomic::ADD));
+        p.push(mov64_reg(1, 0));
+        p.push(mov64_imm(2, 0));
+        p.push(call(132)); // submit
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = verify(&p, ProgType::Profiler, &prof_ctx(), &ring_maps())
+            .expect_err("should be rejected");
+        assert!(e.message.contains("ringbuf record"), "{}", e.message);
+    }
+
+    #[test]
+    fn atomic_misaligned_rejected() {
+        let mut p = lookup_preamble();
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 4, atomic::ADD)); // 4 % 8 != 0
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("misaligned atomic"), "{}", e.message);
+        // 32-bit atomics only need 4-byte alignment: off 4 is fine
+        let mut p2 = lookup_preamble();
+        p2.push(mov64_imm(2, 1));
+        p2.push(atomic_insn(size::W, 0, 2, 4, atomic::ADD));
+        p2.push(mov64_imm(0, 0));
+        p2.push(exit());
+        ok(&p2);
+    }
+
+    #[test]
+    fn atomic_variable_offset_rejected() {
+        // a bounded-but-variable offset cannot prove alignment in the
+        // interval domain — must refine to a constant first
+        let mut p = lookup_preamble();
+        p.push(ldx(size::W, 3, 1, 0)); // unknown scalar from ctx
+        p.push(jmp_imm(jmp::JGT, 3, 8, 3)); // if r3 > 8 skip (r3 in [0,8])
+        p.push(alu64_reg(alu::ADD, 0, 3));
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 0, atomic::ADD));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(
+            e.message.contains("misaligned atomic") && e.message.contains("variable offset"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn atomic_oob_rejected() {
+        let mut p = lookup_preamble();
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 16, atomic::ADD)); // 16 + 8 > 16
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("out of bounds"), "{}", e.message);
+    }
+
+    #[test]
+    fn atomic_through_unchecked_lookup_rejected() {
+        let mut p = vec![];
+        p.extend(ld_map_fd(1, 7));
+        p.push(st_imm(size::W, 10, -4, 0));
+        p.push(mov64_reg(2, 10));
+        p.push(alu64_imm(alu::ADD, 2, -4));
+        p.push(call(1));
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 0, atomic::ADD)); // no null check — BUG
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(
+            e.message.contains("map_value_or_null") && e.message.contains("!= NULL"),
+            "{}",
+            e.message
+        );
+    }
+
+    #[test]
+    fn atomic_pointer_value_operand_rejected() {
+        let mut p = lookup_preamble();
+        p.push(mov64_reg(2, 0)); // r2 = map value pointer
+        p.push(atomic_insn(size::DW, 0, 2, 0, atomic::XCHG)); // would leak a pointer
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("pointer"), "{}", e.message);
+    }
+
+    #[test]
+    fn cmpxchg_reads_and_clobbers_r0() {
+        // r0 still holds the map-value pointer: using it as the
+        // compare operand must be rejected
+        let mut p = lookup_preamble();
+        p.push(mov64_reg(6, 0));
+        p.push(mov64_imm(2, 7));
+        p.push(atomic_insn(size::DW, 6, 2, 0, atomic::CMPXCHG));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("cmpxchg compare operand"), "{}", e.message);
+
+        // with a scalar r0 the op verifies, and afterwards r0 is a
+        // scalar — dereferencing it must fail
+        let mut p2 = lookup_preamble();
+        p2.push(mov64_reg(6, 0));
+        p2.push(mov64_imm(0, 5));
+        p2.push(mov64_imm(2, 7));
+        p2.push(atomic_insn(size::DW, 6, 2, 0, atomic::CMPXCHG));
+        p2.push(exit()); // r0 = observed value (scalar) — valid return
+        ok(&p2);
+
+        let mut p3 = lookup_preamble();
+        p3.push(mov64_reg(6, 0));
+        p3.push(mov64_imm(0, 5));
+        p3.push(mov64_imm(2, 7));
+        p3.push(atomic_insn(size::DW, 6, 2, 0, atomic::CMPXCHG));
+        p3.push(ldx(size::DW, 3, 0, 0)); // r0 is a scalar now — BUG
+        p3.push(mov64_imm(0, 0));
+        p3.push(exit());
+        let e3 = fails(&p3);
+        assert!(e3.message.contains("scalar"), "{}", e3.message);
+    }
+
+    #[test]
+    fn atomic_fetch_overwrites_source_register() {
+        // after fetchadd, the source register is a scalar — using it
+        // as a pointer must fail
+        let mut p = lookup_preamble();
+        p.push(mov64_reg(6, 0));
+        p.push(mov64_reg(2, 6)); // r2 = pointer — rejected as value operand
+        p.push(atomic_insn(size::DW, 6, 2, 0, atomic::ADD | atomic::FETCH));
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        fails(&p);
+
+        // scalar value operand: verifies, and r2 is unknown after
+        let mut p2 = lookup_preamble();
+        p2.push(mov64_reg(6, 0));
+        p2.push(mov64_imm(2, 3));
+        p2.push(atomic_insn(size::DW, 6, 2, 0, atomic::ADD | atomic::FETCH));
+        p2.push(mov64_reg(0, 2)); // old value is a legal return
+        p2.push(exit());
+        ok(&p2);
+    }
+
+    #[test]
+    fn atomic_uninit_source_rejected() {
+        let mut p = lookup_preamble();
+        p.push(atomic_insn(size::DW, 0, 5, 0, atomic::ADD)); // r5 never written
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("uninit"), "{}", e.message);
+    }
+
+    #[test]
+    fn atomic_unknown_subop_rejected() {
+        let mut p = lookup_preamble();
+        p.push(mov64_imm(2, 1));
+        p.push(atomic_insn(size::DW, 0, 2, 0, 0x10)); // SUB has no atomic form
+        p.push(mov64_imm(0, 0));
+        p.push(exit());
+        let e = fails(&p);
+        assert!(e.message.contains("unknown atomic operation"), "{}", e.message);
     }
 
     #[test]

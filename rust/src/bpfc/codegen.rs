@@ -20,7 +20,7 @@
 
 use super::ast::*;
 use crate::bpf::helpers;
-use crate::bpf::insn::{self, alu, class, jmp, size, src, Insn};
+use crate::bpf::insn::{self, alu, atomic, class, jmp, size, src, Insn};
 use crate::bpf::maps::MapDef;
 use crate::bpf::object::{ObjProgram, Object, Reloc};
 use crate::host::ctx as abi;
@@ -563,6 +563,13 @@ impl<'a> FnCtx<'a> {
             return Ok((out, CType::Scalar));
         }
 
+        // atomic read-modify-write builtins: expression position keeps
+        // the fetching form (the old value is the result); statement
+        // position goes through the fetchless path in `stmt`
+        if let Some(aop) = Self::atomic_builtin(name) {
+            return self.eval_atomic(name, aop, args, true);
+        }
+
         // builtins
         if name == "min" || name == "max" {
             if args.len() != 2 {
@@ -645,6 +652,94 @@ impl<'a> FnCtx<'a> {
             Some(s) => Ok((out, CType::Ptr(s))),
             None => Ok((out, CType::Scalar)),
         }
+    }
+
+    /// `__sync_*` atomic builtin → the BPF atomic sub-op it maps to
+    /// (the FETCH flag is decided by expression vs statement position).
+    fn atomic_builtin(name: &str) -> Option<i32> {
+        Some(match name {
+            "__sync_fetch_and_add" => atomic::ADD,
+            "__sync_fetch_and_and" => atomic::AND,
+            "__sync_fetch_and_or" => atomic::OR,
+            "__sync_fetch_and_xor" => atomic::XOR,
+            "__sync_lock_test_and_set" => atomic::XCHG,
+            "__sync_val_compare_and_swap" => atomic::CMPXCHG,
+            _ => return None,
+        })
+    }
+
+    /// Resolve the `&ptr->field` target of an atomic builtin to
+    /// (base register, byte offset, access width). The verifier will
+    /// insist the base is a null-checked map value pointer and the
+    /// field naturally aligned — both come out of the struct layout.
+    fn eval_atomic_target(&mut self, e: &Expr) -> CResult<(u8, i16, u8)> {
+        let Expr::AddrOf(inner) = e else {
+            return cerr("atomic builtins take '&ptr->field' as their first argument");
+        };
+        let Expr::Arrow(base, field) = &**inner else {
+            return cerr("atomic builtins take '&ptr->field' where ptr is a map value pointer");
+        };
+        let (br, bty) = self.eval(base)?;
+        let CType::Ptr(sname) = bty else {
+            return cerr(format!("'->{}' applied to non-pointer", field));
+        };
+        let (off, fsz) = {
+            let sd = self.struct_of(&sname)?;
+            let f = sd.field(field).ok_or(CompileError {
+                message: format!("struct '{}' has no field '{}'", sname, field),
+            })?;
+            (f.offset, f.ty.size())
+        };
+        let w = if fsz == 4 { size::W } else { size::DW };
+        Ok((br, off as i16, w))
+    }
+
+    /// Emit one atomic builtin. `fetch` selects the BPF_FETCH form for
+    /// the arithmetic ops (`xchg`/`cmpxchg` always produce the old
+    /// value); the fetchless forms are only reachable from statement
+    /// position, where the result register is discarded unread.
+    fn eval_atomic(
+        &mut self,
+        name: &str,
+        aop: i32,
+        args: &[Expr],
+        fetch: bool,
+    ) -> CResult<(u8, CType)> {
+        if aop == atomic::CMPXCHG {
+            if args.len() != 3 {
+                return cerr(format!("{} takes 3 arguments (&ptr->field, expected, desired)", name));
+            }
+            let (pb, off, w) = self.eval_atomic_target(&args[0])?;
+            let (re, _) = self.eval(&args[1])?;
+            let (rd, _) = self.eval(&args[2])?;
+            // r0 is cmpxchg's implicit compare operand and receives
+            // the observed value; nothing lives in r0 between
+            // statements in this codegen
+            self.emit(insn::mov64_reg(0, re));
+            self.free_reg(re);
+            self.emit(insn::atomic_insn(w, pb, rd, off, atomic::CMPXCHG));
+            self.free_reg(rd);
+            self.free_reg(pb);
+            let out = self.alloc_reg()?;
+            self.emit(insn::mov64_reg(out, 0));
+            return Ok((out, CType::Scalar));
+        }
+        if args.len() != 2 {
+            return cerr(format!("{} takes 2 arguments (&ptr->field, value)", name));
+        }
+        let (pb, off, w) = self.eval_atomic_target(&args[0])?;
+        let (rv, _) = self.eval(&args[1])?;
+        let op = if aop == atomic::XCHG {
+            atomic::XCHG
+        } else if fetch {
+            aop | atomic::FETCH
+        } else {
+            aop
+        };
+        self.emit(insn::atomic_insn(w, pb, rv, off, op));
+        self.free_reg(pb);
+        // the fetching forms leave the old value in the source register
+        Ok((rv, CType::Scalar))
     }
 
     // ---------------------------------------------------------------------
@@ -741,6 +836,18 @@ impl<'a> FnCtx<'a> {
                 Ok(())
             }
             Stmt::ExprStmt(e) => {
+                // statement-position arithmetic atomics drop
+                // BPF_FETCH: the old value is unused, so the cheaper
+                // fetchless encoding is emitted
+                if let Expr::Call(name, args) = e {
+                    if let Some(aop) = Self::atomic_builtin(name) {
+                        if aop != atomic::XCHG && aop != atomic::CMPXCHG {
+                            let (r, _) = self.eval_atomic(name, aop, args, false)?;
+                            self.free_reg(r);
+                            return Ok(());
+                        }
+                    }
+                }
                 let (r, _) = self.eval(e)?;
                 self.free_reg(r);
                 Ok(())
@@ -1087,6 +1194,80 @@ int f(struct policy_context *ctx) {
 "#;
         let progs = compile_and_load(src);
         assert_eq!(run_tuner(&progs, 0).n_channels, 45);
+    }
+
+    #[test]
+    fn sync_atomics_end_to_end() {
+        // statement position compiles fetchless, expression position
+        // fetches the old value, cmpxchg success + failure both
+        // observable through n_channels across runs
+        let src = r#"
+struct stats {
+    __u64 decisions;
+    __u64 bytes;
+};
+
+BPF_MAP(statmap, BPF_MAP_TYPE_ARRAY, __u32, struct stats, 1);
+
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    __u32 key = 0;
+    struct stats *st = bpf_map_lookup_elem(&statmap, &key);
+    if (!st) { return 0; }
+    __sync_fetch_and_add(&st->decisions, 1);
+    __u64 old = __sync_fetch_and_add(&st->bytes, ctx->msg_size);
+    __u64 prev = __sync_val_compare_and_swap(&st->decisions, 1, 5);
+    ctx->n_channels = (__u32) (prev + old);
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        // run 1: decisions 0->1, old bytes = 0; cmpxchg sees 1 ==
+        // expected 1, swaps to 5, returns 1
+        assert_eq!(run_tuner(&progs, 100).n_channels, 1);
+        // run 2: decisions 5->6, old bytes = 100; cmpxchg fails
+        // (6 != 1) and returns the observed 6
+        assert_eq!(run_tuner(&progs, 100).n_channels, 106);
+        // run 3: decisions 6->7, old bytes = 200
+        assert_eq!(run_tuner(&progs, 100).n_channels, 207);
+    }
+
+    #[test]
+    fn sync_lock_test_and_set_swaps() {
+        let src = r#"
+struct cell { __u64 v; };
+
+BPF_MAP(cmap, BPF_MAP_TYPE_ARRAY, __u32, struct cell, 1);
+
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    __u32 key = 0;
+    struct cell *c = bpf_map_lookup_elem(&cmap, &key);
+    if (!c) { return 0; }
+    __u64 old = __sync_lock_test_and_set(&c->v, ctx->msg_size);
+    ctx->n_channels = (__u32) old;
+    return 0;
+}
+"#;
+        let progs = compile_and_load(src);
+        assert_eq!(run_tuner(&progs, 42).n_channels, 0);
+        assert_eq!(run_tuner(&progs, 7).n_channels, 42);
+        assert_eq!(run_tuner(&progs, 1).n_channels, 7);
+    }
+
+    #[test]
+    fn atomic_builtin_rejects_non_field_target() {
+        let src = r#"
+SEC("tuner")
+int f(struct policy_context *ctx) {
+    __u64 x = 0;
+    __sync_fetch_and_add(&x, 1);
+    return 0;
+}
+"#;
+        let unit = parse(src).unwrap();
+        let err = compile_unit(&unit).unwrap_err();
+        assert!(err.message.contains("&ptr->field"), "{}", err.message);
     }
 
     #[test]

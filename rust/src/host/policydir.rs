@@ -36,10 +36,13 @@ pub fn build_named(name: &str) -> Result<Object, String> {
 }
 
 /// The safe policies of the §5.2 suite (all in Table 1 / §5.3), plus
-/// the composable tail-call chain exemplar (§5.4 shape) and the
+/// the composable tail-call chain exemplar (§5.4 shape), the
 /// cost-corpus exemplar sized just under the Tuner install budget
-/// (the certifier-headroom probe).
-pub const SAFE_POLICIES: [&str; 9] = [
+/// (the certifier-headroom probe), and the two contended-shared-state
+/// exemplars built on BPF_ATOMIC read-modify-writes over plain Array
+/// maps (`__sync_*` intrinsics; exact conservation without per-cpu
+/// slots).
+pub const SAFE_POLICIES: [&str; 11] = [
     "noop",
     "static_ring",
     "size_aware",
@@ -49,13 +52,16 @@ pub const SAFE_POLICIES: [&str; 9] = [
     "nvlink_ring_mid_v2",
     "chain_dispatch",
     "cost_tight",
+    "shared_counters",
+    "size_histogram",
 ];
 
 /// The unsafe programs, one per bug class: the paper's seven (§5.2),
-/// the three ringbuf reference-tracking classes, and the three
-/// call-graph classes (recursion, cross-frame stack overflow,
-/// clobbered-register misuse).
-pub const UNSAFE_POLICIES: [(&str, &str); 13] = [
+/// the three ringbuf reference-tracking classes, the three call-graph
+/// classes (recursion, cross-frame stack overflow, clobbered-register
+/// misuse), and the three atomic classes (ctx-pointer RMW,
+/// misalignment, out-of-bounds RMW window).
+pub const UNSAFE_POLICIES: [(&str, &str); 16] = [
     ("null_deref", "map_value_or_null"),
     ("oob_access", "out of bounds"),
     ("illegal_helper", "illegal helper"),
@@ -69,6 +75,9 @@ pub const UNSAFE_POLICIES: [(&str, &str); 13] = [
     ("call_recursion", "recursive"),
     ("call_stack_overflow", "combined stack"),
     ("call_r6_clobber", "r1-r5"),
+    ("atomic_on_ctx", "atomic op on ctx"),
+    ("atomic_misaligned", "misaligned atomic"),
+    ("atomic_oob", "out of bounds"),
 ];
 
 /// The verification-cost stress corpus: safe policies sized so that
@@ -122,6 +131,54 @@ mod tests {
             let obj = build_named(name).unwrap();
             host.install_object(&obj).unwrap();
         }
+    }
+
+    /// The contended-shared-state exemplars conserve exactly: every
+    /// decision lands one BPF_ATOMIC increment in plain (non-per-cpu)
+    /// map memory, so a single host-side read equals the op count.
+    #[test]
+    fn shared_counter_policies_conserve_exactly() {
+        use crate::cc::plugin::{CollInfoArgs, CostTable};
+        use crate::cc::{CollType, MAX_CHANNELS};
+        let args = |nbytes: usize| CollInfoArgs {
+            coll: CollType::AllReduce,
+            nbytes,
+            nranks: 8,
+            comm_id: 1,
+            max_channels: MAX_CHANNELS,
+        };
+        let host = NcclBpfHost::new();
+        host.install_object(&build_named("shared_counters").unwrap()).unwrap();
+        let mut bytes = 0u64;
+        for i in 0..100usize {
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            host.tuner_decide(&args(4096 + i), &mut cost, &mut ch);
+            bytes += 4096 + i as u64;
+        }
+        let m = host.map("shared_stats_map").expect("shared_stats_map");
+        let v = m.read_value(&0u32.to_le_bytes()).unwrap();
+        assert_eq!(u64::from_le_bytes(v[..8].try_into().unwrap()), 100, "decisions");
+        assert_eq!(u64::from_le_bytes(v[8..16].try_into().unwrap()), bytes, "bytes");
+
+        host.install_object(&build_named("size_histogram").unwrap()).unwrap();
+        for i in 0..64usize {
+            let mut cost = CostTable::all_sentinel();
+            let mut ch = 0u32;
+            host.tuner_decide(&args((4 << 10) << (i % 12)), &mut cost, &mut ch);
+        }
+        let m = host.map("size_hist").expect("size_hist");
+        let hits: u64 = (0u32..8)
+            .map(|k| {
+                let v = m.read_value(&k.to_le_bytes()).unwrap();
+                u64::from_le_bytes(v[..8].try_into().unwrap())
+            })
+            .sum();
+        assert_eq!(hits, 64, "sum(bucket.hits) == decisions");
+        // the cmpxchg latch recorded the first non-zero bucket exactly once
+        let head = m.read_value(&0u32.to_le_bytes()).unwrap();
+        let first = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        assert!((1..8).contains(&first), "latched bucket index, got {}", first);
     }
 
     #[test]

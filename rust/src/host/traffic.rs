@@ -34,6 +34,11 @@
 //!    — the install ledger's per-hook `run_cnt` totals equal the
 //!    host's dispatch counters even across the reload storm, because
 //!    the ledger keeps each retired program's stat cell alive.
+//! 6. **shared-counter conservation** — both tuner variants also bump
+//!    one *plain* Array element with a BPF_ATOMIC add; the single
+//!    host-side read must equal the op total at any thread count (no
+//!    per-cpu slot caveat) even across the reload storm, because the
+//!    increments are lock RMWs on memory shared by every worker.
 
 use crate::bpf::maps::pin_thread_cpu_slot;
 use crate::bpf::maps::NCPU;
@@ -45,11 +50,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The two tuner variants the reloader alternates between. Each bumps
-/// `traffic_hits[0]` on its per-cpu slot and writes a marker output
-/// tuple; the tuples share no field values, so a decision that mixes
-/// them is a torn read.
+/// `traffic_hits[0]` on its per-cpu slot, bumps the *shared*
+/// `shared_hits[0]` counter with a BPF_ATOMIC add (one plain Array
+/// element contended by every worker thread), and writes a marker
+/// output tuple; the tuples share no field values, so a decision that
+/// mixes them is a torn read.
 const TUNER_VARIANT_A: &str = r#"
 map traffic_hits percpu key=4 value=8 entries=1
+map shared_hits array key=4 value=8 entries=1
 
 prog tuner traffic_a
   mov64 r6, r1
@@ -58,10 +66,19 @@ prog tuner traffic_a
   add64 r2, -4
   ldmap r1, traffic_hits
   call  bpf_map_lookup_elem
-  jeq   r0, 0, out
+  jeq   r0, 0, shared
   ldxdw r3, [r0+0]
   add64 r3, 1
   stxdw [r0+0], r3
+shared:
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, shared_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  mov64 r3, 1
+  lock add64 [r0+0], r3
 out:
   stw   [r6+32], 0        ; algorithm = RING
   stw   [r6+36], 2        ; protocol  = SIMPLE
@@ -72,6 +89,7 @@ out:
 
 const TUNER_VARIANT_B: &str = r#"
 map traffic_hits percpu key=4 value=8 entries=1
+map shared_hits array key=4 value=8 entries=1
 
 prog tuner traffic_b
   mov64 r6, r1
@@ -80,10 +98,19 @@ prog tuner traffic_b
   add64 r2, -4
   ldmap r1, traffic_hits
   call  bpf_map_lookup_elem
-  jeq   r0, 0, out
+  jeq   r0, 0, shared
   ldxdw r3, [r0+0]
   add64 r3, 1
   stxdw [r0+0], r3
+shared:
+  stw   [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, shared_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  mov64 r3, 1
+  lock add64 [r0+0], r3
 out:
   stw   [r6+32], 1        ; algorithm = TREE
   stw   [r6+36], 0        ; protocol  = LL
@@ -203,6 +230,9 @@ pub struct TrafficReport {
     pub mean_decision_ns: f64,
     /// all-slot sum of the tuner counter map
     pub tuner_map_hits: u64,
+    /// single-read value of the shared BPF_ATOMIC counter (plain Array
+    /// element contended by every worker)
+    pub shared_map_hits: u64,
     /// all-slot sum of the profiler counter map
     pub prof_map_hits: u64,
     /// structured events drained from the `traffic_events` ring this run
@@ -249,6 +279,7 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
     let invalid_before = host.invalid_outputs.load(Ordering::Relaxed);
     let tuner_hits_before =
         host.map("traffic_hits").and_then(|m| m.read_u64_all(0)).unwrap_or(0);
+    let shared_hits_before = host.map("shared_hits").and_then(|m| m.read_u64(0)).unwrap_or(0);
     let prof_hits_before = host.map("prof_hits").and_then(|m| m.read_u64_all(0)).unwrap_or(0);
 
     let stop = Arc::new(AtomicBool::new(false));
@@ -340,6 +371,11 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
         .and_then(|m| m.read_u64_all(0))
         .unwrap_or(0)
         .wrapping_sub(tuner_hits_before);
+    let shared_map_hits = host
+        .map("shared_hits")
+        .and_then(|m| m.read_u64(0))
+        .unwrap_or(0)
+        .wrapping_sub(shared_hits_before);
     let prof_map_hits = host
         .map("prof_hits")
         .and_then(|m| m.read_u64_all(0))
@@ -377,6 +413,14 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
                 prof_map_hits, total_ops
             ));
         }
+    }
+    // shared-counter conservation: BPF_ATOMIC adds on one plain Array
+    // element are exact at ANY thread count — no per-cpu slot caveat
+    if shared_map_hits != total_ops {
+        violations.push(format!(
+            "shared atomic counter {} != {} ops issued",
+            shared_map_hits, total_ops
+        ));
     }
     // event-stream conservation: every profiler invocation attempted
     // one ring record, and each was drained, drop-accounted, or
@@ -448,6 +492,7 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
         p99_decision_ns: percentile(&all_ns, 99.0),
         mean_decision_ns: all_ns.iter().sum::<f64>() / all_ns.len().max(1) as f64,
         tuner_map_hits,
+        shared_map_hits,
         prof_map_hits,
         ring_drained,
         ring_dropped,
@@ -536,6 +581,7 @@ mod tests {
         assert_eq!(rep.total_ops, 400);
         assert_eq!(rep.total_decisions, 400);
         assert_eq!(rep.tuner_map_hits, 400);
+        assert_eq!(rep.shared_map_hits, 400);
         assert_eq!(rep.prof_map_hits, 400);
         assert_eq!(
             rep.ring_drained + rep.ring_dropped,
@@ -558,6 +604,7 @@ mod tests {
         assert_eq!(rep.total_ops, 1600);
         assert_eq!(rep.total_decisions, 1600);
         assert_eq!(rep.tuner_map_hits, 1600);
+        assert_eq!(rep.shared_map_hits, 1600);
         assert_eq!(rep.per_thread.len(), 4);
         for s in &rep.per_thread {
             assert_eq!(s.ops, 400);
@@ -568,12 +615,20 @@ mod tests {
 
     /// The acceptance gate for the event stream: 8 worker threads with
     /// a reload storm active, and the ring conserves every record.
+    /// Also the acceptance gate for BPF_ATOMIC contention: the shared
+    /// (non-per-cpu) counter both variants bump with `lock add64` must
+    /// equal the op total exactly — 8 threads of lock RMWs on one
+    /// Array element across a reload storm lose nothing.
     #[test]
     fn traffic_eight_threads_reload_storm_ring_conserved() {
         let rep = run_traffic(&small(8, 8, Some(1)));
         assert!(rep.violations.is_empty(), "{:?}", rep.violations);
         assert_eq!(rep.total_ops, 8 * 400);
         assert_eq!(rep.ring_drained + rep.ring_dropped, rep.total_ops);
+        assert_eq!(
+            rep.shared_map_hits, rep.total_ops,
+            "sum(shared counter) == decisions under the reload storm"
+        );
     }
 
     #[test]

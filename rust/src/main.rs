@@ -124,7 +124,7 @@ fn cmd_verify(args: &Args) -> i32 {
                     println!(
                         "STATS {} insns_processed={} states_pruned={} peak_states={} \
                          verify_ns={} inline_candidates={} bounds_elided={} dead_insns={} \
-                         max_cost={}",
+                         atomic_insns={} max_cost={}",
                         name,
                         st.insns_processed,
                         st.states_pruned,
@@ -133,6 +133,7 @@ fn cmd_verify(args: &Args) -> i32 {
                         st.inline_candidates,
                         st.bounds_elided,
                         st.dead_insns,
+                        st.atomic_insns,
                         st.max_cost
                     );
                 }
@@ -292,7 +293,10 @@ fn print_analysis(a: &ProgramAnalysis) {
         ),
         None => println!("rewrite: nothing provable (stream unchanged)"),
     }
-    println!("cost: certified max_cost={} chain_factor={}", a.cost.total, a.cost.chain_factor);
+    println!(
+        "cost: certified max_cost={} chain_factor={} atomic_insns={}",
+        a.cost.total, a.cost.chain_factor, a.info.atomic_insns
+    );
     for (k, units) in a.cost.per_subprog.iter().enumerate() {
         let (s, e) = a.info.subprog_spans.get(k).copied().unwrap_or((0, 0));
         println!("  subprog {} [{}..{}): {} units", k, s, e, units);
@@ -353,8 +357,8 @@ fn analysis_json(a: &ProgramAnalysis) -> String {
     format!(
         "{{\"name\":\"{}\",\"prog_type\":\"{:?}\",\"insns\":{},\"subprog_spans\":[{}],\
          \"blocks\":[{}],\"live_in\":[{}],\"dead_slots\":[{}],\"dead_insns\":{},\
-         \"rewrite\":{},\"cost\":{{\"total\":{},\"chain_factor\":{},\"per_subprog\":[{}],\
-         \"hot\":{}}},\"analyze_ns\":{}}}",
+         \"atomic_insns\":{},\"rewrite\":{},\"cost\":{{\"total\":{},\"chain_factor\":{},\
+         \"per_subprog\":[{}],\"hot\":{}}},\"analyze_ns\":{}}}",
         a.name,
         a.prog_type,
         a.insns.len(),
@@ -363,6 +367,7 @@ fn analysis_json(a: &ProgramAnalysis) -> String {
         live,
         join(dead_slots(a).iter().map(|s| s.to_string()).collect()),
         a.info.dead_insns,
+        a.info.atomic_insns,
         rewrite,
         a.cost.total,
         a.cost.chain_factor,

@@ -1,0 +1,270 @@
+//! External ISA conformance oracle (tier-1).
+//!
+//! `tests/conformance/*.data` is a corpus of small, self-contained
+//! programs with pinned semantics: each case carries its asm source,
+//! optional initial map memory and ctx image, the expected `r0`, and
+//! optionally the expected final map bytes. The runner executes every
+//! case on all three engines — the interpreter, the trampoline-only
+//! JIT, and the fact-driven inlined JIT — and asserts each one matches
+//! the pinned expectation, which transitively pins the engines to each
+//! other. A disagreement names the case, the engine, and the values.
+//!
+//! Case format (line-oriented; `#` comments between sections):
+//!
+//! ```text
+//! -- asm
+//! <assembler source, including map/prog directives>
+//! -- ctx <hex bytes>              (optional; zero-padded to 64)
+//! -- mem <map> <key> <hex bytes>  (optional, repeatable; value is
+//!                                  zero-padded to the map's value_size)
+//! -- tailcall <map> <slot> <prog> (optional, repeatable; installs the
+//!                                  named program into a prog array)
+//! -- r0 <u64>                     (required; 0x-prefixed or decimal)
+//! -- endmem <map> <key> <hex>     (optional, repeatable; prefix
+//!                                  compare of the final value bytes)
+//! ```
+//!
+//! The env knobs the CI matrix toggles are honored here so the same
+//! corpus runs under `NCCLBPF_REWRITE=0` (no dead-code rewrite) and
+//! `NCCLBPF_JIT_INLINE=0` (both JIT engines trampoline-only).
+
+use ncclbpf::bpf::{load, prog_array_update, LoadOptions, MapRegistry};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One parsed `.data` case.
+struct Case {
+    name: String,
+    asm: String,
+    ctx: Vec<u8>,
+    mems: Vec<(String, u32, Vec<u8>)>,
+    tailcalls: Vec<(String, u32, String)>,
+    expect_r0: u64,
+    endmems: Vec<(String, u32, Vec<u8>)>,
+}
+
+fn parse_hex(s: &str) -> Result<Vec<u8>, String> {
+    let compact: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+    if compact.len() % 2 != 0 {
+        return Err(format!("odd hex length in '{}'", s));
+    }
+    (0..compact.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&compact[i..i + 2], 16)
+                .map_err(|_| format!("bad hex byte '{}'", &compact[i..i + 2]))
+        })
+        .collect()
+}
+
+fn parse_u64(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    if let Some(hex) = t.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).map_err(|e| format!("bad hex u64 '{}': {}", t, e))
+    } else if let Some(neg) = t.strip_prefix('-') {
+        neg.parse::<i64>()
+            .map(|v| (-v) as u64)
+            .map_err(|e| format!("bad i64 '{}': {}", t, e))
+    } else {
+        t.parse::<u64>().map_err(|e| format!("bad u64 '{}': {}", t, e))
+    }
+}
+
+fn parse_case(path: &Path) -> Result<Case, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {}", path.display(), e))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string());
+    let mut asm = String::new();
+    let mut in_asm = false;
+    let mut ctx = Vec::new();
+    let mut mems = Vec::new();
+    let mut tailcalls = Vec::new();
+    let mut expect_r0 = None;
+    let mut endmems = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("-- ") {
+            in_asm = false;
+            let toks: Vec<&str> = rest.split_whitespace().collect();
+            match toks.first().copied() {
+                Some("asm") => in_asm = true,
+                Some("ctx") => ctx = parse_hex(&toks[1..].join(""))?,
+                Some("mem") | Some("endmem") if toks.len() >= 4 => {
+                    let entry = (
+                        toks[1].to_string(),
+                        toks[2].parse::<u32>().map_err(|e| format!("bad key: {}", e))?,
+                        parse_hex(&toks[3..].join(""))?,
+                    );
+                    if toks[0] == "mem" {
+                        mems.push(entry);
+                    } else {
+                        endmems.push(entry);
+                    }
+                }
+                Some("tailcall") if toks.len() == 4 => {
+                    tailcalls.push((
+                        toks[1].to_string(),
+                        toks[2].parse::<u32>().map_err(|e| format!("bad slot: {}", e))?,
+                        toks[3].to_string(),
+                    ));
+                }
+                Some("r0") if toks.len() == 2 => expect_r0 = Some(parse_u64(toks[1])?),
+                other => return Err(format!("bad directive '-- {:?}'", other)),
+            }
+        } else if in_asm {
+            asm.push_str(line);
+            asm.push('\n');
+        } else if !line.trim().is_empty() && !line.trim_start().starts_with('#') {
+            return Err(format!("stray line outside sections: '{}'", line));
+        }
+    }
+    Ok(Case {
+        name,
+        asm,
+        ctx,
+        mems,
+        tailcalls,
+        expect_r0: expect_r0.ok_or("missing '-- r0' directive")?,
+        endmems,
+    })
+}
+
+fn env_flag(name: &str) -> Option<bool> {
+    match std::env::var(name).ok().as_deref() {
+        Some("0") => Some(false),
+        Some("1") => Some(true),
+        _ => None,
+    }
+}
+
+/// Execute one case on one engine; Err carries the diagnostic.
+fn run_case(case: &Case, engine: &str) -> Result<(), String> {
+    let obj = ncclbpf::bpf::asm::assemble(&case.asm).map_err(|e| format!("assemble: {}", e))?;
+    let reg = MapRegistry::new();
+    let lay = ncclbpf::host::ctx::layouts();
+    let opts = LoadOptions::new()
+        .rewrite(env_flag("NCCLBPF_REWRITE"))
+        .inline(match engine {
+            "jit_trampoline" => Some(false),
+            _ => env_flag("NCCLBPF_JIT_INLINE"),
+        });
+    let mut progs = load(&obj, &reg, &lay, &opts).map_err(|e| format!("load: {}", e))?.programs;
+    for (map, key, bytes) in &case.mems {
+        let m = reg.by_name(map).ok_or_else(|| format!("no map '{}'", map))?;
+        let mut v = bytes.clone();
+        v.resize(m.def.value_size as usize, 0);
+        m.update(&key.to_le_bytes(), &v).map_err(|e| format!("mem {}: {}", map, e))?;
+    }
+    for (map, slot, pname) in &case.tailcalls {
+        let idx = progs
+            .iter()
+            .position(|p| p.name == *pname)
+            .ok_or_else(|| format!("no program '{}' for tailcall", pname))?;
+        if idx == 0 {
+            return Err("tailcall target must not be the entry program".into());
+        }
+        let callee = Arc::new(progs.remove(idx));
+        let m = reg.by_name(map).ok_or_else(|| format!("no map '{}'", map))?;
+        prog_array_update(&m, *slot, &callee).map_err(|e| format!("tailcall: {}", e))?;
+    }
+    let main = &progs[0];
+    let mut ctx = [0u8; 64];
+    if case.ctx.len() > ctx.len() {
+        return Err(format!("ctx image too large ({} bytes)", case.ctx.len()));
+    }
+    ctx[..case.ctx.len()].copy_from_slice(&case.ctx);
+    let r0 = match engine {
+        "interp" => main.run_interp(ctx.as_mut_ptr()),
+        _ => main.run(ctx.as_mut_ptr()),
+    };
+    if r0 != case.expect_r0 {
+        return Err(format!(
+            "r0 = {:#x}, expected {:#x} (jitted: {})",
+            r0,
+            case.expect_r0,
+            main.is_jitted()
+        ));
+    }
+    for (map, key, bytes) in &case.endmems {
+        let m = reg.by_name(map).ok_or_else(|| format!("no map '{}'", map))?;
+        let v = m
+            .read_value(&key.to_le_bytes())
+            .ok_or_else(|| format!("endmem {}[{}]: no value", map, key))?;
+        if v.len() < bytes.len() || &v[..bytes.len()] != &bytes[..] {
+            return Err(format!(
+                "endmem {}[{}] = {}, expected {}",
+                map,
+                key,
+                hex(&v[..bytes.len().min(v.len())]),
+                hex(bytes)
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn hex(b: &[u8]) -> String {
+    b.iter().map(|x| format!("{:02x}", x)).collect()
+}
+
+fn corpus_paths() -> Vec<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/conformance");
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("read {}: {}", dir.display(), e))
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "data").unwrap_or(false))
+        .collect();
+    paths.sort();
+    paths
+}
+
+/// The oracle: every case, every engine, one report.
+#[test]
+fn conformance_corpus_pins_all_three_engines() {
+    let paths = corpus_paths();
+    assert!(
+        paths.len() >= 60,
+        "conformance corpus shrank: {} cases (floor is 60)",
+        paths.len()
+    );
+    let mut failures = Vec::new();
+    let mut runs = 0usize;
+    for p in &paths {
+        let case = match parse_case(p) {
+            Ok(c) => c,
+            Err(e) => {
+                failures.push(format!("{}: parse error: {}", p.display(), e));
+                continue;
+            }
+        };
+        for engine in ["interp", "jit_trampoline", "jit_inline"] {
+            runs += 1;
+            if let Err(e) = run_case(&case, engine) {
+                failures.push(format!("{} [{}]: {}", case.name, engine, e));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "conformance: {} of {} engine-runs failed:\n  {}",
+        failures.len(),
+        runs,
+        failures.join("\n  ")
+    );
+}
+
+/// Format-level guards: every case parses, has asm + a pinned r0, and
+/// case names are unique (a duplicated name would hide a lost case).
+#[test]
+fn conformance_corpus_is_well_formed() {
+    let paths = corpus_paths();
+    let mut names = std::collections::HashSet::new();
+    for p in &paths {
+        let case = parse_case(p).unwrap_or_else(|e| panic!("{}: {}", p.display(), e));
+        assert!(!case.asm.trim().is_empty(), "{}: empty asm", case.name);
+        assert!(names.insert(case.name.clone()), "duplicate case name {}", case.name);
+    }
+}

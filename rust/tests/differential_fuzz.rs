@@ -3,8 +3,10 @@
 //! that pass the verifier and lean on the ISA's edge cases — ALU32/64
 //! shifts with counts ≥ the operand width, div/mod whose 32-bit divisor
 //! is zero at runtime while its 64-bit interval is provably non-zero,
-//! sign extension (negative immediates, ARSH, signed compares), and
-//! JMP32 — then asserts `run_interp == run_jit` on the result.
+//! sign extension (negative immediates, ARSH, signed compares), JMP32,
+//! and BPF_ATOMIC read-modify-writes (both widths, fetch/fetchless,
+//! xchg, cmpxchg) — then asserts `run_interp == run_jit` on the result
+//! (and, for atomics, on the final map bytes).
 //!
 //! Runs under plain `cargo test` and in the CI smoke job; the nightly
 //! CI job scales every generator with `NCCLBPF_FUZZ_CASES` (10x the
@@ -16,9 +18,9 @@
 
 use ncclbpf::bpf::helpers::HelperEnv;
 use ncclbpf::bpf::insn::{
-    alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, call_pseudo, class, disasm, exit, jmp,
-    jmp_imm, jmp_reg, ld_map_fd, lddw, ldx, mov32_imm, mov64_imm, mov64_reg, size as msz, src,
-    st_imm, stx, Insn,
+    alu, alu32_imm, alu32_reg, alu64_imm, alu64_reg, atomic, atomic_insn, call_pseudo, class,
+    disasm, exit, jmp, jmp_imm, jmp_reg, ld_map_fd, lddw, ldx, mov32_imm, mov64_imm, mov64_reg,
+    size as msz, src, st_imm, stx, Insn,
 };
 use ncclbpf::bpf::jit::{JitOptions, JitProgram};
 use ncclbpf::bpf::maps::{MapDef, MapKind};
@@ -857,5 +859,204 @@ fn differential_lookup_inlining_interp_vs_jit() {
                 disasm(&prog)
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BPF_ATOMIC differential: interp, trampoline JIT, and fact-driven JIT
+// must agree on r0 AND on the exact final bytes of the map value after
+// a random sequence of atomic read-modify-writes — both widths, fetch
+// and fetchless forms, xchg, and cmpxchg with matching and mismatched
+// compare operands.
+// ---------------------------------------------------------------------------
+
+const ATOMIC_MAP_ID: u32 = 1; // first map registered per registry
+
+fn atomic_def() -> MapDef {
+    MapDef {
+        name: "fuzz_atomic".into(),
+        kind: MapKind::Array,
+        key_size: 4,
+        value_size: 16,
+        max_entries: 1,
+    }
+}
+
+/// One random verified atomic program: look up the single 16-byte
+/// value, then run a random mix of atomic ops at verified-aligned
+/// constant offsets (8-aligned for 64-bit, 4-aligned for 32-bit),
+/// folding every fetched old value into r3 so the r0 comparison
+/// observes the full interleaving, not just the final memory.
+fn gen_atomic_program(rng: &mut Rng) -> Vec<Insn> {
+    let mut p = Vec::new();
+    p.push(mov64_imm(3, 0)); // fold accumulator
+    p.push(st_imm(msz::DW, 10, -8, 0)); // key 0
+    p.extend(ld_map_fd(1, ATOMIC_MAP_ID));
+    p.push(mov64_reg(2, 10));
+    p.push(alu64_imm(alu::ADD, 2, -8));
+    p.push(Insn::new(class::JMP | jmp::CALL, 0, 0, 0, 1)); // map_lookup
+    p.push(jmp_imm(jmp::JNE, 0, 0, 2));
+    p.push(mov64_imm(0, -1));
+    p.push(exit());
+    p.push(mov64_reg(6, 0)); // park the value pointer in r6
+    let n = 3 + rng.below(6);
+    for _ in 0..n {
+        let (sz, off) = if rng.below(2) == 0 {
+            (msz::DW, 8 * rng.below(2) as i16)
+        } else {
+            (msz::W, 4 * rng.below(4) as i16)
+        };
+        let imm = if rng.below(2) == 0 {
+            SPECIAL_IMMS[rng.below(SPECIAL_IMMS.len() as u64) as usize]
+        } else {
+            rng.next_u32() as i32
+        };
+        p.push(mov64_imm(2, imm));
+        match rng.below(8) {
+            0..=3 => {
+                let base = [atomic::ADD, atomic::AND, atomic::OR, atomic::XOR]
+                    [rng.below(4) as usize];
+                let aop =
+                    if rng.below(2) == 0 { base | atomic::FETCH } else { base };
+                p.push(atomic_insn(sz, 6, 2, off, aop));
+            }
+            4..=5 => p.push(atomic_insn(sz, 6, 2, off, atomic::XCHG)),
+            _ => {
+                // cmpxchg: small expected values sometimes match what an
+                // earlier op left in memory, so both hit/miss arms run
+                let expected =
+                    if rng.below(2) == 0 { rng.below(4) as i32 } else { imm };
+                p.push(mov64_imm(0, expected));
+                p.push(atomic_insn(sz, 6, 2, off, atomic::CMPXCHG));
+                p.push(alu64_reg(alu::XOR, 3, 0)); // fold observed value
+            }
+        }
+        p.push(alu64_reg(alu::XOR, 3, 2)); // fold the (maybe) fetched old
+    }
+    p.push(mov64_reg(0, 3));
+    p.push(exit());
+    p
+}
+
+#[test]
+fn differential_atomics_interp_vs_jit() {
+    if !cfg!(all(unix, target_arch = "x86_64")) {
+        return; // no JIT to compare against
+    }
+    let mut rng = Rng::new(0xa706_2026);
+    let lay = layouts();
+    let mut verifier_maps = HashMap::new();
+    verifier_maps.insert(ATOMIC_MAP_ID, atomic_def());
+    for case in 0..fuzz_cases(200) {
+        let prog = gen_atomic_program(&mut rng);
+        let info = verifier::verify(&prog, ProgType::Tuner, &lay.tuner, &verifier_maps)
+            .unwrap_or_else(|e| {
+                panic!("case {}: unverifiable atomic program: {}\n{}", case, e, disasm(&prog))
+            });
+        let (ops, slot2op) = interp::predecode_mapped(&prog).expect("predecode");
+        let facts = interp::remap_facts(&info.facts, &slot2op, ops.len());
+        let seed = rng.next_u64();
+
+        // returns (r0, final 16 value bytes) for one engine against a
+        // fresh identically-seeded map
+        let run = |engine: Engine| -> (u64, Vec<u8>) {
+            let reg = MapRegistry::new();
+            let m = reg.create_or_get(&atomic_def()).unwrap();
+            assert_eq!(m.id, ATOMIC_MAP_ID);
+            let mut v = [0u8; 16];
+            v[..8].copy_from_slice(&seed.to_le_bytes());
+            v[8..].copy_from_slice(&seed.rotate_left(17).to_le_bytes());
+            m.update(&0u32.to_le_bytes(), &v).unwrap();
+            let env = HelperEnv::new(&reg, &[m.id]).unwrap();
+            let r0 = match engine {
+                Engine::Interp => unsafe { interp::execute(&ops, std::ptr::null_mut(), &env) },
+                Engine::JitTrampoline => {
+                    let j = JitProgram::compile_unchecked(&ops).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+                Engine::JitInline => {
+                    let opts =
+                        JitOptions { facts: Some(&facts), env: Some(&env), inline: None };
+                    let j = JitProgram::compile_with_unchecked(&ops, &opts).expect("jit");
+                    unsafe { j.call(std::ptr::null_mut(), &env) }
+                }
+            };
+            (r0, m.read_value(&0u32.to_le_bytes()).unwrap())
+        };
+        let want = run(Engine::Interp);
+        for engine in [Engine::JitTrampoline, Engine::JitInline] {
+            let got = run(engine);
+            assert_eq!(
+                got,
+                want,
+                "case {}: {:?} diverges from interp (r0, final bytes)\n{}",
+                case,
+                engine,
+                disasm(&prog)
+            );
+        }
+    }
+}
+
+/// Atomicity under real contention: k threads hammering one shared
+/// `lock add64` counter must land on exactly threads × iters — on the
+/// interpreter AND the JIT. A torn or non-atomic lowering loses
+/// increments under contention and misses the exact total.
+#[test]
+fn differential_atomic_fetch_add_exact_under_threads() {
+    let src = r#"
+map ctr array value=8 entries=1
+prog tuner main
+  stw [r10-4], 0
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, ctr
+  call bpf_map_lookup_elem
+  jeq r0, 0, miss
+  mov64 r2, 1
+  lock fetchadd64 r2, [r0+0]
+  mov64 r0, r2
+  exit
+miss:
+  mov64 r0, 0
+  exit
+"#;
+    let threads = 8usize;
+    let iters = 2_000u64;
+    for interp_only in [false, true] {
+        let obj = ncclbpf::bpf::asm::assemble(src).expect("assemble");
+        let reg = MapRegistry::new();
+        let lay = layouts();
+        let out = ncclbpf::bpf::load(&obj, &reg, &lay, &ncclbpf::bpf::LoadOptions::new())
+            .expect("load");
+        let prog = std::sync::Arc::new(out.programs.into_iter().next().expect("program"));
+        if !interp_only && !prog.is_jitted() {
+            continue; // no JIT on this target; the interp arm still ran
+        }
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let prog = std::sync::Arc::clone(&prog);
+                std::thread::spawn(move || {
+                    let mut ctx = [0u8; 64];
+                    for _ in 0..iters {
+                        if interp_only {
+                            prog.run_interp(ctx.as_mut_ptr());
+                        } else {
+                            prog.run(ctx.as_mut_ptr());
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = reg.by_name("ctr").expect("ctr map");
+        assert_eq!(
+            m.read_u64(0),
+            Some(threads as u64 * iters),
+            "lost increments with interp_only={}",
+            interp_only
+        );
     }
 }

@@ -123,6 +123,7 @@ fn verify_stats_reports_verifier_cost_counters() {
         "peak_states=",
         "verify_ns=",
         "dead_insns=",
+        "atomic_insns=",
         "max_cost=",
     ] {
         assert!(stats_line.contains(key), "missing {} in: {}", key, stats_line);
@@ -137,6 +138,40 @@ fn verify_stats_reports_verifier_cost_counters() {
     };
     assert!(field("states_pruned=") > 0, "stress policy must exercise pruning: {}", stats_line);
     assert!(field("max_cost=") > 0, "every accepted program certifies a cost: {}", stats_line);
+}
+
+/// An atomic-bearing policy reports its BPF_ATOMIC instruction count
+/// through both stats surfaces: `verify --stats` (`atomic_insns=N`)
+/// and `analyze` (on the cost-certificate line), while a plain policy
+/// reports zero.
+#[test]
+fn stats_surfaces_report_atomic_insn_counts() {
+    let p = policy("shared_counters.c");
+    let o = run(&["verify", p.to_str().unwrap(), "--stats"]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    let stats_line = out
+        .lines()
+        .find(|l| l.starts_with("STATS shared_counters"))
+        .unwrap_or_else(|| panic!("missing STATS line in:\n{}", out));
+    let atomics: u64 = stats_line
+        .split("atomic_insns=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable atomic_insns in: {}", stats_line));
+    assert!(atomics >= 2, "shared_counters has two __sync sites: {}", stats_line);
+
+    let o = run(&["analyze", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains(&format!("atomic_insns={}", atomics)), "{}", out);
+
+    // a policy with no atomics pins the zero
+    let p = policy("size_aware.c");
+    let o = run(&["verify", p.to_str().unwrap(), "--stats"]);
+    let out = stdout(&o);
+    assert!(out.contains("atomic_insns=0"), "{}", out);
 }
 
 #[test]
@@ -265,7 +300,7 @@ fn safety_suite_green_end_to_end() {
     let o = run(&["safety"]);
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 9 safe accepted, all 13 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 11 safe accepted, all 16 unsafe rejected"), "{}", out);
     // the ringbuf reference-tracking and call-graph classes are in the suite
     for name in ["ringbuf_leak", "ringbuf_use_after_submit", "ringbuf_oob", "call_recursion"] {
         assert!(out.contains(&format!("REJECT {}", name)), "{}", out);
@@ -281,6 +316,31 @@ fn safety_suite_green_end_to_end() {
     assert!(out.contains("cost budget"), "{}", out);
 }
 
+/// Cost-table regression pin: `cost_tight.s` is sized to certify at
+/// exactly 2*2483 + 3 = 4969 units, >95% of the Tuner install budget
+/// (5000). Any accidental repricing of the non-atomic cost table —
+/// e.g. while adding the BPF_ATOMIC rows — would move this number and
+/// either open up slack or push the policy over budget. Pin the exact
+/// certified figure, and that the atomic counter stays zero for a
+/// program with no atomics.
+#[test]
+fn cost_tight_headroom_is_unchanged_by_atomic_pricing() {
+    let o = run(&["safety"]);
+    assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
+    let out = stdout(&o);
+    assert!(
+        out.contains("ACCEPT cost_tight (certified max_cost=4969 <= budget 5000)"),
+        "cost_tight headroom drifted — non-atomic cost table repriced?\n{}",
+        out
+    );
+    let p = policy("cost_tight.s");
+    let o = run(&["analyze", p.to_str().unwrap()]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("max_cost=4969"), "{}", out);
+    assert!(out.contains("atomic_insns=0"), "{}", out);
+}
+
 /// With pruning disabled the safety verdicts must not change — the
 /// suite skips only the stress corpus (which needs pruning by design).
 #[test]
@@ -292,7 +352,7 @@ fn safety_suite_green_with_pruning_disabled() {
         .expect("spawn");
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 9 safe accepted, all 13 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 11 safe accepted, all 16 unsafe rejected"), "{}", out);
     assert!(out.contains("SKIP: NCCLBPF_VERIFIER_PRUNE=0"), "{}", out);
 }
 

@@ -4,7 +4,7 @@
 //! - both stress policies verify with pruning ON and exhaust the
 //!   complexity budget with pruning OFF (the `prune` knob kept for
 //!   differential testing);
-//! - the full 13-program unsafe corpus is rejected identically in both
+//! - the full 16-program unsafe corpus is rejected identically in both
 //!   modes — pruning never admits a program the exhaustive verifier
 //!   rejects;
 //! - the safe corpus is accepted identically in both modes — precision

@@ -1,0 +1,35 @@
+/* rail_selector — a verified net policy on the transfer datapath: the
+ * return value is the rail the transport should steer this transfer
+ * onto. Small messages stay on the rank's rail-optimized home rail
+ * (latency: one hop, no striping win); larger tiers spread across the
+ * node's rails so no single NIC serializes the bulk traffic.
+ *
+ * The verdict is always clamped to ctx->rails, so a policy authored
+ * for an 8-rail fabric degrades safely on a 2-rail node instead of
+ * naming hardware that does not exist. Every decision also lands one
+ * BPF_ATOMIC increment in rail_pick[verdict] — shared (non-per-cpu)
+ * memory, so a host-side sum equals the decision count exactly and
+ * the traffic engine can check conservation across reload storms.
+ */
+
+struct rail_stat {
+    __u64 picks;
+};
+
+BPF_MAP(rail_pick, BPF_MAP_TYPE_ARRAY, __u32, struct rail_stat, 16);
+
+SEC("net")
+int rail_selector(struct net_context *ctx) {
+    __u64 sz = ctx->bytes;
+    __u32 idx = 0;
+    if (sz > 65536) { idx = 1; }
+    if (sz > 1048576) { idx = 2; }
+    if (sz > 16777216) { idx = 3; }
+    if (idx >= ctx->rails) { idx = 0; }
+
+    struct rail_stat *s = bpf_map_lookup_elem(&rail_pick, &idx);
+    if (!s)
+        return idx;
+    __sync_fetch_and_add(&s->picks, 1);
+    return idx;
+}

@@ -1,0 +1,8 @@
+; net_ctx_oob — net-ctx bounds probe: a read one word past the 32-byte
+; `net` context. Offsets [0, 32) are the verified rail ABI (comm_id /
+; is_send / bytes / peer / rail / rails / node); offset 32 is host
+; memory the policy must never see, so the ctx bounds check fires.
+
+prog net net_ctx_oob
+  ldxw  r0, [r1+32]       ; BUG: net ctx is 32 bytes; [32, 36) is OOB
+  exit

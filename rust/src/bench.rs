@@ -331,6 +331,8 @@ pub fn traffic_scale(opts: &BenchOpts) -> BenchReport {
             reload_every_ms: Some(5),
             seed: opts.seed,
             ranks: 4,
+            nodes: 1,
+            fault: false,
         };
         let r = run_traffic(&topts);
         let dps = r.decisions_per_sec;
@@ -974,6 +976,113 @@ pub fn atomics_bench(opts: &BenchOpts) -> BenchReport {
     rep
 }
 
+/// BENCH_multinode — the scale-out price list:
+/// - `hier_{n}n_{mib}mib` / `flat_{n}n_{mib}mib`: modeled AllReduce
+///   busbw at 2/4/8 nodes over 4–128 MiB, hierarchical (intra
+///   reduce-scatter → cross-node ring over the rails → intra
+///   all-gather) vs one flat ring over every rank — the
+///   rail-bottleneck argument for hierarchy as numbers.
+/// - `netpolicy_on` / `netpolicy_off`: per-transfer cost of the
+///   verified `net` policy on the datapath (full `net_handle_op`
+///   dispatch) vs the same call with no policy installed.
+/// - `straggler_recovery`: wall latency of one link-flap failover —
+///   isend hits `LinkDown` on the flapping rail and retries on the
+///   healthy backup, both attempts consulting the policy.
+pub fn multinode_bench(opts: &BenchOpts) -> BenchReport {
+    use crate::cc::net::{
+        FaultPlan, FaultyTransport, NetError, NetOp, NetTransport, PolicyTransport,
+        RdmaModelTransport,
+    };
+    use crate::cc::{ClusterPerfModel, ClusterTopology};
+
+    let mut rep = BenchReport::new("multinode");
+
+    // -- hier vs flat modeled sweep -----------------------------------------
+    let cfg = CollConfig::new(Algo::Ring, Proto::Simple, 8);
+    for &n in &[2usize, 4, 8] {
+        let model = ClusterPerfModel::new(ClusterTopology::rails_b300(n, 8, 4));
+        for &mib in &[4usize, 8, 16, 32, 64, 128] {
+            let size = mib << 20;
+            let h = model.hierarchical_busbw_gbps(cfg, size);
+            let f = model.flat_ring_busbw_gbps(cfg, size);
+            rep.push(
+                Series::new(format!("hier_{}n_{}mib", n, mib), "gbps", h, h, h)
+                    .with("size_bytes", size as f64)
+                    .with("nodes", n as f64),
+            );
+            rep.push(
+                Series::new(format!("flat_{}n_{}mib", n, mib), "gbps", f, f, f)
+                    .with("size_bytes", size as f64)
+                    .with("nodes", n as f64)
+                    .with("hier_speedup_pct", (h / f - 1.0) * 100.0),
+            );
+        }
+    }
+
+    // -- net-policy datapath overhead: on vs off ----------------------------
+    let op = NetOp { is_send: true, bytes: 1 << 20, peer: 9, rail: 2, rails: 4, node: 1 };
+    for (label, install) in [("netpolicy_on", true), ("netpolicy_off", false)] {
+        let host = NcclBpfHost::new();
+        if install {
+            host.install_object(
+                &policydir::build_named("rail_selector").expect("rail_selector"),
+            )
+            .expect("rail_selector must verify");
+        }
+        let (p50, p99, mean) = measure(opts.calls, || {
+            std::hint::black_box(host.net_handle_op(0x1234_5678_9abc, &op));
+        });
+        rep.push(
+            Series::new(label, "ns", p50, p99, mean)
+                .with("policy_installed", if install { 1.0 } else { 0.0 }),
+        );
+    }
+
+    // -- straggler/flap recovery latency ------------------------------------
+    // rail 0 flaps from its first op (phase 1 of the fault cycle); rail
+    // 1 is healthy. Each sample is one full failover through the
+    // verified policy on both attempts.
+    {
+        let host = Arc::new(NcclBpfHost::new());
+        host.install_object(&policydir::build_named("rail_selector").expect("rail_selector"))
+            .expect("rail_selector must verify");
+        let hook = crate::host::bpf_net_op_hook(host.clone(), 0x1234_5678_9abc);
+        let link = ClusterTopology::rails_b300(2, 8, 4).rail;
+        let mk = |rail: u32, phase: u64| {
+            PolicyTransport::new(
+                FaultyTransport::new(
+                    RdmaModelTransport::loopback(rail, link),
+                    rail,
+                    FaultPlan { epoch_ops: u64::MAX, phase, ..FaultPlan::default() },
+                ),
+                hook.clone(),
+                NetOp { rail, rails: 2, ..NetOp::default() },
+            )
+        };
+        let mut flapping = mk(0, 1); // epoch 1 of the cycle = Flap, forever
+        let mut healthy = mk(1, 0);
+        let payload = [0u8; 4096];
+        let mut buf = [0u8; 4096];
+        let iters = opts.iters.max(10) * 20;
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            match flapping.isend(&payload) {
+                Err(NetError::LinkDown { .. }) => {
+                    healthy.isend(&payload).expect("backup rail must be healthy");
+                    healthy.irecv(&mut buf).expect("backup rail drain");
+                }
+                other => panic!("flapping rail did not flap: {:?}", other),
+            }
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let (p50, p99, mean) = stats3(&samples);
+        rep.push(Series::new("straggler_recovery", "ns", p50, p99, mean)
+            .with("samples", iters as f64));
+    }
+    rep
+}
+
 /// One `--compare` finding: a series whose fresh median regressed past
 /// tolerance (or disappeared) relative to the committed baseline.
 #[derive(Debug)]
@@ -1146,6 +1255,7 @@ pub fn run_all(out_dir: &Path, opts: &BenchOpts) -> std::io::Result<Vec<PathBuf>
         analysis_bench(opts),
         obs_bench(opts),
         atomics_bench(opts),
+        multinode_bench(opts),
     ] {
         let path = rep.write_to(out_dir)?;
         println!("{}: {} series -> {}", rep.name, rep.series.len(), path.display());
@@ -1461,6 +1571,42 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// BENCH_multinode coverage + the acceptance shape: hierarchical
+    /// AllReduce beats the flat ring at every node count and size in
+    /// the sweep, and both net-policy rows are real latencies.
+    #[test]
+    fn multinode_bench_hier_beats_flat_and_policy_rows_present() {
+        let rep = multinode_bench(&tiny());
+        // 2 series per (3 nodes x 6 sizes) + netpolicy on/off + recovery
+        assert_eq!(rep.series.len(), 39);
+        let find = |label: &str| {
+            rep.series
+                .iter()
+                .find(|s| s.label == label)
+                .unwrap_or_else(|| panic!("missing {}", label))
+        };
+        for n in [2usize, 4, 8] {
+            for mib in [4usize, 8, 16, 32, 64, 128] {
+                let h = find(&format!("hier_{}n_{}mib", n, mib));
+                let f = find(&format!("flat_{}n_{}mib", n, mib));
+                assert_eq!(h.unit, "gbps");
+                assert!(
+                    h.median > f.median,
+                    "hier must beat flat at {} nodes {} MiB: {} vs {}",
+                    n,
+                    mib,
+                    h.median,
+                    f.median
+                );
+            }
+        }
+        for label in ["netpolicy_on", "netpolicy_off", "straggler_recovery"] {
+            let s = find(label);
+            assert!(s.median > 0.0 && s.mean > 0.0, "{}", label);
+            assert_eq!(s.unit, "ns");
         }
     }
 

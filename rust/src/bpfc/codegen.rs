@@ -86,6 +86,9 @@ pub fn builtin_structs() -> Vec<StructDef> {
                 f("is_send", ScalarTy::U32, 4),
                 f("bytes", ScalarTy::U64, 8),
                 f("peer", ScalarTy::U32, 16),
+                f("rail", ScalarTy::U32, 20),
+                f("rails", ScalarTy::U32, 24),
+                f("node", ScalarTy::U32, 28),
             ],
         },
     ]

@@ -315,6 +315,78 @@ pub fn ring_broadcast(bufs: &mut [Vec<f32>], proto: Proto, root: usize) -> MoveS
     stats
 }
 
+/// Hierarchical AllReduce over `nodes × gpus_per_node` ranks (rank
+/// `r` = node `r / gpus_per_node`, local GPU `r % gpus_per_node`):
+///
+/// 1. intra-node ring reduce-scatter (local GPU g ends up owning the
+///    node-local sum of chunk g),
+/// 2. cross-node ring AllReduce of each chunk among the ranks with the
+///    same local index — this is the traffic that rides the RDMA rails,
+/// 3. intra-node ring all-gather to redistribute the full sums.
+///
+/// The same real data movement and protocol framing as the flat
+/// algorithms; [`super::perfmodel::ClusterPerfModel`] costs the stages.
+pub fn hierarchical_all_reduce(
+    bufs: &mut [Vec<f32>],
+    gpus_per_node: usize,
+    proto: Proto,
+    nchannels: usize,
+    red: &dyn Reducer,
+) -> MoveStats {
+    let total = bufs.len();
+    assert!(gpus_per_node >= 1, "need >= 1 GPU per node");
+    assert!(
+        total % gpus_per_node == 0,
+        "rank count {} not divisible by gpus_per_node {}",
+        total,
+        gpus_per_node
+    );
+    let nodes = total / gpus_per_node;
+    assert!(nodes >= 2, "hierarchical AllReduce needs >= 2 nodes");
+    if gpus_per_node == 1 {
+        // degenerate cluster: every node is one GPU, pure cross-node ring
+        return ring_all_reduce(bufs, proto, nchannels, red);
+    }
+    let len = bufs[0].len();
+    let chunks = chunk_ranges(len, gpus_per_node);
+    let mut stats = MoveStats::default();
+
+    // stage 1: intra-node reduce-scatter, node by node
+    for node in 0..nodes {
+        let node_bufs = &mut bufs[node * gpus_per_node..(node + 1) * gpus_per_node];
+        let s = ring_reduce_scatter(node_bufs, proto, red);
+        stats.bytes_moved += s.bytes_moved;
+        stats.reduce_ops += s.reduce_ops;
+    }
+    stats.steps += (gpus_per_node - 1) as u64;
+
+    // stage 2: cross-node ring AllReduce per local chunk owner
+    for g in 0..gpus_per_node {
+        let range = chunks[g].clone();
+        if range.is_empty() {
+            continue;
+        }
+        let mut shard: Vec<Vec<f32>> =
+            (0..nodes).map(|node| bufs[node * gpus_per_node + g][range.clone()].to_vec()).collect();
+        let s = ring_all_reduce(&mut shard, proto, nchannels, red);
+        stats.bytes_moved += s.bytes_moved;
+        stats.reduce_ops += s.reduce_ops;
+        for (node, sh) in shard.iter().enumerate() {
+            bufs[node * gpus_per_node + g][range.clone()].copy_from_slice(sh);
+        }
+    }
+    stats.steps += 2 * (nodes - 1) as u64;
+
+    // stage 3: intra-node all-gather (each local GPU's chunk is final)
+    for node in 0..nodes {
+        let node_bufs = &mut bufs[node * gpus_per_node..(node + 1) * gpus_per_node];
+        let s = ring_all_gather(node_bufs, proto);
+        stats.bytes_moved += s.bytes_moved;
+    }
+    stats.steps += (gpus_per_node - 1) as u64;
+    stats
+}
+
 /// Dispatch a collective by (type, algo). Returns stats.
 pub fn run_collective(
     coll: CollType,
@@ -502,6 +574,42 @@ mod tests {
             let (mut bufs, expect) = make_bufs(4, 211, 23);
             ring_all_reduce(&mut bufs, Proto::Simple, nch, &NativeSum);
             assert_close(&bufs[0], &expect, 2e-5, &format!("nch={}", nch));
+        }
+    }
+
+    #[test]
+    fn hierarchical_all_reduce_correct_all_protocols() {
+        for proto in ALL_PROTOS {
+            for (nodes, gpus) in [(2usize, 2usize), (2, 4), (4, 2), (2, 8), (4, 1)] {
+                for len in [1usize, 7, 64, 1000] {
+                    let (mut bufs, expect) = make_bufs(nodes * gpus, len, 31);
+                    let stats = hierarchical_all_reduce(&mut bufs, gpus, proto, 4, &NativeSum);
+                    for r in 0..nodes * gpus {
+                        assert_close(
+                            &bufs[r],
+                            &expect,
+                            5e-5,
+                            &format!("hier {}x{} len={} {:?} rank {}", nodes, gpus, len, proto, r),
+                        );
+                    }
+                    if len >= nodes * gpus {
+                        assert!(stats.bytes_moved > 0);
+                        assert!(stats.reduce_ops > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_agrees_with_flat_ring() {
+        let (bufs0, _) = make_bufs(8, 333, 37);
+        let mut flat = bufs0.clone();
+        let mut hier = bufs0.clone();
+        ring_all_reduce(&mut flat, Proto::Simple, 4, &NativeSum);
+        hierarchical_all_reduce(&mut hier, 4, Proto::Simple, 4, &NativeSum);
+        for r in 0..8 {
+            assert_close(&hier[r], &flat[r], 5e-5, "hier vs flat");
         }
     }
 

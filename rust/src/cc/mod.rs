@@ -8,7 +8,8 @@
 //! - [`perfmodel`] — calibrated alpha-beta-gamma timing model (Table 2)
 //! - [`comm`] — communicator: tuner/profiler hooks + simulated clock
 //! - [`plugin`] — the plugin ABI (cost-table tuner, profiler events)
-//! - [`net`] — Socket transport + the eBPF wrapper hook
+//! - [`net`] — pluggable transports (Socket / modeled RDMA / fault
+//!   injection) with verified net policies on the datapath
 
 pub mod algo;
 pub mod comm;
@@ -20,8 +21,12 @@ pub mod topo;
 pub mod types;
 
 pub use comm::{CollResult, Communicator, DataMode};
-pub use perfmodel::PerfModel;
+pub use net::{
+    FaultKind, FaultPlan, FaultyTransport, NetError, NetOp, NetOpHook, NetTransport,
+    PolicyTransport, RdmaModelTransport,
+};
+pub use perfmodel::{ClusterPerfModel, PerfModel};
 pub use plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin, COST_SENTINEL};
 pub use proto::Proto;
-pub use topo::Topology;
+pub use topo::{cluster_preset, ClusterTopology, Topology, CLUSTER_PRESETS};
 pub use types::{Algo, CollConfig, CollType, MAX_CHANNELS};

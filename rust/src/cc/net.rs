@@ -1,17 +1,68 @@
-//! Net transport: the engine's Socket backend plus the wrapper hook the
-//! net-plugin case study exercises (§5.3 "Net plugin extensibility").
+//! Net transport: a pluggable backend trait with verified `net`
+//! policies on the send/recv datapath (§5.3 "Net plugin extensibility"
+//! grown to the multi-node shape of ROADMAP item 3).
 //!
-//! The built-in backend moves bytes over real loopback TCP (std::net —
-//! tokio is not available offline). The eBPF-wrapped transport forwards
-//! every operation to the inner backend while invoking a callback (the
-//! JIT-compiled BPF program in the host crate) on each isend/irecv with
-//! a `net_context` describing the operation — mirroring how the paper
-//! wraps NCCL's Socket transport and counts bytes/connections through a
-//! shared map with <2 % overhead.
+//! Backends:
+//! - [`SocketTransport`] — real loopback TCP (std::net; tokio is not
+//!   available offline), the paper's wrapped-Socket case study.
+//! - [`MemTransport`] — in-memory channel pair for tests.
+//! - [`RdmaModelTransport`] — a modeled RDMA rail (bandwidth + latency
+//!   accounted on a virtual clock, no wall-time sleeps) for cluster
+//!   scenarios where thousands of simulated ranks must stay cheap.
+//! - [`FaultyTransport`] — deterministic fault injection around any
+//!   backend: link-flap epochs, straggler delays, degraded-bandwidth
+//!   epochs, cycling on an op counter so tests can pin exact behaviour.
+//!
+//! Policy attachment: [`WrappedTransport`] carries the legacy
+//! `(is_send, bytes)` observability hook; [`PolicyTransport`] carries a
+//! rail-aware [`NetOpHook`] that receives the full [`NetOp`] (rail,
+//! rails, node, peer, size) and returns the policy's verdict — this is
+//! the path `rail_selector.c` steers.
+//!
+//! Every fallible path returns a typed [`NetError`] with operation
+//! context; no stub defaults, no ignored results on the datapath.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+
+use super::topo::LinkSpec;
+
+/// Typed transport errors. Every variant names the operation and enough
+/// context to attribute the failure (which rail, which epoch, how far
+/// the stream got) — the regression tests assert the context survives
+/// into `Display`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetError {
+    /// OS-level I/O failure (socket reset, bind/accept failure, ...).
+    Io { op: &'static str, detail: String },
+    /// The peer endpoint is gone (channel closed, stream EOF).
+    Disconnected { op: &'static str, after_bytes: u64 },
+    /// A fault-injected (or modeled) link flap: the rail is down for
+    /// the remainder of this epoch; retry on another rail.
+    LinkDown { rail: u32, epoch: u64 },
+    /// A straggler exceeded the delay budget the caller allowed.
+    StragglerTimeout { rank: u32, delay_ns: u64 },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io { op, detail } => write!(f, "net {}: {}", op, detail),
+            NetError::Disconnected { op, after_bytes } => {
+                write!(f, "net {}: peer disconnected after {} bytes", op, after_bytes)
+            }
+            NetError::LinkDown { rail, epoch } => {
+                write!(f, "net: rail {} down (flap epoch {})", rail, epoch)
+            }
+            NetError::StragglerTimeout { rank, delay_ns } => {
+                write!(f, "net: straggler rank {} exceeded delay budget ({} ns)", rank, delay_ns)
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
 
 /// Transport operations (subset of ncclNet_t). Methods take `&mut
 /// self` (one endpoint per connection/thread), so only `Send` is
@@ -19,9 +70,30 @@ use std::sync::Arc;
 pub trait NetTransport: Send {
     fn name(&self) -> &str;
     /// Blocking send of `buf` to the connected peer.
-    fn isend(&mut self, buf: &[u8]) -> Result<(), String>;
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError>;
     /// Blocking receive of exactly `buf.len()` bytes.
-    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), String>;
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError>;
+    /// Apply a modeled bandwidth divisor for the next operations
+    /// (degraded epochs). No-op for transports without a modeled clock.
+    fn set_bw_penalty(&mut self, _factor: f64) {}
+    /// Charge a modeled straggler delay to the next operation. No-op
+    /// for transports without a modeled clock.
+    fn inject_delay_ns(&mut self, _ns: u64) {}
+}
+
+/// One network operation as seen by a `net` policy: mirrors the
+/// `net_context` ABI (`host::ctx::NetContext`) field for field.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NetOp {
+    pub is_send: bool,
+    pub bytes: u64,
+    pub peer: u32,
+    /// rail this operation rides (rail-optimized mapping)
+    pub rail: u32,
+    /// total rails available to the node
+    pub rails: u32,
+    /// node index of the issuing rank
+    pub node: u32,
 }
 
 /// Built-in Socket transport over a connected TCP stream.
@@ -31,16 +103,16 @@ pub struct SocketTransport {
 
 impl SocketTransport {
     /// Create a connected loopback pair (listener side, dialer side).
-    pub fn pair() -> Result<(SocketTransport, SocketTransport), String> {
-        let listener =
-            TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind: {}", e))?;
-        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    pub fn pair() -> Result<(SocketTransport, SocketTransport), NetError> {
+        let io = |op: &'static str| move |e: std::io::Error| NetError::Io { op, detail: e.to_string() };
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(io("bind"))?;
+        let addr = listener.local_addr().map_err(io("local_addr"))?;
         let dial = std::thread::spawn(move || TcpStream::connect(addr));
-        let (accepted, _) = listener.accept().map_err(|e| format!("accept: {}", e))?;
+        let (accepted, _) = listener.accept().map_err(io("accept"))?;
         let dialed = dial
             .join()
-            .map_err(|_| "connect thread panicked".to_string())?
-            .map_err(|e| format!("connect: {}", e))?;
+            .map_err(|_| NetError::Io { op: "connect", detail: "connect thread panicked".into() })?
+            .map_err(io("connect"))?;
         accepted.set_nodelay(true).ok();
         dialed.set_nodelay(true).ok();
         Ok((SocketTransport { stream: accepted }, SocketTransport { stream: dialed }))
@@ -51,17 +123,25 @@ impl NetTransport for SocketTransport {
     fn name(&self) -> &str {
         "Socket"
     }
-    fn isend(&mut self, buf: &[u8]) -> Result<(), String> {
-        self.stream.write_all(buf).map_err(|e| format!("send: {}", e))
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError> {
+        self.stream
+            .write_all(buf)
+            .map_err(|e| NetError::Io { op: "isend", detail: e.to_string() })
     }
-    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), String> {
-        self.stream.read_exact(buf).map_err(|e| format!("recv: {}", e))
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError> {
+        self.stream
+            .read_exact(buf)
+            .map_err(|e| NetError::Io { op: "irecv", detail: e.to_string() })
     }
 }
 
-/// The net-plugin hook signature: (is_send, bytes). Return value is
-/// ignored (observability hook, not a filter).
+/// The legacy net-plugin hook signature: (is_send, bytes). Return value
+/// is ignored (observability hook, not a filter).
 pub type NetHook = Arc<dyn Fn(bool, usize) + Send + Sync>;
+
+/// Rail-aware policy hook: receives the full [`NetOp`] and returns the
+/// verified policy's verdict (`None` when no policy is installed).
+pub type NetOpHook = Arc<dyn Fn(&NetOp) -> Option<u64> + Send + Sync>;
 
 /// eBPF-wrapped transport: forwards to the inner backend, invoking the
 /// hook on every operation.
@@ -80,12 +160,53 @@ impl<T: NetTransport> NetTransport for WrappedTransport<T> {
     fn name(&self) -> &str {
         "Socket+ebpf"
     }
-    fn isend(&mut self, buf: &[u8]) -> Result<(), String> {
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError> {
         (self.hook)(true, buf.len());
         self.inner.isend(buf)
     }
-    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), String> {
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError> {
         (self.hook)(false, buf.len());
+        self.inner.irecv(buf)
+    }
+}
+
+/// Rail-aware policy transport: every isend/irecv builds a [`NetOp`]
+/// from the template (rail/rails/node/peer) plus the live byte count
+/// and runs the verified `net` policy before forwarding. The policy's
+/// verdicts and invocation count are kept for conservation checks.
+pub struct PolicyTransport<T: NetTransport> {
+    pub inner: T,
+    pub hook: NetOpHook,
+    /// rail/rails/node/peer identity of this endpoint
+    pub template: NetOp,
+    /// number of policy invocations issued by this endpoint
+    pub decisions: u64,
+    /// last verdict returned by the policy (None = no policy installed)
+    pub last_verdict: Option<u64>,
+}
+
+impl<T: NetTransport> PolicyTransport<T> {
+    pub fn new(inner: T, hook: NetOpHook, template: NetOp) -> Self {
+        PolicyTransport { inner, hook, template, decisions: 0, last_verdict: None }
+    }
+
+    fn consult(&mut self, is_send: bool, bytes: usize) {
+        let op = NetOp { is_send, bytes: bytes as u64, ..self.template };
+        self.last_verdict = (self.hook)(&op);
+        self.decisions += 1;
+    }
+}
+
+impl<T: NetTransport> NetTransport for PolicyTransport<T> {
+    fn name(&self) -> &str {
+        "rail+ebpf"
+    }
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError> {
+        self.consult(true, buf.len());
+        self.inner.isend(buf)
+    }
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError> {
+        self.consult(false, buf.len());
         self.inner.irecv(buf)
     }
 }
@@ -95,6 +216,8 @@ pub struct MemTransport {
     tx: std::sync::mpsc::Sender<Vec<u8>>,
     rx: std::sync::mpsc::Receiver<Vec<u8>>,
     pending: Vec<u8>,
+    sent_bytes: u64,
+    recvd_bytes: u64,
 }
 
 impl MemTransport {
@@ -102,8 +225,8 @@ impl MemTransport {
         let (t1, r1) = std::sync::mpsc::channel();
         let (t2, r2) = std::sync::mpsc::channel();
         (
-            MemTransport { tx: t1, rx: r2, pending: vec![] },
-            MemTransport { tx: t2, rx: r1, pending: vec![] },
+            MemTransport { tx: t1, rx: r2, pending: vec![], sent_bytes: 0, recvd_bytes: 0 },
+            MemTransport { tx: t2, rx: r1, pending: vec![], sent_bytes: 0, recvd_bytes: 0 },
         )
     }
 }
@@ -112,17 +235,232 @@ impl NetTransport for MemTransport {
     fn name(&self) -> &str {
         "Mem"
     }
-    fn isend(&mut self, buf: &[u8]) -> Result<(), String> {
-        self.tx.send(buf.to_vec()).map_err(|e| e.to_string())
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError> {
+        self.tx
+            .send(buf.to_vec())
+            .map_err(|_| NetError::Disconnected { op: "isend", after_bytes: self.sent_bytes })?;
+        self.sent_bytes += buf.len() as u64;
+        Ok(())
     }
-    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), String> {
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError> {
         while self.pending.len() < buf.len() {
-            let chunk = self.rx.recv().map_err(|e| e.to_string())?;
+            let chunk = self.rx.recv().map_err(|_| NetError::Disconnected {
+                op: "irecv",
+                after_bytes: self.recvd_bytes,
+            })?;
             self.pending.extend_from_slice(&chunk);
         }
         buf.copy_from_slice(&self.pending[..buf.len()]);
         self.pending.drain(..buf.len());
+        self.recvd_bytes += buf.len() as u64;
         Ok(())
+    }
+}
+
+/// Modeled RDMA rail: a loopback queue whose cost is accounted on a
+/// virtual clock (`lat_ns + bytes / bw`) instead of wall time, so
+/// cluster scenarios with thousands of ranks stay cheap. `irecv` with
+/// nothing in flight is an error (no silent zero-fill).
+pub struct RdmaModelTransport {
+    pub rail: u32,
+    pub link: LinkSpec,
+    inflight: std::collections::VecDeque<Vec<u8>>,
+    /// accumulated modeled transfer time in nanoseconds
+    pub clock_ns: u64,
+    pub bytes_sent: u64,
+    pub bytes_recvd: u64,
+    /// extra per-op delay (straggler injection adds here)
+    pub extra_delay_ns: u64,
+    /// bandwidth divisor for degraded epochs (1.0 = healthy)
+    pub bw_penalty: f64,
+}
+
+impl RdmaModelTransport {
+    /// A loopback endpoint on rail `rail` with the given link spec.
+    pub fn loopback(rail: u32, link: LinkSpec) -> RdmaModelTransport {
+        RdmaModelTransport {
+            rail,
+            link,
+            inflight: std::collections::VecDeque::new(),
+            clock_ns: 0,
+            bytes_sent: 0,
+            bytes_recvd: 0,
+            extra_delay_ns: 0,
+            bw_penalty: 1.0,
+        }
+    }
+
+    fn charge(&mut self, bytes: usize) {
+        // GB/s == bytes/ns in our units; degraded epochs divide bw
+        let wire = bytes as f64 / (self.link.bw_gbps / self.bw_penalty.max(1.0));
+        self.clock_ns += (self.link.lat_ns + wire) as u64 + self.extra_delay_ns;
+        self.extra_delay_ns = 0;
+    }
+}
+
+impl NetTransport for RdmaModelTransport {
+    fn name(&self) -> &str {
+        "RdmaModel"
+    }
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError> {
+        self.inflight.push_back(buf.to_vec());
+        self.bytes_sent += buf.len() as u64;
+        self.charge(buf.len());
+        Ok(())
+    }
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError> {
+        let msg = self.inflight.pop_front().ok_or(NetError::Io {
+            op: "irecv",
+            detail: format!("no inflight message on rail {}", self.rail),
+        })?;
+        if msg.len() != buf.len() {
+            return Err(NetError::Io {
+                op: "irecv",
+                detail: format!("size mismatch: inflight {} vs wanted {}", msg.len(), buf.len()),
+            });
+        }
+        buf.copy_from_slice(&msg);
+        self.bytes_recvd += buf.len() as u64;
+        Ok(())
+    }
+    fn set_bw_penalty(&mut self, factor: f64) {
+        self.bw_penalty = factor;
+    }
+    fn inject_delay_ns(&mut self, ns: u64) {
+        self.extra_delay_ns += ns;
+    }
+}
+
+/// Where a [`FaultyTransport`] is in its deterministic fault cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Healthy,
+    /// isend/irecv fail with [`NetError::LinkDown`]
+    Flap,
+    /// ops succeed but a modeled straggler delay is injected
+    Straggler,
+    /// ops succeed at a fraction of the link bandwidth
+    Degraded,
+}
+
+/// Deterministic fault schedule: the op counter is divided into epochs
+/// of `epoch_ops` operations; epoch `e` (offset by `phase` so parallel
+/// rails flap at *different* times) cycles through
+/// `[Healthy, Flap, Healthy, Straggler, Healthy, Degraded]`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub epoch_ops: u64,
+    /// per-rail phase shift (in epochs) so at most one of up to six
+    /// rails is flapping at any moment
+    pub phase: u64,
+    pub straggler_delay_ns: u64,
+    pub degraded_factor: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { epoch_ops: 64, phase: 0, straggler_delay_ns: 200_000, degraded_factor: 4.0 }
+    }
+}
+
+impl FaultPlan {
+    pub fn kind_at(&self, ops: u64) -> FaultKind {
+        const CYCLE: [FaultKind; 6] = [
+            FaultKind::Healthy,
+            FaultKind::Flap,
+            FaultKind::Healthy,
+            FaultKind::Straggler,
+            FaultKind::Healthy,
+            FaultKind::Degraded,
+        ];
+        CYCLE[((ops / self.epoch_ops + self.phase) % 6) as usize]
+    }
+}
+
+/// Fault-injecting wrapper around any transport. Flap epochs surface
+/// [`NetError::LinkDown`] (the caller is expected to retry on another
+/// rail); straggler epochs charge a modeled delay; degraded epochs cut
+/// the modeled bandwidth. All injections are counted so traffic
+/// invariants can assert "every issued op is accounted: completed,
+/// flapped, or retried — none lost".
+pub struct FaultyTransport<T: NetTransport> {
+    pub inner: T,
+    pub plan: FaultPlan,
+    pub rail: u32,
+    /// total operations issued (including flapped ones)
+    pub ops: u64,
+    pub flaps_injected: u64,
+    pub delays_injected: u64,
+    pub degraded_ops: u64,
+    /// modeled straggler delay accumulated, in nanoseconds
+    pub delay_ns_injected: u64,
+}
+
+impl<T: NetTransport> FaultyTransport<T> {
+    pub fn new(inner: T, rail: u32, plan: FaultPlan) -> Self {
+        FaultyTransport {
+            inner,
+            plan,
+            rail,
+            ops: 0,
+            flaps_injected: 0,
+            delays_injected: 0,
+            degraded_ops: 0,
+            delay_ns_injected: 0,
+        }
+    }
+
+    /// Fault state the *next* operation will see.
+    pub fn next_kind(&self) -> FaultKind {
+        self.plan.kind_at(self.ops)
+    }
+
+    fn gate(&mut self) -> Result<FaultKind, NetError> {
+        let kind = self.plan.kind_at(self.ops);
+        let epoch = self.ops / self.plan.epoch_ops + self.plan.phase;
+        self.ops += 1;
+        match kind {
+            FaultKind::Flap => {
+                self.flaps_injected += 1;
+                Err(NetError::LinkDown { rail: self.rail, epoch })
+            }
+            FaultKind::Straggler => {
+                self.delays_injected += 1;
+                self.delay_ns_injected += self.plan.straggler_delay_ns;
+                Ok(kind)
+            }
+            FaultKind::Degraded => {
+                self.degraded_ops += 1;
+                Ok(kind)
+            }
+            FaultKind::Healthy => Ok(kind),
+        }
+    }
+}
+
+impl<T: NetTransport> FaultyTransport<T> {
+    fn apply(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::Straggler => self.inner.inject_delay_ns(self.plan.straggler_delay_ns),
+            FaultKind::Degraded => self.inner.set_bw_penalty(self.plan.degraded_factor),
+            _ => self.inner.set_bw_penalty(1.0),
+        }
+    }
+}
+
+impl<T: NetTransport> NetTransport for FaultyTransport<T> {
+    fn name(&self) -> &str {
+        "Faulty"
+    }
+    fn isend(&mut self, buf: &[u8]) -> Result<(), NetError> {
+        let kind = self.gate()?;
+        self.apply(kind);
+        self.inner.isend(buf)
+    }
+    fn irecv(&mut self, buf: &mut [u8]) -> Result<(), NetError> {
+        let kind = self.gate()?;
+        self.apply(kind);
+        self.inner.irecv(buf)
     }
 }
 
@@ -178,5 +516,110 @@ mod tests {
         let mut rest = [0u8; 4];
         b.irecv(&mut rest).unwrap();
         assert_eq!(rest, [3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn net_errors_carry_operation_context() {
+        // regression for the silent-default stubs: a dead peer must
+        // surface a typed error naming the operation, not Ok(()).
+        let (mut a, b) = MemTransport::pair();
+        drop(b);
+        let err = a.isend(&[9, 9]).unwrap_err();
+        assert!(matches!(err, NetError::Disconnected { op: "isend", .. }), "got {:?}", err);
+        assert!(err.to_string().contains("isend"), "display must name the op: {}", err);
+
+        let mut r = RdmaModelTransport::loopback(3, LinkSpec { bw_gbps: 50.0, lat_ns: 5000.0 });
+        let mut buf = [0u8; 8];
+        let err = r.irecv(&mut buf).unwrap_err();
+        assert!(matches!(err, NetError::Io { op: "irecv", .. }), "got {:?}", err);
+        assert!(err.to_string().contains("rail 3"), "display must name the rail: {}", err);
+    }
+
+    #[test]
+    fn rdma_model_moves_bytes_and_accounts_time() {
+        let link = LinkSpec { bw_gbps: 50.0, lat_ns: 5_000.0 };
+        let mut r = RdmaModelTransport::loopback(0, link);
+        let msg = vec![7u8; 1 << 20];
+        r.isend(&msg).unwrap();
+        let mut out = vec![0u8; 1 << 20];
+        r.irecv(&mut out).unwrap();
+        assert_eq!(out, msg);
+        assert_eq!(r.bytes_sent, 1 << 20);
+        assert_eq!(r.bytes_recvd, 1 << 20);
+        // 1 MiB at 50 GB/s ≈ 20971 ns + 5000 ns latency
+        assert!(r.clock_ns > 20_000 && r.clock_ns < 40_000, "clock {}", r.clock_ns);
+        // size mismatch is an error, not a truncated read
+        r.isend(&[1, 2, 3]).unwrap();
+        let mut small = [0u8; 2];
+        assert!(matches!(r.irecv(&mut small), Err(NetError::Io { op: "irecv", .. })));
+    }
+
+    #[test]
+    fn faulty_transport_epochs_inject_and_recover() {
+        let plan = FaultPlan { epoch_ops: 8, phase: 0, straggler_delay_ns: 1000, degraded_factor: 4.0 };
+        let inner = RdmaModelTransport::loopback(1, LinkSpec { bw_gbps: 50.0, lat_ns: 100.0 });
+        let mut t = FaultyTransport::new(inner, 1, plan);
+        let mut ok = 0u64;
+        let mut flapped = 0u64;
+        let msg = [0u8; 64];
+        let mut out = [0u8; 64];
+        for _ in 0..(8 * 6) {
+            match t.isend(&msg) {
+                Ok(()) => {
+                    ok += 1;
+                    t.inner.irecv(&mut out).unwrap();
+                }
+                Err(NetError::LinkDown { rail, .. }) => {
+                    assert_eq!(rail, 1);
+                    flapped += 1;
+                }
+                Err(e) => panic!("unexpected error {:?}", e),
+            }
+        }
+        // one full cycle: exactly one flap epoch of 8 ops
+        assert_eq!(flapped, 8);
+        assert_eq!(ok + flapped, 48, "every op accounted: completed or flapped");
+        assert_eq!(t.flaps_injected, 8);
+        assert_eq!(t.delays_injected, 8, "one straggler epoch");
+        assert_eq!(t.degraded_ops, 8, "one degraded epoch");
+        assert!(t.delay_ns_injected >= 8_000);
+        // after the cycle the link is healthy again (recovery)
+        assert_eq!(t.next_kind(), FaultKind::Healthy);
+        t.isend(&msg).unwrap();
+    }
+
+    #[test]
+    fn fault_phases_stagger_rail_flaps() {
+        // with distinct phases, no two rails flap at the same op count
+        let plans: Vec<FaultPlan> =
+            (0..4).map(|r| FaultPlan { phase: r as u64, ..FaultPlan::default() }).collect();
+        for ops in (0..6 * 64).step_by(7) {
+            let flapping =
+                plans.iter().filter(|p| p.kind_at(ops as u64) == FaultKind::Flap).count();
+            assert!(flapping <= 1, "{} rails flapping at op {}", flapping, ops);
+        }
+    }
+
+    #[test]
+    fn policy_transport_consults_hook_with_rail_fields() {
+        let (a, mut b) = MemTransport::pair();
+        let seen = Arc::new(std::sync::Mutex::new(Vec::<NetOp>::new()));
+        let seen2 = seen.clone();
+        let hook: NetOpHook = Arc::new(move |op: &NetOp| {
+            seen2.lock().unwrap().push(*op);
+            Some(op.rail as u64)
+        });
+        let template = NetOp { rail: 2, rails: 4, node: 1, peer: 9, ..NetOp::default() };
+        let mut p = PolicyTransport::new(a, hook, template);
+        p.isend(&[1, 2, 3]).unwrap();
+        let mut out = [0u8; 3];
+        b.irecv(&mut out).unwrap();
+        assert_eq!(p.decisions, 1);
+        assert_eq!(p.last_verdict, Some(2));
+        let ops = seen.lock().unwrap();
+        assert_eq!(ops.len(), 1);
+        assert!(ops[0].is_send);
+        assert_eq!(ops[0].bytes, 3);
+        assert_eq!((ops[0].rail, ops[0].rails, ops[0].node, ops[0].peer), (2, 4, 1, 9));
     }
 }

@@ -22,7 +22,7 @@
 //! configurations (the sweep, bad_channels, LL-vs-Simple) respond the
 //! way the hardware would.
 
-use super::topo::Topology;
+use super::topo::{ClusterTopology, Topology};
 use super::types::{Algo, CollConfig, CollType};
 use crate::cc::proto::Proto;
 
@@ -213,6 +213,88 @@ impl PerfModel {
     }
 }
 
+/// Multi-node extension of the α-β-γ model: costs the three stages of
+/// hierarchical AllReduce per link class (NVLink inside the node, RDMA
+/// rails between nodes) and a flat cross-node ring for comparison.
+///
+/// ```text
+///   hier(S) = intra_rs(S) + cross_ring(S/G over N nodes) + intra_ag(S)
+///   flat(S) = ring over N·G ranks, pipeline gated by the rail class
+/// ```
+///
+/// The intra stages reuse [`PerfModel`] (so they inherit the Table 2
+/// calibration); the cross-node stage is analytic over the rail spec
+/// because no paper anchors exist at cluster scale.
+#[derive(Clone, Debug)]
+pub struct ClusterPerfModel {
+    pub cluster: ClusterTopology,
+    intra: PerfModel,
+}
+
+impl ClusterPerfModel {
+    pub fn new(cluster: ClusterTopology) -> ClusterPerfModel {
+        let intra = PerfModel::new(cluster.intra.clone());
+        ClusterPerfModel { cluster, intra }
+    }
+
+    /// The single-node model used for the intra-node stages.
+    pub fn intra_model(&self) -> &PerfModel {
+        &self.intra
+    }
+
+    /// Cross-node ring AllReduce over `nodes` on each GPU's local shard
+    /// (`nbytes / gpus_per_node`), carried by the node's rails shared
+    /// across its GPUs.
+    fn cross_stage_ns(&self, proto: Proto, nbytes: usize) -> f64 {
+        let n = self.cluster.nodes as f64;
+        let shard = nbytes as f64 / self.cluster.gpus_per_node as f64;
+        let steps = 2.0 * (n - 1.0);
+        let lat = LAUNCH_NS + steps * (self.cluster.rail.lat_ns * 4.0) * proto.latency_factor();
+        let wire = 2.0 * (n - 1.0) / n * shard / PerfModel::bw_derate(proto);
+        // GB/s == bytes/ns; each GPU gets rails/gpus_per_node of a rail
+        lat + wire / self.cluster.per_gpu_rail_gbps()
+    }
+
+    /// Hierarchical AllReduce: intra-node reduce-scatter, cross-node
+    /// ring over the rails, intra-node all-gather. `cfg` supplies the
+    /// protocol and channel count used by every stage.
+    pub fn hierarchical_allreduce_ns(&self, cfg: CollConfig, nbytes: usize) -> f64 {
+        let intra_cfg = CollConfig::new(Algo::Ring, cfg.proto, cfg.nchannels);
+        let rs = self.intra.time_ns(CollType::ReduceScatter, intra_cfg, nbytes);
+        let ag = self.intra.time_ns(CollType::AllGather, intra_cfg, nbytes);
+        rs + self.cross_stage_ns(cfg.proto, nbytes) + ag
+    }
+
+    /// Flat ring AllReduce over all `nodes × gpus_per_node` ranks: one
+    /// big ring whose pipeline throughput is gated by the slowest link
+    /// class (the shared rails) and whose per-step latency blends
+    /// `gpus_per_node − 1` NVLink hops with one rail hop per node.
+    pub fn flat_ring_ns(&self, cfg: CollConfig, nbytes: usize) -> f64 {
+        let total = self.cluster.n_ranks() as f64;
+        let g = self.cluster.gpus_per_node as f64;
+        let steps = 2.0 * (total - 1.0);
+        let hop = ((g - 1.0) * self.cluster.intra.link.lat_ns + self.cluster.rail.lat_ns) / g * 4.0;
+        let lat = LAUNCH_NS + steps * hop * cfg.proto.latency_factor();
+        let wire = 2.0 * (total - 1.0) / total * nbytes as f64 / PerfModel::bw_derate(cfg.proto);
+        let ch_bw = cfg.nchannels as f64 * PER_CHANNEL_GBPS;
+        let bw = ch_bw.min(self.cluster.per_gpu_rail_gbps());
+        lat + wire / bw
+    }
+
+    /// Bus bandwidth (nccl-tests definition over the full cluster) for
+    /// the hierarchical schedule, in GB/s.
+    pub fn hierarchical_busbw_gbps(&self, cfg: CollConfig, nbytes: usize) -> f64 {
+        let t = self.hierarchical_allreduce_ns(cfg, nbytes);
+        CollType::AllReduce.busbw_factor(self.cluster.n_ranks()) * nbytes as f64 / t
+    }
+
+    /// Bus bandwidth for the flat cross-node ring, in GB/s.
+    pub fn flat_ring_busbw_gbps(&self, cfg: CollConfig, nbytes: usize) -> f64 {
+        let t = self.flat_ring_ns(cfg, nbytes);
+        CollType::AllReduce.busbw_factor(self.cluster.n_ranks()) * nbytes as f64 / t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,5 +461,63 @@ mod tests {
         let m = PerfModel::new(Topology::pcie_gen5(4));
         let cfg = m.default_config(CollType::AllReduce, 64 << 20);
         assert_ne!(cfg.algo, Algo::Nvls);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_across_sweep() {
+        // the acceptance sweep: 2/4/8 nodes, 4–128 MiB, hierarchical
+        // must beat the flat cross-node ring everywhere.
+        let cfg = CollConfig::new(Algo::Ring, Proto::Simple, 32);
+        for nodes in [2usize, 4, 8] {
+            let m = ClusterPerfModel::new(ClusterTopology::rails_b300(nodes, 8, 4));
+            for mib in [4usize, 8, 16, 32, 64, 128] {
+                let s = mib << 20;
+                let hier = m.hierarchical_allreduce_ns(cfg, s);
+                let flat = m.flat_ring_ns(cfg, s);
+                assert!(
+                    hier < flat,
+                    "hier {:.0} ns should beat flat {:.0} ns at {} nodes / {} MiB",
+                    hier,
+                    flat,
+                    nodes,
+                    mib
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_cost_monotonic_in_node_count() {
+        let cfg = CollConfig::new(Algo::Ring, Proto::Simple, 32);
+        for mib in [4usize, 32, 128] {
+            let s = mib << 20;
+            let mut prev = 0.0;
+            for nodes in [2usize, 4, 8, 16] {
+                let m = ClusterPerfModel::new(ClusterTopology::rails_b300(nodes, 8, 4));
+                let t = m.hierarchical_allreduce_ns(cfg, s);
+                assert!(
+                    t > prev,
+                    "hier time must grow with node count ({} nodes, {} MiB)",
+                    nodes,
+                    mib
+                );
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_busbw_sane_and_rail_bound() {
+        // hierarchical busbw cannot exceed the aggregate per-GPU rail
+        // bandwidth by more than the busbw factor allows, and stays
+        // positive everywhere in the sweep.
+        let m = ClusterPerfModel::new(ClusterTopology::rails_b300(4, 8, 4));
+        let cfg = CollConfig::new(Algo::Ring, Proto::Simple, 32);
+        for mib in [4usize, 128] {
+            let s = mib << 20;
+            let bw = m.hierarchical_busbw_gbps(cfg, s);
+            assert!(bw > 0.0 && bw < m.cluster.intra.link.bw_gbps, "busbw {:.1} implausible", bw);
+            assert!(m.flat_ring_busbw_gbps(cfg, s) > 0.0);
+        }
     }
 }

@@ -83,6 +83,114 @@ impl Topology {
     }
 }
 
+/// A hierarchical multi-node topology: `nodes` identical boxes (each a
+/// single-node [`Topology`]) joined by `rails` parallel inter-node RDMA
+/// rails. Rank `r` lives on node `r / gpus_per_node` as local GPU
+/// `r % gpus_per_node`; the rail-optimized mapping puts local GPU `g`
+/// on rail `g % rails` so every rail carries an equal slice of the
+/// cross-node traffic (the "rail-aligned" layout of 100k-GPU fabrics).
+#[derive(Clone, Debug)]
+pub struct ClusterTopology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// intra-node fabric (shared by every node)
+    pub intra: Topology,
+    /// one inter-node RDMA rail (per-NIC, unidirectional)
+    pub rail: LinkSpec,
+    /// number of parallel rails (NICs per node)
+    pub rails: usize,
+    /// human-readable name for reports
+    pub name: String,
+}
+
+/// Named cluster presets: `(name, nodes, gpus_per_node, rails)`. The
+/// docs generator renders this table into REFERENCE.md, and
+/// [`cluster_preset`] builds each row with `ClusterTopology::rails_b300`.
+pub const CLUSTER_PRESETS: [(&str, usize, usize, usize); 4] = [
+    ("2x8_rails", 2, 8, 4),
+    ("4x8_rails", 4, 8, 4),
+    ("8x8_rails", 8, 8, 4),
+    ("2x4_pcie", 2, 4, 2),
+];
+
+/// Build a named preset from [`CLUSTER_PRESETS`], or `None` for an
+/// unknown name.
+pub fn cluster_preset(name: &str) -> Option<ClusterTopology> {
+    CLUSTER_PRESETS.iter().find(|p| p.0 == name).map(|&(n, nodes, gpus, rails)| {
+        if n.ends_with("_pcie") {
+            let mut c = ClusterTopology::rails_b300(nodes, gpus, rails);
+            c.intra = Topology::pcie_gen5(gpus);
+            c.name = format!("{}x{} PCIe + {} rails", nodes, gpus, rails);
+            c
+        } else {
+            ClusterTopology::rails_b300(nodes, gpus, rails)
+        }
+    })
+}
+
+impl ClusterTopology {
+    /// Rail-optimized B300 fabric: NVLink5 boxes joined by 400 Gb/s
+    /// class RDMA rails (~50 GB/s per direction per NIC, ~5 µs one-way
+    /// including NIC + switch traversal).
+    pub fn rails_b300(nodes: usize, gpus_per_node: usize, rails: usize) -> ClusterTopology {
+        ClusterTopology {
+            nodes,
+            gpus_per_node,
+            intra: Topology::nvlink_b300(gpus_per_node),
+            rail: LinkSpec { bw_gbps: 50.0, lat_ns: 5_000.0 },
+            rails,
+            name: format!("{}x{} B300 + {} RDMA rails", nodes, gpus_per_node, rails),
+        }
+    }
+
+    /// Total GPU count across the cluster.
+    pub fn n_ranks(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Global rank -> (node, local GPU index).
+    pub fn locate(&self, rank: usize) -> (usize, usize) {
+        (rank / self.gpus_per_node, rank % self.gpus_per_node)
+    }
+
+    /// Rail-optimized mapping: local GPU `g` sends cross-node traffic
+    /// on rail `g % rails`, so peers with the same local index talk
+    /// over the same rail and no rail is oversubscribed.
+    pub fn rail_for(&self, rank: usize) -> usize {
+        let (_, local) = self.locate(rank);
+        local % self.rails
+    }
+
+    /// Aggregate cross-node injection bandwidth available to one GPU
+    /// (the node's rails shared across its GPUs), in GB/s.
+    pub fn per_gpu_rail_gbps(&self) -> f64 {
+        self.rail.bw_gbps * self.rails as f64 / self.gpus_per_node as f64
+    }
+
+    /// Validity checks used by property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes < 2 {
+            return Err(format!("cluster needs >= 2 nodes, got {}", self.nodes));
+        }
+        if self.nodes > 512 {
+            return Err(format!("implausible node count {}", self.nodes));
+        }
+        if self.rails == 0 || self.rails > 16 {
+            return Err(format!("rails must be in 1..=16, got {}", self.rails));
+        }
+        if self.rail.bw_gbps <= 0.0 || self.rail.lat_ns < 0.0 {
+            return Err("non-positive rail bandwidth / negative latency".into());
+        }
+        if self.intra.n_ranks != self.gpus_per_node {
+            return Err(format!(
+                "intra topology has {} ranks but gpus_per_node is {}",
+                self.intra.n_ranks, self.gpus_per_node
+            ));
+        }
+        self.intra.validate()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +223,48 @@ mod tests {
         let mut t = Topology::pcie_gen5(4);
         t.nvls_capable = true;
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_presets_all_build_and_validate() {
+        for &(name, nodes, gpus, rails) in CLUSTER_PRESETS.iter() {
+            let c = cluster_preset(name).expect(name);
+            assert_eq!(c.nodes, nodes);
+            assert_eq!(c.gpus_per_node, gpus);
+            assert_eq!(c.rails, rails);
+            assert_eq!(c.n_ranks(), nodes * gpus);
+            c.validate().expect(name);
+        }
+        assert!(cluster_preset("no_such_preset").is_none());
+    }
+
+    #[test]
+    fn rail_mapping_is_balanced() {
+        let c = ClusterTopology::rails_b300(4, 8, 4);
+        // every rail serves exactly gpus_per_node / rails local GPUs
+        let mut per_rail = [0usize; 4];
+        for rank in 0..c.n_ranks() {
+            per_rail[c.rail_for(rank)] += 1;
+        }
+        assert!(per_rail.iter().all(|&n| n == c.n_ranks() / c.rails));
+        // locate() inverts the rank layout
+        assert_eq!(c.locate(0), (0, 0));
+        assert_eq!(c.locate(9), (1, 1));
+        assert_eq!(c.locate(31), (3, 7));
+    }
+
+    #[test]
+    fn cluster_validation_catches_bad_shapes() {
+        let mut c = ClusterTopology::rails_b300(1, 8, 4);
+        assert!(c.validate().is_err(), "single node is not a cluster");
+        c = ClusterTopology::rails_b300(2, 8, 4);
+        c.rails = 0;
+        assert!(c.validate().is_err());
+        c = ClusterTopology::rails_b300(2, 8, 4);
+        c.rail.bw_gbps = -1.0;
+        assert!(c.validate().is_err());
+        c = ClusterTopology::rails_b300(2, 8, 4);
+        c.intra = Topology::nvlink_b300(4);
+        assert!(c.validate().is_err(), "intra rank count must match gpus_per_node");
     }
 }

@@ -27,8 +27,10 @@ pub const SUBCOMMANDS: &[(&str, &str, &str)] = &[
     ("hotreload", "", "demonstrate atomic policy swap"),
     (
         "traffic",
-        "[--comms N --threads N --ops K --reload-every MS]",
-        "concurrent multi-communicator traffic engine with invariant checks",
+        "[--comms N --threads N --ops K --reload-every MS --nodes N --fault]",
+        "concurrent multi-communicator traffic engine with invariant checks (--nodes > 1: \
+         rail-aware net datapath with verified net policies; --fault: link flaps, stragglers, \
+         degraded-bandwidth epochs)",
     ),
     (
         "trace",

@@ -11,6 +11,7 @@
 
 use crate::bpf::helpers::{self, ArgType, ProgType, RetType};
 use crate::bpf::maps::MapKind;
+use crate::cc;
 use crate::cli;
 use crate::host::ctx;
 use crate::host::policydir;
@@ -90,9 +91,10 @@ pub fn reference_markdown() -> String {
     out.push_str(
         "Rendered from the in-source tables the runtime executes against \
          (`helpers::HELPER_SPECS`, the per-type whitelists, `MapKind`, the ctx \
-         layouts, `cli::SUBCOMMANDS`, `policydir::UNSAFE_POLICIES`, \
-         `policydir::STRESS_POLICIES`). CI fails when this file drifts from \
-         the code.\n",
+         layouts, `ctx::NET_CTX_FIELDS`, `cc::CLUSTER_PRESETS`, \
+         `cli::SUBCOMMANDS`, `policydir::NET_POLICIES`, \
+         `policydir::UNSAFE_POLICIES`, `policydir::STRESS_POLICIES`). CI \
+         fails when this file drifts from the code.\n",
     );
     out.push('\n');
 
@@ -122,6 +124,25 @@ pub fn reference_markdown() -> String {
             fmt_ranges(&l.write)
         )
         .unwrap();
+    }
+    out.push('\n');
+
+    out.push_str("## Net context fields\n");
+    out.push('\n');
+    writeln!(
+        out,
+        "Field layout of the {}-byte `net` ctx a policy reads on the \
+         transport datapath (`ctx::NET_CTX_FIELDS`). The transport fills \
+         one per transfer; the policy's return value is its verdict (for \
+         the rail corpus, the rail to steer the transfer onto).",
+        ctx::NET_CTX_SIZE
+    )
+    .unwrap();
+    out.push('\n');
+    out.push_str("| field | offset | width |\n");
+    out.push_str("|-------|-------:|------:|\n");
+    for (name, off, width) in ctx::NET_CTX_FIELDS {
+        writeln!(out, "| `{}` | {} | {} |", name, off, width).unwrap();
     }
     out.push('\n');
 
@@ -168,6 +189,34 @@ pub fn reference_markdown() -> String {
     }
     out.push('\n');
 
+    out.push_str("## Topology presets\n");
+    out.push('\n');
+    out.push_str(
+        "Named hierarchical cluster shapes (`cc::CLUSTER_PRESETS`), built by \
+         `cluster_preset` and swept by `ncclbpf bench` into \
+         `BENCH_multinode.json`. Per-GPU rail GB/s is the node's aggregate \
+         NIC injection bandwidth shared across its GPUs.\n",
+    );
+    out.push('\n');
+    out.push_str("| preset | nodes | GPUs/node | rails | ranks | per-GPU rail GB/s | fabric |\n");
+    out.push_str("|--------|------:|----------:|------:|------:|------------------:|--------|\n");
+    for (name, ..) in cc::CLUSTER_PRESETS {
+        let c = cc::cluster_preset(name).expect("preset");
+        writeln!(
+            out,
+            "| `{}` | {} | {} | {} | {} | {:.1} | {} |",
+            name,
+            c.nodes,
+            c.gpus_per_node,
+            c.rails,
+            c.n_ranks(),
+            c.per_gpu_rail_gbps(),
+            c.name
+        )
+        .unwrap();
+    }
+    out.push('\n');
+
     out.push_str("## CLI subcommands\n");
     out.push('\n');
     out.push_str("| subcommand | arguments | description |\n");
@@ -180,6 +229,22 @@ pub fn reference_markdown() -> String {
             args.replace('|', "\\|")
         };
         writeln!(out, "| `{}` | `{}` | {} |", name, a, help).unwrap();
+    }
+    out.push('\n');
+
+    out.push_str("## Net policy corpus\n");
+    out.push('\n');
+    out.push_str(
+        "Verified `net` policies under `rust/policies/` \
+         (`policydir::NET_POLICIES`); the safety suite asserts each loads, \
+         and the traffic engine and multinode bench run them on the \
+         transport datapath.\n",
+    );
+    out.push('\n');
+    out.push_str("| policy | what it does |\n");
+    out.push_str("|--------|--------------|\n");
+    for (name, what) in policydir::NET_POLICIES {
+        writeln!(out, "| `{}` | {} |", name, what).unwrap();
     }
     out.push('\n');
 
@@ -249,6 +314,19 @@ mod tests {
         }
         for (name, _) in policydir::STRESS_POLICIES {
             assert!(text.contains(name), "missing stress policy {}", name);
+        }
+        for (name, _) in policydir::NET_POLICIES {
+            assert!(text.contains(&format!("`{}`", name)), "missing net policy {}", name);
+        }
+        for (name, ..) in cc::CLUSTER_PRESETS {
+            assert!(text.contains(&format!("`{}`", name)), "missing preset {}", name);
+        }
+        for (name, off, _) in ctx::NET_CTX_FIELDS {
+            assert!(
+                text.contains(&format!("| `{}` | {} |", name, off)),
+                "missing net ctx field {}",
+                name
+            );
         }
         for (kind, ..) in map_kind_rows() {
             assert!(text.contains(&format!("{:?}", kind)), "missing map kind {:?}", kind);

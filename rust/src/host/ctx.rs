@@ -122,7 +122,10 @@ pub struct ProfilerContext {
 /// Total byte size of [`ProfilerContext`] (ABI).
 pub const PROFILER_CTX_SIZE: u32 = 32;
 
-/// Net-plugin hook context (all read-only).
+/// Net-plugin hook context (all read-only). The first 24 bytes are the
+/// original single-node ABI (comm_id / is_send / bytes / peer);
+/// the rail fields extend it without moving any existing offset, so
+/// policies compiled against the old layout keep verifying.
 #[repr(C)]
 #[derive(Clone, Copy, Debug)]
 pub struct NetContext {
@@ -134,12 +137,28 @@ pub struct NetContext {
     pub bytes: u64,
     /// (offset 16) peer rank
     pub peer: u32,
-    /// padding (offset 20)
-    pub _pad: u32,
+    /// (offset 20) rail this operation rides (rail-optimized mapping)
+    pub rail: u32,
+    /// (offset 24) total rails available to the node
+    pub rails: u32,
+    /// (offset 28) node index of the issuing rank
+    pub node: u32,
 }
 
 /// Total byte size of [`NetContext`] (ABI).
-pub const NET_CTX_SIZE: u32 = 24;
+pub const NET_CTX_SIZE: u32 = 32;
+
+/// `net` ctx field layout, `(name, offset, width)` — single source for
+/// the docs generator's net-ctx table and the ABI test below.
+pub const NET_CTX_FIELDS: [(&str, u32, u32); 7] = [
+    ("comm_id", 0, 4),
+    ("is_send", 4, 4),
+    ("bytes", 8, 8),
+    ("peer", 16, 4),
+    ("rail", 20, 4),
+    ("rails", 24, 4),
+    ("node", 28, 4),
+];
 
 /// The ctx layouts the verifier enforces, per program type.
 pub fn layouts() -> CtxLayouts {
@@ -191,6 +210,33 @@ mod tests {
         assert_eq!(size_of::<NetContext>(), NET_CTX_SIZE as usize);
         assert_eq!(offset_of!(NetContext, bytes), 8);
         assert_eq!(offset_of!(NetContext, peer), 16);
+        assert_eq!(offset_of!(NetContext, rail), 20);
+        assert_eq!(offset_of!(NetContext, rails), 24);
+        assert_eq!(offset_of!(NetContext, node), 28);
+    }
+
+    #[test]
+    fn net_ctx_field_table_matches_struct() {
+        // NET_CTX_FIELDS feeds the docs generator; it must agree with
+        // the real struct offsets and tile the ctx without gaps.
+        let offsets = [
+            ("comm_id", offset_of!(NetContext, comm_id) as u32),
+            ("is_send", offset_of!(NetContext, is_send) as u32),
+            ("bytes", offset_of!(NetContext, bytes) as u32),
+            ("peer", offset_of!(NetContext, peer) as u32),
+            ("rail", offset_of!(NetContext, rail) as u32),
+            ("rails", offset_of!(NetContext, rails) as u32),
+            ("node", offset_of!(NetContext, node) as u32),
+        ];
+        assert_eq!(NET_CTX_FIELDS.len(), offsets.len());
+        let mut end = 0;
+        for (&(name, off, width), &(rname, roff)) in NET_CTX_FIELDS.iter().zip(offsets.iter()) {
+            assert_eq!(name, rname);
+            assert_eq!(off, roff, "{} offset", name);
+            assert_eq!(off, end, "{} leaves a gap", name);
+            end = off + width;
+        }
+        assert_eq!(end, NET_CTX_SIZE);
     }
 
     #[test]
@@ -223,5 +269,8 @@ mod tests {
         assert!(l.profiler.can_read(16, 8));
         assert!(!l.profiler.can_write(0, 4));
         assert!(l.net.can_read(8, 8));
+        assert!(l.net.can_read(20, 4)); // rail
+        assert!(l.net.can_read(28, 4)); // node
+        assert!(!l.net.can_write(20, 4)); // net ctx is read-only
     }
 }

@@ -18,7 +18,7 @@ use crate::bpf::{
     load, prog_array_update, LoadError, LoadOptions, LoadStats, LoadedProgram, Map, MapRegistry,
     Object, PrintkSink, ProgType, VerifierStats,
 };
-use crate::cc::net::NetHook;
+use crate::cc::net::{NetHook, NetOp, NetOpHook};
 use crate::cc::plugin::{CollInfoArgs, CostTable, ProfilerEvent, ProfilerPlugin, TunerPlugin};
 use ctx::{NetContext, PolicyContext, ProfilerContext};
 use reload::{ProgGuard, ReloadSlot};
@@ -442,19 +442,41 @@ impl NcclBpfHost {
 
     // -- net hook ----------------------------------------------------------------
 
-    /// Execute the net policy for one transport operation.
+    /// Execute the net policy for one transport operation (legacy
+    /// single-node entry point: no rail identity). Delegates to
+    /// [`NcclBpfHost::net_handle_op`] with rail 0 of 1 on node 0.
     #[inline]
     pub fn net_handle(&self, comm_id: u64, is_send: bool, bytes: usize, peer: usize) {
-        let Some(prog) = self.net.get() else { return };
-        let mut nctx = NetContext {
-            comm_id: fold_comm_id(comm_id),
-            is_send: is_send as u32,
+        let op = NetOp {
+            is_send,
             bytes: bytes as u64,
             peer: peer as u32,
-            _pad: 0,
+            rail: 0,
+            rails: 1,
+            node: 0,
         };
-        prog.run(&mut nctx as *mut NetContext as *mut u8);
+        self.net_handle_op(comm_id, &op);
+    }
+
+    /// Execute the net policy for one rail-aware transport operation.
+    /// Returns the program's verdict (r0) — `rail_selector.c` returns
+    /// the rail it steers the transfer onto — or `None` when no net
+    /// policy is installed.
+    #[inline]
+    pub fn net_handle_op(&self, comm_id: u64, op: &NetOp) -> Option<u64> {
+        let prog = self.net.get()?;
+        let mut nctx = NetContext {
+            comm_id: fold_comm_id(comm_id),
+            is_send: op.is_send as u32,
+            bytes: op.bytes,
+            peer: op.peer,
+            rail: op.rail,
+            rails: op.rails,
+            node: op.node,
+        };
+        let r0 = prog.run(&mut nctx as *mut NetContext as *mut u8);
         self.net_events.fetch_add(1, Ordering::Relaxed);
+        Some(r0)
     }
 
     /// Measure one tuner decision's host-side latency (bench helper).
@@ -626,6 +648,13 @@ impl ProfilerPlugin for BpfProfilerPlugin {
 /// A net-transport hook backed by the host's net program.
 pub fn bpf_net_hook(host: Arc<NcclBpfHost>, comm_id: u64, peer: usize) -> NetHook {
     Arc::new(move |is_send, bytes| host.net_handle(comm_id, is_send, bytes, peer))
+}
+
+/// A rail-aware net hook backed by the host's net program: the
+/// [`crate::cc::net::PolicyTransport`] datapath calls this per
+/// isend/irecv with the full [`NetOp`] and receives the policy verdict.
+pub fn bpf_net_op_hook(host: Arc<NcclBpfHost>, comm_id: u64) -> NetOpHook {
+    Arc::new(move |op: &NetOp| host.net_handle_op(comm_id, op))
 }
 
 #[cfg(test)]
@@ -898,6 +927,37 @@ have:
         assert_eq!(m.read_u64(0), Some(1524));
         let ops = m.read_value(&0u32.to_le_bytes()).unwrap();
         assert_eq!(u64::from_le_bytes(ops[8..16].try_into().unwrap()), 3);
+        assert_eq!(host.net_events.load(Ordering::Relaxed), 3);
+    }
+
+    /// Rail-aware net path: the policy reads the new rail/rails/node
+    /// ctx fields and its r0 verdict is surfaced to the caller.
+    #[test]
+    fn net_op_hook_reads_rail_fields_and_returns_verdict() {
+        let host = Arc::new(NcclBpfHost::new());
+        // verdict = rail + 10*node when rails > 1, else 99
+        host.install_asm(
+            r#"
+prog net rail_echo
+  ldxw  r2, [r1+24]       ; rails
+  jgt   r2, 1, multi
+  mov64 r0, 99
+  exit
+multi:
+  ldxw  r0, [r1+20]       ; rail
+  ldxw  r3, [r1+28]       ; node
+  mul64 r3, 10
+  add64 r0, r3
+  exit
+"#,
+        )
+        .unwrap();
+        let op = NetOp { is_send: true, bytes: 4096, peer: 3, rail: 2, rails: 4, node: 1 };
+        assert_eq!(host.net_handle_op(7, &op), Some(12));
+        let hook = bpf_net_op_hook(host.clone(), 7);
+        assert_eq!(hook(&NetOp { rail: 3, rails: 4, node: 0, ..op }), Some(3));
+        // the legacy single-node entry point presents rails=1
+        host.net_handle(7, true, 100, 0);
         assert_eq!(host.net_events.load(Ordering::Relaxed), 3);
     }
 

@@ -59,9 +59,10 @@ pub const SAFE_POLICIES: [&str; 11] = [
 /// The unsafe programs, one per bug class: the paper's seven (§5.2),
 /// the three ringbuf reference-tracking classes, the three call-graph
 /// classes (recursion, cross-frame stack overflow, clobbered-register
-/// misuse), and the three atomic classes (ctx-pointer RMW,
-/// misalignment, out-of-bounds RMW window).
-pub const UNSAFE_POLICIES: [(&str, &str); 16] = [
+/// misuse), the three atomic classes (ctx-pointer RMW, misalignment,
+/// out-of-bounds RMW window), and the net-ctx bounds probe (a read one
+/// word past the 32-byte `net` context).
+pub const UNSAFE_POLICIES: [(&str, &str); 17] = [
     ("null_deref", "map_value_or_null"),
     ("oob_access", "out of bounds"),
     ("illegal_helper", "illegal helper"),
@@ -78,6 +79,21 @@ pub const UNSAFE_POLICIES: [(&str, &str); 16] = [
     ("atomic_on_ctx", "atomic op on ctx"),
     ("atomic_misaligned", "misaligned atomic"),
     ("atomic_oob", "out of bounds"),
+    ("net_ctx_oob", "invalid ctx read"),
+];
+
+/// The `net` policy corpus: verified policies that run on the
+/// transport send/recv datapath ([`crate::cc::net::PolicyTransport`]).
+/// Kept outside [`SAFE_POLICIES`] so Table 1 keeps measuring exactly
+/// the tuner corpus; `ncclbpf safety` and the multinode bench cover
+/// them.
+pub const NET_POLICIES: [(&str, &str); 2] = [
+    ("net_count", "per-direction transfer counters over one shared map"),
+    (
+        "rail_selector",
+        "steers transfers to a rail by message size, clamped to ctx->rails, \
+         with per-rail pick counters",
+    ),
 ];
 
 /// The verification-cost stress corpus: safe policies sized so that
@@ -131,6 +147,39 @@ mod tests {
             let obj = build_named(name).unwrap();
             host.install_object(&obj).unwrap();
         }
+    }
+
+    /// The net corpus builds, verifies, and behaves: `rail_selector`
+    /// returns a rail index bounded by `ctx->rails` and its per-rail
+    /// pick counters conserve.
+    #[test]
+    fn net_policies_build_and_rail_selector_steers_by_size() {
+        use crate::cc::NetOp;
+        let host = NcclBpfHost::new();
+        for (name, _) in NET_POLICIES {
+            let obj = build_named(name).unwrap_or_else(|e| panic!("{}: {}", name, e));
+            host.install_object(&obj)
+                .unwrap_or_else(|e| panic!("{} must verify: {}", name, e));
+        }
+        // rail_selector is installed last and owns the net slot now
+        let op = |bytes: u64, rails: u32| NetOp {
+            is_send: true,
+            bytes,
+            peer: 1,
+            rail: 0,
+            rails,
+            node: 0,
+        };
+        // size tiers: <64K -> 0, <1M -> 1, <16M -> 2, else 3
+        assert_eq!(host.net_handle_op(7, &op(4 << 10, 4)), Some(0));
+        assert_eq!(host.net_handle_op(7, &op(256 << 10, 4)), Some(1));
+        assert_eq!(host.net_handle_op(7, &op(4 << 20, 4)), Some(2));
+        assert_eq!(host.net_handle_op(7, &op(64 << 20, 4)), Some(3));
+        // clamp: a 2-rail node folds the upper tiers onto rail 0
+        assert_eq!(host.net_handle_op(7, &op(64 << 20, 2)), Some(0));
+        let m = host.map("rail_pick").expect("rail_pick map");
+        let total: u64 = (0u32..4).filter_map(|k| m.read_u64(k)).sum();
+        assert_eq!(total, 5, "every decision lands one pick counter");
     }
 
     /// The contended-shared-state exemplars conserve exactly: every

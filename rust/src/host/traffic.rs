@@ -42,7 +42,11 @@
 
 use crate::bpf::maps::pin_thread_cpu_slot;
 use crate::bpf::maps::NCPU;
-use crate::cc::{Algo, CollType, Communicator, DataMode, Proto, Topology};
+use crate::cc::net::{
+    FaultPlan, FaultyTransport, NetError, NetOp, NetTransport, PolicyTransport,
+    RdmaModelTransport,
+};
+use crate::cc::{Algo, ClusterTopology, CollType, Communicator, DataMode, Proto, Topology};
 use crate::host::{BpfProfilerPlugin, BpfTunerPlugin, NcclBpfHost};
 use crate::util::{percentile, Rng};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -154,6 +158,59 @@ out:
   exit
 "#;
 
+/// The two net-policy variants the reloader alternates between when the
+/// run is multi-node. Both bump `rail_hits[ctx->rail]` on one *plain*
+/// Array with a BPF_ATOMIC add — the per-rail counters conserve across
+/// install swaps because the map outlives the programs — and differ
+/// only in their r0 verdict, so either variant satisfies the per-rail
+/// conservation invariant mid-storm.
+const NET_RAIL_A: &str = r#"
+map rail_hits array key=4 value=8 entries=16
+
+prog net rail_count_a
+  mov64 r6, r1
+  ldxw  r7, [r6+20]       ; rail
+  jge   r7, 16, out
+  stxw  [r10-4], r7
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, rail_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  mov64 r3, 1
+  lock add64 [r0+0], r3
+out:
+  mov64 r0, 0
+  exit
+"#;
+
+const NET_RAIL_B: &str = r#"
+map rail_hits array key=4 value=8 entries=16
+
+prog net rail_count_b
+  mov64 r6, r1
+  ldxw  r7, [r6+20]       ; rail
+  jge   r7, 16, out
+  stxw  [r10-4], r7
+  mov64 r2, r10
+  add64 r2, -4
+  ldmap r1, rail_hits
+  call  bpf_map_lookup_elem
+  jeq   r0, 0, out
+  mov64 r3, 1
+  lock add64 [r0+0], r3
+out:
+  mov64 r0, 1
+  exit
+"#;
+
+/// Bytes per simulated cross-node transfer (fixed so the modeled rail
+/// loopback can be drained with one reusable buffer).
+const NET_SHARD: usize = 4096;
+
+/// Rails per node in cluster scenarios.
+const NET_RAILS: usize = 4;
+
 /// Knobs for one traffic run.
 #[derive(Clone, Copy, Debug)]
 pub struct TrafficOpts {
@@ -169,6 +226,11 @@ pub struct TrafficOpts {
     pub seed: u64,
     /// ranks per communicator
     pub ranks: usize,
+    /// simulated nodes (1 = single-node, no net datapath; > 1 adds
+    /// `ranks` GPUs per node and a rail-aware net stage per op)
+    pub nodes: usize,
+    /// inject link flaps / stragglers / degraded epochs on the rails
+    pub fault: bool,
 }
 
 impl Default for TrafficOpts {
@@ -180,6 +242,8 @@ impl Default for TrafficOpts {
             reload_every_ms: Some(50),
             seed: 0x7a_ff1c,
             ranks: 4,
+            nodes: 1,
+            fault: false,
         }
     }
 }
@@ -203,6 +267,16 @@ pub struct ThreadStats {
     pub bytes_moved: u64,
     /// per-decision host overhead samples (ns)
     pub decision_ns: Vec<f64>,
+    /// net policy decisions issued on the rail datapath
+    pub net_ops: u64,
+    /// link flaps observed (isend returned LinkDown)
+    pub net_flaps: u64,
+    /// transfers recovered by retrying on another rail
+    pub net_retries: u64,
+    /// transfers that exhausted every rail (must stay 0)
+    pub net_lost: u64,
+    /// modeled rail time including injected straggler delay (ns)
+    pub net_modeled_ns: u64,
 }
 
 /// Outcome of one traffic run.
@@ -239,6 +313,24 @@ pub struct TrafficReport {
     pub ring_drained: u64,
     /// producer-side ring drops this run (failed reservations)
     pub ring_dropped: u64,
+    /// simulated nodes (1 = no net datapath)
+    pub nodes: usize,
+    /// net policy decisions issued on the rail datapath
+    pub net_decisions: u64,
+    /// net program dispatches the host counted
+    pub net_events: u64,
+    /// sum of the `rail_hits` per-rail BPF_ATOMIC counters
+    pub rail_map_hits: u64,
+    /// per-rail breakdown of `rail_hits`
+    pub rail_hits: Vec<u64>,
+    /// link flaps injected/observed across all workers
+    pub net_flaps: u64,
+    /// transfers recovered on another rail
+    pub net_retries: u64,
+    /// transfers lost after exhausting every rail (must stay 0)
+    pub net_lost: u64,
+    /// modeled rail time including straggler delay (ns)
+    pub net_modeled_ns: u64,
     /// invariant violations (empty == clean run)
     pub violations: Vec<String>,
     /// per-worker breakdown
@@ -251,6 +343,9 @@ pub struct TrafficReport {
 pub fn run_traffic(opts: &TrafficOpts) -> TrafficReport {
     let host = Arc::new(NcclBpfHost::new());
     install_traffic_policies(&host).expect("traffic policies must verify");
+    if opts.nodes > 1 {
+        host.install_asm(NET_RAIL_A).expect("net rail policy must verify");
+    }
     run_traffic_on(host, opts)
 }
 
@@ -273,14 +368,22 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
     let threads = opts.threads.clamp(1, opts.comms.max(1));
     let comms = opts.comms.max(1);
     let ops_per_comm = opts.ops_per_comm.max(1);
+    let nodes = opts.nodes.max(1);
+    if nodes > 1 && host.map("rail_hits").is_none() {
+        host.install_asm(NET_RAIL_A).expect("net rail policy must verify");
+    }
 
     let decisions_before = host.decisions.load(Ordering::Relaxed);
     let prof_before = host.prof_events.load(Ordering::Relaxed);
+    let net_events_before = host.net_events.load(Ordering::Relaxed);
     let invalid_before = host.invalid_outputs.load(Ordering::Relaxed);
     let tuner_hits_before =
         host.map("traffic_hits").and_then(|m| m.read_u64_all(0)).unwrap_or(0);
     let shared_hits_before = host.map("shared_hits").and_then(|m| m.read_u64(0)).unwrap_or(0);
     let prof_hits_before = host.map("prof_hits").and_then(|m| m.read_u64_all(0)).unwrap_or(0);
+    let rail_hits_before: Vec<u64> = (0..16u32)
+        .map(|i| host.map("rail_hits").and_then(|m| m.read_u64(i)).unwrap_or(0))
+        .collect();
 
     let stop = Arc::new(AtomicBool::new(false));
     let reloads = Arc::new(AtomicU64::new(0));
@@ -309,11 +412,13 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
         })
     });
 
-    // reloader: alternate tuner variants until the workers finish
+    // reloader: alternate tuner (and, multi-node, net) variants until
+    // the workers finish — the reload storm overlaps the fault epochs
     let reloader = opts.reload_every_ms.map(|every_ms| {
         let host = host.clone();
         let stop = stop.clone();
         let reloads = reloads.clone();
+        let swap_net = nodes > 1;
         std::thread::spawn(move || {
             let mut flip = false;
             while !stop.load(Ordering::Relaxed) {
@@ -322,8 +427,12 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
                     break;
                 }
                 let src = if flip { TUNER_VARIANT_A } else { TUNER_VARIANT_B };
-                flip = !flip;
                 host.install_asm(src).expect("traffic reload must verify");
+                if swap_net {
+                    let net_src = if flip { NET_RAIL_A } else { NET_RAIL_B };
+                    host.install_asm(net_src).expect("net reload must verify");
+                }
+                flip = !flip;
                 reloads.fetch_add(1, Ordering::Relaxed);
             }
         })
@@ -366,6 +475,21 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
     let total_ops: u64 = per_thread.iter().map(|s| s.ops).sum();
     let total_decisions = host.decisions.load(Ordering::Relaxed) - decisions_before;
     let prof_events = host.prof_events.load(Ordering::Relaxed) - prof_before;
+    let net_events = host.net_events.load(Ordering::Relaxed) - net_events_before;
+    let net_decisions: u64 = per_thread.iter().map(|s| s.net_ops).sum();
+    let net_flaps: u64 = per_thread.iter().map(|s| s.net_flaps).sum();
+    let net_retries: u64 = per_thread.iter().map(|s| s.net_retries).sum();
+    let net_lost: u64 = per_thread.iter().map(|s| s.net_lost).sum();
+    let net_modeled_ns: u64 = per_thread.iter().map(|s| s.net_modeled_ns).sum();
+    let rail_hits: Vec<u64> = (0..16u32)
+        .map(|i| {
+            host.map("rail_hits")
+                .and_then(|m| m.read_u64(i))
+                .unwrap_or(0)
+                .wrapping_sub(rail_hits_before[i as usize])
+        })
+        .collect();
+    let rail_map_hits: u64 = rail_hits.iter().sum();
     let tuner_map_hits = host
         .map("traffic_hits")
         .and_then(|m| m.read_u64_all(0))
@@ -474,6 +598,28 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
     if invalid != 0 {
         violations.push(format!("policies produced {} invalid outputs", invalid));
     }
+    // multi-node invariants: no net decision lost across failure
+    // epochs or the reload storm — every policy consult the workers
+    // issued must appear in the host dispatch counter AND in the
+    // per-rail BPF_ATOMIC counters, and no transfer may exhaust all
+    // rails (flap epochs are staggered, so a retry always lands).
+    if nodes > 1 {
+        if net_events != net_decisions {
+            violations.push(format!(
+                "lost net decisions: {} issued but host counted {}",
+                net_decisions, net_events
+            ));
+        }
+        if rail_map_hits != net_decisions {
+            violations.push(format!(
+                "per-rail counters not conserved: sum(rail_hits) {} != {} net decisions",
+                rail_map_hits, net_decisions
+            ));
+        }
+        if net_lost != 0 {
+            violations.push(format!("{} transfers exhausted every rail", net_lost));
+        }
+    }
 
     let mut all_ns: Vec<f64> = Vec::with_capacity(total_ops as usize);
     for s in &per_thread {
@@ -496,6 +642,15 @@ pub fn run_traffic_on(host: Arc<NcclBpfHost>, opts: &TrafficOpts) -> TrafficRepo
         prof_map_hits,
         ring_drained,
         ring_dropped,
+        nodes,
+        net_decisions,
+        net_events,
+        rail_map_hits,
+        rail_hits,
+        net_flaps,
+        net_retries,
+        net_lost,
+        net_modeled_ns,
         violations,
         per_thread,
     }
@@ -514,6 +669,7 @@ fn worker_loop(
     pin_thread_cpu_slot(thread_idx);
 
     let ranks = opts.ranks.max(2);
+    let nodes = opts.nodes.max(1);
     let mut comms = Vec::with_capacity(n_comms);
     for c in 0..n_comms {
         let mut comm = Communicator::new(Topology::nvlink_b300(ranks));
@@ -526,6 +682,39 @@ fn worker_loop(
     }
     let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|r| vec![r as f32 + 1.0; 1 << 10]).collect();
 
+    // multi-node: every communicator is a `nodes × ranks` cluster; each
+    // gets NET_RAILS modeled RDMA rails with the verified net policy on
+    // the send/recv path (PolicyTransport) and staggered fault epochs.
+    let cluster = (nodes > 1).then(|| ClusterTopology::rails_b300(nodes, ranks, NET_RAILS));
+    let mut rail_ports: Vec<Vec<PolicyTransport<FaultyTransport<RdmaModelTransport>>>> = comms
+        .iter()
+        .map(|comm| {
+            let Some(cl) = cluster.as_ref() else { return Vec::new() };
+            let hook = crate::host::bpf_net_op_hook(host.clone(), comm.comm_id());
+            (0..NET_RAILS)
+                .map(|r| {
+                    let plan = if opts.fault {
+                        FaultPlan { epoch_ops: 64, phase: r as u64, ..FaultPlan::default() }
+                    } else {
+                        // epoch 0 of the cycle is Healthy and u64::MAX
+                        // ops never finish it: fault injection off
+                        FaultPlan { epoch_ops: u64::MAX, phase: 0, ..FaultPlan::default() }
+                    };
+                    let rdma = RdmaModelTransport::loopback(r as u32, cl.rail);
+                    let faulty = FaultyTransport::new(rdma, r as u32, plan);
+                    let template = NetOp {
+                        rail: r as u32,
+                        rails: NET_RAILS as u32,
+                        ..NetOp::default()
+                    };
+                    PolicyTransport::new(faulty, hook.clone(), template)
+                })
+                .collect()
+        })
+        .collect();
+    let payload = [0x5au8; NET_SHARD];
+    let mut recv_buf = [0u8; NET_SHARD];
+
     let mut rng = Rng::new(opts.seed.wrapping_mul(0x9e37).wrapping_add(thread_idx as u64));
     let mut stats = ThreadStats {
         thread: thread_idx,
@@ -534,7 +723,7 @@ fn worker_loop(
         ..Default::default()
     };
     for _ in 0..ops_per_comm {
-        for comm in &comms {
+        for (ci, comm) in comms.iter().enumerate() {
             // mixed collectives, log-uniform logical sizes 4 KiB..4 MiB
             let coll = match rng.below(100) {
                 0..=59 => CollType::AllReduce,
@@ -554,6 +743,75 @@ fn worker_loop(
                 (Algo::Tree, Proto::Ll, 13) => stats.variant_b += 1,
                 _ => stats.torn += 1,
             }
+
+            // cross-node shard: pick the next rank round-robin, ship one
+            // shard to the same-local rank one node over, starting on the
+            // rail-optimized rail and failing over across rails on flaps.
+            if let Some(cl) = cluster.as_ref() {
+                let rank = stats.ops as usize % cl.n_ranks();
+                let (node, local) = cl.locate(rank);
+                let rail0 = cl.rail_for(rank);
+                let peer = (((node + 1) % nodes) * cl.gpus_per_node + local) as u32;
+                let ports = &mut rail_ports[ci];
+                let mut sent = false;
+                for attempt in 0..NET_RAILS {
+                    let port = &mut ports[(rail0 + attempt) % NET_RAILS];
+                    port.template.peer = peer;
+                    port.template.node = node as u32;
+                    match port.isend(&payload) {
+                        Ok(()) => {
+                            if attempt > 0 {
+                                stats.net_retries += 1;
+                            }
+                            // drain the loopback echo; a flap here is an
+                            // epoch event on the recv gate, not data loss
+                            match port.irecv(&mut recv_buf) {
+                                Ok(()) => {}
+                                Err(NetError::LinkDown { .. }) => stats.net_flaps += 1,
+                                Err(e) => panic!("net drain failed: {e}"),
+                            }
+                            sent = true;
+                            break;
+                        }
+                        Err(NetError::LinkDown { .. }) => stats.net_flaps += 1,
+                        Err(e) => panic!("net send failed: {e}"),
+                    }
+                }
+                if !sent {
+                    // every rail flapped at this op count; fault phases
+                    // stagger per rail and no two consecutive epochs flap,
+                    // so hammering one rail terminates within two epochs
+                    let port = &mut ports[rail0];
+                    for _ in 0..(2 * 64 + 2) {
+                        match port.isend(&payload) {
+                            Ok(()) => {
+                                stats.net_retries += 1;
+                                match port.irecv(&mut recv_buf) {
+                                    Ok(()) => {}
+                                    Err(NetError::LinkDown { .. }) => stats.net_flaps += 1,
+                                    Err(e) => panic!("net drain failed: {e}"),
+                                }
+                                sent = true;
+                                break;
+                            }
+                            Err(NetError::LinkDown { .. }) => stats.net_flaps += 1,
+                            Err(e) => panic!("net send failed: {e}"),
+                        }
+                    }
+                }
+                if !sent {
+                    stats.net_lost += 1;
+                }
+            }
+        }
+    }
+    // harvest per-endpoint policy decisions and the modeled wire time
+    for ports in &rail_ports {
+        for p in ports {
+            stats.net_ops += p.decisions;
+            // clock_ns already folds in flushed straggler delays; add
+            // only the injected delay not yet charged to a transfer
+            stats.net_modeled_ns += p.inner.inner.clock_ns + p.inner.inner.extra_delay_ns;
         }
     }
     stats
@@ -571,7 +829,13 @@ mod tests {
             reload_every_ms: reload,
             seed: 0x5eed,
             ranks: 2,
+            nodes: 1,
+            fault: false,
         }
+    }
+
+    fn cluster(threads: usize, comms: usize, reload: Option<u64>, nodes: usize) -> TrafficOpts {
+        TrafficOpts { nodes, fault: true, ranks: 4, ..small(threads, comms, reload) }
     }
 
     #[test]
@@ -693,5 +957,68 @@ mod tests {
         let tuner_total = snap.hook(crate::bpf::ProgType::Tuner).total_run;
         assert!(tuner_total.run_time_ns > 0);
         assert_eq!(tuner_total.error_cnt, 0);
+    }
+
+    /// Multi-node acceptance gate: 4 nodes with fault injection active
+    /// and a reload storm swapping the net policy mid-flight — every
+    /// policy decision is accounted (none lost across a failure epoch),
+    /// the per-rail counters conserve, flaps were actually injected and
+    /// every transfer eventually landed on some rail.
+    #[test]
+    fn traffic_four_nodes_fault_reload_storm_conserves_decisions() {
+        let rep = run_traffic(&cluster(4, 4, Some(1), 4));
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.nodes, 4);
+        assert!(rep.net_decisions > 0, "net datapath issued no decisions");
+        assert_eq!(
+            rep.net_events, rep.net_decisions,
+            "every rail-policy consult must reach the verified program"
+        );
+        assert_eq!(
+            rep.rail_map_hits, rep.net_decisions,
+            "per-rail map counters must conserve across the reload storm"
+        );
+        // rails beyond NET_RAILS never see traffic
+        for (r, &hits) in rep.rail_hits.iter().enumerate() {
+            if r >= NET_RAILS {
+                assert_eq!(hits, 0, "rail {} out of range got traffic", r);
+            }
+        }
+        assert!(rep.net_flaps > 0, "fault plan injected no link flaps");
+        assert!(rep.net_retries > 0, "flaps never forced a rail failover");
+        assert_eq!(rep.net_lost, 0, "transfers lost: {}", rep.net_lost);
+        // straggler epochs must show up on the modeled clock: 200us per
+        // delayed op dwarfs the healthy per-op cost (~5us + wire)
+        assert!(rep.net_modeled_ns > 0);
+    }
+
+    /// Without fault injection the same cluster runs clean: zero flaps,
+    /// zero retries, zero lost, and the rail mapping spreads traffic
+    /// over every rail.
+    #[test]
+    fn traffic_two_nodes_healthy_uses_all_rails() {
+        let mut opts = cluster(2, 2, None, 2);
+        opts.fault = false;
+        let rep = run_traffic(&opts);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.net_flaps, 0);
+        assert_eq!(rep.net_retries, 0);
+        assert_eq!(rep.net_lost, 0);
+        assert!(rep.net_decisions > 0);
+        assert_eq!(rep.net_events, rep.net_decisions);
+        assert_eq!(rep.rail_map_hits, rep.net_decisions);
+        for r in 0..NET_RAILS {
+            assert!(rep.rail_hits[r] > 0, "rail {} never used", r);
+        }
+    }
+
+    /// Single-node runs must not touch the net datapath at all.
+    #[test]
+    fn traffic_single_node_has_no_net_traffic() {
+        let rep = run_traffic(&small(1, 1, None));
+        assert_eq!(rep.nodes, 1);
+        assert_eq!(rep.net_decisions, 0);
+        assert_eq!(rep.net_events, 0);
+        assert_eq!(rep.rail_map_hits, 0);
     }
 }

@@ -486,6 +486,17 @@ fn cmd_safety(_args: &Args) -> i32 {
             }
         }
     }
+    println!("== net policies (must be ACCEPTED; run on the transport datapath) ==");
+    for (name, what) in policydir::NET_POLICIES {
+        let obj = policydir::build_named(name).expect(name);
+        match host.install_object(&obj) {
+            Ok(_) => println!("  ACCEPT {} ({})", name, what),
+            Err(e) => {
+                println!("  UNEXPECTED REJECT {}: {}", name, e);
+                return 1;
+            }
+        }
+    }
     println!("== unsafe programs (must be REJECTED) ==");
     for (name, _class) in policydir::UNSAFE_POLICIES {
         let obj = policydir::build_unsafe(name).expect(name);
@@ -568,10 +579,17 @@ fn cmd_traffic(args: &Args) -> i32 {
             .and_then(|v| v.parse().ok())
             .unwrap_or(ncclbpf::host::traffic::TrafficOpts::default().seed),
         ranks: args.flag_usize("ranks", 4),
+        nodes: args.flag_usize("nodes", 1),
+        fault: args.flag_bool("fault") || args.flag_usize("nodes", 1) > 1,
     };
     println!(
-        "traffic: {} comms on {} threads, {} ops/comm, reload every {:?} ms",
-        opts.comms, opts.threads, opts.ops_per_comm, opts.reload_every_ms
+        "traffic: {} comms on {} threads, {} ops/comm, reload every {:?} ms, {} node(s){}",
+        opts.comms,
+        opts.threads,
+        opts.ops_per_comm,
+        opts.reload_every_ms,
+        opts.nodes,
+        if opts.nodes > 1 && opts.fault { ", fault injection on" } else { "" },
     );
     let rep = ncclbpf::host::traffic::run_traffic(&opts);
     for s in &rep.per_thread {
@@ -600,6 +618,26 @@ fn cmd_traffic(args: &Args) -> i32 {
         "ring events: {} drained + {} dropped (of {} ops)",
         rep.ring_drained, rep.ring_dropped, rep.total_ops
     );
+    if rep.nodes > 1 {
+        println!(
+            "net: {} decisions across {} nodes ({} flaps, {} retries, {} lost, modeled rail \
+             time {:.1} ms)",
+            rep.net_decisions,
+            rep.nodes,
+            rep.net_flaps,
+            rep.net_retries,
+            rep.net_lost,
+            rep.net_modeled_ns as f64 / 1e6,
+        );
+        let used: Vec<String> = rep
+            .rail_hits
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h > 0)
+            .map(|(r, h)| format!("rail {}: {}", r, h))
+            .collect();
+        println!("rail hits: {}", used.join(", "));
+    }
     if rep.violations.is_empty() {
         println!("invariant violations: 0");
         0

@@ -300,11 +300,17 @@ fn safety_suite_green_end_to_end() {
     let o = run(&["safety"]);
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 11 safe accepted, all 16 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 11 safe accepted, all 17 unsafe rejected"), "{}", out);
     // the ringbuf reference-tracking and call-graph classes are in the suite
     for name in ["ringbuf_leak", "ringbuf_use_after_submit", "ringbuf_oob", "call_recursion"] {
         assert!(out.contains(&format!("REJECT {}", name)), "{}", out);
     }
+    // the net datapath corpus: both policies load, the ctx bounds probe
+    // is rejected with the net-ABI needle
+    for name in ["net_count", "rail_selector"] {
+        assert!(out.contains(&format!("ACCEPT {}", name)), "{}", out);
+    }
+    assert!(out.contains("REJECT net_ctx_oob"), "{}", out);
     // the verification-stress corpus verifies under the budget
     for name in ["stress_ladder64", "stress_channel_scorer"] {
         assert!(out.contains(&format!("ACCEPT {}", name)), "{}", out);
@@ -352,7 +358,7 @@ fn safety_suite_green_with_pruning_disabled() {
         .expect("spawn");
     assert_eq!(o.status.code(), Some(0), "stdout: {}", stdout(&o));
     let out = stdout(&o);
-    assert!(out.contains("all 11 safe accepted, all 16 unsafe rejected"), "{}", out);
+    assert!(out.contains("all 11 safe accepted, all 17 unsafe rejected"), "{}", out);
     assert!(out.contains("SKIP: NCCLBPF_VERIFIER_PRUNE=0"), "{}", out);
 }
 
@@ -420,6 +426,33 @@ fn traffic_engine_without_reloads() {
     assert!(stdout(&o).contains("invariant violations: 0"), "{}", stdout(&o));
 }
 
+/// Multi-node scale-out gate through the CLI: `--nodes 4` puts every op
+/// on the rail datapath (fault injection is implied), reload storms
+/// swap the net policy mid-traffic, and the run must still conserve
+/// every net decision and deliver every transfer.
+#[test]
+fn traffic_engine_multinode_fault_reload_conserves_net_decisions() {
+    let o = run(&[
+        "traffic",
+        "--nodes",
+        "4",
+        "--comms",
+        "4",
+        "--threads",
+        "4",
+        "--ops",
+        "2000",
+        "--reload-every",
+        "1",
+    ]);
+    assert_eq!(o.status.code(), Some(0), "stderr: {}", stderr(&o));
+    let out = stdout(&o);
+    assert!(out.contains("invariant violations: 0"), "{}", out);
+    assert!(out.contains("4 node(s), fault injection on"), "{}", out);
+    assert!(out.contains("0 lost"), "{}", out);
+    assert!(out.contains("rail hits: rail 0:"), "{}", out);
+}
+
 #[test]
 fn bench_writes_parseable_json_with_median_p99() {
     let dir = std::env::temp_dir().join("ncclbpf_cli_bench");
@@ -446,6 +479,7 @@ fn bench_writes_parseable_json_with_median_p99() {
         ("BENCH_calls.json", 4),
         ("BENCH_verifier.json", 11),
         ("BENCH_analysis.json", 15),
+        ("BENCH_multinode.json", 39),
     ] {
         let path = dir.join(file);
         let text = std::fs::read_to_string(&path)
